@@ -1,0 +1,54 @@
+//! The paper's evaluation, end to end: sweep the four MPI_Exscan
+//! algorithms over message sizes on both simulated cluster configurations
+//! (36×1 and 36×32), print Table-1-style output and write the Figure 1
+//! CSV. This is the examples/ driver for experiments E1–E3 of DESIGN.md.
+//!
+//! ```bash
+//! cargo run --release --example cluster_sweep            # quick grid
+//! cargo run --release --example cluster_sweep -- --full  # paper grid
+//! ```
+
+use exscan::bench::{figure1_sweep, format_table, table1_rows, to_csv, PaperConfig, SweepSpec};
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let spec = if full { SweepSpec::figure1() } else { SweepSpec::quick() };
+    let table_grid: &[usize] =
+        if full { &[1, 10, 100, 1000, 10_000, 100_000] } else { &[1, 1000, 100_000] };
+
+    let mut csv = String::new();
+    for config in [PaperConfig::C36x1, PaperConfig::C36x32] {
+        println!("== {} : Table 1 (simulated µs vs paper µs) ==", config.label());
+        let rows = table1_rows(config, table_grid)?;
+        let paper = config.paper_rows();
+        println!(
+            "{:>8} {:>10} {:>10} {:>10} {:>10}   (paper: nat/2op/1dbl/123)",
+            "m", "native", "two-op", "1-dbl", "123"
+        );
+        for row in &rows {
+            let pp = paper.iter().find(|x| x.0 == row.m);
+            let paper_s = pp
+                .map(|x| format!("({:.0}/{:.0}/{:.0}/{:.0})", x.1, x.2, x.3, x.4))
+                .unwrap_or_default();
+            println!(
+                "{:>8} {:>10.2} {:>10.2} {:>10.2} {:>10.2}   {paper_s}",
+                row.m, row.native, row.two_op, row.one_doubling, row.otd123
+            );
+            // The paper's headline: 123-doubling never loses to 1-doubling.
+            assert!(row.otd123 <= row.one_doubling + 1e-9);
+        }
+        println!();
+
+        let ms = figure1_sweep(config, &spec)?;
+        println!("{}", format_table(&format!("Figure 1 series ({})", config.label()), &ms));
+        let part = to_csv(config.label(), &ms);
+        if csv.is_empty() {
+            csv = part;
+        } else {
+            csv.push_str(part.split_once('\n').map(|x| x.1).unwrap_or(""));
+        }
+    }
+    std::fs::write("figure1.csv", &csv)?;
+    println!("wrote figure1.csv ({} lines) — plot time-vs-bytes, log-log", csv.lines().count());
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! The expensive-⊕ path through the full three-layer stack: the operator
+//! is the AOT-compiled Pallas `matrec` kernel (2×2 affine recurrence
+//! composition) executed via PJRT from the Rust hot path — every ⊕
+//! application is a real kernel launch, so the paper's ⊕-application
+//! counts translate directly into launches you can count.
+//!
+//! Requires artifacts: `make artifacts` first.
+//!
+//! ```bash
+//! cargo run --release --example expensive_op
+//! ```
+
+use exscan::coll::validate::oracle_exscan;
+use exscan::prelude::*;
+use exscan::runtime::{pjrt_rec2_compose, PjrtRuntime};
+
+fn main() -> anyhow::Result<()> {
+    let Some(handle) = PjrtRuntime::try_default() else {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        std::process::exit(2);
+    };
+
+    let p = 16;
+    let m = 64; // 64 affine maps per rank
+    let inputs = exscan::bench::inputs_rec2(p, m, 99);
+    let world = WorldConfig::new(Topology::flat(p));
+
+    // ⊕ = compiled Pallas kernel via PJRT (Layer 1 on the request path).
+    let kernel_op = pjrt_rec2_compose(handle.clone());
+
+    println!("running {} algorithms with the PJRT matrec kernel as ⊕ …", 2);
+    for algo in [&Exscan123 as &dyn ScanAlgorithm<Rec2>, &ExscanTwoOp] {
+        let before = handle.stats()?.launches;
+        let res = run_scan(&world, algo, &kernel_op, &inputs)?;
+        let launches = handle.stats()?.launches - before;
+
+        // Verify against the native-Rust oracle operator.
+        let oracle = oracle_exscan(&inputs, &ops::rec2_compose());
+        for r in 1..p {
+            let expect = oracle[r].as_ref().unwrap();
+            for (a, b) in res.outputs[r].iter().zip(expect) {
+                for i in 0..4 {
+                    assert!((a.a[i] - b.a[i]).abs() < 1e-2, "rank {r} mismatch");
+                }
+            }
+        }
+        println!(
+            "  {:>16}: verified; {} kernel launches across all ranks \
+             (critical-rank ⊕ = {})",
+            algo.name(),
+            launches,
+            algo.predicted_ops(p),
+        );
+    }
+    println!(
+        "\nthe two-⊕ algorithm launches ~2× the kernels of 123-doubling — \
+         the computation cost Theorem 1 eliminates"
+    );
+    Ok(())
+}

@@ -1,0 +1,29 @@
+//! PJRT kernel-launch microbenchmark (§Perf, L1): per-launch latency of
+//! the AOT-compiled Pallas `reduce_local` kernel across artifact sizes.
+//! This is the number the single-block lowering optimization moved from
+//! 12.7 ms to ~3 ms at m = 131072 (see EXPERIMENTS.md §Perf).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example pjrt_bench
+//! ```
+
+fn main() -> anyhow::Result<()> {
+    let h = exscan::runtime::PjrtRuntime::start("artifacts")?;
+    for (op, n) in [("bxor_i64", 256usize), ("bxor_i64", 4096), ("bxor_i64", 131072)] {
+        let a = vec![1i64; n];
+        let mut b = vec![2i64; n];
+        h.reduce_i64(op, &a, &mut b)?; // warm-up (includes compile)
+        let t0 = std::time::Instant::now();
+        let iters = 50;
+        for _ in 0..iters {
+            h.reduce_i64(op, &a, &mut b)?;
+        }
+        println!(
+            "{op} m={n}: {:.1} µs/launch",
+            t0.elapsed().as_secs_f64() * 1e6 / iters as f64
+        );
+    }
+    let stats = h.stats()?;
+    println!("total: {} launches, {} compiles", stats.launches, stats.compiles);
+    Ok(())
+}

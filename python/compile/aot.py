@@ -1,0 +1,111 @@
+"""AOT emitter: lower every Layer-2 function to HLO **text** and write the
+artifact manifest the Rust runtime consumes.
+
+HLO text — NOT ``lowered.compile()`` / serialized protos — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out ../artifacts`` (what `make
+artifacts` runs). Idempotent: skips lowering when the manifest is newer
+than this package's sources.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Padded kernel sizes. The runtime picks the smallest artifact >= m, so
+# this ladder covers the paper's m grid (1 … 100 000 long = 800 kB) with
+# bounded padding waste (< 2x).
+REDUCE_SIZES = [256, 4096, 65536, 131072]
+MATREC_SIZES = [256, 4096, 65536]
+BLOCK_K = 32  # ranks per node in the paper's 36x32 configuration
+BLOCK_SIZES = [256, 4096]
+
+REDUCE_OPS = [
+    ("bxor", jnp.int64, "bxor_i64", "i64"),
+    ("sum", jnp.int64, "sum_i64", "i64"),
+    ("max", jnp.int64, "max_i64", "i64"),
+    ("sum", jnp.float32, "sum_f32", "f32"),
+]
+
+
+def to_hlo_text(fn, *args) -> str:
+    lowered = jax.jit(fn).lower(*args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir: str) -> list[tuple[str, str, str, str, int, int, str]]:
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+
+    def write(name: str, kind: str, op: str, dtype: str, m: int, k: int, text: str):
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        rows.append((name, kind, op, dtype, m, k, fname))
+        print(f"  {name}: {len(text)} chars")
+
+    for op, dt, op_name, dt_name in REDUCE_OPS:
+        for m in REDUCE_SIZES:
+            spec = jax.ShapeDtypeStruct((m,), dt)
+            text = to_hlo_text(model.reduce_local_fn(op), spec, spec)
+            write(f"reduce_{op_name}_m{m}", "reduce", op_name, dt_name, m, 0, text)
+
+    for n in MATREC_SIZES:
+        spec = jax.ShapeDtypeStruct((n, 6), jnp.float32)
+        text = to_hlo_text(model.matrec_fn(), spec, spec)
+        write(f"reduce_matrec_f32_m{n}", "reduce", "matrec_f32", "rec2_f32", n, 0, text)
+
+    for m in BLOCK_SIZES:
+        spec = jax.ShapeDtypeStruct((BLOCK_K, m), jnp.int64)
+        text = to_hlo_text(model.block_exscan_fn("bxor"), spec)
+        write(
+            f"block_exscan_bxor_i64_k{BLOCK_K}_m{m}",
+            "block_exscan",
+            "bxor_i64",
+            "i64",
+            m,
+            BLOCK_K,
+            text,
+        )
+
+    return rows
+
+
+def write_manifest(out_dir: str, rows) -> None:
+    path = os.path.join(out_dir, "manifest.tsv")
+    with open(path, "w") as f:
+        f.write(f"exscan-artifacts v1 jax={jax.__version__}\n")
+        for name, kind, op, dtype, m, k, fname in rows:
+            f.write(f"{name}\t{kind}\t{op}\t{dtype}\t{m}\t{k}\t{fname}\n")
+    print(f"wrote {path} ({len(rows)} artifacts)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    args = ap.parse_args()
+    rows = emit(args.out)
+    write_manifest(args.out, rows)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth
+pytest compares against — no Pallas, no tiling, just the maths)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_COMBINES = {
+    "bxor": lambda a, b: jnp.bitwise_xor(a, b),
+    "bor": lambda a, b: jnp.bitwise_or(a, b),
+    "sum": lambda a, b: a + b,
+    "max": lambda a, b: jnp.maximum(a, b),
+    "min": lambda a, b: jnp.minimum(a, b),
+    "prod": lambda a, b: a * b,
+}
+
+_IDENTITIES = {"bxor": 0, "bor": 0, "sum": 0}
+
+
+def reduce_local_ref(op: str, earlier, later):
+    """Element-wise ``earlier ⊕ later``."""
+    return _COMBINES[op](earlier, later)
+
+
+def matrec_compose_ref(earlier, later):
+    """Row-wise affine composition on (N, 6): later ∘ earlier."""
+    ea = earlier[:, :4].reshape(-1, 2, 2)
+    eb = earlier[:, 4:].reshape(-1, 2, 1)
+    la = later[:, :4].reshape(-1, 2, 2)
+    lb = later[:, 4:].reshape(-1, 2, 1)
+    a = jnp.einsum("nij,njk->nik", la, ea)
+    b = jnp.einsum("nij,njk->nik", la, eb) + lb
+    return jnp.concatenate([a.reshape(-1, 4), b.reshape(-1, 2)], axis=1)
+
+
+def block_exscan_ref(op: str, x):
+    """Exclusive scan along axis 0 of (K, M)."""
+    k = x.shape[0]
+    combine = _COMBINES[op]
+    rows = [jnp.full(x.shape[1:], _IDENTITIES[op], dtype=x.dtype)]
+    for j in range(k - 1):
+        rows.append(combine(rows[-1], x[j]))
+    return jnp.stack(rows, axis=0)

@@ -1,0 +1,55 @@
+"""Layer-2 JAX "model": the jit-able compute graphs that get AOT-lowered.
+
+For this paper the compute graph is not a neural network but the local
+computation of the exclusive-scan machinery:
+
+* ``reduce_local_fn`` — one ⊕ application (`MPI_Reduce_local`), calling
+  the Layer-1 Pallas combine kernel. One artifact per (op, dtype, m).
+* ``matrec_fn`` — the expensive non-commutative operator (2×2 affine
+  recurrence composition), the ablation where ⊕-application counts bite.
+* ``block_exscan_fn`` — the fused node-leader kernel: exclusive scan over
+  the K rank-contributions of one node in a single launch, used by the
+  hierarchical aggregation path instead of K−1 reduce_local launches.
+
+Each function returns a tuple (the AOT contract: lowered with
+``return_tuple=True``, unwrapped by the Rust side with ``to_tuple1``).
+Python never runs at request time — these exist solely to be lowered by
+``aot.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .kernels import reduce_local as k
+
+jax.config.update("jax_enable_x64", True)
+
+
+def reduce_local_fn(op: str):
+    """⊕ over two m-vectors: (earlier, later) -> (earlier ⊕ later,)."""
+
+    def fn(earlier, later):
+        return (k.reduce_local(op, earlier, later),)
+
+    fn.__name__ = f"reduce_local_{op}"
+    return fn
+
+
+def matrec_fn():
+    """(N, 6) affine-map composition: (earlier, later) -> (later ∘ earlier,)."""
+
+    def fn(earlier, later):
+        return (k.matrec_compose(earlier, later),)
+
+    return fn
+
+
+def block_exscan_fn(op: str):
+    """(K, M) -> (K, M) exclusive scan over rows (node-leader fusion)."""
+
+    def fn(x):
+        return (k.block_exscan(op, x),)
+
+    fn.__name__ = f"block_exscan_{op}"
+    return fn

@@ -1,0 +1,68 @@
+"""AOT pipeline checks: lowering produces loadable HLO text and a manifest
+the Rust side can parse (same format constants on both sides)."""
+
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+def test_to_hlo_text_reduce():
+    spec = jax.ShapeDtypeStruct((256,), jnp.int64)
+    text = aot.to_hlo_text(model.reduce_local_fn("bxor"), spec, spec)
+    assert "HloModule" in text
+    assert "s64" in text  # i64 dtype survived lowering
+    # return_tuple contract: the entry computation returns a tuple.
+    assert "(s64[256]" in text.replace("\n", "")
+
+
+def test_to_hlo_text_matrec():
+    spec = jax.ShapeDtypeStruct((64, 6), jnp.float32)
+    text = aot.to_hlo_text(model.matrec_fn(), spec, spec)
+    assert "HloModule" in text
+    assert "f32[64,6]" in text
+
+
+def test_emit_and_manifest(tmp_path):
+    # Shrink the size ladders so the test stays fast.
+    old_sizes = aot.REDUCE_SIZES, aot.MATREC_SIZES, aot.BLOCK_SIZES, aot.REDUCE_OPS
+    aot.REDUCE_SIZES = [256]
+    aot.MATREC_SIZES = [64]
+    aot.BLOCK_SIZES = [64]
+    aot.REDUCE_OPS = [("bxor", jnp.int64, "bxor_i64", "i64")]
+    try:
+        rows = aot.emit(str(tmp_path))
+        aot.write_manifest(str(tmp_path), rows)
+    finally:
+        aot.REDUCE_SIZES, aot.MATREC_SIZES, aot.BLOCK_SIZES, aot.REDUCE_OPS = old_sizes
+
+    manifest = (tmp_path / "manifest.tsv").read_text().splitlines()
+    assert manifest[0].startswith("exscan-artifacts v1 jax=")
+    assert len(manifest) == 1 + len(rows)
+    for line in manifest[1:]:
+        cols = line.split("\t")
+        assert len(cols) == 7
+        assert os.path.exists(tmp_path / cols[6])
+        text = (tmp_path / cols[6]).read_text()
+        assert text.startswith("HloModule")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.tsv")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_manifest_is_complete():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.tsv")
+    lines = open(path).read().splitlines()
+    names = {line.split("\t")[0] for line in lines[1:]}
+    # The runtime's lookup ladder must be present.
+    for m in aot.REDUCE_SIZES:
+        assert f"reduce_bxor_i64_m{m}" in names
+    assert any(n.startswith("reduce_matrec_f32") for n in names)
+    assert any(n.startswith("block_exscan_bxor_i64") for n in names)

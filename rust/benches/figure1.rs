@@ -1,0 +1,44 @@
+//! Bench: regenerate the paper's **Figure 1** (experiment E3) — the
+//! log-log time-vs-bytes curves for all four algorithms on both cluster
+//! configurations. Writes `bench_figure1.csv` (long format) and prints
+//! the series; checking the visual features of the paper's plot:
+//! flat latency-bound region for small m, β-bound linear growth for
+//! large m, with the native curve on top and 123-doubling on the bottom
+//! at large m.
+
+use exscan::bench::{figure1_sweep, to_csv, PaperConfig, SweepSpec};
+
+fn main() -> anyhow::Result<()> {
+    let spec = SweepSpec::figure1();
+    let mut csv = String::new();
+    for config in [PaperConfig::C36x1, PaperConfig::C36x32] {
+        let t0 = std::time::Instant::now();
+        let ms = figure1_sweep(config, &spec)?;
+        println!("== figure1/{} ==", config.label());
+        println!("{:>9} {:>18} {:>12}", "bytes", "algo", "µs");
+        for m in &ms {
+            println!("{:>9} {:>18} {:>12.2}", m.bytes, m.algo, m.min_us);
+        }
+        // Feature checks at the extremes.
+        let series = |name: &str, m: usize| {
+            ms.iter().find(|x| x.algo == name && x.m == m).map(|x| x.min_us).unwrap()
+        };
+        let m_max = *spec.m_values.last().unwrap();
+        assert!(series("123-doubling", m_max) <= series("1-doubling", m_max) + 1e-9);
+        assert!(series("123-doubling", m_max) < series("two-op-doubling", m_max));
+        // Latency-bound region: m=0 and m=1 within a few percent.
+        let flat0 = series("123-doubling", 0);
+        let flat1 = series("123-doubling", 1);
+        assert!((flat1 - flat0) / flat0 < 0.05, "small-m region must be latency-bound");
+        let part = to_csv(config.label(), &ms);
+        if csv.is_empty() {
+            csv = part;
+        } else {
+            csv.push_str(part.split_once('\n').map(|x| x.1).unwrap_or(""));
+        }
+        println!("bench wall time: {:.1}s\n", t0.elapsed().as_secs_f64());
+    }
+    std::fs::write("bench_figure1.csv", &csv)?;
+    println!("figure1 bench: wrote bench_figure1.csv; all curve-shape assertions passed");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Bench: L3 hot-path microbenchmarks (§Perf in EXPERIMENTS.md).
+//!
+//! Measures the building blocks every communication round is made of so
+//! the per-round software overhead can be compared against the modelled
+//! α (≈1.2 µs inter-node): if a full in-process round costs ≪ α, the
+//! simulation's timing is dominated by the model, not the substrate, and
+//! the real-transport benches measure algorithm structure, not runtime
+//! noise.
+//!
+//!   * channel push/pop latency (the transport primitive)
+//!   * ping-pong sendrecv round trip between two rank threads
+//!   * reduce_local throughput (native ⊕ over large vectors)
+//!   * world spawn/teardown cost vs p (the once-per-benchmark cost)
+
+use std::time::Instant;
+
+use exscan::prelude::*;
+use exscan::util::Channel;
+
+fn bench_ns<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    // Channel push/pop, same thread (pure queue cost).
+    let ch: Channel<u64> = Channel::new();
+    let ns = bench_ns(1_000_000, || {
+        ch.push(1).unwrap();
+        ch.try_pop().unwrap();
+    });
+    println!("channel push+pop (1 thread):     {ns:>9.1} ns");
+
+    // Cross-thread ping-pong through the full RankCtx sendrecv path.
+    let world = WorldConfig::new(Topology::flat(2));
+    let iters = 50_000u32;
+    let t0 = Instant::now();
+    exscan::mpi::run_world::<i64, (), _>(&world, |ctx| {
+        let peer = 1 - ctx.rank();
+        let sbuf = [0i64];
+        let mut rbuf = [0i64];
+        for k in 0..iters {
+            ctx.sendrecv(k, peer, &sbuf, peer, &mut rbuf)?;
+        }
+        Ok(())
+    })?;
+    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("sendrecv round trip (2 threads): {ns:>9.1} ns  (model α = 1155 ns)");
+
+    // reduce_local throughput.
+    let op = ops::bxor();
+    for m in [1usize, 1000, 100_000] {
+        let a = vec![0x5aa5_5aa5i64; m];
+        let mut b = vec![-1i64; m];
+        let ns = bench_ns(if m > 10_000 { 2_000 } else { 200_000 }, || {
+            op.reduce_local(&a, &mut b);
+        });
+        let gbps = (m as f64 * 8.0) / ns;
+        println!("reduce_local m={m:>7}:           {ns:>9.1} ns  ({gbps:>6.2} GB/s)");
+    }
+
+    // World spawn/teardown (the fixed cost amortized by the rep loop).
+    for p in [16usize, 144, 1152] {
+        let world = WorldConfig::new(Topology::flat(p));
+        let iters = if p > 500 { 3 } else { 20 };
+        let ns = bench_ns(iters, || {
+            exscan::mpi::run_world::<i64, usize, _>(&world, |ctx| Ok(ctx.rank())).unwrap();
+        });
+        println!("world spawn+join p={p:>5}:        {:>9.2} ms", ns / 1e6);
+    }
+
+    // End-to-end: one full 123-doubling at p=36 on the thread transport.
+    let world = WorldConfig::new(Topology::flat(36));
+    let inputs = exscan::bench::inputs_i64(36, 1000, 1);
+    let bench = exscan::bench::BenchConfig { warmups: 10, reps: 100, validate: false };
+    let meas = exscan::bench::measure_exscan(&world, &bench, &Exscan123, &ops::bxor(), &inputs)?;
+    println!(
+        "123-doubling p=36 m=1000 (real):  {:>8.1} µs min, {:.1} µs mean",
+        meas.min_us, meas.mean_us
+    );
+    println!("hotpath bench done");
+    Ok(())
+}

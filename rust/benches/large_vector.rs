@@ -1,0 +1,55 @@
+//! Bench/ablation: the large-vector regime (experiment E6). The paper's
+//! closing caveat: "for large input vectors, other (pipelined,
+//! fixed-degree tree) algorithms must be used". This bench locates the
+//! crossover on the calibrated 36×1 cluster model: doubling algorithms
+//! win while rounds dominate; the pipelined chain (m/B-sized blocks,
+//! p+B−2 rounds) takes over once bandwidth dominates.
+
+use exscan::bench::{inputs_i64, measure_exscan, BenchConfig};
+use exscan::coll::PipelinedChain;
+use exscan::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let topo = Topology::cluster(36, 1);
+    let world = WorldConfig::new(topo).virtual_clock(CostParams::paper_36x1());
+    let bench = BenchConfig::default();
+
+    println!("virtual 36×1 cluster, µs (pipelined chain B = auto)");
+    println!(
+        "{:>9} | {:>12} {:>12} {:>12} {:>12}",
+        "m", "123", "linear", "pipe-chain", "winner"
+    );
+    let mut crossover_seen = false;
+    let mut last_winner = String::new();
+    for m in [1usize, 100, 10_000, 100_000, 400_000, 1_600_000, 6_400_000] {
+        let inputs = inputs_i64(topo.size(), m, 11);
+        let t123 = measure_exscan(&world, &bench, &Exscan123, &ops::bxor(), &inputs)?.min_us;
+        let tlin = measure_exscan(&world, &bench, &ExscanLinear, &ops::bxor(), &inputs)?.min_us;
+        let chain = PipelinedChain::auto();
+        let tpipe = measure_exscan(&world, &bench, &chain, &ops::bxor(), &inputs)?.min_us;
+        let winner = if t123 <= tpipe { "123" } else { "pipe-chain" };
+        if winner == "pipe-chain" {
+            crossover_seen = true;
+        }
+        last_winner = winner.to_string();
+        println!("{m:>9} | {t123:>12.1} {tlin:>12.1} {tpipe:>12.1} {winner:>12}");
+    }
+    assert!(crossover_seen, "pipelined chain must win somewhere in the large-m regime");
+    assert_eq!(last_winner, "pipe-chain", "largest m must be pipeline-bound");
+
+    // Block-count sweep at a large size: the B vs m/B trade-off.
+    println!("\nblock-count sweep at m = 1 600 000:");
+    let inputs = inputs_i64(topo.size(), 1_600_000, 13);
+    let mut best = (0usize, f64::INFINITY);
+    for b in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+        let chain = PipelinedChain::with_blocks(b);
+        let t = measure_exscan(&world, &bench, &chain, &ops::bxor(), &inputs)?.min_us;
+        println!("  B = {b:>4}: {t:>12.1} µs");
+        if t < best.1 {
+            best = (b, t);
+        }
+    }
+    println!("best B = {} — auto policy picks {}", best.0, PipelinedChain::auto().block_count(1_600_000));
+    println!("large_vector bench: crossover assertions passed");
+    Ok(())
+}

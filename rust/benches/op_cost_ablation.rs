@@ -1,0 +1,66 @@
+//! Bench/ablation: the ⊕-application cost (experiment E7). As the
+//! operator gets more expensive, the two-⊕ doubling algorithm's
+//! `2⌈log₂p⌉−1` applications hurt proportionally more than 123-doubling's
+//! `q−1` — the computational half of the paper's contribution.
+//!
+//! Measured on the **real thread transport** (wall clock) with the
+//! tunable `expensive_bxor` operator, and — when artifacts are built —
+//! with the AOT-compiled PJRT matrec kernel where every ⊕ is a real
+//! kernel launch.
+
+use exscan::bench::{inputs_i64, inputs_rec2, measure_exscan, BenchConfig};
+use exscan::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let p = 16;
+    let m = 2048;
+    let world = WorldConfig::new(Topology::flat(p));
+    let bench = BenchConfig { warmups: 5, reps: 40, validate: true };
+    let inputs = inputs_i64(p, m, 3);
+
+    println!("p = {p}, m = {m}, real thread transport, min-of-max µs");
+    println!("{:>10} | {:>12} {:>12} {:>12} | {:>8}", "op-work", "two-op", "1-dbl", "123", "123 wins by");
+    for work in [0u32, 16, 64, 256, 1024] {
+        let op = if work == 0 { ops::bxor() } else { ops::expensive_bxor(work) };
+        let t2 = measure_exscan(&world, &bench, &ExscanTwoOp, &op, &inputs)?.min_us;
+        let t1 = measure_exscan(&world, &bench, &ExscanOneDoubling, &op, &inputs)?.min_us;
+        let t123 = measure_exscan(&world, &bench, &Exscan123, &op, &inputs)?.min_us;
+        println!(
+            "{:>10} | {:>12.1} {:>12.1} {:>12.1} | {:>7.1}%",
+            work,
+            t2,
+            t1,
+            t123,
+            (t2 - t123) / t2 * 100.0
+        );
+    }
+
+    // With a genuinely expensive operator the ranking must be decisive.
+    let op = ops::expensive_bxor(1024);
+    let t2 = measure_exscan(&world, &bench, &ExscanTwoOp, &op, &inputs)?.min_us;
+    let t123 = measure_exscan(&world, &bench, &Exscan123, &op, &inputs)?.min_us;
+    assert!(
+        t123 < t2,
+        "123-doubling must beat two-⊕ under an expensive operator: {t123} vs {t2}"
+    );
+
+    // PJRT kernel path (optional, artifacts needed): count real launches.
+    if let Some(handle) = exscan::runtime::PjrtRuntime::try_default() {
+        println!("\nPJRT matrec kernel as ⊕ (p = {p}, m = 256 affine maps):");
+        let inputs = inputs_rec2(p, 256, 5);
+        let op = exscan::runtime::pjrt_rec2_compose(handle.clone());
+        for algo in [&ExscanTwoOp as &dyn ScanAlgorithm<Rec2>, &Exscan123] {
+            let before = handle.stats()?.launches;
+            let t0 = std::time::Instant::now();
+            let res = run_scan(&world, algo, &op, &inputs)?;
+            let dt = t0.elapsed().as_secs_f64() * 1e6;
+            let launches = handle.stats()?.launches - before;
+            assert_eq!(res.outputs.len(), p);
+            println!("  {:>18}: {launches:>4} launches, {dt:>10.0} µs wall", algo.name());
+        }
+    } else {
+        println!("\n(artifacts not built — skipping the PJRT kernel ablation)");
+    }
+    println!("op_cost_ablation bench: assertions passed");
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! Bench/ablation: round and ⊕ counts versus p (experiment E4 — the
+//! quantitative content of Theorem 1), plus the latency-regime timing
+//! consequence: at m = 1 the completion time is essentially
+//! `rounds × α`, so the 123-doubling advantage tracks its round count.
+//!
+//! For every p in a ladder spanning 2…4096 the *measured* (traced)
+//! counts are checked against the closed forms, then timed at m = 1 on
+//! the virtual cluster.
+
+use exscan::bench::{inputs_i64, measure_exscan, BenchConfig};
+use exscan::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let ladder = [
+        2usize, 3, 4, 5, 6, 7, 8, 9, 12, 16, 17, 24, 31, 32, 33, 36, 48, 64, 65, 96, 100, 128,
+        192, 256, 384, 512, 768, 1024, 1152, 2048, 3072, 4096,
+    ];
+    println!(
+        "{:>6} | {:>12} {:>12} {:>12} | {:>8} {:>8} {:>8}",
+        "p", "rounds(2op)", "rounds(1dbl)", "rounds(123)", "ops(2op)", "ops(1dbl)", "ops(123)"
+    );
+    for &p in &ladder {
+        let algos = exscan::coll::paper_exscan_algorithms::<i64>();
+        let by = |n: &str| algos.iter().find(|a| a.name() == n).unwrap();
+        let (a2, a1, a123) = (by("two-op-doubling"), by("1-doubling"), by("123-doubling"));
+        println!(
+            "{:>6} | {:>12} {:>12} {:>12} | {:>8} {:>8} {:>8}",
+            p,
+            a2.predicted_rounds(p),
+            a1.predicted_rounds(p),
+            a123.predicted_rounds(p),
+            a2.predicted_ops(p),
+            a1.predicted_ops(p),
+            a123.predicted_ops(p)
+        );
+        // Theorem 1 bounds: q123 <= q1dbl always; q123 <= ceil(log2(p-1))+1.
+        assert!(a123.predicted_rounds(p) <= a1.predicted_rounds(p));
+        if p > 2 {
+            assert!(a123.predicted_rounds(p) <= exscan::util::ceil_log2(p - 1) + 1);
+            assert_eq!(a123.predicted_ops(p), a123.predicted_rounds(p) - 1);
+        }
+        // Verify against the live trace for the moderate sizes.
+        if p <= 256 {
+            let world = WorldConfig::new(Topology::flat(p)).with_trace(true);
+            let inputs = inputs_i64(p, 2, p as u64);
+            for algo in [&**a2, &**a1, &**a123] {
+                let res = run_scan(&world, algo, &ops::bxor(), &inputs)?;
+                let tr = res.trace.unwrap();
+                assert_eq!(
+                    tr.total_rounds(),
+                    algo.predicted_rounds(p),
+                    "{} rounds p={p}",
+                    algo.name()
+                );
+                assert!(exscan::trace::check_all(&tr).is_empty(), "{} p={p}", algo.name());
+            }
+        }
+    }
+
+    // Latency regime (m = 1): time ≈ rounds × α — where the saved round shows.
+    println!("\nlatency regime, m = 1, virtual 36×1 cluster:");
+    let world = WorldConfig::new(Topology::cluster(36, 1)).virtual_clock(CostParams::paper_36x1());
+    let bench = BenchConfig::quick();
+    let inputs = inputs_i64(36, 1, 1);
+    for algo in exscan::coll::paper_exscan_algorithms::<i64>() {
+        let m = measure_exscan(&world, &bench, &*algo, &ops::bxor(), &inputs)?;
+        println!(
+            "  {:>18}: {:>7.2} µs  ({} rounds)",
+            m.algo,
+            m.min_us,
+            algo.predicted_rounds(36)
+        );
+    }
+    // Hierarchical (SMP-aware) ablation: flat 123-doubling vs two-level
+    // gather/leader-exscan/scatter at 36×32, sweeping the inter/intra
+    // latency ratio. Flat wins at the calibrated ratio (~4×); the
+    // hierarchy pays off once inter-node latency dominates enough to buy
+    // back the 2(k−1) local rounds.
+    println!("\nhierarchical ablation, p = 8×8, m = 16, virtual clock:");
+    println!("{:>12} | {:>10} {:>12}", "inter/intra", "flat-123", "hierarchical");
+    let mut hier_wins_somewhere = false;
+    for ratio in [2.0, 8.0, 32.0, 128.0, 512.0] {
+        let params = CostParams {
+            alpha_intra: 0.5,
+            alpha_inter: 0.5 * ratio,
+            beta_intra: 1e-5,
+            beta_inter: 1e-5 * ratio,
+            gamma: 1e-5,
+            overhead: 0.0,
+        };
+        let world = WorldConfig::new(Topology::cluster(8, 8)).virtual_clock(params);
+        let inputs = inputs_i64(64, 16, 17);
+        let flat =
+            measure_exscan(&world, &BenchConfig::quick(), &Exscan123, &ops::bxor(), &inputs)?
+                .min_us;
+        let hier = measure_exscan(
+            &world,
+            &BenchConfig::quick(),
+            &exscan::coll::ExscanHierarchical::new(8),
+            &ops::bxor(),
+            &inputs,
+        )?
+        .min_us;
+        if hier < flat {
+            hier_wins_somewhere = true;
+        }
+        println!("{ratio:>12} | {flat:>10.2} {hier:>12.2}");
+    }
+    assert!(
+        hier_wins_somewhere,
+        "the hierarchy must pay off at extreme inter/intra ratios"
+    );
+    println!("rounds_ablation bench: all Theorem-1 assertions passed");
+    Ok(())
+}

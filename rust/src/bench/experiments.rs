@@ -1,0 +1,165 @@
+//! Paper-experiment runners: everything needed to regenerate Table 1 and
+//! Figure 1 (experiments E1–E3 of DESIGN.md) on the simulated cluster.
+//!
+//! The three portable algorithms run under the calibrated α-β-γ parameters;
+//! the *native* baseline runs the same recursive-doubling pattern under its
+//! separately fitted (heavier) parameters — modelling mpich's internal
+//! overheads, as calibrated from the paper's native column.
+
+use anyhow::Result;
+
+use super::harness::{measure_exscan, BenchConfig, Measurement};
+use super::workload::{inputs_i64, SweepSpec};
+use crate::coll::{Exscan123, ExscanMpich, ExscanOneDoubling, ExscanTwoOp, ScanAlgorithm};
+use crate::cost::CostParams;
+use crate::mpi::{ops, Topology, WorldConfig};
+
+/// One of the paper's two cluster configurations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PaperConfig {
+    /// 36 nodes × 1 rank.
+    C36x1,
+    /// 36 nodes × 32 ranks = 1152.
+    C36x32,
+}
+
+impl PaperConfig {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "36x1" => Some(PaperConfig::C36x1),
+            "36x32" => Some(PaperConfig::C36x32),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PaperConfig::C36x1 => "36x1",
+            PaperConfig::C36x32 => "36x32",
+        }
+    }
+
+    pub fn topology(&self) -> Topology {
+        match self {
+            PaperConfig::C36x1 => Topology::cluster(36, 1),
+            PaperConfig::C36x32 => Topology::cluster(36, 32),
+        }
+    }
+
+    pub fn params(&self) -> CostParams {
+        match self {
+            PaperConfig::C36x1 => CostParams::paper_36x1(),
+            PaperConfig::C36x32 => CostParams::paper_36x32(),
+        }
+    }
+
+    pub fn native_params(&self) -> CostParams {
+        match self {
+            PaperConfig::C36x1 => CostParams::paper_36x1_native(),
+            PaperConfig::C36x32 => CostParams::paper_36x32_native(),
+        }
+    }
+
+    /// The paper's measured times for this config (for side-by-side
+    /// reporting): `(m, native, two_op, one_doubling, otd123)`.
+    pub fn paper_rows(&self) -> Vec<(usize, f64, f64, f64, f64)> {
+        let d = match self {
+            PaperConfig::C36x1 => &crate::cost::PAPER_TABLE1_36X1,
+            PaperConfig::C36x32 => &crate::cost::PAPER_TABLE1_36X32,
+        };
+        (0..d.m.len())
+            .map(|i| (d.m[i], d.native[i], d.two_op[i], d.one_doubling[i], d.otd123[i]))
+            .collect()
+    }
+}
+
+/// A Table-1 style row: measured (simulated) µs per algorithm.
+#[derive(Debug, Clone)]
+pub struct ExperimentRow {
+    pub m: usize,
+    pub native: f64,
+    pub two_op: f64,
+    pub one_doubling: f64,
+    pub otd123: f64,
+}
+
+/// Run the four-algorithm comparison at the given element counts on the
+/// simulated cluster; returns one row per m (this *is* Table 1).
+pub fn table1_rows(config: PaperConfig, m_values: &[usize]) -> Result<Vec<ExperimentRow>> {
+    let topo = config.topology();
+    let world = WorldConfig::new(topo).virtual_clock(config.params());
+    let native_world = WorldConfig::new(topo).virtual_clock(config.native_params());
+    // Validate outputs once per m (on the 123-doubling run); re-validating
+    // all four algorithms would spend more time in the p·m-element oracle
+    // than in the simulations themselves at p = 1152 (§Perf).
+    let bench = BenchConfig { validate: false, ..BenchConfig::default() };
+    let vbench = BenchConfig::default();
+    let op = ops::bxor();
+
+    let mut rows = Vec::with_capacity(m_values.len());
+    for &m in m_values {
+        let inputs = inputs_i64(topo.size(), m, 0xEC5CA7);
+        let t = |w: &WorldConfig, a: &dyn ScanAlgorithm<i64>, v: bool| -> Result<f64> {
+            let b = if v { &vbench } else { &bench };
+            Ok(measure_exscan(w, b, a, &op, &inputs)?.min_us)
+        };
+        rows.push(ExperimentRow {
+            m,
+            native: t(&native_world, &ExscanMpich, false)?,
+            two_op: t(&world, &ExscanTwoOp, false)?,
+            one_doubling: t(&world, &ExscanOneDoubling, false)?,
+            otd123: t(&world, &Exscan123, true)?,
+        });
+    }
+    Ok(rows)
+}
+
+/// The Figure 1 sweep: long-format measurements over the dense m grid for
+/// all four algorithms. Returns measurements tagged by algorithm name.
+pub fn figure1_sweep(config: PaperConfig, spec: &SweepSpec) -> Result<Vec<Measurement>> {
+    let topo = config.topology();
+    let world = WorldConfig::new(topo).virtual_clock(config.params());
+    let native_world = WorldConfig::new(topo).virtual_clock(config.native_params());
+    let bench = BenchConfig { validate: false, ..BenchConfig::default() };
+    let vbench = BenchConfig::default();
+    let op = ops::bxor();
+
+    let mut out = Vec::new();
+    for &m in &spec.m_values {
+        let inputs = inputs_i64(topo.size(), m, 0xF16);
+        out.push(measure_exscan(&native_world, &bench, &ExscanMpich, &op, &inputs)?);
+        out.push(measure_exscan(&world, &bench, &ExscanTwoOp, &op, &inputs)?);
+        out.push(measure_exscan(&world, &bench, &ExscanOneDoubling, &op, &inputs)?);
+        out.push(measure_exscan(&world, &vbench, &Exscan123, &op, &inputs)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_36x1_shape() {
+        // Small grid to keep the test fast; full grid runs in the bench.
+        let rows = table1_rows(PaperConfig::C36x1, &[1, 1000, 100_000]).unwrap();
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            // Headline shape: 123-doubling never loses to 1-doubling,
+            // and never loses to the native baseline.
+            assert!(r.otd123 <= r.one_doubling + 1e-9, "m={}", r.m);
+            assert!(r.otd123 <= r.native + 1e-9, "m={}", r.m);
+        }
+        // At the largest size the two-⊕ penalty must show.
+        let big = &rows[2];
+        assert!(big.otd123 < big.two_op, "ops penalty at large m");
+    }
+
+    #[test]
+    fn paper_rows_available() {
+        let rows = PaperConfig::C36x1.paper_rows();
+        assert_eq!(rows.len(), 6);
+        assert_eq!(rows[0].0, 1);
+        assert!((rows[5].2 - 1789.40).abs() < 1e-9);
+    }
+}

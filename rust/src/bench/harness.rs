@@ -1,0 +1,195 @@
+//! The measurement harness, reproducing the paper's benchmarking procedure
+//! (Section 3, after [Träff, mpicroscope]):
+//!
+//! * per element count: `warmups` warm-up executions, then `reps` measured
+//!   repetitions;
+//! * processes synchronized with a barrier (twice) before each repetition;
+//! * per repetition the time of the **slowest** rank is taken;
+//! * over repetitions the **minimum** of those maxima is reported.
+//!
+//! Threads are spawned once per (algorithm, m) and reused across all
+//! repetitions — repetition cost is pure algorithm execution, as in MPI.
+
+use anyhow::Result;
+
+use crate::coll::ScanAlgorithm;
+use crate::mpi::ctx::ClockMode;
+use crate::mpi::{run_world, Elem, OpRef, WorldConfig};
+use crate::util::Summary;
+
+/// Repetition policy. `Default` matches the paper: 15 warmups, 200 reps.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmups: usize,
+    pub reps: usize,
+    /// Verify the first repetition's output against the sequential oracle.
+    pub validate: bool,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmups: 15, reps: 200, validate: true }
+    }
+}
+
+impl BenchConfig {
+    /// A fast policy for CI / smoke runs.
+    pub fn quick() -> Self {
+        BenchConfig { warmups: 2, reps: 20, validate: true }
+    }
+}
+
+/// One measured (algorithm, m) point.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub algo: String,
+    pub p: usize,
+    pub m: usize,
+    pub bytes: usize,
+    /// min over reps of (max over ranks) — the paper's statistic, µs.
+    pub min_us: f64,
+    pub mean_us: f64,
+    pub stddev_us: f64,
+    pub reps: usize,
+}
+
+/// Measure one exclusive-scan algorithm at vector length `m`.
+///
+/// In virtual-clock mode the result is deterministic, so a single
+/// repetition (and no warmup) is executed regardless of `bench.reps`.
+pub fn measure_exscan<T: Elem>(
+    world: &WorldConfig,
+    bench: &BenchConfig,
+    algo: &dyn ScanAlgorithm<T>,
+    op: &OpRef<T>,
+    inputs: &[Vec<T>],
+) -> Result<Measurement> {
+    let p = world.size();
+    assert_eq!(inputs.len(), p);
+    let m = inputs[0].len();
+    let virtual_mode = matches!(world.mode, ClockMode::Virtual(_));
+    let overhead = match &world.mode {
+        ClockMode::Virtual(model) => model.params.overhead,
+        ClockMode::Real => 0.0,
+    };
+    let (warmups, reps) =
+        if virtual_mode { (0, 1) } else { (bench.warmups, bench.reps) };
+
+    // per-rank: Vec of per-rep times + the final output for validation.
+    let per_rank = run_world::<T, (Vec<f64>, Vec<T>), _>(world, |ctx| {
+        // Borrow the rank's input directly (no per-rank clone: at p = 1152,
+        // m = 100 000 a clone would copy ~1 GB per measurement — §Perf).
+        let input = &inputs[ctx.rank()];
+        let mut output = vec![T::filler(); m];
+        let mut times = Vec::with_capacity(reps);
+        for _ in 0..warmups {
+            ctx.barrier();
+            algo.run(ctx, input, &mut output, op)?;
+            if virtual_mode {
+                ctx.reset_clock();
+            }
+        }
+        for _ in 0..reps {
+            // Synchronize with MPI_Barrier (twice), as the paper does.
+            ctx.barrier();
+            ctx.barrier();
+            if virtual_mode {
+                ctx.reset_clock();
+            }
+            let t0 = std::time::Instant::now();
+            algo.run(ctx, input, &mut output, op)?;
+            let dt = if virtual_mode {
+                ctx.vclock() + overhead
+            } else {
+                t0.elapsed().as_secs_f64() * 1e6
+            };
+            times.push(dt);
+        }
+        Ok((times, output))
+    })?;
+
+    if bench.validate {
+        let outputs: Vec<Vec<T>> = per_rank.iter().map(|(_, o)| o.clone()).collect();
+        crate::coll::validate::assert_exscan_matches(inputs, op, &outputs);
+    }
+
+    // Per rep: max over ranks; over reps: Summary.
+    let mut s = Summary::new();
+    for rep in 0..reps {
+        let worst = per_rank.iter().map(|(t, _)| t[rep]).fold(0.0f64, f64::max);
+        s.push(worst);
+    }
+    Ok(Measurement {
+        algo: algo.name().to_string(),
+        p,
+        m,
+        bytes: m * T::size_bytes(),
+        min_us: s.min(),
+        mean_us: s.mean(),
+        stddev_us: s.stddev(),
+        reps,
+    })
+}
+
+/// Convenience wrapper bundling a world + bench policy.
+pub struct Harness {
+    pub world: WorldConfig,
+    pub bench: BenchConfig,
+}
+
+impl Harness {
+    pub fn new(world: WorldConfig, bench: BenchConfig) -> Self {
+        Harness { world, bench }
+    }
+
+    /// Measure several algorithms over several element counts.
+    pub fn sweep<T: Elem>(
+        &self,
+        algos: &[&dyn ScanAlgorithm<T>],
+        op: &OpRef<T>,
+        m_values: &[usize],
+        mk_inputs: impl Fn(usize, usize) -> Vec<Vec<T>>,
+    ) -> Result<Vec<Measurement>> {
+        let mut out = Vec::new();
+        for &m in m_values {
+            let inputs = mk_inputs(self.world.size(), m);
+            for algo in algos {
+                out.push(measure_exscan(&self.world, &self.bench, *algo, op, &inputs)?);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workload::inputs_i64;
+    use crate::coll::Exscan123;
+    use crate::cost::CostParams;
+    use crate::mpi::{ops, Topology};
+
+    #[test]
+    fn real_mode_measures_positive_times() {
+        let world = WorldConfig::new(Topology::flat(4));
+        let bench = BenchConfig { warmups: 1, reps: 5, validate: true };
+        let inputs = inputs_i64(4, 64, 7);
+        let m =
+            measure_exscan(&world, &bench, &Exscan123, &ops::bxor(), &inputs).unwrap();
+        assert!(m.min_us > 0.0);
+        assert!(m.min_us <= m.mean_us);
+        assert_eq!(m.reps, 5);
+    }
+
+    #[test]
+    fn virtual_mode_single_rep_deterministic() {
+        let world =
+            WorldConfig::new(Topology::cluster(9, 1)).virtual_clock(CostParams::generic());
+        let bench = BenchConfig::default();
+        let inputs = inputs_i64(9, 16, 3);
+        let a = measure_exscan(&world, &bench, &Exscan123, &ops::bxor(), &inputs).unwrap();
+        let b = measure_exscan(&world, &bench, &Exscan123, &ops::bxor(), &inputs).unwrap();
+        assert_eq!(a.reps, 1);
+        assert_eq!(a.min_us, b.min_us, "virtual clock must be deterministic");
+    }
+}

@@ -1,0 +1,14 @@
+//! The benchmarking subsystem: an mpicroscope-style measurement harness
+//! (the procedure the paper's Section 3 describes), workload generators,
+//! table/CSV formatting, and the runners that regenerate the paper's
+//! Table 1 and Figure 1.
+
+pub mod experiments;
+pub mod harness;
+pub mod table;
+pub mod workload;
+
+pub use experiments::{figure1_sweep, table1_rows, ExperimentRow, PaperConfig};
+pub use harness::{measure_exscan, BenchConfig, Harness, Measurement};
+pub use table::{format_table, to_csv};
+pub use workload::{inputs_i64, inputs_rec2, SweepSpec};

@@ -1,0 +1,97 @@
+//! Text-table and CSV rendering of measurement grids (the exact row/column
+//! layout of the paper's Table 1, and long-format CSV for Figure 1).
+
+use super::harness::Measurement;
+
+/// Render measurements as an aligned text table: one row per element
+/// count, one column per algorithm (paper Table 1 layout). Algorithms are
+/// ordered by first appearance.
+pub fn format_table(title: &str, ms: &[Measurement]) -> String {
+    let mut algos: Vec<String> = Vec::new();
+    for m in ms {
+        if !algos.contains(&m.algo) {
+            algos.push(m.algo.clone());
+        }
+    }
+    let mut m_values: Vec<usize> = ms.iter().map(|m| m.m).collect();
+    m_values.sort_unstable();
+    m_values.dedup();
+
+    let mut out = String::new();
+    out.push_str(&format!("{title}\n"));
+    out.push_str(&format!("{:>10}", "m"));
+    for a in &algos {
+        out.push_str(&format!(" {a:>16}"));
+    }
+    out.push('\n');
+    out.push_str(&format!("{:>10}", ""));
+    for _ in &algos {
+        out.push_str(&format!(" {:>16}", "(µs)"));
+    }
+    out.push('\n');
+    for &mv in &m_values {
+        out.push_str(&format!("{mv:>10}"));
+        for a in &algos {
+            match ms.iter().find(|x| x.m == mv && &x.algo == a) {
+                Some(x) => out.push_str(&format!(" {:>16.2}", x.min_us)),
+                None => out.push_str(&format!(" {:>16}", "-")),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Long-format CSV (`config,algo,p,m,bytes,min_us,mean_us,stddev_us,reps`)
+/// suitable for plotting Figure 1.
+pub fn to_csv(config: &str, ms: &[Measurement]) -> String {
+    let mut out = String::from("config,algo,p,m,bytes,min_us,mean_us,stddev_us,reps\n");
+    for m in ms {
+        out.push_str(&format!(
+            "{},{},{},{},{},{:.4},{:.4},{:.4},{}\n",
+            config, m.algo, m.p, m.m, m.bytes, m.min_us, m.mean_us, m.stddev_us, m.reps
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(algo: &str, m: usize, t: f64) -> Measurement {
+        Measurement {
+            algo: algo.into(),
+            p: 36,
+            m,
+            bytes: m * 8,
+            min_us: t,
+            mean_us: t * 1.1,
+            stddev_us: 0.5,
+            reps: 10,
+        }
+    }
+
+    #[test]
+    fn table_layout() {
+        let ms = vec![mk("a", 1, 1.0), mk("b", 1, 2.0), mk("a", 10, 3.0), mk("b", 10, 4.0)];
+        let t = format_table("T", &ms);
+        let lines: Vec<&str> = t.lines().collect();
+        assert!(lines[0].contains('T'));
+        assert!(lines[1].contains('a') && lines[1].contains('b'));
+        assert_eq!(lines.len(), 5); // title, header, units, two data rows
+        assert!(lines[3].trim_start().starts_with('1'));
+    }
+
+    #[test]
+    fn csv_roundtrip_fields() {
+        let csv = to_csv("36x1", &[mk("x", 5, 9.25)]);
+        let mut lines = csv.lines();
+        assert_eq!(
+            lines.next().unwrap(),
+            "config,algo,p,m,bytes,min_us,mean_us,stddev_us,reps"
+        );
+        let row = lines.next().unwrap();
+        assert!(row.starts_with("36x1,x,36,5,40,9.2500,"));
+    }
+}

@@ -1,0 +1,97 @@
+//! Deterministic workload generators for benchmarks and tests.
+
+use crate::mpi::Rec2;
+use crate::util::Rng;
+
+/// Per-rank i64 vectors, deterministic in (seed, rank).
+pub fn inputs_i64(p: usize, m: usize, seed: u64) -> Vec<Vec<i64>> {
+    (0..p)
+        .map(|r| {
+            let mut rng = Rng::seed_from_u64(seed ^ (r as u64).wrapping_mul(0x9E37_79B9));
+            (0..m).map(|_| rng.gen_i64()).collect()
+        })
+        .collect()
+}
+
+/// Per-rank well-conditioned affine recurrence elements: matrices close to
+/// a rotation (determinant ≈ 1) so long compositions neither explode nor
+/// vanish and float comparisons stay meaningful.
+pub fn inputs_rec2(p: usize, m: usize, seed: u64) -> Vec<Vec<Rec2>> {
+    (0..p)
+        .map(|r| {
+            let mut rng = Rng::seed_from_u64(seed ^ (r as u64).wrapping_mul(0xC2B2_AE35));
+            (0..m)
+                .map(|_| {
+                    let th: f32 = rng.gen_range_f32(-0.1, 0.1);
+                    let (s, c) = th.sin_cos();
+                    Rec2::new(
+                        [c, -s, s, c],
+                        [rng.gen_range_f32(-1.0, 1.0), rng.gen_range_f32(-1.0, 1.0)],
+                    )
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Declarative sweep: which element counts to measure. The paper's Table 1
+/// grid plus a denser grid for the Figure 1 curves.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub m_values: Vec<usize>,
+}
+
+impl SweepSpec {
+    /// Table 1 grid: 1, 10, …, 100 000 elements.
+    pub fn table1() -> Self {
+        SweepSpec { m_values: vec![1, 10, 100, 1000, 10_000, 100_000] }
+    }
+
+    /// Figure 1 grid: denser, roughly 3 points per decade, plus m = 0
+    /// (the paper's plot starts at 0 bytes).
+    pub fn figure1() -> Self {
+        SweepSpec {
+            m_values: vec![
+                0, 1, 2, 5, 10, 20, 50, 100, 200, 500, 1000, 2000, 5000, 10_000, 20_000, 50_000,
+                100_000,
+            ],
+        }
+    }
+
+    /// A quick grid for CI.
+    pub fn quick() -> Self {
+        SweepSpec { m_values: vec![1, 100, 10_000] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(inputs_i64(4, 8, 42), inputs_i64(4, 8, 42));
+        assert_ne!(inputs_i64(4, 8, 42), inputs_i64(4, 8, 43));
+    }
+
+    #[test]
+    fn shapes() {
+        let v = inputs_i64(5, 7, 1);
+        assert_eq!(v.len(), 5);
+        assert!(v.iter().all(|x| x.len() == 7));
+        let r = inputs_rec2(3, 4, 1);
+        assert_eq!(r.len(), 3);
+        assert!(r.iter().all(|x| x.len() == 4));
+    }
+
+    #[test]
+    fn rec2_well_conditioned() {
+        // Determinant of each matrix ≈ 1 (rotation).
+        for row in inputs_rec2(4, 16, 9) {
+            for e in row {
+                let det = e.a[0] * e.a[3] - e.a[1] * e.a[2];
+                assert!((det - 1.0).abs() < 1e-3);
+            }
+        }
+    }
+}

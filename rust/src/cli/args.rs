@@ -1,0 +1,123 @@
+//! A minimal `--flag value` / `--switch` argument parser (offline-build
+//! replacement for `clap`).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed arguments: one subcommand, named flags, boolean switches.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first bare word is the subcommand; `--name value`
+    /// pairs become flags; a `--name` followed by another `--…` (or end of
+    /// input) is a boolean switch.
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                // `--name=value` form
+                if let Some((n, v)) = name.split_once('=') {
+                    out.flags.insert(n.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a.clone());
+            } else {
+                bail!("unexpected positional argument {a:?}");
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Typed flag with default.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("flag --{name}: cannot parse {v:?}")),
+        }
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.flags.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|x| x.trim().parse().map_err(|_| anyhow!("flag --{name}: bad entry {x:?}")))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["table1", "--config", "36x1", "--quick"]);
+        assert_eq!(a.subcommand.as_deref(), Some("table1"));
+        assert_eq!(a.flag("config"), Some("36x1"));
+        assert!(a.switch("quick"));
+        assert!(!a.switch("nope"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["run", "--p=36", "--m=100"]);
+        assert_eq!(a.get("p", 0usize).unwrap(), 36);
+        assert_eq!(a.get("m", 0usize).unwrap(), 100);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&["run"]);
+        assert_eq!(a.get("p", 42usize).unwrap(), 42);
+        assert_eq!(a.get_list("ps", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse(&["tune", "--p", "4,16,64"]);
+        assert_eq!(a.get_list("p", &[]).unwrap(), vec![4, 16, 64]);
+    }
+
+    #[test]
+    fn bad_parse_errors() {
+        let a = parse(&["run", "--p", "abc"]);
+        assert!(a.get("p", 0usize).is_err());
+    }
+
+    #[test]
+    fn double_positional_rejected() {
+        let argv: Vec<String> = vec!["a".into(), "b".into()];
+        assert!(Args::parse(&argv).is_err());
+    }
+}

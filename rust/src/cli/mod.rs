@@ -1,0 +1,393 @@
+//! `exscan` CLI: the launcher over the library. Subcommands map 1:1 to the
+//! DESIGN.md experiments — `table1`/`sweep` regenerate the paper's
+//! artifacts, `calibrate`/`predict`/`trace`/`tune` expose the cost model
+//! and invariant machinery, `run` executes a single collective, and
+//! `kernel-smoke` proves the PJRT artifact path end to end.
+
+pub mod args;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::bench::{
+    figure1_sweep, format_table, table1_rows, to_csv, BenchConfig, PaperConfig, SweepSpec,
+};
+use crate::coll::{
+    all_exscan_algorithms, exscan_by_name, select_exscan, ScanAlgorithm, TuningTable,
+};
+use crate::cost::{fit_flat, predict_flat, CostParams, PAPER_TABLE1_36X1, PAPER_TABLE1_36X32};
+use crate::mpi::{ops, run_scan, Topology, WorldConfig};
+use args::Args;
+
+pub const USAGE: &str = "exscan — exclusive prefix sums (Träff 2025 reproduction)
+
+USAGE: exscan <COMMAND> [FLAGS]
+
+COMMANDS:
+  table1    regenerate Table 1 on the simulated cluster
+              --config 36x1|36x32   (default: both)
+  sweep     dense m-sweep for Figure 1, writes CSV
+              --config 36x1|36x32   (default: both)
+              --out PATH            (default: figure1.csv)
+              --quick               small grid
+  calibrate fit the α-β-γ model to the embedded paper data
+  predict   closed-form predictions for all algorithms
+              --p N  --m N  --ranks-per-node N
+  run       run one algorithm on the real thread transport
+              --algo NAME  --p N  --m N  --reps N
+  trace     rounds, ⊕ counts and invariant check for one algorithm
+              --algo NAME  --p N  --ranks-per-node N  --m N  --critical
+  tune      print the cost-model-driven selection table
+              --p LIST  --ranks-per-node N
+  kernel-smoke  exercise the AOT PJRT kernel path
+              --artifacts DIR       (default: artifacts)
+  verify-claims run the full evaluation and check every §3 claim
+  help      this text
+";
+
+/// Entry point used by `main`.
+pub fn run_argv(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.subcommand.as_deref() {
+        Some("table1") => cmd_table1(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("calibrate") => cmd_calibrate(),
+        Some("predict") => cmd_predict(&args),
+        Some("run") => cmd_run(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("tune") => cmd_tune(&args),
+        Some("kernel-smoke") => cmd_kernel_smoke(&args),
+        Some("verify-claims") => cmd_verify_claims(),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn configs(args: &Args) -> Result<Vec<PaperConfig>> {
+    match args.flag("config") {
+        None => Ok(vec![PaperConfig::C36x1, PaperConfig::C36x32]),
+        Some(s) => s
+            .split(',')
+            .map(|part| {
+                PaperConfig::parse(part)
+                    .ok_or_else(|| anyhow!("unknown config {part} (want 36x1 or 36x32)"))
+            })
+            .collect(),
+    }
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    for cfg in configs(args)? {
+        let rows = table1_rows(cfg, &[1, 10, 100, 1000, 10_000, 100_000])?;
+        println!("== Table 1, p = {} (simulated vs paper) ==", cfg.label());
+        println!(
+            "{:>8} | {:>10} {:>10} {:>10} {:>10} | {:>10} {:>10} {:>10} {:>10}",
+            "m",
+            "native",
+            "two-op",
+            "1-dbl",
+            "123",
+            "paper-nat",
+            "paper-2op",
+            "paper-1dbl",
+            "paper-123"
+        );
+        for (row, paper) in rows.iter().zip(cfg.paper_rows()) {
+            println!(
+                "{:>8} | {:>10.2} {:>10.2} {:>10.2} {:>10.2} | {:>10.2} {:>10.2} {:>10.2} {:>10.2}",
+                row.m,
+                row.native,
+                row.two_op,
+                row.one_doubling,
+                row.otd123,
+                paper.1,
+                paper.2,
+                paper.3,
+                paper.4
+            );
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let out: String = args.get("out", "figure1.csv".to_string())?;
+    let spec = if args.switch("quick") { SweepSpec::quick() } else { SweepSpec::figure1() };
+    let mut csv = String::new();
+    for cfg in configs(args)? {
+        let ms = figure1_sweep(cfg, &spec)?;
+        println!("{}", format_table(&format!("Figure 1 sweep, {}", cfg.label()), &ms));
+        let part = to_csv(cfg.label(), &ms);
+        if csv.is_empty() {
+            csv = part;
+        } else {
+            csv.push_str(part.split_once('\n').map(|x| x.1).unwrap_or(""));
+        }
+    }
+    std::fs::write(&out, &csv)?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_calibrate() -> Result<()> {
+    for data in [&PAPER_TABLE1_36X1, &PAPER_TABLE1_36X32] {
+        let rep = fit_flat(data, 8);
+        println!("== calibration {} ==", rep.label);
+        println!("portable: {:#?}", rep.params);
+        println!("native:   {:#?}", rep.native_params);
+        println!(
+            "rel RMSE: portable {:.1}%, native {:.1}%",
+            rep.rel_rmse * 100.0,
+            rep.native_rel_rmse * 100.0
+        );
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let p: usize = args.get("p", 36)?;
+    let m: usize = args.get("m", 1000)?;
+    let rpn: usize = args.get("ranks-per-node", 1)?;
+    let params = CostParams::paper_36x1();
+    println!("closed-form α-β-γ predictions (p={p}, m={m}, {rpn} ranks/node):");
+    println!("{:>18} {:>8} {:>6} {:>12}", "algorithm", "rounds", "ops", "time (µs)");
+    for algo in all_exscan_algorithms::<i64>() {
+        let pred = predict_flat(
+            &algo.critical_skips(p),
+            algo.predicted_ops(p),
+            p,
+            rpn,
+            m * 8,
+            &params,
+        );
+        println!(
+            "{:>18} {:>8} {:>6} {:>12.2}",
+            algo.name(),
+            pred.rounds,
+            pred.ops,
+            pred.time_us
+        );
+    }
+    let best = select_exscan::<i64>(p, m, &params, rpn);
+    println!("selected: {}", best.name());
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let name: String = args.get("algo", "123-doubling".to_string())?;
+    let p: usize = args.get("p", 36)?;
+    let m: usize = args.get("m", 1000)?;
+    let reps: usize = args.get("reps", 20)?;
+    let algo: Box<dyn ScanAlgorithm<i64>> =
+        exscan_by_name(&name).ok_or_else(|| anyhow!("unknown algorithm {name}"))?;
+    let world = WorldConfig::new(Topology::flat(p));
+    let bench = BenchConfig { warmups: 3, reps, validate: true };
+    let inputs = crate::bench::inputs_i64(p, m, 1);
+    let meas =
+        crate::bench::measure_exscan(&world, &bench, algo.as_ref(), &ops::bxor(), &inputs)?;
+    println!(
+        "{} p={p} m={m}: min {:.2} µs, mean {:.2} µs (±{:.2}), {} reps — output verified",
+        meas.algo, meas.min_us, meas.mean_us, meas.stddev_us, meas.reps
+    );
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let name: String = args.get("algo", "123-doubling".to_string())?;
+    let p: usize = args.get("p", 36)?;
+    let rpn: usize = args.get("ranks-per-node", 1)?;
+    let m: usize = args.get("m", 4)?;
+    let algo: Box<dyn ScanAlgorithm<i64>> =
+        exscan_by_name(&name).ok_or_else(|| anyhow!("unknown algorithm {name}"))?;
+    anyhow::ensure!(p % rpn == 0, "p must be divisible by ranks-per-node");
+    let topo = Topology::cluster(p / rpn, rpn);
+    let world = WorldConfig::new(topo).with_trace(true);
+    let inputs = crate::bench::inputs_i64(p, m, 1);
+    let res = run_scan(&world, algo.as_ref(), &ops::bxor(), &inputs)?;
+    let trace = res.trace.expect("tracing enabled");
+    let violations = crate::trace::check_all(&trace);
+    println!("algorithm: {}", algo.name());
+    println!("p = {p}");
+    println!(
+        "communication rounds: {} (predicted {})",
+        trace.total_rounds(),
+        algo.predicted_rounds(p)
+    );
+    println!(
+        "⊕ applications: last rank {} (predicted {}), max over ranks {}",
+        trace.last_rank_ops(),
+        algo.predicted_ops(p),
+        trace.max_ops()
+    );
+    println!("messages: {}, bytes: {}", trace.total_messages(), trace.total_bytes());
+    if violations.is_empty() {
+        println!("one-ported + matching invariants: OK");
+    } else {
+        for v in &violations {
+            println!("VIOLATION: {v}");
+        }
+        bail!("{} invariant violations", violations.len());
+    }
+    if args.switch("critical") {
+        use crate::cost::CostModel;
+        let params = CostParams::paper_36x1();
+        let model = CostModel::new(params, rpn);
+        let cp = crate::trace::critical_path(&trace, &model, m * 8);
+        println!(
+            "\ncritical path (α-β-γ, {} bytes): completes at {:.2} µs on rank {}",
+            m * 8,
+            cp.completion_us + params.overhead,
+            cp.final_rank
+        );
+        println!(
+            "{} comm rounds ({} inter-node) + {} ⊕ on the chain:",
+            cp.comm_rounds(),
+            cp.inter_rounds(),
+            cp.reduce_hops()
+        );
+        for h in &cp.hops {
+            let what = match (h.from, h.link) {
+                (Some(f), Some(l)) => format!("round {:>2}: rank {:>4} ← {:>4} ({l:?})", h.round, h.rank, f),
+                _ => format!("round {:>2}: rank {:>4} ⊕", h.round, h.rank),
+            };
+            println!("  {what:<44} +{:>7.3} µs  @ {:>8.3} µs{}", h.cost_us, h.at_us, if h.waited { "  (waited)" } else { "" });
+        }
+    }
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let ps = args.get_list("p", &[4, 16, 36, 64, 256, 1024, 1152])?;
+    let rpn: usize = args.get("ranks-per-node", 1)?;
+    let table = TuningTable::build(ps, CostParams::paper_36x1(), rpn);
+    print!("{:>8}", "p\\bytes");
+    for &b in &table.size_buckets {
+        print!(" {b:>10}");
+    }
+    println!();
+    for (pi, &p) in table.p_buckets.iter().enumerate() {
+        print!("{p:>8}");
+        for c in &table.choice[pi] {
+            let short = match *c {
+                "123-doubling" => "123",
+                "two-op-doubling" => "2op",
+                "1-doubling" => "1dbl",
+                "pipelined-chain" => "pipe",
+                other => other,
+            };
+            print!(" {short:>10}");
+        }
+        println!();
+    }
+    Ok(())
+}
+
+/// Experiment E5: run both Table-1 grids and machine-check every claim
+/// the paper's §3 makes, printing a PASS/FAIL report.
+fn cmd_verify_claims() -> Result<()> {
+    let grid = [1usize, 10, 100, 1000, 10_000, 100_000];
+    let mut failures = 0usize;
+    let mut check = |name: &str, ok: bool, detail: String| {
+        println!("{} {name}: {detail}", if ok { "PASS" } else { "FAIL" });
+        if !ok {
+            failures += 1;
+        }
+    };
+
+    let rows36 = table1_rows(PaperConfig::C36x1, &grid)?;
+    let rows1152 = table1_rows(PaperConfig::C36x32, &grid)?;
+
+    // 1. "1-doubling … sometimes on par with 123, but never better."
+    let never_better = rows36
+        .iter()
+        .chain(&rows1152)
+        .all(|r| r.otd123 <= r.one_doubling + 1e-9);
+    check("123 never loses to 1-doubling (both configs, all m)", never_better, String::new());
+
+    // 2. ~25% improvement over native at m = 10^4, 36x1.
+    let mid = rows36.iter().find(|r| r.m == 10_000).unwrap();
+    let imp = (mid.native - mid.otd123) / mid.native * 100.0;
+    check(
+        "native→123 improvement at m=10⁴ (paper: 25%)",
+        imp > 20.0,
+        format!("{imp:.1}%"),
+    );
+
+    // 3. two-⊕'s extra applications hurt at large m (both configs).
+    let big36 = rows36.iter().find(|r| r.m == 100_000).unwrap();
+    let big1152 = rows1152.iter().find(|r| r.m == 100_000).unwrap();
+    check(
+        "two-⊕ penalty at m=10⁵",
+        big36.two_op > big36.otd123 && big1152.two_op > big1152.otd123,
+        format!(
+            "36x1: {:.0} vs {:.0}; 36x32: {:.0} vs {:.0}",
+            big36.two_op, big36.otd123, big1152.two_op, big1152.otd123
+        ),
+    );
+
+    // 4. "For very small m, [two-⊕] is sometimes the best."
+    let small1152 = rows1152.iter().find(|r| r.m == 1).unwrap();
+    let two_op_best = small1152.two_op <= small1152.otd123
+        && small1152.two_op <= small1152.one_doubling
+        && small1152.two_op <= small1152.native;
+    check(
+        "two-⊕ best at m=1 on 36x32 (as in the paper)",
+        two_op_best,
+        format!("{:.2} µs", small1152.two_op),
+    );
+
+    // 5. "MPI_Exscan … can be significantly improved" — 123 beats native
+    //    at every m >= 1000 in both configurations.
+    let improved = rows36
+        .iter()
+        .chain(&rows1152)
+        .filter(|r| r.m >= 1000)
+        .all(|r| r.otd123 < r.native);
+    check("123 beats native at every m ≥ 1000 (both configs)", improved, String::new());
+
+    // 6. Theorem 1 round counts at the paper's sizes.
+    use crate::coll::Exscan123;
+    let a: &dyn ScanAlgorithm<i64> = &Exscan123;
+    check(
+        "Theorem 1 round counts (p=36: 6, p=1152: 11)",
+        a.predicted_rounds(36) == 6 && a.predicted_rounds(1152) == 11,
+        format!("{} / {}", a.predicted_rounds(36), a.predicted_rounds(1152)),
+    );
+
+    println!();
+    if failures == 0 {
+        println!("all §3 claims reproduced");
+        Ok(())
+    } else {
+        bail!("{failures} claim(s) failed")
+    }
+}
+
+fn cmd_kernel_smoke(args: &Args) -> Result<()> {
+    use crate::runtime::{pjrt_bxor_i64, PjrtRuntime};
+    let artifacts: String = args.get("artifacts", "artifacts".to_string())?;
+    let handle = PjrtRuntime::start(artifacts)?;
+    // Direct kernel check.
+    let mut inout = vec![0b1100i64, 7, -1, 0];
+    handle.reduce_i64("bxor_i64", &[0b1010, 1, 2, 3], &mut inout)?;
+    anyhow::ensure!(inout == vec![0b0110, 6, -3, 3], "kernel numerics: {inout:?}");
+    println!("reduce_local kernel: OK ({inout:?})");
+    // Full collective with the compiled kernel as ⊕.
+    let p = 12;
+    let m = 100;
+    let op = pjrt_bxor_i64(handle.clone());
+    let world = WorldConfig::new(Topology::flat(p));
+    let inputs = crate::bench::inputs_i64(p, m, 2);
+    let res = run_scan(&world, &crate::coll::Exscan123, &op, &inputs)?;
+    crate::coll::validate::assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+    let stats = handle.stats()?;
+    println!(
+        "123-doubling with PJRT ⊕ over p={p}, m={m}: verified; {} kernel launches, {} compiles",
+        stats.launches, stats.compiles
+    );
+    Ok(())
+}

@@ -1,0 +1,361 @@
+//! Supporting collectives (binomial broadcast/reduce, recursive-doubling
+//! allreduce, chain gather/scatter to a root) — the substrate an MPI-like
+//! library needs around the scan family, used by the hierarchical exscan
+//! and available standalone. All are round-tagged and one-ported like the
+//! scan algorithms, so the same trace machinery verifies them.
+//!
+//! Round-tag discipline: every collective takes a `base` round offset and
+//! returns the first free round index, so collectives can be sequenced in
+//! one algorithm without tag collisions.
+
+use anyhow::Result;
+
+use crate::mpi::{Elem, OpRef, RankCtx};
+use crate::util::ceil_log2;
+
+/// Binomial-tree broadcast from `root`. Returns the next free round.
+pub fn bcast<T: Elem>(
+    ctx: &mut RankCtx<T>,
+    base: u32,
+    root: usize,
+    buf: &mut [T],
+) -> Result<u32> {
+    let p = ctx.size();
+    if p <= 1 {
+        return Ok(base);
+    }
+    let rounds = ceil_log2(p);
+    // Work in root-relative rank space: vr = (rank - root) mod p.
+    let vr = (ctx.rank() + p - root) % p;
+    // Round k: every rank vr < 2^k that already holds the data sends to
+    // vr + 2^k (doubling the informed set each round).
+    for k in 0..rounds {
+        let span = 1usize << k;
+        if vr < span {
+            let dst = vr + span;
+            if dst < p {
+                ctx.send(base + k, (dst + root) % p, buf)?;
+            }
+        } else if vr < span * 2 {
+            let src = vr - span;
+            ctx.recv(base + k, (src + root) % p, buf)?;
+        }
+    }
+    Ok(base + rounds)
+}
+
+/// Binomial-tree reduction to `root`: `result = V_0 ⊕ V_1 ⊕ … ⊕ V_{p-1}`
+/// in rank order (safe for non-commutative ⊕). Root-relative only for
+/// `root == 0` reductions of ordered data; general roots reduce in
+/// *rank* order and then move the result, costing one extra round.
+pub fn reduce<T: Elem>(
+    ctx: &mut RankCtx<T>,
+    base: u32,
+    root: usize,
+    op: &OpRef<T>,
+    input: &[T],
+    output: &mut [T],
+) -> Result<u32> {
+    let p = ctx.size();
+    let r = ctx.rank();
+    let m = input.len();
+    let mut acc = input.to_vec();
+    let mut tmp = vec![T::filler(); m];
+    let rounds = ceil_log2(p.max(2));
+    if p > 1 {
+        // Binomial combine toward rank 0, preserving rank order: at level
+        // k, rank r (r % 2^{k+1} == 0) folds in r + 2^k (later block).
+        for k in 0..rounds {
+            let span = 1usize << k;
+            if r % (span * 2) == 0 {
+                let src = r + span;
+                if src < p {
+                    ctx.recv(base + k, src, &mut tmp)?;
+                    // acc is the earlier block: tmp = acc ⊕ tmp, keep in acc.
+                    ctx.reduce_local(base + k, op, &acc, &mut tmp);
+                    std::mem::swap(&mut acc, &mut tmp);
+                }
+            } else if r % (span * 2) == span {
+                ctx.send(base + k, r - span, &acc)?;
+                break; // this rank is done after sending
+            }
+        }
+    }
+    let mut next = base + if p > 1 { rounds } else { 0 };
+    if root == 0 {
+        if r == 0 {
+            output.copy_from_slice(&acc);
+        }
+    } else {
+        // Move the result from rank 0 to the requested root.
+        if r == 0 {
+            ctx.send(next, root, &acc)?;
+        } else if r == root {
+            ctx.recv(next, 0, output)?;
+        }
+        next += 1;
+    }
+    Ok(next)
+}
+
+/// Recursive-doubling allreduce (rank order preserved for non-commutative
+/// ⊕ via the mpich swap trick). Requires no identity element.
+pub fn allreduce<T: Elem>(
+    ctx: &mut RankCtx<T>,
+    base: u32,
+    op: &OpRef<T>,
+    input: &[T],
+    output: &mut [T],
+) -> Result<u32> {
+    let p = ctx.size();
+    let r = ctx.rank();
+    let m = input.len();
+    output.copy_from_slice(input);
+    if p <= 1 {
+        return Ok(base);
+    }
+    // Non-power-of-two handling, mpich-style and rank-order safe: pair up
+    // the first 2·tail ranks (odd sends into even), so the surviving
+    // "body" ranks hold *contiguous* rank blocks and recursive doubling
+    // remains correct for non-commutative ⊕.
+    let body = 1usize << crate::util::floor_log2(p);
+    let tail = p - body;
+    let mut tmp = vec![T::filler(); m];
+    let mut k = base;
+    // Body index nr for participating ranks; None while waiting.
+    let nr: Option<usize> = if tail == 0 {
+        Some(r)
+    } else if r < 2 * tail {
+        if r % 2 == 1 {
+            ctx.send(k, r - 1, output)?;
+            None
+        } else {
+            ctx.recv(k, r + 1, &mut tmp)?;
+            // Own block (r) is earlier than r+1's.
+            ctx.reduce_local(k, op, &output.to_vec(), &mut tmp);
+            output.copy_from_slice(&tmp);
+            Some(r / 2)
+        }
+    } else {
+        Some(r - tail)
+    };
+    if tail > 0 {
+        k += 1;
+    }
+    // Recursive doubling over the body; blocks stay contiguous in nr
+    // order (nr < partner ⇔ our block is earlier).
+    let rd_rounds = crate::util::ceil_log2(body.max(2));
+    if let Some(nr) = nr {
+        let orig = |x: usize| if x < tail { 2 * x } else { x + tail };
+        let mut mask = 1usize;
+        let mut kk = k;
+        while mask < body {
+            let dst_nr = nr ^ mask;
+            let dst = orig(dst_nr);
+            ctx.sendrecv(kk, dst, &output[..], dst, &mut tmp)?;
+            if nr > dst_nr {
+                // Partner block earlier: output = tmp ⊕ output.
+                ctx.reduce_local(kk, op, &tmp, output);
+            } else {
+                // Own block earlier: output = output ⊕ tmp.
+                ctx.reduce_local(kk, op, &output.to_vec(), &mut tmp);
+                output.copy_from_slice(&tmp);
+            }
+            mask <<= 1;
+            kk += 1;
+        }
+    }
+    k += if body >= 2 { rd_rounds } else { 0 };
+    // Paired-out ranks get the final value back.
+    if tail > 0 {
+        if r < 2 * tail {
+            if r % 2 == 0 {
+                ctx.send(k, r + 1, output)?;
+            } else {
+                ctx.recv(k, r - 1, output)?;
+            }
+        }
+        k += 1;
+    }
+    Ok(k)
+}
+
+/// Gather m-element vectors from `group` members to `group[0]` over a
+/// chain (one receive per round at the root — one-ported). `rows` must
+/// hold `group.len() * m` at the root; others may pass an empty slice.
+pub fn gather_chain<T: Elem>(
+    ctx: &mut RankCtx<T>,
+    base: u32,
+    group: &[usize],
+    input: &[T],
+    rows: &mut [T],
+) -> Result<u32> {
+    let r = ctx.rank();
+    let m = input.len();
+    let root = group[0];
+    if r == root {
+        rows[..m].copy_from_slice(input);
+        for (j, &src) in group.iter().enumerate().skip(1) {
+            ctx.recv(base + j as u32 - 1, src, &mut rows[j * m..(j + 1) * m])?;
+        }
+    } else if let Some(j) = group.iter().position(|&g| g == r) {
+        ctx.send(base + j as u32 - 1, root, input)?;
+    }
+    Ok(base + group.len() as u32 - 1)
+}
+
+/// Scatter per-member m-element rows from `group[0]` over a chain.
+pub fn scatter_chain<T: Elem>(
+    ctx: &mut RankCtx<T>,
+    base: u32,
+    group: &[usize],
+    rows: &[T],
+    output: &mut [T],
+) -> Result<u32> {
+    let r = ctx.rank();
+    let m = output.len();
+    let root = group[0];
+    if r == root {
+        output.copy_from_slice(&rows[..m]);
+        for (j, &dst) in group.iter().enumerate().skip(1) {
+            ctx.send(base + j as u32 - 1, dst, &rows[j * m..(j + 1) * m])?;
+        }
+    } else if let Some(j) = group.iter().position(|&g| g == r) {
+        ctx.recv(base + j as u32 - 1, root, output)?;
+    }
+    Ok(base + group.len() as u32 - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::{ops, run_world, Topology, WorldConfig};
+
+    #[test]
+    fn bcast_all_roots() {
+        for p in [2usize, 3, 5, 8, 13] {
+            for root in [0, p / 2, p - 1] {
+                let cfg = WorldConfig::new(Topology::flat(p));
+                let out = run_world::<i64, Vec<i64>, _>(&cfg, |ctx| {
+                    let mut buf = if ctx.rank() == root { vec![42, -7] } else { vec![0, 0] };
+                    bcast(ctx, 0, root, &mut buf)?;
+                    Ok(buf)
+                })
+                .unwrap();
+                for (r, v) in out.iter().enumerate() {
+                    assert_eq!(v, &vec![42, -7], "p={p} root={root} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_rank_order() {
+        use crate::mpi::Rec2;
+        for p in [2usize, 3, 6, 9] {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Rec2> = (0..p)
+                .map(|r| Rec2::new([1.0, 0.1 * r as f32, 0.0, 1.0], [r as f32, 1.0]))
+                .collect();
+            let expect = inputs[1..].iter().fold(inputs[0], |a, e| a.then(e));
+            let ins = inputs.clone();
+            let out = run_world::<Rec2, Vec<Rec2>, _>(&cfg, move |ctx| {
+                let mut out = vec![Rec2::identity()];
+                reduce(ctx, 0, 0, &ops::rec2_compose(), &[ins[ctx.rank()]], &mut out)?;
+                Ok(out)
+            })
+            .unwrap();
+            for i in 0..4 {
+                assert!((out[0][0].a[i] - expect.a[i]).abs() < 1e-4, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_to_nonzero_root() {
+        let p = 7;
+        let cfg = WorldConfig::new(Topology::flat(p));
+        let out = run_world::<i64, i64, _>(&cfg, |ctx| {
+            let mut out = vec![0i64];
+            reduce(ctx, 0, 3, &ops::sum_i64(), &[ctx.rank() as i64], &mut out)?;
+            Ok(out[0])
+        })
+        .unwrap();
+        assert_eq!(out[3], 21);
+    }
+
+    #[test]
+    fn allreduce_matches_total() {
+        for p in [2usize, 3, 4, 5, 7, 8, 12, 16] {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let out = run_world::<i64, Vec<i64>, _>(&cfg, |ctx| {
+                let input = vec![ctx.rank() as i64 + 1, 1 << ctx.rank()];
+                let mut output = vec![0i64; 2];
+                allreduce(ctx, 0, &ops::sum_i64(), &input, &mut output)?;
+                Ok(output)
+            })
+            .unwrap();
+            let total: i64 = (0..p as i64).map(|r| r + 1).sum();
+            let mask: i64 = (0..p).map(|r| 1i64 << r).sum();
+            for (r, v) in out.iter().enumerate() {
+                assert_eq!(v, &vec![total, mask], "p={p} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_noncommutative() {
+        use crate::mpi::Rec2;
+        for p in [3usize, 5, 8] {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Rec2> = (0..p)
+                .map(|r| Rec2::new([1.0, 0.05 * r as f32, 0.02, 1.0], [1.0, -(r as f32)]))
+                .collect();
+            let expect = inputs[1..].iter().fold(inputs[0], |a, e| a.then(e));
+            let ins = inputs.clone();
+            let out = run_world::<Rec2, Rec2, _>(&cfg, move |ctx| {
+                let mut output = vec![Rec2::identity()];
+                allreduce(ctx, 0, &ops::rec2_compose(), &[ins[ctx.rank()]], &mut output)?;
+                Ok(output[0])
+            })
+            .unwrap();
+            for v in &out {
+                for i in 0..4 {
+                    assert!((v.a[i] - expect.a[i]).abs() < 1e-3, "p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let p = 6;
+        let group: Vec<usize> = vec![2, 0, 4, 5]; // root = 2
+        let cfg = WorldConfig::new(Topology::flat(p));
+        let g2 = group.clone();
+        let out = run_world::<i64, Vec<i64>, _>(&cfg, move |ctx| {
+            let r = ctx.rank();
+            let input = vec![r as i64 * 10, r as i64 * 10 + 1];
+            let in_group = g2.contains(&r);
+            let mut rows = if r == g2[0] { vec![0i64; g2.len() * 2] } else { vec![] };
+            if in_group {
+                gather_chain(ctx, 0, &g2, &input, &mut rows)?;
+            }
+            // Root doubles everything, scatters back.
+            let mut output = vec![0i64; 2];
+            if in_group {
+                if r == g2[0] {
+                    for v in rows.iter_mut() {
+                        *v *= 2;
+                    }
+                }
+                scatter_chain(ctx, 100, &g2, &rows, &mut output)?;
+            }
+            Ok(output)
+        })
+        .unwrap();
+        for &g in &group {
+            assert_eq!(out[g], vec![g as i64 * 20, g as i64 * 20 + 2], "rank {g}");
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! **Algorithm 1: the 123-doubling exclusive scan** — the paper's new
+//! contribution (Theorem 1).
+//!
+//! Skips `s_0 = 1, s_1 = 2, s_k = 3·2^{k-2}` for `k ≥ 2`.
+//!
+//! * Round 0 shifts `V_{r-1}` into `W_r` (no ⊕), exactly as 1-doubling.
+//! * Round 1 is the trick that wins back the extra round: rank `r`
+//!   *receives from distance 2* the value `W_{r-2} ⊕ V_{r-2}`
+//!   (= `V_{r-3} ⊕ V_{r-2}`), so after folding it covers **three**
+//!   trailing inputs — the exclusive invariant directly jumps to skip
+//!   `s_2 = 3` instead of 2.
+//! * Rounds `k ≥ 2` double the 3-skip: fold `W_{r-s_k}`, sent as-is.
+//!
+//! Total: `q = ⌈log₂(p−1) + log₂(4/3)⌉` simultaneous send-receive rounds
+//! with `q−1` ⊕ applications on the completion-critical rank `p−1`
+//! (middle ranks pay one extra ⊕ in round 1 to prepare the outgoing
+//! `W ⊕ V`, the place where a ternary `MPI_Reduce_local` would help [10]).
+
+use anyhow::Result;
+
+use super::{ScanAlgorithm, ScanKind};
+use crate::mpi::{Elem, OpRef, RankCtx};
+use crate::util::bits::rounds_123;
+
+/// 123-doubling exclusive scan (Algorithm 1 of the paper).
+pub struct Exscan123;
+
+impl<T: Elem> ScanAlgorithm<T> for Exscan123 {
+    fn name(&self) -> &'static str {
+        "123-doubling"
+    }
+
+    fn kind(&self) -> ScanKind {
+        ScanKind::Exclusive
+    }
+
+    fn run(
+        &self,
+        ctx: &mut RankCtx<T>,
+        input: &[T],
+        output: &mut [T],
+        op: &OpRef<T>,
+    ) -> Result<()> {
+        let (r, p, m) = (ctx.rank(), ctx.size(), input.len());
+        if p <= 1 {
+            return Ok(());
+        }
+        // ── Round 0, s_0 = 1: shift V right; establishes W_r = V_{r-1}. ──
+        {
+            let (t, f) = (r + 1, r.checked_sub(1));
+            match (t < p, f) {
+                (true, Some(f)) => ctx.sendrecv(0, t, input, f, output)?,
+                (true, None) => ctx.send(0, t, input)?, // rank 0
+                (false, Some(f)) => ctx.recv(0, f, output)?, // rank p-1
+                (false, None) => unreachable!("p > 1"),
+            }
+        }
+        if p == 2 {
+            return Ok(()); // rank 1 already holds V_0
+        }
+
+        // ── Round 1, s_1 = 2: send the *inclusive* partial W ⊕ V from
+        // distance 2 so the receiver's coverage jumps from 1 to 3 trailing
+        // inputs (the invariant lands directly on s_2 = 3). Rank 0 sends
+        // its bare input V_0 (it has no W) and is then done. ──
+        {
+            let (t, f) = (r + 2, r.checked_sub(2));
+            match (t < p, f, r) {
+                (true, Some(f), _) => {
+                    // W' = W ⊕ V: W (covering V_{r-1}) is the earlier operand.
+                    let mut w_prime = input.to_vec();
+                    ctx.reduce_local(1, op, output, &mut w_prime);
+                    let t_buf = ctx.sendrecv_owned(1, t, &w_prime, f, m)?;
+                    ctx.reduce_local(1, op, &t_buf, output); // W = T ⊕ W
+                }
+                (true, None, 0) => {
+                    ctx.send(1, t, input)?;
+                    return Ok(()); // processor r = 0 done
+                }
+                (true, None, _) => {
+                    // Rank 1: sends W' = W ⊕ V = V_0 ⊕ V_1, keeps W = V_0.
+                    let mut w_prime = input.to_vec();
+                    ctx.reduce_local(1, op, output, &mut w_prime);
+                    ctx.send(1, t, &w_prime)?;
+                }
+                (false, Some(f), _) => {
+                    let t_buf = ctx.recv_owned(1, f, m)?;
+                    ctx.reduce_local(1, op, &t_buf, output);
+                }
+                (false, None, 0) => return Ok(()), // p == 3, rank 0: no one to feed
+                (false, None, _) => {} // p == 3, rank 1: complete after round 0
+            }
+        }
+
+        // ── Rounds k >= 2, s_k = 3·2^{k-2}: plain exclusive doubling. The
+        // value sent is the value kept, so one ⊕ per received partial.
+        // Receives come from ranks f >= 1 only (rank 0 has left). ──
+        let mut k = 2u32;
+        let mut s = 3usize;
+        loop {
+            let t = r + s;
+            let f = if r > s { Some(r - s) } else { None }; // strictly 0 < f
+            match (t < p, f) {
+                (true, Some(f)) => {
+                    let t_buf = ctx.sendrecv_owned(k, t, &output[..], f, m)?;
+                    ctx.reduce_local(k, op, &t_buf, output);
+                }
+                (true, None) => ctx.send(k, t, output)?,
+                (false, Some(f)) => {
+                    let t_buf = ctx.recv_owned(k, f, m)?;
+                    ctx.reduce_local(k, op, &t_buf, output);
+                }
+                (false, None) => break, // neither port active: done
+            }
+            k += 1;
+            s *= 2;
+        }
+        Ok(())
+    }
+
+    fn predicted_rounds(&self, p: usize) -> u32 {
+        rounds_123(p)
+    }
+
+    /// Theorem 1: `q − 1` ⊕ applications on the completion-critical rank.
+    fn predicted_ops(&self, p: usize) -> u32 {
+        rounds_123(p).saturating_sub(1)
+    }
+
+    fn critical_skips(&self, p: usize) -> Vec<usize> {
+        // Receive distances of rank p-1: 1, 2, 3, 6, 12, … until coverage.
+        let q = rounds_123(p);
+        (0..q)
+            .map(|k| match k {
+                0 => 1,
+                1 => 2,
+                _ => 3 * (1usize << (k - 2)),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::validate::assert_exscan_matches;
+    use crate::mpi::{ops, run_scan, Topology, WorldConfig};
+
+    #[test]
+    fn matches_oracle_exhaustive_small_p() {
+        for p in 2usize..=40 {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<i64>> = (0..p)
+                .map(|r| vec![(r as i64).wrapping_mul(0x517C_C1B7) ^ 0xF0F0, 1 << (r % 60)])
+                .collect();
+            let res = run_scan(&cfg, &Exscan123, &ops::bxor(), &inputs).unwrap();
+            assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+        }
+    }
+
+    #[test]
+    fn theorem1_rounds_and_ops() {
+        for p in 2usize..=70 {
+            let cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+            let inputs: Vec<Vec<i64>> = (0..p).map(|r| vec![r as i64]).collect();
+            let res = run_scan(&cfg, &Exscan123, &ops::bxor(), &inputs).unwrap();
+            let trace = res.trace.unwrap();
+            let algo: &dyn ScanAlgorithm<i64> = &Exscan123;
+            let q = algo.predicted_rounds(p);
+            assert_eq!(trace.total_rounds(), q, "rounds p={p}");
+            assert_eq!(trace.last_rank_ops(), algo.predicted_ops(p), "last-rank ops p={p}");
+            // Middle ranks may pay one extra ⊕ (round-1 send preparation).
+            assert!(trace.max_ops() <= q, "max ops bound p={p}");
+            assert!(crate::trace::check_all(&trace).is_empty(), "invariants p={p}");
+        }
+    }
+
+    #[test]
+    fn paper_counts() {
+        let algo: &dyn ScanAlgorithm<i64> = &Exscan123;
+        // p=36: q = ceil(log2 35 + log2 4/3) = 6 rounds, 5 ⊕.
+        assert_eq!(algo.predicted_rounds(36), 6);
+        assert_eq!(algo.predicted_ops(36), 5);
+        // p=1152: q = 11 rounds — one fewer than 1-doubling's 12.
+        assert_eq!(algo.predicted_rounds(1152), 11);
+    }
+
+    #[test]
+    fn noncommutative_order() {
+        use crate::coll::validate::oracle_exscan;
+        use crate::mpi::Rec2;
+        for p in [3usize, 5, 9, 14, 27] {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<Rec2>> = (0..p)
+                .map(|r| {
+                    vec![Rec2::new(
+                        [1.0, 0.02 * r as f32, -0.01 * r as f32, 1.0],
+                        [r as f32 * 0.5, 1.0 - r as f32 * 0.25],
+                    )]
+                })
+                .collect();
+            let res = run_scan(&cfg, &Exscan123, &ops::rec2_compose(), &inputs).unwrap();
+            let oracle = oracle_exscan(&inputs, &ops::rec2_compose());
+            for r in 1..p {
+                let e = oracle[r].as_ref().unwrap();
+                for i in 0..4 {
+                    assert!(
+                        (res.outputs[r][0].a[i] - e[0].a[i]).abs() < 1e-3,
+                        "p={p} r={r} a[{i}]"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_element_vectors() {
+        let p = 19;
+        for m in [0usize, 1, 2, 17, 256] {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<i64>> = (0..p)
+                .map(|r| (0..m).map(|i| (r * 31 + i * 7) as i64).collect())
+                .collect();
+            let res = run_scan(&cfg, &Exscan123, &ops::sum_i64(), &inputs).unwrap();
+            assert_exscan_matches(&inputs, &ops::sum_i64(), &res.outputs);
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Binomial-tree up/down-sweep exclusive scan (Blelloch-style), as an
+//! ablation point: `2⌈log₂p⌉` rounds but only one active transfer
+//! direction per phase and no identity element required.
+//!
+//! * **Up-sweep** (reduce toward rank 0): at level k, rank `r` with
+//!   `r % 2^{k+1} == 0` folds in the segment sum of `r + 2^k`
+//!   (`acc_r = acc_r ⊕ acc_{r+2^k}`, own block earlier). Segments clip at
+//!   `p`, so any world size works.
+//! * **Down-sweep**: rank `r` holds the exclusive prefix of its segment
+//!   start and sends to each child `r + 2^k` that child's prefix
+//!   `prefix_r ⊕ saved_k` where `saved_k` is the pre-fold left-half sum
+//!   remembered on the way up. Rank 0's prefix is the empty product, so it
+//!   forwards `saved_k` bare — no operator identity is ever needed.
+
+use anyhow::Result;
+
+use super::{ScanAlgorithm, ScanKind};
+use crate::mpi::{Elem, OpRef, RankCtx};
+use crate::util::ceil_log2;
+
+/// Binomial up/down-sweep exclusive scan.
+pub struct ExscanBlelloch;
+
+impl<T: Elem> ScanAlgorithm<T> for ExscanBlelloch {
+    fn name(&self) -> &'static str {
+        "blelloch"
+    }
+
+    fn kind(&self) -> ScanKind {
+        ScanKind::Exclusive
+    }
+
+    fn run(
+        &self,
+        ctx: &mut RankCtx<T>,
+        input: &[T],
+        output: &mut [T],
+        op: &OpRef<T>,
+    ) -> Result<()> {
+        let (r, p, m) = (ctx.rank(), ctx.size(), input.len());
+        if p <= 1 {
+            return Ok(());
+        }
+        let levels = ceil_log2(p); // K
+        let mut acc = input.to_vec();
+        // saved[k] = acc before folding the level-k right child (i.e. the
+        // sum of the left half of the level-(k+1) segment).
+        let mut saved: Vec<Option<Vec<T>>> = vec![None; levels as usize];
+        let mut tmp = vec![T::filler(); m];
+
+        // ── Up-sweep: rounds 0..levels. ──
+        for k in 0..levels {
+            let span = 1usize << k;
+            if r % (span * 2) == 0 {
+                let child = r + span;
+                if child < p {
+                    saved[k as usize] = Some(acc.clone());
+                    ctx.recv(k, child, &mut tmp)?;
+                    // Own (left) block is earlier: acc = acc ⊕ tmp.
+                    std::mem::swap(&mut acc, &mut tmp);
+                    ctx.reduce_local(k, op, &tmp, &mut acc);
+                }
+            } else if r % (span * 2) == span {
+                let parent = r - span;
+                ctx.send(k, parent, &acc)?;
+                // This rank is passive until the down-sweep.
+            }
+        }
+
+        // ── Down-sweep: rounds levels..2*levels. `have_prefix` is false
+        // only on the rank-0 spine (empty exclusive prefix). ──
+        let mut prefix: Vec<T> = vec![T::filler(); m];
+        let mut have_prefix = false;
+        if r != 0 {
+            // Wait for the parent's prefix: the parent is the rank that
+            // received from us on the up-sweep, at the highest level where
+            // we were a right child.
+            let k = (0..levels).find(|&k| {
+                let span = 1usize << k;
+                r % (span * 2) == span
+            });
+            // Every nonzero rank is a right child at exactly the level of
+            // its lowest set bit.
+            let k = k.expect("nonzero rank has a lowest set bit");
+            let parent = r - (1usize << k);
+            // Down-sweep round for level k is (2*levels - 1 - k).
+            let round = 2 * levels - 1 - k;
+            ctx.recv(round, parent, &mut prefix)?;
+            have_prefix = true;
+        }
+        // Forward prefixes to children, highest level first.
+        for k in (0..levels).rev() {
+            let span = 1usize << k;
+            if r % (span * 2) == 0 {
+                let child = r + span;
+                if child < p {
+                    let left_sum = saved[k as usize]
+                        .take()
+                        .expect("saved left-half sum for every folded child");
+                    let round = 2 * levels - 1 - k;
+                    if have_prefix {
+                        // child prefix = prefix ⊕ left_sum (prefix earlier).
+                        let mut child_prefix = left_sum;
+                        ctx.reduce_local(round, op, &prefix, &mut child_prefix);
+                        ctx.send(round, child, &child_prefix)?;
+                    } else {
+                        // Rank-0 spine: empty prefix ⊕ left_sum = left_sum.
+                        ctx.send(round, child, &left_sum)?;
+                    }
+                }
+            }
+        }
+        if have_prefix {
+            output.copy_from_slice(&prefix);
+        }
+        Ok(())
+    }
+
+    fn predicted_rounds(&self, p: usize) -> u32 {
+        if p <= 1 {
+            0
+        } else {
+            2 * ceil_log2(p)
+        }
+    }
+
+    /// Critical-rank ⊕ count: the deepest leaf folds nothing on the
+    /// up-sweep and receives a ready prefix, but interior spine ranks pay
+    /// up to `⌈log₂p⌉` up-sweep folds and `⌈log₂p⌉ − 1` down-sweep
+    /// combines; we report the worst-rank bound.
+    fn predicted_ops(&self, p: usize) -> u32 {
+        if p <= 1 {
+            0
+        } else {
+            2 * ceil_log2(p) - 1
+        }
+    }
+
+    fn critical_skips(&self, p: usize) -> Vec<usize> {
+        // Rank p-1's transfers: up-sweep send at its lowest-set-bit level,
+        // down-sweep receive from the same parent.
+        if p <= 1 {
+            return vec![];
+        }
+        let r = p - 1;
+        let k = r.trailing_zeros();
+        vec![1usize << k, 1usize << k]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::validate::assert_exscan_matches;
+    use crate::mpi::{ops, run_scan, Topology, WorldConfig};
+
+    #[test]
+    fn matches_oracle_many_p() {
+        for p in 2usize..=40 {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<i64>> =
+                (0..p).map(|r| vec![(r as i64) * 13 + 5, -(r as i64)]).collect();
+            let res = run_scan(&cfg, &ExscanBlelloch, &ops::sum_i64(), &inputs).unwrap();
+            assert_exscan_matches(&inputs, &ops::sum_i64(), &res.outputs);
+        }
+    }
+
+    #[test]
+    fn noncommutative() {
+        use crate::coll::validate::oracle_exscan;
+        use crate::mpi::Rec2;
+        for p in [2usize, 5, 8, 11, 16, 21] {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<Rec2>> = (0..p)
+                .map(|r| vec![Rec2::new([1.0, 0.03 * r as f32, 0.01, 1.0], [0.5, r as f32])])
+                .collect();
+            let res = run_scan(&cfg, &ExscanBlelloch, &ops::rec2_compose(), &inputs).unwrap();
+            let oracle = oracle_exscan(&inputs, &ops::rec2_compose());
+            for r in 1..p {
+                let e = oracle[r].as_ref().unwrap();
+                for i in 0..2 {
+                    assert!((res.outputs[r][0].b[i] - e[0].b[i]).abs() < 1e-3, "p={p} r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn round_bound() {
+        for p in [2usize, 3, 8, 9, 36] {
+            let cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+            let inputs: Vec<Vec<i64>> = (0..p).map(|r| vec![r as i64]).collect();
+            let res = run_scan(&cfg, &ExscanBlelloch, &ops::bxor(), &inputs).unwrap();
+            let trace = res.trace.unwrap();
+            let algo: &dyn ScanAlgorithm<i64> = &ExscanBlelloch;
+            assert!(trace.total_rounds() <= algo.predicted_rounds(p), "p={p}");
+            assert!(crate::trace::check_all(&trace).is_empty(), "p={p}");
+        }
+    }
+}

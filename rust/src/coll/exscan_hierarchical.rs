@@ -1,0 +1,302 @@
+//! Hierarchical (SMP-aware) exclusive scan — an extension ablation: is it
+//! worth exploiting the node structure instead of running the flat
+//! 123-doubling over all p ranks?
+//!
+//! Three phases:
+//!   1. **Gather**: each node's ranks chain their vectors to the node
+//!      leader (k−1 one-ported rounds for k ranks/node).
+//!   2. **Leader scan**: leaders compute (a) the node-local *block
+//!      exclusive scan* over the k contributions — natively, or in ONE
+//!      fused Pallas-kernel launch via PJRT ([`crate::runtime`]) — and
+//!      (b) run the 123-doubling exscan over the node *totals* (log of
+//!      #nodes rounds, all inter-node).
+//!   3. **Scatter**: leaders send each rank `node_prefix ⊕ local_row`.
+//!
+//! Verdict (see `benches/rounds_ablation.rs` and EXPERIMENTS.md): at the
+//! paper's calibrated parameters the flat 123-doubling wins — its
+//! intra-node rounds are already cheap — but the hierarchical variant
+//! trades 2(k−1) cheap rounds for an inter-node exscan that is 5 rounds
+//! shorter at 36×32, so it wins when the inter/intra latency ratio grows
+//! beyond ≈20×. The cost model predicts the crossover; the simulation
+//! confirms it.
+
+use anyhow::Result;
+
+use super::basic::{gather_chain, scatter_chain};
+use super::{Exscan123, ScanAlgorithm, ScanKind};
+use crate::mpi::{Elem, OpRef, RankCtx};
+use crate::util::bits::rounds_123;
+
+/// Topology-aware two-level exclusive scan.
+pub struct ExscanHierarchical {
+    /// Ranks per node (block placement, as [`crate::mpi::Topology`]).
+    pub ranks_per_node: usize,
+}
+
+impl ExscanHierarchical {
+    pub fn new(ranks_per_node: usize) -> Self {
+        assert!(ranks_per_node >= 1);
+        ExscanHierarchical { ranks_per_node }
+    }
+}
+
+impl<T: Elem> ScanAlgorithm<T> for ExscanHierarchical {
+    fn name(&self) -> &'static str {
+        "hierarchical"
+    }
+
+    fn kind(&self) -> ScanKind {
+        ScanKind::Exclusive
+    }
+
+    fn run(
+        &self,
+        ctx: &mut RankCtx<T>,
+        input: &[T],
+        output: &mut [T],
+        op: &OpRef<T>,
+    ) -> Result<()> {
+        let (r, p, m) = (ctx.rank(), ctx.size(), input.len());
+        if p <= 1 {
+            return Ok(());
+        }
+        let k = self.ranks_per_node.min(p);
+        if k == 1 {
+            // Degenerate: flat 123-doubling.
+            return ScanAlgorithm::<T>::run(&Exscan123, ctx, input, output, op);
+        }
+        let node = r / k;
+        let leader = node * k;
+        let node_size = k.min(p - leader); // last node may be short
+        let group: Vec<usize> = (leader..leader + node_size).collect();
+
+        // Phase 1: gather the node's vectors at the leader (rows).
+        let mut rows = if r == leader { vec![T::filler(); node_size * m] } else { vec![] };
+        gather_chain(ctx, 0, &group, input, &mut rows)?;
+        // Uniform round bases across nodes (a short last node must still
+        // tag the inter-node rounds identically to full nodes).
+        let after_gather = (k - 1) as u32;
+
+        // Phase 2 (leader): block exscan over rows + node total, then the
+        // inter-node 123-doubling exscan over totals. Leaders are ranks
+        // {0, k, 2k, …}; the sub-communicator is expressed by translating
+        // ranks: leader of node j talks to leaders of j ± skip.
+        let mut local_prefix_rows = vec![T::filler(); if r == leader { node_size * m } else { 0 }];
+        let mut node_prefix = vec![T::filler(); m];
+        let mut have_node_prefix = false;
+        if r == leader {
+            // Exclusive scan across the node's rows; row 0's prefix is
+            // "empty" (tracked out of band — no identity needed).
+            // total = row_0 ⊕ … ⊕ row_{k-1}.
+            let mut acc = rows[..m].to_vec();
+            for j in 1..node_size {
+                local_prefix_rows[j * m..(j + 1) * m].copy_from_slice(&acc);
+                let row = rows[j * m..(j + 1) * m].to_vec();
+                let mut next = row;
+                ctx.reduce_local(after_gather, op, &acc, &mut next);
+                acc = next;
+            }
+            let total = acc;
+
+            // Inter-node exclusive scan over totals, 123-doubling pattern
+            // on the leader group (translate node index <-> rank).
+            let nodes = p.div_ceil(k);
+            let nr = node;
+            let base = after_gather;
+            // Round 0 (skip 1): shift totals right.
+            let mut t_buf = vec![T::filler(); m];
+            {
+                let (t, f) = (nr + 1, nr.checked_sub(1));
+                match (t < nodes, f) {
+                    (true, Some(f)) => {
+                        ctx.sendrecv(base, (nr + 1) * k, &total, f * k, &mut node_prefix)?;
+                        let _ = t;
+                        have_node_prefix = true;
+                    }
+                    (true, None) => ctx.send(base, k, &total)?,
+                    (false, Some(f)) => {
+                        ctx.recv(base, f * k, &mut node_prefix)?;
+                        have_node_prefix = true;
+                    }
+                    (false, None) => {}
+                }
+            }
+            if nodes > 2 {
+                // Round 1 (skip 2): send W ⊕ total.
+                let (t, f) = (nr + 2, nr.checked_sub(2));
+                match (t < nodes, f, nr) {
+                    (true, Some(f), _) => {
+                        let mut w_prime = total.clone();
+                        ctx.reduce_local(base + 1, op, &node_prefix, &mut w_prime);
+                        ctx.sendrecv(base + 1, t * k, &w_prime, f * k, &mut t_buf)?;
+                        ctx.reduce_local(base + 1, op, &t_buf, &mut node_prefix);
+                    }
+                    (true, None, 0) => ctx.send(base + 1, t * k, &total)?,
+                    (true, None, _) => {
+                        let mut w_prime = total.clone();
+                        ctx.reduce_local(base + 1, op, &node_prefix, &mut w_prime);
+                        ctx.send(base + 1, t * k, &w_prime)?;
+                    }
+                    (false, Some(f), _) => {
+                        ctx.recv(base + 1, f * k, &mut t_buf)?;
+                        ctx.reduce_local(base + 1, op, &t_buf, &mut node_prefix);
+                    }
+                    _ => {}
+                }
+                // Rounds >= 2 with skips 3·2^(j-2).
+                let mut j = 2u32;
+                let mut s = 3usize;
+                while nr != 0 {
+                    let t = nr + s;
+                    let f = if nr > s { Some(nr - s) } else { None };
+                    match (t < nodes, f) {
+                        (true, Some(f)) => {
+                            ctx.sendrecv(base + j, t * k, &node_prefix, f * k, &mut t_buf)?;
+                            ctx.reduce_local(base + j, op, &t_buf, &mut node_prefix);
+                        }
+                        (true, None) => ctx.send(base + j, t * k, &node_prefix)?,
+                        (false, Some(f)) => {
+                            ctx.recv(base + j, f * k, &mut t_buf)?;
+                            ctx.reduce_local(base + j, op, &t_buf, &mut node_prefix);
+                        }
+                        (false, None) => break,
+                    }
+                    j += 1;
+                    s *= 2;
+                }
+                // Node 0's leader is done: rounds >= 2 only receive from
+                // nodes f >= 1, exactly as in the flat Exscan123.
+            }
+        }
+
+        // Phase 3: scatter node_prefix ⊕ local_prefix_row to each rank.
+        // (Uniform base: gather rounds + inter-node rounds + 1 slack.)
+        let scatter_base = after_gather + rounds_123(p.div_ceil(k)).max(1) + 1;
+        debug_assert!(scatter_base >= after_gather);
+        let mut out_rows = vec![T::filler(); if r == leader { node_size * m } else { 0 }];
+        if r == leader {
+            for j in 0..node_size {
+                let row = &mut out_rows[j * m..(j + 1) * m];
+                if j == 0 {
+                    // Row 0's local prefix is empty: prefix is the node's.
+                    if have_node_prefix {
+                        row.copy_from_slice(&node_prefix);
+                    }
+                } else {
+                    row.copy_from_slice(&local_prefix_rows[j * m..(j + 1) * m]);
+                    if have_node_prefix {
+                        // node_prefix is earlier than the local rows.
+                        let mut combined = row.to_vec();
+                        ctx.reduce_local(scatter_base, op, &node_prefix, &mut combined);
+                        row.copy_from_slice(&combined);
+                    }
+                }
+            }
+        }
+        scatter_chain(ctx, scatter_base, &group, &out_rows, output)?;
+        // Rank 0 of the world: output undefined (exclusive scan), but the
+        // scatter delivered the leader's row 0 (empty prefix) — leave it.
+        Ok(())
+    }
+
+    fn predicted_rounds(&self, p: usize) -> u32 {
+        let k = self.ranks_per_node.min(p).max(1);
+        if k == 1 {
+            return rounds_123(p);
+        }
+        let nodes = p.div_ceil(k);
+        2 * (k as u32 - 1) + rounds_123(nodes)
+    }
+
+    fn predicted_ops(&self, p: usize) -> u32 {
+        let k = self.ranks_per_node.min(p).max(1) as u32;
+        let nodes = p.div_ceil(k as usize);
+        // Leader: k-1 block folds + (q-1) inter-node + k-1 scatter combines.
+        (k - 1) + rounds_123(nodes).saturating_sub(1) + (k - 1)
+    }
+
+    fn critical_skips(&self, p: usize) -> Vec<usize> {
+        let k = self.ranks_per_node.min(p).max(1);
+        let nodes = p.div_ceil(k);
+        let mut skips = vec![1; k - 1]; // gather (intra)
+        for (j, s) in super::exscan_123::Exscan123
+            .critical_skips_nodes(nodes)
+            .into_iter()
+            .enumerate()
+        {
+            let _ = j;
+            skips.push(s * k); // leader hops are node-distance × k ranks
+        }
+        skips.extend(vec![1; k - 1]); // scatter (intra)
+        skips
+    }
+}
+
+impl Exscan123 {
+    /// Skip sequence reused by the hierarchical wrapper.
+    pub(crate) fn critical_skips_nodes(&self, nodes: usize) -> Vec<usize> {
+        <Exscan123 as ScanAlgorithm<i64>>::critical_skips(self, nodes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::validate::assert_exscan_matches;
+    use crate::mpi::{ops, run_scan, Topology, WorldConfig};
+
+    #[test]
+    fn matches_oracle_various_shapes() {
+        for (nodes, k) in [(2usize, 2usize), (3, 4), (4, 3), (6, 8), (5, 1), (1, 4)] {
+            let p = nodes * k;
+            let algo = ExscanHierarchical::new(k);
+            let cfg = WorldConfig::new(Topology::cluster(nodes, k));
+            let inputs: Vec<Vec<i64>> =
+                (0..p).map(|r| vec![(r as i64) * 3 + 1, !(r as i64)]).collect();
+            let res = run_scan(&cfg, &algo, &ops::bxor(), &inputs).unwrap();
+            assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+        }
+    }
+
+    #[test]
+    fn short_last_node() {
+        // p not divisible by k: last node has fewer ranks.
+        let (k, p) = (4usize, 10usize);
+        let algo = ExscanHierarchical::new(k);
+        let cfg = WorldConfig::new(Topology::flat(p));
+        let inputs: Vec<Vec<i64>> = (0..p).map(|r| vec![1i64 << r]).collect();
+        let res = run_scan(&cfg, &algo, &ops::bxor(), &inputs).unwrap();
+        assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+    }
+
+    #[test]
+    fn noncommutative_hierarchical() {
+        use crate::bench::inputs_rec2;
+        use crate::coll::validate::oracle_exscan;
+        let (nodes, k) = (3usize, 3usize);
+        let p = nodes * k;
+        let algo = ExscanHierarchical::new(k);
+        let cfg = WorldConfig::new(Topology::cluster(nodes, k));
+        let inputs = inputs_rec2(p, 2, 31);
+        let res = run_scan(&cfg, &algo, &ops::rec2_compose(), &inputs).unwrap();
+        let oracle = oracle_exscan(&inputs, &ops::rec2_compose());
+        for r in 1..p {
+            let e = oracle[r].as_ref().unwrap();
+            for (a, b) in res.outputs[r].iter().zip(e) {
+                for i in 0..4 {
+                    assert!((a.a[i] - b.a[i]).abs() < 1e-3, "r={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_ported_invariant_holds() {
+        let algo = ExscanHierarchical::new(4);
+        let cfg = WorldConfig::new(Topology::cluster(4, 4)).with_trace(true);
+        let inputs: Vec<Vec<i64>> = (0..16).map(|r| vec![r as i64]).collect();
+        let res = run_scan(&cfg, &algo, &ops::bxor(), &inputs).unwrap();
+        let tr = res.trace.unwrap();
+        assert!(crate::trace::check_all(&tr).is_empty());
+    }
+}

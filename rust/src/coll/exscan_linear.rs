@@ -1,0 +1,91 @@
+//! Linear-pipeline ("ring walk") exclusive scan: `p−1` rounds, exactly one
+//! ⊕ per interior rank. The round count is hopeless for small vectors, but
+//! the algorithm moves each byte only once per hop and is the degenerate
+//! (B = 1) case of [`super::PipelinedChain`]; kept as the sanity baseline
+//! the logarithmic algorithms are measured against.
+
+use anyhow::Result;
+
+use super::{ScanAlgorithm, ScanKind};
+use crate::mpi::{Elem, OpRef, RankCtx};
+
+/// Linear exclusive scan: rank r receives `W_r` from `r−1`, forwards
+/// `W_r ⊕ V_r` to `r+1`.
+pub struct ExscanLinear;
+
+impl<T: Elem> ScanAlgorithm<T> for ExscanLinear {
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+
+    fn kind(&self) -> ScanKind {
+        ScanKind::Exclusive
+    }
+
+    fn run(
+        &self,
+        ctx: &mut RankCtx<T>,
+        input: &[T],
+        output: &mut [T],
+        op: &OpRef<T>,
+    ) -> Result<()> {
+        let (r, p) = (ctx.rank(), ctx.size());
+        if p <= 1 {
+            return Ok(());
+        }
+        if r == 0 {
+            ctx.send(0, 1, input)?;
+            return Ok(());
+        }
+        // Receive the exclusive prefix from the left (round r-1)…
+        ctx.recv((r - 1) as u32, r - 1, output)?;
+        // …and forward the inclusive extension to the right (round r).
+        if r + 1 < p {
+            let mut fwd = input.to_vec();
+            ctx.reduce_local(r as u32, op, output, &mut fwd); // W earlier
+            ctx.send(r as u32, r + 1, &fwd)?;
+        }
+        Ok(())
+    }
+
+    fn predicted_rounds(&self, p: usize) -> u32 {
+        p.saturating_sub(1) as u32
+    }
+
+    fn predicted_ops(&self, _p: usize) -> u32 {
+        1
+    }
+
+    fn critical_skips(&self, p: usize) -> Vec<usize> {
+        vec![1; p.saturating_sub(1)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::validate::assert_exscan_matches;
+    use crate::mpi::{ops, run_scan, Topology, WorldConfig};
+
+    #[test]
+    fn matches_oracle() {
+        for p in [2usize, 3, 7, 16, 36] {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<i64>> = (0..p).map(|r| vec![r as i64 + 1, 2]).collect();
+            let res = run_scan(&cfg, &ExscanLinear, &ops::sum_i64(), &inputs).unwrap();
+            assert_exscan_matches(&inputs, &ops::sum_i64(), &res.outputs);
+        }
+    }
+
+    #[test]
+    fn exactly_p_minus_1_rounds_one_op() {
+        let p = 9;
+        let cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+        let inputs: Vec<Vec<i64>> = (0..p).map(|r| vec![r as i64]).collect();
+        let res = run_scan(&cfg, &ExscanLinear, &ops::bxor(), &inputs).unwrap();
+        let trace = res.trace.unwrap();
+        assert_eq!(trace.total_rounds(), 8);
+        assert_eq!(trace.max_ops(), 1);
+        assert!(crate::trace::check_all(&trace).is_empty());
+    }
+}

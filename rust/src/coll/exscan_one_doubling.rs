@@ -1,0 +1,146 @@
+//! The 1-doubling *exclusive* scan (Section 2).
+//!
+//! First a shift round moves `V_{r-1}` into `W_r`; from then on the pure
+//! exclusive invariant `W_r = ⊕_{i=max(0, r-s_k)}^{r-1} V_i` holds with
+//! skips `s_k = 2^{k-1}`, and each subsequent round folds in `W_{r-s_k}`
+//! directly — one ⊕ per round, no send-side preparation (the partial sent
+//! *is* the partial kept). Equivalent to shifting the input and running the
+//! doubling scan on `p−1` ranks: `1 + ⌈log₂(p−1)⌉` rounds,
+//! `⌈log₂(p−1)⌉` ⊕ applications.
+
+use anyhow::Result;
+
+use super::{ScanAlgorithm, ScanKind};
+use crate::mpi::{Elem, OpRef, RankCtx};
+use crate::util::ceil_log2;
+
+/// 1-doubling exclusive scan (shift + doubling on p−1 ranks).
+pub struct ExscanOneDoubling;
+
+impl<T: Elem> ScanAlgorithm<T> for ExscanOneDoubling {
+    fn name(&self) -> &'static str {
+        "1-doubling"
+    }
+
+    fn kind(&self) -> ScanKind {
+        ScanKind::Exclusive
+    }
+
+    fn run(
+        &self,
+        ctx: &mut RankCtx<T>,
+        input: &[T],
+        output: &mut [T],
+        op: &OpRef<T>,
+    ) -> Result<()> {
+        let (r, p, m) = (ctx.rank(), ctx.size(), input.len());
+        if p <= 1 {
+            return Ok(());
+        }
+        // Round 0 (s_0 = 1): shift inputs right. Rank 0 only sends and is
+        // then done (it neither holds nor contributes any further partial).
+        let (to, from) = (r + 1, r.checked_sub(1));
+        match (to < p, from) {
+            (true, Some(f)) => ctx.sendrecv(0, to, input, f, output)?,
+            (true, None) => ctx.send(0, to, input)?,
+            (false, Some(f)) => ctx.recv(0, f, output)?,
+            (false, None) => unreachable!("p > 1"),
+        }
+        if r == 0 {
+            return Ok(());
+        }
+
+        // Rounds k >= 1 with s_k = 2^{k-1}: the doubling scan over the
+        // shifted inputs on ranks 1..p. Receives come only from ranks >= 1
+        // (rank 0 left the algorithm), sends go to r + s_k < p.
+        let mut s = 1usize;
+        let mut k = 1u32;
+        while s < p - 1 {
+            let to = r + s;
+            let from = if r > s { Some(r - s) } else { None }; // from >= 1
+            match (to < p, from) {
+                (true, Some(f)) => {
+                    let t_buf = ctx.sendrecv_owned(k, to, &output[..], f, m)?;
+                    ctx.reduce_local(k, op, &t_buf, output); // W = W_{r-s} ⊕ W
+                }
+                (true, None) => ctx.send(k, to, output)?,
+                (false, Some(f)) => {
+                    let t_buf = ctx.recv_owned(k, f, m)?;
+                    ctx.reduce_local(k, op, &t_buf, output);
+                }
+                (false, None) => {}
+            }
+            s *= 2;
+            k += 1;
+        }
+        Ok(())
+    }
+
+    fn predicted_rounds(&self, p: usize) -> u32 {
+        match p {
+            0 | 1 => 0,
+            2 => 1,
+            _ => 1 + ceil_log2(p - 1),
+        }
+    }
+
+    /// One ⊕ per doubling round on the last rank: `⌈log₂(p−1)⌉`.
+    fn predicted_ops(&self, p: usize) -> u32 {
+        match p {
+            0 | 1 | 2 => 0,
+            _ => ceil_log2(p - 1),
+        }
+    }
+
+    fn critical_skips(&self, p: usize) -> Vec<usize> {
+        let mut out = vec![1]; // the shift round
+        let mut s = 1;
+        while s < p.saturating_sub(1) {
+            out.push(s);
+            s *= 2;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::validate::assert_exscan_matches;
+    use crate::mpi::{ops, run_scan, Topology, WorldConfig};
+
+    #[test]
+    fn matches_oracle_many_p() {
+        for p in [2usize, 3, 4, 5, 6, 7, 8, 9, 16, 17, 33, 36] {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<i64>> =
+                (0..p).map(|r| vec![(r as i64).wrapping_mul(0x9E37) ^ 5, r as i64 - 3]).collect();
+            let res = run_scan(&cfg, &ExscanOneDoubling, &ops::bxor(), &inputs).unwrap();
+            assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+        }
+    }
+
+    #[test]
+    fn rounds_and_ops_match_paper_counts() {
+        for p in [2usize, 3, 4, 5, 8, 9, 17, 36, 37] {
+            let cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+            let inputs: Vec<Vec<i64>> = (0..p).map(|r| vec![r as i64]).collect();
+            let res = run_scan(&cfg, &ExscanOneDoubling, &ops::bxor(), &inputs).unwrap();
+            let trace = res.trace.unwrap();
+            let algo: &dyn ScanAlgorithm<i64> = &ExscanOneDoubling;
+            assert_eq!(trace.total_rounds(), algo.predicted_rounds(p), "rounds p={p}");
+            assert_eq!(trace.last_rank_ops(), algo.predicted_ops(p), "ops p={p}");
+            // 1-doubling never needs a send-side ⊕: max == last-rank count.
+            assert_eq!(trace.max_ops(), algo.predicted_ops(p), "max ops p={p}");
+            assert!(crate::trace::check_all(&trace).is_empty(), "invariants p={p}");
+        }
+    }
+
+    #[test]
+    fn paper_round_counts_36() {
+        let algo: &dyn ScanAlgorithm<i64> = &ExscanOneDoubling;
+        assert_eq!(algo.predicted_rounds(36), 7); // 1 + ceil(log2 35) = 7
+        assert_eq!(algo.predicted_rounds(1152), 12);
+        assert_eq!(algo.predicted_ops(36), 6);
+    }
+}

@@ -1,0 +1,104 @@
+//! Exclusive scan by "inclusive scan, then shift": the other conventional
+//! reduction the paper's introduction sketches. Runs the full
+//! `⌈log₂p⌉`-round doubling inclusive scan on all p ranks, then one extra
+//! round shifting `W_r` to `r+1`. One more round than 1-doubling whenever
+//! `⌈log₂p⌉ = ⌈log₂(p−1)⌉`, and it scans one rank more than necessary —
+//! included to make the paper's "shift before vs shift after" comparison
+//! concrete.
+
+use anyhow::Result;
+
+use super::scan_doubling::ScanDoubling;
+use super::{ScanAlgorithm, ScanKind};
+use crate::mpi::{Elem, OpRef, RankCtx};
+use crate::util::ceil_log2;
+
+/// Inclusive doubling scan followed by a right shift.
+pub struct ExscanShiftScan;
+
+impl<T: Elem> ScanAlgorithm<T> for ExscanShiftScan {
+    fn name(&self) -> &'static str {
+        "scan-then-shift"
+    }
+
+    fn kind(&self) -> ScanKind {
+        ScanKind::Exclusive
+    }
+
+    fn run(
+        &self,
+        ctx: &mut RankCtx<T>,
+        input: &[T],
+        output: &mut [T],
+        op: &OpRef<T>,
+    ) -> Result<()> {
+        let (r, p, m) = (ctx.rank(), ctx.size(), input.len());
+        if p <= 1 {
+            return Ok(());
+        }
+        // Inclusive scan into a temporary (rounds 0..⌈log₂p⌉).
+        let mut inc = vec![T::filler(); m];
+        ScanAlgorithm::<T>::run(&ScanDoubling, ctx, input, &mut inc, op)?;
+        // Shift round: W_r -> r+1.
+        let shift_round = ceil_log2(p);
+        let (to, from) = (r + 1, r.checked_sub(1));
+        match (to < p, from) {
+            (true, Some(f)) => ctx.sendrecv(shift_round, to, &inc, f, output)?,
+            (true, None) => ctx.send(shift_round, to, &inc)?,
+            (false, Some(f)) => ctx.recv(shift_round, f, output)?,
+            (false, None) => unreachable!("p > 1"),
+        }
+        Ok(())
+    }
+
+    fn predicted_rounds(&self, p: usize) -> u32 {
+        if p <= 1 {
+            0
+        } else {
+            ceil_log2(p) + 1
+        }
+    }
+
+    fn predicted_ops(&self, p: usize) -> u32 {
+        // The inclusive scan's per-rank folds; the shift adds none.
+        if p <= 1 {
+            0
+        } else {
+            ceil_log2(p)
+        }
+    }
+
+    fn critical_skips(&self, p: usize) -> Vec<usize> {
+        let mut s = <ScanDoubling as ScanAlgorithm<i64>>::critical_skips(&ScanDoubling, p);
+        s.push(1);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::validate::assert_exscan_matches;
+    use crate::mpi::{ops, run_scan, Topology, WorldConfig};
+
+    #[test]
+    fn matches_oracle() {
+        for p in [2usize, 3, 5, 9, 17, 36] {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<i64>> = (0..p).map(|r| vec![(r as i64) << 1 | 1]).collect();
+            let res = run_scan(&cfg, &ExscanShiftScan, &ops::bxor(), &inputs).unwrap();
+            assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+        }
+    }
+
+    #[test]
+    fn one_extra_round() {
+        let p = 36;
+        let cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+        let inputs: Vec<Vec<i64>> = (0..p).map(|r| vec![r as i64]).collect();
+        let res = run_scan(&cfg, &ExscanShiftScan, &ops::bxor(), &inputs).unwrap();
+        let trace = res.trace.unwrap();
+        assert_eq!(trace.total_rounds(), 7); // ceil(log2 36) + 1
+        assert!(crate::trace::check_all(&trace).is_empty());
+    }
+}

@@ -1,0 +1,125 @@
+//! The scan collective library: every algorithm the paper describes,
+//! the library-native baseline it benchmarks against, and several
+//! extensions, all programmed against [`RankCtx`].
+//!
+//! | Algorithm | Kind | Rounds | ⊕ (critical rank) |
+//! |---|---|---|---|
+//! | [`ScanDoubling`] (Hillis-Steele) | inclusive | ⌈log₂p⌉ | ⌈log₂p⌉ |
+//! | [`ExscanTwoOp`] (two-⊕ doubling) | exclusive | ⌈log₂p⌉ | 2⌈log₂p⌉−1 (max over ranks) |
+//! | [`ExscanOneDoubling`] (1-doubling) | exclusive | 1+⌈log₂(p−1)⌉ | ⌈log₂(p−1)⌉ |
+//! | [`Exscan123`] (**Algorithm 1**) | exclusive | ⌈log₂(p−1)+log₂(4/3)⌉ | q−1 |
+//! | [`ExscanMpich`] (native baseline) | exclusive | ⌈log₂p⌉ | ≤2⌈log₂p⌉−1 |
+//! | [`ExscanBlelloch`] (up/down sweep) | exclusive | 2⌈log₂p⌉ | ≤2⌈log₂p⌉ |
+//! | [`ExscanShiftScan`] (scan + shift) | exclusive | ⌈log₂p⌉+1 | ⌈log₂p⌉ |
+//! | [`ExscanLinear`] | exclusive | p−1 | 1 |
+//! | [`PipelinedChain`] | exclusive | p+B−2 | B (blocks) |
+
+pub mod basic;
+pub mod exscan_123;
+pub mod exscan_blelloch;
+pub mod exscan_hierarchical;
+pub mod exscan_linear;
+pub mod exscan_mpich;
+pub mod exscan_one_doubling;
+pub mod exscan_shift_scan;
+pub mod exscan_two_op;
+pub mod scan_doubling;
+pub mod scan_pipelined;
+pub mod segmented;
+pub mod select;
+pub mod validate;
+
+pub use basic::{allreduce, bcast, gather_chain, reduce, scatter_chain};
+pub use exscan_123::Exscan123;
+pub use exscan_hierarchical::ExscanHierarchical;
+pub use segmented::{seg_max_i64, seg_sum_i64, Seg};
+pub use exscan_blelloch::ExscanBlelloch;
+pub use exscan_linear::ExscanLinear;
+pub use exscan_mpich::ExscanMpich;
+pub use exscan_one_doubling::ExscanOneDoubling;
+pub use exscan_shift_scan::ExscanShiftScan;
+pub use exscan_two_op::ExscanTwoOp;
+pub use scan_doubling::ScanDoubling;
+pub use scan_pipelined::PipelinedChain;
+pub use select::{select_exscan, TuningTable};
+pub use validate::{oracle_exscan, oracle_scan};
+
+use anyhow::Result;
+
+use crate::mpi::{Elem, OpRef, RankCtx};
+
+/// Inclusive (`MPI_Scan`) or exclusive (`MPI_Exscan`) semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScanKind {
+    Inclusive,
+    /// Output on rank 0 is undefined, as in MPI_Exscan.
+    Exclusive,
+}
+
+/// A scan algorithm runnable on any world. Implementations must be pure
+/// coordination: all communication through `ctx`, all combining through
+/// `ctx.reduce_local` (so rounds and ⊕ applications are traced and the
+/// virtual clock advances).
+pub trait ScanAlgorithm<T: Elem>: Send + Sync {
+    /// Short name used in tables ("123-doubling", …).
+    fn name(&self) -> &'static str;
+
+    fn kind(&self) -> ScanKind;
+
+    /// Execute on this rank. `input` is this rank's V (length m); the
+    /// result W is written to `output` (same length). For exclusive scans
+    /// rank 0's output is left untouched (undefined, per MPI).
+    fn run(
+        &self,
+        ctx: &mut RankCtx<T>,
+        input: &[T],
+        output: &mut [T],
+        op: &OpRef<T>,
+    ) -> Result<()>;
+
+    /// Closed-form number of communication rounds for world size `p`
+    /// (the paper's primary metric; verified against traces in tests).
+    fn predicted_rounds(&self, p: usize) -> u32;
+
+    /// Closed-form ⊕ applications, counted as the paper counts them
+    /// (see each implementation's docs; verified against traces).
+    fn predicted_ops(&self, p: usize) -> u32;
+
+    /// Partner distances (skips) of the completion-critical rank's
+    /// receives, one per round it receives in — feeds the hierarchical
+    /// cost-model calibration (intra- vs inter-node round classification).
+    fn critical_skips(&self, p: usize) -> Vec<usize>;
+}
+
+/// All exclusive-scan algorithms participating in the paper's comparison,
+/// in the paper's table order: native baseline, two-⊕, 1-doubling,
+/// 123-doubling.
+pub fn paper_exscan_algorithms<T: Elem>() -> Vec<Box<dyn ScanAlgorithm<T>>> {
+    vec![
+        Box::new(ExscanMpich),
+        Box::new(ExscanTwoOp),
+        Box::new(ExscanOneDoubling),
+        Box::new(Exscan123),
+    ]
+}
+
+/// Every exclusive-scan algorithm in the library (paper set + extensions).
+pub fn all_exscan_algorithms<T: Elem>() -> Vec<Box<dyn ScanAlgorithm<T>>> {
+    vec![
+        Box::new(ExscanMpich),
+        Box::new(ExscanTwoOp),
+        Box::new(ExscanOneDoubling),
+        Box::new(Exscan123),
+        Box::new(ExscanBlelloch),
+        Box::new(ExscanShiftScan),
+        Box::new(ExscanLinear),
+        Box::new(PipelinedChain::auto()),
+    ]
+}
+
+/// Look an algorithm up by its table name.
+pub fn exscan_by_name<T: Elem>(name: &str) -> Option<Box<dyn ScanAlgorithm<T>>> {
+    all_exscan_algorithms::<T>()
+        .into_iter()
+        .find(|a| a.name() == name)
+}

@@ -1,0 +1,141 @@
+//! The straight-doubling *inclusive* scan (Hillis-Steele / Kogge-Stone /
+//! Kruskal-Rudolph-Snir), Section 2 of the paper.
+//!
+//! Invariant before round k (skips `s_k = 2^k`):
+//! `W_r = ⊕_{i=max(0, r-s_k+1)}^{r} V_i`.
+//! Each round, rank r sends its partial W to `r+s_k` and receives
+//! `W_{r-s_k}` which is folded in from the left. `⌈log₂p⌉` rounds,
+//! `⌈log₂p⌉` ⊕ applications on the last rank; round-optimal for the
+//! inclusive problem in the one-ported model.
+
+use anyhow::Result;
+
+use super::{ScanAlgorithm, ScanKind};
+use crate::mpi::{Elem, OpRef, RankCtx};
+use crate::util::ceil_log2;
+
+/// Straight-doubling inclusive scan (`MPI_Scan` counterpart).
+pub struct ScanDoubling;
+
+impl<T: Elem> ScanAlgorithm<T> for ScanDoubling {
+    fn name(&self) -> &'static str {
+        "doubling-scan"
+    }
+
+    fn kind(&self) -> ScanKind {
+        ScanKind::Inclusive
+    }
+
+    fn run(
+        &self,
+        ctx: &mut RankCtx<T>,
+        input: &[T],
+        output: &mut [T],
+        op: &OpRef<T>,
+    ) -> Result<()> {
+        let (r, p, m) = (ctx.rank(), ctx.size(), input.len());
+        output.copy_from_slice(input); // W_r := V_r establishes the invariant
+        let mut s = 1usize; // s_k = 2^k
+        let mut k = 0u32;
+        while s < p {
+            let to = r + s;
+            let from = r.checked_sub(s);
+            match (to < p, from) {
+                (true, Some(f)) => {
+                    // Simultaneous send-receive of full partial results
+                    // (the transport copies the send buffer on post, so W
+                    // can be borrowed for sending while T is received).
+                    let t_buf = ctx.sendrecv_owned(k, to, &output[..], f, m)?;
+                    ctx.reduce_local(k, op, &t_buf, output); // W = T ⊕ W
+                }
+                (true, None) => ctx.send(k, to, output)?,
+                (false, Some(f)) => {
+                    let t_buf = ctx.recv_owned(k, f, m)?;
+                    ctx.reduce_local(k, op, &t_buf, output);
+                }
+                (false, None) => {} // p == 1
+            }
+            s *= 2;
+            k += 1;
+        }
+        Ok(())
+    }
+
+    fn predicted_rounds(&self, p: usize) -> u32 {
+        if p <= 1 {
+            0
+        } else {
+            ceil_log2(p)
+        }
+    }
+
+    fn predicted_ops(&self, p: usize) -> u32 {
+        // Last rank folds one received partial per round.
+        <Self as ScanAlgorithm<T>>::predicted_rounds(self, p)
+    }
+
+    fn critical_skips(&self, p: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut s = 1;
+        while s < p {
+            out.push(s);
+            s *= 2;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::validate::oracle_scan;
+    use crate::mpi::{ops, run_scan, Topology, WorldConfig};
+
+    #[test]
+    fn inclusive_scan_matches_oracle() {
+        for p in [1usize, 2, 3, 4, 5, 8, 13, 36] {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<i64>> =
+                (0..p).map(|r| vec![(r * r + 1) as i64, r as i64]).collect();
+            let res = run_scan(&cfg, &ScanDoubling, &ops::sum_i64(), &inputs).unwrap();
+            let oracle = oracle_scan(&inputs, &ops::sum_i64());
+            assert_eq!(res.outputs, oracle, "p={p}");
+        }
+    }
+
+    #[test]
+    fn rounds_match_prediction() {
+        for p in [2usize, 3, 5, 8, 9, 36] {
+            let cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+            let inputs: Vec<Vec<i64>> = (0..p).map(|r| vec![r as i64]).collect();
+            let res = run_scan(&cfg, &ScanDoubling, &ops::bxor(), &inputs).unwrap();
+            let trace = res.trace.unwrap();
+            let algo: &dyn ScanAlgorithm<i64> = &ScanDoubling;
+            assert_eq!(trace.total_rounds(), algo.predicted_rounds(p), "p={p}");
+            assert_eq!(trace.last_rank_ops(), algo.predicted_ops(p), "p={p}");
+            assert!(crate::trace::check_all(&trace).is_empty());
+        }
+    }
+
+    #[test]
+    fn noncommutative_order_respected() {
+        use crate::mpi::Rec2;
+        let p = 7;
+        let cfg = WorldConfig::new(Topology::flat(p));
+        let inputs: Vec<Vec<Rec2>> = (0..p)
+            .map(|r| {
+                vec![Rec2::new(
+                    [1.0 + r as f32, 0.5, -0.25, 1.0 - r as f32 * 0.1],
+                    [r as f32, -(r as f32)],
+                )]
+            })
+            .collect();
+        let res = run_scan(&cfg, &ScanDoubling, &ops::rec2_compose(), &inputs).unwrap();
+        let oracle = oracle_scan(&inputs, &ops::rec2_compose());
+        for r in 0..p {
+            for i in 0..4 {
+                assert!((res.outputs[r][0].a[i] - oracle[r][0].a[i]).abs() < 1e-3, "p7 r{r}");
+            }
+        }
+    }
+}

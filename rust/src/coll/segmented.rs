@@ -1,0 +1,180 @@
+//! Segmented scans by operator lifting (Blelloch's classic construction,
+//! reference [1] of the paper): a scan over `(flag, value)` pairs under a
+//! lifted operator computes independent prefix sums for every
+//! flag-delimited segment — with *any* of the scan algorithms in this
+//! library, unchanged, because the lifted operator is associative.
+//!
+//! `(f₁,v₁) ⊕̂ (f₂,v₂) = (f₁ ∨ f₂,  if f₂ { v₂ } else { v₁ ⊕ v₂ })`
+//!
+//! Segments here span *ranks* (each rank contributes one element per
+//! vector lane): the common use is per-group offsets where groups are
+//! contiguous rank ranges (e.g. per-node numbering).
+
+use crate::mpi::{CombineOp, Dtype, Elem, OpRef};
+
+/// A value tagged with a segment-start flag.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Seg<T> {
+    /// True iff this element starts a new segment.
+    pub flag: bool,
+    pub val: T,
+}
+
+impl<T> Seg<T> {
+    pub fn new(flag: bool, val: T) -> Self {
+        Seg { flag, val }
+    }
+
+    pub fn start(val: T) -> Self {
+        Seg { flag: true, val }
+    }
+
+    pub fn cont(val: T) -> Self {
+        Seg { flag: false, val }
+    }
+}
+
+impl<T: Elem> Elem for Seg<T> {
+    const DTYPE: Dtype = Dtype::Composite;
+
+    fn filler() -> Self {
+        Seg { flag: false, val: T::filler() }
+    }
+}
+
+/// The lifted operator over a scalar combine function.
+pub struct LiftedOp<T, F> {
+    name: String,
+    f: F,
+    _t: std::marker::PhantomData<T>,
+}
+
+impl<T: Elem, F: Fn(T, T) -> T + Send + Sync> CombineOp<Seg<T>> for LiftedOp<T, F> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn combine(&self, input: &[Seg<T>], inout: &mut [Seg<T>]) {
+        for (o, &i) in inout.iter_mut().zip(input) {
+            if o.flag {
+                // `o` starts a segment: the earlier value cannot cross it.
+            } else {
+                o.val = (self.f)(i.val, o.val);
+                o.flag = i.flag;
+            }
+        }
+    }
+
+    /// The lifted operator is never commutative (the flag rule is
+    /// direction-sensitive), even if the base operator is.
+    fn commutative(&self) -> bool {
+        false
+    }
+}
+
+/// Lift a scalar combine into a segmented operator.
+pub fn lift<T: Elem, F: Fn(T, T) -> T + Send + Sync + 'static>(
+    name: &str,
+    f: F,
+) -> OpRef<Seg<T>> {
+    OpRef::new(std::sync::Arc::new(LiftedOp {
+        name: format!("seg_{name}"),
+        f,
+        _t: std::marker::PhantomData,
+    }))
+}
+
+/// Segmented i64 sum — per-segment offsets.
+pub fn seg_sum_i64() -> OpRef<Seg<i64>> {
+    lift("sum_i64", |a: i64, b: i64| a.wrapping_add(b))
+}
+
+/// Segmented i64 max.
+pub fn seg_max_i64() -> OpRef<Seg<i64>> {
+    lift("max_i64", |a: i64, b: i64| a.max(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::{Exscan123, ExscanBlelloch, ExscanMpich, ScanAlgorithm, ScanDoubling};
+    use crate::mpi::{run_scan, Topology, WorldConfig};
+
+    /// Sequential segmented inclusive scan for the oracle.
+    fn seg_scan_ref(xs: &[Seg<i64>]) -> Vec<i64> {
+        let mut out = Vec::with_capacity(xs.len());
+        let mut acc = 0i64;
+        for x in xs {
+            acc = if x.flag { x.val } else { acc + x.val };
+            out.push(acc);
+        }
+        out
+    }
+
+    #[test]
+    fn lifted_operator_is_associative() {
+        let op = seg_sum_i64();
+        let cases = [
+            (Seg::cont(1), Seg::cont(2), Seg::cont(3)),
+            (Seg::start(1), Seg::cont(2), Seg::cont(3)),
+            (Seg::cont(1), Seg::start(2), Seg::cont(3)),
+            (Seg::cont(1), Seg::cont(2), Seg::start(3)),
+            (Seg::start(1), Seg::start(2), Seg::start(3)),
+        ];
+        for (a, b, c) in cases {
+            // (a ⊕ b) ⊕ c
+            let mut ab = [b];
+            op.reduce_local(&[a], &mut ab);
+            let mut ab_c = [c];
+            op.reduce_local(&ab, &mut ab_c);
+            // a ⊕ (b ⊕ c)
+            let mut bc = [c];
+            op.reduce_local(&[b], &mut bc);
+            let mut a_bc = bc;
+            op.reduce_local(&[a], &mut a_bc);
+            assert_eq!(ab_c, a_bc, "{a:?} {b:?} {c:?}");
+        }
+    }
+
+    #[test]
+    fn segmented_inclusive_scan_over_ranks() {
+        let p = 17;
+        // Segments start at ranks 0, 5, 11.
+        let inputs: Vec<Vec<Seg<i64>>> = (0..p)
+            .map(|r| vec![Seg::new(r == 0 || r == 5 || r == 11, r as i64 + 1)])
+            .collect();
+        let flat: Vec<Seg<i64>> = inputs.iter().map(|v| v[0]).collect();
+        let expect = seg_scan_ref(&flat);
+        let cfg = WorldConfig::new(Topology::flat(p));
+        let res = run_scan(&cfg, &ScanDoubling, &seg_sum_i64(), &inputs).unwrap();
+        for r in 0..p {
+            assert_eq!(res.outputs[r][0].val, expect[r], "rank {r}");
+        }
+    }
+
+    #[test]
+    fn segmented_exscan_gives_per_segment_offsets() {
+        let p = 12;
+        let seg_starts = [0usize, 4, 8];
+        let counts: Vec<i64> = (0..p).map(|r| (r % 5 + 1) as i64).collect();
+        let inputs: Vec<Vec<Seg<i64>>> = (0..p)
+            .map(|r| vec![Seg::new(seg_starts.contains(&r), counts[r])])
+            .collect();
+        for algo in [&Exscan123 as &dyn ScanAlgorithm<Seg<i64>>, &ExscanMpich, &ExscanBlelloch] {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let res = run_scan(&cfg, algo, &seg_sum_i64(), &inputs).unwrap();
+            // Within each segment, rank r's exclusive offset = sum of
+            // counts from its segment start up to r-1 — UNLESS r starts a
+            // segment (then the incoming prefix belongs to the previous
+            // segment and is ignored by convention).
+            for r in 1..p {
+                if seg_starts.contains(&r) {
+                    continue;
+                }
+                let seg_start = *seg_starts.iter().filter(|&&s| s <= r).max().unwrap();
+                let expect: i64 = counts[seg_start..r].iter().sum();
+                assert_eq!(res.outputs[r][0].val, expect, "{} rank {r}", algo.name());
+            }
+        }
+    }
+}

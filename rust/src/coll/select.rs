@@ -1,0 +1,162 @@
+//! Cost-model-driven algorithm selection — the "tuning table" mechanism
+//! real MPI libraries (including mpich) use to dispatch a collective to a
+//! concrete algorithm based on communicator size and message size.
+//!
+//! Instead of hard-coded thresholds we evaluate the closed-form α-β-γ
+//! prediction for every candidate and pick the argmin; a pre-computed
+//! [`TuningTable`] caches the decision boundaries so the hot path is a
+//! lookup, exactly like `MPIR_CVAR`-style tuning files.
+
+use crate::cost::{predict_flat, CostParams};
+use crate::mpi::Elem;
+
+use super::{
+    exscan_by_name, paper_exscan_algorithms, PipelinedChain, ScanAlgorithm,
+};
+
+/// Choose the predicted-fastest exclusive-scan algorithm for (p, bytes).
+/// Candidates: the paper's three portable algorithms plus the pipelined
+/// chain (which takes over for very large vectors).
+pub fn select_exscan<T: Elem>(
+    p: usize,
+    m: usize,
+    params: &CostParams,
+    ranks_per_node: usize,
+) -> Box<dyn ScanAlgorithm<T>> {
+    let bytes = m * T::size_bytes();
+    let mut best: Option<(f64, Box<dyn ScanAlgorithm<T>>)> = None;
+    for algo in paper_exscan_algorithms::<T>() {
+        if algo.name() == "native-mpich" {
+            continue; // the baseline, not a candidate
+        }
+        let pred = predict_flat(
+            &algo.critical_skips(p),
+            algo.predicted_ops(p),
+            p,
+            ranks_per_node,
+            bytes,
+            params,
+        );
+        if best.as_ref().map(|(t, _)| pred.time_us < *t).unwrap_or(true) {
+            best = Some((pred.time_us, algo));
+        }
+    }
+    // Pipelined chain: (p + B − 2) rounds of (bytes/B), B combines.
+    let chain = PipelinedChain::auto();
+    let b = chain.block_count(m);
+    let chain_skips = vec![1usize; (p + b).saturating_sub(2)];
+    let chain_bytes = bytes / b.max(1);
+    let pred = predict_flat(
+        &chain_skips,
+        chain.ops_for(p, m),
+        p,
+        ranks_per_node,
+        chain_bytes,
+        params,
+    );
+    if best.as_ref().map(|(t, _)| pred.time_us < *t).unwrap_or(true) {
+        return Box::new(chain);
+    }
+    best.expect("at least one candidate").1
+}
+
+/// A precomputed decision table over (p, message-size) buckets.
+#[derive(Debug, Clone)]
+pub struct TuningTable {
+    pub params: CostParams,
+    pub ranks_per_node: usize,
+    /// Power-of-two message-size bucket boundaries (bytes).
+    pub size_buckets: Vec<usize>,
+    /// `choice[pi][bi]` = algorithm name for p-bucket pi, size-bucket bi.
+    pub p_buckets: Vec<usize>,
+    pub choice: Vec<Vec<&'static str>>,
+}
+
+impl TuningTable {
+    /// Build a table for the given p values, size buckets 8 B … 8 MiB.
+    pub fn build(p_buckets: Vec<usize>, params: CostParams, ranks_per_node: usize) -> Self {
+        let size_buckets: Vec<usize> = (3..=23).map(|k| 1usize << k).collect();
+        let mut choice = Vec::with_capacity(p_buckets.len());
+        for &p in &p_buckets {
+            let mut row = Vec::with_capacity(size_buckets.len());
+            for &bytes in &size_buckets {
+                let algo = select_exscan::<i64>(p, bytes / 8, &params, ranks_per_node);
+                row.push(leak_name(algo.name()));
+            }
+            choice.push(row);
+        }
+        TuningTable { params, ranks_per_node, size_buckets, p_buckets, choice }
+    }
+
+    /// Look up the algorithm for (p, bytes), snapping to enclosing buckets.
+    pub fn lookup<T: Elem>(&self, p: usize, bytes: usize) -> Box<dyn ScanAlgorithm<T>> {
+        let pi = self
+            .p_buckets
+            .iter()
+            .position(|&b| p <= b)
+            .unwrap_or(self.p_buckets.len() - 1);
+        let bi = self
+            .size_buckets
+            .iter()
+            .position(|&b| bytes <= b)
+            .unwrap_or(self.size_buckets.len() - 1);
+        exscan_by_name::<T>(self.choice[pi][bi]).expect("table names are valid")
+    }
+}
+
+/// The algorithm names are `&'static str` already; this keeps the table
+/// type simple without cloning.
+fn leak_name(n: &str) -> &'static str {
+    match n {
+        "123-doubling" => "123-doubling",
+        "1-doubling" => "1-doubling",
+        "two-op-doubling" => "two-op-doubling",
+        "pipelined-chain" => "pipelined-chain",
+        "native-mpich" => "native-mpich",
+        other => Box::leak(other.to_string().into_boxed_str()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostParams;
+
+    #[test]
+    fn small_messages_prefer_fewest_rounds() {
+        // Tiny vectors: round count dominates → 123-doubling (or two-op
+        // when ⌈log₂p⌉ < q, impossible; two-op ties at best).
+        let a = select_exscan::<i64>(36, 1, &CostParams::paper_36x1(), 1);
+        assert!(
+            a.name() == "123-doubling" || a.name() == "two-op-doubling",
+            "picked {}",
+            a.name()
+        );
+    }
+
+    #[test]
+    fn huge_messages_prefer_pipeline() {
+        // 8 MB vectors on 8 ranks: bandwidth dominates → pipelined chain.
+        let a = select_exscan::<i64>(8, 1_000_000, &CostParams::paper_36x1(), 1);
+        assert_eq!(a.name(), "pipelined-chain");
+    }
+
+    #[test]
+    fn table_lookup_consistent_with_direct_selection() {
+        let params = CostParams::paper_36x1();
+        let table = TuningTable::build(vec![4, 16, 64, 256, 1024], params, 1);
+        for (p, bytes) in [(4usize, 8usize), (16, 1 << 10), (64, 1 << 20), (1024, 64)] {
+            let via_table = table.lookup::<i64>(p, bytes);
+            let direct = select_exscan::<i64>(p, bytes / 8, &params, 1);
+            assert_eq!(via_table.name(), direct.name(), "p={p} bytes={bytes}");
+        }
+    }
+
+    #[test]
+    fn never_selects_native() {
+        for m in [1usize, 100, 10_000, 1_000_000] {
+            let a = select_exscan::<i64>(36, m, &CostParams::paper_36x1(), 1);
+            assert_ne!(a.name(), "native-mpich");
+        }
+    }
+}

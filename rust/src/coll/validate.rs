@@ -1,0 +1,82 @@
+//! Sequential oracles the whole test suite validates against.
+
+use crate::mpi::{Elem, OpRef};
+
+/// Sequential inclusive scan: `out[r] = V_0 ⊕ … ⊕ V_r`, element-wise.
+pub fn oracle_scan<T: Elem>(inputs: &[Vec<T>], op: &OpRef<T>) -> Vec<Vec<T>> {
+    assert!(!inputs.is_empty());
+    let mut acc = inputs[0].clone();
+    let mut out = vec![acc.clone()];
+    for v in &inputs[1..] {
+        // acc = acc ⊕ v, with acc the earlier operand: inout starts as v.
+        let mut next = v.clone();
+        op.reduce_local(&acc, &mut next);
+        acc = next;
+        out.push(acc.clone());
+    }
+    out
+}
+
+/// Sequential exclusive scan: `out[r] = V_0 ⊕ … ⊕ V_{r-1}` for `r > 0`;
+/// `out[0]` is `None` (undefined, as MPI_Exscan leaves it).
+pub fn oracle_exscan<T: Elem>(inputs: &[Vec<T>], op: &OpRef<T>) -> Vec<Option<Vec<T>>> {
+    let inc = oracle_scan(inputs, op);
+    let mut out = vec![None];
+    for w in inc.into_iter().take(inputs.len() - 1) {
+        out.push(Some(w));
+    }
+    out
+}
+
+/// Convenience for tests: compare a parallel exclusive-scan result against
+/// the oracle, ignoring rank 0.
+pub fn assert_exscan_matches<T: Elem>(inputs: &[Vec<T>], op: &OpRef<T>, outputs: &[Vec<T>]) {
+    let oracle = oracle_exscan(inputs, op);
+    assert_eq!(oracle.len(), outputs.len());
+    for (r, expect) in oracle.iter().enumerate() {
+        if let Some(expect) = expect {
+            assert_eq!(
+                &outputs[r], expect,
+                "rank {r} exclusive prefix mismatch (p={}, m={})",
+                inputs.len(),
+                inputs[0].len()
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::ops;
+
+    #[test]
+    fn oracle_scan_sum() {
+        let inputs: Vec<Vec<i64>> = (1..=4).map(|r| vec![r as i64, 10 * r as i64]).collect();
+        let out = oracle_scan(&inputs, &ops::sum_i64());
+        assert_eq!(out[0], vec![1, 10]);
+        assert_eq!(out[1], vec![3, 30]);
+        assert_eq!(out[3], vec![10, 100]);
+    }
+
+    #[test]
+    fn oracle_exscan_sum() {
+        let inputs: Vec<Vec<i64>> = (1..=4).map(|r| vec![r as i64]).collect();
+        let out = oracle_exscan(&inputs, &ops::sum_i64());
+        assert!(out[0].is_none());
+        assert_eq!(out[1].as_ref().unwrap(), &vec![1]);
+        assert_eq!(out[3].as_ref().unwrap(), &vec![6]);
+    }
+
+    #[test]
+    fn oracle_respects_order_noncommutative() {
+        use crate::mpi::Rec2;
+        let a = Rec2::new([1.0, 1.0, 0.0, 1.0], [1.0, 2.0]);
+        let b = Rec2::new([2.0, 0.0, 1.0, 1.0], [0.0, 1.0]);
+        let c = Rec2::new([0.0, 1.0, 1.0, 0.0], [3.0, 0.0]);
+        let inputs = vec![vec![a], vec![b], vec![c]];
+        let out = oracle_scan(&inputs, &ops::rec2_compose());
+        // out[2] must be a∘then b∘then c in rank order: a.then(b).then(c)
+        assert_eq!(out[2][0], a.then(&b).then(&c));
+    }
+}

@@ -1,0 +1,30 @@
+//! The α-β-γ communication/computation cost model.
+//!
+//! The paper's analysis counts two machine-independent quantities per
+//! algorithm: *communication rounds* (each a simultaneous send-receive of an
+//! m-element vector) and *applications of ⊕* (each an `MPI_Reduce_local`
+//! over m elements). The classic linear (Hockney / LogGP-flavoured) model
+//! turns these into time:
+//!
+//! ```text
+//!   T  =  Σ_rounds (α_link + bytes · β_link)  +  Σ_ops bytes · γ  +  c
+//! ```
+//!
+//! with `α` the per-message latency of the link class used in that round,
+//! `β` the inverse bandwidth (µs/byte), `γ` the local reduction cost
+//! (µs/byte) and `c` a fixed per-call overhead. Links are classified
+//! hierarchically (same rank / same node / across nodes), which is what
+//! makes the 36×32 configuration behave differently from 36×1 in the paper.
+//!
+//! [`calibrate`] fits the parameters to the paper's Table 1 by non-negative
+//! linear least squares; [`predict`] produces closed-form and trace-replay
+//! predictions used for algorithm selection and for the model-vs-measured
+//! experiment.
+
+pub mod calibrate;
+pub mod model;
+pub mod predict;
+
+pub use calibrate::{fit_flat, CalibrationReport, Table1Data, PAPER_TABLE1_36X1, PAPER_TABLE1_36X32};
+pub use model::{CostModel, CostParams, LinkClass};
+pub use predict::{predict_flat, skip_link, FlatPrediction};

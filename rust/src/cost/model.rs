@@ -1,0 +1,190 @@
+//! Cost parameters and the link-classified round-cost function.
+
+
+/// Class of the link between two ranks, given a hierarchical placement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkClass {
+    /// Message to self (allowed by MPI; copies through memory).
+    SelfLoop,
+    /// Both ranks on the same compute node (shared memory transport).
+    IntraNode,
+    /// Ranks on different compute nodes (network transport).
+    InterNode,
+}
+
+/// Parameters of the hierarchical α-β-γ model. Units: microseconds and
+/// microseconds/byte, matching the paper's reporting unit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostParams {
+    /// Per-message latency within a node (µs).
+    pub alpha_intra: f64,
+    /// Per-message latency across nodes (µs).
+    pub alpha_inter: f64,
+    /// Inverse bandwidth within a node (µs/byte).
+    pub beta_intra: f64,
+    /// Inverse bandwidth across nodes (µs/byte).
+    pub beta_inter: f64,
+    /// Local reduction (⊕ application) cost (µs/byte).
+    pub gamma: f64,
+    /// Fixed per-collective-call overhead (µs): library entry, argument
+    /// checking, buffer setup.
+    pub overhead: f64,
+}
+
+impl CostParams {
+    /// Parameters fitted to the paper's Table 1, p = 36×1 configuration
+    /// (one rank per node: every link is inter-node Omnipath). Computed
+    /// once by the non-negative least-squares fit in [`super::calibrate`]
+    /// over the embedded paper data — `exscan calibrate` prints the values.
+    pub fn paper_36x1() -> Self {
+        static C: std::sync::OnceLock<CostParams> = std::sync::OnceLock::new();
+        *C.get_or_init(|| super::calibrate::fit_flat(&super::calibrate::PAPER_TABLE1_36X1, 8).params)
+    }
+
+    /// Effective parameters of the *native* MPI_Exscan in the 36×1
+    /// configuration (same fit, native column).
+    pub fn paper_36x1_native() -> Self {
+        static C: std::sync::OnceLock<CostParams> = std::sync::OnceLock::new();
+        *C.get_or_init(|| {
+            super::calibrate::fit_flat(&super::calibrate::PAPER_TABLE1_36X1, 8).native_params
+        })
+    }
+
+    /// Parameters fitted to the paper's Table 1, p = 36×32 configuration
+    /// (32 ranks per node, block placement).
+    pub fn paper_36x32() -> Self {
+        static C: std::sync::OnceLock<CostParams> = std::sync::OnceLock::new();
+        *C.get_or_init(|| super::calibrate::fit_flat(&super::calibrate::PAPER_TABLE1_36X32, 8).params)
+    }
+
+    /// Native-column fit for the 36×32 configuration.
+    pub fn paper_36x32_native() -> Self {
+        static C: std::sync::OnceLock<CostParams> = std::sync::OnceLock::new();
+        *C.get_or_init(|| {
+            super::calibrate::fit_flat(&super::calibrate::PAPER_TABLE1_36X32, 8).native_params
+        })
+    }
+
+    /// A generic small-cluster preset for examples (not calibrated).
+    pub fn generic() -> Self {
+        CostParams {
+            alpha_intra: 0.5,
+            alpha_inter: 1.5,
+            beta_intra: 5e-5,
+            beta_inter: 2.5e-4,
+            gamma: 1e-4,
+            overhead: 1.0,
+        }
+    }
+
+    pub fn alpha(&self, link: LinkClass) -> f64 {
+        match link {
+            LinkClass::SelfLoop => 0.0,
+            LinkClass::IntraNode => self.alpha_intra,
+            LinkClass::InterNode => self.alpha_inter,
+        }
+    }
+
+    pub fn beta(&self, link: LinkClass) -> f64 {
+        match link {
+            LinkClass::SelfLoop => 0.0,
+            LinkClass::IntraNode => self.beta_intra,
+            LinkClass::InterNode => self.beta_inter,
+        }
+    }
+}
+
+/// The evaluated cost model: parameters + placement geometry.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub params: CostParams,
+    /// Ranks per node under block placement (`node = rank / ranks_per_node`).
+    pub ranks_per_node: usize,
+}
+
+impl CostModel {
+    pub fn new(params: CostParams, ranks_per_node: usize) -> Self {
+        assert!(ranks_per_node >= 1);
+        CostModel { params, ranks_per_node }
+    }
+
+    /// Classify the link between two ranks under block placement.
+    pub fn link(&self, a: usize, b: usize) -> LinkClass {
+        if a == b {
+            LinkClass::SelfLoop
+        } else if a / self.ranks_per_node == b / self.ranks_per_node {
+            LinkClass::IntraNode
+        } else {
+            LinkClass::InterNode
+        }
+    }
+
+    /// Time (µs) for one communication round transferring `bytes` bytes
+    /// between `from` and `to` (one simultaneous send-receive slot).
+    pub fn round_cost(&self, from: usize, to: usize, bytes: usize) -> f64 {
+        let l = self.link(from, to);
+        self.params.alpha(l) + bytes as f64 * self.params.beta(l)
+    }
+
+    /// Time (µs) for one ⊕ application (`MPI_Reduce_local`) over `bytes`.
+    pub fn reduce_cost(&self, bytes: usize) -> f64 {
+        bytes as f64 * self.params.gamma
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_classification_block_placement() {
+        let m = CostModel::new(CostParams::generic(), 32);
+        assert_eq!(m.link(0, 0), LinkClass::SelfLoop);
+        assert_eq!(m.link(0, 31), LinkClass::IntraNode);
+        assert_eq!(m.link(31, 32), LinkClass::InterNode);
+        assert_eq!(m.link(64, 95), LinkClass::IntraNode);
+        assert_eq!(m.link(0, 1151), LinkClass::InterNode);
+    }
+
+    #[test]
+    fn one_rank_per_node_is_all_inter() {
+        let m = CostModel::new(CostParams::generic(), 1);
+        for a in 0..8 {
+            for b in 0..8 {
+                if a != b {
+                    assert_eq!(m.link(a, b), LinkClass::InterNode);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn round_cost_monotone_in_bytes() {
+        let m = CostModel::new(CostParams::generic(), 4);
+        assert!(m.round_cost(0, 5, 800) > m.round_cost(0, 5, 8));
+        assert!(m.round_cost(0, 1, 800) < m.round_cost(0, 5, 800));
+    }
+
+    #[test]
+    fn self_loop_free() {
+        let m = CostModel::new(CostParams::generic(), 4);
+        assert_eq!(m.round_cost(3, 3, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn presets_nonnegative() {
+        for p in [
+            CostParams::paper_36x1(),
+            CostParams::paper_36x1_native(),
+            CostParams::paper_36x32(),
+            CostParams::paper_36x32_native(),
+            CostParams::generic(),
+        ] {
+            assert!(p.alpha_intra >= 0.0 && p.alpha_inter >= 0.0);
+            assert!(p.beta_intra >= 0.0 && p.beta_inter >= 0.0);
+            assert!(p.gamma >= 0.0 && p.overhead >= 0.0);
+            // Some β term must be positive: large vectors cost time.
+            assert!(p.beta_inter + p.beta_intra > 0.0);
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Closed-form time predictions from the α-β-γ model.
+//!
+//! For an algorithm with critical-path receive skips `s_0 … s_{q-1}` and
+//! `n_ops` ⊕ applications, the predicted completion time on a block-placed
+//! `nodes × rpn` cluster is
+//!
+//! ```text
+//!   T(m) = Σ_k [ α(link(s_k)) + bytes·β(link(s_k)) ] + n_ops·bytes·γ + c
+//! ```
+//!
+//! where `link(s_k)` is intra-node iff the critical rank (p−1) and its
+//! round-k partner share a node. The exact per-rank interleaving is
+//! captured by the trace-replay predictor ([`crate::trace::replay`]);
+//! this closed form is what the algorithm-selection tuning table uses
+//! (cheap, no execution needed) and what the calibration fit inverts.
+
+use super::model::{CostParams, LinkClass};
+
+/// Closed-form prediction summary for one (algorithm, p, m) point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlatPrediction {
+    pub rounds: u32,
+    pub intra_rounds: u32,
+    pub inter_rounds: u32,
+    pub ops: u32,
+    pub time_us: f64,
+}
+
+/// Classify one critical-path round by the skip distance under block
+/// placement: the critical rank is `p−1`; its partner is `p−1−s`.
+pub fn skip_link(p: usize, ranks_per_node: usize, skip: usize) -> LinkClass {
+    let r = p - 1;
+    let partner = r.saturating_sub(skip);
+    if r / ranks_per_node == partner / ranks_per_node {
+        LinkClass::IntraNode
+    } else {
+        LinkClass::InterNode
+    }
+}
+
+/// Closed-form predicted completion time.
+///
+/// * `skips` — the algorithm's critical-path receive distances
+///   ([`crate::coll::ScanAlgorithm::critical_skips`]).
+/// * `ops` — ⊕ applications on the critical path
+///   ([`crate::coll::ScanAlgorithm::predicted_ops`]).
+pub fn predict_flat(
+    skips: &[usize],
+    ops: u32,
+    p: usize,
+    ranks_per_node: usize,
+    bytes: usize,
+    params: &CostParams,
+) -> FlatPrediction {
+    let mut time = params.overhead;
+    let mut intra = 0u32;
+    let mut inter = 0u32;
+    for &s in skips {
+        let link = skip_link(p.max(2), ranks_per_node, s);
+        match link {
+            LinkClass::IntraNode => intra += 1,
+            LinkClass::InterNode => inter += 1,
+            LinkClass::SelfLoop => {}
+        }
+        time += params.alpha(link) + bytes as f64 * params.beta(link);
+    }
+    time += ops as f64 * bytes as f64 * params.gamma;
+    FlatPrediction { rounds: skips.len() as u32, intra_rounds: intra, inter_rounds: inter, ops, time_us: time }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostParams;
+
+    #[test]
+    fn skip_link_block_placement() {
+        // p = 1152, 32 ranks/node: rank 1151's partner at distance 16 is
+        // 1135 — same node (both / 32 == 35). Distance 32 crosses.
+        assert_eq!(skip_link(1152, 32, 16), LinkClass::IntraNode);
+        assert_eq!(skip_link(1152, 32, 31), LinkClass::IntraNode);
+        assert_eq!(skip_link(1152, 32, 32), LinkClass::InterNode);
+        // One rank per node: everything crosses.
+        assert_eq!(skip_link(36, 1, 1), LinkClass::InterNode);
+    }
+
+    #[test]
+    fn prediction_composes() {
+        let params = CostParams {
+            alpha_intra: 1.0,
+            alpha_inter: 10.0,
+            beta_intra: 0.0,
+            beta_inter: 0.1,
+            gamma: 0.01,
+            overhead: 5.0,
+        };
+        // Two inter rounds + one intra round at 100 bytes, 2 ops.
+        let pred = predict_flat(&[32, 64, 1], 2, 128, 32, 100, &params);
+        assert_eq!(pred.inter_rounds, 2);
+        assert_eq!(pred.intra_rounds, 1);
+        // 5 + 2*(10+10) + 1*1 + 2*100*0.01 = 5+40+1+2 = 48
+        assert!((pred.time_us - 48.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_rounds_costs_more() {
+        let params = CostParams::generic();
+        let a = predict_flat(&[1, 2, 4, 8, 16, 32], 5, 36, 1, 80, &params);
+        let b = predict_flat(&[1, 1, 2, 4, 8, 16, 32], 6, 36, 1, 80, &params);
+        assert!(b.time_us > a.time_us);
+    }
+}

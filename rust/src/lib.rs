@@ -1,0 +1,58 @@
+//! # exscan — communication-round and computation efficient exclusive prefix sums
+//!
+//! A full reproduction of
+//! *"Communication Round and Computation Efficient Exclusive Prefix-Sums
+//! Algorithms (for MPI_Exscan)"* (J. L. Träff, 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordination contribution: a
+//!   message-passing runtime ([`mpi`]) with real-thread and virtual-clock
+//!   transports, the scan collective library ([`coll`]) containing the
+//!   paper's three exclusive-scan algorithms plus the library-native
+//!   baseline and several extensions, a round tracer ([`trace`]) that
+//!   checks the paper's round/operation counts, a calibrated α-β-γ cost
+//!   model ([`cost`]) and an mpicroscope-style benchmark harness
+//!   ([`bench`]).
+//! * **Layer 2/1 (build time, `python/compile/`)** — the element-wise
+//!   `⊕` combine (`MPI_Reduce_local`) and block-scan hot spots as Pallas
+//!   kernels inside JAX functions, AOT-lowered to HLO text.
+//! * **Runtime bridge** ([`runtime`]) — loads `artifacts/*.hlo.txt` via
+//!   the PJRT C API (`xla` crate) so an "expensive ⊕" runs through the
+//!   compiled kernel on the Layer-3 hot path; Python is never on the
+//!   request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use exscan::prelude::*;
+//!
+//! // 36 ranks, one per node (the paper's 36x1 configuration), BXOR on i64.
+//! let cfg = WorldConfig::new(Topology::cluster(36, 1)).virtual_clock(CostParams::paper_36x1());
+//! let algo = Exscan123;
+//! let inputs: Vec<Vec<i64>> = (0..36).map(|r| vec![r as i64; 8]).collect();
+//! let out = run_scan(&cfg, &algo, &ops::bxor(), &inputs).unwrap();
+//! assert_eq!(out.outputs[3], vec![0 ^ 1 ^ 2; 8]);
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod coll;
+pub mod cost;
+pub mod mpi;
+pub mod runtime;
+pub mod trace;
+pub mod util;
+
+/// Convenient re-exports of the most commonly used types.
+pub mod prelude {
+    pub use crate::bench::{BenchConfig, Harness, SweepSpec};
+    pub use crate::coll::{
+        all_exscan_algorithms, Exscan123, ExscanBlelloch, ExscanLinear, ExscanMpich,
+        ExscanOneDoubling, ExscanTwoOp, ScanAlgorithm, ScanDoubling, ScanKind,
+    };
+    pub use crate::cost::{CostModel, CostParams, LinkClass};
+    pub use crate::mpi::{
+        ops, run_scan, CombineOp, Elem, OpRef, RankCtx, Rec2, RunResult, Topology, WorldConfig,
+    };
+    pub use crate::trace::{RankTrace, TraceReport};
+}

@@ -1,0 +1,9 @@
+//! `exscan` — the launcher binary. See `exscan help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = exscan::cli::run_argv(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

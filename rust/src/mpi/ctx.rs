@@ -1,0 +1,315 @@
+//! Per-rank execution context: the API the collective algorithms program
+//! against (`send` / `recv` / `sendrecv` / `reduce_local` / `barrier`).
+//!
+//! One context per rank thread. The same code path serves both transports:
+//! in *real* mode, timing is wall-clock and the virtual machinery is inert;
+//! in *virtual* mode, every operation advances a per-rank logical clock
+//! according to the α-β-γ [`CostModel`](crate::cost::CostModel), giving a
+//! deterministic, cluster-scale simulation (LogP-style) with the exact same
+//! message flow.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::elem::Elem;
+use super::msg::Msg;
+use super::op::OpRef;
+use super::vbarrier::VBarrier;
+use crate::cost::CostModel;
+use crate::trace::{EventKind, RankTrace};
+use crate::util::Channel;
+
+/// How time is accounted.
+#[derive(Clone)]
+pub enum ClockMode {
+    /// Wall-clock: the harness times real execution.
+    Real,
+    /// Logical clocks driven by the cost model (simulated cluster).
+    Virtual(Arc<CostModel>),
+}
+
+/// Timeout for a blocking receive before declaring deadlock. Generous by
+/// default (the test suite runs thousands of collectives; a genuine
+/// deadlock is the only thing that should ever hit it); override with
+/// `EXSCAN_RECV_TIMEOUT_MS` for failure-injection tests.
+pub fn recv_timeout() -> Duration {
+    static T: std::sync::OnceLock<Duration> = std::sync::OnceLock::new();
+    *T.get_or_init(|| {
+        std::env::var("EXSCAN_RECV_TIMEOUT_MS")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok())
+            .map(Duration::from_millis)
+            .unwrap_or(Duration::from_secs(60))
+    })
+}
+
+/// Per-rank handle used by algorithm implementations.
+pub struct RankCtx<T: Elem> {
+    rank: usize,
+    size: usize,
+    /// `mailboxes[r]` is rank r's inbox; this rank pops `mailboxes[rank]`.
+    mailboxes: Arc<Vec<Channel<Msg<T>>>>,
+    /// Out-of-order arrivals waiting to be matched.
+    pending: Vec<Msg<T>>,
+    barrier: Arc<VBarrier>,
+    barrier_gen: u64,
+    mode: ClockMode,
+    /// Virtual clock (µs). Meaningless in real mode.
+    vclock: f64,
+    /// Event log; `None` when tracing is disabled.
+    trace: Option<RankTrace>,
+}
+
+impl<T: Elem> RankCtx<T> {
+    pub(crate) fn new(
+        rank: usize,
+        size: usize,
+        mailboxes: Arc<Vec<Channel<Msg<T>>>>,
+        barrier: Arc<VBarrier>,
+        mode: ClockMode,
+        tracing: bool,
+    ) -> Self {
+        RankCtx {
+            rank,
+            size,
+            mailboxes,
+            pending: Vec::new(),
+            barrier,
+            barrier_gen: 0,
+            mode,
+            vclock: 0.0,
+            trace: tracing.then(|| RankTrace::new(rank)),
+        }
+    }
+
+    /// This rank's id, `0 <= rank < size`.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Number of ranks in the world (`p`).
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Current virtual clock (µs). 0 in real mode.
+    pub fn vclock(&self) -> f64 {
+        self.vclock
+    }
+
+    /// Reset the virtual clock and trace (between benchmark repetitions).
+    pub fn reset_clock(&mut self) {
+        self.vclock = 0.0;
+        if let Some(t) = &mut self.trace {
+            t.events.clear();
+        }
+    }
+
+    /// Take the recorded trace (empties the log).
+    pub fn take_trace(&mut self) -> Option<RankTrace> {
+        self.trace.take()
+    }
+
+    fn bytes(len: usize) -> usize {
+        len * T::size_bytes()
+    }
+
+    fn record(&mut self, round: u32, kind: EventKind) {
+        if let Some(t) = &mut self.trace {
+            t.push(round, kind);
+        }
+    }
+
+    fn post(&self, to: usize, round: u32, data: &[T]) -> Result<()> {
+        if to >= self.size {
+            bail!("rank {} sending to out-of-range rank {}", self.rank, to);
+        }
+        let msg = Msg {
+            src: self.rank,
+            tag: round as u64,
+            data: data.to_vec().into_boxed_slice(),
+            vtime: self.vclock,
+        };
+        self.mailboxes[to]
+            .push(msg)
+            .map_err(|_| anyhow::anyhow!("rank {to}'s mailbox is closed"))?;
+        Ok(())
+    }
+
+    /// Blocking matched receive: returns the message from `from` with tag
+    /// `round`, buffering any other arrivals.
+    fn take(&mut self, from: usize, round: u32) -> Result<Msg<T>> {
+        if let Some(i) = self
+            .pending
+            .iter()
+            .position(|m| m.src == from && m.tag == round as u64)
+        {
+            return Ok(self.pending.swap_remove(i));
+        }
+        loop {
+            let Some(msg) = self.mailboxes[self.rank].pop_timeout(recv_timeout()) else {
+                bail!(
+                    "rank {} deadlocked waiting for (from={from}, round={round})",
+                    self.rank
+                );
+            };
+            if msg.src == from && msg.tag == round as u64 {
+                return Ok(msg);
+            }
+            self.pending.push(msg);
+        }
+    }
+
+    /// One-sided send in communication round `round` (one send-port slot).
+    pub fn send(&mut self, round: u32, to: usize, buf: &[T]) -> Result<()> {
+        self.post(to, round, buf)?;
+        self.record(round, EventKind::Send { to, bytes: Self::bytes(buf.len()) });
+        if let ClockMode::Virtual(model) = &self.mode {
+            self.vclock += model.round_cost(self.rank, to, Self::bytes(buf.len()));
+        }
+        Ok(())
+    }
+
+    /// One-sided receive in communication round `round` (one recv-port slot).
+    pub fn recv(&mut self, round: u32, from: usize, buf: &mut [T]) -> Result<()> {
+        let msg = self.take(from, round)?;
+        if msg.data.len() != buf.len() {
+            bail!(
+                "rank {}: recv size mismatch from {} round {}: got {} want {}",
+                self.rank,
+                from,
+                round,
+                msg.data.len(),
+                buf.len()
+            );
+        }
+        buf.copy_from_slice(&msg.data);
+        self.record(round, EventKind::Recv { from, bytes: Self::bytes(buf.len()) });
+        if let ClockMode::Virtual(model) = &self.mode {
+            let c_in = model.round_cost(from, self.rank, Self::bytes(buf.len()));
+            self.vclock = self.vclock.max(msg.vtime) + c_in;
+        }
+        Ok(())
+    }
+
+    /// Owned-buffer receive: like [`recv`](Self::recv) but hands back the
+    /// transport's buffer instead of copying into a caller slice — the
+    /// hot-path variant used by the scan algorithms (their only use of
+    /// the received vector is as the read-only `input` of `reduce_local`,
+    /// so no copy is ever needed). `expect` is the element count.
+    pub fn recv_owned(&mut self, round: u32, from: usize, expect: usize) -> Result<Box<[T]>> {
+        let msg = self.take(from, round)?;
+        if msg.data.len() != expect {
+            bail!(
+                "rank {}: recv size mismatch from {} round {}: got {} want {}",
+                self.rank,
+                from,
+                round,
+                msg.data.len(),
+                expect
+            );
+        }
+        self.record(round, EventKind::Recv { from, bytes: Self::bytes(expect) });
+        if let ClockMode::Virtual(model) = &self.mode {
+            let c_in = model.round_cost(from, self.rank, Self::bytes(expect));
+            self.vclock = self.vclock.max(msg.vtime) + c_in;
+        }
+        Ok(msg.data)
+    }
+
+    /// Owned-buffer simultaneous send-receive (see [`recv_owned`](Self::recv_owned)).
+    pub fn sendrecv_owned(
+        &mut self,
+        round: u32,
+        to: usize,
+        sbuf: &[T],
+        from: usize,
+        expect: usize,
+    ) -> Result<Box<[T]>> {
+        self.post(to, round, sbuf)?;
+        self.record(round, EventKind::Send { to, bytes: Self::bytes(sbuf.len()) });
+        let msg = self.take(from, round)?;
+        if msg.data.len() != expect {
+            bail!(
+                "rank {}: sendrecv size mismatch from {} round {}: got {} want {}",
+                self.rank,
+                from,
+                round,
+                msg.data.len(),
+                expect
+            );
+        }
+        self.record(round, EventKind::Recv { from, bytes: Self::bytes(expect) });
+        if let ClockMode::Virtual(model) = &self.mode {
+            let c_out = model.round_cost(self.rank, to, Self::bytes(sbuf.len()));
+            let c_in = model.round_cost(from, self.rank, Self::bytes(expect));
+            self.vclock = self.vclock.max(msg.vtime) + c_out.max(c_in);
+        }
+        Ok(msg.data)
+    }
+
+    /// Simultaneous send-receive — the paper's `Send(·,t) ∥ Recv(·,f)`:
+    /// both transfers share one communication round; in the virtual clock
+    /// the round costs `max(c_out, c_in)` on top of the later of the two
+    /// ranks' start times.
+    pub fn sendrecv(
+        &mut self,
+        round: u32,
+        to: usize,
+        sbuf: &[T],
+        from: usize,
+        rbuf: &mut [T],
+    ) -> Result<()> {
+        self.post(to, round, sbuf)?;
+        self.record(round, EventKind::Send { to, bytes: Self::bytes(sbuf.len()) });
+        let msg = self.take(from, round)?;
+        if msg.data.len() != rbuf.len() {
+            bail!(
+                "rank {}: sendrecv size mismatch from {} round {}: got {} want {}",
+                self.rank,
+                from,
+                round,
+                msg.data.len(),
+                rbuf.len()
+            );
+        }
+        rbuf.copy_from_slice(&msg.data);
+        self.record(round, EventKind::Recv { from, bytes: Self::bytes(rbuf.len()) });
+        if let ClockMode::Virtual(model) = &self.mode {
+            let c_out = model.round_cost(self.rank, to, Self::bytes(sbuf.len()));
+            let c_in = model.round_cost(from, self.rank, Self::bytes(rbuf.len()));
+            self.vclock = self.vclock.max(msg.vtime) + c_out.max(c_in);
+        }
+        Ok(())
+    }
+
+    /// `MPI_Reduce_local`: `inout = input ⊕ inout`, attributed to `round`.
+    /// Advances the virtual clock by `γ·bytes` and bumps the op counters.
+    pub fn reduce_local(&mut self, round: u32, op: &OpRef<T>, input: &[T], inout: &mut [T]) {
+        op.reduce_local(input, inout);
+        self.record(round, EventKind::Reduce { bytes: Self::bytes(input.len()) });
+        if let ClockMode::Virtual(model) = &self.mode {
+            self.vclock += model.reduce_cost(Self::bytes(input.len()));
+        }
+    }
+
+    /// Barrier over all ranks. In virtual mode this also synchronizes the
+    /// logical clocks to the global maximum, exactly as a real barrier
+    /// aligns wall time. Every rank must call it the same number of times.
+    pub fn barrier(&mut self) {
+        match &self.mode {
+            ClockMode::Real => self.barrier.wait(),
+            ClockMode::Virtual(_) => {
+                self.barrier_gen += 1;
+                self.vclock = self.barrier.wait_max(self.barrier_gen, self.vclock);
+            }
+        }
+    }
+
+    /// True when running under the virtual (simulated-cluster) clock.
+    pub fn is_virtual(&self) -> bool {
+        matches!(self.mode, ClockMode::Virtual(_))
+    }
+}

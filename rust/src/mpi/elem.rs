@@ -1,0 +1,183 @@
+//! Element types ("datatypes" in MPI terms) that scan vectors are made of.
+//!
+//! The paper benchmarks `MPI_LONG` (here [`i64`]); the library is generic
+//! over any [`Elem`], including the composite [`Rec2`] element used by the
+//! linear-recurrence examples (an "expensive ⊕" whose operator is
+//! non-commutative — a good stress test for algorithm order-correctness).
+
+
+/// Tag identifying an element type across the Rust/Python boundary (the AOT
+/// artifact manifest uses the same names).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    I64,
+    U64,
+    F32,
+    F64,
+    /// 2x2 affine recurrence element over f32: (A: 2x2 matrix, b: 2-vector).
+    Rec2F32,
+    /// Composed/lifted element types (e.g. segmented-scan pairs) that have
+    /// no kernel artifact counterpart.
+    Composite,
+}
+
+impl Dtype {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dtype::I64 => "i64",
+            Dtype::U64 => "u64",
+            Dtype::F32 => "f32",
+            Dtype::F64 => "f64",
+            Dtype::Rec2F32 => "rec2_f32",
+            Dtype::Composite => "composite",
+        }
+    }
+}
+
+/// An element of a scan vector. `Copy + Send + 'static` so vectors can move
+/// between rank threads; `size_bytes` feeds the β/γ cost terms.
+pub trait Elem: Copy + Clone + Send + Sync + std::fmt::Debug + PartialEq + 'static {
+    const DTYPE: Dtype;
+
+    /// Identity-ish default used to size receive buffers (NOT assumed to be
+    /// an identity of any operator — the algorithms never rely on one;
+    /// exclusive prefix 0 is left as the caller-provided initial value, per
+    /// MPI_Exscan semantics where output on rank 0 is undefined).
+    fn filler() -> Self;
+
+    /// Size in bytes, for the cost model (`size_of::<Self>()` for all impls).
+    fn size_bytes() -> usize {
+        std::mem::size_of::<Self>()
+    }
+}
+
+impl Elem for i64 {
+    const DTYPE: Dtype = Dtype::I64;
+    fn filler() -> Self {
+        0
+    }
+}
+
+impl Elem for u64 {
+    const DTYPE: Dtype = Dtype::U64;
+    fn filler() -> Self {
+        0
+    }
+}
+
+impl Elem for f32 {
+    const DTYPE: Dtype = Dtype::F32;
+    fn filler() -> Self {
+        0.0
+    }
+}
+
+impl Elem for f64 {
+    const DTYPE: Dtype = Dtype::F64;
+    fn filler() -> Self {
+        0.0
+    }
+}
+
+/// Element of the 2x2 affine linear recurrence `x_i = A_i x_{i-1} + b_i`.
+///
+/// The scan operator composes affine maps: applying `e1` then `e2` gives
+/// `(A2·A1, A2·b1 + b2)`. This operator is associative but NOT commutative,
+/// and is deliberately "expensive" (22 flops/element) — the regime where the
+/// paper's ⊕-application counts matter most.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rec2 {
+    /// Row-major 2x2 matrix A.
+    pub a: [f32; 4],
+    /// Offset vector b.
+    pub b: [f32; 2],
+}
+
+impl Rec2 {
+    pub fn identity() -> Self {
+        Rec2 { a: [1.0, 0.0, 0.0, 1.0], b: [0.0, 0.0] }
+    }
+
+    pub fn new(a: [f32; 4], b: [f32; 2]) -> Self {
+        Rec2 { a, b }
+    }
+
+    /// Compose: `self` applied first, then `later` (i.e. `later ∘ self`).
+    pub fn then(&self, later: &Rec2) -> Rec2 {
+        let (m, n) = (&later.a, &self.a);
+        Rec2 {
+            a: [
+                m[0] * n[0] + m[1] * n[2],
+                m[0] * n[1] + m[1] * n[3],
+                m[2] * n[0] + m[3] * n[2],
+                m[2] * n[1] + m[3] * n[3],
+            ],
+            b: [
+                m[0] * self.b[0] + m[1] * self.b[1] + later.b[0],
+                m[2] * self.b[0] + m[3] * self.b[1] + later.b[1],
+            ],
+        }
+    }
+
+    /// Apply the affine map to a state vector.
+    pub fn apply(&self, x: [f32; 2]) -> [f32; 2] {
+        [
+            self.a[0] * x[0] + self.a[1] * x[1] + self.b[0],
+            self.a[2] * x[0] + self.a[3] * x[1] + self.b[1],
+        ]
+    }
+}
+
+impl Elem for Rec2 {
+    const DTYPE: Dtype = Dtype::Rec2F32;
+    fn filler() -> Self {
+        Rec2::identity()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(i64::size_bytes(), 8);
+        assert_eq!(f32::size_bytes(), 4);
+        assert_eq!(Rec2::size_bytes(), 24);
+    }
+
+    #[test]
+    fn rec2_identity_neutral() {
+        let e = Rec2::new([1.0, 2.0, 3.0, 4.0], [5.0, 6.0]);
+        let id = Rec2::identity();
+        assert_eq!(id.then(&e), e);
+        assert_eq!(e.then(&id), e);
+    }
+
+    #[test]
+    fn rec2_associative_not_commutative() {
+        let x = Rec2::new([1.0, 2.0, 0.0, 1.0], [1.0, 0.0]);
+        let y = Rec2::new([0.5, 0.0, 1.0, 1.0], [0.0, 2.0]);
+        let z = Rec2::new([2.0, 1.0, 1.0, 0.0], [3.0, -1.0]);
+        let ab_c = x.then(&y).then(&z);
+        let a_bc = x.then(&y.then(&z));
+        for i in 0..4 {
+            assert!((ab_c.a[i] - a_bc.a[i]).abs() < 1e-5);
+        }
+        for i in 0..2 {
+            assert!((ab_c.b[i] - a_bc.b[i]).abs() < 1e-5);
+        }
+        assert_ne!(x.then(&y), y.then(&x));
+    }
+
+    #[test]
+    fn rec2_apply_matches_composition() {
+        let e1 = Rec2::new([2.0, 0.0, 0.0, 2.0], [1.0, 1.0]);
+        let e2 = Rec2::new([1.0, 1.0, 0.0, 1.0], [0.0, 3.0]);
+        let x0 = [1.0, -1.0];
+        let step = e2.apply(e1.apply(x0));
+        let composed = e1.then(&e2).apply(x0);
+        assert!((step[0] - composed[0]).abs() < 1e-6);
+        assert!((step[1] - composed[1]).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,24 @@
+//! The message-passing substrate: an MPI-flavoured, typed, thread-backed
+//! communication layer with two interchangeable clock modes.
+//!
+//! * [`elem`] — element types (`MPI_Datatype` analogue), incl. [`Rec2`].
+//! * [`op`] — associative operators (`MPI_Op` + `MPI_Reduce_local`).
+//! * [`ctx`] — the per-rank API: `send`/`recv`/`sendrecv`/`reduce_local`.
+//! * [`world`] — topology, world spawning, the [`run_scan`] entry point.
+//!
+//! Real MPI is deliberately *not* a dependency: the paper's claims are
+//! about round structure and ⊕ counts, which this substrate reproduces
+//! with exact one-ported semantics, while the virtual clock scales the
+//! evaluation to the paper's 36×32 cluster on a laptop.
+
+pub mod ctx;
+pub mod elem;
+pub mod msg;
+pub mod op;
+pub mod vbarrier;
+pub mod world;
+
+pub use ctx::{ClockMode, RankCtx};
+pub use elem::{Dtype, Elem, Rec2};
+pub use op::{ops, CombineOp, FnOp, OpRef};
+pub use world::{run_scan, run_world, RunResult, Topology, WorldConfig};

@@ -1,0 +1,14 @@
+//! In-flight message envelope used by both transports.
+
+/// A typed point-to-point message. `tag` is the communication-round index
+/// of the sending algorithm — matching on it enforces the round structure
+/// (a message sent in round k can only satisfy a round-k receive).
+#[derive(Debug)]
+pub(crate) struct Msg<T> {
+    pub src: usize,
+    pub tag: u64,
+    pub data: Box<[T]>,
+    /// Sender's virtual clock at the instant of sending (virtual mode;
+    /// 0.0 in real mode).
+    pub vtime: f64,
+}

@@ -1,0 +1,250 @@
+//! Binary associative operators (`MPI_Op` equivalents) and `reduce_local`.
+//!
+//! The central contract mirrors `MPI_Reduce_local(inbuf, inoutbuf)`:
+//! `inout[i] = in[i] ⊕ inout[i]`, where `in` holds the *earlier-ranked*
+//! partial result. Order matters for non-commutative operators, and all
+//! algorithms in [`crate::coll`] are written to respect it.
+//!
+//! Operators come in three flavours:
+//! * native Rust closures over typed slices (the fast path),
+//! * the [`Rec2`](crate::mpi::Rec2) affine-composition operator, and
+//! * PJRT-backed operators ([`crate::runtime::PjrtOp`]) that execute the
+//!   AOT-compiled Pallas `reduce_local` kernel — the Layer-1 hot spot.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::elem::{Elem, Rec2};
+
+/// A binary, associative element-wise operator over vectors of `T`.
+pub trait CombineOp<T: Elem>: Send + Sync {
+    /// Operator name (used in benchmark tables and artifact lookup).
+    fn name(&self) -> &str;
+
+    /// `inout[i] = input[i] ⊕ inout[i]` — `input` is the earlier operand.
+    fn combine(&self, input: &[T], inout: &mut [T]);
+
+    /// Whether the operator commutes (MPI predefined ops do; user-defined
+    /// ops may not). Algorithms never exploit commutativity here, but the
+    /// mpich-baseline bookkeeping branches on it, as the real library does.
+    fn commutative(&self) -> bool {
+        true
+    }
+}
+
+/// Shared handle to an operator plus an application counter used by the
+/// round/op-count experiments (Theorem 1 verification).
+pub struct OpRef<T: Elem> {
+    op: Arc<dyn CombineOp<T>>,
+    applications: AtomicU64,
+}
+
+impl<T: Elem> OpRef<T> {
+    pub fn new(op: Arc<dyn CombineOp<T>>) -> Self {
+        OpRef { op, applications: AtomicU64::new(0) }
+    }
+
+    pub fn name(&self) -> String {
+        self.op.name().to_string()
+    }
+
+    pub fn commutative(&self) -> bool {
+        self.op.commutative()
+    }
+
+    /// Apply `inout = input ⊕ inout`, bumping the global application count.
+    pub fn reduce_local(&self, input: &[T], inout: &mut [T]) {
+        debug_assert_eq!(input.len(), inout.len());
+        self.applications.fetch_add(1, Ordering::Relaxed);
+        self.op.combine(input, inout);
+    }
+
+    /// Total ⊕ applications across all ranks since construction/reset.
+    pub fn applications(&self) -> u64 {
+        self.applications.load(Ordering::Relaxed)
+    }
+
+    pub fn reset_applications(&self) {
+        self.applications.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A native operator defined by a per-element closure.
+pub struct FnOp<T: Elem, F: Fn(T, T) -> T + Send + Sync> {
+    name: &'static str,
+    commutative: bool,
+    f: F,
+    _t: std::marker::PhantomData<T>,
+}
+
+impl<T: Elem, F: Fn(T, T) -> T + Send + Sync> CombineOp<T> for FnOp<T, F> {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn combine(&self, input: &[T], inout: &mut [T]) {
+        for (o, &i) in inout.iter_mut().zip(input) {
+            *o = (self.f)(i, *o);
+        }
+    }
+
+    fn commutative(&self) -> bool {
+        self.commutative
+    }
+}
+
+/// Constructors for the predefined operators.
+pub mod ops {
+    use super::*;
+
+    fn mk<T: Elem, F: Fn(T, T) -> T + Send + Sync + 'static>(
+        name: &'static str,
+        commutative: bool,
+        f: F,
+    ) -> OpRef<T> {
+        OpRef::new(Arc::new(FnOp { name, commutative, f, _t: std::marker::PhantomData }))
+    }
+
+    /// `MPI_BXOR` over i64 — the operator the paper benchmarks.
+    pub fn bxor() -> OpRef<i64> {
+        mk("bxor_i64", true, |a: i64, b: i64| a ^ b)
+    }
+
+    /// `MPI_BOR` over i64.
+    pub fn bor() -> OpRef<i64> {
+        mk("bor_i64", true, |a: i64, b: i64| a | b)
+    }
+
+    /// `MPI_SUM` over i64 (wrapping, as C longs would overflow silently).
+    pub fn sum_i64() -> OpRef<i64> {
+        mk("sum_i64", true, |a: i64, b: i64| a.wrapping_add(b))
+    }
+
+    /// `MPI_SUM` over u64 (wrapping — exactly associative & commutative,
+    /// ideal for property tests).
+    pub fn sum_u64() -> OpRef<u64> {
+        mk("sum_u64", true, |a: u64, b: u64| a.wrapping_add(b))
+    }
+
+    /// `MPI_SUM` over f64. NOTE: float addition is not exactly associative;
+    /// tests using it must compare with tolerance.
+    pub fn sum_f64() -> OpRef<f64> {
+        mk("sum_f64", true, |a: f64, b: f64| a + b)
+    }
+
+    /// `MPI_MAX` over i64.
+    pub fn max_i64() -> OpRef<i64> {
+        mk("max_i64", true, |a: i64, b: i64| a.max(b))
+    }
+
+    /// `MPI_MIN` over i64.
+    pub fn min_i64() -> OpRef<i64> {
+        mk("min_i64", true, |a: i64, b: i64| a.min(b))
+    }
+
+    /// Affine-map composition over [`Rec2`]: the input (earlier) map is
+    /// applied first. Non-commutative.
+    pub fn rec2_compose() -> OpRef<Rec2> {
+        mk("matrec_f32", false, |earlier: Rec2, later: Rec2| earlier.then(&later))
+    }
+
+    /// A deliberately slow operator for the op-cost ablation: BXOR plus a
+    /// tunable amount of busy work per element, emulating an expensive
+    /// user-defined MPI operator.
+    pub fn expensive_bxor(work_iters: u32) -> OpRef<i64> {
+        OpRef::new(Arc::new(ExpensiveBxor { work_iters }))
+    }
+
+    struct ExpensiveBxor {
+        work_iters: u32,
+    }
+
+    impl CombineOp<i64> for ExpensiveBxor {
+        fn name(&self) -> &str {
+            "expensive_bxor_i64"
+        }
+
+        fn combine(&self, input: &[i64], inout: &mut [i64]) {
+            for (o, &i) in inout.iter_mut().zip(input) {
+                let exact = i ^ *o;
+                // Data-dependent busy loop the optimizer cannot remove.
+                let mut x = exact;
+                for k in 0..self.work_iters {
+                    x = x.wrapping_mul(0x9E3779B97F4A7C15u64 as i64).rotate_left((k % 63) + 1);
+                }
+                // Fold the busy result in as a provable no-op so the loop
+                // stays live but the semantics remain exactly BXOR.
+                *o = exact ^ (std::hint::black_box(x) & 0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::ops;
+    use super::*;
+
+    #[test]
+    fn reduce_local_order() {
+        // combine(in, inout): inout = in ⊕ inout, with `in` earlier.
+        let op = ops::rec2_compose();
+        let earlier = Rec2::new([2.0, 0.0, 0.0, 2.0], [1.0, 1.0]);
+        let later = Rec2::new([1.0, 1.0, 0.0, 1.0], [0.0, 3.0]);
+        let mut inout = [later];
+        op.reduce_local(&[earlier], &mut inout);
+        assert_eq!(inout[0], earlier.then(&later));
+    }
+
+    #[test]
+    fn application_counter() {
+        let op = ops::bxor();
+        let mut buf = vec![0i64; 4];
+        op.reduce_local(&[1, 2, 3, 4], &mut buf);
+        op.reduce_local(&[1, 2, 3, 4], &mut buf);
+        assert_eq!(op.applications(), 2);
+        assert_eq!(buf, vec![0, 0, 0, 0]);
+        op.reset_applications();
+        assert_eq!(op.applications(), 0);
+    }
+
+    #[test]
+    fn bxor_semantics() {
+        let op = ops::bxor();
+        let mut b = vec![0b1010i64, -1];
+        op.reduce_local(&[0b0110, 0], &mut b);
+        assert_eq!(b, vec![0b1100, -1]);
+    }
+
+    #[test]
+    fn expensive_bxor_exact() {
+        let slow = ops::expensive_bxor(64);
+        let fast = ops::bxor();
+        let input: Vec<i64> = (0..33).map(|i| i * 7 - 11).collect();
+        let mut a: Vec<i64> = (0..33).map(|i| i ^ 0x5a).collect();
+        let mut b = a.clone();
+        slow.reduce_local(&input, &mut a);
+        fast.reduce_local(&input, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sum_wrapping() {
+        let op = ops::sum_i64();
+        let mut b = vec![i64::MAX];
+        op.reduce_local(&[1], &mut b);
+        assert_eq!(b, vec![i64::MIN]);
+    }
+
+    #[test]
+    fn minmax() {
+        let mx = ops::max_i64();
+        let mn = ops::min_i64();
+        let mut b = vec![3i64, -5];
+        mx.reduce_local(&[1, 7], &mut b);
+        assert_eq!(b, vec![3, 7]);
+        let mut b = vec![3i64, -5];
+        mn.reduce_local(&[1, 7], &mut b);
+        assert_eq!(b, vec![1, -5]);
+    }
+}

@@ -1,0 +1,99 @@
+//! A barrier that also synchronizes virtual clocks.
+//!
+//! In virtual-clock mode a barrier must make every rank resume at the
+//! maximum clock over all ranks (that is what a real barrier does to wall
+//! time). Implemented as a generation-stamped max-reduction slot around a
+//! `std::sync::Barrier`: the first writer of each generation resets the
+//! slot, so the barrier is reusable with no extra phase.
+
+use std::sync::{Barrier, Mutex};
+
+pub struct VBarrier {
+    barrier: Barrier,
+    slot: Mutex<(u64, f64)>, // (generation, max vclock)
+}
+
+impl VBarrier {
+    pub fn new(n: usize) -> Self {
+        VBarrier { barrier: Barrier::new(n), slot: Mutex::new((0, f64::NEG_INFINITY)) }
+    }
+
+    /// Plain rendezvous (real-clock mode).
+    pub fn wait(&self) {
+        self.barrier.wait();
+    }
+
+    /// Rendezvous and clock-sync: returns `max(vclock)` over all ranks.
+    /// Every rank must pass a monotonically increasing `generation`
+    /// starting at 1 and call this the same number of times.
+    pub fn wait_max(&self, generation: u64, vclock: f64) -> f64 {
+        {
+            let mut s = self.slot.lock().unwrap();
+            if s.0 != generation {
+                *s = (generation, vclock);
+            } else {
+                s.1 = s.1.max(vclock);
+            }
+        }
+        self.barrier.wait();
+        let out = {
+            let s = self.slot.lock().unwrap();
+            debug_assert_eq!(s.0, generation);
+            s.1
+        };
+        // Second rendezvous so no rank can start generation g+1's write
+        // before every rank has read generation g's max.
+        self.barrier.wait();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn max_is_global() {
+        let n = 8;
+        let b = Arc::new(VBarrier::new(n));
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                let b = Arc::clone(&b);
+                std::thread::spawn(move || {
+                    let m1 = b.wait_max(1, r as f64);
+                    let m2 = b.wait_max(2, 100.0 - r as f64);
+                    (m1, m2)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (m1, m2) = h.join().unwrap();
+            assert_eq!(m1, 7.0);
+            assert_eq!(m2, 100.0);
+        }
+    }
+
+    #[test]
+    fn reusable_many_generations() {
+        let n = 4;
+        let b = Arc::new(VBarrier::new(n));
+        let handles: Vec<_> = (0..n)
+            .map(|r| {
+                let b = Arc::clone(&b);
+                std::thread::spawn(move || {
+                    let mut clock = r as f64;
+                    for g in 1..=50u64 {
+                        clock = b.wait_max(g, clock) + 1.0;
+                    }
+                    clock
+                })
+            })
+            .collect();
+        let res: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // All clocks converge after the first sync: 3.0 then +1 per gen.
+        for c in res {
+            assert_eq!(c, 3.0 + 50.0);
+        }
+    }
+}

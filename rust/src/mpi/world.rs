@@ -1,0 +1,297 @@
+//! World construction: spawn p rank threads over a topology and run a
+//! per-rank program against [`RankCtx`].
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::ctx::{ClockMode, RankCtx};
+use super::elem::Elem;
+use super::msg::Msg;
+use super::op::OpRef;
+use super::vbarrier::VBarrier;
+use crate::coll::ScanAlgorithm;
+use crate::cost::{CostModel, CostParams};
+use crate::trace::{RankTrace, TraceReport};
+use crate::util::Channel;
+
+/// Physical layout of the simulated (or emulated) machine: `nodes` compute
+/// nodes with `ranks_per_node` ranks each, block placement (`node = rank /
+/// ranks_per_node`) — the MPI default the paper's cluster uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub nodes: usize,
+    pub ranks_per_node: usize,
+}
+
+impl Topology {
+    /// `nodes × ranks_per_node` cluster (e.g. `cluster(36, 32)` is the
+    /// paper's large configuration).
+    pub fn cluster(nodes: usize, ranks_per_node: usize) -> Self {
+        assert!(nodes >= 1 && ranks_per_node >= 1);
+        Topology { nodes, ranks_per_node }
+    }
+
+    /// Single-node world with `p` ranks (for host-local benchmarking).
+    pub fn flat(p: usize) -> Self {
+        Topology { nodes: 1, ranks_per_node: p }
+    }
+
+    pub fn size(&self) -> usize {
+        self.nodes * self.ranks_per_node
+    }
+}
+
+/// Configuration for one world: topology, clock mode, tracing.
+#[derive(Clone)]
+pub struct WorldConfig {
+    pub topology: Topology,
+    pub mode: ClockMode,
+    pub tracing: bool,
+    /// Stack size per rank thread. The algorithms heap-allocate their
+    /// buffers, so a small stack suffices even at p = 1152.
+    pub stack_size: usize,
+}
+
+impl WorldConfig {
+    /// Real-clock world over the given topology.
+    pub fn new(topology: Topology) -> Self {
+        WorldConfig { topology, mode: ClockMode::Real, tracing: false, stack_size: 512 * 1024 }
+    }
+
+    /// Switch to the simulated-cluster virtual clock with these parameters.
+    pub fn virtual_clock(mut self, params: CostParams) -> Self {
+        let model = CostModel::new(params, self.topology.ranks_per_node);
+        self.mode = ClockMode::Virtual(Arc::new(model));
+        self
+    }
+
+    /// Enable per-rank event tracing.
+    pub fn with_trace(mut self, tracing: bool) -> Self {
+        self.tracing = tracing;
+        self
+    }
+
+    pub fn size(&self) -> usize {
+        self.topology.size()
+    }
+}
+
+/// Output of [`run_scan`]: per-rank result vectors, per-rank times and
+/// (if tracing) the merged trace.
+#[derive(Debug)]
+pub struct RunResult<T> {
+    pub outputs: Vec<Vec<T>>,
+    /// Per-rank completion time in µs: virtual clock (virtual mode) or
+    /// wall time between the pre-barrier and local completion (real mode).
+    pub times_us: Vec<f64>,
+    pub trace: Option<TraceReport>,
+}
+
+impl<T> RunResult<T> {
+    /// The paper's per-run statistic: time of the slowest rank.
+    pub fn completion_us(&self) -> f64 {
+        self.times_us.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+/// Spawn `p` rank threads and run `f` on each; returns the per-rank results
+/// in rank order. The closure gets a fully wired [`RankCtx`].
+pub fn run_world<T, R, F>(cfg: &WorldConfig, f: F) -> Result<Vec<R>>
+where
+    T: Elem,
+    R: Send + 'static,
+    F: Fn(&mut RankCtx<T>) -> Result<R> + Send + Sync,
+{
+    let p = cfg.size();
+    assert!(p >= 1);
+    let mailboxes: Arc<Vec<Channel<Msg<T>>>> =
+        Arc::new((0..p).map(|_| Channel::new()).collect());
+    let barrier = Arc::new(VBarrier::new(p));
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(p);
+        let fref = &f;
+        for rank in 0..p {
+            let mailboxes = Arc::clone(&mailboxes);
+            let barrier = Arc::clone(&barrier);
+            let mode = cfg.mode.clone();
+            let tracing = cfg.tracing;
+            let builder = std::thread::Builder::new()
+                .name(format!("rank-{rank}"))
+                .stack_size(cfg.stack_size);
+            let handle = builder
+                .spawn_scoped(scope, move || {
+                    let mut ctx = RankCtx::new(rank, p, mailboxes, barrier, mode, tracing);
+                    fref(&mut ctx)
+                })
+                .expect("failed to spawn rank thread");
+            handles.push(handle);
+        }
+        let mut out = Vec::with_capacity(p);
+        let mut first_err = None;
+        for h in handles {
+            match h.join() {
+                Ok(Ok(r)) => out.push(Some(r)),
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                    out.push(None);
+                }
+                Err(panic) => {
+                    let msg = panic
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| panic.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "rank thread panicked".into());
+                    first_err.get_or_insert(anyhow::anyhow!("rank panicked: {msg}"));
+                    out.push(None);
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out.into_iter().map(|r| r.unwrap()).collect()),
+        }
+    })
+}
+
+/// Run one scan collective over per-rank `inputs` and collect outputs,
+/// per-rank times and the optional trace. This is the one-shot convenience
+/// wrapper; the benchmark harness drives repetitions through [`run_world`]
+/// directly so threads are spawned only once.
+pub fn run_scan<T: Elem>(
+    cfg: &WorldConfig,
+    algo: &dyn ScanAlgorithm<T>,
+    op: &OpRef<T>,
+    inputs: &[Vec<T>],
+) -> Result<RunResult<T>> {
+    let p = cfg.size();
+    assert_eq!(inputs.len(), p, "need one input vector per rank");
+    let m = inputs.first().map(|v| v.len()).unwrap_or(0);
+    assert!(inputs.iter().all(|v| v.len() == m), "all ranks must contribute m elements");
+
+    let overhead = match &cfg.mode {
+        ClockMode::Virtual(model) => model.params.overhead,
+        ClockMode::Real => 0.0,
+    };
+
+    let per_rank = run_world::<T, (Vec<T>, f64, Option<RankTrace>), _>(cfg, |ctx| {
+        // Borrow, don't clone: inputs outlive the scoped rank threads.
+        let input = &inputs[ctx.rank()];
+        let mut output = vec![T::filler(); m];
+        ctx.barrier();
+        let start = std::time::Instant::now();
+        algo.run(ctx, input, &mut output, op)?;
+        let elapsed_us = start.elapsed().as_secs_f64() * 1e6;
+        let time = if ctx.is_virtual() { ctx.vclock() + overhead } else { elapsed_us };
+        Ok((output, time, ctx.take_trace()))
+    })?;
+
+    let mut outputs = Vec::with_capacity(p);
+    let mut times = Vec::with_capacity(p);
+    let mut traces = Vec::with_capacity(p);
+    for (o, t, tr) in per_rank {
+        outputs.push(o);
+        times.push(t);
+        if let Some(tr) = tr {
+            traces.push(tr);
+        }
+    }
+    let trace = (!traces.is_empty()).then(|| TraceReport::new(traces));
+    Ok(RunResult { outputs, times_us: times, trace })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::ops;
+
+    #[test]
+    fn topology_sizes() {
+        assert_eq!(Topology::cluster(36, 32).size(), 1152);
+        assert_eq!(Topology::flat(7).size(), 7);
+    }
+
+    #[test]
+    fn run_world_collects_in_rank_order() {
+        let cfg = WorldConfig::new(Topology::flat(9));
+        let out = run_world::<i64, usize, _>(&cfg, |ctx| Ok(ctx.rank() * 10)).unwrap();
+        assert_eq!(out, (0..9).map(|r| r * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ring_exchange_all_ranks() {
+        // Each rank sends its rank to the right neighbour, receives from
+        // the left: classic ring, exercises sendrecv + matching.
+        let cfg = WorldConfig::new(Topology::flat(16));
+        let out = run_world::<i64, i64, _>(&cfg, |ctx| {
+            let p = ctx.size();
+            let r = ctx.rank();
+            let sbuf = [r as i64];
+            let mut rbuf = [0i64];
+            ctx.sendrecv(0, (r + 1) % p, &sbuf, (r + p - 1) % p, &mut rbuf)?;
+            Ok(rbuf[0])
+        })
+        .unwrap();
+        assert_eq!(out, (0..16).map(|r| ((r + 16 - 1) % 16) as i64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn error_propagates() {
+        let cfg = WorldConfig::new(Topology::flat(4));
+        let res = run_world::<i64, (), _>(&cfg, |ctx| {
+            if ctx.rank() == 2 {
+                anyhow::bail!("boom");
+            }
+            Ok(())
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn out_of_range_send_errors() {
+        let cfg = WorldConfig::new(Topology::flat(2));
+        let res = run_world::<i64, (), _>(&cfg, |ctx| {
+            if ctx.rank() == 0 {
+                ctx.send(0, 5, &[1i64])?;
+            }
+            Ok(())
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn virtual_clock_ring() {
+        // p=4, one round of ring sendrecv, flat inter-node α=2, β=0:
+        // every rank's clock ends at exactly 2.
+        let params = CostParams {
+            alpha_intra: 1.0,
+            alpha_inter: 2.0,
+            beta_intra: 0.0,
+            beta_inter: 0.0,
+            gamma: 0.0,
+            overhead: 0.0,
+        };
+        let cfg = WorldConfig::new(Topology::cluster(4, 1)).virtual_clock(params);
+        let clocks = run_world::<i64, f64, _>(&cfg, |ctx| {
+            let p = ctx.size();
+            let r = ctx.rank();
+            let sbuf = [0i64];
+            let mut rbuf = [0i64];
+            ctx.sendrecv(0, (r + 1) % p, &sbuf, (r + p - 1) % p, &mut rbuf)?;
+            Ok(ctx.vclock())
+        })
+        .unwrap();
+        assert_eq!(clocks, vec![2.0; 4]);
+    }
+
+    #[test]
+    fn run_scan_shape_checks() {
+        use crate::coll::Exscan123;
+        let cfg = WorldConfig::new(Topology::flat(4));
+        let inputs: Vec<Vec<i64>> = (0..4).map(|r| vec![r as i64; 3]).collect();
+        let res = run_scan(&cfg, &Exscan123, &ops::bxor(), &inputs).unwrap();
+        assert_eq!(res.outputs.len(), 4);
+        assert_eq!(res.outputs[1], vec![0, 0, 0]); // V_0 = zeros ^ ... well r=1: V_0 = [0,0,0]
+    }
+}

@@ -1,0 +1,173 @@
+//! Artifact manifest: what `make artifacts` produced and how to use it.
+//!
+//! The manifest is a simple line-based TSV file (`manifest.tsv`) written by
+//! `python/compile/aot.py` — this offline build carries no JSON dependency,
+//! and a fixed-column format keeps both producers honest:
+//!
+//! ```text
+//! exscan-artifacts v1 jax=<version>
+//! <name>\t<kind>\t<op>\t<dtype>\t<m>\t<k>\t<file>
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One AOT-compiled kernel artifact (an HLO-text file).
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    /// Unique name, e.g. `reduce_bxor_i64_m4096`.
+    pub name: String,
+    /// Kernel kind: `reduce` (element-wise ⊕) or `block_exscan`.
+    pub kind: String,
+    /// Operator name matching [`crate::mpi::CombineOp::name`]
+    /// (`bxor_i64`, `sum_f32`, `matrec_f32`, …).
+    pub op: String,
+    /// Element dtype as named by `Dtype::name`.
+    pub dtype: String,
+    /// Padded element count the kernel was compiled for.
+    pub m: usize,
+    /// Extra leading dimension for `block_exscan` kernels (ranks per
+    /// block); 0 for plain reduce kernels.
+    pub k: usize,
+    /// File name within the artifacts directory.
+    pub file: String,
+}
+
+/// The manifest written by `python/compile/aot.py`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub jax_version: String,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Parse the manifest text format.
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let mut lines = text.lines();
+        let header = lines.next().unwrap_or("");
+        let mut parts = header.split_whitespace();
+        if parts.next() != Some("exscan-artifacts") || parts.next() != Some("v1") {
+            bail!("bad manifest header: {header:?}");
+        }
+        let jax_version = parts
+            .next()
+            .and_then(|s| s.strip_prefix("jax="))
+            .unwrap_or("")
+            .to_string();
+        let mut artifacts = Vec::new();
+        for (i, line) in lines.enumerate() {
+            if line.trim().is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 7 {
+                bail!("manifest line {} has {} columns, want 7: {line:?}", i + 2, cols.len());
+            }
+            artifacts.push(ArtifactEntry {
+                name: cols[0].to_string(),
+                kind: cols[1].to_string(),
+                op: cols[2].to_string(),
+                dtype: cols[3].to_string(),
+                m: cols[4].parse().with_context(|| format!("bad m on line {}", i + 2))?,
+                k: cols[5].parse().with_context(|| format!("bad k on line {}", i + 2))?,
+                file: cols[6].to_string(),
+            });
+        }
+        Ok(Manifest { jax_version, artifacts, dir })
+    }
+
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, dir.to_path_buf())
+    }
+
+    /// Default artifacts directory: `$EXSCAN_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("EXSCAN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// True when a manifest exists in the default directory.
+    pub fn default_available() -> bool {
+        Self::default_dir().join("manifest.tsv").exists()
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+
+    /// Smallest `reduce` artifact for `op` that fits `m` elements.
+    pub fn find_reduce(&self, op: &str, m: usize) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .filter(|e| e.kind == "reduce" && e.op == op && e.m >= m)
+            .min_by_key(|e| e.m)
+    }
+
+    /// The block-exscan artifact for `op` with `k` rows fitting `m`.
+    pub fn find_block_exscan(&self, op: &str, k: usize, m: usize) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .filter(|e| e.kind == "block_exscan" && e.op == op && e.k == k && e.m >= m)
+            .min_by_key(|e| e.m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "exscan-artifacts v1 jax=0.8.2\n\
+        reduce_bxor_i64_m256\treduce\tbxor_i64\ti64\t256\t0\treduce_bxor_i64_m256.hlo.txt\n\
+        reduce_bxor_i64_m4096\treduce\tbxor_i64\ti64\t4096\t0\treduce_bxor_i64_m4096.hlo.txt\n\
+        reduce_sum_f32_m256\treduce\tsum_f32\tf32\t256\t0\treduce_sum_f32_m256.hlo.txt\n\
+        block_exscan_bxor_i64_k32_m256\tblock_exscan\tbxor_i64\ti64\t256\t32\tblock.hlo.txt\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, "/tmp".into()).unwrap();
+        assert_eq!(m.jax_version, "0.8.2");
+        assert_eq!(m.artifacts.len(), 4);
+        assert_eq!(m.artifacts[1].m, 4096);
+    }
+
+    #[test]
+    fn find_reduce_smallest_fit() {
+        let m = Manifest::parse(SAMPLE, "/tmp".into()).unwrap();
+        assert_eq!(m.find_reduce("bxor_i64", 100).unwrap().m, 256);
+        assert_eq!(m.find_reduce("bxor_i64", 257).unwrap().m, 4096);
+        assert!(m.find_reduce("bxor_i64", 5000).is_none());
+        assert!(m.find_reduce("nope", 1).is_none());
+    }
+
+    #[test]
+    fn find_block_exscan_needs_matching_k() {
+        let m = Manifest::parse(SAMPLE, "/tmp".into()).unwrap();
+        assert!(m.find_block_exscan("bxor_i64", 32, 100).is_some());
+        assert!(m.find_block_exscan("bxor_i64", 16, 100).is_none());
+    }
+
+    #[test]
+    fn bad_header_rejected() {
+        assert!(Manifest::parse("nope v2\n", "/tmp".into()).is_err());
+    }
+
+    #[test]
+    fn bad_column_count_rejected() {
+        let text = "exscan-artifacts v1 jax=x\nonly\tthree\tcols\n";
+        assert!(Manifest::parse(text, "/tmp".into()).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(Manifest::load("/definitely/not/here").is_err());
+    }
+}

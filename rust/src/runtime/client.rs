@@ -1,0 +1,342 @@
+//! The PJRT executor: one dedicated thread owns the `PjRtClient` and the
+//! compiled executables; a request channel serializes kernel launches.
+//!
+//! Why a thread: the `xla` crate's handles wrap raw PJRT pointers that are
+//! not `Sync`, while our scan ranks run on many threads. A single executor
+//! matches the deployment model anyway — one accelerator queue shared by
+//! the node's ranks.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifact::Manifest;
+use crate::util::{Channel, OneShot};
+
+/// How long a caller waits for the executor before declaring it dead.
+const REPLY_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(120);
+
+/// Cumulative executor statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RuntimeStats {
+    pub launches: u64,
+    pub elements: u64,
+    pub compiles: u64,
+}
+
+enum Request {
+    ReduceI64 {
+        op: String,
+        a: Vec<i64>,
+        b: Vec<i64>,
+        reply: Arc<OneShot<Result<Vec<i64>>>>,
+    },
+    ReduceF32 {
+        op: String,
+        /// Row width (1 for scalar ops, 6 for `matrec_f32`).
+        width: usize,
+        a: Vec<f32>,
+        b: Vec<f32>,
+        reply: Arc<OneShot<Result<Vec<f32>>>>,
+    },
+    BlockExscanI64 {
+        op: String,
+        k: usize,
+        data: Vec<i64>,
+        reply: Arc<OneShot<Result<Vec<i64>>>>,
+    },
+    Stats {
+        reply: Arc<OneShot<RuntimeStats>>,
+    },
+}
+
+/// Cloneable, thread-safe handle to the executor.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: Arc<Channel<Request>>,
+}
+
+impl PjrtHandle {
+    /// `inout = input ⊕ inout` through the compiled `reduce` kernel.
+    /// (`input` is the earlier operand, matching `MPI_Reduce_local`.)
+    pub fn reduce_i64(&self, op: &str, input: &[i64], inout: &mut [i64]) -> Result<()> {
+        let reply = Arc::new(OneShot::new());
+        self.tx
+            .push(Request::ReduceI64 {
+                op: op.to_string(),
+                a: input.to_vec(),
+                b: inout.to_vec(),
+                reply: Arc::clone(&reply),
+            })
+            .map_err(|_| anyhow!("PJRT executor thread exited"))?;
+        let out = reply
+            .take_timeout(REPLY_TIMEOUT)
+            .ok_or_else(|| anyhow!("PJRT executor reply timeout"))??;
+        inout.copy_from_slice(&out[..inout.len()]);
+        Ok(())
+    }
+
+    /// f32 variant; `width` is the per-element row width (6 for Rec2).
+    pub fn reduce_f32(&self, op: &str, width: usize, input: &[f32], inout: &mut [f32]) -> Result<()> {
+        let reply = Arc::new(OneShot::new());
+        self.tx
+            .push(Request::ReduceF32 {
+                op: op.to_string(),
+                width,
+                a: input.to_vec(),
+                b: inout.to_vec(),
+                reply: Arc::clone(&reply),
+            })
+            .map_err(|_| anyhow!("PJRT executor thread exited"))?;
+        let out = reply
+            .take_timeout(REPLY_TIMEOUT)
+            .ok_or_else(|| anyhow!("PJRT executor reply timeout"))??;
+        inout.copy_from_slice(&out[..inout.len()]);
+        Ok(())
+    }
+
+    /// Exclusive scan across the k rows of a (k, m) block — the fused
+    /// Pallas kernel used by the hierarchical/node-leader path. `data` is
+    /// row-major k×m; returns k×m where row j = ⊕ of rows 0..j (row 0 is
+    /// returned as the operator's "empty" convention: all rows shifted,
+    /// see the kernel docs).
+    pub fn block_exscan_i64(&self, op: &str, k: usize, data: &[i64]) -> Result<Vec<i64>> {
+        let reply = Arc::new(OneShot::new());
+        self.tx
+            .push(Request::BlockExscanI64 {
+                op: op.to_string(),
+                k,
+                data: data.to_vec(),
+                reply: Arc::clone(&reply),
+            })
+            .map_err(|_| anyhow!("PJRT executor thread exited"))?;
+        reply
+            .take_timeout(REPLY_TIMEOUT)
+            .ok_or_else(|| anyhow!("PJRT executor reply timeout"))?
+    }
+
+    pub fn stats(&self) -> Result<RuntimeStats> {
+        let reply = Arc::new(OneShot::new());
+        self.tx
+            .push(Request::Stats { reply: Arc::clone(&reply) })
+            .map_err(|_| anyhow!("PJRT executor thread exited"))?;
+        reply
+            .take_timeout(REPLY_TIMEOUT)
+            .ok_or_else(|| anyhow!("PJRT executor reply timeout"))
+    }
+}
+
+/// The executor factory. Owns nothing after start: the worker thread keeps
+/// the client alive as long as any [`PjrtHandle`] exists.
+pub struct PjrtRuntime;
+
+impl PjrtRuntime {
+    /// Start an executor over the given artifacts directory.
+    pub fn start(dir: impl Into<PathBuf>) -> Result<PjrtHandle> {
+        let manifest = Manifest::load(dir.into())?;
+        let tx: Arc<Channel<Request>> = Arc::new(Channel::new());
+        let rx = Arc::clone(&tx);
+        let init: Arc<OneShot<Result<()>>> = Arc::new(OneShot::new());
+        let init_w = Arc::clone(&init);
+        std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || {
+                let mut worker = match Worker::new(manifest) {
+                    Ok(w) => {
+                        init_w.put(Ok(()));
+                        w
+                    }
+                    Err(e) => {
+                        init_w.put(Err(e));
+                        return;
+                    }
+                };
+                // The executor lives for the process: requests arrive from
+                // any rank at any time; an idle wait just re-polls.
+                loop {
+                    if let Some(req) = rx.pop_timeout(std::time::Duration::from_secs(3600)) {
+                        worker.handle(req);
+                    }
+                }
+            })
+            .expect("spawn pjrt-executor");
+        init.take_timeout(REPLY_TIMEOUT)
+            .ok_or_else(|| anyhow!("PJRT executor died during init"))??;
+        Ok(PjrtHandle { tx })
+    }
+
+    /// Start from the default artifacts directory; `None` if the artifacts
+    /// have not been built (lets tests skip gracefully).
+    pub fn try_default() -> Option<PjrtHandle> {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.tsv").exists() {
+            return None;
+        }
+        PjrtRuntime::start(dir).ok()
+    }
+}
+
+struct Worker {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    /// artifact name -> compiled executable.
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: RuntimeStats,
+}
+
+impl Worker {
+    fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Worker { manifest, client, cache: HashMap::new(), stats: RuntimeStats::default() })
+    }
+
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let entry = self
+                .manifest
+                .artifacts
+                .iter()
+                .find(|e| e.name == name)
+                .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?
+                .clone();
+            let path = self.manifest.path_of(&entry);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 artifact path"))?,
+            )
+            .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.stats.compiles += 1;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(self.cache.get(name).unwrap())
+    }
+
+    fn handle(&mut self, req: Request) {
+        match req {
+            Request::ReduceI64 { op, a, b, reply } => {
+                reply.put(self.reduce_i64(&op, a, b));
+            }
+            Request::ReduceF32 { op, width, a, b, reply } => {
+                reply.put(self.reduce_f32(&op, width, a, b));
+            }
+            Request::BlockExscanI64 { op, k, data, reply } => {
+                reply.put(self.block_exscan_i64(&op, k, data));
+            }
+            Request::Stats { reply } => {
+                reply.put(self.stats);
+            }
+        }
+    }
+
+    fn reduce_i64(&mut self, op: &str, mut a: Vec<i64>, mut b: Vec<i64>) -> Result<Vec<i64>> {
+        let n = a.len();
+        if b.len() != n {
+            bail!("reduce_i64: length mismatch {n} vs {}", b.len());
+        }
+        let entry = self
+            .manifest
+            .find_reduce(op, n)
+            .ok_or_else(|| anyhow!("no reduce artifact for op={op} m>={n}"))?
+            .clone();
+        // Element-wise kernels are row-independent: zero padding is safe.
+        a.resize(entry.m, 0);
+        b.resize(entry.m, 0);
+        let la = xla::Literal::vec1(&a);
+        let lb = xla::Literal::vec1(&b);
+        let exe = self.executable(&entry.name)?;
+        let out = exe
+            .execute::<xla::Literal>(&[la, lb])
+            .map_err(|e| anyhow!("executing {}: {e:?}", entry.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        let tuple = out.to_tuple1().map_err(|e| anyhow!("untupling: {e:?}"))?;
+        let mut v = tuple.to_vec::<i64>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        v.truncate(n);
+        self.stats.launches += 1;
+        self.stats.elements += n as u64;
+        Ok(v)
+    }
+
+    fn reduce_f32(&mut self, op: &str, width: usize, mut a: Vec<f32>, mut b: Vec<f32>) -> Result<Vec<f32>> {
+        let n = a.len();
+        if b.len() != n || width == 0 || n % width != 0 {
+            bail!("reduce_f32: bad shapes (n={n}, width={width})");
+        }
+        let rows = n / width;
+        let entry = self
+            .manifest
+            .find_reduce(op, rows)
+            .ok_or_else(|| anyhow!("no reduce artifact for op={op} rows>={rows}"))?
+            .clone();
+        a.resize(entry.m * width, 0.0);
+        b.resize(entry.m * width, 0.0);
+        let (la, lb) = if width == 1 {
+            (xla::Literal::vec1(&a), xla::Literal::vec1(&b))
+        } else {
+            (
+                xla::Literal::vec1(&a)
+                    .reshape(&[entry.m as i64, width as i64])
+                    .map_err(|e| anyhow!("reshape: {e:?}"))?,
+                xla::Literal::vec1(&b)
+                    .reshape(&[entry.m as i64, width as i64])
+                    .map_err(|e| anyhow!("reshape: {e:?}"))?,
+            )
+        };
+        let exe = self.executable(&entry.name)?;
+        let out = exe
+            .execute::<xla::Literal>(&[la, lb])
+            .map_err(|e| anyhow!("executing {}: {e:?}", entry.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        let tuple = out.to_tuple1().map_err(|e| anyhow!("untupling: {e:?}"))?;
+        let mut v = tuple.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        v.truncate(n);
+        self.stats.launches += 1;
+        self.stats.elements += rows as u64;
+        Ok(v)
+    }
+
+    fn block_exscan_i64(&mut self, op: &str, k: usize, data: Vec<i64>) -> Result<Vec<i64>> {
+        if k == 0 || data.len() % k != 0 {
+            bail!("block_exscan: data not divisible into k={k} rows");
+        }
+        let m = data.len() / k;
+        let entry = self
+            .manifest
+            .find_block_exscan(op, k, m)
+            .ok_or_else(|| anyhow!("no block_exscan artifact for op={op} k={k} m>={m}"))?
+            .clone();
+        // Pad each row to entry.m columns.
+        let mut padded = vec![0i64; k * entry.m];
+        for row in 0..k {
+            padded[row * entry.m..row * entry.m + m]
+                .copy_from_slice(&data[row * m..(row + 1) * m]);
+        }
+        let lit = xla::Literal::vec1(&padded)
+            .reshape(&[k as i64, entry.m as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let exe = self.executable(&entry.name)?;
+        let out = exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("executing {}: {e:?}", entry.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        let tuple = out.to_tuple1().map_err(|e| anyhow!("untupling: {e:?}"))?;
+        let v = tuple.to_vec::<i64>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        let mut result = vec![0i64; k * m];
+        for row in 0..k {
+            result[row * m..(row + 1) * m]
+                .copy_from_slice(&v[row * entry.m..row * entry.m + m]);
+        }
+        self.stats.launches += 1;
+        self.stats.elements += (k * m) as u64;
+        Ok(result)
+    }
+}

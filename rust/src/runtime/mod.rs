@@ -1,0 +1,21 @@
+//! The PJRT runtime bridge: loads AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` (Layer 1/2 Pallas + JAX kernels, lowered once at
+//! build time) and executes them from the Rust hot path. Python is never
+//! on the request path — the artifacts directory is the only interface.
+//!
+//! * [`artifact`] — the manifest format (`artifacts/manifest.json`) and
+//!   artifact discovery.
+//! * [`client`] — a dedicated executor thread owning the `PjRtClient` and
+//!   the compiled executables (the `xla` crate's handles are not `Sync`;
+//!   a single-consumer request channel serializes kernel launches, which
+//!   also models the single accelerator queue).
+//! * [`pjrt_op`] — [`CombineOp`](crate::mpi::CombineOp) adapters so a
+//!   compiled kernel can serve as the ⊕ operator of any scan algorithm.
+
+pub mod artifact;
+pub mod client;
+pub mod pjrt_op;
+
+pub use artifact::{ArtifactEntry, Manifest};
+pub use client::{PjrtHandle, PjrtRuntime};
+pub use pjrt_op::{pjrt_bxor_i64, pjrt_rec2_compose, pjrt_sum_f32, PjrtOp};

@@ -1,0 +1,108 @@
+//! [`CombineOp`] adapters over the PJRT executor: the AOT-compiled Pallas
+//! `reduce_local` kernels as first-class ⊕ operators for any scan
+//! algorithm. This is the "expensive, user-defined MPI operator" path the
+//! paper's ⊕-count analysis is about — every application is a real kernel
+//! launch, so an algorithm that does `2⌈log₂p⌉−1` of them instead of `q−1`
+//! pays measurably.
+
+use crate::mpi::{CombineOp, Rec2};
+
+use super::client::PjrtHandle;
+
+/// A compiled-kernel operator. `T`-specific constructors below.
+pub struct PjrtOp {
+    handle: PjrtHandle,
+    op: &'static str,
+    commutative: bool,
+}
+
+/// BXOR over i64 through the compiled kernel (the paper's benchmark op).
+pub fn pjrt_bxor_i64(handle: PjrtHandle) -> crate::mpi::OpRef<i64> {
+    crate::mpi::OpRef::new(std::sync::Arc::new(PjrtOp {
+        handle,
+        op: "bxor_i64",
+        commutative: true,
+    }))
+}
+
+/// Float sum through the compiled kernel.
+pub fn pjrt_sum_f32(handle: PjrtHandle) -> crate::mpi::OpRef<f32> {
+    crate::mpi::OpRef::new(std::sync::Arc::new(PjrtOp {
+        handle,
+        op: "sum_f32",
+        commutative: true,
+    }))
+}
+
+/// Affine 2×2 recurrence composition through the compiled kernel
+/// (non-commutative; the expensive-⊕ ablation operator).
+pub fn pjrt_rec2_compose(handle: PjrtHandle) -> crate::mpi::OpRef<Rec2> {
+    crate::mpi::OpRef::new(std::sync::Arc::new(PjrtOp {
+        handle,
+        op: "matrec_f32",
+        commutative: false,
+    }))
+}
+
+impl CombineOp<i64> for PjrtOp {
+    fn name(&self) -> &str {
+        self.op
+    }
+
+    fn combine(&self, input: &[i64], inout: &mut [i64]) {
+        self.handle
+            .reduce_i64(self.op, input, inout)
+            .expect("PJRT reduce_local kernel failed");
+    }
+
+    fn commutative(&self) -> bool {
+        self.commutative
+    }
+}
+
+impl CombineOp<f32> for PjrtOp {
+    fn name(&self) -> &str {
+        self.op
+    }
+
+    fn combine(&self, input: &[f32], inout: &mut [f32]) {
+        self.handle
+            .reduce_f32(self.op, 1, input, inout)
+            .expect("PJRT reduce_local kernel failed");
+    }
+
+    fn commutative(&self) -> bool {
+        self.commutative
+    }
+}
+
+impl CombineOp<Rec2> for PjrtOp {
+    fn name(&self) -> &str {
+        self.op
+    }
+
+    fn combine(&self, input: &[Rec2], inout: &mut [Rec2]) {
+        // Flatten (A, b) to 6 f32 per element, row-major.
+        let flat = |xs: &[Rec2]| -> Vec<f32> {
+            let mut v = Vec::with_capacity(xs.len() * 6);
+            for e in xs {
+                v.extend_from_slice(&e.a);
+                v.extend_from_slice(&e.b);
+            }
+            v
+        };
+        let fin = flat(input);
+        let mut fio = flat(inout);
+        self.handle
+            .reduce_f32(self.op, 6, &fin, &mut fio)
+            .expect("PJRT matrec kernel failed");
+        for (e, chunk) in inout.iter_mut().zip(fio.chunks_exact(6)) {
+            e.a.copy_from_slice(&chunk[..4]);
+            e.b.copy_from_slice(&chunk[4..]);
+        }
+    }
+
+    fn commutative(&self) -> bool {
+        self.commutative
+    }
+}

@@ -1,0 +1,249 @@
+//! Critical-path extraction: which chain of rounds determines the
+//! completion time, and what each link on it costs.
+//!
+//! Replays the trace like [`super::replay`], but remembers, for every
+//! rank, which event its clock last waited on. Walking backwards from the
+//! slowest rank yields the dependency chain the α-β-γ model charges —
+//! making "123-doubling saves one round of α_inter" directly visible per
+//! configuration (`exscan trace --critical`).
+
+use std::collections::HashMap;
+
+use super::{EventKind, TraceReport};
+use crate::cost::{CostModel, LinkClass};
+
+/// One hop on the critical path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hop {
+    pub round: u32,
+    /// The rank whose clock this hop advanced.
+    pub rank: usize,
+    /// Sender, for communication hops; `None` for ⊕ applications.
+    pub from: Option<usize>,
+    pub link: Option<LinkClass>,
+    /// Time spent in this hop (µs): round cost or reduce cost.
+    pub cost_us: f64,
+    /// Clock after the hop (µs).
+    pub at_us: f64,
+    /// True when the rank had to wait on the sender (the hop is a genuine
+    /// dependency, not just local sequencing).
+    pub waited: bool,
+}
+
+/// The replayed critical path, slowest rank backwards to time zero.
+#[derive(Debug, Clone)]
+pub struct CriticalPath {
+    pub completion_us: f64,
+    pub final_rank: usize,
+    /// Hops in forward (chronological) order.
+    pub hops: Vec<Hop>,
+}
+
+impl CriticalPath {
+    /// Communication rounds on the path.
+    pub fn comm_rounds(&self) -> usize {
+        self.hops.iter().filter(|h| h.from.is_some()).count()
+    }
+
+    /// ⊕ applications charged on the path.
+    pub fn reduce_hops(&self) -> usize {
+        self.hops.iter().filter(|h| h.from.is_none()).count()
+    }
+
+    /// Inter-node rounds on the path (the expensive ones).
+    pub fn inter_rounds(&self) -> usize {
+        self.hops.iter().filter(|h| h.link == Some(LinkClass::InterNode)).count()
+    }
+}
+
+/// Extract the critical path of a traced collective under `model`, with
+/// all messages resized to `bytes` (see [`super::replay`] for semantics).
+pub fn critical_path(report: &TraceReport, model: &CostModel, bytes: usize) -> CriticalPath {
+    let p = report.p;
+    // Forward replay, remembering per-event timing and dependencies.
+    #[derive(Clone)]
+    struct Ev {
+        rank: usize,
+        idx: usize,
+        start: f64,
+        end: f64,
+        dep: Option<(usize, usize)>, // (rank, idx) of the sender event we waited on
+        waited: bool,
+    }
+    let mut clock = vec![0.0f64; p];
+    let mut idxp = vec![0usize; p];
+    // (from, to, round) -> (stamp, sender event key)
+    let mut send_time: HashMap<(usize, usize, u32), (f64, (usize, usize))> = HashMap::new();
+    let mut evs: HashMap<(usize, usize), Ev> = HashMap::new();
+    let mut last_ev: Vec<Option<(usize, usize)>> = vec![None; p];
+
+    loop {
+        let mut progressed = false;
+        let mut all_done = true;
+        for r in 0..p {
+            let events = &report.traces[r].events;
+            while idxp[r] < events.len() {
+                let i = idxp[r];
+                let e = events[i];
+                let key = (r, i);
+                match e.kind {
+                    EventKind::Reduce { .. } => {
+                        let start = clock[r];
+                        clock[r] += model.reduce_cost(bytes);
+                        evs.insert(key, Ev { rank: r, idx: i, start, end: clock[r], dep: last_ev[r], waited: false });
+                        last_ev[r] = Some(key);
+                        idxp[r] += 1;
+                        progressed = true;
+                    }
+                    EventKind::Send { to, .. } => {
+                        send_time.entry((r, to, e.round)).or_insert((clock[r], last_ev[r].unwrap_or(key)));
+                        let paired_from = events.get(i + 1).and_then(|n| match n.kind {
+                            EventKind::Recv { from, .. } if n.round == e.round => Some(from),
+                            _ => None,
+                        });
+                        match paired_from {
+                            Some(from) => {
+                                let Some(&(st, skey)) = send_time.get(&(from, r, e.round)) else {
+                                    break;
+                                };
+                                let c_out = model.round_cost(r, to, bytes);
+                                let c_in = model.round_cost(from, r, bytes);
+                                let start = clock[r];
+                                let waited = st > clock[r];
+                                clock[r] = clock[r].max(st) + c_out.max(c_in);
+                                let dep = if waited { Some(skey) } else { last_ev[r] };
+                                let rkey = (r, i + 1);
+                                evs.insert(rkey, Ev { rank: r, idx: i + 1, start, end: clock[r], dep, waited });
+                                last_ev[r] = Some(rkey);
+                                idxp[r] += 2;
+                                progressed = true;
+                            }
+                            None => {
+                                let start = clock[r];
+                                clock[r] += model.round_cost(r, to, bytes);
+                                evs.insert(key, Ev { rank: r, idx: i, start, end: clock[r], dep: last_ev[r], waited: false });
+                                last_ev[r] = Some(key);
+                                idxp[r] += 1;
+                                progressed = true;
+                            }
+                        }
+                    }
+                    EventKind::Recv { from, .. } => {
+                        let Some(&(st, skey)) = send_time.get(&(from, r, e.round)) else {
+                            break;
+                        };
+                        let start = clock[r];
+                        let waited = st > clock[r];
+                        clock[r] = clock[r].max(st) + model.round_cost(from, r, bytes);
+                        let dep = if waited { Some(skey) } else { last_ev[r] };
+                        evs.insert(key, Ev { rank: r, idx: i, start, end: clock[r], dep, waited });
+                        last_ev[r] = Some(key);
+                        idxp[r] += 1;
+                        progressed = true;
+                    }
+                }
+            }
+            if idxp[r] < events.len() {
+                all_done = false;
+            }
+        }
+        if all_done {
+            break;
+        }
+        assert!(progressed, "critical-path replay stuck: unmatched receive");
+    }
+
+    // Slowest rank, then walk deps backwards.
+    let final_rank = (0..p).max_by(|&a, &b| clock[a].partial_cmp(&clock[b]).unwrap()).unwrap_or(0);
+    let mut hops = Vec::new();
+    let mut cur = last_ev[final_rank];
+    while let Some(key) = cur {
+        let ev = &evs[&key];
+        let e = report.traces[ev.rank].events[ev.idx];
+        let (from, link) = match e.kind {
+            EventKind::Recv { from, .. } => {
+                (Some(from), Some(model.link(from, ev.rank)))
+            }
+            EventKind::Send { to, .. } => (Some(to), Some(model.link(ev.rank, to))),
+            EventKind::Reduce { .. } => (None, None),
+        };
+        hops.push(Hop {
+            round: e.round,
+            rank: ev.rank,
+            from,
+            link,
+            cost_us: ev.end - ev.start.max(if ev.waited { ev.start } else { ev.start }),
+            at_us: ev.end,
+            waited: ev.waited,
+        });
+        cur = ev.dep;
+    }
+    hops.reverse();
+    // Fix hop costs to be end-to-end along the chain (include waits).
+    let mut prev_end = 0.0;
+    for h in &mut hops {
+        h.cost_us = h.at_us - prev_end;
+        prev_end = h.at_us;
+    }
+    CriticalPath { completion_us: clock[final_rank], final_rank, hops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::inputs_i64;
+    use crate::cost::{CostModel, CostParams};
+    use crate::mpi::{ops, run_scan, Topology, WorldConfig};
+    use crate::prelude::*;
+
+    fn trace_of(algo: &dyn ScanAlgorithm<i64>, nodes: usize, rpn: usize) -> TraceReport {
+        let topo = Topology::cluster(nodes, rpn);
+        let cfg = WorldConfig::new(topo)
+            .virtual_clock(CostParams::generic())
+            .with_trace(true);
+        let inputs = inputs_i64(topo.size(), 4, 1);
+        run_scan(&cfg, algo, &ops::bxor(), &inputs).unwrap().trace.unwrap()
+    }
+
+    #[test]
+    fn path_completion_matches_replay() {
+        let model = CostModel::new(CostParams::generic(), 1);
+        for algo in crate::coll::paper_exscan_algorithms::<i64>() {
+            let tr = trace_of(algo.as_ref(), 20, 1);
+            let cp = critical_path(&tr, &model, 32);
+            let replayed = crate::trace::replay::replay_completion(&tr, &model, 32);
+            assert!(
+                (cp.completion_us - replayed).abs() < 1e-9,
+                "{}: {} vs {}",
+                algo.name(),
+                cp.completion_us,
+                replayed
+            );
+            // The chain must account for the entire completion time.
+            let total: f64 = cp.hops.iter().map(|h| h.cost_us).sum();
+            assert!((total - cp.completion_us).abs() < 1e-9, "{}", algo.name());
+        }
+    }
+
+    #[test]
+    fn comm_rounds_on_path_match_round_counts() {
+        let model = CostModel::new(CostParams::generic(), 1);
+        let tr = trace_of(&Exscan123, 36, 1);
+        let cp = critical_path(&tr, &model, 32);
+        // The 123 path from rank p-1 passes through q rounds. The ⊕ hops
+        // are Theorem 1's q-1 result-path folds, plus the round-1 sender's
+        // W ⊕ V preparation when the wait binds through it (the paper's
+        // ternary-reduce-local footnote made visible).
+        assert_eq!(cp.comm_rounds() as u32, 6);
+        assert!(cp.reduce_hops() >= 5 && cp.reduce_hops() <= 6, "{}", cp.reduce_hops());
+    }
+
+    #[test]
+    fn hierarchical_path_classifies_links() {
+        let model = CostModel::new(CostParams::generic(), 8);
+        let tr = trace_of(&Exscan123, 8, 8);
+        let cp = critical_path(&tr, &model, 32);
+        assert!(cp.inter_rounds() >= 1);
+        assert!(cp.inter_rounds() < cp.comm_rounds());
+    }
+}

@@ -1,0 +1,157 @@
+//! Invariant checks over merged traces.
+//!
+//! The paper's lower-bound argument assumes *one-ported* communication:
+//! per round, each processor takes part in at most one send and one receive
+//! (a simultaneous send-receive). These checks make that assumption
+//! machine-verified for every algorithm in the library, and additionally
+//! verify that the trace is self-consistent (every send has exactly one
+//! matching receive in the same round, no self-messages).
+
+use super::{EventKind, TraceReport};
+use std::collections::HashMap;
+
+/// A violated structural invariant, with enough context to debug it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InvariantViolation {
+    /// Rank sent more than one message in one round.
+    MultipleSends { rank: usize, round: u32, count: usize },
+    /// Rank received more than one message in one round.
+    MultipleRecvs { rank: usize, round: u32, count: usize },
+    /// A send with no matching receive (or vice versa).
+    Unmatched { from: usize, to: usize, round: u32, sends: usize, recvs: usize },
+    /// A rank messaged itself.
+    SelfMessage { rank: usize, round: u32 },
+    /// Send and matching receive disagree on the payload size.
+    SizeMismatch { from: usize, to: usize, round: u32, sent: usize, received: usize },
+}
+
+impl std::fmt::Display for InvariantViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// Run every invariant check; returns all violations (empty = clean).
+pub fn check_all(report: &TraceReport) -> Vec<InvariantViolation> {
+    let mut out = Vec::new();
+    check_one_ported(report, &mut out);
+    check_matching(report, &mut out);
+    out
+}
+
+/// One-ported model: per (rank, round), at most one send and one receive.
+fn check_one_ported(report: &TraceReport, out: &mut Vec<InvariantViolation>) {
+    for t in &report.traces {
+        let mut sends: HashMap<u32, usize> = HashMap::new();
+        let mut recvs: HashMap<u32, usize> = HashMap::new();
+        for e in &t.events {
+            match e.kind {
+                EventKind::Send { to, .. } => {
+                    *sends.entry(e.round).or_default() += 1;
+                    if to == t.rank {
+                        out.push(InvariantViolation::SelfMessage { rank: t.rank, round: e.round });
+                    }
+                }
+                EventKind::Recv { .. } => *recvs.entry(e.round).or_default() += 1,
+                EventKind::Reduce { .. } => {}
+            }
+        }
+        for (&round, &count) in &sends {
+            if count > 1 {
+                out.push(InvariantViolation::MultipleSends { rank: t.rank, round, count });
+            }
+        }
+        for (&round, &count) in &recvs {
+            if count > 1 {
+                out.push(InvariantViolation::MultipleRecvs { rank: t.rank, round, count });
+            }
+        }
+    }
+}
+
+/// Every (from, to, round) send is matched by exactly one receive with the
+/// same byte count.
+fn check_matching(report: &TraceReport, out: &mut Vec<InvariantViolation>) {
+    // (from, to, round) -> (send bytes, send count, recv bytes, recv count)
+    let mut table: HashMap<(usize, usize, u32), (usize, usize, usize, usize)> = HashMap::new();
+    for t in &report.traces {
+        for e in &t.events {
+            match e.kind {
+                EventKind::Send { to, bytes } => {
+                    let ent = table.entry((t.rank, to, e.round)).or_default();
+                    ent.0 = bytes;
+                    ent.1 += 1;
+                }
+                EventKind::Recv { from, bytes } => {
+                    let ent = table.entry((from, t.rank, e.round)).or_default();
+                    ent.2 = bytes;
+                    ent.3 += 1;
+                }
+                EventKind::Reduce { .. } => {}
+            }
+        }
+    }
+    for (&(from, to, round), &(sb, sc, rb, rc)) in &table {
+        if sc != rc {
+            out.push(InvariantViolation::Unmatched { from, to, round, sends: sc, recvs: rc });
+        } else if sb != rb {
+            out.push(InvariantViolation::SizeMismatch { from, to, round, sent: sb, received: rb });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::RankTrace;
+
+    #[test]
+    fn clean_trace_passes() {
+        let mut t0 = RankTrace::new(0);
+        t0.push(0, EventKind::Send { to: 1, bytes: 16 });
+        let mut t1 = RankTrace::new(1);
+        t1.push(0, EventKind::Recv { from: 0, bytes: 16 });
+        assert!(check_all(&TraceReport::new(vec![t0, t1])).is_empty());
+    }
+
+    #[test]
+    fn detects_double_send() {
+        let mut t0 = RankTrace::new(0);
+        t0.push(0, EventKind::Send { to: 1, bytes: 8 });
+        t0.push(0, EventKind::Send { to: 2, bytes: 8 });
+        let mut t1 = RankTrace::new(1);
+        t1.push(0, EventKind::Recv { from: 0, bytes: 8 });
+        let mut t2 = RankTrace::new(2);
+        t2.push(0, EventKind::Recv { from: 0, bytes: 8 });
+        let v = check_all(&TraceReport::new(vec![t0, t1, t2]));
+        assert!(v.iter().any(|x| matches!(x, InvariantViolation::MultipleSends { rank: 0, .. })));
+    }
+
+    #[test]
+    fn detects_unmatched() {
+        let mut t0 = RankTrace::new(0);
+        t0.push(0, EventKind::Send { to: 1, bytes: 8 });
+        let t1 = RankTrace::new(1);
+        let v = check_all(&TraceReport::new(vec![t0, t1]));
+        assert!(v.iter().any(|x| matches!(x, InvariantViolation::Unmatched { .. })));
+    }
+
+    #[test]
+    fn detects_size_mismatch() {
+        let mut t0 = RankTrace::new(0);
+        t0.push(0, EventKind::Send { to: 1, bytes: 8 });
+        let mut t1 = RankTrace::new(1);
+        t1.push(0, EventKind::Recv { from: 0, bytes: 4 });
+        let v = check_all(&TraceReport::new(vec![t0, t1]));
+        assert!(v.iter().any(|x| matches!(x, InvariantViolation::SizeMismatch { .. })));
+    }
+
+    #[test]
+    fn detects_self_message() {
+        let mut t0 = RankTrace::new(0);
+        t0.push(0, EventKind::Send { to: 0, bytes: 8 });
+        t0.push(0, EventKind::Recv { from: 0, bytes: 8 });
+        let v = check_all(&TraceReport::new(vec![t0]));
+        assert!(v.iter().any(|x| matches!(x, InvariantViolation::SelfMessage { .. })));
+    }
+}

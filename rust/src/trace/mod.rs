@@ -1,0 +1,171 @@
+//! Communication-round tracing and invariant checking.
+//!
+//! Every send, receive and ⊕ application can be recorded per rank. From the
+//! merged trace we (a) count communication rounds and ⊕ applications — the
+//! paper's two cost metrics, checked against the closed forms of Theorem 1
+//! in the test suite — and (b) verify the *one-ported* model assumption:
+//! no rank sends more than one message or receives more than one message
+//! in the same round.
+
+pub mod critical;
+pub mod invariants;
+pub mod replay;
+
+pub use critical::{critical_path, CriticalPath, Hop};
+pub use invariants::{check_all, InvariantViolation};
+pub use replay::replay_clocks;
+
+
+/// What happened at one point of a rank's execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    Send { to: usize, bytes: usize },
+    Recv { from: usize, bytes: usize },
+    /// One `reduce_local` (⊕) application over `bytes` bytes. `round` is
+    /// the communication round it is attributed to.
+    Reduce { bytes: usize },
+}
+
+/// A traced event, attributed to an algorithm-defined round index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub round: u32,
+    pub kind: EventKind,
+}
+
+/// The ordered event log of a single rank.
+#[derive(Debug, Clone, Default)]
+pub struct RankTrace {
+    pub rank: usize,
+    pub events: Vec<TraceEvent>,
+}
+
+impl RankTrace {
+    pub fn new(rank: usize) -> Self {
+        RankTrace { rank, events: Vec::new() }
+    }
+
+    pub fn push(&mut self, round: u32, kind: EventKind) {
+        self.events.push(TraceEvent { round, kind });
+    }
+
+    /// Number of ⊕ applications this rank performed.
+    pub fn ops(&self) -> u32 {
+        self.events.iter().filter(|e| matches!(e.kind, EventKind::Reduce { .. })).count() as u32
+    }
+
+    /// Rounds in which this rank communicated (sent or received).
+    pub fn comm_rounds(&self) -> u32 {
+        let mut rounds: Vec<u32> = self
+            .events
+            .iter()
+            .filter(|e| !matches!(e.kind, EventKind::Reduce { .. }))
+            .map(|e| e.round)
+            .collect();
+        rounds.sort_unstable();
+        rounds.dedup();
+        rounds.len() as u32
+    }
+}
+
+/// Merged view over all ranks of one collective call.
+#[derive(Debug, Clone)]
+pub struct TraceReport {
+    pub p: usize,
+    pub traces: Vec<RankTrace>,
+}
+
+impl TraceReport {
+    pub fn new(traces: Vec<RankTrace>) -> Self {
+        TraceReport { p: traces.len(), traces }
+    }
+
+    /// Global number of communication rounds: the number of distinct round
+    /// indices in which *any* rank communicated. (For the algorithms here,
+    /// round indices are dense, so this equals `max round + 1`.)
+    pub fn total_rounds(&self) -> u32 {
+        let mut rounds: Vec<u32> = self
+            .traces
+            .iter()
+            .flat_map(|t| t.events.iter())
+            .filter(|e| !matches!(e.kind, EventKind::Reduce { .. }))
+            .map(|e| e.round)
+            .collect();
+        rounds.sort_unstable();
+        rounds.dedup();
+        rounds.len() as u32
+    }
+
+    /// ⊕ applications per rank.
+    pub fn ops_per_rank(&self) -> Vec<u32> {
+        self.traces.iter().map(|t| t.ops()).collect()
+    }
+
+    /// Maximum ⊕ applications over ranks (the per-processor computation
+    /// cost the paper compares).
+    pub fn max_ops(&self) -> u32 {
+        self.ops_per_rank().into_iter().max().unwrap_or(0)
+    }
+
+    /// ⊕ applications on the completion-critical last rank `p-1` — the
+    /// count Theorem 1 states (`q-1` for the 123-doubling algorithm).
+    pub fn last_rank_ops(&self) -> u32 {
+        self.traces.last().map(|t| t.ops()).unwrap_or(0)
+    }
+
+    /// Total messages sent.
+    pub fn total_messages(&self) -> usize {
+        self.traces
+            .iter()
+            .flat_map(|t| t.events.iter())
+            .filter(|e| matches!(e.kind, EventKind::Send { .. }))
+            .count()
+    }
+
+    /// Total bytes moved over all links.
+    pub fn total_bytes(&self) -> usize {
+        self.traces
+            .iter()
+            .flat_map(|t| t.events.iter())
+            .filter_map(|e| match e.kind {
+                EventKind::Send { bytes, .. } => Some(bytes),
+                _ => None,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_trace() -> TraceReport {
+        // Two ranks, one round: 0 -> 1, rank 1 reduces once.
+        let mut t0 = RankTrace::new(0);
+        t0.push(0, EventKind::Send { to: 1, bytes: 8 });
+        let mut t1 = RankTrace::new(1);
+        t1.push(0, EventKind::Recv { from: 0, bytes: 8 });
+        t1.push(0, EventKind::Reduce { bytes: 8 });
+        TraceReport::new(vec![t0, t1])
+    }
+
+    #[test]
+    fn counts() {
+        let r = mini_trace();
+        assert_eq!(r.total_rounds(), 1);
+        assert_eq!(r.ops_per_rank(), vec![0, 1]);
+        assert_eq!(r.max_ops(), 1);
+        assert_eq!(r.last_rank_ops(), 1);
+        assert_eq!(r.total_messages(), 1);
+        assert_eq!(r.total_bytes(), 8);
+    }
+
+    #[test]
+    fn comm_rounds_ignores_reduce() {
+        let mut t = RankTrace::new(0);
+        t.push(0, EventKind::Send { to: 1, bytes: 8 });
+        t.push(3, EventKind::Reduce { bytes: 8 });
+        assert_eq!(t.comm_rounds(), 1);
+        assert_eq!(t.ops(), 1);
+    }
+}

@@ -1,0 +1,189 @@
+//! Clock replay: re-run a recorded trace under the α-β-γ model with an
+//! arbitrary vector size.
+//!
+//! The communication *pattern* of every algorithm here is independent of
+//! the vector length m (all messages are full m-element vectors). A single
+//! traced run therefore determines the virtual completion time for every m:
+//! we replay the per-rank event logs with per-rank logical clocks, scaling
+//! each message and each ⊕ application to `bytes`. This is how the figure
+//! sweeps predict 1152-rank timings without re-running 1152 threads per
+//! data point.
+
+use std::collections::HashMap;
+
+use super::{EventKind, TraceReport};
+use crate::cost::CostModel;
+
+/// Replay the trace with all messages and reductions resized to `bytes`.
+/// Returns the final virtual clock per rank (µs, excluding the per-call
+/// `overhead` parameter, which the caller adds once).
+///
+/// Semantics mirror the live virtual transport exactly:
+/// * `Reduce`: `clock += γ·bytes`
+/// * lone `Send`: stamp `clock`, then `clock += α+β·bytes`
+/// * lone `Recv`: `clock = max(clock, stamp) + α+β·bytes`
+/// * `Send` immediately followed by a same-round `Recv` (a simultaneous
+///   send-receive): stamp, then `clock = max(clock, stamp_in) +
+///   max(c_out, c_in)`.
+pub fn replay_clocks(report: &TraceReport, model: &CostModel, bytes: usize) -> Vec<f64> {
+    let p = report.p;
+    let mut clock = vec![0.0f64; p];
+    let mut idx = vec![0usize; p];
+    let mut send_time: HashMap<(usize, usize, u32), f64> = HashMap::new();
+
+    loop {
+        let mut progressed = false;
+        let mut all_done = true;
+        for r in 0..p {
+            let events = &report.traces[r].events;
+            while idx[r] < events.len() {
+                let e = events[idx[r]];
+                match e.kind {
+                    EventKind::Reduce { .. } => {
+                        clock[r] += model.reduce_cost(bytes);
+                        idx[r] += 1;
+                        progressed = true;
+                    }
+                    EventKind::Send { to, .. } => {
+                        // Expose the stamp immediately so the peer can make
+                        // progress even if we end up waiting on a paired recv.
+                        send_time.entry((r, to, e.round)).or_insert(clock[r]);
+                        let paired_from = events.get(idx[r] + 1).and_then(|n| match n.kind {
+                            EventKind::Recv { from, .. } if n.round == e.round => Some(from),
+                            _ => None,
+                        });
+                        match paired_from {
+                            Some(from) => {
+                                let Some(&st) = send_time.get(&(from, r, e.round)) else {
+                                    break; // peer has not sent yet
+                                };
+                                let c_out = model.round_cost(r, to, bytes);
+                                let c_in = model.round_cost(from, r, bytes);
+                                clock[r] = clock[r].max(st) + c_out.max(c_in);
+                                idx[r] += 2;
+                                progressed = true;
+                            }
+                            None => {
+                                clock[r] += model.round_cost(r, to, bytes);
+                                idx[r] += 1;
+                                progressed = true;
+                            }
+                        }
+                    }
+                    EventKind::Recv { from, .. } => {
+                        let Some(&st) = send_time.get(&(from, r, e.round)) else {
+                            break;
+                        };
+                        clock[r] = clock[r].max(st) + model.round_cost(from, r, bytes);
+                        idx[r] += 1;
+                        progressed = true;
+                    }
+                }
+            }
+            if idx[r] < events.len() {
+                all_done = false;
+            }
+        }
+        if all_done {
+            return clock;
+        }
+        assert!(progressed, "trace replay stuck: unmatched receive in trace");
+    }
+}
+
+/// Completion time of the collective: max over ranks of the replayed clock.
+pub fn replay_completion(report: &TraceReport, model: &CostModel, bytes: usize) -> f64 {
+    replay_clocks(report, model, bytes).into_iter().fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{CostModel, CostParams};
+    use crate::trace::RankTrace;
+
+    fn model() -> CostModel {
+        CostModel::new(
+            CostParams {
+                alpha_intra: 1.0,
+                alpha_inter: 10.0,
+                beta_intra: 0.0,
+                beta_inter: 0.0,
+                gamma: 0.5,
+                overhead: 0.0,
+            },
+            64, // everything intra-node
+        )
+    }
+
+    #[test]
+    fn pingpong_two_rounds() {
+        // Round 0: 0 -> 1; round 1: 1 -> 0. All intra (α=1).
+        let mut t0 = RankTrace::new(0);
+        t0.push(0, EventKind::Send { to: 1, bytes: 8 });
+        t0.push(1, EventKind::Recv { from: 1, bytes: 8 });
+        let mut t1 = RankTrace::new(1);
+        t1.push(0, EventKind::Recv { from: 0, bytes: 8 });
+        t1.push(1, EventKind::Send { to: 0, bytes: 8 });
+        let clocks = replay_clocks(&TraceReport::new(vec![t0, t1]), &model(), 8);
+        // rank1: recv at max(0,0)+1 = 1; send stamps 1, +1 => 2.
+        // rank0: send 0->1 (clock 1), recv: max(1, 1)+1 = 2.
+        assert_eq!(clocks, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn paired_sendrecv_costs_one_round() {
+        // Ring exchange 0 <-> 1 via simultaneous sendrecv in round 0.
+        let mut t0 = RankTrace::new(0);
+        t0.push(0, EventKind::Send { to: 1, bytes: 8 });
+        t0.push(0, EventKind::Recv { from: 1, bytes: 8 });
+        let mut t1 = RankTrace::new(1);
+        t1.push(0, EventKind::Send { to: 0, bytes: 8 });
+        t1.push(0, EventKind::Recv { from: 0, bytes: 8 });
+        let clocks = replay_clocks(&TraceReport::new(vec![t0, t1]), &model(), 8);
+        assert_eq!(clocks, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn reduce_adds_gamma() {
+        let mut t0 = RankTrace::new(0);
+        t0.push(0, EventKind::Send { to: 1, bytes: 4 });
+        let mut t1 = RankTrace::new(1);
+        t1.push(0, EventKind::Recv { from: 0, bytes: 4 });
+        t1.push(0, EventKind::Reduce { bytes: 4 });
+        let clocks = replay_clocks(&TraceReport::new(vec![t0, t1]), &model(), 4);
+        // recv: 0+1 = 1; reduce: +0.5*4 = 3.0
+        assert_eq!(clocks[1], 3.0);
+    }
+
+    #[test]
+    fn bytes_rescaling() {
+        // Trace recorded at 8 bytes, replayed at 800: cost scales with β.
+        let m = CostModel::new(
+            CostParams {
+                alpha_intra: 1.0,
+                alpha_inter: 1.0,
+                beta_intra: 0.01,
+                beta_inter: 0.01,
+                gamma: 0.0,
+                overhead: 0.0,
+            },
+            1,
+        );
+        let mut t0 = RankTrace::new(0);
+        t0.push(0, EventKind::Send { to: 1, bytes: 8 });
+        let mut t1 = RankTrace::new(1);
+        t1.push(0, EventKind::Recv { from: 0, bytes: 8 });
+        let rep = TraceReport::new(vec![t0, t1]);
+        assert!((replay_completion(&rep, &m, 8) - 1.08).abs() < 1e-9);
+        assert!((replay_completion(&rep, &m, 800) - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "stuck")]
+    fn unmatched_recv_panics() {
+        let mut t0 = RankTrace::new(0);
+        t0.push(0, EventKind::Recv { from: 1, bytes: 8 });
+        replay_clocks(&TraceReport::new(vec![t0, RankTrace::new(1)]), &model(), 8);
+    }
+}

@@ -1,0 +1,132 @@
+//! Integer log/bit helpers used by the round-count formulas.
+
+/// `ceil(log2(x))` for `x >= 1`. `ceil_log2(1) == 0`.
+pub fn ceil_log2(x: usize) -> u32 {
+    assert!(x >= 1, "ceil_log2 of 0");
+    usize::BITS - (x - 1).leading_zeros()
+}
+
+/// `floor(log2(x))` for `x >= 1`.
+pub fn floor_log2(x: usize) -> u32 {
+    assert!(x >= 1, "floor_log2 of 0");
+    usize::BITS - 1 - x.leading_zeros()
+}
+
+/// True iff `x` is a power of two (and nonzero).
+pub fn is_pow2(x: usize) -> bool {
+    x != 0 && x & (x - 1) == 0
+}
+
+/// `ceil(log2(p-1) + log2(4/3))` — the paper's round count `q` for the
+/// 123-doubling algorithm (Theorem 1), computed exactly in integer
+/// arithmetic: `q = min { q : 3 * 2^(q-2) >= p-1 }` for `p >= 3`,
+/// with the degenerate small cases `p <= 2` handled explicitly.
+///
+/// Derivation: the doubling rounds use skips `s_0=1, s_1=2, s_k=3*2^(k-2)`;
+/// rank `p-1` has received everything once `s_q' >= p-1` where `q'` is the
+/// next skip after the last round, i.e. rounds `0..q-1` ran with
+/// `s_{q-1} < p-1 <= s_q`... equivalently the smallest `q >= 2` with
+/// `3 * 2^(q-2) >= p - 1`.
+pub fn rounds_123(p: usize) -> u32 {
+    assert!(p >= 1);
+    match p {
+        1 => 0,
+        2 => 1,
+        3 => 2,
+        _ => {
+            // smallest q >= 2 with 3 * 2^(q-2) >= p-1
+            let mut q = 2u32;
+            let mut skip = 3usize; // s_2 = 3*2^0
+            while skip < p - 1 {
+                skip *= 2;
+                q += 1;
+            }
+            q
+        }
+    }
+}
+
+/// Round count of the 1-doubling exclusive scan: `1 + ceil(log2(p-1))`.
+pub fn rounds_one_doubling(p: usize) -> u32 {
+    match p {
+        1 => 0,
+        2 => 1,
+        _ => 1 + ceil_log2(p - 1),
+    }
+}
+
+/// Round count of the two-⊕ doubling exclusive scan: `ceil(log2 p)`.
+pub fn rounds_two_op(p: usize) -> u32 {
+    if p <= 1 {
+        0
+    } else {
+        ceil_log2(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_log2_small() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(4), 2);
+        assert_eq!(ceil_log2(5), 3);
+        assert_eq!(ceil_log2(36), 6);
+        assert_eq!(ceil_log2(1152), 11);
+    }
+
+    #[test]
+    fn floor_log2_small() {
+        assert_eq!(floor_log2(1), 0);
+        assert_eq!(floor_log2(2), 1);
+        assert_eq!(floor_log2(3), 1);
+        assert_eq!(floor_log2(4), 2);
+        assert_eq!(floor_log2(1152), 10);
+    }
+
+    #[test]
+    fn pow2() {
+        assert!(is_pow2(1));
+        assert!(is_pow2(64));
+        assert!(!is_pow2(0));
+        assert!(!is_pow2(36));
+    }
+
+    #[test]
+    fn rounds_123_matches_formula() {
+        // q = ceil(log2(p-1) + log2(4/3)) for p >= 2. The integer version is
+        // ground truth; the float formula must agree up to boundary jitter:
+        // raw <= q < raw + 1 (q is the ceiling of raw).
+        for p in 2usize..=100_000 {
+            let raw = ((p - 1) as f64).log2() + (4f64 / 3f64).log2();
+            let q = rounds_123(p) as f64;
+            assert!(q >= raw - 1e-9, "p={p} q={q} raw={raw}");
+            assert!(q < raw + 1.0 + 1e-9, "p={p} q={q} raw={raw}");
+        }
+    }
+
+    #[test]
+    fn rounds_123_paper_values() {
+        // p=36: ceil(log2 35 + log2 4/3) = ceil(5.129+0.415) = 6
+        assert_eq!(rounds_123(36), 6);
+        // p=1152: ceil(log2 1151 + 0.415) = ceil(10.168+0.415) = 11
+        assert_eq!(rounds_123(1152), 11);
+    }
+
+    #[test]
+    fn rounds_relationships() {
+        for p in 3usize..=10_000 {
+            // 123-doubling never takes more rounds than 1-doubling…
+            assert!(rounds_123(p) <= rounds_one_doubling(p), "p={p}");
+            // …and at most one more than the ceil(log2(p-1)) lower bound.
+            assert!(rounds_123(p) <= ceil_log2(p - 1) + 1, "p={p}");
+            assert!(rounds_123(p) >= ceil_log2(p - 1), "p={p}");
+            // two-⊕ uses ceil(log2 p) rounds, never fewer than 123 minus one.
+            assert!(rounds_two_op(p) + 1 >= rounds_123(p), "p={p}");
+        }
+    }
+}

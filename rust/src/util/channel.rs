@@ -1,0 +1,228 @@
+//! A small MPMC channel (Mutex + Condvar), replacing `crossbeam-channel`
+//! in this offline build. One queue per receiving rank; any thread may
+//! push. `Sync` by construction, so a single `Arc<Vec<Channel<_>>>` wires
+//! a whole world without per-thread sender clones.
+//!
+//! The hot path (`push` / `pop`) takes one lock each; the benchmark suite
+//! (`benches/hotpath.rs`) tracks its cost — at scan message rates the
+//! channel is far from the bottleneck (§Perf in EXPERIMENTS.md).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Bounded spin attempts before parking in `pop_timeout` (tuned in
+/// `benches/hotpath.rs`; see EXPERIMENTS.md §Perf). Spinning only helps
+/// when the sending thread can actually run in parallel — on a 1–2 core
+/// host the peer needs *our* core, so we park immediately instead.
+fn spin_tries() -> u32 {
+    static N: std::sync::OnceLock<u32> = std::sync::OnceLock::new();
+    *N.get_or_init(|| {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        if cores > 2 {
+            60
+        } else {
+            0
+        }
+    })
+}
+
+/// An unbounded MPMC queue.
+pub struct Channel<T> {
+    q: Mutex<ChannelState<T>>,
+    cv: Condvar,
+}
+
+struct ChannelState<T> {
+    items: VecDeque<T>,
+    /// Set when all producers are gone (used by the executor shutdown).
+    closed: bool,
+}
+
+impl<T> Default for Channel<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Channel<T> {
+    pub fn new() -> Self {
+        Channel {
+            q: Mutex::new(ChannelState { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue an item. Returns `Err(item)` if the channel is closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut s = self.q.lock().unwrap();
+        if s.closed {
+            return Err(item);
+        }
+        s.items.push_back(item);
+        drop(s);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop with timeout. `None` on timeout or when closed+empty.
+    ///
+    /// Fast path: a short spin phase (bounded `try_pop` attempts with CPU
+    /// relax hints) before falling back to the condvar sleep — scan rounds
+    /// are rendezvous-shaped, so the peer's message usually lands within a
+    /// few hundred nanoseconds and the wakeup latency of a full park
+    /// (~1–2 µs) would dominate the round (§Perf).
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<T> {
+        for _ in 0..spin_tries() {
+            if let Some(v) = self.try_pop() {
+                return Some(v);
+            }
+            std::hint::spin_loop();
+        }
+        let deadline = Instant::now() + timeout;
+        let mut s = self.q.lock().unwrap();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, res) = self.cv.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
+            if res.timed_out() && s.items.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        self.q.lock().unwrap().items.pop_front()
+    }
+
+    /// Close the channel: pending items remain poppable; pushes fail.
+    pub fn close(&self) {
+        self.q.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One-shot rendezvous cell for request/reply patterns.
+pub struct OneShot<T> {
+    cell: Mutex<Option<T>>,
+    cv: Condvar,
+}
+
+impl<T> Default for OneShot<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> OneShot<T> {
+    pub fn new() -> Self {
+        OneShot { cell: Mutex::new(None), cv: Condvar::new() }
+    }
+
+    pub fn put(&self, value: T) {
+        *self.cell.lock().unwrap() = Some(value);
+        self.cv.notify_all();
+    }
+
+    /// Wait for the value, up to `timeout`. `None` on timeout.
+    pub fn take_timeout(&self, timeout: Duration) -> Option<T> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.cell.lock().unwrap();
+        loop {
+            if let Some(v) = g.take() {
+                return Some(v);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let c = Channel::new();
+        for i in 0..10 {
+            c.push(i).unwrap();
+        }
+        for i in 0..10 {
+            assert_eq!(c.try_pop(), Some(i));
+        }
+        assert_eq!(c.try_pop(), None);
+    }
+
+    #[test]
+    fn cross_thread() {
+        let c = Arc::new(Channel::new());
+        let c2 = Arc::clone(&c);
+        let h = std::thread::spawn(move || {
+            for i in 0..1000 {
+                c2.push(i).unwrap();
+            }
+        });
+        let mut got = 0;
+        while got < 1000 {
+            if c.pop_timeout(Duration::from_secs(5)).is_some() {
+                got += 1;
+            } else {
+                panic!("timed out");
+            }
+        }
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn timeout_returns_none() {
+        let c: Channel<i32> = Channel::new();
+        let t0 = Instant::now();
+        assert!(c.pop_timeout(Duration::from_millis(30)).is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn close_rejects_push_but_drains() {
+        let c = Channel::new();
+        c.push(1).unwrap();
+        c.close();
+        assert!(c.push(2).is_err());
+        assert_eq!(c.pop_timeout(Duration::from_millis(10)), Some(1));
+        assert_eq!(c.pop_timeout(Duration::from_millis(10)), None);
+    }
+
+    #[test]
+    fn oneshot_roundtrip() {
+        let o = Arc::new(OneShot::new());
+        let o2 = Arc::clone(&o);
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            o2.put(42);
+        });
+        assert_eq!(o.take_timeout(Duration::from_secs(5)), Some(42));
+    }
+}

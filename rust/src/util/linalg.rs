@@ -1,0 +1,170 @@
+//! Tiny dense linear algebra: just enough for the cost-model calibration,
+//! which solves a linear least-squares fit `min ||A x - b||` via the normal
+//! equations with Gaussian elimination (the systems are 4x4–6x6, numerically
+//! benign after column scaling).
+
+/// Solve `M x = y` for square `M` (row-major, n x n) by Gaussian elimination
+/// with partial pivoting. Returns `None` if the matrix is (numerically)
+/// singular.
+pub fn solve(mut m: Vec<Vec<f64>>, mut y: Vec<f64>) -> Option<Vec<f64>> {
+    let n = y.len();
+    assert!(m.len() == n && m.iter().all(|r| r.len() == n));
+    for col in 0..n {
+        // Pivot.
+        let (piv, pv) = (col..n)
+            .map(|r| (r, m[r][col].abs()))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())?;
+        if pv < 1e-12 {
+            return None;
+        }
+        m.swap(col, piv);
+        y.swap(col, piv);
+        // Eliminate below.
+        for r in col + 1..n {
+            let f = m[r][col] / m[col][col];
+            for c in col..n {
+                m[r][c] -= f * m[col][c];
+            }
+            y[r] -= f * y[col];
+        }
+    }
+    // Back-substitute.
+    let mut x = vec![0.0; n];
+    for r in (0..n).rev() {
+        let mut s = y[r];
+        for c in r + 1..n {
+            s -= m[r][c] * x[c];
+        }
+        x[r] = s / m[r][r];
+    }
+    Some(x)
+}
+
+/// Linear least squares: minimize `||A x - b||_2` where `A` is m x n
+/// (row-major rows), via normal equations `A^T A x = A^T b`.
+pub fn lstsq(a: &[Vec<f64>], b: &[f64]) -> Option<Vec<f64>> {
+    let m = a.len();
+    assert_eq!(m, b.len());
+    if m == 0 {
+        return None;
+    }
+    let n = a[0].len();
+    // Column scaling for conditioning: divide column j by its max |.|.
+    let mut scale = vec![0.0f64; n];
+    for row in a {
+        for (j, v) in row.iter().enumerate() {
+            scale[j] = scale[j].max(v.abs());
+        }
+    }
+    for s in scale.iter_mut() {
+        if *s < 1e-300 {
+            *s = 1.0;
+        }
+    }
+    let mut ata = vec![vec![0.0; n]; n];
+    let mut atb = vec![0.0; n];
+    for (row, &bi) in a.iter().zip(b) {
+        for i in 0..n {
+            let ri = row[i] / scale[i];
+            for j in 0..n {
+                ata[i][j] += ri * row[j] / scale[j];
+            }
+            atb[i] += ri * bi;
+        }
+    }
+    let xs = solve(ata, atb)?;
+    Some(xs.iter().zip(&scale).map(|(x, s)| x / s).collect())
+}
+
+/// Non-negative least squares by simple active-set projection: solve the
+/// unconstrained problem, clamp negative coordinates to zero, re-solve on
+/// the free set, and iterate. Good enough for the small, well-posed
+/// calibration fits where the true solution is interior or near-boundary.
+pub fn nnls(a: &[Vec<f64>], b: &[f64]) -> Option<Vec<f64>> {
+    let n = a[0].len();
+    // Columns with no support (all zeros) are pinned at 0 up front — they
+    // would make the normal matrix singular (e.g. intra-node terms in a
+    // one-rank-per-node configuration).
+    let mut fixed: Vec<bool> = (0..n)
+        .map(|j| a.iter().all(|row| row[j].abs() < 1e-300))
+        .collect();
+    loop {
+        // Build the reduced problem over free columns.
+        let free: Vec<usize> = (0..n).filter(|&j| !fixed[j]).collect();
+        if free.is_empty() {
+            return Some(vec![0.0; n]);
+        }
+        let ra: Vec<Vec<f64>> = a
+            .iter()
+            .map(|row| free.iter().map(|&j| row[j]).collect())
+            .collect();
+        let rx = lstsq(&ra, b)?;
+        if let Some(worst) = rx
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v < -1e-12)
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        {
+            fixed[free[worst.0]] = true;
+            continue;
+        }
+        let mut x = vec![0.0; n];
+        for (k, &j) in free.iter().enumerate() {
+            x[j] = rx[k].max(0.0);
+        }
+        return Some(x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solve_2x2() {
+        let m = vec![vec![2.0, 1.0], vec![1.0, 3.0]];
+        let x = solve(m, vec![5.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_singular_is_none() {
+        let m = vec![vec![1.0, 2.0], vec![2.0, 4.0]];
+        assert!(solve(m, vec![1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn lstsq_exact() {
+        // y = 2 + 3x fitted from exact points.
+        let a: Vec<Vec<f64>> = (0..5).map(|i| vec![1.0, i as f64]).collect();
+        let b: Vec<f64> = (0..5).map(|i| 2.0 + 3.0 * i as f64).collect();
+        let x = lstsq(&a, &b).unwrap();
+        assert!((x[0] - 2.0).abs() < 1e-9);
+        assert!((x[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lstsq_overdetermined_noise() {
+        // Least squares of a constant is the mean.
+        let a: Vec<Vec<f64>> = (0..4).map(|_| vec![1.0]).collect();
+        let b = vec![1.0, 2.0, 3.0, 4.0];
+        let x = lstsq(&a, &b).unwrap();
+        assert!((x[0] - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nnls_clamps() {
+        // Best unconstrained fit for column 2 would be negative; nnls
+        // clamps it to zero and refits.
+        let a = vec![
+            vec![1.0, 1.0],
+            vec![1.0, 2.0],
+            vec![1.0, 3.0],
+        ];
+        let b = vec![3.0, 2.0, 1.0]; // slope -1
+        let x = nnls(&a, &b).unwrap();
+        assert!(x[1].abs() < 1e-12, "slope clamped to 0, got {:?}", x);
+        assert!((x[0] - 2.0).abs() < 1e-9); // mean
+    }
+}

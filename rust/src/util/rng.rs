@@ -1,0 +1,112 @@
+//! A small deterministic RNG (SplitMix64 seeding a xoshiro256**), replacing
+//! the `rand` crate in this offline build. Not cryptographic; used only for
+//! workload generation and the property-test harness.
+
+/// xoshiro256** seeded via SplitMix64.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut st = seed;
+        let s = [splitmix64(&mut st), splitmix64(&mut st), splitmix64(&mut st), splitmix64(&mut st)];
+        Rng { s }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    pub fn gen_i64(&mut self) -> i64 {
+        self.next_u64() as i64
+    }
+
+    /// Uniform in `[0, n)`; `n > 0`.
+    pub fn gen_range_usize(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        // Lemire-style rejection-free approximation is fine for tests;
+        // use 128-bit multiply for low bias.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in [lo, hi).
+    pub fn gen_range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.gen_f64() as f32
+    }
+
+    pub fn gen_bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::seed_from_u64(7);
+        let mut b = Rng::seed_from_u64(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Rng::seed_from_u64(1);
+        let mut b = Rng::seed_from_u64(2);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn range_bounds() {
+        let mut r = Rng::seed_from_u64(3);
+        for _ in 0..10_000 {
+            let x = r.gen_range_usize(17);
+            assert!(x < 17);
+            let f = r.gen_f64();
+            assert!((0.0..1.0).contains(&f));
+            let g = r.gen_range_f32(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&g));
+        }
+    }
+
+    #[test]
+    fn rough_uniformity() {
+        let mut r = Rng::seed_from_u64(11);
+        let mut counts = [0usize; 8];
+        for _ in 0..80_000 {
+            counts[r.gen_range_usize(8)] += 1;
+        }
+        for &c in &counts {
+            assert!((9_000..11_000).contains(&c), "skewed: {counts:?}");
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Summary statistics for benchmark repetitions (mpicroscope-style: the
+//! paper reports, per element count, the *minimum over repetitions of the
+//! maximum over ranks*).
+
+/// Running summary over a set of f64 samples (times in microseconds).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Minimum sample — the paper's headline statistic [Träff, mpicroscope].
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Sample standard deviation (n-1 denominator).
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let mu = self.mean();
+        let var = self.samples.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / (n - 1) as f64;
+        var.sqrt()
+    }
+
+    /// Percentile by nearest-rank (q in [0,1]).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.samples.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((q * (v.len() as f64 - 1.0)).round() as usize).min(v.len() - 1);
+        v[idx]
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(0.5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        for x in [3.0, 1.0, 2.0] {
+            s.push(x);
+        }
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 3.0);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert!((s.median() - 2.0).abs() < 1e-12);
+        assert!((s.stddev() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.median().is_nan());
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Summary::new();
+        for i in 0..101 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(1.0), 100.0);
+        assert_eq!(s.percentile(0.25), 25.0);
+    }
+}

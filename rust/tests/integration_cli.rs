@@ -1,0 +1,79 @@
+//! CLI integration: every subcommand runs end to end through `run_argv`
+//! (in-process — no subprocess spawning needed).
+
+fn run(args: &[&str]) -> anyhow::Result<()> {
+    let argv: Vec<String> = args.iter().map(|s| s.to_string()).collect();
+    exscan::cli::run_argv(&argv)
+}
+
+#[test]
+fn help_and_empty() {
+    run(&["help"]).unwrap();
+    run(&[]).unwrap();
+}
+
+#[test]
+fn unknown_command_errors() {
+    let err = run(&["frobnicate"]).unwrap_err();
+    assert!(format!("{err}").contains("unknown command"));
+}
+
+#[test]
+fn predict_runs() {
+    run(&["predict", "--p", "36", "--m", "1000"]).unwrap();
+    run(&["predict", "--p", "1152", "--m", "1", "--ranks-per-node", "32"]).unwrap();
+}
+
+#[test]
+fn calibrate_runs() {
+    run(&["calibrate"]).unwrap();
+}
+
+#[test]
+fn trace_all_algorithms() {
+    for algo in [
+        "123-doubling",
+        "1-doubling",
+        "two-op-doubling",
+        "native-mpich",
+        "blelloch",
+        "scan-then-shift",
+        "linear",
+        "pipelined-chain",
+    ] {
+        run(&["trace", "--algo", algo, "--p", "19"]).unwrap();
+    }
+}
+
+#[test]
+fn trace_unknown_algo_errors() {
+    assert!(run(&["trace", "--algo", "nope", "--p", "4"]).is_err());
+}
+
+#[test]
+fn run_small_world() {
+    run(&["run", "--algo", "123-doubling", "--p", "8", "--m", "64", "--reps", "3"]).unwrap();
+}
+
+#[test]
+fn tune_prints_table() {
+    run(&["tune", "--p", "4,36,256"]).unwrap();
+}
+
+#[test]
+fn sweep_quick_writes_csv() {
+    let out = std::env::temp_dir().join("exscan_cli_test_figure1.csv");
+    let out_s = out.to_str().unwrap();
+    run(&["sweep", "--config", "36x1", "--out", out_s, "--quick"]).unwrap();
+    let text = std::fs::read_to_string(&out).unwrap();
+    assert!(text.starts_with("config,algo,p,m,bytes"));
+    assert!(text.lines().count() > 10);
+    let _ = std::fs::remove_file(&out);
+}
+
+#[test]
+fn kernel_smoke_if_artifacts() {
+    if exscan::runtime::Manifest::default_available() {
+        run(&["kernel-smoke"]).unwrap();
+    }
+}

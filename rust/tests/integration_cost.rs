@@ -1,0 +1,148 @@
+//! Cross-layer consistency: the cost model's closed forms, the algorithm
+//! implementations' own skip lists, the live virtual clock, and the trace
+//! replayer must all tell the same story.
+
+use exscan::bench::inputs_i64;
+use exscan::cost::{calibrate, predict_flat, CostModel, CostParams};
+use exscan::prelude::*;
+use exscan::trace::replay::replay_completion;
+
+/// The skip sequences duplicated in cost::calibrate (to avoid a layering
+/// cycle) must exactly match the algorithms' own critical_skips.
+#[test]
+fn calibrate_skips_match_algorithms() {
+    for p in 2usize..=600 {
+        assert_eq!(
+            calibrate::skips_two_op(p),
+            <ExscanTwoOp as ScanAlgorithm<i64>>::critical_skips(&ExscanTwoOp, p),
+            "two-op p={p}"
+        );
+        assert_eq!(
+            calibrate::skips_one_doubling(p),
+            <ExscanOneDoubling as ScanAlgorithm<i64>>::critical_skips(&ExscanOneDoubling, p),
+            "1-doubling p={p}"
+        );
+        assert_eq!(
+            calibrate::skips_123(p),
+            <Exscan123 as ScanAlgorithm<i64>>::critical_skips(&Exscan123, p),
+            "123 p={p}"
+        );
+        assert_eq!(
+            calibrate::ops_123(p),
+            <Exscan123 as ScanAlgorithm<i64>>::predicted_ops(&Exscan123, p),
+            "123 ops p={p}"
+        );
+    }
+}
+
+/// Live virtual-clock completion == trace replay at the same byte count,
+/// for every paper algorithm on a hierarchical topology.
+#[test]
+fn replay_matches_live_virtual_clock() {
+    let params = CostParams::generic();
+    for (nodes, rpn) in [(12usize, 1usize), (6, 4), (4, 8)] {
+        let topo = Topology::cluster(nodes, rpn);
+        let p = topo.size();
+        let m = 16usize;
+        let inputs = inputs_i64(p, m, 7);
+        for algo in exscan::coll::paper_exscan_algorithms::<i64>() {
+            let cfg = WorldConfig::new(topo).virtual_clock(params).with_trace(true);
+            let res = run_scan(&cfg, algo.as_ref(), &ops::bxor(), &inputs).unwrap();
+            let live = res.completion_us() - params.overhead;
+            let trace = res.trace.unwrap();
+            let model = CostModel::new(params, rpn);
+            let replayed = replay_completion(&trace, &model, m * 8);
+            assert!(
+                (live - replayed).abs() < 1e-6,
+                "{} {nodes}x{rpn}: live {live} vs replay {replayed}",
+                algo.name()
+            );
+        }
+    }
+}
+
+/// Replay lets one traced run predict any m: spot-check against live runs.
+#[test]
+fn replay_predicts_other_sizes() {
+    let params = CostParams::paper_36x1();
+    let topo = Topology::cluster(36, 1);
+    let cfg = WorldConfig::new(topo).virtual_clock(params).with_trace(true);
+    let trace_run = run_scan(&cfg, &Exscan123, &ops::bxor(), &inputs_i64(36, 4, 1)).unwrap();
+    let trace = trace_run.trace.unwrap();
+    let model = CostModel::new(params, 1);
+    for m in [1usize, 100, 10_000] {
+        let live = run_scan(&cfg, &Exscan123, &ops::bxor(), &inputs_i64(36, m, 2)).unwrap();
+        let predicted = replay_completion(&trace, &model, m * 8) + params.overhead;
+        let actual = live.completion_us();
+        assert!(
+            (predicted - actual).abs() / actual < 1e-9,
+            "m={m}: predicted {predicted} vs live {actual}"
+        );
+    }
+}
+
+/// The closed-form critical-path prediction must agree with the live
+/// virtual clock on a flat topology (where the critical path is exact).
+#[test]
+fn closed_form_matches_live_flat() {
+    let params = CostParams::paper_36x1();
+    let p = 36;
+    for m in [1usize, 1000, 100_000] {
+        let cfg = WorldConfig::new(Topology::cluster(p, 1)).virtual_clock(params);
+        let live = run_scan(&cfg, &Exscan123, &ops::bxor(), &inputs_i64(p, m, 3)).unwrap();
+        let pred = predict_flat(
+            &<Exscan123 as ScanAlgorithm<i64>>::critical_skips(&Exscan123, p),
+            <Exscan123 as ScanAlgorithm<i64>>::predicted_ops(&Exscan123, p),
+            p,
+            1,
+            m * 8,
+            &params,
+        );
+        // The closed form uses the paper's q−1 ⊕ count; the live
+        // dependency chain additionally serializes the round-1 sender's
+        // W ⊕ V preparation (the paper's ternary-reduce footnote), so
+        // allow exactly one γ·bytes of slack.
+        let slack = params.gamma * (m * 8) as f64 + 1e-6;
+        let diff = (pred.time_us - live.completion_us()).abs();
+        assert!(
+            diff <= slack + 0.05 * live.completion_us(),
+            "m={m}: closed-form {:.2} vs live {:.2} (slack {slack:.2})",
+            pred.time_us,
+            live.completion_us()
+        );
+    }
+}
+
+/// Calibration must reproduce the paper's orderings (the shape claims).
+#[test]
+fn calibrated_model_reproduces_paper_shape() {
+    use exscan::bench::{table1_rows, PaperConfig};
+    let rows = table1_rows(PaperConfig::C36x1, &[1, 10_000, 100_000]).unwrap();
+    for r in &rows {
+        assert!(r.otd123 <= r.one_doubling + 1e-9);
+        assert!(r.otd123 <= r.native + 1e-9);
+    }
+    // ≥20% native→123 improvement at m = 10⁴ (paper: 25%).
+    let mid = rows.iter().find(|r| r.m == 10_000).unwrap();
+    assert!((mid.native - mid.otd123) / mid.native > 0.20);
+    // two-⊕ loses at m = 10⁵.
+    let big = rows.iter().find(|r| r.m == 100_000).unwrap();
+    assert!(big.two_op > big.otd123);
+}
+
+/// Both embedded configurations fit with sane parameters.
+#[test]
+fn calibration_reports_sane() {
+    for data in [&exscan::cost::PAPER_TABLE1_36X1, &exscan::cost::PAPER_TABLE1_36X32] {
+        let rep = exscan::cost::fit_flat(data, 8);
+        assert!(rep.rel_rmse < 0.4, "{}: {}", rep.label, rep.rel_rmse);
+        assert!(rep.native_rel_rmse < 0.4, "{}: {}", rep.label, rep.native_rel_rmse);
+        assert!(rep.params.gamma > 0.0);
+        assert!(rep.params.beta_inter + rep.params.beta_intra > 0.0);
+        // Native per-byte cost must exceed portable (that is the paper's
+        // point: the library implementation can be improved).
+        let port_b = rep.params.beta_inter.max(rep.params.beta_intra);
+        let nat_b = rep.native_params.beta_inter.max(rep.native_params.beta_intra);
+        assert!(nat_b >= port_b * 0.9, "{}: native β {nat_b} vs {port_b}", rep.label);
+    }
+}

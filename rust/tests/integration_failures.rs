@@ -1,0 +1,79 @@
+//! Failure injection: the substrate must fail *loudly and promptly* on
+//! broken coordination — a deadlocked receive reports who was waiting for
+//! what instead of hanging the suite.
+//!
+//! Run in its own test binary because it shortens the global receive
+//! timeout via `EXSCAN_RECV_TIMEOUT_MS` (process-wide, read once).
+
+use exscan::mpi::{run_world, Topology, WorldConfig};
+
+fn set_short_timeout() {
+    // Read-once: setting it repeatedly is fine, the first reader wins.
+    std::env::set_var("EXSCAN_RECV_TIMEOUT_MS", "300");
+}
+
+#[test]
+fn deadlocked_recv_reports_context() {
+    set_short_timeout();
+    let cfg = WorldConfig::new(Topology::flat(2));
+    let t0 = std::time::Instant::now();
+    let res = run_world::<i64, (), _>(&cfg, |ctx| {
+        if ctx.rank() == 1 {
+            // Wait for a message nobody sends.
+            let mut buf = [0i64];
+            ctx.recv(7, 0, &mut buf)?;
+        }
+        Ok(())
+    });
+    let err = format!("{:#}", res.unwrap_err());
+    assert!(err.contains("deadlocked"), "unexpected error: {err}");
+    assert!(err.contains("round=7"), "missing round in: {err}");
+    assert!(t0.elapsed() < std::time::Duration::from_secs(30), "must fail fast");
+}
+
+#[test]
+fn size_mismatch_is_an_error_not_corruption() {
+    set_short_timeout();
+    let cfg = WorldConfig::new(Topology::flat(2));
+    let res = run_world::<i64, (), _>(&cfg, |ctx| {
+        if ctx.rank() == 0 {
+            ctx.send(0, 1, &[1i64, 2, 3])?;
+        } else {
+            let mut buf = [0i64; 2]; // wrong size
+            ctx.recv(0, 0, &mut buf)?;
+        }
+        Ok(())
+    });
+    let err = format!("{:#}", res.unwrap_err());
+    assert!(err.contains("size mismatch"), "unexpected error: {err}");
+}
+
+#[test]
+fn wrong_round_tag_never_matches() {
+    set_short_timeout();
+    let cfg = WorldConfig::new(Topology::flat(2));
+    let res = run_world::<i64, (), _>(&cfg, |ctx| {
+        let mut buf = [0i64];
+        if ctx.rank() == 0 {
+            ctx.send(3, 1, &buf)?; // round 3…
+        } else {
+            ctx.recv(4, 0, &mut buf)?; // …can never satisfy round 4
+        }
+        Ok(())
+    });
+    assert!(res.is_err(), "round-tag matching must be strict");
+}
+
+#[test]
+fn panic_in_one_rank_fails_the_world() {
+    set_short_timeout();
+    let cfg = WorldConfig::new(Topology::flat(4));
+    let res = run_world::<i64, (), _>(&cfg, |ctx| {
+        if ctx.rank() == 3 {
+            panic!("injected rank failure");
+        }
+        Ok(())
+    });
+    let err = format!("{:#}", res.unwrap_err());
+    assert!(err.contains("injected rank failure"), "{err}");
+}

@@ -1,0 +1,122 @@
+//! End-to-end integration over the PJRT artifact path (Layers 1+2+3).
+//! Gated on `artifacts/manifest.tsv` — skipped (with a message) when the
+//! artifacts have not been built, so `cargo test` works pre-`make
+//! artifacts` too.
+
+use exscan::bench::{inputs_i64, inputs_rec2};
+use exscan::coll::validate::{assert_exscan_matches, oracle_exscan};
+use exscan::prelude::*;
+use exscan::runtime::{pjrt_bxor_i64, pjrt_rec2_compose, PjrtRuntime};
+
+fn handle() -> Option<exscan::runtime::PjrtHandle> {
+    let h = PjrtRuntime::try_default();
+    if h.is_none() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+    }
+    h
+}
+
+#[test]
+fn kernel_reduce_matches_native() {
+    let Some(h) = handle() else { return };
+    for n in [1usize, 100, 256, 1000, 5000] {
+        let a: Vec<i64> = (0..n as i64).map(|i| i * 0x9E37 ^ 0x55).collect();
+        let mut kernel = (0..n as i64).map(|i| !i).collect::<Vec<_>>();
+        let mut native = kernel.clone();
+        h.reduce_i64("bxor_i64", &a, &mut kernel).unwrap();
+        ops::bxor().reduce_local(&a, &mut native);
+        assert_eq!(kernel, native, "n={n}");
+    }
+}
+
+#[test]
+fn kernel_reduce_sum_and_max() {
+    let Some(h) = handle() else { return };
+    let a: Vec<i64> = (0..777).map(|i| i - 300).collect();
+    let mut s = vec![10i64; 777];
+    h.reduce_i64("sum_i64", &a, &mut s).unwrap();
+    assert_eq!(s[0], -290);
+    assert_eq!(s[400], 110);
+    let mut mx = vec![0i64; 777];
+    h.reduce_i64("max_i64", &a, &mut mx).unwrap();
+    assert_eq!(mx[0], 0);
+    assert_eq!(mx[500], 200);
+}
+
+#[test]
+fn kernel_too_large_is_clean_error() {
+    let Some(h) = handle() else { return };
+    let n = 200_000; // larger than the biggest artifact (131072)
+    let a = vec![1i64; n];
+    let mut b = vec![0i64; n];
+    let err = h.reduce_i64("bxor_i64", &a, &mut b).unwrap_err();
+    assert!(format!("{err}").contains("no reduce artifact"), "{err}");
+}
+
+#[test]
+fn exscan_with_pjrt_operator_all_algorithms() {
+    let Some(h) = handle() else { return };
+    let p = 9;
+    let m = 300;
+    let inputs = inputs_i64(p, m, 21);
+    let world = WorldConfig::new(Topology::flat(p));
+    for algo in exscan::coll::paper_exscan_algorithms::<i64>() {
+        let op = pjrt_bxor_i64(h.clone());
+        let res = run_scan(&world, algo.as_ref(), &op, &inputs).unwrap();
+        assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+    }
+}
+
+#[test]
+fn matrec_kernel_exscan_matches_native_oracle() {
+    let Some(h) = handle() else { return };
+    let p = 7;
+    let m = 40;
+    let inputs = inputs_rec2(p, m, 5);
+    let world = WorldConfig::new(Topology::flat(p));
+    let op = pjrt_rec2_compose(h.clone());
+    let res = run_scan(&world, &Exscan123, &op, &inputs).unwrap();
+    let oracle = oracle_exscan(&inputs, &ops::rec2_compose());
+    for r in 1..p {
+        let e = oracle[r].as_ref().unwrap();
+        for (a, b) in res.outputs[r].iter().zip(e) {
+            for i in 0..4 {
+                assert!((a.a[i] - b.a[i]).abs() < 1e-2, "r={r}");
+            }
+            for i in 0..2 {
+                assert!((a.b[i] - b.b[i]).abs() < 1e-2, "r={r}");
+            }
+        }
+    }
+}
+
+#[test]
+fn block_exscan_kernel_matches_sequential() {
+    let Some(h) = handle() else { return };
+    let k = 32;
+    for m in [1usize, 17, 256] {
+        let data: Vec<i64> = (0..k * m).map(|i| (i as i64).wrapping_mul(0x2545F49)).collect();
+        let out = h.block_exscan_i64("bxor_i64", k, &data).unwrap();
+        // Row j = XOR of rows 0..j.
+        let mut acc = vec![0i64; m];
+        for j in 0..k {
+            assert_eq!(&out[j * m..(j + 1) * m], &acc[..], "row {j} m={m}");
+            for c in 0..m {
+                acc[c] ^= data[j * m + c];
+            }
+        }
+    }
+}
+
+#[test]
+fn runtime_stats_accumulate() {
+    let Some(h) = handle() else { return };
+    let before = h.stats().unwrap();
+    let a = vec![1i64; 64];
+    let mut b = vec![2i64; 64];
+    h.reduce_i64("bxor_i64", &a, &mut b).unwrap();
+    h.reduce_i64("bxor_i64", &a, &mut b).unwrap();
+    let after = h.stats().unwrap();
+    assert!(after.launches >= before.launches + 2);
+    assert!(after.elements >= before.elements + 128);
+}

@@ -1,0 +1,130 @@
+//! Transport- and harness-level integration: larger worlds, hierarchical
+//! virtual topologies, the benchmark harness end to end, selection, and
+//! failure handling.
+
+use exscan::bench::{inputs_i64, measure_exscan, BenchConfig, Harness};
+use exscan::coll::validate::assert_exscan_matches;
+use exscan::prelude::*;
+
+#[test]
+fn large_thread_world_correct() {
+    // 300 real threads through the full algorithm (beyond any p the unit
+    // tests touch).
+    let p = 300;
+    let inputs = inputs_i64(p, 5, 1);
+    let cfg = WorldConfig::new(Topology::flat(p));
+    let res = run_scan(&cfg, &Exscan123, &ops::bxor(), &inputs).unwrap();
+    assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+}
+
+#[test]
+fn virtual_1152_rank_cluster() {
+    // The paper's large configuration end to end, with trace + checks.
+    let topo = Topology::cluster(36, 32);
+    let p = topo.size();
+    let inputs = inputs_i64(p, 4, 2);
+    let cfg = WorldConfig::new(topo)
+        .virtual_clock(CostParams::paper_36x32())
+        .with_trace(true);
+    let res = run_scan(&cfg, &Exscan123, &ops::bxor(), &inputs).unwrap();
+    assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+    assert!(res.completion_us() > 0.0);
+    let trace = res.trace.unwrap();
+    assert_eq!(trace.total_rounds(), 11); // ⌈log₂(1151) + log₂(4/3)⌉
+    assert!(exscan::trace::check_all(&trace).is_empty());
+}
+
+#[test]
+fn hierarchical_virtual_times_exceed_flat_intra() {
+    // Crossing nodes costs more: a 2x8 cluster with expensive inter links
+    // must complete slower than a 1x16 single node under the same params.
+    let params = CostParams {
+        alpha_intra: 0.5,
+        alpha_inter: 5.0,
+        beta_intra: 1e-5,
+        beta_inter: 1e-3,
+        gamma: 1e-5,
+        overhead: 0.0,
+    };
+    let inputs = inputs_i64(16, 64, 3);
+    let flat = WorldConfig::new(Topology::cluster(1, 16)).virtual_clock(params);
+    let split = WorldConfig::new(Topology::cluster(2, 8)).virtual_clock(params);
+    let t_flat = run_scan(&flat, &Exscan123, &ops::bxor(), &inputs).unwrap().completion_us();
+    let t_split = run_scan(&split, &Exscan123, &ops::bxor(), &inputs).unwrap().completion_us();
+    assert!(t_split > t_flat, "split {t_split} must exceed flat {t_flat}");
+}
+
+#[test]
+fn harness_sweep_returns_grid() {
+    let world = WorldConfig::new(Topology::flat(8));
+    let h = Harness::new(world, BenchConfig { warmups: 1, reps: 4, validate: true });
+    let algos: Vec<Box<dyn ScanAlgorithm<i64>>> = exscan::coll::paper_exscan_algorithms();
+    let refs: Vec<&dyn ScanAlgorithm<i64>> = algos.iter().map(|a| a.as_ref()).collect();
+    let out = h
+        .sweep(&refs, &ops::bxor(), &[1, 16], |p, m| inputs_i64(p, m, 9))
+        .unwrap();
+    assert_eq!(out.len(), 8); // 4 algos × 2 sizes
+    assert!(out.iter().all(|m| m.min_us > 0.0 && m.min_us <= m.mean_us + 1e-9));
+}
+
+#[test]
+fn measure_validates_outputs() {
+    // BenchConfig.validate catches a broken "algorithm": use inclusive
+    // scan where an exclusive one is expected → the oracle check panics.
+    let world = WorldConfig::new(Topology::flat(4));
+    let bench = BenchConfig { warmups: 0, reps: 1, validate: true };
+    let inputs = inputs_i64(4, 4, 4);
+    let result = std::panic::catch_unwind(|| {
+        let _ = measure_exscan(&world, &bench, &ScanDoubling, &ops::bxor(), &inputs);
+    });
+    assert!(result.is_err(), "validation must reject an inclusive scan");
+}
+
+#[test]
+fn selection_prefers_123_small_pipeline_large() {
+    use exscan::coll::select_exscan;
+    let params = CostParams::paper_36x1();
+    let small = select_exscan::<i64>(36, 4, &params, 1);
+    assert!(small.name().contains("doubling"), "{}", small.name());
+    let huge = select_exscan::<i64>(8, 4_000_000, &params, 1);
+    assert_eq!(huge.name(), "pipelined-chain");
+}
+
+#[test]
+fn zero_and_one_rank_worlds() {
+    let inputs = inputs_i64(1, 8, 5);
+    let cfg = WorldConfig::new(Topology::flat(1));
+    for algo in exscan::coll::all_exscan_algorithms::<i64>() {
+        let res = run_scan(&cfg, algo.as_ref(), &ops::bxor(), &inputs).unwrap();
+        assert_eq!(res.outputs.len(), 1, "{}", algo.name());
+    }
+}
+
+#[test]
+fn mixed_dtype_worlds() {
+    // f64 sums across a 10-rank world (tolerance compare).
+    let p = 10;
+    let inputs: Vec<Vec<f64>> =
+        (0..p).map(|r| (0..16).map(|i| (r * 16 + i) as f64 * 0.25).collect()).collect();
+    let cfg = WorldConfig::new(Topology::flat(p));
+    let res = run_scan(&cfg, &Exscan123, &ops::sum_f64(), &inputs).unwrap();
+    for r in 1..p {
+        for i in 0..16 {
+            let expect: f64 = (0..r).map(|j| (j * 16 + i) as f64 * 0.25).sum();
+            assert!((res.outputs[r][i] - expect).abs() < 1e-9, "r={r} i={i}");
+        }
+    }
+}
+
+#[test]
+fn tuning_table_covers_grid() {
+    use exscan::coll::TuningTable;
+    let t = TuningTable::build(vec![8, 64, 512], CostParams::paper_36x1(), 1);
+    assert_eq!(t.choice.len(), 3);
+    for row in &t.choice {
+        assert_eq!(row.len(), t.size_buckets.len());
+        for name in row {
+            assert!(exscan::coll::exscan_by_name::<i64>(name).is_some(), "{name}");
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Property tests over the whole collective library (the "proptest on
+//! coordinator invariants" suite, using the in-tree quickcheck harness).
+//!
+//! For random (algorithm, p, m, operator, seed):
+//!   * the parallel result equals the sequential oracle (rank 0 ignored
+//!     for exclusive scans),
+//!   * the trace satisfies the one-ported + matching invariants,
+//!   * measured rounds equal the closed form,
+//!   * ⊕ counts respect the paper's bounds,
+//!   * the virtual clock is deterministic and positive.
+
+use exscan::bench::{inputs_i64, inputs_rec2};
+use exscan::coll::validate::{assert_exscan_matches, oracle_exscan};
+use exscan::prelude::*;
+use exscan::util::quickcheck::{cases, forall};
+
+fn random_world(g: &mut exscan::util::quickcheck::Gen) -> (usize, usize, u64) {
+    let p = g.usize_in(2, 48).max(2);
+    let m = g.usize_in(0, 64);
+    let seed = g.u64();
+    (p, m, seed)
+}
+
+#[test]
+fn all_exscan_algorithms_match_oracle_bxor() {
+    forall(cases(60), |g| {
+        let (p, m, seed) = random_world(g);
+        let algos = exscan::coll::all_exscan_algorithms::<i64>();
+        let algo = g.choose(&algos);
+        let inputs = inputs_i64(p, m, seed);
+        let cfg = WorldConfig::new(Topology::flat(p));
+        let res = run_scan(&cfg, algo.as_ref(), &ops::bxor(), &inputs).unwrap();
+        assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+    });
+}
+
+#[test]
+fn all_exscan_algorithms_match_oracle_sum() {
+    forall(cases(40), |g| {
+        let (p, m, seed) = random_world(g);
+        let algos = exscan::coll::all_exscan_algorithms::<i64>();
+        let algo = g.choose(&algos);
+        let inputs = inputs_i64(p, m, seed);
+        let cfg = WorldConfig::new(Topology::flat(p));
+        let res = run_scan(&cfg, algo.as_ref(), &ops::sum_i64(), &inputs).unwrap();
+        assert_exscan_matches(&inputs, &ops::sum_i64(), &res.outputs);
+    });
+}
+
+#[test]
+fn noncommutative_operator_order_preserved_everywhere() {
+    forall(cases(30), |g| {
+        let p = g.usize_in(2, 33).max(2);
+        let m = g.usize_in(1, 8).max(1);
+        let seed = g.u64();
+        let algos = exscan::coll::all_exscan_algorithms::<Rec2>();
+        let algo = g.choose(&algos);
+        let inputs = inputs_rec2(p, m, seed);
+        let cfg = WorldConfig::new(Topology::flat(p));
+        let res = run_scan(&cfg, algo.as_ref(), &ops::rec2_compose(), &inputs).unwrap();
+        let oracle = oracle_exscan(&inputs, &ops::rec2_compose());
+        for r in 1..p {
+            let expect = oracle[r].as_ref().unwrap();
+            for (a, b) in res.outputs[r].iter().zip(expect) {
+                for i in 0..4 {
+                    assert!(
+                        (a.a[i] - b.a[i]).abs() < 1e-2,
+                        "{} p={p} r={r}: {:?} vs {:?}",
+                        algo.name(),
+                        a,
+                        b
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn traced_rounds_equal_closed_forms() {
+    forall(cases(40), |g| {
+        let p = g.usize_in(2, 70).max(2);
+        let algos = exscan::coll::paper_exscan_algorithms::<i64>();
+        let algo = g.choose(&algos);
+        let inputs = inputs_i64(p, 3, g.u64());
+        let cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+        let res = run_scan(&cfg, algo.as_ref(), &ops::bxor(), &inputs).unwrap();
+        let trace = res.trace.unwrap();
+        assert_eq!(
+            trace.total_rounds(),
+            algo.predicted_rounds(p),
+            "{} p={p}",
+            algo.name()
+        );
+        assert!(
+            exscan::trace::check_all(&trace).is_empty(),
+            "{} p={p} violates invariants",
+            algo.name()
+        );
+    });
+}
+
+#[test]
+fn op_counts_respect_paper_bounds() {
+    forall(cases(40), |g| {
+        let p = g.usize_in(2, 80).max(2);
+        let inputs = inputs_i64(p, 2, g.u64());
+        let cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+
+        // 123: last rank exactly q-1; no rank exceeds q.
+        let res = run_scan(&cfg, &Exscan123, &ops::bxor(), &inputs).unwrap();
+        let tr = res.trace.unwrap();
+        let q = <Exscan123 as ScanAlgorithm<i64>>::predicted_rounds(&Exscan123, p);
+        assert_eq!(tr.last_rank_ops(), q.saturating_sub(1), "p={p}");
+        assert!(tr.max_ops() <= q, "p={p}");
+
+        // 1-doubling: max == ceil(log2(p-1)) — no send-side preparation.
+        let res = run_scan(&cfg, &ExscanOneDoubling, &ops::bxor(), &inputs).unwrap();
+        let tr = res.trace.unwrap();
+        assert_eq!(
+            tr.max_ops(),
+            <ExscanOneDoubling as ScanAlgorithm<i64>>::predicted_ops(&ExscanOneDoubling, p),
+            "p={p}"
+        );
+
+        // two-op: never exceeds the paper's 2⌈log₂p⌉−1 critical-chain
+        // count, and pays the extra-⊕ penalty vs the inclusive scan.
+        let res = run_scan(&cfg, &ExscanTwoOp, &ops::bxor(), &inputs).unwrap();
+        let tr = res.trace.unwrap();
+        let bound = <ExscanTwoOp as ScanAlgorithm<i64>>::predicted_ops(&ExscanTwoOp, p);
+        assert!(tr.max_ops() <= bound, "p={p}: {} > {bound}", tr.max_ops());
+        if p >= 8 {
+            assert!(tr.max_ops() > exscan::util::ceil_log2(p) - 1, "penalty p={p}");
+        }
+    });
+}
+
+#[test]
+fn virtual_clock_deterministic_and_ordered() {
+    forall(cases(25), |g| {
+        let p = g.usize_in(2, 40).max(2);
+        let m = g.usize_in(1, 32).max(1);
+        let seed = g.u64();
+        let inputs = inputs_i64(p, m, seed);
+        let cfg = WorldConfig::new(Topology::cluster(p, 1)).virtual_clock(CostParams::generic());
+        let a = run_scan(&cfg, &Exscan123, &ops::bxor(), &inputs).unwrap();
+        let b = run_scan(&cfg, &Exscan123, &ops::bxor(), &inputs).unwrap();
+        assert_eq!(a.times_us, b.times_us, "virtual clock must be deterministic");
+        assert!(a.completion_us() > 0.0);
+        // Completion is bounded below by rounds * alpha (the model floor).
+        let q = <Exscan123 as ScanAlgorithm<i64>>::predicted_rounds(&Exscan123, p) as f64;
+        assert!(a.completion_us() >= q * CostParams::generic().alpha_inter - 1e-9);
+    });
+}
+
+#[test]
+fn pipelined_chain_random_blocks() {
+    forall(cases(30), |g| {
+        let p = g.usize_in(2, 20).max(2);
+        let m = g.usize_in(0, 200);
+        let b = g.usize_in(1, 32).max(1);
+        let inputs = inputs_i64(p, m, g.u64());
+        let algo = exscan::coll::PipelinedChain::with_blocks(b);
+        let cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+        let res = run_scan(&cfg, &algo, &ops::bxor(), &inputs).unwrap();
+        assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+        let tr = res.trace.unwrap();
+        assert!(exscan::trace::check_all(&tr).is_empty(), "p={p} m={m} b={b}");
+        assert_eq!(tr.total_rounds(), algo.rounds_for(p, m), "p={p} m={m} b={b}");
+    });
+}
+
+#[test]
+fn inclusive_scan_property() {
+    forall(cases(30), |g| {
+        let p = g.usize_in(1, 50).max(1);
+        let m = g.usize_in(1, 32).max(1);
+        let inputs = inputs_i64(p, m, g.u64());
+        let cfg = WorldConfig::new(Topology::flat(p));
+        let res = run_scan(&cfg, &ScanDoubling, &ops::bxor(), &inputs).unwrap();
+        let oracle = exscan::coll::oracle_scan(&inputs, &ops::bxor());
+        assert_eq!(res.outputs, oracle);
+    });
+}
+
+#[test]
+fn hierarchical_random_node_shapes() {
+    forall(cases(25), |g| {
+        let k = g.usize_in(1, 8).max(1);
+        let nodes = g.usize_in(1, 6).max(1);
+        // p not necessarily divisible by k: exercise the short-last-node path.
+        let p = (nodes * k).saturating_sub(g.usize_in(0, k - 1)).max(2);
+        let m = g.usize_in(1, 16).max(1);
+        let algo = exscan::coll::ExscanHierarchical::new(k);
+        let inputs = inputs_i64(p, m, g.u64());
+        let cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+        let res = run_scan(&cfg, &algo, &ops::bxor(), &inputs).unwrap();
+        assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+        let tr = res.trace.unwrap();
+        assert!(
+            exscan::trace::check_all(&tr).is_empty(),
+            "invariants p={p} k={k}"
+        );
+    });
+}
+
+#[test]
+fn segmented_scan_random_boundaries() {
+    use exscan::coll::{seg_sum_i64, Seg};
+    forall(cases(25), |g| {
+        let p = g.usize_in(2, 40).max(2);
+        let counts: Vec<i64> = (0..p).map(|_| (g.u64() % 100) as i64).collect();
+        let starts: Vec<bool> =
+            (0..p).map(|r| r == 0 || g.bool() && g.bool()).collect(); // ~25% starts
+        let inputs: Vec<Vec<Seg<i64>>> =
+            (0..p).map(|r| vec![Seg::new(starts[r], counts[r])]).collect();
+        let cfg = WorldConfig::new(Topology::flat(p));
+        let res = run_scan(&cfg, &Exscan123, &seg_sum_i64(), &inputs).unwrap();
+        for r in 1..p {
+            if starts[r] {
+                continue; // exclusive prefix at a segment start is ignored
+            }
+            let seg_start = (0..=r - 1).rev().find(|&s| starts[s]).unwrap_or(0);
+            let expect: i64 = counts[seg_start..r].iter().sum();
+            assert_eq!(res.outputs[r][0].val, expect, "p={p} r={r}");
+        }
+    });
+}
