@@ -1,19 +1,29 @@
-//! Bench: L3 hot-path microbenchmarks (§Perf in EXPERIMENTS.md).
+//! Bench: L3 hot-path microbenchmarks (EXPERIMENTS.md §Perf).
 //!
-//! Measures the building blocks every communication round is made of so
-//! the per-round software overhead can be compared against the modelled
-//! α (≈1.2 µs inter-node): if a full in-process round costs ≪ α, the
-//! simulation's timing is dominated by the model, not the substrate, and
-//! the real-transport benches measure algorithm structure, not runtime
-//! noise.
+//! The paper's argument lives or dies on per-round cost, so the transport
+//! under every algorithm must be cheap enough that the measured gap
+//! between `Exscan123` and the ⌈log₂ p⌉+1-round baselines reflects round
+//! structure, not allocator/scheduler noise. This bench quantifies that:
 //!
-//!   * channel push/pop latency (the transport primitive)
-//!   * ping-pong sendrecv round trip between two rank threads
-//!   * reduce_local throughput (native ⊕ over large vectors)
-//!   * world spawn/teardown cost vs p (the once-per-benchmark cost)
+//!   * **ring round-trip** on the current slot/pool transport vs the v0
+//!     "legacy" transport (one Mutex+Condvar MPMC mailbox per rank,
+//!     per-message `Box` allocation, O(pending) linear matching —
+//!     faithfully reconstructed below) at p ∈ {4, 16, 32};
+//!   * channel push/pop latency (the legacy primitive, kept for the
+//!     executor job queues);
+//!   * reduce_local throughput (native ⊕ over large vectors);
+//!   * world spawn/teardown vs persistent-executor job submission — the
+//!     cost `Harness::sweep` no longer pays per (algorithm, m) point;
+//!   * one full 123-doubling at p=36 end to end.
+//!
+//! Writes the machine-readable trajectory record `BENCH_hotpath.json`
+//! (schema `exscan-hotpath-v1`). Pass `--quick` for the CI smoke run.
 
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
+use exscan::bench::{hotpath_json, HotpathPoint};
+use exscan::mpi::World;
 use exscan::prelude::*;
 use exscan::util::Channel;
 
@@ -25,62 +35,256 @@ fn bench_ns<F: FnMut()>(iters: usize, mut f: F) -> f64 {
     t0.elapsed().as_nanos() as f64 / iters as f64
 }
 
+// ───────────────────────── legacy transport (v0) ─────────────────────────
+// The pre-slot transport, reconstructed verbatim so before/after runs on
+// the same machine in the same binary: one MPMC channel per rank, a boxed
+// allocation per message, linear (src, tag) matching over `pending`.
+
+#[derive(Debug)]
+struct LegacyMsg {
+    src: usize,
+    tag: u64,
+    data: Box<[i64]>,
+}
+
+fn legacy_take(
+    mailbox: &Channel<LegacyMsg>,
+    pending: &mut Vec<LegacyMsg>,
+    from: usize,
+    tag: u64,
+) -> LegacyMsg {
+    if let Some(i) = pending.iter().position(|m| m.src == from && m.tag == tag) {
+        return pending.swap_remove(i);
+    }
+    loop {
+        let msg = mailbox.pop_timeout(Duration::from_secs(60)).expect("legacy deadlock");
+        if msg.src == from && msg.tag == tag {
+            return msg;
+        }
+        pending.push(msg);
+    }
+}
+
+/// Warm-up rounds excluded from both transports' timed windows.
+const WARM_ROUNDS: u32 = 64;
+
+/// One rendezvous ring (each rank sendrecvs once per round) on the legacy
+/// transport; returns wall nanoseconds per round, max over ranks.
+///
+/// Symmetric with [`slot_ring_ns`]: thread spawn/join and `WARM_ROUNDS`
+/// cold-start rounds happen *outside* the timed barrier-to-barrier window.
+fn legacy_ring_ns(p: usize, rounds: u32) -> f64 {
+    let mailboxes: Arc<Vec<Channel<LegacyMsg>>> =
+        Arc::new((0..p).map(|_| Channel::new()).collect());
+    let barrier = Arc::new(std::sync::Barrier::new(p));
+    let worst_ns = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(p);
+        for r in 0..p {
+            let mailboxes = Arc::clone(&mailboxes);
+            let barrier = Arc::clone(&barrier);
+            handles.push(scope.spawn(move || {
+                let mut pending = Vec::new();
+                let sbuf = [r as i64];
+                let mut ring = |k: u32| {
+                    let msg = LegacyMsg {
+                        src: r,
+                        tag: k as u64,
+                        data: sbuf.to_vec().into_boxed_slice(), // per-message alloc
+                    };
+                    if mailboxes[(r + 1) % p].push(msg).is_err() {
+                        panic!("legacy mailbox closed");
+                    }
+                    let got =
+                        legacy_take(&mailboxes[r], &mut pending, (r + p - 1) % p, k as u64);
+                    assert_eq!(got.data.len(), 1);
+                };
+                for k in 0..WARM_ROUNDS {
+                    ring(k);
+                }
+                barrier.wait();
+                let t0 = Instant::now();
+                for k in 0..rounds {
+                    ring(WARM_ROUNDS + k);
+                }
+                barrier.wait();
+                t0.elapsed().as_nanos() as f64
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).fold(0.0f64, f64::max)
+    });
+    worst_ns / rounds as f64
+}
+
+/// The same ring on the current slot/pool transport through the full
+/// `RankCtx::sendrecv` path, on a persistent world. Same protocol as
+/// [`legacy_ring_ns`]: warm-up, barrier, timed rounds, barrier; max over
+/// ranks. Job submission overhead sits outside the barriers.
+fn slot_ring_ns(world: &World<i64>, rounds: u32) -> f64 {
+    let worst_ns = world
+        .run(|ctx| {
+            let p = ctx.size();
+            let r = ctx.rank();
+            let sbuf = [r as i64];
+            let mut rbuf = [0i64];
+            for k in 0..WARM_ROUNDS {
+                ctx.sendrecv(k, (r + 1) % p, &sbuf, (r + p - 1) % p, &mut rbuf)?;
+            }
+            ctx.barrier();
+            let t0 = Instant::now();
+            for k in 0..rounds {
+                ctx.sendrecv(WARM_ROUNDS + k, (r + 1) % p, &sbuf, (r + p - 1) % p, &mut rbuf)?;
+            }
+            ctx.barrier();
+            Ok(t0.elapsed().as_nanos() as f64)
+        })
+        .unwrap()
+        .into_iter()
+        .fold(0.0f64, f64::max);
+    worst_ns / rounds as f64
+}
+
 fn main() -> anyhow::Result<()> {
-    // Channel push/pop, same thread (pure queue cost).
+    let quick = std::env::args().any(|a| a == "--quick");
+    let ring_rounds: u32 = if quick { 2_000 } else { 50_000 };
+
+    // ── Transport comparison: the tentpole before/after ──
+    let mut points = Vec::new();
+    println!("ring rendezvous, {ring_rounds} rounds, one sendrecv per rank per round:");
+    for p in [4usize, 16, 32] {
+        let legacy_ns = legacy_ring_ns(p, ring_rounds);
+        let world: World<i64> = World::new(WorldConfig::new(Topology::flat(p)));
+        let slot_ns = slot_ring_ns(&world, ring_rounds);
+        let to_rate = |ns_per_round: f64| p as f64 / (ns_per_round * 1e-9);
+        println!(
+            "  p={p:>2}: legacy {legacy_ns:>9.1} ns/round   slot-pool {slot_ns:>9.1} ns/round   speedup {:>5.2}x",
+            legacy_ns / slot_ns
+        );
+        points.push(HotpathPoint {
+            transport: "legacy-mpmc".into(),
+            p,
+            rounds: ring_rounds as usize,
+            msgs_per_sec: to_rate(legacy_ns),
+            ns_per_round: legacy_ns,
+        });
+        points.push(HotpathPoint {
+            transport: "slot-pool".into(),
+            p,
+            rounds: ring_rounds as usize,
+            msgs_per_sec: to_rate(slot_ns),
+            ns_per_round: slot_ns,
+        });
+    }
+
+    // ── Channel push/pop, same thread (the executor-queue primitive). ──
     let ch: Channel<u64> = Channel::new();
-    let ns = bench_ns(1_000_000, || {
+    let iters = if quick { 100_000 } else { 1_000_000 };
+    let ns = bench_ns(iters, || {
         ch.push(1).unwrap();
         ch.try_pop().unwrap();
     });
     println!("channel push+pop (1 thread):     {ns:>9.1} ns");
 
-    // Cross-thread ping-pong through the full RankCtx sendrecv path.
-    let world = WorldConfig::new(Topology::flat(2));
-    let iters = 50_000u32;
-    let t0 = Instant::now();
-    exscan::mpi::run_world::<i64, (), _>(&world, |ctx| {
-        let peer = 1 - ctx.rank();
-        let sbuf = [0i64];
-        let mut rbuf = [0i64];
-        for k in 0..iters {
-            ctx.sendrecv(k, peer, &sbuf, peer, &mut rbuf)?;
-        }
-        Ok(())
-    })?;
-    let ns = t0.elapsed().as_nanos() as f64 / iters as f64;
-    println!("sendrecv round trip (2 threads): {ns:>9.1} ns  (model α = 1155 ns)");
-
-    // reduce_local throughput.
+    // ── reduce_local throughput. ──
     let op = ops::bxor();
     for m in [1usize, 1000, 100_000] {
         let a = vec![0x5aa5_5aa5i64; m];
         let mut b = vec![-1i64; m];
-        let ns = bench_ns(if m > 10_000 { 2_000 } else { 200_000 }, || {
+        let iters = if m > 10_000 { 2_000 } else { 200_000 };
+        let ns = bench_ns(if quick { iters / 10 } else { iters }, || {
             op.reduce_local(&a, &mut b);
         });
         let gbps = (m as f64 * 8.0) / ns;
         println!("reduce_local m={m:>7}:           {ns:>9.1} ns  ({gbps:>6.2} GB/s)");
     }
 
-    // World spawn/teardown (the fixed cost amortized by the rep loop).
-    for p in [16usize, 144, 1152] {
-        let world = WorldConfig::new(Topology::flat(p));
-        let iters = if p > 500 { 3 } else { 20 };
-        let ns = bench_ns(iters, || {
-            exscan::mpi::run_world::<i64, usize, _>(&world, |ctx| Ok(ctx.rank())).unwrap();
+    // ── World spawn/teardown vs persistent job submit at the same p. ──
+    let mut spawn_meta = Vec::new();
+    for p in [16usize, 144] {
+        let cfg = WorldConfig::new(Topology::flat(p));
+        let iters = if quick { 3 } else { 20 };
+        let spawn_ns = bench_ns(iters, || {
+            exscan::mpi::run_world::<i64, usize, _>(&cfg, |ctx| Ok(ctx.rank())).unwrap();
         });
-        println!("world spawn+join p={p:>5}:        {:>9.2} ms", ns / 1e6);
+        let world: World<i64> = World::new(cfg);
+        let submit_ns = bench_ns(iters * 10, || {
+            world.run(|ctx| Ok(ctx.rank())).unwrap();
+        });
+        println!(
+            "p={p:>4}: spawn+join {:>9.2} ms/run   persistent submit {:>9.3} ms/run   ({:.1}x)",
+            spawn_ns / 1e6,
+            submit_ns / 1e6,
+            spawn_ns / submit_ns
+        );
+        spawn_meta.push(format!(
+            "p={p}: spawn={:.2}ms submit={:.3}ms",
+            spawn_ns / 1e6,
+            submit_ns / 1e6
+        ));
     }
 
-    // End-to-end: one full 123-doubling at p=36 on the thread transport.
-    let world = WorldConfig::new(Topology::flat(36));
+    // ── End-to-end: one full 123-doubling at p=36 on the new transport. ──
+    let world36: World<i64> = World::new(WorldConfig::new(Topology::flat(36)));
     let inputs = exscan::bench::inputs_i64(36, 1000, 1);
-    let bench = exscan::bench::BenchConfig { warmups: 10, reps: 100, validate: false };
-    let meas = exscan::bench::measure_exscan(&world, &bench, &Exscan123, &ops::bxor(), &inputs)?;
+    let bench = if quick {
+        exscan::bench::BenchConfig::quick()
+    } else {
+        exscan::bench::BenchConfig { warmups: 10, reps: 100, validate: false }
+    };
+    let meas = exscan::bench::measure_exscan_world(
+        &world36,
+        &bench,
+        &Exscan123,
+        &ops::bxor(),
+        &inputs,
+    )?;
     println!(
         "123-doubling p=36 m=1000 (real):  {:>8.1} µs min, {:.1} µs mean",
         meas.min_us, meas.mean_us
     );
+
+    // ── Trajectory record. ──
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0);
+    let meta = vec![
+        ("bench", "hotpath".to_string()),
+        ("mode", if quick { "quick".into() } else { "full".into() }),
+        ("os", std::env::consts::OS.to_string()),
+        ("arch", std::env::consts::ARCH.to_string()),
+        ("cores", cores.to_string()),
+        ("spawn_vs_submit", spawn_meta.join("; ")),
+        (
+            "e2e_123_p36_m1000",
+            format!("min={:.1}us mean={:.1}us", meas.min_us, meas.mean_us),
+        ),
+    ];
+    let json = hotpath_json(&meta, &points);
+    std::fs::write("BENCH_hotpath.json", &json)?;
+    println!("wrote BENCH_hotpath.json");
+
+    // Regression gate: the slot transport must be strictly faster than
+    // legacy. Only enforced where the measurement is meaningful — ring
+    // rendezvous at p threads on a c-core host is scheduler-bound once
+    // p > c, so oversubscribed points are reported but not gated (shared
+    // CI runners have 2–4 cores). The 2x acceptance bar for this PR is
+    // read off the full run on an idle multi-core host (EXPERIMENTS.md).
+    for p in [4usize, 16, 32] {
+        if p > cores {
+            println!("gate: skipping p={p} (> {cores} cores, oversubscribed)");
+            continue;
+        }
+        let ns_of = |t: &str| {
+            points
+                .iter()
+                .find(|x| x.transport == t && x.p == p)
+                .map(|x| x.ns_per_round)
+                .unwrap()
+        };
+        assert!(
+            ns_of("slot-pool") < ns_of("legacy-mpmc"),
+            "slot transport regressed at p={p}: {:.1} ns vs legacy {:.1} ns",
+            ns_of("slot-pool"),
+            ns_of("legacy-mpmc")
+        );
+    }
     println!("hotpath bench done");
     Ok(())
 }

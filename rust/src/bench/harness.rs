@@ -7,14 +7,17 @@
 //! * per repetition the time of the **slowest** rank is taken;
 //! * over repetitions the **minimum** of those maxima is reported.
 //!
-//! Threads are spawned once per (algorithm, m) and reused across all
-//! repetitions — repetition cost is pure algorithm execution, as in MPI.
+//! All measurement flows through one persistent [`World`] executor: rank
+//! threads are spawned once per sweep (not once per (algorithm, m) point)
+//! and repetition cost is pure algorithm execution, as in MPI. Transport
+//! buffer pools stay warm across points, so steady-state rounds never
+//! touch the allocator (EXPERIMENTS.md §Perf).
 
 use anyhow::Result;
 
 use crate::coll::ScanAlgorithm;
 use crate::mpi::ctx::ClockMode;
-use crate::mpi::{run_world, Elem, OpRef, WorldConfig};
+use crate::mpi::{Elem, OpRef, World, WorldConfig};
 use crate::util::Summary;
 
 /// Repetition policy. `Default` matches the paper: 15 warmups, 200 reps.
@@ -53,12 +56,14 @@ pub struct Measurement {
     pub reps: usize,
 }
 
-/// Measure one exclusive-scan algorithm at vector length `m`.
+/// Measure one exclusive-scan algorithm at vector length `m` on a
+/// persistent [`World`] — the sweep-friendly entry point: the caller
+/// amortizes the p thread spawns over every (algorithm, m) point.
 ///
 /// In virtual-clock mode the result is deterministic, so a single
 /// repetition (and no warmup) is executed regardless of `bench.reps`.
-pub fn measure_exscan<T: Elem>(
-    world: &WorldConfig,
+pub fn measure_exscan_world<T: Elem>(
+    world: &World<T>,
     bench: &BenchConfig,
     algo: &dyn ScanAlgorithm<T>,
     op: &OpRef<T>,
@@ -67,16 +72,15 @@ pub fn measure_exscan<T: Elem>(
     let p = world.size();
     assert_eq!(inputs.len(), p);
     let m = inputs[0].len();
-    let virtual_mode = matches!(world.mode, ClockMode::Virtual(_));
-    let overhead = match &world.mode {
+    let virtual_mode = matches!(world.config().mode, ClockMode::Virtual(_));
+    let overhead = match &world.config().mode {
         ClockMode::Virtual(model) => model.params.overhead,
         ClockMode::Real => 0.0,
     };
-    let (warmups, reps) =
-        if virtual_mode { (0, 1) } else { (bench.warmups, bench.reps) };
+    let (warmups, reps) = if virtual_mode { (0, 1) } else { (bench.warmups, bench.reps) };
 
     // per-rank: Vec of per-rep times + the final output for validation.
-    let per_rank = run_world::<T, (Vec<f64>, Vec<T>), _>(world, |ctx| {
+    let per_rank = world.run(|ctx| {
         // Borrow the rank's input directly (no per-rank clone: at p = 1152,
         // m = 100 000 a clone would copy ~1 GB per measurement — §Perf).
         let input = &inputs[ctx.rank()];
@@ -131,6 +135,20 @@ pub fn measure_exscan<T: Elem>(
     })
 }
 
+/// One-shot convenience wrapper: build a world, measure one point, tear it
+/// down. Prefer [`measure_exscan_world`] (or [`Harness::sweep`]) when
+/// measuring more than one (algorithm, m) point per configuration.
+pub fn measure_exscan<T: Elem>(
+    world: &WorldConfig,
+    bench: &BenchConfig,
+    algo: &dyn ScanAlgorithm<T>,
+    op: &OpRef<T>,
+    inputs: &[Vec<T>],
+) -> Result<Measurement> {
+    let w = World::new(world.clone());
+    measure_exscan_world(&w, bench, algo, op, inputs)
+}
+
 /// Convenience wrapper bundling a world + bench policy.
 pub struct Harness {
     pub world: WorldConfig,
@@ -143,6 +161,10 @@ impl Harness {
     }
 
     /// Measure several algorithms over several element counts.
+    ///
+    /// Spawns the rank threads exactly once for the whole sweep (verified
+    /// by `tests/executor_spawn.rs::sweep_spawns_threads_once`): every
+    /// (algorithm, m) point is a job submitted to the same [`World`].
     pub fn sweep<T: Elem>(
         &self,
         algos: &[&dyn ScanAlgorithm<T>],
@@ -150,11 +172,12 @@ impl Harness {
         m_values: &[usize],
         mk_inputs: impl Fn(usize, usize) -> Vec<Vec<T>>,
     ) -> Result<Vec<Measurement>> {
+        let world: World<T> = World::new(self.world.clone());
         let mut out = Vec::new();
         for &m in m_values {
-            let inputs = mk_inputs(self.world.size(), m);
+            let inputs = mk_inputs(world.size(), m);
             for algo in algos {
-                out.push(measure_exscan(&self.world, &self.bench, *algo, op, &inputs)?);
+                out.push(measure_exscan_world(&world, &self.bench, *algo, op, &inputs)?);
             }
         }
         Ok(out)
@@ -191,5 +214,24 @@ mod tests {
         let b = measure_exscan(&world, &bench, &Exscan123, &ops::bxor(), &inputs).unwrap();
         assert_eq!(a.reps, 1);
         assert_eq!(a.min_us, b.min_us, "virtual clock must be deterministic");
+    }
+
+    #[test]
+    fn world_reuse_across_points_matches_one_shot() {
+        // The persistent-executor path must produce the same deterministic
+        // virtual-clock numbers as the one-shot path.
+        let cfg =
+            WorldConfig::new(Topology::cluster(8, 1)).virtual_clock(CostParams::generic());
+        let bench = BenchConfig::default();
+        let world: World<i64> = World::new(cfg.clone());
+        for m in [1usize, 8, 64] {
+            let inputs = inputs_i64(8, m, 11);
+            let via_world =
+                measure_exscan_world(&world, &bench, &Exscan123, &ops::bxor(), &inputs)
+                    .unwrap();
+            let one_shot =
+                measure_exscan(&cfg, &bench, &Exscan123, &ops::bxor(), &inputs).unwrap();
+            assert_eq!(via_world.min_us, one_shot.min_us, "m={m}");
+        }
     }
 }

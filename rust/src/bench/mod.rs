@@ -9,6 +9,6 @@ pub mod table;
 pub mod workload;
 
 pub use experiments::{figure1_sweep, table1_rows, ExperimentRow, PaperConfig};
-pub use harness::{measure_exscan, BenchConfig, Harness, Measurement};
-pub use table::{format_table, to_csv};
+pub use harness::{measure_exscan, measure_exscan_world, BenchConfig, Harness, Measurement};
+pub use table::{format_table, hotpath_json, to_csv, HotpathPoint};
 pub use workload::{inputs_i64, inputs_rec2, SweepSpec};

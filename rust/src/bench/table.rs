@@ -1,5 +1,6 @@
-//! Text-table and CSV rendering of measurement grids (the exact row/column
-//! layout of the paper's Table 1, and long-format CSV for Figure 1).
+//! Text-table, CSV and JSON rendering of measurement grids (the exact
+//! row/column layout of the paper's Table 1, long-format CSV for Figure 1,
+//! and the machine-readable `BENCH_hotpath.json` trajectory record).
 
 use super::harness::Measurement;
 
@@ -55,6 +56,64 @@ pub fn to_csv(config: &str, ms: &[Measurement]) -> String {
     out
 }
 
+/// One hot-path transport measurement: per-round message throughput of a
+/// transport at world size `p` (see `benches/hotpath.rs`).
+#[derive(Debug, Clone)]
+pub struct HotpathPoint {
+    /// Transport id: `"slot-pool"` (current) or `"legacy-mpmc"` (the v0
+    /// Mutex+Condvar MPMC baseline, reconstructed in the bench).
+    pub transport: String,
+    pub p: usize,
+    /// Rendezvous rounds timed per rank.
+    pub rounds: usize,
+    pub msgs_per_sec: f64,
+    pub ns_per_round: f64,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Serialize hot-path measurements as the `BENCH_hotpath.json` document —
+/// the repo's machine-readable perf-trajectory record. Hand-rolled (no
+/// serde in this offline build); stable key order so diffs stay readable.
+pub fn hotpath_json(meta: &[(&str, String)], points: &[HotpathPoint]) -> String {
+    let mut out = String::from("{\n  \"schema\": \"exscan-hotpath-v1\",\n  \"meta\": {");
+    for (i, (k, v)) in meta.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\n    \"{}\": \"{}\"", json_escape(k), json_escape(v)));
+    }
+    out.push_str("\n  },\n  \"points\": [");
+    for (i, pt) in points.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"transport\": \"{}\", \"p\": {}, \"rounds\": {}, \
+             \"msgs_per_sec\": {:.1}, \"ns_per_round\": {:.1}}}",
+            json_escape(&pt.transport),
+            pt.p,
+            pt.rounds,
+            pt.msgs_per_sec,
+            pt.ns_per_round
+        ));
+    }
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,5 +152,33 @@ mod tests {
         );
         let row = lines.next().unwrap();
         assert!(row.starts_with("36x1,x,36,5,40,9.2500,"));
+    }
+
+    #[test]
+    fn hotpath_json_shape() {
+        let points = vec![
+            HotpathPoint {
+                transport: "slot-pool".into(),
+                p: 4,
+                rounds: 1000,
+                msgs_per_sec: 1.25e6,
+                ns_per_round: 800.0,
+            },
+            HotpathPoint {
+                transport: "legacy-mpmc".into(),
+                p: 4,
+                rounds: 1000,
+                msgs_per_sec: 5.0e5,
+                ns_per_round: 2000.0,
+            },
+        ];
+        let j = hotpath_json(&[("host", "ci \"runner\"".to_string())], &points);
+        assert!(j.contains("\"schema\": \"exscan-hotpath-v1\""), "{j}");
+        assert!(j.contains("\"transport\": \"slot-pool\""), "{j}");
+        assert!(j.contains("\"msgs_per_sec\": 1250000.0"), "{j}");
+        assert!(j.contains("ci \\\"runner\\\""), "{j}");
+        // Balanced braces/brackets (cheap well-formedness check).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
     }
 }

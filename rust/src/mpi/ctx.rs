@@ -7,19 +7,27 @@
 //! according to the α-β-γ [`CostModel`](crate::cost::CostModel), giving a
 //! deterministic, cluster-scale simulation (LogP-style) with the exact same
 //! message flow.
+//!
+//! Transport hot path (EXPERIMENTS.md §Perf): sends copy into a buffer
+//! recycled through the sending rank's [`BufferPool`] (no allocation in
+//! steady state) and deposit into the receiver's slot-keyed
+//! [`Inbox`](super::inbox::Inbox) (no shared MPMC lock, no linear
+//! matching scan). `recv_owned` hands the pooled buffer straight to the
+//! algorithm; dropping it recycles the buffer.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use super::elem::Elem;
+use super::inbox::Inbox;
 use super::msg::Msg;
 use super::op::OpRef;
+use super::pool::{BufferPool, PoolBuf, PoolStats};
 use super::vbarrier::VBarrier;
 use crate::cost::CostModel;
 use crate::trace::{EventKind, RankTrace};
-use crate::util::Channel;
 
 /// How time is accounted.
 #[derive(Clone)]
@@ -30,10 +38,11 @@ pub enum ClockMode {
     Virtual(Arc<CostModel>),
 }
 
-/// Timeout for a blocking receive before declaring deadlock. Generous by
-/// default (the test suite runs thousands of collectives; a genuine
+/// Default timeout for a blocking receive before declaring deadlock.
+/// Generous (the test suite runs thousands of collectives; a genuine
 /// deadlock is the only thing that should ever hit it); override with
-/// `EXSCAN_RECV_TIMEOUT_MS` for failure-injection tests.
+/// `EXSCAN_RECV_TIMEOUT_MS` process-wide, or per world via
+/// [`WorldConfig::recv_timeout`](super::WorldConfig) (which wins).
 pub fn recv_timeout() -> Duration {
     static T: std::sync::OnceLock<Duration> = std::sync::OnceLock::new();
     *T.get_or_init(|| {
@@ -49,37 +58,52 @@ pub fn recv_timeout() -> Duration {
 pub struct RankCtx<T: Elem> {
     rank: usize,
     size: usize,
-    /// `mailboxes[r]` is rank r's inbox; this rank pops `mailboxes[rank]`.
-    mailboxes: Arc<Vec<Channel<Msg<T>>>>,
-    /// Out-of-order arrivals waiting to be matched.
+    /// `inboxes[r]` is rank r's inbox; this rank matches on `inboxes[rank]`.
+    inboxes: Arc<Vec<Inbox<T>>>,
+    /// This rank's send-buffer pool (buffers recycle back here when the
+    /// receiver drops them).
+    pool: Arc<BufferPool<T>>,
+    /// Out-of-order arrivals waiting to be matched (slot collisions and
+    /// overflow strangers surfaced by the inbox).
     pending: Vec<Msg<T>>,
     barrier: Arc<VBarrier>,
     barrier_gen: u64,
     mode: ClockMode,
+    /// Deadlock-detection deadline per blocking receive.
+    recv_deadline: Duration,
     /// Virtual clock (µs). Meaningless in real mode.
     vclock: f64,
-    /// Event log; `None` when tracing is disabled.
+    /// Whether tracing was requested for this world (lets a persistent
+    /// executor re-arm the trace after `take_trace`).
+    tracing: bool,
+    /// Event log; `None` when tracing is disabled or already taken.
     trace: Option<RankTrace>,
 }
 
 impl<T: Elem> RankCtx<T> {
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn new(
         rank: usize,
         size: usize,
-        mailboxes: Arc<Vec<Channel<Msg<T>>>>,
+        inboxes: Arc<Vec<Inbox<T>>>,
+        pool: Arc<BufferPool<T>>,
         barrier: Arc<VBarrier>,
         mode: ClockMode,
         tracing: bool,
+        recv_deadline: Duration,
     ) -> Self {
         RankCtx {
             rank,
             size,
-            mailboxes,
+            inboxes,
+            pool,
             pending: Vec::new(),
             barrier,
             barrier_gen: 0,
             mode,
+            recv_deadline,
             vclock: 0.0,
+            tracing,
             trace: tracing.then(|| RankTrace::new(rank)),
         }
     }
@@ -112,6 +136,21 @@ impl<T: Elem> RankCtx<T> {
         self.trace.take()
     }
 
+    /// Re-arm tracing after [`take_trace`](Self::take_trace) — called by
+    /// the persistent [`World`](super::World) executor between jobs so a
+    /// traced job does not silence tracing for the next one.
+    pub(crate) fn rearm_trace(&mut self) {
+        if self.tracing && self.trace.is_none() {
+            self.trace = Some(RankTrace::new(self.rank));
+        }
+    }
+
+    /// This rank's send-pool counters (hit rate must saturate in steady
+    /// state — the transport's zero-allocation claim).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+
     fn bytes(len: usize) -> usize {
         len * T::size_bytes()
     }
@@ -129,36 +168,27 @@ impl<T: Elem> RankCtx<T> {
         let msg = Msg {
             src: self.rank,
             tag: round as u64,
-            data: data.to_vec().into_boxed_slice(),
+            data: BufferPool::acquire_copy(&self.pool, data),
             vtime: self.vclock,
         };
-        self.mailboxes[to]
-            .push(msg)
-            .map_err(|_| anyhow::anyhow!("rank {to}'s mailbox is closed"))?;
+        self.inboxes[to].deposit(msg);
         Ok(())
     }
 
     /// Blocking matched receive: returns the message from `from` with tag
     /// `round`, buffering any other arrivals.
     fn take(&mut self, from: usize, round: u32) -> Result<Msg<T>> {
-        if let Some(i) = self
-            .pending
-            .iter()
-            .position(|m| m.src == from && m.tag == round as u64)
-        {
+        let tag = round as u64;
+        if let Some(i) = self.pending.iter().position(|m| m.src == from && m.tag == tag) {
             return Ok(self.pending.swap_remove(i));
         }
-        loop {
-            let Some(msg) = self.mailboxes[self.rank].pop_timeout(recv_timeout()) else {
-                bail!(
-                    "rank {} deadlocked waiting for (from={from}, round={round})",
-                    self.rank
-                );
-            };
-            if msg.src == from && msg.tag == round as u64 {
-                return Ok(msg);
-            }
-            self.pending.push(msg);
+        let deadline = Instant::now() + self.recv_deadline;
+        match self.inboxes[self.rank].recv_match(from, tag, &mut self.pending, deadline) {
+            Some(msg) => Ok(msg),
+            None => bail!(
+                "rank {} deadlocked waiting for (from={from}, round={round})",
+                self.rank
+            ),
         }
     }
 
@@ -198,8 +228,9 @@ impl<T: Elem> RankCtx<T> {
     /// transport's buffer instead of copying into a caller slice — the
     /// hot-path variant used by the scan algorithms (their only use of
     /// the received vector is as the read-only `input` of `reduce_local`,
-    /// so no copy is ever needed). `expect` is the element count.
-    pub fn recv_owned(&mut self, round: u32, from: usize, expect: usize) -> Result<Box<[T]>> {
+    /// so no copy is ever needed). `expect` is the element count. The
+    /// returned [`PoolBuf`] recycles to the sender's pool on drop.
+    pub fn recv_owned(&mut self, round: u32, from: usize, expect: usize) -> Result<PoolBuf<T>> {
         let msg = self.take(from, round)?;
         if msg.data.len() != expect {
             bail!(
@@ -227,7 +258,7 @@ impl<T: Elem> RankCtx<T> {
         sbuf: &[T],
         from: usize,
         expect: usize,
-    ) -> Result<Box<[T]>> {
+    ) -> Result<PoolBuf<T>> {
         self.post(to, round, sbuf)?;
         self.record(round, EventKind::Send { to, bytes: Self::bytes(sbuf.len()) });
         let msg = self.take(from, round)?;

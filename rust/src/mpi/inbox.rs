@@ -1,0 +1,373 @@
+//! Slot-based rendezvous matching: the receive half of the transport
+//! (EXPERIMENTS.md §Perf).
+//!
+//! The old transport funnelled every message for a rank through one
+//! Mutex+Condvar MPMC queue and matched (src, round) with a linear scan
+//! over an out-of-order `pending` vector — all senders contended on one
+//! lock, and every mismatched pop paid O(pending).
+//!
+//! Scan schedules are fully deterministic: at any instant a rank has a
+//! handful of in-flight messages, each uniquely keyed by (src, round).
+//! The inbox therefore hashes (src, round) into a small slot array:
+//!
+//! * **deposit** (sender side): take the slot's own lock (uncontended —
+//!   only this sender and the receiver ever touch it), place the message,
+//!   raise the slot's atomic flag. If the slot is occupied by a different
+//!   in-flight message, fall back to the `overflow` queue — the unordered
+//!   path, kept for correctness under arbitrary traffic.
+//! * **match** (receiver side): check the local `pending` buffer, then
+//!   spin on the *expected* slot's flag (a single atomic load per probe),
+//!   draining `overflow` between probes; park on the inbox condvar when
+//!   the spin budget runs out.
+//!
+//! Wakeups use the Dekker-style `parked` flag + mutex handshake; parks are
+//! additionally time-sliced (`PARK_SLICE`) so a theoretically lost wakeup
+//! degrades to a bounded stall rather than a hang. The receive deadline
+//! (deadlock detection) is enforced by the caller via `recv_deadline`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::msg::Msg;
+
+/// Slot count per inbox. Must be a power of two. 64 slots cover every
+/// deterministic scan schedule with near-zero collisions (a rank has at
+/// most ~⌈log₂ p⌉ + 2 messages in flight, each with a distinct round tag);
+/// collisions are correctness-neutral (overflow path).
+const NSLOTS: usize = 64;
+
+/// Upper bound on one condvar park. A correctly delivered wakeup arrives
+/// immediately; the slice only bounds the damage of the (never observed,
+/// but theoretically possible under weak orderings) lost-wakeup race.
+const PARK_SLICE: Duration = Duration::from_millis(10);
+
+/// Bounded spin before parking. Rendezvous partners usually land within a
+/// few hundred nanoseconds, far below the ~1–2 µs cost of a park+unpark
+/// cycle — but spinning only pays off when the peer can run in parallel,
+/// so single-core hosts park immediately (same policy the old channel
+/// used; see EXPERIMENTS.md §Perf).
+fn spin_tries() -> u32 {
+    static N: std::sync::OnceLock<u32> = std::sync::OnceLock::new();
+    *N.get_or_init(|| {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        if cores > 2 {
+            100
+        } else {
+            0
+        }
+    })
+}
+
+struct Slot<T> {
+    /// Raised (SeqCst) after a message is placed; the receiver's cheap
+    /// probe. SeqCst pairs with the `parked` flag for the Dekker handshake.
+    full: AtomicBool,
+    cell: Mutex<Option<Msg<T>>>,
+}
+
+/// One rank's inbox. Senders call [`deposit`](Inbox::deposit); only the
+/// owning rank calls [`recv_match`](Inbox::recv_match).
+pub(crate) struct Inbox<T> {
+    slots: Vec<Slot<T>>,
+    overflow: Mutex<VecDeque<Msg<T>>>,
+    /// Lock-free emptiness probe for the overflow queue.
+    overflow_len: AtomicUsize,
+    /// Receiver-is-parked flag (Dekker partner of `Slot::full`).
+    parked: AtomicBool,
+    park_lock: Mutex<()>,
+    park_cv: Condvar,
+}
+
+fn slot_index(src: usize, tag: u64) -> usize {
+    let h = (src as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(tag.wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+    ((h >> 32) as usize) & (NSLOTS - 1)
+}
+
+impl<T> Default for Inbox<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Inbox<T> {
+    pub fn new() -> Self {
+        Inbox {
+            slots: (0..NSLOTS)
+                .map(|_| Slot { full: AtomicBool::new(false), cell: Mutex::new(None) })
+                .collect(),
+            overflow: Mutex::new(VecDeque::new()),
+            overflow_len: AtomicUsize::new(0),
+            parked: AtomicBool::new(false),
+            park_lock: Mutex::new(()),
+            park_cv: Condvar::new(),
+        }
+    }
+
+    /// Sender side: place `msg` for the owning rank to match.
+    pub fn deposit(&self, msg: Msg<T>) {
+        let slot = &self.slots[slot_index(msg.src, msg.tag)];
+        let overflowed = {
+            let mut cell = slot.cell.lock().unwrap();
+            if cell.is_none() {
+                *cell = Some(msg);
+                slot.full.store(true, Ordering::SeqCst);
+                None
+            } else {
+                Some(msg) // collision with a different in-flight message
+            }
+        };
+        if let Some(msg) = overflowed {
+            self.overflow.lock().unwrap().push_back(msg);
+            self.overflow_len.fetch_add(1, Ordering::SeqCst);
+        }
+        self.wake();
+    }
+
+    fn wake(&self) {
+        if self.parked.load(Ordering::SeqCst) {
+            // Take the park lock so the notify cannot slip between the
+            // receiver's final re-check and its wait (no lost wakeup).
+            let _g = self.park_lock.lock().unwrap();
+            self.park_cv.notify_all();
+        }
+    }
+
+    /// Try to take the message in the slot keyed by (src, tag). Returns
+    /// whatever message occupies that slot — the caller checks the match
+    /// and buffers strangers (slot collisions) itself.
+    fn try_slot(&self, src: usize, tag: u64) -> Option<Msg<T>> {
+        let slot = &self.slots[slot_index(src, tag)];
+        if !slot.full.load(Ordering::SeqCst) {
+            return None;
+        }
+        let mut cell = slot.cell.lock().unwrap();
+        let msg = cell.take();
+        if msg.is_some() {
+            slot.full.store(false, Ordering::SeqCst);
+        }
+        msg
+    }
+
+    /// Pop one message from the unordered overflow queue.
+    fn try_overflow(&self) -> Option<Msg<T>> {
+        if self.overflow_len.load(Ordering::SeqCst) == 0 {
+            return None;
+        }
+        let msg = self.overflow.lock().unwrap().pop_front();
+        if msg.is_some() {
+            self.overflow_len.fetch_sub(1, Ordering::SeqCst);
+        }
+        msg
+    }
+
+    /// Receiver side: block until the message from `src` tagged `tag`
+    /// arrives, buffering strangers into `pending`. Returns `None` on
+    /// deadline expiry (the caller reports the deadlock).
+    ///
+    /// `pending` is the rank-local out-of-order buffer: messages that
+    /// collided in the slot array or arrived through overflow for a later
+    /// receive. The caller checks it *before* calling (it is rank-private).
+    pub fn recv_match(
+        &self,
+        src: usize,
+        tag: u64,
+        pending: &mut Vec<Msg<T>>,
+        deadline: Instant,
+    ) -> Option<Msg<T>> {
+        let mut spins = 0u32;
+        loop {
+            // 1. The expected slot (single atomic probe on the fast path).
+            if let Some(msg) = self.try_slot(src, tag) {
+                if msg.src == src && msg.tag == tag {
+                    return Some(msg);
+                }
+                pending.push(msg);
+                continue; // the wanted message may be right behind it
+            }
+            // 2. The unordered overflow path.
+            if let Some(msg) = self.try_overflow() {
+                if msg.src == src && msg.tag == tag {
+                    return Some(msg);
+                }
+                pending.push(msg);
+                continue;
+            }
+            // 3. Spin a little, then park until a deposit (or time slice).
+            if spins < spin_tries() {
+                spins += 1;
+                std::hint::spin_loop();
+                continue;
+            }
+            spins = 0;
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let wait = PARK_SLICE.min(deadline - now);
+            let guard = self.park_lock.lock().unwrap();
+            self.parked.store(true, Ordering::SeqCst);
+            // Final re-check under the park lock: a deposit that happened
+            // before we raised `parked` is caught here; one that happens
+            // after will see `parked` and take the lock to notify.
+            if let Some(m) = self.try_slot(src, tag) {
+                self.parked.store(false, Ordering::SeqCst);
+                drop(guard);
+                if m.src == src && m.tag == tag {
+                    return Some(m);
+                }
+                pending.push(m);
+                continue;
+            }
+            if self.overflow_len.load(Ordering::SeqCst) != 0 {
+                self.parked.store(false, Ordering::SeqCst);
+                drop(guard);
+                continue;
+            }
+            let (_guard, _res) = self.park_cv.wait_timeout(guard, wait).unwrap();
+            self.parked.store(false, Ordering::SeqCst);
+        }
+    }
+
+    /// Messages currently buffered inside the inbox (slots + overflow).
+    /// Test/debug hook — not used on the hot path.
+    #[allow(dead_code)] // crate-internal diagnostics; exercised in tests
+    pub fn occupancy(&self) -> usize {
+        let in_slots =
+            self.slots.iter().filter(|s| s.full.load(Ordering::SeqCst)).count();
+        in_slots + self.overflow_len.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::pool::PoolBuf;
+    use std::sync::Arc;
+
+    fn msg(src: usize, tag: u64, v: i64) -> Msg<i64> {
+        Msg { src, tag, data: PoolBuf::detached(vec![v]), vtime: 0.0 }
+    }
+
+    fn deadline() -> Instant {
+        Instant::now() + Duration::from_secs(5)
+    }
+
+    /// The caller-side matching discipline `RankCtx::take` uses: check the
+    /// rank-local pending buffer first, then block on the inbox.
+    fn take(inbox: &Inbox<i64>, pending: &mut Vec<Msg<i64>>, src: usize, tag: u64) -> Msg<i64> {
+        if let Some(i) = pending.iter().position(|m| m.src == src && m.tag == tag) {
+            return pending.swap_remove(i);
+        }
+        inbox.recv_match(src, tag, pending, deadline()).expect("timed out")
+    }
+
+    #[test]
+    fn same_key_matches_through_slot() {
+        let inbox: Inbox<i64> = Inbox::new();
+        inbox.deposit(msg(3, 7, 42));
+        let mut pending = Vec::new();
+        let got = inbox.recv_match(3, 7, &mut pending, deadline()).unwrap();
+        assert_eq!(got.src, 3);
+        assert_eq!(got.tag, 7);
+        assert_eq!(got.data[0], 42);
+        assert!(pending.is_empty());
+        assert_eq!(inbox.occupancy(), 0);
+    }
+
+    #[test]
+    fn stranger_lands_in_pending() {
+        let inbox: Inbox<i64> = Inbox::new();
+        // Two messages; receive the second one first. Wherever the first
+        // lands (slot or overflow), it must surface into `pending`.
+        inbox.deposit(msg(0, 1, 10));
+        inbox.deposit(msg(0, 2, 20));
+        let mut pending = Vec::new();
+        let got = inbox.recv_match(0, 2, &mut pending, deadline()).unwrap();
+        assert_eq!(got.data[0], 20);
+        // The round-1 message is either in pending already or still boxed.
+        let leftover = pending.len() + inbox.occupancy();
+        assert_eq!(leftover, 1);
+    }
+
+    #[test]
+    fn collision_overflows_and_still_matches() {
+        let inbox: Inbox<i64> = Inbox::new();
+        // Find two keys that collide in the slot array.
+        let (s1, t1) = (0usize, 0u64);
+        let mut other = None;
+        'outer: for src in 0..NSLOTS * 4 {
+            for tag in 0..(NSLOTS as u64 * 4) {
+                if (src, tag) != (s1, t1) && slot_index(src, tag) == slot_index(s1, t1) {
+                    other = Some((src, tag));
+                    break 'outer;
+                }
+            }
+        }
+        let (s2, t2) = other.expect("hash must collide somewhere");
+        inbox.deposit(msg(s1, t1, 1)); // takes the slot
+        inbox.deposit(msg(s2, t2, 2)); // collides → overflow
+        let mut pending = Vec::new();
+        let got2 = take(&inbox, &mut pending, s2, t2);
+        assert_eq!(got2.data[0], 2);
+        let got1 = take(&inbox, &mut pending, s1, t1);
+        assert_eq!(got1.data[0], 1);
+        assert!(pending.is_empty());
+        assert_eq!(inbox.occupancy(), 0);
+    }
+
+    #[test]
+    fn deadline_expires_to_none() {
+        let inbox: Inbox<i64> = Inbox::new();
+        let mut pending = Vec::new();
+        let t0 = Instant::now();
+        let got =
+            inbox.recv_match(0, 0, &mut pending, Instant::now() + Duration::from_millis(50));
+        assert!(got.is_none());
+        assert!(t0.elapsed() >= Duration::from_millis(45));
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn cross_thread_wakeup() {
+        let inbox: Arc<Inbox<i64>> = Arc::new(Inbox::new());
+        let tx = Arc::clone(&inbox);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30)); // let receiver park
+            tx.deposit(msg(1, 9, 99));
+        });
+        let mut pending = Vec::new();
+        let got = inbox.recv_match(1, 9, &mut pending, deadline()).unwrap();
+        assert_eq!(got.data[0], 99);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn hammer_many_tags_out_of_order() {
+        let inbox: Arc<Inbox<i64>> = Arc::new(Inbox::new());
+        let tx = Arc::clone(&inbox);
+        const K: u64 = 500;
+        let h = std::thread::spawn(move || {
+            for tag in 0..K {
+                tx.deposit(msg(0, tag, tag as i64));
+            }
+        });
+        let mut pending = Vec::new();
+        // Receive even tags descending, then odd tags ascending — maximal
+        // out-of-order pressure on slots, overflow and pending.
+        for tag in (0..K).rev().filter(|t| t % 2 == 0) {
+            let got = take(&inbox, &mut pending, 0, tag);
+            assert_eq!(got.data[0], tag as i64);
+        }
+        for tag in (0..K).filter(|t| t % 2 == 1) {
+            let got = take(&inbox, &mut pending, 0, tag);
+            assert_eq!(got.data[0], tag as i64);
+        }
+        assert!(pending.is_empty());
+        assert_eq!(inbox.occupancy(), 0);
+        h.join().unwrap();
+    }
+}

@@ -4,7 +4,10 @@
 //! * [`elem`] — element types (`MPI_Datatype` analogue), incl. [`Rec2`].
 //! * [`op`] — associative operators (`MPI_Op` + `MPI_Reduce_local`).
 //! * [`ctx`] — the per-rank API: `send`/`recv`/`sendrecv`/`reduce_local`.
-//! * [`world`] — topology, world spawning, the [`run_scan`] entry point.
+//! * [`pool`] — recycling per-rank buffer pools (zero-allocation sends).
+//! * [`inbox`] — slot-keyed rendezvous matching (no MPMC lock, no scan).
+//! * [`world`] — topology, the one-shot [`run_world`]/[`run_scan`] entry
+//!   points and the persistent [`World`] executor.
 //!
 //! Real MPI is deliberately *not* a dependency: the paper's claims are
 //! about round structure and ⊕ counts, which this substrate reproduces
@@ -13,12 +16,17 @@
 
 pub mod ctx;
 pub mod elem;
+pub(crate) mod inbox;
 pub mod msg;
 pub mod op;
+pub mod pool;
 pub mod vbarrier;
 pub mod world;
 
 pub use ctx::{ClockMode, RankCtx};
 pub use elem::{Dtype, Elem, Rec2};
 pub use op::{ops, CombineOp, FnOp, OpRef};
-pub use world::{run_scan, run_world, RunResult, Topology, WorldConfig};
+pub use pool::{PoolBuf, PoolStats};
+pub use world::{
+    rank_threads_spawned, run_scan, run_world, RunResult, Topology, World, WorldConfig,
+};

@@ -1,13 +1,19 @@
 //! In-flight message envelope used by both transports.
 
+use super::pool::PoolBuf;
+
 /// A typed point-to-point message. `tag` is the communication-round index
 /// of the sending algorithm — matching on it enforces the round structure
 /// (a message sent in round k can only satisfy a round-k receive).
+///
+/// `data` is a pool-owned buffer acquired from the *sender's* rank pool;
+/// dropping the message (or the `PoolBuf` handed out by `recv_owned`)
+/// recycles it, so steady-state rounds never touch the allocator.
 #[derive(Debug)]
 pub(crate) struct Msg<T> {
     pub src: usize,
     pub tag: u64,
-    pub data: Box<[T]>,
+    pub data: PoolBuf<T>,
     /// Sender's virtual clock at the instant of sending (virtual mode;
     /// 0.0 in real mode).
     pub vtime: f64,

@@ -1,0 +1,264 @@
+//! Per-rank recycling buffer pools: the zero-allocation half of the
+//! transport (EXPERIMENTS.md §Perf).
+//!
+//! Every message used to pay one heap allocation (`data.to_vec()`) on the
+//! send side and one deallocation when the receiver dropped it. Scan
+//! algorithms send the same-length vector every round, so in steady state
+//! the allocator traffic is pure waste — and at m = 1 it *dominates* the
+//! per-round software cost the paper's round-count argument depends on.
+//!
+//! The pool closes the loop: [`RankCtx::send`](super::RankCtx) acquires a
+//! buffer from the sending rank's pool, the buffer travels inside the
+//! [`Msg`](super::msg::Msg) envelope, and the receiver's [`PoolBuf`] handle
+//! recycles it back to the *owning* (sender's) pool on drop. Because every
+//! rank in a scan sends about as often as it receives, each pool converges
+//! after one warm-up scan and the hit-rate counters read ~100% — asserted
+//! by `tests/transport.rs::pool_steady_state_allocates_nothing`.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Counters exported for tests and the hotpath benchmark. `misses` is the
+/// number of `acquire` calls that had to touch the global allocator; in
+/// steady state it must stop moving.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Acquires served entirely from the free list.
+    pub hits: u64,
+    /// Acquires that allocated (empty free list or undersized buffer).
+    pub misses: u64,
+    /// Buffers returned to the free list on `PoolBuf` drop.
+    pub recycled: u64,
+}
+
+impl PoolStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+
+    pub fn merge(&mut self, other: &PoolStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.recycled += other.recycled;
+    }
+}
+
+struct FreeList<T> {
+    bufs: Vec<Vec<T>>,
+    /// Total `capacity * size_of::<T>()` retained, to bound memory when a
+    /// sweep shrinks m after a large-vector point.
+    bytes: usize,
+}
+
+/// A recycling free list of `Vec<T>` buffers, one per rank.
+///
+/// Lock discipline: one short `Mutex` section per acquire/release. The
+/// only cross-thread traffic is the receiver returning a buffer to the
+/// sender's pool — one uncontended lock in the common rendezvous schedule.
+pub struct BufferPool<T> {
+    free: Mutex<FreeList<T>>,
+    /// Retention budget in bytes; buffers beyond it are dropped on release.
+    budget_bytes: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    recycled: AtomicU64,
+}
+
+/// Default retention budget per rank. Scans keep at most a few same-sized
+/// buffers in flight per rank, so this is generous for any m the
+/// benchmarks use while bounding worst-case retention at p = 1152 to
+/// ~2.3 GB (vs the ~1 GB the old per-message allocation path had in
+/// flight at m = 100 000 anyway).
+pub const DEFAULT_BUDGET_BYTES: usize = 2 << 20;
+
+impl<T> BufferPool<T> {
+    pub fn new(budget_bytes: usize) -> Self {
+        BufferPool {
+            free: Mutex::new(FreeList { bufs: Vec::new(), bytes: 0 }),
+            budget_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            recycled: self.recycled.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of buffers currently retained (test hook).
+    pub fn retained(&self) -> usize {
+        self.free.lock().unwrap().bufs.len()
+    }
+
+    fn release(&self, buf: Vec<T>) {
+        let bytes = buf.capacity() * std::mem::size_of::<T>();
+        let mut free = self.free.lock().unwrap();
+        if free.bytes + bytes <= self.budget_bytes || free.bufs.is_empty() {
+            free.bytes += bytes;
+            free.bufs.push(buf);
+            self.recycled.fetch_add(1, Ordering::Relaxed);
+        }
+        // else: over budget — let the allocator have it back.
+    }
+}
+
+impl<T: Copy> BufferPool<T> {
+    /// Acquire a buffer holding a copy of `src`. Steady state: pop a
+    /// retained buffer and `memcpy` into it — no allocator call.
+    /// (Associated fn, not a method: the handle must capture the `Arc`.)
+    pub fn acquire_copy(pool: &Arc<Self>, src: &[T]) -> PoolBuf<T> {
+        let popped = {
+            let mut free = pool.free.lock().unwrap();
+            let b = free.bufs.pop();
+            if let Some(ref b) = b {
+                free.bytes = free.bytes.saturating_sub(b.capacity() * std::mem::size_of::<T>());
+            }
+            b
+        };
+        let mut buf = match popped {
+            Some(b) if b.capacity() >= src.len() => {
+                pool.hits.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            Some(b) => {
+                // Undersized: extend_from_slice would reallocate anyway.
+                pool.misses.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => {
+                pool.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(src.len())
+            }
+        };
+        buf.clear();
+        buf.extend_from_slice(src);
+        PoolBuf { buf, pool: Some(Arc::clone(pool)) }
+    }
+}
+
+/// An owned transport buffer that recycles itself to its pool on drop.
+///
+/// This is what [`RankCtx::recv_owned`](super::RankCtx::recv_owned) hands
+/// to the algorithms: they only ever read it (as the `input` operand of
+/// `reduce_local`) or combine in place, which `Deref`/`DerefMut` to `[T]`
+/// cover — no call-site changes versus the old `Box<[T]>`.
+pub struct PoolBuf<T> {
+    buf: Vec<T>,
+    pool: Option<Arc<BufferPool<T>>>,
+}
+
+impl<T> PoolBuf<T> {
+    /// A pool-less buffer (dropped normally). Used by tests and any path
+    /// that genuinely needs a one-off allocation.
+    pub fn detached(buf: Vec<T>) -> Self {
+        PoolBuf { buf, pool: None }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+impl<T> Deref for PoolBuf<T> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        &self.buf
+    }
+}
+
+impl<T> DerefMut for PoolBuf<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        &mut self.buf
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for PoolBuf<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.buf.fmt(f)
+    }
+}
+
+impl<T> Drop for PoolBuf<T> {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.take() {
+            pool.release(std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycles_in_steady_state() {
+        let pool: Arc<BufferPool<i64>> = Arc::new(BufferPool::new(1 << 20));
+        let data = [1i64, 2, 3, 4];
+        {
+            let b = BufferPool::acquire_copy(&pool, &data);
+            assert_eq!(&*b, &data[..]);
+        } // drop → recycle
+        let s0 = pool.stats();
+        assert_eq!(s0.misses, 1);
+        assert_eq!(s0.recycled, 1);
+        for _ in 0..100 {
+            let b = BufferPool::acquire_copy(&pool, &data);
+            assert_eq!(b.len(), 4);
+        }
+        let s = pool.stats();
+        assert_eq!(s.misses, 1, "steady state must not allocate");
+        assert_eq!(s.hits, 100);
+        assert!(s.hit_rate() > 0.98);
+    }
+
+    #[test]
+    fn budget_bounds_retention() {
+        // Budget fits exactly one 8-element i64 buffer (64 bytes).
+        let pool: Arc<BufferPool<i64>> = Arc::new(BufferPool::new(64));
+        let a = BufferPool::acquire_copy(&pool, &[0i64; 8]);
+        let b = BufferPool::acquire_copy(&pool, &[0i64; 8]);
+        drop(a);
+        drop(b); // second release exceeds the budget → dropped
+        assert_eq!(pool.retained(), 1);
+    }
+
+    #[test]
+    fn undersized_buffer_counts_as_miss() {
+        let pool: Arc<BufferPool<i64>> = Arc::new(BufferPool::new(1 << 20));
+        drop(BufferPool::acquire_copy(&pool, &[1i64])); // retained with capacity 1
+        let big: Vec<i64> = (0..100).collect();
+        let b = BufferPool::acquire_copy(&pool, &big);
+        assert_eq!(&*b, &big[..]);
+        assert_eq!(pool.stats().misses, 2);
+    }
+
+    #[test]
+    fn detached_never_touches_pool() {
+        let b: PoolBuf<i64> = PoolBuf::detached(vec![9, 9]);
+        assert_eq!(b.len(), 2);
+        drop(b); // no panic, no pool
+    }
+
+    #[test]
+    fn mutation_through_deref_mut() {
+        let pool: Arc<BufferPool<i64>> = Arc::new(BufferPool::new(1 << 20));
+        let mut b = BufferPool::acquire_copy(&pool, &[1i64, 2]);
+        b[0] = 41;
+        b[1] += 40;
+        assert_eq!(&*b, &[41i64, 42][..]);
+    }
+}

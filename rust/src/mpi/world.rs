@@ -1,17 +1,32 @@
-//! World construction: spawn p rank threads over a topology and run a
-//! per-rank program against [`RankCtx`].
+//! World construction and the persistent rank executor.
+//!
+//! Two ways to run a per-rank program against [`RankCtx`]:
+//!
+//! * [`run_world`] — one-shot: spawn p scoped threads, run the closure,
+//!   join. Right for single collectives and tests.
+//! * [`World`] — persistent: spawn p rank threads **once** and submit any
+//!   number of jobs to them. The benchmark harness sweeps hundreds of
+//!   (algorithm, m) points per configuration; respawning p = 1152 OS
+//!   threads per point used to dominate sweep wall-time and perturb the
+//!   measured times (EXPERIMENTS.md §Perf). Rank state (transport inboxes,
+//!   buffer pools, barrier, virtual clocks) persists across jobs, so
+//!   steady-state measurement points run with warm pools and no allocator
+//!   or scheduler noise.
 
-use std::sync::Arc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use super::ctx::{ClockMode, RankCtx};
+use super::ctx::{recv_timeout, ClockMode, RankCtx};
 use super::elem::Elem;
-use super::msg::Msg;
-use super::op::OpRef;
+use super::inbox::Inbox;
+use super::pool::{BufferPool, PoolStats, DEFAULT_BUDGET_BYTES};
 use super::vbarrier::VBarrier;
 use crate::coll::ScanAlgorithm;
 use crate::cost::{CostModel, CostParams};
+use crate::mpi::op::OpRef;
 use crate::trace::{RankTrace, TraceReport};
 use crate::util::Channel;
 
@@ -42,7 +57,8 @@ impl Topology {
     }
 }
 
-/// Configuration for one world: topology, clock mode, tracing.
+/// Configuration for one world: topology, clock mode, tracing, transport
+/// tuning.
 #[derive(Clone)]
 pub struct WorldConfig {
     pub topology: Topology,
@@ -51,12 +67,26 @@ pub struct WorldConfig {
     /// Stack size per rank thread. The algorithms heap-allocate their
     /// buffers, so a small stack suffices even at p = 1152.
     pub stack_size: usize,
+    /// Per-receive deadlock deadline for this world. `None` falls back to
+    /// the process-wide `EXSCAN_RECV_TIMEOUT_MS` / 60 s default. Setting
+    /// it here avoids the read-once env-var race in failure-injection
+    /// tests and lets one world fail fast without shortening every other.
+    pub recv_timeout: Option<Duration>,
+    /// Retention budget of each rank's send-buffer pool, in bytes.
+    pub pool_budget_bytes: usize,
 }
 
 impl WorldConfig {
     /// Real-clock world over the given topology.
     pub fn new(topology: Topology) -> Self {
-        WorldConfig { topology, mode: ClockMode::Real, tracing: false, stack_size: 512 * 1024 }
+        WorldConfig {
+            topology,
+            mode: ClockMode::Real,
+            tracing: false,
+            stack_size: 512 * 1024,
+            recv_timeout: None,
+            pool_budget_bytes: DEFAULT_BUDGET_BYTES,
+        }
     }
 
     /// Switch to the simulated-cluster virtual clock with these parameters.
@@ -72,8 +102,18 @@ impl WorldConfig {
         self
     }
 
+    /// Set the per-receive deadlock deadline for this world only.
+    pub fn with_recv_timeout(mut self, timeout: Duration) -> Self {
+        self.recv_timeout = Some(timeout);
+        self
+    }
+
     pub fn size(&self) -> usize {
         self.topology.size()
+    }
+
+    fn recv_deadline(&self) -> Duration {
+        self.recv_timeout.unwrap_or_else(recv_timeout)
     }
 }
 
@@ -95,25 +135,48 @@ impl<T> RunResult<T> {
     }
 }
 
+/// Cumulative count of rank threads ever spawned by this process (both
+/// [`run_world`] and [`World::new`]). Lets tests assert that a sweep
+/// spawns its threads exactly once.
+static RANK_THREADS_SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+/// Total rank threads spawned by this process so far (test hook).
+pub fn rank_threads_spawned() -> usize {
+    RANK_THREADS_SPAWNED.load(Ordering::SeqCst)
+}
+
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "rank thread panicked".into())
+}
+
 /// Spawn `p` rank threads and run `f` on each; returns the per-rank results
-/// in rank order. The closure gets a fully wired [`RankCtx`].
+/// in rank order. The closure gets a fully wired [`RankCtx`]. One-shot:
+/// threads are joined before returning. Benchmark sweeps should use the
+/// persistent [`World`] executor instead.
 pub fn run_world<T, R, F>(cfg: &WorldConfig, f: F) -> Result<Vec<R>>
 where
     T: Elem,
-    R: Send + 'static,
+    R: Send,
     F: Fn(&mut RankCtx<T>) -> Result<R> + Send + Sync,
 {
     let p = cfg.size();
     assert!(p >= 1);
-    let mailboxes: Arc<Vec<Channel<Msg<T>>>> =
-        Arc::new((0..p).map(|_| Channel::new()).collect());
+    let inboxes: Arc<Vec<Inbox<T>>> = Arc::new((0..p).map(|_| Inbox::new()).collect());
+    let pools: Vec<Arc<BufferPool<T>>> =
+        (0..p).map(|_| Arc::new(BufferPool::new(cfg.pool_budget_bytes))).collect();
     let barrier = Arc::new(VBarrier::new(p));
+    let recv_deadline = cfg.recv_deadline();
 
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(p);
         let fref = &f;
         for rank in 0..p {
-            let mailboxes = Arc::clone(&mailboxes);
+            let inboxes = Arc::clone(&inboxes);
+            let pool = Arc::clone(&pools[rank]);
             let barrier = Arc::clone(&barrier);
             let mode = cfg.mode.clone();
             let tracing = cfg.tracing;
@@ -122,7 +185,17 @@ where
                 .stack_size(cfg.stack_size);
             let handle = builder
                 .spawn_scoped(scope, move || {
-                    let mut ctx = RankCtx::new(rank, p, mailboxes, barrier, mode, tracing);
+                    RANK_THREADS_SPAWNED.fetch_add(1, Ordering::SeqCst);
+                    let mut ctx = RankCtx::new(
+                        rank,
+                        p,
+                        inboxes,
+                        pool,
+                        barrier,
+                        mode,
+                        tracing,
+                        recv_deadline,
+                    );
                     fref(&mut ctx)
                 })
                 .expect("failed to spawn rank thread");
@@ -138,11 +211,7 @@ where
                     out.push(None);
                 }
                 Err(panic) => {
-                    let msg = panic
-                        .downcast_ref::<&str>()
-                        .map(|s| s.to_string())
-                        .or_else(|| panic.downcast_ref::<String>().cloned())
-                        .unwrap_or_else(|| "rank thread panicked".into());
+                    let msg = panic_message(&*panic);
                     first_err.get_or_insert(anyhow::anyhow!("rank panicked: {msg}"));
                     out.push(None);
                 }
@@ -155,10 +224,243 @@ where
     })
 }
 
+/// Poison-tolerant lock: the executor's bookkeeping mutexes hold plain
+/// data that stays consistent even if a holder unwound mid-assignment, and
+/// propagating poison would either hang `Latch::wait` (a worker dying
+/// before `count_down`) or kill workers for good — so recover instead.
+fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// A simple countdown latch: [`World::run`] blocks on it until every rank
+/// worker has finished (and fully dropped) its submitted job.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Latch { remaining: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    fn count_down(&self) {
+        let mut r = lock_recover(&self.remaining);
+        *r -= 1;
+        if *r == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = lock_recover(&self.remaining);
+        while *r > 0 {
+            r = self.cv.wait(r).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+/// A job submitted to one rank worker: the erased closure plus the latch
+/// the worker pings *after the closure (and everything it captured) has
+/// been dropped* — that ordering is what makes the lifetime erasure in
+/// [`World::run`] sound.
+type Job<T> = (Box<dyn FnOnce(&mut RankCtx<T>) + Send + 'static>, Arc<Latch>);
+
+/// The persistent world executor: p rank threads spawned once, accepting
+/// submitted per-rank jobs until dropped.
+///
+/// Transport state (inboxes, pools), the barrier and each rank's virtual
+/// clock persist across jobs; callers that measure reset clocks per
+/// repetition exactly as before. Jobs run in submission order on every
+/// rank. After a job fails on some rank (e.g. a receive deadline), stale
+/// unmatched messages may remain buffered; treat the world as tainted and
+/// build a fresh one — exactly the discipline the old spawn-per-call API
+/// enforced by construction.
+pub struct World<T: Elem> {
+    cfg: WorldConfig,
+    jobs: Vec<Arc<Channel<Job<T>>>>,
+    pools: Vec<Arc<BufferPool<T>>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// Serializes whole `run` calls: jobs from two overlapping runs would
+    /// interleave differently per rank and desynchronize the barrier.
+    run_lock: Mutex<()>,
+}
+
+impl<T: Elem> World<T> {
+    /// Spawn the rank threads for this configuration (exactly once).
+    pub fn new(cfg: WorldConfig) -> Self {
+        let p = cfg.size();
+        assert!(p >= 1);
+        let inboxes: Arc<Vec<Inbox<T>>> = Arc::new((0..p).map(|_| Inbox::new()).collect());
+        let pools: Vec<Arc<BufferPool<T>>> =
+            (0..p).map(|_| Arc::new(BufferPool::new(cfg.pool_budget_bytes))).collect();
+        let barrier = Arc::new(VBarrier::new(p));
+        let recv_deadline = cfg.recv_deadline();
+
+        let mut jobs: Vec<Arc<Channel<Job<T>>>> = Vec::with_capacity(p);
+        let mut handles = Vec::with_capacity(p);
+        for rank in 0..p {
+            let ch: Arc<Channel<Job<T>>> = Arc::new(Channel::new());
+            let rx = Arc::clone(&ch);
+            let inboxes = Arc::clone(&inboxes);
+            let pool = Arc::clone(&pools[rank]);
+            let barrier = Arc::clone(&barrier);
+            let mode = cfg.mode.clone();
+            let tracing = cfg.tracing;
+            let stack = cfg.stack_size;
+            let handle = std::thread::Builder::new()
+                .name(format!("rank-{rank}"))
+                .stack_size(stack)
+                .spawn(move || {
+                    RANK_THREADS_SPAWNED.fetch_add(1, Ordering::SeqCst);
+                    let mut ctx = RankCtx::new(
+                        rank,
+                        p,
+                        inboxes,
+                        pool,
+                        barrier,
+                        mode,
+                        tracing,
+                        recv_deadline,
+                    );
+                    while let Some((job, done)) = rx.pop_wait() {
+                        job(&mut ctx);
+                        // `job` (the box and every capture) is dropped by
+                        // the end of the statement above — only then may
+                        // the latch release `World::run`.
+                        ctx.rearm_trace();
+                        done.count_down();
+                    }
+                })
+                .expect("failed to spawn rank thread");
+            jobs.push(ch);
+            handles.push(handle);
+        }
+        World { cfg, jobs, pools, handles, run_lock: Mutex::new(()) }
+    }
+
+    pub fn config(&self) -> &WorldConfig {
+        &self.cfg
+    }
+
+    pub fn size(&self) -> usize {
+        self.cfg.size()
+    }
+
+    /// Aggregated send-pool counters over all ranks (the transport's
+    /// zero-allocation evidence; see `tests/transport.rs`).
+    pub fn pool_stats(&self) -> PoolStats {
+        let mut total = PoolStats::default();
+        for p in &self.pools {
+            total.merge(&p.stats());
+        }
+        total
+    }
+
+    /// Run `f` once on every rank and collect results in rank order.
+    ///
+    /// `f` and `R` may borrow from the caller's stack (inputs, algorithm
+    /// references): this call does not return until every rank worker has
+    /// finished *and dropped* its job, so no borrow escapes — the same
+    /// guarantee `std::thread::scope` gives, provided here by the
+    /// completion latch.
+    pub fn run<R, F>(&self, f: F) -> Result<Vec<R>>
+    where
+        R: Send,
+        F: Fn(&mut RankCtx<T>) -> Result<R> + Send + Sync,
+    {
+        let p = self.size();
+        let _serial = lock_recover(&self.run_lock);
+        let f = Arc::new(f);
+        let results: Arc<Mutex<Vec<Option<Result<R>>>>> =
+            Arc::new(Mutex::new((0..p).map(|_| None).collect()));
+        let latch = Arc::new(Latch::new(p));
+
+        // Phase 1 — build every job. This phase may allocate (and thus in
+        // principle unwind) freely: nothing has been submitted yet, so an
+        // unwind here leaks no borrow to a worker.
+        let mut built: Vec<Job<T>> = Vec::with_capacity(p);
+        for _rank in 0..p {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            let job: Box<dyn FnOnce(&mut RankCtx<T>) + Send + '_> = Box::new(move |ctx| {
+                let out = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    (*f)(ctx)
+                })) {
+                    Ok(r) => r,
+                    Err(payload) => {
+                        Err(anyhow!("rank panicked: {}", panic_message(&*payload)))
+                    }
+                };
+                // Poison-recovering: this write must never unwind, or the
+                // worker would die before counting the latch down.
+                lock_recover(&results)[ctx.rank()] = Some(out);
+            });
+            // SAFETY: lifetime erasure only. The job runs on a worker that
+            // outlives `self`; the borrows inside `f`/`R` stay valid
+            // because this function blocks on `latch` until every worker
+            // has executed *and dropped* its job (the worker counts the
+            // latch down strictly after the job box and its captured Arcs
+            // are gone), and `run` holds its own `f`/`results` Arcs until
+            // after that wait — so the last drop of any capture happens
+            // on this stack frame, before the borrowed data can die.
+            // Phase 2 below is unwind-free between the first push and the
+            // wait: every operation in it recovers mutex poison instead of
+            // panicking, so `latch.wait()` is always reached once any job
+            // has been submitted.
+            let job: Box<dyn FnOnce(&mut RankCtx<T>) + Send + 'static> =
+                unsafe { std::mem::transmute(job) };
+            built.push((job, Arc::clone(&latch)));
+        }
+
+        // Phase 2 — submit and wait (panic-free, see SAFETY above).
+        for (rank, job) in built.into_iter().enumerate() {
+            if self.jobs[rank].push(job).is_err() {
+                // Worker already shut down (world is being dropped?).
+                lock_recover(&results)[rank] =
+                    Some(Err(anyhow!("rank {rank} executor has shut down")));
+                latch.count_down();
+            }
+        }
+        latch.wait();
+
+        let mut first_err = None;
+        let mut out = Vec::with_capacity(p);
+        for (rank, slot) in lock_recover(&results).drain(..).enumerate() {
+            match slot {
+                Some(Ok(v)) => out.push(Some(v)),
+                Some(Err(e)) => {
+                    first_err.get_or_insert(e);
+                    out.push(None);
+                }
+                None => {
+                    first_err.get_or_insert(anyhow!("rank {rank} produced no result"));
+                    out.push(None);
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(out.into_iter().map(|r| r.unwrap()).collect()),
+        }
+    }
+}
+
+impl<T: Elem> Drop for World<T> {
+    fn drop(&mut self) {
+        for ch in &self.jobs {
+            ch.close();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 /// Run one scan collective over per-rank `inputs` and collect outputs,
 /// per-rank times and the optional trace. This is the one-shot convenience
-/// wrapper; the benchmark harness drives repetitions through [`run_world`]
-/// directly so threads are spawned only once.
+/// wrapper; the benchmark harness drives repetitions through a persistent
+/// [`World`] so threads are spawned only once per sweep.
 pub fn run_scan<T: Elem>(
     cfg: &WorldConfig,
     algo: &dyn ScanAlgorithm<T>,
@@ -289,9 +591,93 @@ mod tests {
     fn run_scan_shape_checks() {
         use crate::coll::Exscan123;
         let cfg = WorldConfig::new(Topology::flat(4));
-        let inputs: Vec<Vec<i64>> = (0..4).map(|r| vec![r as i64; 3]).collect();
+        // Inputs r+1 so no exclusive prefix collides with the filler value
+        // (0): rank 0's output must remain exactly the untouched filler,
+        // per MPI_Exscan semantics (output on rank 0 is undefined and the
+        // implementation must not write it).
+        let inputs: Vec<Vec<i64>> = (0..4).map(|r| vec![r as i64 + 1; 3]).collect();
         let res = run_scan(&cfg, &Exscan123, &ops::bxor(), &inputs).unwrap();
         assert_eq!(res.outputs.len(), 4);
-        assert_eq!(res.outputs[1], vec![0, 0, 0]); // V_0 = zeros ^ ... well r=1: V_0 = [0,0,0]
+        assert_eq!(res.outputs[0], vec![0, 0, 0], "rank 0 output must stay filler");
+        assert_eq!(res.outputs[1], vec![1, 1, 1]); // V_1 = [1,1,1]
+        assert_eq!(res.outputs[2], vec![3, 3, 3]); // 1 ^ 2
+        assert_eq!(res.outputs[3], vec![0, 0, 0]); // 1 ^ 2 ^ 3
+        assert_eq!(res.times_us.len(), 4);
+    }
+
+    #[test]
+    fn executor_reuses_the_same_threads_across_jobs() {
+        // Thread-identity check (parallel-test safe, unlike the global
+        // spawn counter — that one is asserted in the isolated
+        // tests/executor_spawn.rs binary): every job must observe the
+        // exact same OS thread per rank.
+        let world: World<i64> = World::new(WorldConfig::new(Topology::flat(6)));
+        let ids_of = |round: u32| {
+            world
+                .run(move |ctx| {
+                    let _ = round;
+                    Ok((ctx.rank(), std::thread::current().id()))
+                })
+                .unwrap()
+        };
+        let first = ids_of(0);
+        for round in 1..5u32 {
+            assert_eq!(ids_of(round), first, "job {round} ran on different threads");
+        }
+    }
+
+    #[test]
+    fn executor_jobs_may_borrow_caller_state() {
+        // The lifetime-erased path: the job closure borrows a stack local.
+        let world: World<i64> = World::new(WorldConfig::new(Topology::flat(8)));
+        let weights: Vec<i64> = (0..8).map(|r| (r as i64) * 100).collect();
+        let out = world
+            .run(|ctx| {
+                let p = ctx.size();
+                let r = ctx.rank();
+                let sbuf = [weights[r]];
+                let mut rbuf = [0i64];
+                ctx.sendrecv(0, (r + 1) % p, &sbuf, (r + p - 1) % p, &mut rbuf)?;
+                Ok(rbuf[0])
+            })
+            .unwrap();
+        assert_eq!(out, (0..8).map(|r| ((r + 7) % 8) as i64 * 100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn executor_propagates_panics_as_errors() {
+        let world: World<i64> = World::new(WorldConfig::new(Topology::flat(3)));
+        let res = world.run(|ctx| {
+            if ctx.rank() == 1 {
+                panic!("injected executor failure");
+            }
+            Ok(())
+        });
+        let err = format!("{:#}", res.unwrap_err());
+        assert!(err.contains("injected executor failure"), "{err}");
+        // The world survives a panicked job: workers caught the unwind.
+        let ok = world.run(|ctx| Ok(ctx.rank())).unwrap();
+        assert_eq!(ok, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn executor_scan_with_warm_pools() {
+        use crate::coll::Exscan123;
+        let world: World<i64> = World::new(WorldConfig::new(Topology::flat(8)));
+        let inputs: Vec<Vec<i64>> = (0..8).map(|r| vec![r as i64; 4]).collect();
+        let op = ops::bxor();
+        for _ in 0..3 {
+            let outputs = world
+                .run(|ctx| {
+                    let mut output = vec![0i64; 4];
+                    ctx.barrier();
+                    Exscan123.run(ctx, &inputs[ctx.rank()], &mut output, &op)?;
+                    Ok(output)
+                })
+                .unwrap();
+            assert_eq!(outputs[3], vec![0 ^ 1 ^ 2; 4]);
+        }
+        let stats = world.pool_stats();
+        assert!(stats.hits > 0, "pools must recycle across jobs: {stats:?}");
     }
 }

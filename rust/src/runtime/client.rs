@@ -6,12 +6,15 @@
 //! matches the deployment model anyway — one accelerator queue shared by
 //! the node's ranks.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::PathBuf;
 
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::{bail, Context};
+use anyhow::{anyhow, Result};
 
 use super::artifact::Manifest;
 use crate::util::{Channel, OneShot};
@@ -135,6 +138,22 @@ pub struct PjrtRuntime;
 
 impl PjrtRuntime {
     /// Start an executor over the given artifacts directory.
+    ///
+    /// Without the `pjrt` cargo feature (the offline default — the `xla`
+    /// crate cannot be fetched without a registry) this returns a clear
+    /// error instead of an executor; [`try_default`](Self::try_default)
+    /// returns `None` so tests and examples skip gracefully.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn start(dir: impl Into<PathBuf>) -> Result<PjrtHandle> {
+        let _ = Manifest::load(dir.into())?;
+        anyhow::bail!(
+            "exscan was built without the `pjrt` feature; rebuild with \
+             `--features pjrt` (requires the xla crate) to run compiled kernels"
+        )
+    }
+
+    /// Start an executor over the given artifacts directory.
+    #[cfg(feature = "pjrt")]
     pub fn start(dir: impl Into<PathBuf>) -> Result<PjrtHandle> {
         let manifest = Manifest::load(dir.into())?;
         let tx: Arc<Channel<Request>> = Arc::new(Channel::new());
@@ -179,6 +198,7 @@ impl PjrtRuntime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 struct Worker {
     manifest: Manifest,
     client: xla::PjRtClient,
@@ -187,6 +207,7 @@ struct Worker {
     stats: RuntimeStats,
 }
 
+#[cfg(feature = "pjrt")]
 impl Worker {
     fn new(manifest: Manifest) -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;

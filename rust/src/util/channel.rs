@@ -1,11 +1,13 @@
 //! A small MPMC channel (Mutex + Condvar), replacing `crossbeam-channel`
-//! in this offline build. One queue per receiving rank; any thread may
-//! push. `Sync` by construction, so a single `Arc<Vec<Channel<_>>>` wires
-//! a whole world without per-thread sender clones.
+//! in this offline build.
 //!
-//! The hot path (`push` / `pop`) takes one lock each; the benchmark suite
-//! (`benches/hotpath.rs`) tracks its cost — at scan message rates the
-//! channel is far from the bottleneck (§Perf in EXPERIMENTS.md).
+//! Historically this was the per-rank mailbox of the message transport;
+//! the scan hot path now goes through the slot-keyed
+//! [`Inbox`](crate::mpi) matcher instead (see EXPERIMENTS.md §Perf for
+//! the before/after numbers — `benches/hotpath.rs` still measures this
+//! queue as the "legacy transport" baseline). The channel remains the
+//! right tool for genuinely unordered MPMC traffic: the [`World`]
+//! executor's per-rank job queues and the PJRT executor's request queue.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -103,6 +105,23 @@ impl<T> Channel<T> {
     /// Non-blocking pop.
     pub fn try_pop(&self) -> Option<T> {
         self.q.lock().unwrap().items.pop_front()
+    }
+
+    /// Blocking pop with no deadline: waits until an item arrives or the
+    /// channel is closed *and* drained (`None`). The [`World`] executor's
+    /// worker loop idles here between jobs — parked on the condvar, not
+    /// spinning — so a persistent world costs nothing while idle.
+    pub fn pop_wait(&self) -> Option<T> {
+        let mut s = self.q.lock().unwrap();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.cv.wait(s).unwrap();
+        }
     }
 
     /// Close the channel: pending items remain poppable; pushes fail.

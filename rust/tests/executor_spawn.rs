@@ -1,0 +1,29 @@
+//! Thread-spawn accounting for the persistent executor. Isolated in its
+//! own test binary (one test, own process) because it asserts on the
+//! process-global spawn counter — any concurrently running world would
+//! perturb the count.
+
+use exscan::bench::{inputs_i64, BenchConfig, Harness};
+use exscan::coll::{Exscan123, ExscanOneDoubling, ScanAlgorithm};
+use exscan::mpi::{ops, rank_threads_spawned, Topology, WorldConfig};
+
+#[test]
+fn sweep_spawns_threads_once() {
+    const P: usize = 6;
+    let before = rank_threads_spawned();
+    let harness = Harness::new(
+        WorldConfig::new(Topology::flat(P)),
+        BenchConfig { warmups: 1, reps: 4, validate: true },
+    );
+    let algos: Vec<&dyn ScanAlgorithm<i64>> = vec![&Exscan123, &ExscanOneDoubling];
+    let out = harness
+        .sweep(&algos, &ops::bxor(), &[1, 8, 64], |p, m| inputs_i64(p, m, 77))
+        .unwrap();
+    assert_eq!(out.len(), 6, "2 algorithms x 3 element counts");
+    assert_eq!(
+        rank_threads_spawned() - before,
+        P,
+        "a whole sweep must spawn each rank thread exactly once, \
+         not once per (algorithm, m) point"
+    );
+}

@@ -1,0 +1,167 @@
+//! Transport-level integration for the slot/pool rendezvous path:
+//! out-of-order matching under heavy pressure, the zero-allocation
+//! steady-state claim, and fast deadlock detection on the slot path
+//! (EXPERIMENTS.md §Perf documents the design under test).
+
+use std::time::{Duration, Instant};
+
+use exscan::coll::{Exscan123, ScanAlgorithm};
+use exscan::mpi::{run_world, Topology, World, WorldConfig};
+use exscan::prelude::*;
+use exscan::util::Rng;
+
+/// Thousands of messages matched out of (src, round) order: every rank
+/// posts K rounds to every other rank up front (sends never block), then
+/// receives them all in a per-rank pseudo-random order. This drives every
+/// inbox through slot hits, slot collisions (K × (p−1) ≫ the slot count),
+/// the overflow queue and the rank-local pending buffer.
+#[test]
+fn out_of_order_matching_stress() {
+    const P: usize = 8;
+    const K: u32 = 60; // P*(P-1)*K = 3360 messages
+    let cfg = WorldConfig::new(Topology::flat(P));
+    run_world::<i64, (), _>(&cfg, |ctx| {
+        let r = ctx.rank();
+        // Post everything first: (p-1)*K sends, no receive in between.
+        for k in 0..K {
+            for dst in 0..P {
+                if dst != r {
+                    let payload = [((r as i64) << 20) | (k as i64), k as i64];
+                    ctx.send(k, dst, &payload)?;
+                }
+            }
+        }
+        // Receive in a rank-specific shuffled order over (src, round).
+        let mut order: Vec<(usize, u32)> = (0..P)
+            .filter(|&s| s != r)
+            .flat_map(|s| (0..K).map(move |k| (s, k)))
+            .collect();
+        let mut rng = Rng::seed_from_u64(0xBADC0DE ^ r as u64);
+        for i in (1..order.len()).rev() {
+            order.swap(i, rng.gen_range_usize(i + 1));
+        }
+        for (src, k) in order {
+            let mut buf = [0i64; 2];
+            ctx.recv(k, src, &mut buf)?;
+            assert_eq!(buf[0], ((src as i64) << 20) | (k as i64), "src={src} k={k}");
+            assert_eq!(buf[1], k as i64);
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// The zero-allocation claim: after warm-up, scan rounds must be served
+/// entirely from the recycling pools — the miss counter (each miss is one
+/// allocator call) stops moving while the hit counter keeps climbing.
+#[test]
+fn pool_steady_state_allocates_nothing() {
+    const P: usize = 8;
+    const M: usize = 64;
+    let world: World<i64> = World::new(WorldConfig::new(Topology::flat(P)));
+    let inputs: Vec<Vec<i64>> = (0..P).map(|r| vec![r as i64 * 7 + 1; M]).collect();
+    let op = ops::bxor();
+    let scan_once = || {
+        world
+            .run(|ctx| {
+                let mut output = vec![0i64; M];
+                ctx.barrier();
+                Exscan123.run(ctx, &inputs[ctx.rank()], &mut output, &op)?;
+                Ok(output)
+            })
+            .unwrap()
+    };
+
+    for _ in 0..10 {
+        scan_once(); // warm-up: populate every rank's pool to its peak
+    }
+    let warm = world.pool_stats();
+    assert!(warm.recycled > 0, "pools must be circulating: {warm:?}");
+
+    for _ in 0..30 {
+        let outputs = scan_once();
+        assert_eq!(outputs[P - 1], vec![1 ^ 8 ^ 15 ^ 22 ^ 29 ^ 36 ^ 43; M]);
+    }
+    let steady = world.pool_stats();
+    assert_eq!(
+        steady.misses, warm.misses,
+        "steady-state scans must perform zero per-message heap allocations \
+         (warm: {warm:?}, steady: {steady:?})"
+    );
+    assert!(steady.hits > warm.hits, "hits must keep accruing: {steady:?}");
+    assert!(steady.hit_rate() > 0.5, "overall hit rate too low: {steady:?}");
+}
+
+/// Deadlock detection on the slot path honours the per-world receive
+/// timeout (no process-wide env-var fiddling) and reports who waited for
+/// what — promptly.
+#[test]
+fn deadlock_times_out_fast_on_slot_path() {
+    let cfg = WorldConfig::new(Topology::flat(2))
+        .with_recv_timeout(Duration::from_millis(300));
+    let t0 = Instant::now();
+    let res = run_world::<i64, (), _>(&cfg, |ctx| {
+        if ctx.rank() == 1 {
+            let mut buf = [0i64];
+            ctx.recv(5, 0, &mut buf)?; // nobody ever sends this
+        }
+        Ok(())
+    });
+    let err = format!("{:#}", res.unwrap_err());
+    assert!(err.contains("deadlocked"), "unexpected error: {err}");
+    assert!(err.contains("round=5"), "missing round in: {err}");
+    assert!(err.contains("from=0"), "missing sender in: {err}");
+    assert!(t0.elapsed() >= Duration::from_millis(250), "must respect the deadline");
+    assert!(t0.elapsed() < Duration::from_secs(20), "must fail fast");
+}
+
+/// A per-world timeout must not poison other worlds: a healthy world
+/// constructed alongside keeps the generous default.
+#[test]
+fn per_world_timeout_is_local() {
+    let strict = WorldConfig::new(Topology::flat(2))
+        .with_recv_timeout(Duration::from_millis(200));
+    assert!(run_world::<i64, (), _>(&strict, |ctx| {
+        if ctx.rank() == 0 {
+            let mut buf = [0i64];
+            ctx.recv(0, 1, &mut buf)?;
+        }
+        Ok(())
+    })
+    .is_err());
+
+    // Same process, fresh default world: a slow-but-correct exchange that
+    // takes longer than the strict world's 200 ms budget still succeeds.
+    let relaxed = WorldConfig::new(Topology::flat(2));
+    let out = run_world::<i64, i64, _>(&relaxed, |ctx| {
+        let mut buf = [0i64];
+        if ctx.rank() == 0 {
+            std::thread::sleep(Duration::from_millis(400));
+            ctx.send(0, 1, &[77i64])?;
+            Ok(0)
+        } else {
+            ctx.recv(0, 0, &mut buf)?;
+            Ok(buf[0])
+        }
+    })
+    .unwrap();
+    assert_eq!(out[1], 77);
+}
+
+/// End-to-end correctness of every paper algorithm on the new transport —
+/// the same numbers as the sequential oracle, across a spread of world
+/// sizes that exercises slot collisions and odd topologies.
+#[test]
+fn all_paper_algorithms_correct_on_slot_transport() {
+    use exscan::bench::inputs_i64;
+    use exscan::coll::paper_exscan_algorithms;
+    use exscan::coll::validate::assert_exscan_matches;
+    for p in [2usize, 3, 7, 16, 33] {
+        let inputs = inputs_i64(p, 9, 42);
+        let cfg = WorldConfig::new(Topology::flat(p));
+        for algo in paper_exscan_algorithms::<i64>() {
+            let res = run_scan(&cfg, algo.as_ref(), &ops::bxor(), &inputs).unwrap();
+            assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! This workspace builds with no network access and no crates.io registry,
+//! so the real `anyhow` cannot be fetched. This shim implements the exact
+//! API surface the `exscan` crate uses — `anyhow!`, `bail!`, `ensure!`,
+//! [`Result`], [`Error`], and the [`Context`] extension trait — with the
+//! same observable semantics:
+//!
+//! * `Display` prints the outermost message; the alternate form (`{:#}`)
+//!   prints the whole chain joined with `": "`, exactly as `anyhow` does.
+//! * `Debug` prints the message followed by a `Caused by:` list.
+//! * Any `std::error::Error + Send + Sync + 'static` converts via `?`.
+//!
+//! Dropping the real `anyhow` back in (when a registry is available)
+//! requires no source changes anywhere in the workspace.
+
+use std::fmt;
+
+/// An error chain: `chain[0]` is the outermost (most recently attached)
+/// message, the last entry is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (used by [`Context`]).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The `Display` messages of the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// is what makes this blanket conversion coherent (same trick as upstream).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait attaching context to `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is not satisfied.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_outermost_alternate_chain() {
+        let e: Error = Error::from(io_err()).context("loading config");
+        assert_eq!(format!("{e}"), "loading config");
+        assert_eq!(format!("{e:#}"), "loading config: file missing");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e: Error = Error::from(io_err()).context("outer");
+        let d = format!("{e:?}");
+        assert!(d.contains("outer"), "{d}");
+        assert!(d.contains("Caused by:"), "{d}");
+        assert!(d.contains("file missing"), "{d}");
+    }
+
+    #[test]
+    fn macros_and_question_mark() {
+        fn inner() -> Result<i32> {
+            let n: i32 = "42".parse()?; // ParseIntError converts
+            ensure!(n > 0, "want positive, got {n}");
+            if n == 0 {
+                bail!("unreachable");
+            }
+            Ok(n)
+        }
+        assert_eq!(inner().unwrap(), 42);
+        let e = anyhow!("x = {}", 7);
+        assert_eq!(format!("{e}"), "x = 7");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 3: file missing");
+        let o: Option<i32> = None;
+        let e = o.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+    }
+
+    #[test]
+    fn ensure_without_message() {
+        fn f(x: i32) -> Result<()> {
+            ensure!(x < 10);
+            Ok(())
+        }
+        assert!(f(5).is_ok());
+        let e = f(50).unwrap_err();
+        assert!(format!("{e}").contains("x < 10"));
+    }
+}
