@@ -12,17 +12,23 @@
 //!   * channel push/pop latency (the legacy primitive, kept for the
 //!     executor job queues);
 //!   * reduce_local throughput (native ⊕ over large vectors);
+//!   * **compute-path m-sweep** at m ∈ {1, 64, 4096, 65536}: the fused
+//!     receive-reduce path vs the pre-fusion two-pass flow
+//!     (`WorldConfig::unfused_compat`), and the chunked large-m pipeline
+//!     vs the flat schedule — plus the Theorem-1 gate asserting the ⊕
+//!     application counts (sharded counters and trace agree, last rank
+//!     matches `predicted_ops`);
 //!   * world spawn/teardown vs persistent-executor job submission — the
 //!     cost `Harness::sweep` no longer pays per (algorithm, m) point;
 //!   * one full 123-doubling at p=36 end to end.
 //!
 //! Writes the machine-readable trajectory record `BENCH_hotpath.json`
-//! (schema `exscan-hotpath-v1`). Pass `--quick` for the CI smoke run.
+//! (schema `exscan-hotpath-v2`). Pass `--quick` for the CI smoke run.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use exscan::bench::{hotpath_json, HotpathPoint};
+use exscan::bench::{hotpath_json, measure_exscan_world, HotpathPoint, MSweepPoint};
 use exscan::mpi::World;
 use exscan::prelude::*;
 use exscan::util::Channel;
@@ -197,6 +203,98 @@ fn main() -> anyhow::Result<()> {
         println!("reduce_local m={m:>7}:           {ns:>9.1} ns  ({gbps:>6.2} GB/s)");
     }
 
+    // ── Compute-path m-sweep: fused vs unfused receive-reduce, and the
+    // chunked large-m pipeline vs the flat schedule. Whole-scan timings
+    // (paper statistic: min over reps of max over ranks) on persistent
+    // worlds; the unfused world routes the same algorithms through the
+    // pre-fusion two-pass flow, so the gap isolates the fusion itself. ──
+    let p_sweep = 8usize;
+    let m_values: &[usize] =
+        if quick { &[1, 64, 4096] } else { &[1, 64, 4096, 65536] };
+    let sweep_bench = if quick {
+        exscan::bench::BenchConfig { warmups: 2, reps: 20, validate: false }
+    } else {
+        exscan::bench::BenchConfig { warmups: 10, reps: 100, validate: false }
+    };
+    let fused_world: World<i64> = World::new(WorldConfig::new(Topology::flat(p_sweep)));
+    let unfused_world: World<i64> =
+        World::new(WorldConfig::new(Topology::flat(p_sweep)).with_unfused_compat(true));
+    let mut m_sweep: Vec<MSweepPoint> = Vec::new();
+    println!("\ncompute-path m-sweep at p={p_sweep} (min µs over reps):");
+    for &m in m_values {
+        let inputs = exscan::bench::inputs_i64(p_sweep, m, 0xFA57);
+        let mut point = |path: &str, world: &World<i64>, algo: &dyn ScanAlgorithm<i64>| {
+            let op = ops::bxor();
+            let meas = measure_exscan_world(world, &sweep_bench, algo, &op, &inputs)
+                .expect("m-sweep measurement");
+            m_sweep.push(MSweepPoint {
+                path: path.into(),
+                algo: meas.algo.clone(),
+                p: p_sweep,
+                m,
+                min_us: meas.min_us,
+                ops: op.applications(),
+            });
+            meas.min_us
+        };
+        let fused = point("fused", &fused_world, &Exscan123);
+        let unfused = point("unfused", &unfused_world, &Exscan123);
+        let chunked = point("chunked", &fused_world, &ExscanChunked::auto());
+        let flat = point("flat", &fused_world, &ExscanOneDoubling);
+        println!(
+            "  m={m:>6}: fused {fused:>9.2}  unfused {unfused:>9.2}  ({:>4.2}x)   \
+             chunked {chunked:>9.2}  flat {flat:>9.2}  ({:>4.2}x)",
+            unfused / fused,
+            flat / chunked
+        );
+    }
+
+    // ── Theorem-1 / sharded-counter gate (also the CI smoke assertion):
+    // the fused path must apply exactly the predicted number of ⊕, and
+    // the lazily aggregated sharded counters must agree with the trace. ──
+    for &m in m_values {
+        let inputs = exscan::bench::inputs_i64(p_sweep, m, 0x7E01);
+        let cfg = WorldConfig::new(Topology::flat(p_sweep)).with_trace(true);
+        let op = ops::bxor();
+        let res = run_scan(&cfg, &Exscan123, &op, &inputs)?;
+        let tr = res.trace.expect("tracing enabled");
+        let algo: &dyn ScanAlgorithm<i64> = &Exscan123;
+        assert_eq!(
+            tr.last_rank_ops(),
+            algo.predicted_ops(p_sweep),
+            "Theorem 1 violated on the fused path at m={m}"
+        );
+        assert_eq!(
+            op.applications(),
+            tr.total_ops(),
+            "sharded op counters disagree with the trace at m={m}"
+        );
+
+        // Small fixed chunks so the quick grid exercises multi-chunk
+        // schedules through the gate (at every m > 16; m = 1 still runs
+        // the degenerate single-chunk schedule).
+        let chunked = ExscanChunked::with_chunk_elems(16);
+        let op = ops::bxor();
+        let res = run_scan(&cfg, &chunked, &op, &inputs)?;
+        let tr = res.trace.expect("tracing enabled");
+        assert_eq!(
+            tr.last_rank_ops(),
+            chunked.ops_for(p_sweep, m),
+            "chunked ⊕ count off at m={m}"
+        );
+        assert_eq!(
+            tr.total_rounds(),
+            chunked.rounds_for(p_sweep, m),
+            "chunked round count off at m={m}"
+        );
+        assert_eq!(
+            op.applications(),
+            tr.total_ops(),
+            "chunked sharded counters disagree with the trace at m={m}"
+        );
+    }
+    println!("op-count gate: Theorem 1 and sharded counters OK");
+
     // ── World spawn/teardown vs persistent job submit at the same p. ──
     let mut spawn_meta = Vec::new();
     for p in [16usize, 144] {
@@ -256,7 +354,7 @@ fn main() -> anyhow::Result<()> {
             format!("min={:.1}us mean={:.1}us", meas.min_us, meas.mean_us),
         ),
     ];
-    let json = hotpath_json(&meta, &points);
+    let json = hotpath_json(&meta, &points, &m_sweep);
     std::fs::write("BENCH_hotpath.json", &json)?;
     println!("wrote BENCH_hotpath.json");
 

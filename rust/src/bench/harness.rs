@@ -46,6 +46,9 @@ impl BenchConfig {
 #[derive(Debug, Clone)]
 pub struct Measurement {
     pub algo: String,
+    /// Operator name, recorded once per measurement point (the per-rep
+    /// hot loop reads [`OpRef::name`] as a borrow and never allocates).
+    pub op: String,
     pub p: usize,
     pub m: usize,
     pub bytes: usize,
@@ -125,6 +128,7 @@ pub fn measure_exscan_world<T: Elem>(
     }
     Ok(Measurement {
         algo: algo.name().to_string(),
+        op: op.name().to_string(),
         p,
         m,
         bytes: m * T::size_bytes(),

@@ -43,14 +43,15 @@ pub fn format_table(title: &str, ms: &[Measurement]) -> String {
     out
 }
 
-/// Long-format CSV (`config,algo,p,m,bytes,min_us,mean_us,stddev_us,reps`)
-/// suitable for plotting Figure 1.
+/// Long-format CSV
+/// (`config,algo,op,p,m,bytes,min_us,mean_us,stddev_us,reps`) suitable for
+/// plotting Figure 1.
 pub fn to_csv(config: &str, ms: &[Measurement]) -> String {
-    let mut out = String::from("config,algo,p,m,bytes,min_us,mean_us,stddev_us,reps\n");
+    let mut out = String::from("config,algo,op,p,m,bytes,min_us,mean_us,stddev_us,reps\n");
     for m in ms {
         out.push_str(&format!(
-            "{},{},{},{},{},{:.4},{:.4},{:.4},{}\n",
-            config, m.algo, m.p, m.m, m.bytes, m.min_us, m.mean_us, m.stddev_us, m.reps
+            "{},{},{},{},{},{},{:.4},{:.4},{:.4},{}\n",
+            config, m.algo, m.op, m.p, m.m, m.bytes, m.min_us, m.mean_us, m.stddev_us, m.reps
         ));
     }
     out
@@ -70,6 +71,25 @@ pub struct HotpathPoint {
     pub ns_per_round: f64,
 }
 
+/// One compute-path m-sweep measurement (see `benches/hotpath.rs`): a
+/// whole-scan timing of `algo` at vector length `m`, under one of the
+/// compared paths — `"fused"` / `"unfused"` (the A/B on the receive-reduce
+/// primitives) or `"chunked"` / `"flat"` (the large-m pipeline vs the flat
+/// schedule).
+#[derive(Debug, Clone)]
+pub struct MSweepPoint {
+    /// Compared path id: `fused`, `unfused`, `chunked` or `flat`.
+    pub path: String,
+    pub algo: String,
+    pub p: usize,
+    pub m: usize,
+    /// min over reps of (max over ranks), µs — the paper's statistic.
+    pub min_us: f64,
+    /// Aggregated ⊕ applications observed by the sharded op counters over
+    /// the whole measurement (warmups + reps).
+    pub ops: u64,
+}
+
 fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
@@ -87,8 +107,14 @@ fn json_escape(s: &str) -> String {
 /// Serialize hot-path measurements as the `BENCH_hotpath.json` document —
 /// the repo's machine-readable perf-trajectory record. Hand-rolled (no
 /// serde in this offline build); stable key order so diffs stay readable.
-pub fn hotpath_json(meta: &[(&str, String)], points: &[HotpathPoint]) -> String {
-    let mut out = String::from("{\n  \"schema\": \"exscan-hotpath-v1\",\n  \"meta\": {");
+/// Schema v2 adds the `m_sweep` section (fused-vs-unfused and
+/// chunked-vs-flat compute-path points).
+pub fn hotpath_json(
+    meta: &[(&str, String)],
+    points: &[HotpathPoint],
+    m_sweep: &[MSweepPoint],
+) -> String {
+    let mut out = String::from("{\n  \"schema\": \"exscan-hotpath-v2\",\n  \"meta\": {");
     for (i, (k, v)) in meta.iter().enumerate() {
         if i > 0 {
             out.push(',');
@@ -110,6 +136,22 @@ pub fn hotpath_json(meta: &[(&str, String)], points: &[HotpathPoint]) -> String 
             pt.ns_per_round
         ));
     }
+    out.push_str("\n  ],\n  \"m_sweep\": [");
+    for (i, pt) in m_sweep.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"path\": \"{}\", \"algo\": \"{}\", \"p\": {}, \"m\": {}, \
+             \"min_us\": {:.3}, \"ops\": {}}}",
+            json_escape(&pt.path),
+            json_escape(&pt.algo),
+            pt.p,
+            pt.m,
+            pt.min_us,
+            pt.ops
+        ));
+    }
     out.push_str("\n  ]\n}\n");
     out
 }
@@ -121,6 +163,7 @@ mod tests {
     fn mk(algo: &str, m: usize, t: f64) -> Measurement {
         Measurement {
             algo: algo.into(),
+            op: "bxor_i64".into(),
             p: 36,
             m,
             bytes: m * 8,
@@ -148,10 +191,10 @@ mod tests {
         let mut lines = csv.lines();
         assert_eq!(
             lines.next().unwrap(),
-            "config,algo,p,m,bytes,min_us,mean_us,stddev_us,reps"
+            "config,algo,op,p,m,bytes,min_us,mean_us,stddev_us,reps"
         );
         let row = lines.next().unwrap();
-        assert!(row.starts_with("36x1,x,36,5,40,9.2500,"));
+        assert!(row.starts_with("36x1,x,bxor_i64,36,5,40,9.2500,"));
     }
 
     #[test]
@@ -172,11 +215,22 @@ mod tests {
                 ns_per_round: 2000.0,
             },
         ];
-        let j = hotpath_json(&[("host", "ci \"runner\"".to_string())], &points);
-        assert!(j.contains("\"schema\": \"exscan-hotpath-v1\""), "{j}");
+        let sweep = vec![MSweepPoint {
+            path: "fused".into(),
+            algo: "123-doubling".into(),
+            p: 8,
+            m: 4096,
+            min_us: 123.456,
+            ops: 720,
+        }];
+        let j = hotpath_json(&[("host", "ci \"runner\"".to_string())], &points, &sweep);
+        assert!(j.contains("\"schema\": \"exscan-hotpath-v2\""), "{j}");
         assert!(j.contains("\"transport\": \"slot-pool\""), "{j}");
         assert!(j.contains("\"msgs_per_sec\": 1250000.0"), "{j}");
         assert!(j.contains("ci \\\"runner\\\""), "{j}");
+        assert!(j.contains("\"path\": \"fused\""), "{j}");
+        assert!(j.contains("\"min_us\": 123.456"), "{j}");
+        assert!(j.contains("\"ops\": 720"), "{j}");
         // Balanced braces/brackets (cheap well-formedness check).
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert_eq!(j.matches('[').count(), j.matches(']').count());

@@ -156,14 +156,11 @@ fn cmd_predict(args: &Args) -> Result<()> {
     println!("closed-form α-β-γ predictions (p={p}, m={m}, {rpn} ranks/node):");
     println!("{:>18} {:>8} {:>6} {:>12}", "algorithm", "rounds", "ops", "time (µs)");
     for algo in all_exscan_algorithms::<i64>() {
-        let pred = predict_flat(
-            &algo.critical_skips(p),
-            algo.predicted_ops(p),
-            p,
-            rpn,
-            m * 8,
-            &params,
-        );
+        // critical_schedule is m-aware: m-dependent algorithms (chunked,
+        // pipelined chain) report their real round count and per-message
+        // payload instead of the per-chunk closed forms.
+        let (skips, ops, msg_elems) = algo.critical_schedule(p, m);
+        let pred = predict_flat(&skips, ops, p, rpn, msg_elems * 8, &params);
         println!(
             "{:>18} {:>8} {:>6} {:>12.2}",
             algo.name(),

@@ -58,22 +58,18 @@ pub fn reduce<T: Elem>(
 ) -> Result<u32> {
     let p = ctx.size();
     let r = ctx.rank();
-    let m = input.len();
-    let mut acc = input.to_vec();
-    let mut tmp = vec![T::filler(); m];
+    let mut acc = ctx.scratch_from(input);
     let rounds = ceil_log2(p.max(2));
     if p > 1 {
         // Binomial combine toward rank 0, preserving rank order: at level
-        // k, rank r (r % 2^{k+1} == 0) folds in r + 2^k (later block).
+        // k, rank r (r % 2^{k+1} == 0) folds in r + 2^k (later block):
+        // acc = acc ⊕ recv, fused in the pooled receive buffer.
         for k in 0..rounds {
             let span = 1usize << k;
             if r % (span * 2) == 0 {
                 let src = r + span;
                 if src < p {
-                    ctx.recv(base + k, src, &mut tmp)?;
-                    // acc is the earlier block: tmp = acc ⊕ tmp, keep in acc.
-                    ctx.reduce_local(base + k, op, &acc, &mut tmp);
-                    std::mem::swap(&mut acc, &mut tmp);
+                    ctx.recv_reduce_right(base + k, src, op, &mut acc)?;
                 }
             } else if r % (span * 2) == span {
                 ctx.send(base + k, r - span, &acc)?;
@@ -109,7 +105,6 @@ pub fn allreduce<T: Elem>(
 ) -> Result<u32> {
     let p = ctx.size();
     let r = ctx.rank();
-    let m = input.len();
     output.copy_from_slice(input);
     if p <= 1 {
         return Ok(base);
@@ -120,7 +115,6 @@ pub fn allreduce<T: Elem>(
     // remains correct for non-commutative ⊕.
     let body = 1usize << crate::util::floor_log2(p);
     let tail = p - body;
-    let mut tmp = vec![T::filler(); m];
     let mut k = base;
     // Body index nr for participating ranks; None while waiting.
     let nr: Option<usize> = if tail == 0 {
@@ -130,10 +124,8 @@ pub fn allreduce<T: Elem>(
             ctx.send(k, r - 1, output)?;
             None
         } else {
-            ctx.recv(k, r + 1, &mut tmp)?;
-            // Own block (r) is earlier than r+1's.
-            ctx.reduce_local(k, op, &output.to_vec(), &mut tmp);
-            output.copy_from_slice(&tmp);
+            // Own block (r) is earlier than r+1's: output = output ⊕ recv.
+            ctx.recv_reduce_right(k, r + 1, op, output)?;
             Some(r / 2)
         }
     } else {
@@ -143,7 +135,8 @@ pub fn allreduce<T: Elem>(
         k += 1;
     }
     // Recursive doubling over the body; blocks stay contiguous in nr
-    // order (nr < partner ⇔ our block is earlier).
+    // order (nr < partner ⇔ our block is earlier). Both operand orders
+    // run fused, straight out of the pooled receive buffer.
     let rd_rounds = crate::util::ceil_log2(body.max(2));
     if let Some(nr) = nr {
         let orig = |x: usize| if x < tail { 2 * x } else { x + tail };
@@ -152,14 +145,12 @@ pub fn allreduce<T: Elem>(
         while mask < body {
             let dst_nr = nr ^ mask;
             let dst = orig(dst_nr);
-            ctx.sendrecv(kk, dst, &output[..], dst, &mut tmp)?;
             if nr > dst_nr {
-                // Partner block earlier: output = tmp ⊕ output.
-                ctx.reduce_local(kk, op, &tmp, output);
+                // Partner block earlier: output = recv ⊕ output.
+                ctx.sendrecv_reduce(kk, dst, dst, op, output)?;
             } else {
-                // Own block earlier: output = output ⊕ tmp.
-                ctx.reduce_local(kk, op, &output.to_vec(), &mut tmp);
-                output.copy_from_slice(&tmp);
+                // Own block earlier: output = output ⊕ recv.
+                ctx.sendrecv_reduce_right(kk, dst, dst, op, output)?;
             }
             mask <<= 1;
             kk += 1;

@@ -41,7 +41,7 @@ impl<T: Elem> ScanAlgorithm<T> for Exscan123 {
         output: &mut [T],
         op: &OpRef<T>,
     ) -> Result<()> {
-        let (r, p, m) = (ctx.rank(), ctx.size(), input.len());
+        let (r, p) = (ctx.rank(), ctx.size());
         if p <= 1 {
             return Ok(());
         }
@@ -67,11 +67,14 @@ impl<T: Elem> ScanAlgorithm<T> for Exscan123 {
             let (t, f) = (r + 2, r.checked_sub(2));
             match (t < p, f, r) {
                 (true, Some(f), _) => {
-                    // W' = W ⊕ V: W (covering V_{r-1}) is the earlier operand.
-                    let mut w_prime = input.to_vec();
+                    // W' = W ⊕ V: W (covering V_{r-1}) is the earlier
+                    // operand. W' lives in a pooled ctx scratch buffer
+                    // (zero steady-state allocations) and the incoming
+                    // partial folds via the fused sendrecv_reduce_into,
+                    // straight from the pooled receive buffer.
+                    let mut w_prime = ctx.scratch_from(input);
                     ctx.reduce_local(1, op, output, &mut w_prime);
-                    let t_buf = ctx.sendrecv_owned(1, t, &w_prime, f, m)?;
-                    ctx.reduce_local(1, op, &t_buf, output); // W = T ⊕ W
+                    ctx.sendrecv_reduce_into(1, t, &w_prime, f, op, output)?; // W = T ⊕ W
                 }
                 (true, None, 0) => {
                     ctx.send(1, t, input)?;
@@ -79,13 +82,12 @@ impl<T: Elem> ScanAlgorithm<T> for Exscan123 {
                 }
                 (true, None, _) => {
                     // Rank 1: sends W' = W ⊕ V = V_0 ⊕ V_1, keeps W = V_0.
-                    let mut w_prime = input.to_vec();
+                    let mut w_prime = ctx.scratch_from(input);
                     ctx.reduce_local(1, op, output, &mut w_prime);
                     ctx.send(1, t, &w_prime)?;
                 }
                 (false, Some(f), _) => {
-                    let t_buf = ctx.recv_owned(1, f, m)?;
-                    ctx.reduce_local(1, op, &t_buf, output);
+                    ctx.recv_reduce(1, f, op, output)?;
                 }
                 (false, None, 0) => return Ok(()), // p == 3, rank 0: no one to feed
                 (false, None, _) => {} // p == 3, rank 1: complete after round 0
@@ -93,23 +95,17 @@ impl<T: Elem> ScanAlgorithm<T> for Exscan123 {
         }
 
         // ── Rounds k >= 2, s_k = 3·2^{k-2}: plain exclusive doubling. The
-        // value sent is the value kept, so one ⊕ per received partial.
-        // Receives come from ranks f >= 1 only (rank 0 has left). ──
+        // value sent is the value kept, so one fused sendrecv_reduce per
+        // round. Receives come from ranks f >= 1 only (rank 0 has left). ──
         let mut k = 2u32;
         let mut s = 3usize;
         loop {
             let t = r + s;
             let f = if r > s { Some(r - s) } else { None }; // strictly 0 < f
             match (t < p, f) {
-                (true, Some(f)) => {
-                    let t_buf = ctx.sendrecv_owned(k, t, &output[..], f, m)?;
-                    ctx.reduce_local(k, op, &t_buf, output);
-                }
+                (true, Some(f)) => ctx.sendrecv_reduce(k, t, f, op, output)?,
                 (true, None) => ctx.send(k, t, output)?,
-                (false, Some(f)) => {
-                    let t_buf = ctx.recv_owned(k, f, m)?;
-                    ctx.reduce_local(k, op, &t_buf, output);
-                }
+                (false, Some(f)) => ctx.recv_reduce(k, f, op, output)?,
                 (false, None) => break, // neither port active: done
             }
             k += 1;

@@ -42,11 +42,12 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanBlelloch {
             return Ok(());
         }
         let levels = ceil_log2(p); // K
-        let mut acc = input.to_vec();
+        let mut acc = ctx.scratch_from(input);
         // saved[k] = acc before folding the level-k right child (i.e. the
-        // sum of the left half of the level-(k+1) segment).
-        let mut saved: Vec<Option<Vec<T>>> = vec![None; levels as usize];
-        let mut tmp = vec![T::filler(); m];
+        // sum of the left half of the level-(k+1) segment); pooled scratch
+        // snapshots, so the up-sweep allocates nothing in steady state.
+        let mut saved: Vec<Option<crate::mpi::PoolBuf<T>>> =
+            (0..levels).map(|_| None).collect();
 
         // ── Up-sweep: rounds 0..levels. ──
         for k in 0..levels {
@@ -54,11 +55,10 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanBlelloch {
             if r % (span * 2) == 0 {
                 let child = r + span;
                 if child < p {
-                    saved[k as usize] = Some(acc.clone());
-                    ctx.recv(k, child, &mut tmp)?;
-                    // Own (left) block is earlier: acc = acc ⊕ tmp.
-                    std::mem::swap(&mut acc, &mut tmp);
-                    ctx.reduce_local(k, op, &tmp, &mut acc);
+                    saved[k as usize] = Some(ctx.scratch_from(&acc));
+                    // Own (left) block is earlier: acc = acc ⊕ recv, fused
+                    // in the pooled receive buffer (no local temporary).
+                    ctx.recv_reduce_right(k, child, op, &mut acc)?;
                 }
             } else if r % (span * 2) == span {
                 let parent = r - span;
@@ -69,7 +69,7 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanBlelloch {
 
         // ── Down-sweep: rounds levels..2*levels. `have_prefix` is false
         // only on the rank-0 spine (empty exclusive prefix). ──
-        let mut prefix: Vec<T> = vec![T::filler(); m];
+        let mut prefix = ctx.scratch_filled(m);
         let mut have_prefix = false;
         if r != 0 {
             // Wait for the parent's prefix: the parent is the rank that

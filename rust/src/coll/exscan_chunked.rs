@@ -1,0 +1,315 @@
+//! Chunked-pipeline exclusive scan for **large vectors** on the doubling
+//! skeleton — the workload the paper defers to "pipelined, fixed-degree
+//! tree" algorithms, opened here on top of the 1-doubling round structure
+//! (LightScan-style chunking, arXiv 1604.04815).
+//!
+//! `⊕` is element-wise, so an m-element exscan is C independent exscans
+//! over fixed-size chunks. Within every doubling round the rank posts
+//! chunk `i`'s send (a non-blocking pooled deposit), then blocks in the
+//! fused [`sendrecv_reduce`](crate::mpi::RankCtx::sendrecv_reduce) for
+//! chunk `i`'s receive — so while this rank reduces chunk `i`, its
+//! successor already holds chunk `i`'s message, and the send of chunk
+//! `i+1` overlaps the successor's reduce of chunk `i`. The flat algorithms
+//! serialize the whole m-element reduce behind the whole m-element
+//! receive; here both streams at chunk granularity, keeping the working
+//! set L1-resident ([`DEFAULT_CHUNK_ELEMS`]) and the pipeline full.
+//!
+//! Each (round, chunk) pair gets its own one-ported round tag, so the
+//! trace invariants hold unchanged and the honest round count is
+//! `q(p) · C` ([`rounds_for`](ExscanChunked::rounds_for)) — chunking buys
+//! bandwidth/compute overlap, not fewer rounds, which is why it only wins
+//! once m is large enough that β/γ dominate α (see the hotpath m-sweep).
+
+use anyhow::Result;
+
+use super::{ExscanOneDoubling, ScanAlgorithm, ScanKind};
+use crate::mpi::{Elem, OpRef, RankCtx};
+
+/// Default chunk length in elements: 4096 (32 KiB of i64) keeps a chunk
+/// comfortably L1-resident on every current core while amortizing the
+/// per-chunk tag/slot overhead to noise. Vectors at or below one chunk
+/// degenerate to the flat 1-doubling schedule.
+pub const DEFAULT_CHUNK_ELEMS: usize = 4096;
+
+/// Chunked 1-doubling exclusive scan with a chunk-length policy.
+pub struct ExscanChunked {
+    /// Fixed chunk length in elements, or `None` for
+    /// [`DEFAULT_CHUNK_ELEMS`].
+    pub chunk_elems: Option<usize>,
+}
+
+impl ExscanChunked {
+    /// Default chunk length.
+    pub fn auto() -> Self {
+        ExscanChunked { chunk_elems: None }
+    }
+
+    /// Fixed chunk length (≥ 1 element).
+    pub fn with_chunk_elems(n: usize) -> Self {
+        assert!(n >= 1);
+        ExscanChunked { chunk_elems: Some(n) }
+    }
+
+    fn chunk_len(&self) -> usize {
+        self.chunk_elems.unwrap_or(DEFAULT_CHUNK_ELEMS)
+    }
+
+    /// Number of chunks an m-element vector is cut into (≥ 1; a zero-length
+    /// vector still runs one empty chunk so the shift round closes).
+    pub fn chunk_count(&self, m: usize) -> usize {
+        m.div_ceil(self.chunk_len()).max(1)
+    }
+
+    /// Exact round count for (p, m): every flat 1-doubling round carries
+    /// one tagged message per chunk, so `(1 + ⌈log₂(p−1)⌉) · C`.
+    pub fn rounds_for(&self, p: usize, m: usize) -> u32 {
+        flat_rounds(p) * self.chunk_count(m) as u32
+    }
+
+    /// ⊕ applications on the completion-critical rank `p−1`: one fold per
+    /// chunk per doubling round, `⌈log₂(p−1)⌉ · C`.
+    pub fn ops_for(&self, p: usize, m: usize) -> u32 {
+        flat_ops(p) * self.chunk_count(m) as u32
+    }
+}
+
+/// 1-doubling round count — delegated to the flat skeleton so the closed
+/// forms can never drift from the schedule this algorithm runs per chunk.
+fn flat_rounds(p: usize) -> u32 {
+    <ExscanOneDoubling as ScanAlgorithm<i64>>::predicted_rounds(&ExscanOneDoubling, p)
+}
+
+/// 1-doubling critical-rank ⊕ count (delegated, see [`flat_rounds`]).
+fn flat_ops(p: usize) -> u32 {
+    <ExscanOneDoubling as ScanAlgorithm<i64>>::predicted_ops(&ExscanOneDoubling, p)
+}
+
+impl<T: Elem> ScanAlgorithm<T> for ExscanChunked {
+    fn name(&self) -> &'static str {
+        "chunked-doubling"
+    }
+
+    fn kind(&self) -> ScanKind {
+        ScanKind::Exclusive
+    }
+
+    fn run(
+        &self,
+        ctx: &mut RankCtx<T>,
+        input: &[T],
+        output: &mut [T],
+        op: &OpRef<T>,
+    ) -> Result<()> {
+        let (r, p, m) = (ctx.rank(), ctx.size(), input.len());
+        if p <= 1 {
+            return Ok(());
+        }
+        let ce = self.chunk_len();
+        let nc = self.chunk_count(m);
+        let nc32 = nc as u32;
+        // Chunk c covers the fixed-size range [c·ce, (c+1)·ce) ∩ [0, m).
+        let range = |c: usize| (c * ce).min(m)..((c + 1) * ce).min(m);
+
+        // ── Round 0 (shift V right, chunk-wise; tags 0..C): establishes
+        // W_r = V_{r-1}. Rank 0 streams its chunks and is done. ──
+        {
+            let (to, from) = (r + 1, r.checked_sub(1));
+            for c in 0..nc {
+                let rg = range(c);
+                let tag = c as u32;
+                match (to < p, from) {
+                    (true, Some(f)) => {
+                        ctx.sendrecv(tag, to, &input[rg.clone()], f, &mut output[rg])?
+                    }
+                    (true, None) => ctx.send(tag, to, &input[rg])?,
+                    (false, Some(f)) => ctx.recv(tag, f, &mut output[rg])?,
+                    (false, None) => unreachable!("p > 1"),
+                }
+            }
+        }
+        if r == 0 {
+            return Ok(());
+        }
+
+        // ── Doubling rounds k ≥ 1 (skips s_k = 2^{k-1}) over ranks 1..p,
+        // chunk-pipelined: tags k·C..k·C+C. Posting chunk c's send before
+        // blocking on chunk c's receive lets the send of chunk c+1 overlap
+        // the peer's reduce of chunk c; the fused sendrecv_reduce folds
+        // each arriving chunk straight from the pooled receive buffer. ──
+        let mut s = 1usize;
+        let mut k = 1u32;
+        while s < p - 1 {
+            let to = r + s;
+            let from = if r > s { Some(r - s) } else { None }; // from >= 1
+            for c in 0..nc {
+                let rg = range(c);
+                let tag = k * nc32 + c as u32;
+                match (to < p, from) {
+                    (true, Some(f)) => ctx.sendrecv_reduce(tag, to, f, op, &mut output[rg])?,
+                    (true, None) => ctx.send(tag, to, &output[rg])?,
+                    (false, Some(f)) => ctx.recv_reduce(tag, f, op, &mut output[rg])?,
+                    (false, None) => {}
+                }
+            }
+            s *= 2;
+            k += 1;
+        }
+        Ok(())
+    }
+
+    /// The p-dependent flat round count (per chunk); exact counts for a
+    /// concrete m come from [`rounds_for`](ExscanChunked::rounds_for),
+    /// like [`PipelinedChain`](super::PipelinedChain).
+    fn predicted_rounds(&self, p: usize) -> u32 {
+        flat_rounds(p)
+    }
+
+    fn predicted_ops(&self, p: usize) -> u32 {
+        flat_ops(p)
+    }
+
+    fn critical_skips(&self, p: usize) -> Vec<usize> {
+        // Same per-chunk partner distances as the flat skeleton (each
+        // repeated C times for a concrete m — see `critical_schedule`).
+        <ExscanOneDoubling as ScanAlgorithm<T>>::critical_skips(&ExscanOneDoubling, p)
+    }
+
+    /// m-dependent prediction inputs: every flat round repeats C times at
+    /// chunk-sized payload; the total ⊕ work (`ops · chunk bytes`) equals
+    /// the flat algorithm's.
+    fn critical_schedule(&self, p: usize, m: usize) -> (Vec<usize>, u32, usize) {
+        let c = self.chunk_count(m);
+        let skips: Vec<usize> = <Self as ScanAlgorithm<T>>::critical_skips(self, p)
+            .into_iter()
+            .flat_map(|s| std::iter::repeat(s).take(c))
+            .collect();
+        (skips, self.ops_for(p, m), m.div_ceil(c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::validate::assert_exscan_matches;
+    use crate::coll::ExscanOneDoubling;
+    use crate::mpi::{ops, run_scan, Topology, WorldConfig};
+
+    #[test]
+    fn matches_oracle_across_chunk_boundaries() {
+        // Chunk length below, at and above m, and m not a multiple of it.
+        for p in [2usize, 3, 5, 9, 16] {
+            for (ce, m) in [(1usize, 7usize), (4, 17), (8, 8), (64, 17), (5, 0)] {
+                let algo = ExscanChunked::with_chunk_elems(ce);
+                let cfg = WorldConfig::new(Topology::flat(p));
+                let inputs: Vec<Vec<i64>> = (0..p)
+                    .map(|r| (0..m).map(|i| (r * 131 + i * 7) as i64 ^ 0x1234).collect())
+                    .collect();
+                let res = run_scan(&cfg, &algo, &ops::sum_i64(), &inputs).unwrap();
+                assert_exscan_matches(&inputs, &ops::sum_i64(), &res.outputs);
+            }
+        }
+    }
+
+    #[test]
+    fn noncommutative_chunk_order() {
+        use crate::coll::validate::oracle_exscan;
+        use crate::mpi::Rec2;
+        for p in [3usize, 6, 11] {
+            let m = 5;
+            let algo = ExscanChunked::with_chunk_elems(2); // 3 chunks, last short
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<Rec2>> = (0..p)
+                .map(|r| {
+                    (0..m)
+                        .map(|i| {
+                            Rec2::new(
+                                [1.0, 0.02 * (r + i) as f32, -0.01 * r as f32, 1.0],
+                                [r as f32 * 0.5, i as f32 * 0.25],
+                            )
+                        })
+                        .collect()
+                })
+                .collect();
+            let res = run_scan(&cfg, &algo, &ops::rec2_compose(), &inputs).unwrap();
+            let oracle = oracle_exscan(&inputs, &ops::rec2_compose());
+            for r in 1..p {
+                let e = oracle[r].as_ref().unwrap();
+                for i in 0..m {
+                    for j in 0..4 {
+                        assert!(
+                            (res.outputs[r][i].a[j] - e[i].a[j]).abs() < 1e-3,
+                            "p={p} r={r} i={i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bit_identical_to_flat_one_doubling() {
+        // Same skeleton, same per-element fold order: the chunked schedule
+        // must reproduce the flat 1-doubling outputs exactly.
+        let p = 13;
+        let m = 50;
+        let cfg = WorldConfig::new(Topology::flat(p));
+        let inputs: Vec<Vec<i64>> =
+            (0..p).map(|r| (0..m).map(|i| ((r * m + i) as i64) << 3 | 5).collect()).collect();
+        let flat = run_scan(&cfg, &ExscanOneDoubling, &ops::sum_i64(), &inputs).unwrap();
+        let chunked = run_scan(
+            &cfg,
+            &ExscanChunked::with_chunk_elems(7),
+            &ops::sum_i64(),
+            &inputs,
+        )
+        .unwrap();
+        assert_eq!(flat.outputs[1..], chunked.outputs[1..]);
+    }
+
+    #[test]
+    fn rounds_and_ops_scale_with_chunk_count() {
+        for (p, m, ce) in [(9usize, 12usize, 4usize), (5, 10, 3), (2, 8, 2), (17, 5, 64)] {
+            let algo = ExscanChunked::with_chunk_elems(ce);
+            let cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+            let inputs: Vec<Vec<i64>> =
+                (0..p).map(|r| (0..m).map(|i| (r + i) as i64).collect()).collect();
+            let res = run_scan(&cfg, &algo, &ops::bxor(), &inputs).unwrap();
+            let trace = res.trace.unwrap();
+            assert_eq!(trace.total_rounds(), algo.rounds_for(p, m), "rounds p={p} m={m}");
+            assert_eq!(trace.last_rank_ops(), algo.ops_for(p, m), "ops p={p} m={m}");
+            assert!(crate::trace::check_all(&trace).is_empty(), "invariants p={p} m={m}");
+        }
+    }
+
+    #[test]
+    fn critical_schedule_expands_per_chunk() {
+        // The m-aware prediction inputs must match the real schedule: one
+        // skip per (round, chunk), the chunked ⊕ count, chunk-sized
+        // messages — while m-independent algorithms keep their defaults.
+        let a = ExscanChunked::with_chunk_elems(16);
+        let algo: &dyn ScanAlgorithm<i64> = &a;
+        let (skips, ops, msg_elems) = algo.critical_schedule(9, 48); // 3 chunks
+        assert_eq!(skips.len() as u32, a.rounds_for(9, 48));
+        assert_eq!(ops, a.ops_for(9, 48));
+        assert_eq!(msg_elems, 16);
+        let flat: &dyn ScanAlgorithm<i64> = &ExscanOneDoubling;
+        let (s, o, me) = flat.critical_schedule(9, 48);
+        assert_eq!(s, flat.critical_skips(9));
+        assert_eq!(o, flat.predicted_ops(9));
+        assert_eq!(me, 48);
+    }
+
+    #[test]
+    fn auto_policy_counts() {
+        let a = ExscanChunked::auto();
+        assert_eq!(a.chunk_count(0), 1);
+        assert_eq!(a.chunk_count(1), 1);
+        assert_eq!(a.chunk_count(DEFAULT_CHUNK_ELEMS), 1);
+        assert_eq!(a.chunk_count(DEFAULT_CHUNK_ELEMS + 1), 2);
+        assert_eq!(a.chunk_count(10 * DEFAULT_CHUNK_ELEMS), 10);
+        // Flat p-part matches the 1-doubling closed forms.
+        let algo: &dyn ScanAlgorithm<i64> = &a;
+        assert_eq!(algo.predicted_rounds(36), 7);
+        assert_eq!(algo.predicted_ops(36), 6);
+    }
+}

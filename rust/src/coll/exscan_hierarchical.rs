@@ -82,29 +82,29 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanHierarchical {
         // {0, k, 2k, …}; the sub-communicator is expressed by translating
         // ranks: leader of node j talks to leaders of j ± skip.
         let mut local_prefix_rows = vec![T::filler(); if r == leader { node_size * m } else { 0 }];
-        let mut node_prefix = vec![T::filler(); m];
+        let mut node_prefix = ctx.scratch_filled(m);
         let mut have_node_prefix = false;
         if r == leader {
-            // Exclusive scan across the node's rows; row 0's prefix is
-            // "empty" (tracked out of band — no identity needed).
-            // total = row_0 ⊕ … ⊕ row_{k-1}.
-            let mut acc = rows[..m].to_vec();
+            // Exclusive scan across the node's rows, in place: row j is
+            // promoted to the inclusive partial row_0 ⊕ … ⊕ row_j and acc
+            // trails it (pooled scratch; no per-row temporaries). Row 0's
+            // prefix is "empty" (tracked out of band — no identity needed).
+            let mut acc = ctx.scratch_from(&rows[..m]);
             for j in 1..node_size {
                 local_prefix_rows[j * m..(j + 1) * m].copy_from_slice(&acc);
-                let row = rows[j * m..(j + 1) * m].to_vec();
-                let mut next = row;
-                ctx.reduce_local(after_gather, op, &acc, &mut next);
-                acc = next;
+                let row = &mut rows[j * m..(j + 1) * m];
+                ctx.reduce_local(after_gather, op, &acc, row); // row = acc ⊕ row
+                acc.copy_from(row);
             }
             let total = acc;
 
             // Inter-node exclusive scan over totals, 123-doubling pattern
-            // on the leader group (translate node index <-> rank).
+            // on the leader group (translate node index <-> rank), on the
+            // fused receive-reduce primitives.
             let nodes = p.div_ceil(k);
             let nr = node;
             let base = after_gather;
             // Round 0 (skip 1): shift totals right.
-            let mut t_buf = vec![T::filler(); m];
             {
                 let (t, f) = (nr + 1, nr.checked_sub(1));
                 match (t < nodes, f) {
@@ -126,20 +126,25 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanHierarchical {
                 let (t, f) = (nr + 2, nr.checked_sub(2));
                 match (t < nodes, f, nr) {
                     (true, Some(f), _) => {
-                        let mut w_prime = total.clone();
+                        let mut w_prime = ctx.scratch_from(&total);
                         ctx.reduce_local(base + 1, op, &node_prefix, &mut w_prime);
-                        ctx.sendrecv(base + 1, t * k, &w_prime, f * k, &mut t_buf)?;
-                        ctx.reduce_local(base + 1, op, &t_buf, &mut node_prefix);
+                        ctx.sendrecv_reduce_into(
+                            base + 1,
+                            t * k,
+                            &w_prime,
+                            f * k,
+                            op,
+                            &mut node_prefix,
+                        )?;
                     }
                     (true, None, 0) => ctx.send(base + 1, t * k, &total)?,
                     (true, None, _) => {
-                        let mut w_prime = total.clone();
+                        let mut w_prime = ctx.scratch_from(&total);
                         ctx.reduce_local(base + 1, op, &node_prefix, &mut w_prime);
                         ctx.send(base + 1, t * k, &w_prime)?;
                     }
                     (false, Some(f), _) => {
-                        ctx.recv(base + 1, f * k, &mut t_buf)?;
-                        ctx.reduce_local(base + 1, op, &t_buf, &mut node_prefix);
+                        ctx.recv_reduce(base + 1, f * k, op, &mut node_prefix)?;
                     }
                     _ => {}
                 }
@@ -151,13 +156,11 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanHierarchical {
                     let f = if nr > s { Some(nr - s) } else { None };
                     match (t < nodes, f) {
                         (true, Some(f)) => {
-                            ctx.sendrecv(base + j, t * k, &node_prefix, f * k, &mut t_buf)?;
-                            ctx.reduce_local(base + j, op, &t_buf, &mut node_prefix);
+                            ctx.sendrecv_reduce(base + j, t * k, f * k, op, &mut node_prefix)?
                         }
                         (true, None) => ctx.send(base + j, t * k, &node_prefix)?,
                         (false, Some(f)) => {
-                            ctx.recv(base + j, f * k, &mut t_buf)?;
-                            ctx.reduce_local(base + j, op, &t_buf, &mut node_prefix);
+                            ctx.recv_reduce(base + j, f * k, op, &mut node_prefix)?
                         }
                         (false, None) => break,
                     }
@@ -185,10 +188,9 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanHierarchical {
                 } else {
                     row.copy_from_slice(&local_prefix_rows[j * m..(j + 1) * m]);
                     if have_node_prefix {
-                        // node_prefix is earlier than the local rows.
-                        let mut combined = row.to_vec();
-                        ctx.reduce_local(scatter_base, op, &node_prefix, &mut combined);
-                        row.copy_from_slice(&combined);
+                        // node_prefix is earlier than the local rows;
+                        // combine in place, no per-row temporary.
+                        ctx.reduce_local(scatter_base, op, &node_prefix, row);
                     }
                 }
             }

@@ -39,9 +39,10 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanLinear {
         }
         // Receive the exclusive prefix from the left (round r-1)…
         ctx.recv((r - 1) as u32, r - 1, output)?;
-        // …and forward the inclusive extension to the right (round r).
+        // …and forward the inclusive extension to the right (round r),
+        // prepared in a pooled scratch buffer (no per-hop allocation).
         if r + 1 < p {
-            let mut fwd = input.to_vec();
+            let mut fwd = ctx.scratch_from(input);
             ctx.reduce_local(r as u32, op, output, &mut fwd); // W earlier
             ctx.send(r as u32, r + 1, &fwd)?;
         }

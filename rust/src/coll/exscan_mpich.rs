@@ -42,8 +42,8 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanMpich {
         }
         // partial_scan: reduction over the contiguous rank block this rank
         // has subsumed so far; starts as the local input (mpich copies
-        // sendbuf into a temporary).
-        let mut partial_scan = input.to_vec();
+        // sendbuf into a temporary — here a pooled ctx scratch buffer).
+        let mut partial_scan = ctx.scratch_from(input);
         let mut flag = false; // has `output` received its first contribution?
 
         let mut mask = 1usize;
@@ -51,10 +51,13 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanMpich {
         while mask < p {
             let dst = rank ^ mask;
             if dst < p {
-                let mut tmp = ctx.sendrecv_owned(k, dst, &partial_scan, dst, m)?;
                 if rank > dst {
                     // Partner block is strictly below ours: it extends both
-                    // the partial and the exclusive result.
+                    // the partial and the exclusive result. The received
+                    // partial has two consumers, so this is the one branch
+                    // that keeps the owned receive (fusing would force an
+                    // extra copy of the incoming vector).
+                    let tmp = ctx.sendrecv_owned(k, dst, &partial_scan, dst, m)?;
                     ctx.reduce_local(k, op, &tmp, &mut partial_scan); // partial = tmp ⊕ partial
                     if !flag {
                         output.copy_from_slice(&tmp);
@@ -62,16 +65,15 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanMpich {
                     } else {
                         ctx.reduce_local(k, op, &tmp, output); // recv = tmp ⊕ recv
                     }
+                } else if op.commutative() {
+                    // Partner block is above: only the partial grows —
+                    // fused fold straight from the receive buffer.
+                    ctx.sendrecv_reduce(k, dst, dst, op, &mut partial_scan)?;
                 } else {
-                    // Partner block is above: only the partial grows, and
-                    // our block is the *earlier* operand.
-                    if op.commutative() {
-                        ctx.reduce_local(k, op, &tmp, &mut partial_scan);
-                    } else {
-                        // mpich: reduce (partial_scan, tmp) then swap.
-                        ctx.reduce_local(k, op, &partial_scan, &mut tmp);
-                        partial_scan.copy_from_slice(&tmp);
-                    }
+                    // Our block is the *earlier* operand; mpich reduces
+                    // (partial_scan, tmp) then swaps — the fused
+                    // right-operand variant does exactly that in place.
+                    ctx.sendrecv_reduce_right(k, dst, dst, op, &mut partial_scan)?;
                 }
             }
             mask <<= 1;

@@ -33,7 +33,7 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanOneDoubling {
         output: &mut [T],
         op: &OpRef<T>,
     ) -> Result<()> {
-        let (r, p, m) = (ctx.rank(), ctx.size(), input.len());
+        let (r, p) = (ctx.rank(), ctx.size());
         if p <= 1 {
             return Ok(());
         }
@@ -51,23 +51,19 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanOneDoubling {
         }
 
         // Rounds k >= 1 with s_k = 2^{k-1}: the doubling scan over the
-        // shifted inputs on ranks 1..p. Receives come only from ranks >= 1
-        // (rank 0 left the algorithm), sends go to r + s_k < p.
+        // shifted inputs on ranks 1..p, on the fused primitives (the value
+        // sent is the value kept; the received partial folds straight from
+        // the pooled buffer: W = W_{r-s} ⊕ W). Receives come only from
+        // ranks >= 1 (rank 0 left the algorithm), sends go to r + s_k < p.
         let mut s = 1usize;
         let mut k = 1u32;
         while s < p - 1 {
             let to = r + s;
             let from = if r > s { Some(r - s) } else { None }; // from >= 1
             match (to < p, from) {
-                (true, Some(f)) => {
-                    let t_buf = ctx.sendrecv_owned(k, to, &output[..], f, m)?;
-                    ctx.reduce_local(k, op, &t_buf, output); // W = W_{r-s} ⊕ W
-                }
+                (true, Some(f)) => ctx.sendrecv_reduce(k, to, f, op, output)?,
                 (true, None) => ctx.send(k, to, output)?,
-                (false, Some(f)) => {
-                    let t_buf = ctx.recv_owned(k, f, m)?;
-                    ctx.reduce_local(k, op, &t_buf, output);
-                }
+                (false, Some(f)) => ctx.recv_reduce(k, f, op, output)?,
                 (false, None) => {}
             }
             s *= 2;

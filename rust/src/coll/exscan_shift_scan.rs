@@ -36,8 +36,8 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanShiftScan {
         if p <= 1 {
             return Ok(());
         }
-        // Inclusive scan into a temporary (rounds 0..⌈log₂p⌉).
-        let mut inc = vec![T::filler(); m];
+        // Inclusive scan into a pooled temporary (rounds 0..⌈log₂p⌉).
+        let mut inc = ctx.scratch_filled(m);
         ScanAlgorithm::<T>::run(&ScanDoubling, ctx, input, &mut inc, op)?;
         // Shift round: W_r -> r+1.
         let shift_round = ceil_log2(p);

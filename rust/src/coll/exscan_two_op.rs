@@ -38,7 +38,9 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanTwoOp {
         if p <= 1 {
             return Ok(()); // rank 0 output undefined
         }
-        let mut w_prime = vec![T::filler(); m];
+        // Pooled scratch for the outgoing inclusive partial, reused across
+        // rounds (zero steady-state allocations).
+        let mut w_prime = ctx.scratch_filled(m);
 
         // Round 0 (s = 1): pure shift — send V to r+1, receive V_{r-1}
         // into W. No ⊕. Establishes W_r = ⊕_{i=r-1}^{r-1} V_i.
@@ -69,14 +71,11 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanTwoOp {
             }
             match (sends, recvs, from) {
                 (true, true, Some(f)) => {
-                    let t_buf = ctx.sendrecv_owned(k, to, &w_prime, f, m)?;
-                    ctx.reduce_local(k, op, &t_buf, output); // W = T ⊕ W
+                    // W = T ⊕ W, fused straight from the receive buffer.
+                    ctx.sendrecv_reduce_into(k, to, &w_prime, f, op, output)?
                 }
                 (true, false, _) => ctx.send(k, to, &w_prime)?,
-                (false, true, Some(f)) => {
-                    let t_buf = ctx.recv_owned(k, f, m)?;
-                    ctx.reduce_local(k, op, &t_buf, output);
-                }
+                (false, true, Some(f)) => ctx.recv_reduce(k, f, op, output)?,
                 _ => {}
             }
             s *= 2;

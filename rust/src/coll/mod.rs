@@ -13,10 +13,12 @@
 //! | [`ExscanShiftScan`] (scan + shift) | exclusive | ⌈log₂p⌉+1 | ⌈log₂p⌉ |
 //! | [`ExscanLinear`] | exclusive | p−1 | 1 |
 //! | [`PipelinedChain`] | exclusive | p+B−2 | B (blocks) |
+//! | [`ExscanChunked`] | exclusive | (1+⌈log₂(p−1)⌉)·C | ⌈log₂(p−1)⌉·C (C chunks) |
 
 pub mod basic;
 pub mod exscan_123;
 pub mod exscan_blelloch;
+pub mod exscan_chunked;
 pub mod exscan_hierarchical;
 pub mod exscan_linear;
 pub mod exscan_mpich;
@@ -31,6 +33,7 @@ pub mod validate;
 
 pub use basic::{allreduce, bcast, gather_chain, reduce, scatter_chain};
 pub use exscan_123::Exscan123;
+pub use exscan_chunked::ExscanChunked;
 pub use exscan_hierarchical::ExscanHierarchical;
 pub use segmented::{seg_max_i64, seg_sum_i64, Seg};
 pub use exscan_blelloch::ExscanBlelloch;
@@ -89,6 +92,16 @@ pub trait ScanAlgorithm<T: Elem>: Send + Sync {
     /// receives, one per round it receives in — feeds the hierarchical
     /// cost-model calibration (intra- vs inter-node round classification).
     fn critical_skips(&self, p: usize) -> Vec<usize>;
+
+    /// Inputs for the closed-form α-β-γ prediction at a concrete vector
+    /// length: `(critical skips, critical-path ⊕ count, elements per
+    /// message)`. The default covers m-independent schedules (full-vector
+    /// messages every round); algorithms whose round structure depends on
+    /// m (the chunked pipeline, the block-pipelined chain) override it so
+    /// `exscan predict` and the selection table rank them honestly.
+    fn critical_schedule(&self, p: usize, m: usize) -> (Vec<usize>, u32, usize) {
+        (self.critical_skips(p), self.predicted_ops(p), m)
+    }
 }
 
 /// All exclusive-scan algorithms participating in the paper's comparison,
@@ -114,6 +127,7 @@ pub fn all_exscan_algorithms<T: Elem>() -> Vec<Box<dyn ScanAlgorithm<T>>> {
         Box::new(ExscanShiftScan),
         Box::new(ExscanLinear),
         Box::new(PipelinedChain::auto()),
+        Box::new(ExscanChunked::auto()),
     ]
 }
 

@@ -33,7 +33,7 @@ impl<T: Elem> ScanAlgorithm<T> for ScanDoubling {
         output: &mut [T],
         op: &OpRef<T>,
     ) -> Result<()> {
-        let (r, p, m) = (ctx.rank(), ctx.size(), input.len());
+        let (r, p) = (ctx.rank(), ctx.size());
         output.copy_from_slice(input); // W_r := V_r establishes the invariant
         let mut s = 1usize; // s_k = 2^k
         let mut k = 0u32;
@@ -42,17 +42,13 @@ impl<T: Elem> ScanAlgorithm<T> for ScanDoubling {
             let from = r.checked_sub(s);
             match (to < p, from) {
                 (true, Some(f)) => {
-                    // Simultaneous send-receive of full partial results
-                    // (the transport copies the send buffer on post, so W
-                    // can be borrowed for sending while T is received).
-                    let t_buf = ctx.sendrecv_owned(k, to, &output[..], f, m)?;
-                    ctx.reduce_local(k, op, &t_buf, output); // W = T ⊕ W
+                    // Fused simultaneous send-receive-reduce: the transport
+                    // copies the send buffer on post, then W = T ⊕ W folds
+                    // straight from the pooled receive buffer.
+                    ctx.sendrecv_reduce(k, to, f, op, output)?
                 }
                 (true, None) => ctx.send(k, to, output)?,
-                (false, Some(f)) => {
-                    let t_buf = ctx.recv_owned(k, f, m)?;
-                    ctx.reduce_local(k, op, &t_buf, output);
-                }
+                (false, Some(f)) => ctx.recv_reduce(k, f, op, output)?,
                 (false, None) => {} // p == 1
             }
             s *= 2;

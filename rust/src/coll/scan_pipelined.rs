@@ -101,8 +101,12 @@ impl<T: Elem> ScanAlgorithm<T> for PipelinedChain {
         let sends = r + 1 < p;
         let first_t = r - 1;
         let last_t = if sends { r + nb - 1 } else { r + nb - 2 };
-        let mut blk: Vec<T> = Vec::new();
-        let mut fwd: Vec<T> = Vec::new(); // combined block awaiting departure
+        // Pooled scratch buffers sized to the largest block up front, so
+        // the acquire is classified against the real capacity need and
+        // later per-block resizes stay within capacity (allocation-free).
+        let max_block = ranges.iter().map(|r| r.len()).max().unwrap_or(0);
+        let mut blk = ctx.scratch_filled(max_block);
+        let mut fwd = ctx.scratch_filled(max_block); // combined block awaiting departure
         for t in first_t..=last_t {
             let j_in = t - (r - 1);
             let has_in = j_in < nb;
@@ -121,8 +125,7 @@ impl<T: Elem> ScanAlgorithm<T> for PipelinedChain {
                 output[range.clone()].copy_from_slice(&blk);
                 if sends {
                     // Prepare block j_in of W_{r+1} = W_r ⊕ V_r for round t+1.
-                    fwd.clear();
-                    fwd.extend_from_slice(&input[range]);
+                    fwd.copy_from(&input[range]);
                     ctx.reduce_local(t as u32, op, &blk, &mut fwd);
                 }
             }
@@ -142,6 +145,14 @@ impl<T: Elem> ScanAlgorithm<T> for PipelinedChain {
 
     fn critical_skips(&self, p: usize) -> Vec<usize> {
         vec![1; p.saturating_sub(1)]
+    }
+
+    /// m-dependent prediction inputs: `p + B − 2` unit-distance rounds at
+    /// block-sized payload, one ⊕ per block on an interior rank.
+    fn critical_schedule(&self, p: usize, m: usize) -> (Vec<usize>, u32, usize) {
+        let b = self.block_count(m);
+        let rounds = (p + b).saturating_sub(2);
+        (vec![1; rounds], self.ops_for(p, m), m.div_ceil(b.max(1)))
     }
 }
 

@@ -16,46 +16,30 @@ use super::{
 
 /// Choose the predicted-fastest exclusive-scan algorithm for (p, bytes).
 /// Candidates: the paper's three portable algorithms plus the pipelined
-/// chain (which takes over for very large vectors).
+/// chain (which takes over for very large vectors). Every candidate is
+/// ranked through its own `critical_schedule(p, m)`, so m-dependent
+/// schedules (the chain's blocks) price their real round count and
+/// per-message payload.
 pub fn select_exscan<T: Elem>(
     p: usize,
     m: usize,
     params: &CostParams,
     ranks_per_node: usize,
 ) -> Box<dyn ScanAlgorithm<T>> {
-    let bytes = m * T::size_bytes();
+    let mut candidates: Vec<Box<dyn ScanAlgorithm<T>>> = paper_exscan_algorithms::<T>()
+        .into_iter()
+        .filter(|a| a.name() != "native-mpich") // the baseline, not a candidate
+        .collect();
+    candidates.push(Box::new(PipelinedChain::auto()));
+
     let mut best: Option<(f64, Box<dyn ScanAlgorithm<T>>)> = None;
-    for algo in paper_exscan_algorithms::<T>() {
-        if algo.name() == "native-mpich" {
-            continue; // the baseline, not a candidate
-        }
-        let pred = predict_flat(
-            &algo.critical_skips(p),
-            algo.predicted_ops(p),
-            p,
-            ranks_per_node,
-            bytes,
-            params,
-        );
+    for algo in candidates {
+        let (skips, ops, msg_elems) = algo.critical_schedule(p, m);
+        let pred =
+            predict_flat(&skips, ops, p, ranks_per_node, msg_elems * T::size_bytes(), params);
         if best.as_ref().map(|(t, _)| pred.time_us < *t).unwrap_or(true) {
             best = Some((pred.time_us, algo));
         }
-    }
-    // Pipelined chain: (p + B − 2) rounds of (bytes/B), B combines.
-    let chain = PipelinedChain::auto();
-    let b = chain.block_count(m);
-    let chain_skips = vec![1usize; (p + b).saturating_sub(2)];
-    let chain_bytes = bytes / b.max(1);
-    let pred = predict_flat(
-        &chain_skips,
-        chain.ops_for(p, m),
-        p,
-        ranks_per_node,
-        chain_bytes,
-        params,
-    );
-    if best.as_ref().map(|(t, _)| pred.time_us < *t).unwrap_or(true) {
-        return Box::new(chain);
     }
     best.expect("at least one candidate").1
 }

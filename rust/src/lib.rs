@@ -57,8 +57,8 @@ pub mod util;
 pub mod prelude {
     pub use crate::bench::{BenchConfig, Harness, SweepSpec};
     pub use crate::coll::{
-        all_exscan_algorithms, Exscan123, ExscanBlelloch, ExscanLinear, ExscanMpich,
-        ExscanOneDoubling, ExscanTwoOp, ScanAlgorithm, ScanDoubling, ScanKind,
+        all_exscan_algorithms, Exscan123, ExscanBlelloch, ExscanChunked, ExscanLinear,
+        ExscanMpich, ExscanOneDoubling, ExscanTwoOp, ScanAlgorithm, ScanDoubling, ScanKind,
     };
     pub use crate::cost::{CostModel, CostParams, LinkClass};
     pub use crate::mpi::{

@@ -14,6 +14,18 @@
 //! [`Inbox`](super::inbox::Inbox) (no shared MPMC lock, no linear
 //! matching scan). `recv_owned` hands the pooled buffer straight to the
 //! algorithm; dropping it recycles the buffer.
+//!
+//! Compute hot path (this PR): the fused primitives
+//! [`recv_reduce`](RankCtx::recv_reduce) /
+//! [`sendrecv_reduce`](RankCtx::sendrecv_reduce) match the inbound
+//! `(src, round)` slot and apply `⊕` **directly from the pooled receive
+//! buffer into the caller's buffer** — no intermediate owned handle, no
+//! extra memory pass — and [`scratch_from`](RankCtx::scratch_from) /
+//! [`scratch_filled`](RankCtx::scratch_filled) replace the algorithms'
+//! per-call `to_vec()` temporaries with pool-recycled buffers. The
+//! pre-fusion two-step flow is preserved behind
+//! [`WorldConfig::unfused_compat`](super::WorldConfig) as the A/B
+//! reference for the equivalence tests and the hotpath m-sweep.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -69,6 +81,11 @@ pub struct RankCtx<T: Elem> {
     barrier: Arc<VBarrier>,
     barrier_gen: u64,
     mode: ClockMode,
+    /// A/B switch: route the fused `*_reduce` primitives through the
+    /// pre-fusion flow (land the message in an owned scratch copy, then a
+    /// separate reduce pass). Identical results and traces by
+    /// construction; one extra memory pass per receive.
+    unfused: bool,
     /// Deadlock-detection deadline per blocking receive.
     recv_deadline: Duration,
     /// Virtual clock (µs). Meaningless in real mode.
@@ -90,6 +107,7 @@ impl<T: Elem> RankCtx<T> {
         barrier: Arc<VBarrier>,
         mode: ClockMode,
         tracing: bool,
+        unfused: bool,
         recv_deadline: Duration,
     ) -> Self {
         RankCtx {
@@ -101,6 +119,7 @@ impl<T: Elem> RankCtx<T> {
             barrier,
             barrier_gen: 0,
             mode,
+            unfused,
             recv_deadline,
             vclock: 0.0,
             tracing,
@@ -192,6 +211,101 @@ impl<T: Elem> RankCtx<T> {
         }
     }
 
+    /// [`take`](Self::take) plus the element-count check every receive
+    /// variant performs. `what` names the calling primitive for the error.
+    fn take_expect(
+        &mut self,
+        from: usize,
+        round: u32,
+        expect: usize,
+        what: &str,
+    ) -> Result<Msg<T>> {
+        let msg = self.take(from, round)?;
+        if msg.data.len() != expect {
+            bail!(
+                "rank {}: {what} size mismatch from {} round {}: got {} want {}",
+                self.rank,
+                from,
+                round,
+                msg.data.len(),
+                expect
+            );
+        }
+        Ok(msg)
+    }
+
+    /// Trace + virtual-clock accounting for one completed receive.
+    fn account_recv(&mut self, round: u32, from: usize, len: usize, vtime: f64) {
+        self.record(round, EventKind::Recv { from, bytes: Self::bytes(len) });
+        if let ClockMode::Virtual(model) = &self.mode {
+            let c_in = model.round_cost(from, self.rank, Self::bytes(len));
+            self.vclock = self.vclock.max(vtime) + c_in;
+        }
+    }
+
+    /// Trace + virtual-clock accounting for one completed simultaneous
+    /// send-receive (the round costs `max(c_out, c_in)` on top of the
+    /// later of the two ranks' start times).
+    fn account_sendrecv(
+        &mut self,
+        round: u32,
+        to: usize,
+        sent: usize,
+        from: usize,
+        len: usize,
+        vtime: f64,
+    ) {
+        self.record(round, EventKind::Recv { from, bytes: Self::bytes(len) });
+        if let ClockMode::Virtual(model) = &self.mode {
+            let c_out = model.round_cost(self.rank, to, Self::bytes(sent));
+            let c_in = model.round_cost(from, self.rank, Self::bytes(len));
+            self.vclock = self.vclock.max(vtime) + c_out.max(c_in);
+        }
+    }
+
+    /// One traced `⊕` application: sharded counter bump, trace event,
+    /// virtual-clock advance. Every reduce — fused or explicit — funnels
+    /// through here, so op counts and γ costs cannot diverge per path.
+    fn fold(&mut self, round: u32, op: &OpRef<T>, input: &[T], inout: &mut [T]) {
+        op.reduce_local_sharded(self.rank, input, inout);
+        self.record(round, EventKind::Reduce { bytes: Self::bytes(input.len()) });
+        if let ClockMode::Virtual(model) = &self.mode {
+            self.vclock += model.reduce_cost(Self::bytes(input.len()));
+        }
+    }
+
+    /// Fold a just-received message into `inout` (`inout = msg ⊕ inout`,
+    /// the received partial being the earlier operand). Fused path: the
+    /// combine reads straight from the pooled receive buffer. Unfused
+    /// compat: copy into a pooled scratch first, then reduce — the
+    /// pre-fusion extra memory pass, kept as the A/B reference.
+    fn fold_msg(&mut self, round: u32, op: &OpRef<T>, msg: Msg<T>, inout: &mut [T]) {
+        if self.unfused {
+            let tmp = BufferPool::acquire_copy(&self.pool, &msg.data);
+            drop(msg); // recycle the transport buffer before reducing
+            self.fold(round, op, &tmp, inout);
+        } else {
+            self.fold(round, op, &msg.data, inout);
+        }
+        // msg (fused path) drops here → its buffer recycles to the
+        // sender's pool.
+    }
+
+    /// [`fold_msg`](Self::fold_msg) with the **local** value as the
+    /// earlier operand: `keep = keep ⊕ msg`. The combine writes into the
+    /// pooled receive buffer, then the result copies back into `keep`.
+    fn fold_msg_right(&mut self, round: u32, op: &OpRef<T>, mut msg: Msg<T>, keep: &mut [T]) {
+        if self.unfused {
+            let mut tmp = BufferPool::acquire_copy(&self.pool, &msg.data);
+            drop(msg);
+            self.fold(round, op, keep, &mut tmp);
+            keep.copy_from_slice(&tmp);
+        } else {
+            self.fold(round, op, keep, &mut msg.data);
+            keep.copy_from_slice(&msg.data);
+        }
+    }
+
     /// One-sided send in communication round `round` (one send-port slot).
     pub fn send(&mut self, round: u32, to: usize, buf: &[T]) -> Result<()> {
         self.post(to, round, buf)?;
@@ -204,23 +318,9 @@ impl<T: Elem> RankCtx<T> {
 
     /// One-sided receive in communication round `round` (one recv-port slot).
     pub fn recv(&mut self, round: u32, from: usize, buf: &mut [T]) -> Result<()> {
-        let msg = self.take(from, round)?;
-        if msg.data.len() != buf.len() {
-            bail!(
-                "rank {}: recv size mismatch from {} round {}: got {} want {}",
-                self.rank,
-                from,
-                round,
-                msg.data.len(),
-                buf.len()
-            );
-        }
+        let msg = self.take_expect(from, round, buf.len(), "recv")?;
         buf.copy_from_slice(&msg.data);
-        self.record(round, EventKind::Recv { from, bytes: Self::bytes(buf.len()) });
-        if let ClockMode::Virtual(model) = &self.mode {
-            let c_in = model.round_cost(from, self.rank, Self::bytes(buf.len()));
-            self.vclock = self.vclock.max(msg.vtime) + c_in;
-        }
+        self.account_recv(round, from, buf.len(), msg.vtime);
         Ok(())
     }
 
@@ -231,23 +331,49 @@ impl<T: Elem> RankCtx<T> {
     /// so no copy is ever needed). `expect` is the element count. The
     /// returned [`PoolBuf`] recycles to the sender's pool on drop.
     pub fn recv_owned(&mut self, round: u32, from: usize, expect: usize) -> Result<PoolBuf<T>> {
-        let msg = self.take(from, round)?;
-        if msg.data.len() != expect {
-            bail!(
-                "rank {}: recv size mismatch from {} round {}: got {} want {}",
-                self.rank,
-                from,
-                round,
-                msg.data.len(),
-                expect
-            );
-        }
-        self.record(round, EventKind::Recv { from, bytes: Self::bytes(expect) });
-        if let ClockMode::Virtual(model) = &self.mode {
-            let c_in = model.round_cost(from, self.rank, Self::bytes(expect));
-            self.vclock = self.vclock.max(msg.vtime) + c_in;
-        }
+        let msg = self.take_expect(from, round, expect, "recv")?;
+        self.account_recv(round, from, expect, msg.vtime);
         Ok(msg.data)
+    }
+
+    /// **Fused receive-reduce** — the compute hot path. Matches the
+    /// `(from, round)` message and applies `inout = T ⊕ inout` (the
+    /// received partial `T` is the earlier operand) directly from the
+    /// pooled receive buffer: no owned handle crosses into the algorithm
+    /// and the buffer recycles before this call returns. Trace and
+    /// virtual-clock effects are exactly those of
+    /// `recv_owned` + `reduce_local` (one `Recv`, one `Reduce`).
+    pub fn recv_reduce(
+        &mut self,
+        round: u32,
+        from: usize,
+        op: &OpRef<T>,
+        inout: &mut [T],
+    ) -> Result<()> {
+        let msg = self.take_expect(from, round, inout.len(), "recv")?;
+        self.account_recv(round, from, inout.len(), msg.vtime);
+        self.fold_msg(round, op, msg, inout);
+        Ok(())
+    }
+
+    /// Fused receive-reduce with the **local** value as the earlier
+    /// operand: `keep = keep ⊕ T`. Used where the receiver's own partial
+    /// covers earlier ranks than the received one (e.g. the Blelloch
+    /// up-sweep folding a right-child segment). The combine writes into
+    /// the pooled receive buffer and the result is copied back into
+    /// `keep` — still one reduce pass plus one copy, with no
+    /// algorithm-side temporary.
+    pub fn recv_reduce_right(
+        &mut self,
+        round: u32,
+        from: usize,
+        op: &OpRef<T>,
+        keep: &mut [T],
+    ) -> Result<()> {
+        let msg = self.take_expect(from, round, keep.len(), "recv")?;
+        self.account_recv(round, from, keep.len(), msg.vtime);
+        self.fold_msg_right(round, op, msg, keep);
+        Ok(())
     }
 
     /// Owned-buffer simultaneous send-receive (see [`recv_owned`](Self::recv_owned)).
@@ -261,24 +387,72 @@ impl<T: Elem> RankCtx<T> {
     ) -> Result<PoolBuf<T>> {
         self.post(to, round, sbuf)?;
         self.record(round, EventKind::Send { to, bytes: Self::bytes(sbuf.len()) });
-        let msg = self.take(from, round)?;
-        if msg.data.len() != expect {
-            bail!(
-                "rank {}: sendrecv size mismatch from {} round {}: got {} want {}",
-                self.rank,
-                from,
-                round,
-                msg.data.len(),
-                expect
-            );
-        }
-        self.record(round, EventKind::Recv { from, bytes: Self::bytes(expect) });
-        if let ClockMode::Virtual(model) = &self.mode {
-            let c_out = model.round_cost(self.rank, to, Self::bytes(sbuf.len()));
-            let c_in = model.round_cost(from, self.rank, Self::bytes(expect));
-            self.vclock = self.vclock.max(msg.vtime) + c_out.max(c_in);
-        }
+        let msg = self.take_expect(from, round, expect, "sendrecv")?;
+        self.account_sendrecv(round, to, sbuf.len(), from, expect, msg.vtime);
         Ok(msg.data)
+    }
+
+    /// **Fused send-receive-reduce** for the doubling algorithms'
+    /// steady-state rounds, where the value sent *is* the value kept:
+    /// posts `keep`, matches the inbound `(from, round)` partial `T`, and
+    /// folds `keep = T ⊕ keep` straight from the pooled receive buffer.
+    /// Trace and virtual-clock effects are exactly those of
+    /// `sendrecv_owned` + `reduce_local` (`Send`, `Recv`, `Reduce`).
+    pub fn sendrecv_reduce(
+        &mut self,
+        round: u32,
+        to: usize,
+        from: usize,
+        op: &OpRef<T>,
+        keep: &mut [T],
+    ) -> Result<()> {
+        self.post(to, round, keep)?;
+        self.record(round, EventKind::Send { to, bytes: Self::bytes(keep.len()) });
+        let msg = self.take_expect(from, round, keep.len(), "sendrecv")?;
+        self.account_sendrecv(round, to, keep.len(), from, keep.len(), msg.vtime);
+        self.fold_msg(round, op, msg, keep);
+        Ok(())
+    }
+
+    /// [`sendrecv_reduce`](Self::sendrecv_reduce) with the **local** value
+    /// as the earlier operand: posts `keep`, then `keep = keep ⊕ T` (the
+    /// mpich baseline's non-commutative "reduce then swap", done in place
+    /// in the pooled receive buffer).
+    pub fn sendrecv_reduce_right(
+        &mut self,
+        round: u32,
+        to: usize,
+        from: usize,
+        op: &OpRef<T>,
+        keep: &mut [T],
+    ) -> Result<()> {
+        self.post(to, round, keep)?;
+        self.record(round, EventKind::Send { to, bytes: Self::bytes(keep.len()) });
+        let msg = self.take_expect(from, round, keep.len(), "sendrecv")?;
+        self.account_sendrecv(round, to, keep.len(), from, keep.len(), msg.vtime);
+        self.fold_msg_right(round, op, msg, keep);
+        Ok(())
+    }
+
+    /// Fused send-receive-reduce with a separately prepared send buffer
+    /// (`sbuf` ≠ the kept partial): posts `sbuf`, folds the inbound
+    /// partial into `inout`. This is the round-1 shape of the 123-doubling
+    /// and two-⊕ algorithms, which send `W ⊕ V` while keeping `W`.
+    pub fn sendrecv_reduce_into(
+        &mut self,
+        round: u32,
+        to: usize,
+        sbuf: &[T],
+        from: usize,
+        op: &OpRef<T>,
+        inout: &mut [T],
+    ) -> Result<()> {
+        self.post(to, round, sbuf)?;
+        self.record(round, EventKind::Send { to, bytes: Self::bytes(sbuf.len()) });
+        let msg = self.take_expect(from, round, inout.len(), "sendrecv")?;
+        self.account_sendrecv(round, to, sbuf.len(), from, inout.len(), msg.vtime);
+        self.fold_msg(round, op, msg, inout);
+        Ok(())
     }
 
     /// Simultaneous send-receive — the paper's `Send(·,t) ∥ Recv(·,f)`:
@@ -295,35 +469,33 @@ impl<T: Elem> RankCtx<T> {
     ) -> Result<()> {
         self.post(to, round, sbuf)?;
         self.record(round, EventKind::Send { to, bytes: Self::bytes(sbuf.len()) });
-        let msg = self.take(from, round)?;
-        if msg.data.len() != rbuf.len() {
-            bail!(
-                "rank {}: sendrecv size mismatch from {} round {}: got {} want {}",
-                self.rank,
-                from,
-                round,
-                msg.data.len(),
-                rbuf.len()
-            );
-        }
+        let msg = self.take_expect(from, round, rbuf.len(), "sendrecv")?;
         rbuf.copy_from_slice(&msg.data);
-        self.record(round, EventKind::Recv { from, bytes: Self::bytes(rbuf.len()) });
-        if let ClockMode::Virtual(model) = &self.mode {
-            let c_out = model.round_cost(self.rank, to, Self::bytes(sbuf.len()));
-            let c_in = model.round_cost(from, self.rank, Self::bytes(rbuf.len()));
-            self.vclock = self.vclock.max(msg.vtime) + c_out.max(c_in);
-        }
+        self.account_sendrecv(round, to, sbuf.len(), from, rbuf.len(), msg.vtime);
         Ok(())
     }
 
     /// `MPI_Reduce_local`: `inout = input ⊕ inout`, attributed to `round`.
-    /// Advances the virtual clock by `γ·bytes` and bumps the op counters.
+    /// Advances the virtual clock by `γ·bytes` and bumps this rank's
+    /// shard of the op counters.
     pub fn reduce_local(&mut self, round: u32, op: &OpRef<T>, input: &[T], inout: &mut [T]) {
-        op.reduce_local(input, inout);
-        self.record(round, EventKind::Reduce { bytes: Self::bytes(input.len()) });
-        if let ClockMode::Virtual(model) = &self.mode {
-            self.vclock += model.reduce_cost(Self::bytes(input.len()));
-        }
+        self.fold(round, op, input, inout);
+    }
+
+    /// Pooled scratch buffer initialized to a copy of `src` — the
+    /// replacement for algorithm-side `input.to_vec()` temporaries. The
+    /// buffer comes from this rank's transport pool and recycles to it on
+    /// drop, so steady-state use performs zero heap allocations (visible
+    /// in [`pool_stats`](Self::pool_stats), asserted in
+    /// `tests/transport.rs`).
+    pub fn scratch_from(&self, src: &[T]) -> PoolBuf<T> {
+        BufferPool::acquire_copy(&self.pool, src)
+    }
+
+    /// Pooled scratch buffer of `len` filler elements (the pooled
+    /// counterpart of `vec![T::filler(); len]`).
+    pub fn scratch_filled(&self, len: usize) -> PoolBuf<T> {
+        BufferPool::acquire_filled(&self.pool, len, T::filler())
     }
 
     /// Barrier over all ranks. In virtual mode this also synchronizes the
@@ -342,5 +514,117 @@ impl<T: Elem> RankCtx<T> {
     /// True when running under the virtual (simulated-cluster) clock.
     pub fn is_virtual(&self) -> bool {
         matches!(self.mode, ClockMode::Virtual(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::mpi::{ops, run_world, Topology, WorldConfig};
+
+    #[test]
+    fn recv_reduce_folds_received_as_earlier_operand() {
+        let cfg = WorldConfig::new(Topology::flat(2));
+        let out = run_world::<i64, Vec<i64>, _>(&cfg, |ctx| {
+            let op = ops::bxor();
+            if ctx.rank() == 0 {
+                ctx.send(0, 1, &[1i64, 2])?;
+                Ok(vec![])
+            } else {
+                let mut inout = vec![10i64, 20];
+                ctx.recv_reduce(0, 0, &op, &mut inout)?;
+                Ok(inout)
+            }
+        })
+        .unwrap();
+        assert_eq!(out[1], vec![1 ^ 10, 2 ^ 20]);
+    }
+
+    #[test]
+    fn recv_reduce_right_keeps_local_as_earlier_operand() {
+        use crate::mpi::Rec2;
+        // Non-commutative compose: keep = keep ∘-earlier recv.
+        let a = Rec2::new([2.0, 0.0, 0.0, 2.0], [1.0, 1.0]);
+        let b = Rec2::new([1.0, 1.0, 0.0, 1.0], [0.0, 3.0]);
+        let cfg = WorldConfig::new(Topology::flat(2));
+        let out = run_world::<Rec2, Vec<Rec2>, _>(&cfg, |ctx| {
+            let op = ops::rec2_compose();
+            if ctx.rank() == 0 {
+                ctx.send(0, 1, &[b])?;
+                Ok(vec![])
+            } else {
+                let mut keep = vec![a];
+                ctx.recv_reduce_right(0, 0, &op, &mut keep)?;
+                Ok(keep)
+            }
+        })
+        .unwrap();
+        assert_eq!(out[1][0], a.then(&b), "keep must be the earlier operand");
+    }
+
+    #[test]
+    fn sendrecv_reduce_ring_matches_manual() {
+        // Every rank keeps its rank id and folds the left neighbour's in;
+        // the fused ring must equal the recv_owned + reduce_local ring.
+        let p = 8;
+        let cfg = WorldConfig::new(Topology::flat(p));
+        let fused = run_world::<i64, i64, _>(&cfg, |ctx| {
+            let (r, p) = (ctx.rank(), ctx.size());
+            let op = ops::sum_i64();
+            let mut keep = [r as i64];
+            ctx.sendrecv_reduce(0, (r + 1) % p, (r + p - 1) % p, &op, &mut keep)?;
+            Ok(keep[0])
+        })
+        .unwrap();
+        let two_step = run_world::<i64, i64, _>(&cfg, |ctx| {
+            let (r, p) = (ctx.rank(), ctx.size());
+            let op = ops::sum_i64();
+            let mut keep = [r as i64];
+            let t = ctx.sendrecv_owned(0, (r + 1) % p, &keep, (r + p - 1) % p, 1)?;
+            ctx.reduce_local(0, &op, &t, &mut keep);
+            Ok(keep[0])
+        })
+        .unwrap();
+        assert_eq!(fused, two_step);
+    }
+
+    #[test]
+    fn unfused_compat_is_bit_identical() {
+        let mk = |unfused: bool| {
+            let cfg =
+                WorldConfig::new(Topology::flat(4)).with_unfused_compat(unfused);
+            run_world::<i64, i64, _>(&cfg, |ctx| {
+                let (r, p) = (ctx.rank(), ctx.size());
+                let op = ops::bxor();
+                let mut keep = [(r as i64) << 4 | 3];
+                ctx.sendrecv_reduce(0, (r + 1) % p, (r + p - 1) % p, &op, &mut keep)?;
+                ctx.sendrecv_reduce(1, (r + 2) % p, (r + p - 2) % p, &op, &mut keep)?;
+                Ok(keep[0])
+            })
+            .unwrap()
+        };
+        assert_eq!(mk(false), mk(true));
+    }
+
+    #[test]
+    fn scratch_buffers_recycle_through_the_rank_pool() {
+        let cfg = WorldConfig::new(Topology::flat(1));
+        run_world::<i64, (), _>(&cfg, |ctx| {
+            drop(ctx.scratch_from(&[1, 2, 3])); // warm the pool (one miss)
+            let before = ctx.pool_stats();
+            for _ in 0..20 {
+                let s = ctx.scratch_from(&[4, 5, 6]);
+                assert_eq!(&*s, &[4i64, 5, 6][..]);
+                let f = ctx.scratch_filled(2);
+                assert_eq!(&*f, &[0i64, 0][..]);
+            }
+            let after = ctx.pool_stats();
+            assert_eq!(
+                after.misses,
+                before.misses + 1,
+                "only the first filled acquire may allocate (second slot)"
+            );
+            Ok(())
+        })
+        .unwrap();
     }
 }

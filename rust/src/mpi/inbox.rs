@@ -24,6 +24,12 @@
 //! additionally time-sliced (`PARK_SLICE`) so a theoretically lost wakeup
 //! degrades to a bounded stall rather than a hang. The receive deadline
 //! (deadlock detection) is enforced by the caller via `recv_deadline`.
+//!
+//! The matched message's pooled buffer is consumed in place by the fused
+//! `RankCtx::{recv_reduce, sendrecv_reduce}` primitives — the `⊕` combine
+//! reads straight out of the slot's buffer and the buffer recycles to the
+//! sender's pool before the receive call returns, so a matched message
+//! never costs an extra memory pass after leaving the slot.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};

@@ -2,8 +2,10 @@
 //! communication layer with two interchangeable clock modes.
 //!
 //! * [`elem`] — element types (`MPI_Datatype` analogue), incl. [`Rec2`].
-//! * [`op`] — associative operators (`MPI_Op` + `MPI_Reduce_local`).
-//! * [`ctx`] — the per-rank API: `send`/`recv`/`sendrecv`/`reduce_local`.
+//! * [`op`] — associative operators (`MPI_Op` + `MPI_Reduce_local`) with
+//!   per-rank sharded application counters.
+//! * [`ctx`] — the per-rank API: `send`/`recv`/`sendrecv`/`reduce_local`
+//!   plus the fused `recv_reduce`/`sendrecv_reduce` compute hot path.
 //! * [`pool`] — recycling per-rank buffer pools (zero-allocation sends).
 //! * [`inbox`] — slot-keyed rendezvous matching (no MPMC lock, no scan).
 //! * [`world`] — topology, the one-shot [`run_world`]/[`run_scan`] entry

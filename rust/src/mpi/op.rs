@@ -16,6 +16,19 @@ use std::sync::Arc;
 
 use super::elem::{Elem, Rec2};
 
+/// Number of counter shards per operator. Power of two; ranks index their
+/// shard as `rank & (COUNTER_SHARDS - 1)`, so worlds up to 64 ranks get a
+/// truly private shard and larger worlds still spread 64 ways. 64 shards ×
+/// 128 B = 8 KiB per operator — negligible next to one m-element buffer.
+const COUNTER_SHARDS: usize = 64;
+
+/// One application counter, padded to its own cache line (128 B covers the
+/// 2-line prefetcher granularity on x86 and the 128 B lines on Apple ARM),
+/// so two ranks bumping adjacent shards never share a line.
+#[repr(align(128))]
+#[derive(Default)]
+struct CounterShard(AtomicU64);
+
 /// A binary, associative element-wise operator over vectors of `T`.
 pub trait CombineOp<T: Elem>: Send + Sync {
     /// Operator name (used in benchmark tables and artifact lookup).
@@ -32,40 +45,64 @@ pub trait CombineOp<T: Elem>: Send + Sync {
     }
 }
 
-/// Shared handle to an operator plus an application counter used by the
+/// Shared handle to an operator plus the application counters used by the
 /// round/op-count experiments (Theorem 1 verification).
+///
+/// The counters are sharded per rank and padded to cache lines: every rank
+/// thread bumps its own shard with a relaxed add, so steady-state scan
+/// rounds touch no shared cache line (the old single `AtomicU64` was a
+/// point of true sharing for all p ranks on every ⊕). Aggregation happens
+/// lazily, only when the trace/table layer asks via [`applications`].
+///
+/// [`applications`]: OpRef::applications
 pub struct OpRef<T: Elem> {
     op: Arc<dyn CombineOp<T>>,
-    applications: AtomicU64,
+    shards: Box<[CounterShard]>,
 }
 
 impl<T: Elem> OpRef<T> {
     pub fn new(op: Arc<dyn CombineOp<T>>) -> Self {
-        OpRef { op, applications: AtomicU64::new(0) }
+        let shards: Vec<CounterShard> =
+            (0..COUNTER_SHARDS).map(|_| CounterShard::default()).collect();
+        OpRef { op, shards: shards.into_boxed_slice() }
     }
 
-    pub fn name(&self) -> String {
-        self.op.name().to_string()
+    /// Operator name. Borrowed — this is read inside sweep loops and table
+    /// renderers, which must not allocate per call.
+    pub fn name(&self) -> &str {
+        self.op.name()
     }
 
     pub fn commutative(&self) -> bool {
         self.op.commutative()
     }
 
-    /// Apply `inout = input ⊕ inout`, bumping the global application count.
+    /// Apply `inout = input ⊕ inout`, counting on shard 0. Single-threaded
+    /// callers (oracles, unit tests); rank threads use
+    /// [`reduce_local_sharded`](Self::reduce_local_sharded) via `RankCtx`.
     pub fn reduce_local(&self, input: &[T], inout: &mut [T]) {
+        self.reduce_local_sharded(0, input, inout);
+    }
+
+    /// Apply `inout = input ⊕ inout`, counting on the caller's shard
+    /// (`shard` is the rank id; wrapped into the shard array). The hot
+    /// path: one relaxed add on a rank-private cache line.
+    pub fn reduce_local_sharded(&self, shard: usize, input: &[T], inout: &mut [T]) {
         debug_assert_eq!(input.len(), inout.len());
-        self.applications.fetch_add(1, Ordering::Relaxed);
+        self.shards[shard & (COUNTER_SHARDS - 1)].0.fetch_add(1, Ordering::Relaxed);
         self.op.combine(input, inout);
     }
 
-    /// Total ⊕ applications across all ranks since construction/reset.
+    /// Total ⊕ applications across all ranks since construction/reset
+    /// (lazy aggregation over the shards).
     pub fn applications(&self) -> u64 {
-        self.applications.load(Ordering::Relaxed)
+        self.shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
     }
 
     pub fn reset_applications(&self) {
-        self.applications.store(0, Ordering::Relaxed);
+        for s in self.shards.iter() {
+            s.0.store(0, Ordering::Relaxed);
+        }
     }
 }
 
@@ -206,6 +243,29 @@ mod tests {
         assert_eq!(buf, vec![0, 0, 0, 0]);
         op.reset_applications();
         assert_eq!(op.applications(), 0);
+    }
+
+    #[test]
+    fn sharded_counters_aggregate_across_ranks() {
+        // Counts land on per-rank shards (incl. the wrap beyond the shard
+        // count) and aggregate exactly; reset clears every shard.
+        let op = ops::sum_u64();
+        let mut buf = vec![0u64; 2];
+        for rank in [0usize, 1, 7, 63, 64, 1151] {
+            op.reduce_local_sharded(rank, &[1, 2], &mut buf);
+        }
+        assert_eq!(op.applications(), 6);
+        op.reset_applications();
+        assert_eq!(op.applications(), 0);
+        op.reduce_local(&[1, 2], &mut buf); // shard-0 convenience path
+        assert_eq!(op.applications(), 1);
+    }
+
+    #[test]
+    fn name_is_borrowed() {
+        let op = ops::bxor();
+        let name: &str = op.name(); // no allocation, just a borrow
+        assert_eq!(name, "bxor_i64");
     }
 
     #[test]

@@ -100,6 +100,34 @@ impl<T> BufferPool<T> {
         self.free.lock().unwrap().bufs.len()
     }
 
+    /// Pop a retained buffer (or allocate an empty one), classifying the
+    /// acquire as hit/miss against the capacity the caller needs.
+    fn pop_counted(&self, want: usize) -> Vec<T> {
+        let popped = {
+            let mut free = self.free.lock().unwrap();
+            let b = free.bufs.pop();
+            if let Some(ref b) = b {
+                free.bytes = free.bytes.saturating_sub(b.capacity() * std::mem::size_of::<T>());
+            }
+            b
+        };
+        match popped {
+            Some(b) if b.capacity() >= want => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            Some(b) => {
+                // Undersized: refilling it will reallocate anyway.
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(want)
+            }
+        }
+    }
+
     fn release(&self, buf: Vec<T>) {
         let bytes = buf.capacity() * std::mem::size_of::<T>();
         let mut free = self.free.lock().unwrap();
@@ -117,31 +145,20 @@ impl<T: Copy> BufferPool<T> {
     /// retained buffer and `memcpy` into it — no allocator call.
     /// (Associated fn, not a method: the handle must capture the `Arc`.)
     pub fn acquire_copy(pool: &Arc<Self>, src: &[T]) -> PoolBuf<T> {
-        let popped = {
-            let mut free = pool.free.lock().unwrap();
-            let b = free.bufs.pop();
-            if let Some(ref b) = b {
-                free.bytes = free.bytes.saturating_sub(b.capacity() * std::mem::size_of::<T>());
-            }
-            b
-        };
-        let mut buf = match popped {
-            Some(b) if b.capacity() >= src.len() => {
-                pool.hits.fetch_add(1, Ordering::Relaxed);
-                b
-            }
-            Some(b) => {
-                // Undersized: extend_from_slice would reallocate anyway.
-                pool.misses.fetch_add(1, Ordering::Relaxed);
-                b
-            }
-            None => {
-                pool.misses.fetch_add(1, Ordering::Relaxed);
-                Vec::with_capacity(src.len())
-            }
-        };
+        let mut buf = pool.pop_counted(src.len());
         buf.clear();
         buf.extend_from_slice(src);
+        PoolBuf { buf, pool: Some(Arc::clone(pool)) }
+    }
+
+    /// Acquire a buffer of `len` copies of `fill` — the pooled counterpart
+    /// of `vec![fill; len]`, used for algorithm scratch space
+    /// ([`RankCtx::scratch_filled`](super::RankCtx::scratch_filled)).
+    /// Steady state: pop + fill, no allocator call.
+    pub fn acquire_filled(pool: &Arc<Self>, len: usize, fill: T) -> PoolBuf<T> {
+        let mut buf = pool.pop_counted(len);
+        buf.clear();
+        buf.resize(len, fill);
         PoolBuf { buf, pool: Some(Arc::clone(pool)) }
     }
 }
@@ -170,6 +187,22 @@ impl<T> PoolBuf<T> {
 
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
+    }
+}
+
+impl<T: Copy> PoolBuf<T> {
+    /// Resize in place (amortized allocation-free once the buffer has seen
+    /// its peak length) — lets block-structured algorithms reuse one
+    /// scratch buffer across variable-length blocks.
+    pub fn resize(&mut self, len: usize, fill: T) {
+        self.buf.resize(len, fill);
+    }
+
+    /// Replace the contents with a copy of `src` (clear + extend; no
+    /// allocation when capacity suffices).
+    pub fn copy_from(&mut self, src: &[T]) {
+        self.buf.clear();
+        self.buf.extend_from_slice(src);
     }
 }
 
@@ -251,6 +284,31 @@ mod tests {
         let b: PoolBuf<i64> = PoolBuf::detached(vec![9, 9]);
         assert_eq!(b.len(), 2);
         drop(b); // no panic, no pool
+    }
+
+    #[test]
+    fn acquire_filled_recycles_like_acquire_copy() {
+        let pool: Arc<BufferPool<i64>> = Arc::new(BufferPool::new(1 << 20));
+        drop(BufferPool::acquire_filled(&pool, 8, 0i64)); // miss, retained
+        for _ in 0..50 {
+            let b = BufferPool::acquire_filled(&pool, 8, 7i64);
+            assert_eq!(&*b, &[7i64; 8][..]);
+        }
+        let s = pool.stats();
+        assert_eq!(s.misses, 1, "steady state must not allocate");
+        assert_eq!(s.hits, 50);
+    }
+
+    #[test]
+    fn resize_and_copy_from() {
+        let pool: Arc<BufferPool<i64>> = Arc::new(BufferPool::new(1 << 20));
+        let mut b = BufferPool::acquire_filled(&pool, 4, 1i64);
+        b.resize(2, 0);
+        assert_eq!(&*b, &[1i64, 1][..]);
+        b.resize(5, 9);
+        assert_eq!(&*b, &[1i64, 1, 9, 9, 9][..]);
+        b.copy_from(&[3, 4]);
+        assert_eq!(&*b, &[3i64, 4][..]);
     }
 
     #[test]

@@ -74,6 +74,12 @@ pub struct WorldConfig {
     pub recv_timeout: Option<Duration>,
     /// Retention budget of each rank's send-buffer pool, in bytes.
     pub pool_budget_bytes: usize,
+    /// Route the fused receive-reduce primitives through the pre-fusion
+    /// two-pass flow (owned copy, then reduce). Results and traces are
+    /// identical by construction; only the per-round memory traffic
+    /// differs. A/B reference for `tests/fused_equivalence.rs` and the
+    /// hotpath m-sweep — leave `false` for real measurements.
+    pub unfused_compat: bool,
 }
 
 impl WorldConfig {
@@ -86,6 +92,7 @@ impl WorldConfig {
             stack_size: 512 * 1024,
             recv_timeout: None,
             pool_budget_bytes: DEFAULT_BUDGET_BYTES,
+            unfused_compat: false,
         }
     }
 
@@ -105,6 +112,13 @@ impl WorldConfig {
     /// Set the per-receive deadlock deadline for this world only.
     pub fn with_recv_timeout(mut self, timeout: Duration) -> Self {
         self.recv_timeout = Some(timeout);
+        self
+    }
+
+    /// Run this world's receive-reduce primitives through the pre-fusion
+    /// two-pass flow (A/B reference; see the field docs).
+    pub fn with_unfused_compat(mut self, unfused: bool) -> Self {
+        self.unfused_compat = unfused;
         self
     }
 
@@ -180,6 +194,7 @@ where
             let barrier = Arc::clone(&barrier);
             let mode = cfg.mode.clone();
             let tracing = cfg.tracing;
+            let unfused = cfg.unfused_compat;
             let builder = std::thread::Builder::new()
                 .name(format!("rank-{rank}"))
                 .stack_size(cfg.stack_size);
@@ -194,6 +209,7 @@ where
                         barrier,
                         mode,
                         tracing,
+                        unfused,
                         recv_deadline,
                     );
                     fref(&mut ctx)
@@ -307,6 +323,7 @@ impl<T: Elem> World<T> {
             let barrier = Arc::clone(&barrier);
             let mode = cfg.mode.clone();
             let tracing = cfg.tracing;
+            let unfused = cfg.unfused_compat;
             let stack = cfg.stack_size;
             let handle = std::thread::Builder::new()
                 .name(format!("rank-{rank}"))
@@ -321,6 +338,7 @@ impl<T: Elem> World<T> {
                         barrier,
                         mode,
                         tracing,
+                        unfused,
                         recv_deadline,
                     );
                     while let Some((job, done)) = rx.pop_wait() {

@@ -107,6 +107,16 @@ impl TraceReport {
         self.ops_per_rank().into_iter().max().unwrap_or(0)
     }
 
+    /// Total ⊕ applications over all ranks. Cross-checked against the
+    /// lazily aggregated sharded counters of [`OpRef`] (which count the
+    /// same applications from the operator side) by the hotpath bench and
+    /// the CI m-sweep gate.
+    ///
+    /// [`OpRef`]: crate::mpi::OpRef
+    pub fn total_ops(&self) -> u64 {
+        self.traces.iter().map(|t| t.ops() as u64).sum()
+    }
+
     /// ⊕ applications on the completion-critical last rank `p-1` — the
     /// count Theorem 1 states (`q-1` for the 123-doubling algorithm).
     pub fn last_rank_ops(&self) -> u32 {
@@ -156,6 +166,7 @@ mod tests {
         assert_eq!(r.ops_per_rank(), vec![0, 1]);
         assert_eq!(r.max_ops(), 1);
         assert_eq!(r.last_rank_ops(), 1);
+        assert_eq!(r.total_ops(), 1);
         assert_eq!(r.total_messages(), 1);
         assert_eq!(r.total_bytes(), 8);
     }

@@ -1,0 +1,139 @@
+//! Property suite for the fused compute path: for every exscan algorithm
+//! × operator × vector length, the fused receive-reduce primitives must
+//! produce **bit-identical** outputs (and identical round/op traces) to
+//! the pre-fusion two-pass flow, reachable via
+//! `WorldConfig::with_unfused_compat(true)`. Bit-identity (not tolerance)
+//! is the point: both paths must apply the exact same ⊕ calls in the
+//! exact same operand order — any fused-path aliasing or operand-order
+//! slip shows up here, including for the non-commutative `rec2_compose`.
+
+use exscan::coll::{all_exscan_algorithms, ExscanChunked, ExscanHierarchical};
+use exscan::prelude::*;
+use exscan::util::quickcheck::{cases, forall};
+use exscan::util::Rng;
+
+/// The satellite's m grid: empty, single element, odd small, multi-chunk.
+const MS: [usize; 4] = [0, 1, 17, 256];
+
+/// Every exclusive-scan algorithm in the library, plus variants that
+/// force the multi-chunk and hierarchical paths at these small m.
+fn algorithms<T: Elem>() -> Vec<Box<dyn ScanAlgorithm<T>>> {
+    let mut algos = all_exscan_algorithms::<T>();
+    algos.push(Box::new(ExscanChunked::with_chunk_elems(7)));
+    algos.push(Box::new(ExscanHierarchical::new(3)));
+    algos
+}
+
+fn run_pair<T: Elem>(
+    algo: &dyn ScanAlgorithm<T>,
+    op: &OpRef<T>,
+    inputs: &[Vec<T>],
+) -> (RunResult<T>, RunResult<T>) {
+    let p = inputs.len();
+    let fused_cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+    let unfused_cfg = WorldConfig::new(Topology::flat(p))
+        .with_unfused_compat(true)
+        .with_trace(true);
+    let fused = run_scan(&fused_cfg, algo, op, inputs).unwrap();
+    let unfused = run_scan(&unfused_cfg, algo, op, inputs).unwrap();
+    (fused, unfused)
+}
+
+fn assert_identical<T: Elem>(
+    algo: &dyn ScanAlgorithm<T>,
+    fused: RunResult<T>,
+    unfused: RunResult<T>,
+    p: usize,
+    m: usize,
+) {
+    assert_eq!(
+        fused.outputs,
+        unfused.outputs,
+        "{} p={p} m={m}: fused and unfused outputs must be bit-identical",
+        algo.name()
+    );
+    let (ft, ut) = (fused.trace.unwrap(), unfused.trace.unwrap());
+    assert_eq!(
+        ft.total_rounds(),
+        ut.total_rounds(),
+        "{} p={p} m={m}: round counts diverged",
+        algo.name()
+    );
+    assert_eq!(
+        ft.ops_per_rank(),
+        ut.ops_per_rank(),
+        "{} p={p} m={m}: per-rank ⊕ counts diverged",
+        algo.name()
+    );
+}
+
+fn inputs_u64(p: usize, m: usize, seed: u64) -> Vec<Vec<u64>> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..p).map(|_| (0..m).map(|_| rng.next_u64()).collect()).collect()
+}
+
+#[test]
+fn fused_matches_unfused_bxor_i64() {
+    forall(cases(12), |g| {
+        let p = g.usize_in(2, 20).max(2);
+        let m = *g.choose(&MS);
+        let inputs = exscan::bench::inputs_i64(p, m, g.u64());
+        for algo in algorithms::<i64>() {
+            let op = ops::bxor();
+            let (f, u) = run_pair(algo.as_ref(), &op, &inputs);
+            assert_identical(algo.as_ref(), f, u, p, m);
+        }
+    });
+}
+
+#[test]
+fn fused_matches_unfused_sum_u64() {
+    forall(cases(12), |g| {
+        let p = g.usize_in(2, 20).max(2);
+        let m = *g.choose(&MS);
+        let inputs = inputs_u64(p, m, g.u64());
+        for algo in algorithms::<u64>() {
+            let op = ops::sum_u64();
+            let (f, u) = run_pair(algo.as_ref(), &op, &inputs);
+            assert_identical(algo.as_ref(), f, u, p, m);
+        }
+    });
+}
+
+#[test]
+fn fused_matches_unfused_rec2_noncommutative() {
+    // Bit-identity over f32 affine composition: both paths must run the
+    // exact same association, so even float results compare equal.
+    forall(cases(8), |g| {
+        let p = g.usize_in(2, 14).max(2);
+        let m = *g.choose(&MS);
+        let inputs = exscan::bench::inputs_rec2(p, m, g.u64());
+        for algo in algorithms::<Rec2>() {
+            let op = ops::rec2_compose();
+            let (f, u) = run_pair(algo.as_ref(), &op, &inputs);
+            assert_identical(algo.as_ref(), f, u, p, m);
+        }
+    });
+}
+
+#[test]
+fn every_m_in_the_satellite_grid_is_covered_exhaustively() {
+    // Deterministic backstop for the randomized cases above: the paper's
+    // four algorithms at a fixed p across the full m grid, both operators
+    // that exercise the non-commutative swap path.
+    let p = 9;
+    for &m in &MS {
+        let inputs = exscan::bench::inputs_i64(p, m, 0x5EED ^ m as u64);
+        for algo in exscan::coll::paper_exscan_algorithms::<i64>() {
+            let op = ops::sum_i64();
+            let (f, u) = run_pair(algo.as_ref(), &op, &inputs);
+            assert_identical(algo.as_ref(), f, u, p, m);
+        }
+        let rec_inputs = exscan::bench::inputs_rec2(p, m, 0xC0DE ^ m as u64);
+        for algo in exscan::coll::paper_exscan_algorithms::<Rec2>() {
+            let op = ops::rec2_compose();
+            let (f, u) = run_pair(algo.as_ref(), &op, &rec_inputs);
+            assert_identical(algo.as_ref(), f, u, p, m);
+        }
+    }
+}

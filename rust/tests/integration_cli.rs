@@ -40,6 +40,7 @@ fn trace_all_algorithms() {
         "scan-then-shift",
         "linear",
         "pipelined-chain",
+        "chunked-doubling",
     ] {
         run(&["trace", "--algo", algo, "--p", "19"]).unwrap();
     }
@@ -66,7 +67,7 @@ fn sweep_quick_writes_csv() {
     let out_s = out.to_str().unwrap();
     run(&["sweep", "--config", "36x1", "--out", out_s, "--quick"]).unwrap();
     let text = std::fs::read_to_string(&out).unwrap();
-    assert!(text.starts_with("config,algo,p,m,bytes"));
+    assert!(text.starts_with("config,algo,op,p,m,bytes"));
     assert!(text.lines().count() > 10);
     let _ = std::fs::remove_file(&out);
 }
