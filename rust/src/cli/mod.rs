@@ -38,6 +38,13 @@ COMMANDS:
               --algo NAME  --p N  --ranks-per-node N  --m N  --critical
   tune      print the cost-model-driven selection table
               --p LIST  --ranks-per-node N
+  fuzz      differential chaos sweep: every exscan algorithm under a
+            seeded adversarial message schedule, checked against the
+            serial oracle and Theorem-1 counts (EXPERIMENTS.md §Chaos)
+              --seed N    (default: 1)  --p-max P  (default: 64)
+              --p LIST    pin exact world sizes (overrides --p-max grid)
+              --m LIST    pin exact vector lengths
+              --quick     small-p, small-m budget (the CI profile)
   kernel-smoke  exercise the AOT PJRT kernel path
               --artifacts DIR       (default: artifacts)
   verify-claims run the full evaluation and check every §3 claim
@@ -55,6 +62,7 @@ pub fn run_argv(argv: &[String]) -> Result<()> {
         Some("run") => cmd_run(&args),
         Some("trace") => cmd_trace(&args),
         Some("tune") => cmd_tune(&args),
+        Some("fuzz") => cmd_fuzz(&args),
         Some("kernel-smoke") => cmd_kernel_smoke(&args),
         Some("verify-claims") => cmd_verify_claims(),
         Some("help") | None => {
@@ -281,6 +289,72 @@ fn cmd_tune(args: &Args) -> Result<()> {
         println!();
     }
     Ok(())
+}
+
+/// Differential chaos fuzzing (EXPERIMENTS.md §Chaos): every registered
+/// exscan algorithm × {bxor, sum_i64, rec2_compose} × m grid × p grid
+/// under a seeded adversarial message schedule, on persistent executors.
+/// Any failure prints with its seed; the same seed replays the identical
+/// injected schedule.
+fn cmd_fuzz(args: &Args) -> Result<()> {
+    let seed: u64 = args.get("seed", 1u64)?;
+    let p_max: usize = args.get("p-max", 64)?;
+    let quick = args.switch("quick");
+
+    let mut default_ps: Vec<usize> = (2..=9).filter(|&p| p <= p_max).collect();
+    if !quick {
+        let mut p = 16;
+        while p <= p_max {
+            default_ps.push(p);
+            p *= 2;
+        }
+        if !default_ps.contains(&p_max) && p_max >= 2 {
+            default_ps.push(p_max);
+        }
+    }
+    // --p / --m pin the exact grid — the replay path printed by failure
+    // labels (`exscan fuzz --seed N --p P --m M`) re-runs precisely the
+    // failing case's world and vector length, whatever harness produced
+    // it.
+    let p_values = args.get_list("p", &default_ps)?;
+    anyhow::ensure!(
+        !p_values.is_empty() && p_values.iter().all(|&p| p >= 2),
+        "need world sizes >= 2 (got {p_values:?})"
+    );
+    let default_ms: Vec<usize> =
+        if quick { vec![0, 1, 17, 1024] } else { vec![0, 1, 17, 4096] };
+    let m_values = args.get_list("m", &default_ms)?;
+
+    println!(
+        "chaos fuzz: seed={seed}, p ∈ {p_values:?}, m ∈ {m_values:?} \
+         (all exscan algorithms × {{bxor_i64, sum_i64, rec2_compose}})"
+    );
+    let out = crate::coll::validate::chaos_fuzz(seed, &p_values, &m_values);
+    println!(
+        "{} cases; injected: {} delayed, {} diverted, {} yields, {} dropped \
+         (schedule digest {:#018x})",
+        out.cases, out.delayed, out.diverted, out.yields, out.dropped, out.schedule_digest
+    );
+
+    let pool = crate::coll::validate::chaos_pool_steady_state(seed);
+    match &pool {
+        Ok(()) => println!("pool steady state under chaos: zero-allocation OK"),
+        Err(e) => println!("pool steady state under chaos: FAIL ({e})"),
+    }
+
+    if out.failures.is_empty() && pool.is_ok() {
+        println!("all cases bit-identical to oracle with Theorem-1 counts");
+        Ok(())
+    } else {
+        for f in &out.failures {
+            println!("FAIL {f}");
+        }
+        bail!(
+            "{} chaos-fuzz failure(s); reproduce with `exscan fuzz --seed {seed}{}`",
+            out.failures.len() + usize::from(pool.is_err()),
+            if quick { " --quick" } else { "" }
+        )
+    }
 }
 
 /// Experiment E5: run both Table-1 grids and machine-check every claim

@@ -89,7 +89,12 @@ impl<T: Elem> ScanAlgorithm<T> for Exscan123 {
                 (false, Some(f), _) => {
                     ctx.recv_reduce(1, f, op, output)?;
                 }
-                (false, None, 0) => return Ok(()), // p == 3, rank 0: no one to feed
+                // Unreachable by the guards above (t = r+2 >= p with r < 2
+                // implies p <= 3, and p == 2 returned after round 0; at
+                // p == 3 rank 0 has t = 2 < p). Kept as a safe early-out
+                // rather than an unreachable!() so a future round-0 refactor
+                // cannot turn it into a panic.
+                (false, None, 0) => return Ok(()),
                 (false, None, _) => {} // p == 3, rank 1: complete after round 0
             }
         }
@@ -168,6 +173,55 @@ mod tests {
             // Middle ranks may pay one extra ⊕ (round-1 send preparation).
             assert!(trace.max_ops() <= q, "max ops bound p={p}");
             assert!(crate::trace::check_all(&trace).is_empty(), "invariants p={p}");
+        }
+    }
+
+    #[test]
+    fn small_p_edge_arms_exhaustive_under_chaos() {
+        // The p ∈ {2, 3, 4, 5} worlds hit every round-0/round-1 arm
+        // (rank 0 early return, the p = 3 "no partner" arms, rank 1's
+        // send-only round 1). Under seeded chaos ordering the outputs,
+        // the Theorem-1 counts and the trace's round bookkeeping for the
+        // early-exiting rank 0 must all be unchanged.
+        use crate::mpi::ChaosConfig;
+        use crate::trace::EventKind;
+        for p in 2usize..=5 {
+            for seed in [1u64, 2, 3, 4, 5] {
+                let cfg = WorldConfig::new(Topology::flat(p))
+                    .with_trace(true)
+                    .with_chaos(ChaosConfig::new(seed ^ ((p as u64) << 8)));
+                let inputs: Vec<Vec<i64>> =
+                    (0..p).map(|r| vec![(r as i64 + 1) * 3, !(r as i64)]).collect();
+                let res = run_scan(&cfg, &Exscan123, &ops::bxor(), &inputs).unwrap();
+                assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+                let trace = res.trace.unwrap();
+                let algo: &dyn ScanAlgorithm<i64> = &Exscan123;
+                let q = algo.predicted_rounds(p);
+                assert_eq!(trace.total_rounds(), q, "rounds p={p} seed={seed}");
+                assert_eq!(
+                    trace.last_rank_ops(),
+                    algo.predicted_ops(p),
+                    "last-rank ops p={p} seed={seed}"
+                );
+                assert!(
+                    crate::trace::check_all(&trace).is_empty(),
+                    "invariants p={p} seed={seed}"
+                );
+                // Round-count consistency for the early-exiting rank 0:
+                // it only ever sends (rounds 0 and, for p >= 3, 1), never
+                // receives, never reduces — even under chaos ordering.
+                let r0 = &trace.traces[0];
+                assert!(
+                    r0.events.iter().all(|e| !matches!(e.kind, EventKind::Recv { .. })),
+                    "rank 0 must not receive, p={p} seed={seed}"
+                );
+                assert_eq!(r0.ops(), 0, "rank 0 must not reduce, p={p} seed={seed}");
+                assert_eq!(
+                    r0.comm_rounds(),
+                    q.min(2),
+                    "rank 0 exits after its round-1 send, p={p} seed={seed}"
+                );
+            }
         }
     }
 

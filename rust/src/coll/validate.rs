@@ -1,6 +1,33 @@
-//! Sequential oracles the whole test suite validates against.
+//! Sequential oracles the whole test suite validates against, and the
+//! **differential self-verification harness**: every registered exscan
+//! algorithm, run under seeded chaos injection (message embargo/diversion,
+//! scheduler yields — see [`crate::mpi::chaos`]) on a persistent
+//! [`World`], checked three ways per case:
+//!
+//! 1. **chaos ≡ clean** — outputs and traces of the chaos run must be
+//!    bit-identical to a no-chaos run of the same algorithm (schedule
+//!    perturbation must be unobservable, even for non-associative float
+//!    rounding: same operand association, same results);
+//! 2. **clean ≡ oracle** — exact for integer operators, tolerance-checked
+//!    for the non-commutative `rec2_compose` (tree associations round
+//!    differently than the oracle's left fold);
+//! 3. **Theorem-1 counts** — traced rounds and ⊕ applications match the
+//!    closed forms (exact where the paper states exact counts, bounded
+//!    elsewhere), the one-ported invariants hold, and the sharded
+//!    [`OpRef`] counters agree with the trace.
+//!
+//! Any failure reproduces from its seed alone: `exscan fuzz --seed N`.
 
-use crate::mpi::{Elem, OpRef};
+use anyhow::Result;
+
+use super::{
+    Exscan123, ExscanBlelloch, ExscanChunked, ExscanHierarchical, ExscanLinear, ExscanMpich,
+    ExscanOneDoubling, ExscanShiftScan, ExscanTwoOp, PipelinedChain, ScanAlgorithm,
+};
+use crate::mpi::{ops, ChaosConfig, Elem, OpRef, Rec2, Topology, World, WorldConfig};
+use crate::trace::{check_all, RankTrace, TraceReport};
+use crate::util::bits::{rounds_123, rounds_one_doubling};
+use crate::util::ceil_log2;
 
 /// Sequential inclusive scan: `out[r] = V_0 ⊕ … ⊕ V_r`, element-wise.
 pub fn oracle_scan<T: Elem>(inputs: &[Vec<T>], op: &OpRef<T>) -> Vec<Vec<T>> {
@@ -43,6 +70,507 @@ pub fn assert_exscan_matches<T: Elem>(inputs: &[Vec<T>], op: &OpRef<T>, outputs:
             );
         }
     }
+}
+
+// ───────────────── differential self-verification harness ─────────────────
+
+/// Expected trace counts for one (algorithm, p, m) case. `None` fields are
+/// not checked; exact fields use the paper's closed forms.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CountCheck {
+    pub rounds: Option<u32>,
+    pub rounds_le: Option<u32>,
+    pub last_ops: Option<u32>,
+    pub max_ops_le: Option<u32>,
+}
+
+/// Aggregate result of one fuzz sweep.
+#[derive(Debug, Default)]
+pub struct FuzzOutcome {
+    pub cases: usize,
+    /// Chaos injection totals over every world in the sweep.
+    pub delayed: u64,
+    pub diverted: u64,
+    pub yields: u64,
+    pub dropped: u64,
+    /// XOR of the per-world schedule digests — the replay fingerprint:
+    /// re-running the same sweep at the same seed yields the same value.
+    pub schedule_digest: u64,
+    /// Human-readable failure descriptions (empty = all cases passed).
+    pub failures: Vec<String>,
+}
+
+type CheckFn = Box<dyn Fn(usize, usize) -> CountCheck>;
+
+/// Chunk length of the fuzz sweep's fixed-chunk `ExscanChunked` variant —
+/// single source for both the algorithm instance and its closed-form
+/// check (8 chunks at the m = 4096 grid point).
+const FUZZ_CHUNK_ELEMS: usize = 512;
+
+/// Closed-form counts for a concrete chunk policy (shared by the auto and
+/// fixed-chunk candidates so the instance and its check cannot diverge).
+fn chunked_check(a: &ExscanChunked, p: usize, m: usize) -> CountCheck {
+    CountCheck {
+        rounds: Some(a.rounds_for(p, m)),
+        last_ops: Some(a.ops_for(p, m)),
+        ..Default::default()
+    }
+}
+
+/// Every registered exclusive-scan algorithm plus variants forcing the
+/// multi-chunk and hierarchical paths, each paired with its closed-form
+/// count check.
+fn fuzz_candidates<T: Elem>() -> Vec<(Box<dyn ScanAlgorithm<T>>, CheckFn)> {
+    let mut v: Vec<(Box<dyn ScanAlgorithm<T>>, CheckFn)> = vec![
+        (
+            Box::new(ExscanMpich),
+            Box::new(|p, _| CountCheck {
+                rounds: Some(ceil_log2(p)),
+                max_ops_le: Some(2 * ceil_log2(p) - 1),
+                ..Default::default()
+            }),
+        ),
+        (
+            Box::new(ExscanTwoOp),
+            Box::new(|p, _| CountCheck {
+                rounds: Some(ceil_log2(p)),
+                max_ops_le: Some(2 * ceil_log2(p) - 1),
+                ..Default::default()
+            }),
+        ),
+        (
+            Box::new(ExscanOneDoubling),
+            Box::new(|p, _| {
+                let ops = if p <= 2 { 0 } else { ceil_log2(p - 1) };
+                CountCheck {
+                    rounds: Some(rounds_one_doubling(p)),
+                    last_ops: Some(ops),
+                    max_ops_le: Some(ops),
+                    ..Default::default()
+                }
+            }),
+        ),
+        (
+            // Theorem 1: q rounds, q−1 ⊕ on the completion-critical rank.
+            Box::new(Exscan123),
+            Box::new(|p, _| {
+                let q = rounds_123(p);
+                CountCheck {
+                    rounds: Some(q),
+                    last_ops: Some(q.saturating_sub(1)),
+                    max_ops_le: Some(q),
+                    ..Default::default()
+                }
+            }),
+        ),
+        (
+            Box::new(ExscanBlelloch),
+            Box::new(|p, _| CountCheck {
+                rounds_le: Some(2 * ceil_log2(p)),
+                max_ops_le: Some(2 * ceil_log2(p)),
+                ..Default::default()
+            }),
+        ),
+        (
+            Box::new(ExscanShiftScan),
+            Box::new(|p, _| CountCheck {
+                rounds: Some(ceil_log2(p) + 1),
+                max_ops_le: Some(ceil_log2(p)),
+                ..Default::default()
+            }),
+        ),
+        (
+            Box::new(ExscanLinear),
+            Box::new(|p, _| CountCheck {
+                rounds: Some((p - 1) as u32),
+                max_ops_le: Some(1),
+                ..Default::default()
+            }),
+        ),
+        (
+            Box::new(PipelinedChain::auto()),
+            Box::new(|p, m| {
+                let a = PipelinedChain::auto();
+                CountCheck {
+                    rounds: Some(a.rounds_for(p, m)),
+                    max_ops_le: Some(a.ops_for(p, m)),
+                    ..Default::default()
+                }
+            }),
+        ),
+        (
+            Box::new(ExscanChunked::auto()),
+            Box::new(|p, m| chunked_check(&ExscanChunked::auto(), p, m)),
+        ),
+        (
+            // Small chunks so the m = 4096 grid point runs a genuinely
+            // multi-chunk (8-chunk) pipelined schedule.
+            Box::new(ExscanChunked::with_chunk_elems(FUZZ_CHUNK_ELEMS)),
+            Box::new(|p, m| {
+                chunked_check(&ExscanChunked::with_chunk_elems(FUZZ_CHUNK_ELEMS), p, m)
+            }),
+        ),
+        (
+            // Counts depend on node shape; only invariants + differential
+            // checks apply.
+            Box::new(ExscanHierarchical::new(3)),
+            Box::new(|_, _| CountCheck::default()),
+        ),
+    ];
+    v.shrink_to_fit();
+    v
+}
+
+/// Run one traced scan on a persistent world; outputs + merged trace in
+/// rank order.
+fn run_world_scan<T: Elem>(
+    world: &World<T>,
+    algo: &dyn ScanAlgorithm<T>,
+    op: &OpRef<T>,
+    inputs: &[Vec<T>],
+) -> Result<(Vec<Vec<T>>, TraceReport)> {
+    let m = inputs.first().map(|v| v.len()).unwrap_or(0);
+    let per = world.run(|ctx| {
+        let input = &inputs[ctx.rank()];
+        let mut output = vec![T::filler(); m];
+        ctx.barrier();
+        algo.run(ctx, input, &mut output, op)?;
+        Ok((output, ctx.take_trace()))
+    })?;
+    let mut outputs = Vec::with_capacity(per.len());
+    let mut traces = Vec::with_capacity(per.len());
+    for (rank, (o, t)) in per.into_iter().enumerate() {
+        outputs.push(o);
+        traces.push(t.unwrap_or_else(|| RankTrace::new(rank)));
+    }
+    Ok((outputs, TraceReport::new(traces)))
+}
+
+/// Oracle comparison for exactly associative (integer) operators:
+/// bit-identical per rank (rank 0 ignored).
+fn oracle_check_exact<T: Elem>(
+    inputs: &[Vec<T>],
+    op: &OpRef<T>,
+    outputs: &[Vec<T>],
+) -> Option<String> {
+    let oracle = oracle_exscan(inputs, op);
+    for (r, expect) in oracle.iter().enumerate() {
+        if let Some(expect) = expect {
+            if &outputs[r] != expect {
+                return Some(format!("rank {r} differs from oracle_exscan"));
+            }
+        }
+    }
+    None
+}
+
+/// Oracle comparison for the non-commutative float composition: the tree
+/// associations round differently than the oracle's left fold, so this is
+/// a tolerance check (the bit-identity requirement is chaos ≡ clean).
+fn oracle_check_rec2(
+    inputs: &[Vec<Rec2>],
+    op: &OpRef<Rec2>,
+    outputs: &[Vec<Rec2>],
+) -> Option<String> {
+    let oracle = oracle_exscan(inputs, op);
+    let p = inputs.len();
+    let tol = 1e-3f32 * (p as f32).max(4.0);
+    for r in 1..p {
+        let expect = oracle[r].as_ref().unwrap();
+        for (i, (got, want)) in outputs[r].iter().zip(expect).enumerate() {
+            for j in 0..4 {
+                if (got.a[j] - want.a[j]).abs() > tol {
+                    return Some(format!(
+                        "rank {r} elem {i} a[{j}]: {} vs oracle {}",
+                        got.a[j], want.a[j]
+                    ));
+                }
+            }
+            for j in 0..2 {
+                if (got.b[j] - want.b[j]).abs() > tol * 4.0 {
+                    return Some(format!(
+                        "rank {r} elem {i} b[{j}]: {} vs oracle {}",
+                        got.b[j], want.b[j]
+                    ));
+                }
+            }
+        }
+    }
+    None
+}
+
+/// One element type's sweep at world size `p`: every candidate × operator
+/// × m, chaos run differentially checked against the clean run, the
+/// oracle and the closed-form counts.
+fn fuzz_world<T: Elem>(
+    seed: u64,
+    p: usize,
+    m_values: &[usize],
+    mk_ops: &[fn() -> OpRef<T>],
+    mk_inputs: fn(usize, usize, u64) -> Vec<Vec<T>>,
+    oracle_check: fn(&[Vec<T>], &OpRef<T>, &[Vec<T>]) -> Option<String>,
+    out: &mut FuzzOutcome,
+) {
+    assert!(p >= 2, "chaos fuzz needs p >= 2");
+    let chaos_seed = seed ^ (p as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mk_chaos = || -> World<T> {
+        World::new(
+            WorldConfig::new(Topology::flat(p))
+                .with_trace(true)
+                .with_chaos(ChaosConfig::new(chaos_seed)),
+        )
+    };
+    let mk_clean =
+        || -> World<T> { World::new(WorldConfig::new(Topology::flat(p)).with_trace(true)) };
+    // Fold a (possibly about-to-be-replaced) chaos world's injection
+    // totals into the outcome.
+    fn absorb<T: Elem>(world: &World<T>, out: &mut FuzzOutcome) {
+        if let Some(report) = world.chaos_report() {
+            out.delayed += report.delayed;
+            out.diverted += report.diverted;
+            out.yields += report.yields;
+            out.dropped += report.dropped;
+            out.schedule_digest ^= report.schedule_digest;
+        }
+    }
+    let mut chaos_world = mk_chaos();
+    let mut clean_world = mk_clean();
+    let candidates = fuzz_candidates::<T>();
+
+    for &m in m_values {
+        for mk_op in mk_ops {
+            let inputs = mk_inputs(p, m, seed ^ (m as u64).wrapping_mul(0xC2B2_AE35));
+            for (algo, expected) in &candidates {
+                out.cases += 1;
+                let op = mk_op();
+                let chaos_run = run_world_scan(&chaos_world, algo.as_ref(), &op, &inputs);
+                let chaos_ops = op.applications();
+                op.reset_applications();
+                let clean_run = run_world_scan(&clean_world, algo.as_ref(), &op, &inputs);
+                let label = format!(
+                    "algo={} op={} p={p} m={m} seed={seed} \
+                     (reproduce: exscan fuzz --seed {seed} --p {p} --m {m})",
+                    algo.name(),
+                    op.name()
+                );
+                let ((c_out, c_tr), (n_out, n_tr)) = match (chaos_run, clean_run) {
+                    (Ok(c), Ok(n)) => (c, n),
+                    // A failed run leaves stale (src, round)-tagged
+                    // messages buffered; tags restart at 0 every case, so
+                    // a tainted world would cascade misattributed
+                    // failures into later cases. Rebuild both worlds
+                    // (absorbing the chaos totals first).
+                    (Err(e), _) => {
+                        out.failures.push(format!("{label}: chaos run failed: {e:#}"));
+                        absorb(&chaos_world, out);
+                        chaos_world = mk_chaos();
+                        clean_world = mk_clean();
+                        continue;
+                    }
+                    (_, Err(e)) => {
+                        out.failures.push(format!("{label}: clean run failed: {e:#}"));
+                        absorb(&chaos_world, out);
+                        chaos_world = mk_chaos();
+                        clean_world = mk_clean();
+                        continue;
+                    }
+                };
+                if c_out != n_out {
+                    out.failures
+                        .push(format!("{label}: chaos and clean outputs diverged"));
+                    continue;
+                }
+                if let Some(msg) = oracle_check(&inputs, &op, &c_out) {
+                    out.failures.push(format!("{label}: oracle mismatch: {msg}"));
+                    continue;
+                }
+                // Full per-rank event logs (kind, round, bytes, order) —
+                // not just the aggregate counts: schedule perturbation
+                // must be invisible in the trace, bit for bit.
+                if c_tr.traces.len() != n_tr.traces.len()
+                    || c_tr
+                        .traces
+                        .iter()
+                        .zip(&n_tr.traces)
+                        .any(|(a, b)| a.events != b.events)
+                {
+                    out.failures
+                        .push(format!("{label}: chaos and clean traces diverged"));
+                    continue;
+                }
+                let violations = check_all(&c_tr);
+                if !violations.is_empty() {
+                    out.failures.push(format!(
+                        "{label}: {} one-ported/matching violations, first: {}",
+                        violations.len(),
+                        violations[0]
+                    ));
+                    continue;
+                }
+                if chaos_ops != c_tr.total_ops() {
+                    out.failures.push(format!(
+                        "{label}: sharded ⊕ counters ({chaos_ops}) disagree with trace ({})",
+                        c_tr.total_ops()
+                    ));
+                    continue;
+                }
+                let check = expected(p, m);
+                if let Some(r) = check.rounds {
+                    if c_tr.total_rounds() != r {
+                        out.failures.push(format!(
+                            "{label}: rounds {} != closed form {r}",
+                            c_tr.total_rounds()
+                        ));
+                        continue;
+                    }
+                }
+                if let Some(r) = check.rounds_le {
+                    if c_tr.total_rounds() > r {
+                        out.failures.push(format!(
+                            "{label}: rounds {} exceed bound {r}",
+                            c_tr.total_rounds()
+                        ));
+                        continue;
+                    }
+                }
+                if let Some(o) = check.last_ops {
+                    if c_tr.last_rank_ops() != o {
+                        out.failures.push(format!(
+                            "{label}: last-rank ⊕ {} != closed form {o}",
+                            c_tr.last_rank_ops()
+                        ));
+                        continue;
+                    }
+                }
+                if let Some(o) = check.max_ops_le {
+                    if c_tr.max_ops() > o {
+                        out.failures.push(format!(
+                            "{label}: max ⊕ {} exceeds bound {o}",
+                            c_tr.max_ops()
+                        ));
+                        continue;
+                    }
+                }
+            }
+        }
+    }
+
+    absorb(&chaos_world, out);
+}
+
+/// The full differential sweep: every registered exscan algorithm ×
+/// {bxor_i64, sum_i64, rec2_compose (non-commutative)} × `m_values` ×
+/// `p_values`, under seeded chaos on persistent executors. Failures are
+/// collected (not panicked) so the CLI can print them with the repro seed.
+pub fn chaos_fuzz(seed: u64, p_values: &[usize], m_values: &[usize]) -> FuzzOutcome {
+    let mut out = FuzzOutcome::default();
+    for &p in p_values {
+        fuzz_world::<i64>(
+            seed,
+            p,
+            m_values,
+            &[ops::bxor as fn() -> OpRef<i64>, ops::sum_i64 as fn() -> OpRef<i64>],
+            crate::bench::inputs_i64,
+            oracle_check_exact::<i64>,
+            &mut out,
+        );
+        fuzz_world::<Rec2>(
+            seed,
+            p,
+            m_values,
+            &[ops::rec2_compose as fn() -> OpRef<Rec2>],
+            crate::bench::inputs_rec2,
+            oracle_check_rec2,
+            &mut out,
+        );
+    }
+    out
+}
+
+/// The zero-allocation claim under chaos: with embargo/diversion/yields
+/// active (but no pool pressure), steady-state scan rounds must still be
+/// served entirely from the recycling pools. Chaos decisions are pure in
+/// (seed, src, dst, round), so the peak buffer demand is identical every
+/// sweep and the miss counter must converge exactly as without chaos.
+pub fn chaos_pool_steady_state(seed: u64) -> std::result::Result<(), String> {
+    const P: usize = 8;
+    const M: usize = 64;
+    let world: World<i64> = World::new(
+        WorldConfig::new(Topology::flat(P)).with_chaos(ChaosConfig::new(seed)),
+    );
+    let inputs = crate::bench::inputs_i64(P, M, seed);
+    let op = ops::bxor();
+    let algos: Vec<Box<dyn ScanAlgorithm<i64>>> = vec![
+        Box::new(Exscan123),
+        Box::new(ExscanChunked::with_chunk_elems(16)),
+    ];
+    let oracle = oracle_exscan(&inputs, &op);
+    let sweep = |world: &World<i64>| -> std::result::Result<(), String> {
+        for algo in &algos {
+            let outputs = world
+                .run(|ctx| {
+                    let mut output = vec![0i64; M];
+                    ctx.barrier();
+                    algo.run(ctx, &inputs[ctx.rank()], &mut output, &op)?;
+                    Ok(output)
+                })
+                .map_err(|e| format!("{} under chaos: {e:#}", algo.name()))?;
+            for r in 1..P {
+                if Some(&outputs[r]) != oracle[r].as_ref() {
+                    return Err(format!("{} rank {r} wrong under chaos", algo.name()));
+                }
+            }
+        }
+        Ok(())
+    };
+
+    // Chaos *decisions* are deterministic, but embargoed buffers are held
+    // for wall-clock durations, so the peak simultaneous-outstanding
+    // buffer count can shift with OS scheduling. Run up to two full
+    // warm→steady cycles: a transient scheduling spike re-warms and
+    // passes on the retry; a genuine per-round allocation regression
+    // accrues misses in every cycle and still fails.
+    let mut last_err = String::new();
+    for _attempt in 0..2 {
+        // Warm until the pools meet their peak demand: the miss counter
+        // must stop moving for two consecutive sweeps within 60.
+        let mut prev = world.pool_stats();
+        let mut stable_streak = 0;
+        for _ in 0..60 {
+            sweep(&world)?;
+            let now = world.pool_stats();
+            if now.misses == prev.misses {
+                stable_streak += 1;
+                prev = now;
+                if stable_streak >= 2 {
+                    break;
+                }
+            } else {
+                stable_streak = 0;
+                prev = now;
+            }
+        }
+        if stable_streak < 2 {
+            last_err = format!("pool demand did not stabilize under chaos: {prev:?}");
+            continue;
+        }
+        for _ in 0..20 {
+            sweep(&world)?;
+        }
+        let steady = world.pool_stats();
+        if steady.misses != prev.misses {
+            last_err = format!(
+                "steady-state chaos sweeps allocated: warm {prev:?} vs steady {steady:?}"
+            );
+            continue;
+        }
+        if steady.hits <= prev.hits {
+            last_err = format!("pool hits must keep accruing: {steady:?}");
+            continue;
+        }
+        return Ok(());
+    }
+    Err(last_err)
 }
 
 #[cfg(test)]

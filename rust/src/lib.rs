@@ -62,8 +62,8 @@ pub mod prelude {
     };
     pub use crate::cost::{CostModel, CostParams, LinkClass};
     pub use crate::mpi::{
-        ops, run_scan, CombineOp, Elem, OpRef, PoolStats, RankCtx, Rec2, RunResult, Topology,
-        World, WorldConfig,
+        ops, run_scan, ChaosConfig, ChaosReport, CombineOp, Elem, OpRef, PoolStats, RankCtx,
+        Rec2, RunResult, Topology, World, WorldConfig,
     };
     pub use crate::trace::{RankTrace, TraceReport};
 }

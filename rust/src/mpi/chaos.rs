@@ -1,0 +1,406 @@
+//! Deterministic chaos injection for the rendezvous transport.
+//!
+//! The paper's Theorem-1 claims are only reproducible if the message
+//! matching under every algorithm is *order-insensitive*: a message-passing
+//! schedule may legally deliver any interleaving that respects per-edge
+//! FIFO, and the slot/overflow/pending machinery of
+//! [`Inbox`](super::inbox::Inbox) must produce bit-identical results under
+//! all of them (the adversarial-schedule methodology of arXiv 2604.25667
+//! and arXiv 2410.14234). This module makes those interleavings a
+//! first-class, *seeded and replayable* test axis:
+//!
+//! * **Message embargo** — a deposited message may be held inside the
+//!   receiver's inbox for a deterministic duration before it becomes
+//!   matchable, reordering delivery across (src, round) keys. Embargoes
+//!   always expire, so no chaos schedule can deadlock a correct program.
+//! * **Slot diversion** — a message may be routed straight to the inbox's
+//!   unordered overflow queue, exercising the overflow + pending paths
+//!   that a collision-free schedule would never touch.
+//! * **Scheduler perturbation** — deterministic `yield_now` injections at
+//!   rank boundaries (send, blocking receive, barrier) shake thread
+//!   interleavings without changing any message content.
+//! * **Pool pressure** — the per-rank [`BufferPool`](super::pool) can be
+//!   made to drop every Nth recycled buffer (forced misses) so algorithms
+//!   are validated against cold-pool allocation paths too.
+//! * **Targeted drops** — an exact (src, dst, round) message can be
+//!   discarded to prove that lost messages surface as clean, attributed
+//!   `recv_timeout` errors instead of hangs.
+//!
+//! Every decision is a pure function of `(seed, src, dst, round)` or
+//! `(seed, rank, tick)` — no global RNG state, no time dependence — so a
+//! failing schedule reproduces from its seed alone (`exscan fuzz --seed`).
+//! The [`ChaosReport`] additionally carries an order-insensitive digest of
+//! all injected decisions, letting tests assert that two runs at the same
+//! seed injected the *identical* schedule.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Tuning knobs for one world's chaos injection. Plain data; lives on
+/// [`WorldConfig`](super::WorldConfig) and is cloned into the world's
+/// shared [`Chaos`] state at construction.
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Root of every decision. Same seed ⇒ same injected schedule.
+    pub seed: u64,
+    /// Fraction of messages (per (src, dst, round) key) held under
+    /// embargo before they become matchable. In [0, 1].
+    pub delay_prob: f64,
+    /// Upper bound of one embargo; the actual duration is a deterministic
+    /// fraction of this. Keep well below the world's `recv_timeout`.
+    pub max_delay: Duration,
+    /// Fraction of messages diverted past their slot into the unordered
+    /// overflow queue. In [0, 1].
+    pub divert_prob: f64,
+    /// Probability of an injected `yield_now` at each rank boundary
+    /// (send, blocking receive, barrier). In [0, 1].
+    pub yield_prob: f64,
+    /// When nonzero, every Nth buffer returned to a rank's pool is
+    /// dropped instead of retained — forced steady-state pool misses.
+    pub pool_discard_period: u64,
+    /// Messages to silently discard, keyed (src, dst, round) — the
+    /// lost-message fault used by the `recv_timeout` tests.
+    pub drop: Vec<(usize, usize, u64)>,
+}
+
+impl ChaosConfig {
+    /// Default adversarial-but-safe profile: delays and diversions on,
+    /// pool pressure and drops off.
+    pub fn new(seed: u64) -> Self {
+        ChaosConfig {
+            seed,
+            delay_prob: 0.35,
+            max_delay: Duration::from_micros(200),
+            divert_prob: 0.25,
+            yield_prob: 0.2,
+            pool_discard_period: 0,
+            drop: Vec::new(),
+        }
+    }
+
+    pub fn with_max_delay(mut self, d: Duration) -> Self {
+        self.max_delay = d;
+        self
+    }
+
+    pub fn with_delay_prob(mut self, p: f64) -> Self {
+        self.delay_prob = p.clamp(0.0, 1.0);
+        self
+    }
+
+    pub fn with_divert_prob(mut self, p: f64) -> Self {
+        self.divert_prob = p.clamp(0.0, 1.0);
+        self
+    }
+
+    pub fn with_yield_prob(mut self, p: f64) -> Self {
+        self.yield_prob = p.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Drop every Nth recycled pool buffer (0 disables).
+    pub fn with_pool_discard_period(mut self, period: u64) -> Self {
+        self.pool_discard_period = period;
+        self
+    }
+
+    /// Silently discard the message (src → dst, round).
+    pub fn with_drop(mut self, src: usize, dst: usize, round: u64) -> Self {
+        self.drop.push((src, dst, round));
+        self
+    }
+}
+
+/// What the chaos layer decided to do with one message.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChaosAction {
+    /// Deliver normally (not logged).
+    Deliver,
+    /// Hold under embargo for this many microseconds before matchable.
+    Delay { micros: u64 },
+    /// Route past the slot into the overflow queue.
+    Divert,
+    /// Discard (fault injection).
+    Drop,
+}
+
+/// One logged injection decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChaosEvent {
+    pub src: usize,
+    pub dst: usize,
+    pub round: u64,
+    pub action: ChaosAction,
+}
+
+/// Aggregate view of everything a world's chaos layer injected.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosReport {
+    pub seed: u64,
+    pub delayed: u64,
+    pub diverted: u64,
+    pub dropped: u64,
+    pub yields: u64,
+    /// Order-insensitive digest over all message decisions: equal digests
+    /// ⇒ the identical schedule was injected (replay check).
+    pub schedule_digest: u64,
+    /// The first [`SCHEDULE_LOG_CAP`] non-trivial decisions, for failure
+    /// reports. (The digest covers the complete schedule.)
+    pub events: Vec<ChaosEvent>,
+}
+
+/// Cap on the retained event log (the digest is uncapped).
+pub const SCHEDULE_LOG_CAP: usize = 4096;
+
+/// SplitMix64 finalizer: the one-way mixer behind every decision.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Uniform fraction in [0, 1) from a hash.
+fn frac(h: u64) -> f64 {
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+const SALT_DELAY: u64 = 0xD31A;
+const SALT_DELAY_LEN: u64 = 0xD31B;
+const SALT_DIVERT: u64 = 0xD1FE;
+const SALT_YIELD: u64 = 0x71E1;
+
+/// Shared per-world chaos state: immutable decisions + counters.
+pub struct Chaos {
+    cfg: ChaosConfig,
+    delayed: AtomicU64,
+    diverted: AtomicU64,
+    dropped: AtomicU64,
+    yields: AtomicU64,
+    /// XOR-accumulated digest of message decisions — XOR commutes, so the
+    /// digest is independent of the thread interleaving that records it.
+    digest: AtomicU64,
+    /// Per-key occurrence counts: the same (src, dst, round) key is
+    /// re-planned across successive jobs on a persistent world, and its
+    /// decision is pure in the key — without an occurrence salt, even
+    /// repetition counts would XOR-cancel out of the digest. Re-plans of
+    /// one key are serialized by the executor's job order, so the
+    /// occurrence numbering is itself replay-deterministic.
+    seen: Mutex<HashMap<(usize, usize, u64), u64>>,
+    log: Mutex<Vec<ChaosEvent>>,
+}
+
+impl Chaos {
+    pub(crate) fn new(cfg: ChaosConfig) -> Self {
+        Chaos {
+            cfg,
+            delayed: AtomicU64::new(0),
+            diverted: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            yields: AtomicU64::new(0),
+            digest: AtomicU64::new(0),
+            seen: Mutex::new(HashMap::new()),
+            log: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Hash of one (salted) message key under this seed.
+    fn key(&self, salt: u64, src: usize, dst: usize, round: u64) -> u64 {
+        let k = (src as u64)
+            .wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+            .wrapping_add((dst as u64).wrapping_mul(0x1656_67B1_9E37_79F9))
+            .wrapping_add(round.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        mix(self.cfg.seed ^ mix(salt ^ k))
+    }
+
+    /// Decide the fate of the message (src → dst, round). Pure in
+    /// (seed, src, dst, round); counters and log record what was chosen.
+    pub(crate) fn plan_message(&self, src: usize, dst: usize, round: u64) -> ChaosAction {
+        let action = if self.cfg.drop.iter().any(|&(s, d, r)| (s, d, r) == (src, dst, round)) {
+            ChaosAction::Drop
+        } else if frac(self.key(SALT_DELAY, src, dst, round)) < self.cfg.delay_prob {
+            let span = self.cfg.max_delay.as_micros() as u64;
+            let micros = if span == 0 {
+                0
+            } else {
+                // Never zero: a chosen delay must actually embargo.
+                1 + self.key(SALT_DELAY_LEN, src, dst, round) % span
+            };
+            ChaosAction::Delay { micros }
+        } else if frac(self.key(SALT_DIVERT, src, dst, round)) < self.cfg.divert_prob {
+            ChaosAction::Divert
+        } else {
+            ChaosAction::Deliver
+        };
+
+        match action {
+            ChaosAction::Deliver => {}
+            other => {
+                match other {
+                    ChaosAction::Delay { .. } => self.delayed.fetch_add(1, Ordering::Relaxed),
+                    ChaosAction::Divert => self.diverted.fetch_add(1, Ordering::Relaxed),
+                    ChaosAction::Drop => self.dropped.fetch_add(1, Ordering::Relaxed),
+                    ChaosAction::Deliver => unreachable!(),
+                };
+                let tag = match other {
+                    ChaosAction::Delay { micros } => 0x100 | micros,
+                    ChaosAction::Divert => 0x200,
+                    ChaosAction::Drop => 0x300,
+                    ChaosAction::Deliver => 0,
+                };
+                let occurrence = {
+                    let mut seen = self.seen.lock().unwrap();
+                    let n = seen.entry((src, dst, round)).or_insert(0);
+                    *n += 1;
+                    *n
+                };
+                let enc = mix(
+                    self.key(0xE0E0, src, dst, round)
+                        ^ tag
+                        ^ occurrence.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                );
+                self.digest.fetch_xor(enc, Ordering::Relaxed);
+                let mut log = self.log.lock().unwrap();
+                if log.len() < SCHEDULE_LOG_CAP {
+                    log.push(ChaosEvent { src, dst, round, action: other });
+                }
+            }
+        }
+        action
+    }
+
+    /// Deterministically yield the current thread at a rank boundary.
+    /// `tick` is the rank's private, monotonically increasing chaos-point
+    /// counter, so the decision sequence per rank is schedule-independent.
+    pub(crate) fn maybe_yield(&self, rank: usize, tick: u64) {
+        if self.cfg.yield_prob <= 0.0 {
+            return;
+        }
+        let h = self.key(SALT_YIELD, rank, 0, tick);
+        if frac(h) < self.cfg.yield_prob {
+            self.yields.fetch_add(1, Ordering::Relaxed);
+            std::thread::yield_now();
+        }
+    }
+
+    pub fn report(&self) -> ChaosReport {
+        let mut events = self.log.lock().unwrap().clone();
+        // Canonical order: the log is appended from many rank threads, so
+        // sort it to make reports comparable across replays. Entries with
+        // equal keys are identical (the action is a pure function of the
+        // key), so the sort is fully deterministic.
+        events.sort_by_key(|e| (e.src, e.dst, e.round));
+        ChaosReport {
+            seed: self.cfg.seed,
+            delayed: self.delayed.load(Ordering::Relaxed),
+            diverted: self.diverted.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            yields: self.yields.load(Ordering::Relaxed),
+            schedule_digest: self.digest.load(Ordering::Relaxed),
+            events,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_pure_in_seed_and_key() {
+        let a = Chaos::new(ChaosConfig::new(42));
+        let b = Chaos::new(ChaosConfig::new(42));
+        for src in 0..8 {
+            for dst in 0..8 {
+                for round in 0..32u64 {
+                    assert_eq!(
+                        a.plan_message(src, dst, round),
+                        b.plan_message(src, dst, round),
+                        "src={src} dst={dst} round={round}"
+                    );
+                }
+            }
+        }
+        let (ra, rb) = (a.report(), b.report());
+        assert_eq!(ra.schedule_digest, rb.schedule_digest);
+        assert_eq!(ra.delayed, rb.delayed);
+        assert_eq!(ra.diverted, rb.diverted);
+        assert_eq!(ra.events, rb.events);
+    }
+
+    #[test]
+    fn different_seeds_give_different_schedules() {
+        let a = Chaos::new(ChaosConfig::new(1));
+        let b = Chaos::new(ChaosConfig::new(2));
+        let mut differs = false;
+        for src in 0..4 {
+            for round in 0..64u64 {
+                if a.plan_message(src, src + 1, round) != b.plan_message(src, src + 1, round) {
+                    differs = true;
+                }
+            }
+        }
+        assert!(differs, "two seeds must not inject the same schedule");
+        assert_ne!(a.report().schedule_digest, b.report().schedule_digest);
+    }
+
+    #[test]
+    fn default_profile_injects_all_kinds() {
+        let c = Chaos::new(ChaosConfig::new(7));
+        for src in 0..16 {
+            for dst in 0..16 {
+                for round in 0..16u64 {
+                    c.plan_message(src, dst, round);
+                }
+            }
+        }
+        let r = c.report();
+        assert!(r.delayed > 0, "{r:?}");
+        assert!(r.diverted > 0, "{r:?}");
+        assert_eq!(r.dropped, 0, "no drops unless configured: {r:?}");
+        // Frequencies in the right ballpark of the configured probabilities.
+        let total = 16u64 * 16 * 16;
+        assert!(r.delayed > total / 5 && r.delayed < total / 2, "{r:?}");
+    }
+
+    #[test]
+    fn targeted_drop_matches_exactly() {
+        let c = Chaos::new(
+            ChaosConfig::new(3).with_delay_prob(0.0).with_divert_prob(0.0).with_drop(1, 2, 9),
+        );
+        assert_eq!(c.plan_message(1, 2, 9), ChaosAction::Drop);
+        assert_eq!(c.plan_message(1, 2, 8), ChaosAction::Deliver);
+        assert_eq!(c.plan_message(2, 1, 9), ChaosAction::Deliver);
+        assert_eq!(c.report().dropped, 1);
+    }
+
+    #[test]
+    fn digest_does_not_cancel_on_even_repetition() {
+        // The same key re-planned (successive jobs on a persistent world)
+        // must keep perturbing the digest: occurrence-salted encodings
+        // cannot XOR-cancel pairwise.
+        let c = Chaos::new(ChaosConfig::new(11).with_delay_prob(1.0));
+        c.plan_message(0, 1, 3);
+        let once = c.report().schedule_digest;
+        assert_ne!(once, 0);
+        c.plan_message(0, 1, 3);
+        let twice = c.report().schedule_digest;
+        assert_ne!(twice, 0, "even repetition counts must stay visible");
+        assert_ne!(twice, once);
+    }
+
+    #[test]
+    fn delays_are_bounded_and_nonzero() {
+        let c = Chaos::new(ChaosConfig::new(11).with_delay_prob(1.0));
+        for round in 0..200u64 {
+            match c.plan_message(0, 1, round) {
+                ChaosAction::Delay { micros } => {
+                    assert!(micros >= 1 && micros <= 200, "micros={micros}");
+                }
+                other => panic!("delay_prob=1.0 must always delay, got {other:?}"),
+            }
+        }
+    }
+}

@@ -32,6 +32,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use super::chaos::{Chaos, ChaosAction};
 use super::elem::Elem;
 use super::inbox::Inbox;
 use super::msg::Msg;
@@ -88,6 +89,12 @@ pub struct RankCtx<T: Elem> {
     unfused: bool,
     /// Deadlock-detection deadline per blocking receive.
     recv_deadline: Duration,
+    /// Per-world chaos injection (None outside chaos worlds — the hot
+    /// path then pays one branch per operation).
+    chaos: Option<Arc<Chaos>>,
+    /// This rank's chaos-point counter: the deterministic "time" axis of
+    /// injected scheduler yields (advances once per send/receive/barrier).
+    chaos_ticks: u64,
     /// Virtual clock (µs). Meaningless in real mode.
     vclock: f64,
     /// Whether tracing was requested for this world (lets a persistent
@@ -109,6 +116,7 @@ impl<T: Elem> RankCtx<T> {
         tracing: bool,
         unfused: bool,
         recv_deadline: Duration,
+        chaos: Option<Arc<Chaos>>,
     ) -> Self {
         RankCtx {
             rank,
@@ -121,9 +129,20 @@ impl<T: Elem> RankCtx<T> {
             mode,
             unfused,
             recv_deadline,
+            chaos,
+            chaos_ticks: 0,
             vclock: 0.0,
             tracing,
             trace: tracing.then(|| RankTrace::new(rank)),
+        }
+    }
+
+    /// One chaos point: advance this rank's deterministic tick and maybe
+    /// inject a scheduler yield. No-op outside chaos worlds.
+    fn chaos_point(&mut self) {
+        if let Some(chaos) = &self.chaos {
+            self.chaos_ticks += 1;
+            chaos.maybe_yield(self.rank, self.chaos_ticks);
         }
     }
 
@@ -180,23 +199,34 @@ impl<T: Elem> RankCtx<T> {
         }
     }
 
-    fn post(&self, to: usize, round: u32, data: &[T]) -> Result<()> {
+    fn post(&mut self, to: usize, round: u32, data: &[T]) -> Result<()> {
         if to >= self.size {
             bail!("rank {} sending to out-of-range rank {}", self.rank, to);
         }
+        self.chaos_point();
         let msg = Msg {
             src: self.rank,
             tag: round as u64,
             data: BufferPool::acquire_copy(&self.pool, data),
             vtime: self.vclock,
         };
-        self.inboxes[to].deposit(msg);
+        match self.chaos.as_ref().map(|c| c.plan_message(self.rank, to, round as u64)) {
+            None | Some(ChaosAction::Deliver) => self.inboxes[to].deposit(msg),
+            Some(ChaosAction::Delay { micros }) => self.inboxes[to]
+                .deposit_delayed(msg, Instant::now() + Duration::from_micros(micros)),
+            Some(ChaosAction::Divert) => self.inboxes[to].deposit_overflow(msg),
+            // Fault injection: the message is lost. The matching receive
+            // surfaces it as a per-world recv_timeout error naming
+            // (rank, round, src) — see tests/chaos_sweep.rs.
+            Some(ChaosAction::Drop) => {}
+        }
         Ok(())
     }
 
     /// Blocking matched receive: returns the message from `from` with tag
     /// `round`, buffering any other arrivals.
     fn take(&mut self, from: usize, round: u32) -> Result<Msg<T>> {
+        self.chaos_point();
         let tag = round as u64;
         if let Some(i) = self.pending.iter().position(|m| m.src == from && m.tag == tag) {
             return Ok(self.pending.swap_remove(i));
@@ -502,6 +532,7 @@ impl<T: Elem> RankCtx<T> {
     /// logical clocks to the global maximum, exactly as a real barrier
     /// aligns wall time. Every rank must call it the same number of times.
     pub fn barrier(&mut self) {
+        self.chaos_point();
         match &self.mode {
             ClockMode::Real => self.barrier.wait(),
             ClockMode::Virtual(_) => {

@@ -80,6 +80,12 @@ pub(crate) struct Inbox<T> {
     overflow: Mutex<VecDeque<Msg<T>>>,
     /// Lock-free emptiness probe for the overflow queue.
     overflow_len: AtomicUsize,
+    /// Messages under chaos embargo: matchable only once their release
+    /// instant passes (see [`super::chaos`]). Empty (and never locked on
+    /// the probe path) when chaos is off.
+    delayed: Mutex<Vec<(Instant, Msg<T>)>>,
+    /// Lock-free emptiness probe for the embargo queue.
+    delayed_len: AtomicUsize,
     /// Receiver-is-parked flag (Dekker partner of `Slot::full`).
     parked: AtomicBool,
     park_lock: Mutex<()>,
@@ -107,6 +113,8 @@ impl<T> Inbox<T> {
                 .collect(),
             overflow: Mutex::new(VecDeque::new()),
             overflow_len: AtomicUsize::new(0),
+            delayed: Mutex::new(Vec::new()),
+            delayed_len: AtomicUsize::new(0),
             parked: AtomicBool::new(false),
             park_lock: Mutex::new(()),
             park_cv: Condvar::new(),
@@ -131,6 +139,72 @@ impl<T> Inbox<T> {
             self.overflow_len.fetch_add(1, Ordering::SeqCst);
         }
         self.wake();
+    }
+
+    /// Chaos hook: hold `msg` under embargo until `release_at`, then make
+    /// it matchable through the normal slot/overflow path. The receiver
+    /// releases due messages itself inside [`recv_match`](Self::recv_match)
+    /// (its parks are sliced, so an embargo adds bounded latency and can
+    /// never deadlock).
+    pub fn deposit_delayed(&self, msg: Msg<T>, release_at: Instant) {
+        if release_at <= Instant::now() {
+            self.deposit(msg);
+            return;
+        }
+        {
+            // The length mirror is only ever written under the `delayed`
+            // lock (here and in `release_due`), so it can never drift.
+            let mut held = self.delayed.lock().unwrap();
+            held.push((release_at, msg));
+            self.delayed_len.store(held.len(), Ordering::SeqCst);
+        }
+        self.wake(); // receiver re-probes and re-slices its park deadline
+    }
+
+    /// Chaos hook: route `msg` straight to the unordered overflow queue,
+    /// as if its slot had collided — exercises the overflow and pending
+    /// paths on schedules that would otherwise never touch them.
+    pub fn deposit_overflow(&self, msg: Msg<T>) {
+        self.overflow.lock().unwrap().push_back(msg);
+        self.overflow_len.fetch_add(1, Ordering::SeqCst);
+        self.wake();
+    }
+
+    /// Move every embargoed message whose release instant has passed into
+    /// the normal matching path. Cheap when the embargo queue is empty
+    /// (one atomic load).
+    fn release_due(&self) {
+        if self.delayed_len.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        let now = Instant::now();
+        let due = {
+            let mut held = self.delayed.lock().unwrap();
+            let mut due = Vec::new();
+            let mut i = 0;
+            while i < held.len() {
+                if held[i].0 <= now {
+                    due.push(held.swap_remove(i).1);
+                } else {
+                    i += 1;
+                }
+            }
+            self.delayed_len.store(held.len(), Ordering::SeqCst);
+            due
+        };
+        for msg in due {
+            self.deposit(msg);
+        }
+    }
+
+    /// Earliest release instant of any still-embargoed message. Probed
+    /// under the park lock so a just-arrived embargo can never be slept
+    /// past (its `wake()` may have fired before `parked` was raised).
+    fn next_release_hint(&self) -> Option<Instant> {
+        if self.delayed_len.load(Ordering::SeqCst) == 0 {
+            return None;
+        }
+        self.delayed.lock().unwrap().iter().map(|(t, _)| *t).min()
     }
 
     fn wake(&self) {
@@ -186,6 +260,9 @@ impl<T> Inbox<T> {
     ) -> Option<Msg<T>> {
         let mut spins = 0u32;
         loop {
+            // 0. Release any chaos-embargoed messages that are now due
+            // (no-op single atomic probe when chaos is off).
+            self.release_due();
             // 1. The expected slot (single atomic probe on the fast path).
             if let Some(msg) = self.try_slot(src, tag) {
                 if msg.src == src && msg.tag == tag {
@@ -213,7 +290,7 @@ impl<T> Inbox<T> {
             if now >= deadline {
                 return None;
             }
-            let wait = PARK_SLICE.min(deadline - now);
+            let mut wait = PARK_SLICE.min(deadline - now);
             let guard = self.park_lock.lock().unwrap();
             self.parked.store(true, Ordering::SeqCst);
             // Final re-check under the park lock: a deposit that happened
@@ -233,6 +310,20 @@ impl<T> Inbox<T> {
                 drop(guard);
                 continue;
             }
+            // Cap the park at the earliest embargo release, probed *under
+            // the park lock* so a delayed deposit landing at any point
+            // before `parked = true` (whose wake() no-opped) can never be
+            // slept past for a full slice — regardless of whether an
+            // older, later-releasing embargo was already pending.
+            if let Some(release_at) = self.next_release_hint() {
+                let now = Instant::now();
+                if release_at <= now {
+                    self.parked.store(false, Ordering::SeqCst);
+                    drop(guard);
+                    continue;
+                }
+                wait = wait.min((release_at - now).max(Duration::from_micros(50)));
+            }
             let (_guard, _res) = self.park_cv.wait_timeout(guard, wait).unwrap();
             self.parked.store(false, Ordering::SeqCst);
         }
@@ -244,7 +335,9 @@ impl<T> Inbox<T> {
     pub fn occupancy(&self) -> usize {
         let in_slots =
             self.slots.iter().filter(|s| s.full.load(Ordering::SeqCst)).count();
-        in_slots + self.overflow_len.load(Ordering::SeqCst)
+        in_slots
+            + self.overflow_len.load(Ordering::SeqCst)
+            + self.delayed_len.load(Ordering::SeqCst)
     }
 }
 
@@ -349,6 +442,58 @@ mod tests {
         let got = inbox.recv_match(1, 9, &mut pending, deadline()).unwrap();
         assert_eq!(got.data[0], 99);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn delayed_deposit_matches_after_embargo() {
+        let inbox: Inbox<i64> = Inbox::new();
+        let t0 = Instant::now();
+        inbox.deposit_delayed(msg(2, 4, 77), Instant::now() + Duration::from_millis(20));
+        assert_eq!(inbox.occupancy(), 1, "embargoed message must be counted");
+        let mut pending = Vec::new();
+        let got = inbox.recv_match(2, 4, &mut pending, deadline()).unwrap();
+        assert_eq!(got.data[0], 77);
+        assert!(t0.elapsed() >= Duration::from_millis(15), "embargo must hold");
+        assert_eq!(inbox.occupancy(), 0);
+    }
+
+    #[test]
+    fn delayed_deposit_in_the_past_is_immediate() {
+        let inbox: Inbox<i64> = Inbox::new();
+        inbox.deposit_delayed(msg(0, 1, 5), Instant::now());
+        let mut pending = Vec::new();
+        let got = inbox.recv_match(0, 1, &mut pending, deadline()).unwrap();
+        assert_eq!(got.data[0], 5);
+    }
+
+    #[test]
+    fn diverted_deposit_matches_through_overflow() {
+        let inbox: Inbox<i64> = Inbox::new();
+        inbox.deposit_overflow(msg(3, 9, 33));
+        assert_eq!(inbox.occupancy(), 1);
+        let mut pending = Vec::new();
+        let got = inbox.recv_match(3, 9, &mut pending, deadline()).unwrap();
+        assert_eq!(got.data[0], 33);
+        assert!(pending.is_empty());
+    }
+
+    #[test]
+    fn embargo_reorders_across_keys() {
+        // Deposit round 0 under a long embargo, round 1 immediately: the
+        // round-1 message becomes matchable *before* the round-0 one even
+        // though it was deposited after — the adversarial delivery
+        // reordering the chaos layer is built to produce. Matching round 0
+        // first must block until release, then both match cleanly.
+        let inbox: Inbox<i64> = Inbox::new();
+        inbox.deposit_delayed(msg(0, 0, 10), Instant::now() + Duration::from_millis(15));
+        inbox.deposit(msg(0, 1, 11));
+        let mut pending = Vec::new();
+        let got0 = inbox.recv_match(0, 0, &mut pending, deadline()).unwrap();
+        assert_eq!(got0.data[0], 10);
+        let got1 = take(&inbox, &mut pending, 0, 1);
+        assert_eq!(got1.data[0], 11);
+        assert!(pending.is_empty());
+        assert_eq!(inbox.occupancy(), 0);
     }
 
     #[test]

@@ -10,12 +10,16 @@
 //! * [`inbox`] — slot-keyed rendezvous matching (no MPMC lock, no scan).
 //! * [`world`] — topology, the one-shot [`run_world`]/[`run_scan`] entry
 //!   points and the persistent [`World`] executor.
+//! * [`chaos`] — seeded deterministic fault injection (message embargo,
+//!   slot diversion, scheduler yields, pool pressure, targeted drops) for
+//!   the differential self-verification harness (EXPERIMENTS.md §Chaos).
 //!
 //! Real MPI is deliberately *not* a dependency: the paper's claims are
 //! about round structure and ⊕ counts, which this substrate reproduces
 //! with exact one-ported semantics, while the virtual clock scales the
 //! evaluation to the paper's 36×32 cluster on a laptop.
 
+pub mod chaos;
 pub mod ctx;
 pub mod elem;
 pub(crate) mod inbox;
@@ -25,6 +29,7 @@ pub mod pool;
 pub mod vbarrier;
 pub mod world;
 
+pub use chaos::{ChaosAction, ChaosConfig, ChaosEvent, ChaosReport};
 pub use ctx::{ClockMode, RankCtx};
 pub use elem::{Dtype, Elem, Rec2};
 pub use op::{ops, CombineOp, FnOp, OpRef};

@@ -30,6 +30,10 @@ pub struct PoolStats {
     pub misses: u64,
     /// Buffers returned to the free list on `PoolBuf` drop.
     pub recycled: u64,
+    /// Buffers deliberately dropped on release by chaos pool pressure
+    /// (see [`super::chaos::ChaosConfig::pool_discard_period`]). Always 0
+    /// outside chaos worlds.
+    pub chaos_discarded: u64,
 }
 
 impl PoolStats {
@@ -45,6 +49,7 @@ impl PoolStats {
         self.hits += other.hits;
         self.misses += other.misses;
         self.recycled += other.recycled;
+        self.chaos_discarded += other.chaos_discarded;
     }
 }
 
@@ -64,9 +69,14 @@ pub struct BufferPool<T> {
     free: Mutex<FreeList<T>>,
     /// Retention budget in bytes; buffers beyond it are dropped on release.
     budget_bytes: usize,
+    /// Chaos pool pressure: when nonzero, every Nth release drops the
+    /// buffer instead of retaining it (deterministic forced misses).
+    discard_period: u64,
+    releases: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
     recycled: AtomicU64,
+    chaos_discarded: AtomicU64,
 }
 
 /// Default retention budget per rank. Scans keep at most a few same-sized
@@ -78,12 +88,21 @@ pub const DEFAULT_BUDGET_BYTES: usize = 2 << 20;
 
 impl<T> BufferPool<T> {
     pub fn new(budget_bytes: usize) -> Self {
+        Self::with_discard_period(budget_bytes, 0)
+    }
+
+    /// Pool with chaos pressure: every `discard_period`-th release drops
+    /// the buffer (0 disables — identical to [`new`](Self::new)).
+    pub fn with_discard_period(budget_bytes: usize, discard_period: u64) -> Self {
         BufferPool {
             free: Mutex::new(FreeList { bufs: Vec::new(), bytes: 0 }),
             budget_bytes,
+            discard_period,
+            releases: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             recycled: AtomicU64::new(0),
+            chaos_discarded: AtomicU64::new(0),
         }
     }
 
@@ -92,6 +111,7 @@ impl<T> BufferPool<T> {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             recycled: self.recycled.load(Ordering::Relaxed),
+            chaos_discarded: self.chaos_discarded.load(Ordering::Relaxed),
         }
     }
 
@@ -129,6 +149,15 @@ impl<T> BufferPool<T> {
     }
 
     fn release(&self, buf: Vec<T>) {
+        if self.discard_period > 0 {
+            let n = self.releases.fetch_add(1, Ordering::Relaxed) + 1;
+            if n % self.discard_period == 0 {
+                // Chaos pool pressure: let the allocator have it back so
+                // the next acquire of this size is a forced miss.
+                self.chaos_discarded.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
         let bytes = buf.capacity() * std::mem::size_of::<T>();
         let mut free = self.free.lock().unwrap();
         if free.bytes + bytes <= self.budget_bytes || free.bufs.is_empty() {
@@ -309,6 +338,23 @@ mod tests {
         assert_eq!(&*b, &[1i64, 1, 9, 9, 9][..]);
         b.copy_from(&[3, 4]);
         assert_eq!(&*b, &[3i64, 4][..]);
+    }
+
+    #[test]
+    fn discard_period_forces_deterministic_misses() {
+        // Every 3rd release is dropped: with one buffer circulating, the
+        // acquire right after a discarded release must miss.
+        let pool: Arc<BufferPool<i64>> = Arc::new(BufferPool::with_discard_period(1 << 20, 3));
+        for _ in 0..30 {
+            drop(BufferPool::acquire_copy(&pool, &[1i64, 2]));
+        }
+        let s = pool.stats();
+        assert_eq!(s.chaos_discarded, 10, "{s:?}");
+        // First acquire misses (cold), then each discarded release causes
+        // one more miss on the following acquire — except the final
+        // release (no acquire follows it): 1 + 9.
+        assert_eq!(s.misses, 1 + 9, "{s:?}");
+        assert_eq!(s.hits + s.misses, 30, "{s:?}");
     }
 
     #[test]

@@ -19,6 +19,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
+use super::chaos::{Chaos, ChaosConfig, ChaosReport};
 use super::ctx::{recv_timeout, ClockMode, RankCtx};
 use super::elem::Elem;
 use super::inbox::Inbox;
@@ -80,6 +81,10 @@ pub struct WorldConfig {
     /// differs. A/B reference for `tests/fused_equivalence.rs` and the
     /// hotpath m-sweep — leave `false` for real measurements.
     pub unfused_compat: bool,
+    /// Seeded deterministic fault injection (message embargo/diversion,
+    /// scheduler yields, pool pressure, targeted drops). `None` for real
+    /// measurements; see [`ChaosConfig`] and EXPERIMENTS.md §Chaos.
+    pub chaos: Option<ChaosConfig>,
 }
 
 impl WorldConfig {
@@ -93,6 +98,7 @@ impl WorldConfig {
             recv_timeout: None,
             pool_budget_bytes: DEFAULT_BUDGET_BYTES,
             unfused_compat: false,
+            chaos: None,
         }
     }
 
@@ -120,6 +126,21 @@ impl WorldConfig {
     pub fn with_unfused_compat(mut self, unfused: bool) -> Self {
         self.unfused_compat = unfused;
         self
+    }
+
+    /// Enable deterministic chaos injection for this world.
+    pub fn with_chaos(mut self, chaos: ChaosConfig) -> Self {
+        self.chaos = Some(chaos);
+        self
+    }
+
+    fn build_chaos(&self) -> Option<Arc<Chaos>> {
+        self.chaos.as_ref().map(|c| Arc::new(Chaos::new(c.clone())))
+    }
+
+    fn build_pool<T>(&self) -> Arc<BufferPool<T>> {
+        let discard = self.chaos.as_ref().map(|c| c.pool_discard_period).unwrap_or(0);
+        Arc::new(BufferPool::with_discard_period(self.pool_budget_bytes, discard))
     }
 
     pub fn size(&self) -> usize {
@@ -180,10 +201,10 @@ where
     let p = cfg.size();
     assert!(p >= 1);
     let inboxes: Arc<Vec<Inbox<T>>> = Arc::new((0..p).map(|_| Inbox::new()).collect());
-    let pools: Vec<Arc<BufferPool<T>>> =
-        (0..p).map(|_| Arc::new(BufferPool::new(cfg.pool_budget_bytes))).collect();
+    let pools: Vec<Arc<BufferPool<T>>> = (0..p).map(|_| cfg.build_pool()).collect();
     let barrier = Arc::new(VBarrier::new(p));
     let recv_deadline = cfg.recv_deadline();
+    let chaos = cfg.build_chaos();
 
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(p);
@@ -195,6 +216,7 @@ where
             let mode = cfg.mode.clone();
             let tracing = cfg.tracing;
             let unfused = cfg.unfused_compat;
+            let chaos = chaos.clone();
             let builder = std::thread::Builder::new()
                 .name(format!("rank-{rank}"))
                 .stack_size(cfg.stack_size);
@@ -211,6 +233,7 @@ where
                         tracing,
                         unfused,
                         recv_deadline,
+                        chaos,
                     );
                     fref(&mut ctx)
                 })
@@ -296,6 +319,7 @@ pub struct World<T: Elem> {
     cfg: WorldConfig,
     jobs: Vec<Arc<Channel<Job<T>>>>,
     pools: Vec<Arc<BufferPool<T>>>,
+    chaos: Option<Arc<Chaos>>,
     handles: Vec<std::thread::JoinHandle<()>>,
     /// Serializes whole `run` calls: jobs from two overlapping runs would
     /// interleave differently per rank and desynchronize the barrier.
@@ -308,10 +332,10 @@ impl<T: Elem> World<T> {
         let p = cfg.size();
         assert!(p >= 1);
         let inboxes: Arc<Vec<Inbox<T>>> = Arc::new((0..p).map(|_| Inbox::new()).collect());
-        let pools: Vec<Arc<BufferPool<T>>> =
-            (0..p).map(|_| Arc::new(BufferPool::new(cfg.pool_budget_bytes))).collect();
+        let pools: Vec<Arc<BufferPool<T>>> = (0..p).map(|_| cfg.build_pool()).collect();
         let barrier = Arc::new(VBarrier::new(p));
         let recv_deadline = cfg.recv_deadline();
+        let chaos = cfg.build_chaos();
 
         let mut jobs: Vec<Arc<Channel<Job<T>>>> = Vec::with_capacity(p);
         let mut handles = Vec::with_capacity(p);
@@ -324,6 +348,7 @@ impl<T: Elem> World<T> {
             let mode = cfg.mode.clone();
             let tracing = cfg.tracing;
             let unfused = cfg.unfused_compat;
+            let rank_chaos = chaos.clone();
             let stack = cfg.stack_size;
             let handle = std::thread::Builder::new()
                 .name(format!("rank-{rank}"))
@@ -340,6 +365,7 @@ impl<T: Elem> World<T> {
                         tracing,
                         unfused,
                         recv_deadline,
+                        rank_chaos,
                     );
                     while let Some((job, done)) = rx.pop_wait() {
                         job(&mut ctx);
@@ -354,7 +380,7 @@ impl<T: Elem> World<T> {
             jobs.push(ch);
             handles.push(handle);
         }
-        World { cfg, jobs, pools, handles, run_lock: Mutex::new(()) }
+        World { cfg, jobs, pools, chaos, handles, run_lock: Mutex::new(()) }
     }
 
     pub fn config(&self) -> &WorldConfig {
@@ -373,6 +399,13 @@ impl<T: Elem> World<T> {
             total.merge(&p.stats());
         }
         total
+    }
+
+    /// What the chaos layer has injected so far (None for non-chaos
+    /// worlds). The report's `schedule_digest` is the replay check: two
+    /// worlds at the same seed running the same jobs report equal digests.
+    pub fn chaos_report(&self) -> Option<ChaosReport> {
+        self.chaos.as_ref().map(|c| c.report())
     }
 
     /// Run `f` once on every rank and collect results in rank order.

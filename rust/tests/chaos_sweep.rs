@@ -1,0 +1,216 @@
+//! The differential chaos sweep (EXPERIMENTS.md §Chaos): every registered
+//! exscan algorithm, under a seeded adversarial message schedule
+//! (embargoed + diverted deliveries, injected scheduler yields), must be
+//! bit-identical to its clean run and to the serial oracle, with the
+//! Theorem-1 round/⊕ counts intact — across 3 fixed seeds, a
+//! non-commutative operator and a multi-chunk m. Plus: lost messages
+//! surface as clean attributed `recv_timeout` errors, chaos schedules
+//! replay exactly from their seed, and the zero-allocation pool claim
+//! holds under chaos.
+
+use std::time::{Duration, Instant};
+
+use exscan::coll::validate::{chaos_fuzz, chaos_pool_steady_state};
+use exscan::coll::Exscan123;
+use exscan::coll::ScanAlgorithm;
+use exscan::mpi::{run_world, ChaosConfig, Topology, World, WorldConfig};
+use exscan::prelude::*;
+
+/// The acceptance sweep: ≥ 3 seeds × all registered algorithms ×
+/// {bxor_i64, sum_i64, rec2_compose (non-commutative)} × m ∈ {0, 1, 17,
+/// 4096 (8 chunks on the 512-element chunked variant)}.
+#[test]
+fn chaos_differential_sweep_three_seeds() {
+    let p_values = [2usize, 3, 4, 5, 8, 9, 13];
+    let m_values = [0usize, 1, 17, 4096];
+    for seed in [1u64, 0xC0FFEE, 0x5EED] {
+        let out = chaos_fuzz(seed, &p_values, &m_values);
+        assert!(
+            out.failures.is_empty(),
+            "seed {seed}: {} failures, first: {}",
+            out.failures.len(),
+            out.failures[0]
+        );
+        assert!(out.cases > 0);
+        // The sweep must actually have been adversarial.
+        assert!(
+            out.delayed > 0 && out.diverted > 0,
+            "seed {seed} injected nothing: {out:?}"
+        );
+        assert_eq!(out.dropped, 0, "fuzz profile never drops: {out:?}");
+    }
+}
+
+/// Replayability: the same seed injects the identical schedule (equal
+/// digests, equal injection counts); a different seed does not.
+#[test]
+fn chaos_schedule_replays_from_seed_alone() {
+    let p_values = [5usize, 8];
+    let m_values = [1usize, 17];
+    let a = chaos_fuzz(9, &p_values, &m_values);
+    let b = chaos_fuzz(9, &p_values, &m_values);
+    assert!(a.failures.is_empty(), "{:?}", a.failures);
+    assert_eq!(a.schedule_digest, b.schedule_digest, "same seed must replay");
+    assert_eq!((a.delayed, a.diverted), (b.delayed, b.diverted));
+    let c = chaos_fuzz(10, &p_values, &m_values);
+    assert_ne!(
+        a.schedule_digest, c.schedule_digest,
+        "different seeds must inject different schedules"
+    );
+}
+
+/// Satellite: an injected permanently-dropped message must surface as a
+/// clean per-world `recv_timeout` error naming (rank, round, src) — not a
+/// hang, and not a corruption of unrelated rounds.
+#[test]
+fn dropped_message_surfaces_as_attributed_timeout() {
+    // Drop exactly (src 0 → dst 1, round 2); rounds 0, 1 and 3 deliver.
+    let chaos = ChaosConfig::new(7)
+        .with_delay_prob(0.2)
+        .with_divert_prob(0.2)
+        .with_drop(0, 1, 2);
+    let cfg = WorldConfig::new(Topology::flat(2))
+        .with_recv_timeout(Duration::from_millis(300))
+        .with_chaos(chaos);
+    let t0 = Instant::now();
+    let res = run_world::<i64, Vec<i64>, _>(&cfg, |ctx| {
+        let mut got = Vec::new();
+        if ctx.rank() == 0 {
+            for round in 0..4u32 {
+                ctx.send(round, 1, &[round as i64 * 10])?;
+            }
+        } else {
+            for round in 0..4u32 {
+                let mut buf = [0i64];
+                ctx.recv(round, 0, &mut buf)?;
+                got.push(buf[0]);
+            }
+        }
+        Ok(got)
+    });
+    let err = format!("{:#}", res.unwrap_err());
+    assert!(err.contains("deadlocked"), "unexpected error: {err}");
+    assert!(err.contains("rank 1"), "missing receiver rank in: {err}");
+    assert!(err.contains("from=0"), "missing sender in: {err}");
+    assert!(err.contains("round=2"), "missing round in: {err}");
+    assert!(t0.elapsed() >= Duration::from_millis(250), "must respect the deadline");
+    assert!(t0.elapsed() < Duration::from_secs(20), "must fail fast, not hang");
+}
+
+/// The rounds before the dropped one must still complete correctly — the
+/// drop is surgical, not a transport-wide corruption.
+#[test]
+fn drop_is_surgical_other_rounds_deliver() {
+    let chaos = ChaosConfig::new(3)
+        .with_delay_prob(0.0)
+        .with_divert_prob(0.0)
+        .with_yield_prob(0.0)
+        .with_drop(0, 1, 9);
+    let cfg = WorldConfig::new(Topology::flat(2)).with_chaos(chaos);
+    let out = run_world::<i64, Vec<i64>, _>(&cfg, |ctx| {
+        let mut got = Vec::new();
+        if ctx.rank() == 0 {
+            for round in 0..4u32 {
+                ctx.send(round, 1, &[round as i64 + 100])?;
+            }
+        } else {
+            for round in 0..4u32 {
+                let mut buf = [0i64];
+                ctx.recv(round, 0, &mut buf)?;
+                got.push(buf[0]);
+            }
+        }
+        Ok(got)
+    })
+    .unwrap();
+    assert_eq!(out[1], vec![100, 101, 102, 103]);
+}
+
+/// Acceptance: zero steady-state pool misses under chaos (embargo,
+/// diversion and yields active; pool pressure off).
+#[test]
+fn pool_steady_state_holds_under_chaos() {
+    for seed in [1u64, 2, 3] {
+        chaos_pool_steady_state(seed).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}
+
+/// Chaos pool pressure: every Nth recycled buffer is dropped, forcing
+/// continual allocator traffic — results must stay bit-identical anyway
+/// (the algorithms never depend on pool hits).
+#[test]
+fn forced_pool_misses_do_not_change_results() {
+    const P: usize = 8;
+    const M: usize = 32;
+    let inputs = exscan::bench::inputs_i64(P, M, 11);
+    let op = ops::bxor();
+    let expect = exscan::coll::oracle_exscan(&inputs, &op);
+    let chaos = ChaosConfig::new(5).with_pool_discard_period(3);
+    let world: World<i64> =
+        World::new(WorldConfig::new(Topology::flat(P)).with_chaos(chaos));
+    for _ in 0..10 {
+        let outputs = world
+            .run(|ctx| {
+                let mut output = vec![0i64; M];
+                ctx.barrier();
+                Exscan123.run(ctx, &inputs[ctx.rank()], &mut output, &op)?;
+                Ok(output)
+            })
+            .unwrap();
+        for r in 1..P {
+            assert_eq!(Some(&outputs[r]), expect[r].as_ref(), "rank {r}");
+        }
+    }
+    let stats = world.pool_stats();
+    assert!(
+        stats.chaos_discarded > 0,
+        "pool pressure must actually discard: {stats:?}"
+    );
+    assert!(
+        stats.misses > 1,
+        "forced discards must surface as misses: {stats:?}"
+    );
+}
+
+/// The chaos world's report is observable and consistent: counts match
+/// what two identically seeded worlds inject on identical jobs.
+#[test]
+fn world_chaos_report_is_deterministic() {
+    let mk = || {
+        let world: World<i64> = World::new(
+            WorldConfig::new(Topology::flat(6)).with_chaos(ChaosConfig::new(21)),
+        );
+        let inputs = exscan::bench::inputs_i64(6, 8, 21);
+        let op = ops::sum_i64();
+        for _ in 0..3 {
+            world
+                .run(|ctx| {
+                    let mut output = vec![0i64; 8];
+                    ctx.barrier();
+                    Exscan123.run(ctx, &inputs[ctx.rank()], &mut output, &op)?;
+                    Ok(output)
+                })
+                .unwrap();
+        }
+        world.chaos_report().expect("chaos world must report")
+    };
+    let (a, b) = (mk(), mk());
+    assert_eq!(a.schedule_digest, b.schedule_digest);
+    assert_eq!(a.delayed, b.delayed);
+    assert_eq!(a.diverted, b.diverted);
+    assert_eq!(a.dropped, 0);
+    assert!(a.delayed + a.diverted > 0, "must inject on a real scan: {a:?}");
+    // The event log names concrete (src, dst, round) decisions.
+    assert!(!a.events.is_empty());
+    assert_eq!(a.events, b.events);
+}
+
+/// Non-chaos worlds report nothing and stay byte-for-byte on the old
+/// behavior (the chaos hook is one branch per operation).
+#[test]
+fn non_chaos_world_reports_none() {
+    let world: World<i64> = World::new(WorldConfig::new(Topology::flat(2)));
+    assert!(world.chaos_report().is_none());
+    let stats = world.pool_stats();
+    assert_eq!(stats.chaos_discarded, 0);
+}

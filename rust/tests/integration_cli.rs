@@ -62,6 +62,13 @@ fn tune_prints_table() {
 }
 
 #[test]
+fn fuzz_tiny_budget_passes() {
+    // Smallest meaningful chaos sweep through the CLI path (the full
+    // 3-seed sweep lives in tests/chaos_sweep.rs and the CI fuzz step).
+    run(&["fuzz", "--seed", "1", "--quick", "--p-max", "3"]).unwrap();
+}
+
+#[test]
 fn sweep_quick_writes_csv() {
     let out = std::env::temp_dir().join("exscan_cli_test_figure1.csv");
     let out_s = out.to_str().unwrap();
