@@ -20,17 +20,24 @@
 //!     matches `predicted_ops`);
 //!   * world spawn/teardown vs persistent-executor job submission — the
 //!     cost `Harness::sweep` no longer pays per (algorithm, m) point;
+//!   * **scan-service batching sweep** at K ∈ {1, 4, 16, 64} small-m
+//!     requests: batched (one coalesced collective) vs serial (one
+//!     collective per request) wall time per request, with a hard
+//!     deterministic gate on the amortized rounds/request closed form
+//!     (`rounds(p) / K`, measured from the batch trace);
 //!   * one full 123-doubling at p=36 end to end.
 //!
 //! Writes the machine-readable trajectory record `BENCH_hotpath.json`
-//! (schema `exscan-hotpath-v2`). Pass `--quick` for the CI smoke run.
+//! (schema `exscan-hotpath-v3`). Pass `--quick` for the CI smoke run.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use exscan::bench::{hotpath_json, measure_exscan_world, HotpathPoint, MSweepPoint};
+use exscan::bench::{hotpath_json, measure_exscan_world, HotpathPoint, MSweepPoint, SvcPoint};
+use exscan::coll::oracle_exscan;
 use exscan::mpi::World;
 use exscan::prelude::*;
+use exscan::util::bits::rounds_123;
 use exscan::util::Channel;
 
 fn bench_ns<F: FnMut()>(iters: usize, mut f: F) -> f64 {
@@ -295,6 +302,106 @@ fn main() -> anyhow::Result<()> {
     }
     println!("op-count gate: Theorem 1 and sharded counters OK");
 
+    // ── Scan-service batching sweep: K small-m requests through the
+    // engine, batched (all K submitted, one flush → one coalesced
+    // collective) vs serial (flush and wait per request → K collectives).
+    // Wall time is reported; the rounds/request numbers are deterministic
+    // (measured from each batch's trace) and gated below. ──
+    let p_svc = 8usize;
+    let m_svc = 8usize;
+    let svc_ks: &[usize] = if quick { &[1, 4, 16] } else { &[1, 4, 16, 64] };
+    let mut svc_sweep: Vec<SvcPoint> = Vec::new();
+    println!("\nscan service batching at p={p_svc}, m={m_svc} (per-request):");
+    for &k in svc_ks {
+        let policy = || exscan::svc::BatchPolicy {
+            window: Duration::from_secs(600), // cycles cut by flush only
+            max_batch: k.max(1),
+            max_coalesced_elems: 1 << 24,
+        };
+        let all_inputs: Vec<Vec<Vec<i64>>> = (0..k)
+            .map(|i| exscan::bench::inputs_i64(p_svc, m_svc, 0x5EC + i as u64))
+            .collect();
+        let oracles: Vec<_> =
+            all_inputs.iter().map(|v| oracle_exscan(v, &ops::bxor())).collect();
+        let verify = |outputs: &[Vec<i64>], i: usize| {
+            for (r, want) in oracles[i].iter().enumerate() {
+                if let Some(want) = want {
+                    assert_eq!(&outputs[r], want, "svc request {i} rank {r} wrong");
+                }
+            }
+        };
+
+        // Batched: one cycle for all K.
+        let engine =
+            ScanEngine::<i64>::new(EngineConfig::new(p_svc).with_policy(policy())).unwrap();
+        let t0 = Instant::now();
+        let handles: Vec<_> = all_inputs
+            .iter()
+            .map(|v| engine.submit_exscan(ReqOp::bxor_i64(), v.clone()).unwrap())
+            .collect();
+        engine.flush();
+        for (i, h) in handles.into_iter().enumerate() {
+            let out = h.wait_timeout(Duration::from_secs(60)).unwrap();
+            verify(&out.outputs, i);
+        }
+        let batched_us_per_req = t0.elapsed().as_secs_f64() * 1e6 / k as f64;
+        let batched_rounds_per_req = engine.metrics().amortized_rounds_per_request;
+
+        // Serial: one cycle per request.
+        let engine =
+            ScanEngine::<i64>::new(EngineConfig::new(p_svc).with_policy(policy())).unwrap();
+        let t0 = Instant::now();
+        for (i, v) in all_inputs.iter().enumerate() {
+            let h = engine.submit_exscan(ReqOp::bxor_i64(), v.clone()).unwrap();
+            engine.flush();
+            let out = h.wait_timeout(Duration::from_secs(60)).unwrap();
+            verify(&out.outputs, i);
+        }
+        let serial_us_per_req = t0.elapsed().as_secs_f64() * 1e6 / k as f64;
+        let serial_rounds_per_req = engine.metrics().amortized_rounds_per_request;
+
+        println!(
+            "  K={k:>3}: batched {batched_us_per_req:>9.2} µs/req ({batched_rounds_per_req:>5.2} rounds/req)   \
+             serial {serial_us_per_req:>9.2} µs/req ({serial_rounds_per_req:>4.2} rounds/req)   ({:>4.2}x)",
+            serial_us_per_req / batched_us_per_req
+        );
+        svc_sweep.push(SvcPoint {
+            k,
+            p: p_svc,
+            m: m_svc,
+            batched_us_per_req,
+            serial_us_per_req,
+            batched_rounds_per_req,
+            serial_rounds_per_req,
+        });
+    }
+    // Deterministic amortization gate: K coalesced requests pay exactly
+    // one collective's rounds — rounds(p)/K per request — while serial
+    // execution pays rounds(p) per request; amortized cost must shrink
+    // strictly as K grows.
+    for pt in &svc_sweep {
+        let want = rounds_123(p_svc) as f64 / pt.k as f64;
+        assert!(
+            (pt.batched_rounds_per_req - want).abs() < 1e-9,
+            "K={}: amortized rounds {} != closed form {want}",
+            pt.k,
+            pt.batched_rounds_per_req
+        );
+        assert!(
+            (pt.serial_rounds_per_req - rounds_123(p_svc) as f64).abs() < 1e-9,
+            "K={}: serial rounds {} != rounds(p)",
+            pt.k,
+            pt.serial_rounds_per_req
+        );
+    }
+    for w in svc_sweep.windows(2) {
+        assert!(
+            w[1].batched_rounds_per_req < w[0].batched_rounds_per_req,
+            "amortized rounds/request must shrink as K grows"
+        );
+    }
+    println!("svc amortization gate: rounds/request == rounds(p)/K for every K");
+
     // ── World spawn/teardown vs persistent job submit at the same p. ──
     let mut spawn_meta = Vec::new();
     for p in [16usize, 144] {
@@ -354,7 +461,7 @@ fn main() -> anyhow::Result<()> {
             format!("min={:.1}us mean={:.1}us", meas.min_us, meas.mean_us),
         ),
     ];
-    let json = hotpath_json(&meta, &points, &m_sweep);
+    let json = hotpath_json(&meta, &points, &m_sweep, &svc_sweep);
     std::fs::write("BENCH_hotpath.json", &json)?;
     println!("wrote BENCH_hotpath.json");
 

@@ -90,6 +90,24 @@ pub struct MSweepPoint {
     pub ops: u64,
 }
 
+/// One scan-service batching measurement (see `benches/hotpath.rs`): K
+/// small-m requests through the engine, batched (one flush for all K)
+/// vs serial (one flush per request), wall time per request plus the
+/// deterministic rounds/request the batcher achieved.
+#[derive(Debug, Clone)]
+pub struct SvcPoint {
+    pub k: usize,
+    pub p: usize,
+    pub m: usize,
+    pub batched_us_per_req: f64,
+    pub serial_us_per_req: f64,
+    /// Amortized rounds/request of the batched run (closed form:
+    /// `rounds(p) / K` when all K coalesce into one collective).
+    pub batched_rounds_per_req: f64,
+    /// Rounds/request of the serial run (= `rounds(p)`).
+    pub serial_rounds_per_req: f64,
+}
+
 fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
@@ -107,14 +125,16 @@ fn json_escape(s: &str) -> String {
 /// Serialize hot-path measurements as the `BENCH_hotpath.json` document —
 /// the repo's machine-readable perf-trajectory record. Hand-rolled (no
 /// serde in this offline build); stable key order so diffs stay readable.
-/// Schema v2 adds the `m_sweep` section (fused-vs-unfused and
-/// chunked-vs-flat compute-path points).
+/// Schema v2 added the `m_sweep` section (fused-vs-unfused and
+/// chunked-vs-flat compute-path points); v3 adds `svc_sweep` (scan-service
+/// batched-vs-serial throughput and amortized rounds/request).
 pub fn hotpath_json(
     meta: &[(&str, String)],
     points: &[HotpathPoint],
     m_sweep: &[MSweepPoint],
+    svc_sweep: &[SvcPoint],
 ) -> String {
-    let mut out = String::from("{\n  \"schema\": \"exscan-hotpath-v2\",\n  \"meta\": {");
+    let mut out = String::from("{\n  \"schema\": \"exscan-hotpath-v3\",\n  \"meta\": {");
     for (i, (k, v)) in meta.iter().enumerate() {
         if i > 0 {
             out.push(',');
@@ -150,6 +170,24 @@ pub fn hotpath_json(
             pt.m,
             pt.min_us,
             pt.ops
+        ));
+    }
+    out.push_str("\n  ],\n  \"svc_sweep\": [");
+    for (i, pt) in svc_sweep.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"k\": {}, \"p\": {}, \"m\": {}, \"batched_us_per_req\": {:.3}, \
+             \"serial_us_per_req\": {:.3}, \"batched_rounds_per_req\": {:.4}, \
+             \"serial_rounds_per_req\": {:.4}}}",
+            pt.k,
+            pt.p,
+            pt.m,
+            pt.batched_us_per_req,
+            pt.serial_us_per_req,
+            pt.batched_rounds_per_req,
+            pt.serial_rounds_per_req
         ));
     }
     out.push_str("\n  ]\n}\n");
@@ -223,14 +261,25 @@ mod tests {
             min_us: 123.456,
             ops: 720,
         }];
-        let j = hotpath_json(&[("host", "ci \"runner\"".to_string())], &points, &sweep);
-        assert!(j.contains("\"schema\": \"exscan-hotpath-v2\""), "{j}");
+        let svc = vec![SvcPoint {
+            k: 16,
+            p: 8,
+            m: 8,
+            batched_us_per_req: 12.5,
+            serial_us_per_req: 80.0,
+            batched_rounds_per_req: 0.25,
+            serial_rounds_per_req: 4.0,
+        }];
+        let j = hotpath_json(&[("host", "ci \"runner\"".to_string())], &points, &sweep, &svc);
+        assert!(j.contains("\"schema\": \"exscan-hotpath-v3\""), "{j}");
         assert!(j.contains("\"transport\": \"slot-pool\""), "{j}");
         assert!(j.contains("\"msgs_per_sec\": 1250000.0"), "{j}");
         assert!(j.contains("ci \\\"runner\\\""), "{j}");
         assert!(j.contains("\"path\": \"fused\""), "{j}");
         assert!(j.contains("\"min_us\": 123.456"), "{j}");
         assert!(j.contains("\"ops\": 720"), "{j}");
+        assert!(j.contains("\"svc_sweep\""), "{j}");
+        assert!(j.contains("\"batched_rounds_per_req\": 0.2500"), "{j}");
         // Balanced braces/brackets (cheap well-formedness check).
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert_eq!(j.matches('[').count(), j.matches(']').count());

@@ -1,5 +1,6 @@
 //! Deterministic workload generators for benchmarks and tests.
 
+use crate::coll::segmented::Seg;
 use crate::mpi::Rec2;
 use crate::util::Rng;
 
@@ -9,6 +10,24 @@ pub fn inputs_i64(p: usize, m: usize, seed: u64) -> Vec<Vec<i64>> {
         .map(|r| {
             let mut rng = Rng::seed_from_u64(seed ^ (r as u64).wrapping_mul(0x9E37_79B9));
             (0..m).map(|_| rng.gen_i64()).collect()
+        })
+        .collect()
+}
+
+/// Per-rank segmented i64 vectors: deterministic values with ~1/4 of the
+/// elements flagged as segment starts (so segment boundaries fall at
+/// arbitrary (rank, lane) positions — the shape that stresses the lifted
+/// operator's non-commutative flag rule).
+pub fn inputs_seg_i64(p: usize, m: usize, seed: u64) -> Vec<Vec<Seg<i64>>> {
+    (0..p)
+        .map(|r| {
+            let mut rng = Rng::seed_from_u64(seed ^ (r as u64).wrapping_mul(0x1656_67B1));
+            (0..m)
+                .map(|_| {
+                    let flag = (rng.gen_i64() & 3) == 0;
+                    Seg::new(flag, rng.gen_i64())
+                })
+                .collect()
         })
         .collect()
 }
@@ -82,6 +101,17 @@ mod tests {
         let r = inputs_rec2(3, 4, 1);
         assert_eq!(r.len(), 3);
         assert!(r.iter().all(|x| x.len() == 4));
+    }
+
+    #[test]
+    fn seg_inputs_mix_flags_deterministically() {
+        let a = inputs_seg_i64(5, 64, 7);
+        assert_eq!(a, inputs_seg_i64(5, 64, 7));
+        assert_ne!(a, inputs_seg_i64(5, 64, 8));
+        let flags: usize =
+            a.iter().flat_map(|v| v.iter()).filter(|s| s.flag).count();
+        let total = 5 * 64;
+        assert!(flags > total / 10 && flags < total / 2, "{flags}/{total}");
     }
 
     #[test]

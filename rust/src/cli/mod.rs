@@ -45,6 +45,17 @@ COMMANDS:
               --p LIST    pin exact world sizes (overrides --p-max grid)
               --m LIST    pin exact vector lengths
               --quick     small-p, small-m budget (the CI profile)
+  serve     multi-tenant scan service demo: N independent small-m exscan
+            requests through the batching engine, every result verified
+            against its serial oracle, amortized rounds/request reported
+            (EXPERIMENTS.md §Service)
+              --requests N      (default: 256; 24 with --smoke)
+              --batch-window US batching window in µs (default: 500)
+              --p N  --m N  --algo NAME  --max-batch K
+              --chaos-seed S    run the engine under seeded chaos and
+                                differentially verify the service path
+                                (plus the concurrent-communicator check)
+              --smoke           small deterministic CI budget
   kernel-smoke  exercise the AOT PJRT kernel path
               --artifacts DIR       (default: artifacts)
   verify-claims run the full evaluation and check every §3 claim
@@ -63,6 +74,7 @@ pub fn run_argv(argv: &[String]) -> Result<()> {
         Some("trace") => cmd_trace(&args),
         Some("tune") => cmd_tune(&args),
         Some("fuzz") => cmd_fuzz(&args),
+        Some("serve") => cmd_serve(&args),
         Some("kernel-smoke") => cmd_kernel_smoke(&args),
         Some("verify-claims") => cmd_verify_claims(),
         Some("help") | None => {
@@ -292,7 +304,8 @@ fn cmd_tune(args: &Args) -> Result<()> {
 }
 
 /// Differential chaos fuzzing (EXPERIMENTS.md §Chaos): every registered
-/// exscan algorithm × {bxor, sum_i64, rec2_compose} × m grid × p grid
+/// exscan algorithm × {bxor, sum_i64, rec2_compose, and the lifted
+/// segmented seg_bxor/seg_sum over `Seg<i64>`} × m grid × p grid
 /// under a seeded adversarial message schedule, on persistent executors.
 /// Any failure prints with its seed; the same seed replays the identical
 /// injected schedule.
@@ -327,7 +340,8 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
 
     println!(
         "chaos fuzz: seed={seed}, p ∈ {p_values:?}, m ∈ {m_values:?} \
-         (all exscan algorithms × {{bxor_i64, sum_i64, rec2_compose}})"
+         (all exscan algorithms × {{bxor_i64, sum_i64, rec2_compose, \
+         seg_bxor_i64, seg_sum_i64}})"
     );
     let out = crate::coll::validate::chaos_fuzz(seed, &p_values, &m_values);
     println!(
@@ -355,6 +369,142 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
             if quick { " --quick" } else { "" }
         )
     }
+}
+
+/// The multi-tenant scan service demo and verification driver: submit N
+/// independent small-m exscan requests (a deterministic mix of full-world
+/// batches across two operators and sub-range requests that exercise the
+/// segmented-lane coalescer), wait on every nonblocking handle, verify
+/// each result bit-exactly against its serial oracle, and report the
+/// amortized rounds/request the batcher achieved. With `--chaos-seed`,
+/// the engine's worlds run under seeded fault injection, making the same
+/// oracle check the *service chaos differential* (integer operators are
+/// exactly associative, so the serial-clean-world reference and the
+/// oracle coincide bit for bit); the concurrent-communicator differential
+/// (`validate::chaos_concurrent_comms`) runs on top.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::time::Duration;
+
+    use crate::coll::validate::chaos_concurrent_comms;
+    use crate::coll::validate::oracle_exscan;
+    use crate::mpi::ChaosConfig;
+    use crate::svc::{BatchPolicy, EngineConfig, ReqOp, ScanEngine, ScanRequest};
+
+    let smoke = args.switch("smoke");
+    let p: usize = args.get("p", 8)?;
+    let requests: usize = {
+        let n = args.get("requests", if smoke { 24 } else { 256 })?;
+        if smoke {
+            n.min(24)
+        } else {
+            n
+        }
+    };
+    let m: usize = args.get("m", 16)?;
+    let window_us: u64 = args.get("batch-window", 500)?;
+    let max_batch: usize = args.get("max-batch", 64)?;
+    let algo: String = args.get("algo", "123-doubling".to_string())?;
+    let chaos_seed: Option<u64> = match args.flag("chaos-seed") {
+        None => None,
+        Some(s) => {
+            Some(s.parse().map_err(|_| anyhow!("--chaos-seed: cannot parse {s:?}"))?)
+        }
+    };
+    anyhow::ensure!(p >= 4, "serve needs p >= 4 (got {p})");
+
+    let mut cfg = EngineConfig::new(p).with_algo(&algo).with_policy(BatchPolicy {
+        window: Duration::from_micros(window_us),
+        max_batch,
+        ..Default::default()
+    });
+    if let Some(seed) = chaos_seed {
+        cfg = cfg.with_chaos(ChaosConfig::new(seed));
+    }
+    let engine = ScanEngine::<i64>::new(cfg).map_err(|e| anyhow!("{e}"))?;
+    println!(
+        "scan service: {requests} requests, p={p}, m={m}, algo={algo}, \
+         window={window_us}µs, max-batch={max_batch}{}",
+        match chaos_seed {
+            Some(s) => format!(", chaos seed {s}"),
+            None => String::new(),
+        }
+    );
+
+    // Deterministic mixed workload; expected results precomputed from the
+    // serial oracle (bit-exact for these integer operators).
+    let seed_base = chaos_seed.unwrap_or(0xCAFE);
+    let mut handles = Vec::with_capacity(requests);
+    let mut expected = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let rseed = seed_base ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9);
+        let (req, oracle) = if i % 3 == 2 {
+            // Sub-range request: exercises segmented lanes / solo plans.
+            let start = i % (p / 2);
+            let span = 2 + i % (p - start - 1).max(1).min(3);
+            let inputs = crate::bench::inputs_i64(span, m, rseed);
+            let oracle = oracle_exscan(&inputs, &ops::sum_i64());
+            (ScanRequest::over(ReqOp::sum_i64(), start, inputs), oracle)
+        } else if i % 2 == 0 {
+            let inputs = crate::bench::inputs_i64(p, m, rseed);
+            let oracle = oracle_exscan(&inputs, &ops::bxor());
+            (ScanRequest::full(ReqOp::bxor_i64(), inputs), oracle)
+        } else {
+            let inputs = crate::bench::inputs_i64(p, m, rseed);
+            let oracle = oracle_exscan(&inputs, &ops::sum_i64());
+            (ScanRequest::full(ReqOp::sum_i64(), inputs), oracle)
+        };
+        handles.push(engine.submit(req).map_err(|e| anyhow!("submit {i}: {e}"))?);
+        expected.push(oracle);
+    }
+    engine.flush();
+
+    let mut verified = 0usize;
+    for (i, (h, oracle)) in handles.into_iter().zip(expected).enumerate() {
+        let out = h
+            .wait_timeout(Duration::from_secs(120))
+            .map_err(|e| anyhow!("request {i} failed: {e}"))?;
+        for (r, want) in oracle.iter().enumerate() {
+            if let Some(want) = want {
+                anyhow::ensure!(
+                    &out.outputs[r] == want,
+                    "request {i}: member {r} diverged from serial oracle"
+                );
+            }
+        }
+        verified += 1;
+    }
+
+    let ms = engine.metrics();
+    println!(
+        "verified {verified}/{requests} against the serial oracle{}",
+        if chaos_seed.is_some() { " (under chaos)" } else { "" }
+    );
+    println!(
+        "batches: {} ({} concat, {} segmented, {} solo); coalesced elems/rank total: {}",
+        ms.batches, ms.concat_batches, ms.segmented_batches, ms.solo_batches, ms.coalesced_elems
+    );
+    println!(
+        "rounds paid: {} vs {} solo-equivalent → amortization {:.2}x, \
+         {:.3} rounds/request",
+        ms.rounds_paid,
+        ms.rounds_solo_equiv,
+        ms.round_amortization,
+        ms.amortized_rounds_per_request
+    );
+    anyhow::ensure!(ms.failed == 0, "{} requests failed", ms.failed);
+    anyhow::ensure!(
+        ms.round_amortization >= 1.0 - 1e-9,
+        "coalescing must never pay more rounds than solo execution"
+    );
+
+    if let Some(seed) = chaos_seed {
+        chaos_concurrent_comms(seed, 8)
+            .map_err(|e| anyhow!("concurrent-communicator differential: {e}"))?;
+        println!(
+            "concurrent-communicator differential (8 in-flight collectives, seed {seed}): OK"
+        );
+    }
+    Ok(())
 }
 
 /// Experiment E5: run both Table-1 grids and machine-check every claim

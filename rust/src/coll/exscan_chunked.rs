@@ -19,6 +19,10 @@
 //! `q(p) · C` ([`rounds_for`](ExscanChunked::rounds_for)) — chunking buys
 //! bandwidth/compute overlap, not fewer rounds, which is why it only wins
 //! once m is large enough that β/γ dominate α (see the hotpath m-sweep).
+//! On the wire, each chunk's traffic additionally carries its lane id in
+//! the [`TagKey::chunk`](crate::mpi::TagKey) field (`c mod 2¹⁶`; the
+//! round index alone already guarantees uniqueness, the lane makes the
+//! chunk structure visible at the transport level).
 
 use anyhow::Result;
 
@@ -117,14 +121,14 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanChunked {
             for c in 0..nc {
                 let rg = range(c);
                 let tag = c as u32;
-                match (to < p, from) {
+                ctx.with_chunk(c as u16, |ctx| match (to < p, from) {
                     (true, Some(f)) => {
-                        ctx.sendrecv(tag, to, &input[rg.clone()], f, &mut output[rg])?
+                        ctx.sendrecv(tag, to, &input[rg.clone()], f, &mut output[rg.clone()])
                     }
-                    (true, None) => ctx.send(tag, to, &input[rg])?,
-                    (false, Some(f)) => ctx.recv(tag, f, &mut output[rg])?,
+                    (true, None) => ctx.send(tag, to, &input[rg.clone()]),
+                    (false, Some(f)) => ctx.recv(tag, f, &mut output[rg.clone()]),
                     (false, None) => unreachable!("p > 1"),
-                }
+                })?;
             }
         }
         if r == 0 {
@@ -144,12 +148,14 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanChunked {
             for c in 0..nc {
                 let rg = range(c);
                 let tag = k * nc32 + c as u32;
-                match (to < p, from) {
-                    (true, Some(f)) => ctx.sendrecv_reduce(tag, to, f, op, &mut output[rg])?,
-                    (true, None) => ctx.send(tag, to, &output[rg])?,
-                    (false, Some(f)) => ctx.recv_reduce(tag, f, op, &mut output[rg])?,
-                    (false, None) => {}
-                }
+                ctx.with_chunk(c as u16, |ctx| match (to < p, from) {
+                    (true, Some(f)) => {
+                        ctx.sendrecv_reduce(tag, to, f, op, &mut output[rg.clone()])
+                    }
+                    (true, None) => ctx.send(tag, to, &output[rg.clone()]),
+                    (false, Some(f)) => ctx.recv_reduce(tag, f, op, &mut output[rg.clone()]),
+                    (false, None) => Ok(()),
+                })?;
             }
             s *= 2;
             k += 1;
@@ -162,6 +168,11 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanChunked {
     /// like [`PipelinedChain`](super::PipelinedChain).
     fn predicted_rounds(&self, p: usize) -> u32 {
         flat_rounds(p)
+    }
+
+    /// m-aware round count: `q(p) · C` — what the trace measures.
+    fn predicted_rounds_m(&self, p: usize, m: usize) -> u32 {
+        self.rounds_for(p, m)
     }
 
     fn predicted_ops(&self, p: usize) -> u32 {

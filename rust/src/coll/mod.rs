@@ -35,7 +35,7 @@ pub use basic::{allreduce, bcast, gather_chain, reduce, scatter_chain};
 pub use exscan_123::Exscan123;
 pub use exscan_chunked::ExscanChunked;
 pub use exscan_hierarchical::ExscanHierarchical;
-pub use segmented::{seg_max_i64, seg_sum_i64, Seg};
+pub use segmented::{seg_bxor_i64, seg_max_i64, seg_sum_i64, Seg};
 pub use exscan_blelloch::ExscanBlelloch;
 pub use exscan_linear::ExscanLinear;
 pub use exscan_mpich::ExscanMpich;
@@ -83,6 +83,16 @@ pub trait ScanAlgorithm<T: Elem>: Send + Sync {
     /// Closed-form number of communication rounds for world size `p`
     /// (the paper's primary metric; verified against traces in tests).
     fn predicted_rounds(&self, p: usize) -> u32;
+
+    /// Closed-form rounds at a concrete vector length. The default covers
+    /// m-independent schedules; algorithms whose round structure depends
+    /// on m (the chunked pipeline, the block-pipelined chain) override it
+    /// so the scan service's round accounting and coalescing benefit gate
+    /// ([`crate::svc`]) match what the trace will actually measure.
+    fn predicted_rounds_m(&self, p: usize, m: usize) -> u32 {
+        let _ = m;
+        self.predicted_rounds(p)
+    }
 
     /// Closed-form ⊕ applications, counted as the paper counts them
     /// (see each implementation's docs; verified against traces).

@@ -139,6 +139,11 @@ impl<T: Elem> ScanAlgorithm<T> for PipelinedChain {
         p.saturating_sub(1) as u32
     }
 
+    /// m-aware round count: `p + B − 2` — what the trace measures.
+    fn predicted_rounds_m(&self, p: usize, m: usize) -> u32 {
+        self.rounds_for(p, m)
+    }
+
     fn predicted_ops(&self, _p: usize) -> u32 {
         1 // per block; see `ops_for`
     }

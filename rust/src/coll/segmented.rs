@@ -94,6 +94,13 @@ pub fn seg_max_i64() -> OpRef<Seg<i64>> {
     lift("max_i64", |a: i64, b: i64| a.max(b))
 }
 
+/// Segmented i64 BXOR (the paper's benchmark operator, lifted — used by
+/// the chaos fuzz grid to pin segmented-operator correctness under
+/// adversarial delivery).
+pub fn seg_bxor_i64() -> OpRef<Seg<i64>> {
+    lift("bxor_i64", |a: i64, b: i64| a ^ b)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -20,11 +20,12 @@
 
 use anyhow::Result;
 
+use super::segmented::{seg_bxor_i64, seg_sum_i64, Seg};
 use super::{
     Exscan123, ExscanBlelloch, ExscanChunked, ExscanHierarchical, ExscanLinear, ExscanMpich,
     ExscanOneDoubling, ExscanShiftScan, ExscanTwoOp, PipelinedChain, ScanAlgorithm,
 };
-use crate::mpi::{ops, ChaosConfig, Elem, OpRef, Rec2, Topology, World, WorldConfig};
+use crate::mpi::{ops, ChaosConfig, Comm, Elem, OpRef, Rec2, Topology, World, WorldConfig};
 use crate::trace::{check_all, RankTrace, TraceReport};
 use crate::util::bits::{rounds_123, rounds_one_doubling};
 use crate::util::ceil_log2;
@@ -459,9 +460,14 @@ fn fuzz_world<T: Elem>(
 }
 
 /// The full differential sweep: every registered exscan algorithm ×
-/// {bxor_i64, sum_i64, rec2_compose (non-commutative)} × `m_values` ×
-/// `p_values`, under seeded chaos on persistent executors. Failures are
-/// collected (not panicked) so the CLI can print them with the repro seed.
+/// {bxor_i64, sum_i64, rec2_compose (non-commutative), and the **lifted
+/// segmented** seg_bxor_i64/seg_sum_i64 over `Seg<i64>`} × `m_values` ×
+/// `p_values`, under seeded chaos on persistent executors. The segmented
+/// case pins [`segmented`](super::segmented) correctness under reordered
+/// delivery — the lifted operator's flag rule is non-commutative and
+/// direction-sensitive, exactly what an adversarial schedule would break
+/// if any algorithm mis-ordered a fold. Failures are collected (not
+/// panicked) so the CLI can print them with the repro seed.
 pub fn chaos_fuzz(seed: u64, p_values: &[usize], m_values: &[usize]) -> FuzzOutcome {
     let mut out = FuzzOutcome::default();
     for &p in p_values {
@@ -483,8 +489,147 @@ pub fn chaos_fuzz(seed: u64, p_values: &[usize], m_values: &[usize]) -> FuzzOutc
             oracle_check_rec2,
             &mut out,
         );
+        fuzz_world::<Seg<i64>>(
+            seed,
+            p,
+            m_values,
+            &[
+                seg_bxor_i64 as fn() -> OpRef<Seg<i64>>,
+                seg_sum_i64 as fn() -> OpRef<Seg<i64>>,
+            ],
+            crate::bench::inputs_seg_i64,
+            oracle_check_exact::<Seg<i64>>,
+            &mut out,
+        );
     }
     out
+}
+
+// ───────────────── concurrent-communicator differential ─────────────────
+
+/// N concurrent in-flight exscans on **distinct communicators** over one
+/// persistent chaos world, differentially verified: each collective's
+/// outputs AND per-context trace must be bit-identical to the same
+/// request executed serially on a clean world of the communicator's size.
+///
+/// The communicators alternate full-world `dup`s and contiguous
+/// `split`-ranges; algorithms and operators vary per communicator. All N
+/// collectives run inside a single executor job — each rank walks the
+/// communicators it belongs to in order, so ranks genuinely interleave
+/// progress across collectives (a rank done with collective i starts
+/// i + 1 while its peers are still inside i), and the chaos layer
+/// additionally embargoes/diverts/yields on top. Only the packed
+/// `TagKey` context isolation makes this correct; reverting the tag to a
+/// bare round index makes this function fail immediately.
+pub fn chaos_concurrent_comms(seed: u64, n_comms: usize) -> std::result::Result<(), String> {
+    const P: usize = 8;
+    assert!(n_comms >= 1);
+    let world: World<i64> = World::new(
+        WorldConfig::new(Topology::flat(P))
+            .with_trace(true)
+            .with_chaos(ChaosConfig::new(seed)),
+    );
+    let world_comm = world.comm_world();
+
+    let algos: Vec<Box<dyn ScanAlgorithm<i64>>> = vec![
+        Box::new(Exscan123),
+        Box::new(ExscanOneDoubling),
+        Box::new(ExscanTwoOp),
+        Box::new(ExscanMpich),
+    ];
+    let m_grid = [1usize, 4, 17, 0, 5, 33];
+
+    let mut comms: Vec<Comm> = Vec::new();
+    let mut ops_v: Vec<OpRef<i64>> = Vec::new();
+    let mut inputs: Vec<Vec<Vec<i64>>> = Vec::new();
+    for i in 0..n_comms {
+        let comm = if i % 2 == 0 {
+            world.dup_comm(&world_comm)
+        } else {
+            // A contiguous sub-range [start, end), varied per i.
+            let start = i % 3;
+            let end = (start + 3 + i % (P - 2)).min(P);
+            let colors: Vec<usize> =
+                (0..P).map(|r| usize::from(r >= start && r < end)).collect();
+            world.split_comm(&world_comm, &colors).pop().expect("at least one color")
+        };
+        ops_v.push(if i % 2 == 0 { ops::bxor() } else { ops::sum_i64() });
+        inputs.push(crate::bench::inputs_i64(
+            comm.size(),
+            m_grid[i % m_grid.len()],
+            seed ^ (i as u64 + 1).wrapping_mul(0xA5A5_5A5A),
+        ));
+        comms.push(comm);
+    }
+
+    // ── The concurrent run: all N collectives inside one job. ──
+    let per = world
+        .run(|ctx| {
+            let w = ctx.rank();
+            let mut outs: Vec<Option<Vec<i64>>> = vec![None; comms.len()];
+            for (i, comm) in comms.iter().enumerate() {
+                let Some(cr) = comm.rank_of(w) else { continue };
+                let input = &inputs[i][cr];
+                let mut output = vec![0i64; input.len()];
+                let algo = &algos[i % algos.len()];
+                ctx.with_comm(comm, |sub| algo.run(sub, input, &mut output, &ops_v[i]))?;
+                outs[i] = Some(output);
+            }
+            Ok((outs, ctx.take_trace()))
+        })
+        .map_err(|e| format!("concurrent job failed (seed {seed}): {e:#}"))?;
+
+    let mut outs: Vec<Vec<Option<Vec<i64>>>> = Vec::with_capacity(P);
+    let mut traces: Vec<RankTrace> = Vec::with_capacity(P);
+    for (rank, (o, t)) in per.into_iter().enumerate() {
+        outs.push(o);
+        traces.push(t.unwrap_or_else(|| RankTrace::new(rank)));
+    }
+    let report = TraceReport::new(traces);
+
+    // ── Serial references: each collective alone on a clean world. ──
+    for (i, comm) in comms.iter().enumerate() {
+        let label = format!("seed {seed}, collective {i} (ctx {})", comm.ctx());
+        let clean: World<i64> =
+            World::new(WorldConfig::new(Topology::flat(comm.size())).with_trace(true));
+        let algo = &algos[i % algos.len()];
+        let op = if i % 2 == 0 { ops::bxor() } else { ops::sum_i64() };
+        let (serial_out, serial_tr) =
+            run_world_scan(&clean, algo.as_ref(), &op, &inputs[i])
+                .map_err(|e| format!("{label}: serial reference failed: {e:#}"))?;
+        for (cr, &wr) in comm.ranks().iter().enumerate() {
+            let got = outs[wr][i]
+                .as_ref()
+                .ok_or_else(|| format!("{label}: member rank {wr} produced no output"))?;
+            if got != &serial_out[cr] {
+                return Err(format!(
+                    "{label}: output of comm rank {cr} (world {wr}) diverged from serial"
+                ));
+            }
+        }
+        let sub = report.for_ctx(comm.ctx(), comm.ranks());
+        for cr in 0..comm.size() {
+            if sub.traces[cr].events != serial_tr.traces[cr].events {
+                return Err(format!(
+                    "{label}: per-context trace of comm rank {cr} diverged from serial"
+                ));
+            }
+        }
+        let violations = check_all(&sub);
+        if !violations.is_empty() {
+            return Err(format!("{label}: {} invariant violations", violations.len()));
+        }
+    }
+    // The whole mixed trace must also be invariant-clean per (ctx, round).
+    let violations = check_all(&report);
+    if !violations.is_empty() {
+        return Err(format!(
+            "seed {seed}: mixed trace has {} violations, first: {}",
+            violations.len(),
+            violations[0]
+        ));
+    }
+    Ok(())
 }
 
 /// The zero-allocation claim under chaos: with embargo/diversion/yields

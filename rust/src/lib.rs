@@ -11,8 +11,10 @@
 //!   paper's three exclusive-scan algorithms plus the library-native
 //!   baseline and several extensions, a round tracer ([`trace`]) that
 //!   checks the paper's round/operation counts, a calibrated α-β-γ cost
-//!   model ([`cost`]) and an mpicroscope-style benchmark harness
-//!   ([`bench`]).
+//!   model ([`cost`]), an mpicroscope-style benchmark harness
+//!   ([`bench`]), and a multi-tenant scan service ([`svc`]) that
+//!   coalesces independent small-m exscan requests into single
+//!   collectives on communicator-isolated contexts.
 //! * **Layer 2/1 (build time, `python/compile/`)** — the element-wise
 //!   `⊕` combine (`MPI_Reduce_local`) and block-scan hot spots as Pallas
 //!   kernels inside JAX functions, AOT-lowered to HLO text.
@@ -50,6 +52,7 @@ pub mod coll;
 pub mod cost;
 pub mod mpi;
 pub mod runtime;
+pub mod svc;
 pub mod trace;
 pub mod util;
 
@@ -62,8 +65,11 @@ pub mod prelude {
     };
     pub use crate::cost::{CostModel, CostParams, LinkClass};
     pub use crate::mpi::{
-        ops, run_scan, ChaosConfig, ChaosReport, CombineOp, Elem, OpRef, PoolStats, RankCtx,
-        Rec2, RunResult, Topology, World, WorldConfig,
+        ops, run_scan, ChaosConfig, ChaosReport, CombineOp, Comm, Elem, OpRef, PoolStats,
+        RankCtx, Rec2, RunResult, TagKey, Topology, World, WorldConfig,
+    };
+    pub use crate::svc::{
+        BatchPolicy, EngineConfig, ReqOp, ScanEngine, ScanHandle, ScanRequest, SvcError,
     };
     pub use crate::trace::{RankTrace, TraceReport};
 }

@@ -1,0 +1,353 @@
+//! Communicators with context ids, and the packed message tag they stamp.
+//!
+//! The transport matches messages on `(src, tag)`. Up to PR 3 the tag was a
+//! bare round index, which is only unambiguous while **one** collective is
+//! in flight per world — the round counter restarts at 0 for every
+//! collective, so two concurrent scans would cross-match each other's
+//! round-k messages. The scan service (see [`crate::svc`]) keeps many
+//! collectives in flight on one persistent [`World`](super::World), so the
+//! tag is widened into a packed [`TagKey`]:
+//!
+//! ```text
+//! bit 63        48 47        32 31                    0
+//!     ┌───────────┬────────────┬───────────────────────┐
+//!     │ ctx (u16) │ chunk (u16)│      round (u32)      │
+//!     └───────────┴────────────┴───────────────────────┘
+//! ```
+//!
+//! * **ctx** — the communicator's context id. Collectives on different
+//!   communicators are match-isolated even when their (src, round) pairs
+//!   coincide. Context 0 ([`WORLD_CTX`]) is the implicit world scope of a
+//!   bare [`RankCtx`](super::RankCtx), so a world-scope tag packs to
+//!   exactly the old bare round value (bit-compatible with pre-comm
+//!   traces and chaos drop keys).
+//! * **chunk** — a sub-round lane id. The chunked pipeline
+//!   ([`ExscanChunked`](crate::coll::ExscanChunked)) tags each chunk's
+//!   lane here (its *trace* round index stays the distinct per-(round,
+//!   chunk) value, which is what the one-ported invariants and the honest
+//!   `q·C` round count key on — see that module's docs).
+//! * **round** — the algorithm-defined communication-round index, exactly
+//!   as before.
+//!
+//! A [`Comm`] is a *group* (world ranks, in communicator-rank order) plus a
+//! context id. Creation follows MPI: [`Comm::world`] is the implicit full
+//! communicator; `dup` clones the group under a fresh context;
+//! `split` partitions by color. Context ids come from the owning world's
+//! [`CtxAlloc`]; long-lived services that create communicators per batch
+//! should recycle a fixed ring of dup'd communicators instead of
+//! allocating forever (65 535 ids; the allocator panics on exhaustion
+//! rather than silently aliasing live contexts).
+
+use std::sync::atomic::{AtomicU16, Ordering};
+use std::sync::Arc;
+
+/// Context id of the implicit world scope (a bare `RankCtx` outside any
+/// [`Comm`] scope). World-scope tags pack to the bare round value.
+pub const WORLD_CTX: u16 = 0;
+
+/// The packed message-matching key: (context, lane, round). See the module
+/// docs for the bit layout and field semantics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TagKey {
+    pub ctx: u16,
+    pub chunk: u16,
+    pub round: u32,
+}
+
+impl TagKey {
+    pub fn new(ctx: u16, chunk: u16, round: u32) -> Self {
+        TagKey { ctx, chunk, round }
+    }
+
+    /// Pack into the wire tag. Injective by construction: the three fields
+    /// occupy disjoint bit ranges.
+    pub fn pack(self) -> u64 {
+        ((self.ctx as u64) << 48) | ((self.chunk as u64) << 32) | self.round as u64
+    }
+
+    /// Inverse of [`pack`](Self::pack).
+    pub fn unpack(tag: u64) -> Self {
+        TagKey {
+            ctx: (tag >> 48) as u16,
+            chunk: (tag >> 32) as u16,
+            round: tag as u32,
+        }
+    }
+}
+
+/// Context-id allocator, owned by a [`World`](super::World). Ids start at 1
+/// (0 is [`WORLD_CTX`]) and are never reused; exhaustion panics instead of
+/// aliasing a live context (recycle communicators to avoid it — see the
+/// module docs).
+#[derive(Debug)]
+pub struct CtxAlloc {
+    next: AtomicU16,
+}
+
+impl Default for CtxAlloc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CtxAlloc {
+    pub fn new() -> Self {
+        CtxAlloc { next: AtomicU16::new(1) }
+    }
+
+    /// Allocate a fresh context id (≥ 1). Exhaustion panics *without*
+    /// advancing the counter (compare-exchange, no wrap), so even a
+    /// caught panic can never be followed by an alloc that aliases a
+    /// live context.
+    pub fn alloc(&self) -> u16 {
+        let mut cur = self.next.load(Ordering::SeqCst);
+        loop {
+            assert!(
+                cur != 0,
+                "context ids exhausted (65535 allocated); recycle communicators"
+            );
+            match self.next.compare_exchange(
+                cur,
+                cur.wrapping_add(1),
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => return cur,
+                Err(now) => cur = now,
+            }
+        }
+    }
+}
+
+/// A communicator: a context id plus the member world ranks in
+/// communicator-rank order. Cheap to clone (the group is shared).
+///
+/// All addressing inside a [`with_comm`](super::RankCtx::with_comm) scope
+/// is communicator-relative: `rank()`/`size()` report the member's position
+/// and the group size, and peer arguments to the transport primitives are
+/// communicator ranks. Messages are stamped with the context id, so
+/// collectives on distinct communicators over one world can be in flight
+/// simultaneously without cross-matching.
+#[derive(Debug, Clone)]
+pub struct Comm {
+    ctx: u16,
+    ranks: Arc<Vec<usize>>,
+}
+
+impl Comm {
+    /// Construct from an explicit context id and member list (world ranks
+    /// in communicator-rank order; must be non-empty and duplicate-free).
+    ///
+    /// The caller owns the context-id discipline: two communicators with
+    /// the same `ctx` must never have collectives in flight on the same
+    /// world at the same time (the scan service's ring recycling relies on
+    /// exactly this, serialized by the executor's job latch).
+    pub fn new(ctx: u16, ranks: Vec<usize>) -> Self {
+        assert!(!ranks.is_empty(), "a communicator needs at least one member");
+        let mut seen = ranks.clone();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), ranks.len(), "duplicate world rank in communicator");
+        Comm { ctx, ranks: Arc::new(ranks) }
+    }
+
+    /// The implicit world communicator: context 0, all `p` ranks.
+    pub fn world(p: usize) -> Self {
+        Comm { ctx: WORLD_CTX, ranks: Arc::new((0..p).collect()) }
+    }
+
+    /// `MPI_Comm_dup`: same members, fresh context id — collectives on the
+    /// duplicate are match-isolated from the parent's.
+    pub fn dup(&self, alloc: &CtxAlloc) -> Comm {
+        Comm { ctx: alloc.alloc(), ranks: Arc::clone(&self.ranks) }
+    }
+
+    /// `MPI_Comm_split`: partition the members by `colors` (one entry per
+    /// member, in communicator-rank order). Returns one communicator per
+    /// distinct color, ordered by color value; members keep their relative
+    /// order (key = parent rank).
+    pub fn split(&self, alloc: &CtxAlloc, colors: &[usize]) -> Vec<Comm> {
+        assert_eq!(colors.len(), self.size(), "one color per member");
+        let mut distinct: Vec<usize> = colors.to_vec();
+        distinct.sort_unstable();
+        distinct.dedup();
+        distinct
+            .into_iter()
+            .map(|color| {
+                let members: Vec<usize> = self
+                    .ranks
+                    .iter()
+                    .zip(colors)
+                    .filter(|(_, &c)| c == color)
+                    .map(|(&w, _)| w)
+                    .collect();
+                Comm { ctx: alloc.alloc(), ranks: Arc::new(members) }
+            })
+            .collect()
+    }
+
+    /// This communicator's context id.
+    pub fn ctx(&self) -> u16 {
+        self.ctx
+    }
+
+    /// Number of members.
+    pub fn size(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Member world ranks in communicator-rank order.
+    pub fn ranks(&self) -> &[usize] {
+        &self.ranks
+    }
+
+    /// World rank of communicator rank `r` (panics if out of range; the
+    /// transport validates before calling).
+    pub fn world_rank(&self, r: usize) -> usize {
+        self.ranks[r]
+    }
+
+    /// Communicator rank of `world_rank`, or `None` for non-members.
+    pub fn rank_of(&self, world_rank: usize) -> Option<usize> {
+        // Groups are small (≤ p); a linear probe beats a map here.
+        self.ranks.iter().position(|&w| w == world_rank)
+    }
+
+    /// Whether the members form a contiguous ascending world-rank range
+    /// (the shape the scan service's segmented coalescing packs by).
+    pub fn is_contiguous(&self) -> bool {
+        self.ranks.windows(2).all(|w| w[1] == w[0] + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tagkey_roundtrips_exhaustively_on_field_boundaries() {
+        // Full cartesian boundary grid — every field at 0, 1, mid, max —
+        // plus a dense sweep of the low rounds (the values real schedules
+        // use).
+        let ctxs = [0u16, 1, 2, 0x7FFF, 0xFFFE, 0xFFFF];
+        let chunks = [0u16, 1, 7, 0x8000, 0xFFFF];
+        let rounds = [0u32, 1, 2, 63, 0x1_0000, 0x7FFF_FFFF, u32::MAX];
+        for &ctx in &ctxs {
+            for &chunk in &chunks {
+                for &round in &rounds {
+                    let k = TagKey::new(ctx, chunk, round);
+                    assert_eq!(TagKey::unpack(k.pack()), k, "{k:?}");
+                }
+            }
+        }
+        for round in 0..4096u32 {
+            let k = TagKey::new(3, 5, round);
+            assert_eq!(TagKey::unpack(k.pack()), k);
+        }
+    }
+
+    #[test]
+    fn tagkey_packing_is_collision_free() {
+        // Distinct (ctx, round, chunk) triples must pack to distinct tags.
+        let mut seen = std::collections::HashSet::new();
+        for ctx in [0u16, 1, 9, 0xFFFF] {
+            for chunk in [0u16, 1, 8, 0xFFFF] {
+                for round in [0u32, 1, 17, 0xFFFF_FFFF] {
+                    assert!(
+                        seen.insert(TagKey::new(ctx, chunk, round).pack()),
+                        "collision at ctx={ctx} chunk={chunk} round={round}"
+                    );
+                }
+            }
+        }
+        assert_eq!(seen.len(), 4 * 4 * 4);
+    }
+
+    #[test]
+    fn world_scope_tags_are_bare_rounds() {
+        // ctx 0 / chunk 0 packs to exactly the old bare round tag, keeping
+        // pre-comm chaos drop keys and traces bit-compatible.
+        for round in [0u32, 1, 2, 1000, u32::MAX] {
+            assert_eq!(TagKey::new(WORLD_CTX, 0, round).pack(), round as u64);
+        }
+    }
+
+    #[test]
+    fn ctx_alloc_is_sequential_and_never_zero() {
+        let a = CtxAlloc::new();
+        assert_eq!(a.alloc(), 1);
+        assert_eq!(a.alloc(), 2);
+        assert_eq!(a.alloc(), 3);
+    }
+
+    #[test]
+    fn world_comm_shape() {
+        let w = Comm::world(5);
+        assert_eq!(w.ctx(), WORLD_CTX);
+        assert_eq!(w.size(), 5);
+        assert_eq!(w.ranks(), &[0, 1, 2, 3, 4]);
+        assert!(w.is_contiguous());
+        assert_eq!(w.rank_of(3), Some(3));
+        assert_eq!(w.rank_of(5), None);
+    }
+
+    #[test]
+    fn dup_keeps_members_changes_ctx() {
+        let alloc = CtxAlloc::new();
+        let w = Comm::world(4);
+        let a = w.dup(&alloc);
+        let b = w.dup(&alloc);
+        assert_eq!(a.ranks(), w.ranks());
+        assert_eq!(b.ranks(), w.ranks());
+        assert_ne!(a.ctx(), WORLD_CTX);
+        assert_ne!(a.ctx(), b.ctx(), "dups must be match-isolated");
+    }
+
+    #[test]
+    fn split_partitions_by_color_preserving_order() {
+        let alloc = CtxAlloc::new();
+        let w = Comm::world(6);
+        // colors: even ranks → 0, odd ranks → 1
+        let parts = w.split(&alloc, &[0, 1, 0, 1, 0, 1]);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].ranks(), &[0, 2, 4]);
+        assert_eq!(parts[1].ranks(), &[1, 3, 5]);
+        assert_ne!(parts[0].ctx(), parts[1].ctx());
+        assert!(!parts[0].is_contiguous());
+        assert_eq!(parts[0].rank_of(4), Some(2));
+        assert_eq!(parts[0].rank_of(1), None);
+        assert_eq!(parts[1].world_rank(2), 5);
+    }
+
+    #[test]
+    fn split_contiguous_halves() {
+        let alloc = CtxAlloc::new();
+        let w = Comm::world(8);
+        let parts = w.split(&alloc, &[0, 0, 0, 0, 1, 1, 1, 1]);
+        assert!(parts[0].is_contiguous() && parts[1].is_contiguous());
+        assert_eq!(parts[1].ranks(), &[4, 5, 6, 7]);
+        assert_eq!(parts[1].rank_of(6), Some(2));
+    }
+
+    #[test]
+    fn split_of_split_nests() {
+        let alloc = CtxAlloc::new();
+        let w = Comm::world(8);
+        let halves = w.split(&alloc, &[0, 0, 0, 0, 1, 1, 1, 1]);
+        let quarters = halves[1].split(&alloc, &[0, 0, 1, 1]);
+        assert_eq!(quarters[0].ranks(), &[4, 5]);
+        assert_eq!(quarters[1].ranks(), &[6, 7]);
+        let all: Vec<u16> =
+            [&halves[0], &halves[1], &quarters[0], &quarters[1]].iter().map(|c| c.ctx()).collect();
+        let mut dedup = all.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), all.len(), "every communicator gets its own context");
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate world rank")]
+    fn duplicate_members_rejected() {
+        Comm::new(1, vec![0, 1, 1]);
+    }
+}

@@ -26,6 +26,15 @@
 //! pre-fusion two-step flow is preserved behind
 //! [`WorldConfig::unfused_compat`](super::WorldConfig) as the A/B
 //! reference for the equivalence tests and the hotpath m-sweep.
+//!
+//! Communicator scoping (the scan-service layer): inside
+//! [`with_comm`](RankCtx::with_comm), `rank()`/`size()` and every peer
+//! argument are communicator-relative, and every message tag carries the
+//! communicator's context id (a packed [`TagKey`]) — so any number of
+//! collectives on *distinct* communicators can be in flight on one world
+//! without cross-matching. Traces record world ranks plus the context id;
+//! [`TraceReport::for_ctx`](crate::trace::TraceReport::for_ctx) extracts
+//! one communicator's sub-trace in communicator coordinates.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -33,6 +42,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use super::chaos::{Chaos, ChaosAction};
+use super::comm::{Comm, TagKey, WORLD_CTX};
 use super::elem::Elem;
 use super::inbox::Inbox;
 use super::msg::Msg;
@@ -71,6 +81,21 @@ pub fn recv_timeout() -> Duration {
 pub struct RankCtx<T: Elem> {
     rank: usize,
     size: usize,
+    /// Active communicator scope (`None` = whole world). While set,
+    /// `rank()`/`size()` and every peer argument are communicator-relative
+    /// and message tags carry the communicator's context id — see
+    /// [`with_comm`](Self::with_comm).
+    comm: Option<Comm>,
+    /// Communicator-relative view of this rank's id and the group size
+    /// (equal to `rank`/`size` outside a comm scope).
+    vrank: usize,
+    vsize: usize,
+    /// Context id stamped into every outgoing/expected [`TagKey`]
+    /// ([`WORLD_CTX`] outside a comm scope).
+    tag_ctx: u16,
+    /// Sub-round lane id stamped into every [`TagKey`] (0 outside a
+    /// [`with_chunk`](Self::with_chunk) scope).
+    tag_chunk: u16,
     /// `inboxes[r]` is rank r's inbox; this rank matches on `inboxes[rank]`.
     inboxes: Arc<Vec<Inbox<T>>>,
     /// This rank's send-buffer pool (buffers recycle back here when the
@@ -121,6 +146,11 @@ impl<T: Elem> RankCtx<T> {
         RankCtx {
             rank,
             size,
+            comm: None,
+            vrank: rank,
+            vsize: size,
+            tag_ctx: WORLD_CTX,
+            tag_chunk: 0,
             inboxes,
             pool,
             pending: Vec::new(),
@@ -146,14 +176,110 @@ impl<T: Elem> RankCtx<T> {
         }
     }
 
-    /// This rank's id, `0 <= rank < size`.
+    /// This rank's id, `0 <= rank < size` — communicator-relative inside a
+    /// [`with_comm`](Self::with_comm) scope, the world rank otherwise.
     pub fn rank(&self) -> usize {
+        self.vrank
+    }
+
+    /// Number of ranks addressable from this scope (`p`): the communicator
+    /// size inside [`with_comm`](Self::with_comm), the world size otherwise.
+    pub fn size(&self) -> usize {
+        self.vsize
+    }
+
+    /// This rank's world id, regardless of any communicator scope.
+    pub fn world_rank(&self) -> usize {
         self.rank
     }
 
-    /// Number of ranks in the world (`p`).
-    pub fn size(&self) -> usize {
-        self.size
+    /// Context id of the active scope ([`WORLD_CTX`] outside a comm).
+    pub fn ctx_id(&self) -> u16 {
+        self.tag_ctx
+    }
+
+    /// Run `f` with this context scoped to `comm`: `rank()`/`size()` and
+    /// every peer argument become communicator-relative, and all message
+    /// tags carry `comm`'s context id, so a collective inside the scope is
+    /// match-isolated from collectives on any other communicator that are
+    /// simultaneously in flight on the same world. Errors if this world
+    /// rank is not a member. Scopes nest (membership is always looked up
+    /// by world rank); the previous scope is restored on exit, including
+    /// across panics (the persistent executor reuses this context for the
+    /// next job).
+    ///
+    /// [`barrier`](Self::barrier) remains world-wide — it is an executor
+    /// synchronization primitive, not a communicator collective; do not
+    /// call it from code that only part of the world executes.
+    pub fn with_comm<R>(
+        &mut self,
+        comm: &Comm,
+        f: impl FnOnce(&mut Self) -> Result<R>,
+    ) -> Result<R> {
+        let Some(vrank) = comm.rank_of(self.rank) else {
+            bail!(
+                "world rank {} is not a member of communicator ctx={}",
+                self.rank,
+                comm.ctx()
+            );
+        };
+        let saved = (self.comm.take(), self.vrank, self.vsize, self.tag_ctx);
+        self.comm = Some(comm.clone());
+        self.vrank = vrank;
+        self.vsize = comm.size();
+        self.tag_ctx = comm.ctx();
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(self)));
+        self.comm = saved.0;
+        self.vrank = saved.1;
+        self.vsize = saved.2;
+        self.tag_ctx = saved.3;
+        match out {
+            Ok(r) => r,
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
+    }
+
+    /// Run `f` with all message tags carrying lane id `chunk` (the
+    /// [`TagKey::chunk`] field): a wire-level sub-channel within the
+    /// current scope's round numbering. The previous lane is restored on
+    /// exit, including across panics.
+    pub fn with_chunk<R>(
+        &mut self,
+        chunk: u16,
+        f: impl FnOnce(&mut Self) -> Result<R>,
+    ) -> Result<R> {
+        let saved = self.tag_chunk;
+        self.tag_chunk = chunk;
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(self)));
+        self.tag_chunk = saved;
+        match out {
+            Ok(r) => r,
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
+    }
+
+    /// Translate a scope-relative peer rank to its world rank.
+    fn resolve_peer(&self, r: usize) -> Result<usize> {
+        match &self.comm {
+            None => Ok(r), // world scope; `post` bounds-checks
+            Some(c) => {
+                if r >= c.size() {
+                    bail!(
+                        "rank {} (ctx {}): peer {} out of range for communicator of size {}",
+                        self.vrank,
+                        self.tag_ctx,
+                        r,
+                        c.size()
+                    );
+                }
+                Ok(c.world_rank(r))
+            }
+        }
+    }
+
+    /// The wire tag for `round` in the current scope.
+    fn tag(&self, round: u32) -> u64 {
+        TagKey::new(self.tag_ctx, self.tag_chunk, round).pack()
     }
 
     /// Current virtual clock (µs). 0 in real mode.
@@ -195,22 +321,27 @@ impl<T: Elem> RankCtx<T> {
 
     fn record(&mut self, round: u32, kind: EventKind) {
         if let Some(t) = &mut self.trace {
-            t.push(round, kind);
+            t.push_ctx(self.tag_ctx, round, kind);
         }
     }
 
+    /// `to` is a **world** rank (callers resolve communicator ranks via
+    /// [`resolve_peer`](Self::resolve_peer) first). The tag carries the
+    /// scope's full packed [`TagKey`]; chaos decisions key on it too, so
+    /// injection stays pure in (seed, src, dst, ctx, chunk, round).
     fn post(&mut self, to: usize, round: u32, data: &[T]) -> Result<()> {
         if to >= self.size {
             bail!("rank {} sending to out-of-range rank {}", self.rank, to);
         }
         self.chaos_point();
+        let tag = self.tag(round);
         let msg = Msg {
             src: self.rank,
-            tag: round as u64,
+            tag,
             data: BufferPool::acquire_copy(&self.pool, data),
             vtime: self.vclock,
         };
-        match self.chaos.as_ref().map(|c| c.plan_message(self.rank, to, round as u64)) {
+        match self.chaos.as_ref().map(|c| c.plan_message(self.rank, to, tag)) {
             None | Some(ChaosAction::Deliver) => self.inboxes[to].deposit(msg),
             Some(ChaosAction::Delay { micros }) => self.inboxes[to]
                 .deposit_delayed(msg, Instant::now() + Duration::from_micros(micros)),
@@ -223,20 +354,26 @@ impl<T: Elem> RankCtx<T> {
         Ok(())
     }
 
-    /// Blocking matched receive: returns the message from `from` with tag
-    /// `round`, buffering any other arrivals.
+    /// Blocking matched receive: returns the message from **world** rank
+    /// `from` with the scope's tag for `round`, buffering any other
+    /// arrivals (including messages for other contexts or lanes).
     fn take(&mut self, from: usize, round: u32) -> Result<Msg<T>> {
         self.chaos_point();
-        let tag = round as u64;
+        let tag = self.tag(round);
         if let Some(i) = self.pending.iter().position(|m| m.src == from && m.tag == tag) {
             return Ok(self.pending.swap_remove(i));
         }
         let deadline = Instant::now() + self.recv_deadline;
         match self.inboxes[self.rank].recv_match(from, tag, &mut self.pending, deadline) {
             Some(msg) => Ok(msg),
-            None => bail!(
+            None if self.tag_ctx == WORLD_CTX => bail!(
                 "rank {} deadlocked waiting for (from={from}, round={round})",
                 self.rank
+            ),
+            None => bail!(
+                "rank {} deadlocked waiting for (from={from}, round={round}) on ctx={}",
+                self.rank,
+                self.tag_ctx
             ),
         }
     }
@@ -337,7 +474,10 @@ impl<T: Elem> RankCtx<T> {
     }
 
     /// One-sided send in communication round `round` (one send-port slot).
+    /// `to` is scope-relative (a communicator rank inside
+    /// [`with_comm`](Self::with_comm)); traces record world ranks.
     pub fn send(&mut self, round: u32, to: usize, buf: &[T]) -> Result<()> {
+        let to = self.resolve_peer(to)?;
         self.post(to, round, buf)?;
         self.record(round, EventKind::Send { to, bytes: Self::bytes(buf.len()) });
         if let ClockMode::Virtual(model) = &self.mode {
@@ -348,6 +488,7 @@ impl<T: Elem> RankCtx<T> {
 
     /// One-sided receive in communication round `round` (one recv-port slot).
     pub fn recv(&mut self, round: u32, from: usize, buf: &mut [T]) -> Result<()> {
+        let from = self.resolve_peer(from)?;
         let msg = self.take_expect(from, round, buf.len(), "recv")?;
         buf.copy_from_slice(&msg.data);
         self.account_recv(round, from, buf.len(), msg.vtime);
@@ -361,6 +502,7 @@ impl<T: Elem> RankCtx<T> {
     /// so no copy is ever needed). `expect` is the element count. The
     /// returned [`PoolBuf`] recycles to the sender's pool on drop.
     pub fn recv_owned(&mut self, round: u32, from: usize, expect: usize) -> Result<PoolBuf<T>> {
+        let from = self.resolve_peer(from)?;
         let msg = self.take_expect(from, round, expect, "recv")?;
         self.account_recv(round, from, expect, msg.vtime);
         Ok(msg.data)
@@ -380,6 +522,7 @@ impl<T: Elem> RankCtx<T> {
         op: &OpRef<T>,
         inout: &mut [T],
     ) -> Result<()> {
+        let from = self.resolve_peer(from)?;
         let msg = self.take_expect(from, round, inout.len(), "recv")?;
         self.account_recv(round, from, inout.len(), msg.vtime);
         self.fold_msg(round, op, msg, inout);
@@ -400,6 +543,7 @@ impl<T: Elem> RankCtx<T> {
         op: &OpRef<T>,
         keep: &mut [T],
     ) -> Result<()> {
+        let from = self.resolve_peer(from)?;
         let msg = self.take_expect(from, round, keep.len(), "recv")?;
         self.account_recv(round, from, keep.len(), msg.vtime);
         self.fold_msg_right(round, op, msg, keep);
@@ -415,6 +559,7 @@ impl<T: Elem> RankCtx<T> {
         from: usize,
         expect: usize,
     ) -> Result<PoolBuf<T>> {
+        let (to, from) = (self.resolve_peer(to)?, self.resolve_peer(from)?);
         self.post(to, round, sbuf)?;
         self.record(round, EventKind::Send { to, bytes: Self::bytes(sbuf.len()) });
         let msg = self.take_expect(from, round, expect, "sendrecv")?;
@@ -436,6 +581,7 @@ impl<T: Elem> RankCtx<T> {
         op: &OpRef<T>,
         keep: &mut [T],
     ) -> Result<()> {
+        let (to, from) = (self.resolve_peer(to)?, self.resolve_peer(from)?);
         self.post(to, round, keep)?;
         self.record(round, EventKind::Send { to, bytes: Self::bytes(keep.len()) });
         let msg = self.take_expect(from, round, keep.len(), "sendrecv")?;
@@ -456,6 +602,7 @@ impl<T: Elem> RankCtx<T> {
         op: &OpRef<T>,
         keep: &mut [T],
     ) -> Result<()> {
+        let (to, from) = (self.resolve_peer(to)?, self.resolve_peer(from)?);
         self.post(to, round, keep)?;
         self.record(round, EventKind::Send { to, bytes: Self::bytes(keep.len()) });
         let msg = self.take_expect(from, round, keep.len(), "sendrecv")?;
@@ -477,6 +624,7 @@ impl<T: Elem> RankCtx<T> {
         op: &OpRef<T>,
         inout: &mut [T],
     ) -> Result<()> {
+        let (to, from) = (self.resolve_peer(to)?, self.resolve_peer(from)?);
         self.post(to, round, sbuf)?;
         self.record(round, EventKind::Send { to, bytes: Self::bytes(sbuf.len()) });
         let msg = self.take_expect(from, round, inout.len(), "sendrecv")?;
@@ -497,6 +645,7 @@ impl<T: Elem> RankCtx<T> {
         from: usize,
         rbuf: &mut [T],
     ) -> Result<()> {
+        let (to, from) = (self.resolve_peer(to)?, self.resolve_peer(from)?);
         self.post(to, round, sbuf)?;
         self.record(round, EventKind::Send { to, bytes: Self::bytes(sbuf.len()) });
         let msg = self.take_expect(from, round, rbuf.len(), "sendrecv")?;
@@ -634,6 +783,94 @@ mod tests {
             .unwrap()
         };
         assert_eq!(mk(false), mk(true));
+    }
+
+    #[test]
+    fn with_comm_remaps_ranks_and_isolates_tags() {
+        use crate::mpi::comm::CtxAlloc;
+        use crate::mpi::Comm;
+        // World of 4; comm over world ranks {1, 3}. Inside the scope the
+        // members see rank 0/1 of a size-2 communicator, and their round-0
+        // messages must not collide with a *world-scope* round-0 exchange
+        // between the same physical ranks that is in flight simultaneously.
+        let alloc = CtxAlloc::new();
+        let comm = Comm::world(4).split(&alloc, &[0, 1, 0, 1])[1].clone();
+        assert_eq!(comm.ranks(), &[1, 3]);
+        let cfg = WorldConfig::new(Topology::flat(4));
+        let out = run_world::<i64, (usize, usize, i64, i64), _>(&cfg, |ctx| {
+            let w = ctx.rank();
+            let mut seen = (usize::MAX, 0usize, 0i64, 0i64);
+            if w == 1 || w == 3 {
+                // World-scope round-0 exchange between 1 and 3 …
+                let peer = 4 - w; // 1 <-> 3
+                let sbuf = [w as i64 * 100];
+                let mut rbuf = [0i64];
+                ctx.send(0, peer, &sbuf)?;
+                // … and a comm-scope round-0 exchange between the same two
+                // ranks, posted before the world-scope receive: without
+                // ctx isolation the keys (src, round 0) would collide.
+                ctx.with_comm(&comm, |sub| {
+                    seen.0 = sub.rank();
+                    seen.1 = sub.size();
+                    let speer = 1 - sub.rank();
+                    sub.send(0, speer, &[sub.rank() as i64 + 7])?;
+                    let mut r = [0i64];
+                    sub.recv(0, speer, &mut r)?;
+                    seen.2 = r[0];
+                    Ok(())
+                })?;
+                ctx.recv(0, peer, &mut rbuf)?;
+                seen.3 = rbuf[0];
+                // Scope restored: world addressing again.
+                assert_eq!(ctx.rank(), w);
+                assert_eq!(ctx.size(), 4);
+            }
+            Ok(seen)
+        })
+        .unwrap();
+        assert_eq!(out[1], (0, 2, 8, 300)); // comm rank 0; got comm peer's 1+7, world 3*100
+        assert_eq!(out[3], (1, 2, 7, 100));
+    }
+
+    #[test]
+    fn with_comm_rejects_non_members() {
+        use crate::mpi::comm::CtxAlloc;
+        use crate::mpi::Comm;
+        let alloc = CtxAlloc::new();
+        let comm = Comm::world(3).split(&alloc, &[0, 0, 1])[1].clone(); // {2}
+        let cfg = WorldConfig::new(Topology::flat(3));
+        let res = run_world::<i64, (), _>(&cfg, |ctx| {
+            if ctx.rank() == 0 {
+                ctx.with_comm(&comm, |_| Ok(()))?;
+            }
+            Ok(())
+        });
+        let err = format!("{:#}", res.unwrap_err());
+        assert!(err.contains("not a member"), "{err}");
+    }
+
+    #[test]
+    fn with_chunk_isolates_lanes_within_a_round() {
+        // Two messages in the same (src, round) but different lanes must
+        // match their own lane's receive, in either order.
+        let cfg = WorldConfig::new(Topology::flat(2));
+        let out = run_world::<i64, Vec<i64>, _>(&cfg, |ctx| {
+            if ctx.rank() == 0 {
+                ctx.with_chunk(1, |c| c.send(0, 1, &[11]))?;
+                ctx.with_chunk(2, |c| c.send(0, 1, &[22]))?;
+                Ok(vec![])
+            } else {
+                let mut a = [0i64];
+                let mut b = [0i64];
+                // Receive lane 2 first: cross-lane matching would hand
+                // over lane 1's payload here.
+                ctx.with_chunk(2, |c| c.recv(0, 0, &mut b))?;
+                ctx.with_chunk(1, |c| c.recv(0, 0, &mut a))?;
+                Ok(vec![a[0], b[0]])
+            }
+        })
+        .unwrap();
+        assert_eq!(out[1], vec![11, 22]);
     }
 
     #[test]

@@ -7,8 +7,11 @@
 //! lock, and every mismatched pop paid O(pending).
 //!
 //! Scan schedules are fully deterministic: at any instant a rank has a
-//! handful of in-flight messages, each uniquely keyed by (src, round).
-//! The inbox therefore hashes (src, round) into a small slot array:
+//! handful of in-flight messages, each uniquely keyed by (src, tag) —
+//! where the tag is a packed [`TagKey`](super::comm::TagKey) carrying
+//! (ctx, chunk, round), so concurrent collectives on distinct
+//! communicators key distinctly even at equal round indices. The inbox
+//! hashes (src, tag) into a small slot array:
 //!
 //! * **deposit** (sender side): take the slot's own lock (uncontended —
 //!   only this sender and the receiver ever touch it), place the message,

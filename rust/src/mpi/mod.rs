@@ -4,8 +4,11 @@
 //! * [`elem`] — element types (`MPI_Datatype` analogue), incl. [`Rec2`].
 //! * [`op`] — associative operators (`MPI_Op` + `MPI_Reduce_local`) with
 //!   per-rank sharded application counters.
+//! * [`comm`] — communicators with context ids ([`Comm`], `dup`/`split`)
+//!   and the packed [`TagKey`] that match-isolates concurrent collectives.
 //! * [`ctx`] — the per-rank API: `send`/`recv`/`sendrecv`/`reduce_local`
-//!   plus the fused `recv_reduce`/`sendrecv_reduce` compute hot path.
+//!   plus the fused `recv_reduce`/`sendrecv_reduce` compute hot path and
+//!   communicator scoping (`with_comm`/`with_chunk`).
 //! * [`pool`] — recycling per-rank buffer pools (zero-allocation sends).
 //! * [`inbox`] — slot-keyed rendezvous matching (no MPMC lock, no scan).
 //! * [`world`] — topology, the one-shot [`run_world`]/[`run_scan`] entry
@@ -20,6 +23,7 @@
 //! evaluation to the paper's 36×32 cluster on a laptop.
 
 pub mod chaos;
+pub mod comm;
 pub mod ctx;
 pub mod elem;
 pub(crate) mod inbox;
@@ -30,6 +34,7 @@ pub mod vbarrier;
 pub mod world;
 
 pub use chaos::{ChaosAction, ChaosConfig, ChaosEvent, ChaosReport};
+pub use comm::{Comm, CtxAlloc, TagKey, WORLD_CTX};
 pub use ctx::{ClockMode, RankCtx};
 pub use elem::{Dtype, Elem, Rec2};
 pub use op::{ops, CombineOp, FnOp, OpRef};

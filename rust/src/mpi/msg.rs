@@ -2,9 +2,21 @@
 
 use super::pool::PoolBuf;
 
-/// A typed point-to-point message. `tag` is the communication-round index
-/// of the sending algorithm — matching on it enforces the round structure
-/// (a message sent in round k can only satisfy a round-k receive).
+/// A typed point-to-point message. `tag` is a packed
+/// [`TagKey`](super::comm::TagKey) — `(ctx, chunk, round)` — not a bare
+/// round index: `round` is the sending algorithm's communication-round
+/// index (matching on it enforces the round structure — a message sent in
+/// round k can only satisfy a round-k receive), `ctx` is the context id of
+/// the communicator the collective runs on (0 for world-scope traffic), and
+/// `chunk` is a wire-level sub-round lane id (the chunked pipeline tags
+/// each chunk's lane; see [`ExscanChunked`](crate::coll::ExscanChunked)).
+/// World-scope, lane-0 tags pack to exactly the bare round value, so
+/// single-collective traffic is bit-compatible with the pre-communicator
+/// transport.
+///
+/// `src` is always a **world** rank, even for communicator-scoped traffic
+/// (the receiver resolves its communicator peer to a world rank before
+/// matching).
 ///
 /// `data` is a pool-owned buffer acquired from the *sender's* rank pool;
 /// dropping the message (or the `PoolBuf` handed out by `recv_owned`)

@@ -73,6 +73,12 @@ impl<T: Elem> OpRef<T> {
         self.op.name()
     }
 
+    /// The underlying shared combine operator. Used by the scan service to
+    /// build per-batch `OpRef`s (fresh counters, same semantics).
+    pub fn shared_op(&self) -> Arc<dyn CombineOp<T>> {
+        Arc::clone(&self.op)
+    }
+
     pub fn commutative(&self) -> bool {
         self.op.commutative()
     }

@@ -20,6 +20,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use super::chaos::{Chaos, ChaosConfig, ChaosReport};
+use super::comm::{Comm, CtxAlloc};
 use super::ctx::{recv_timeout, ClockMode, RankCtx};
 use super::elem::Elem;
 use super::inbox::Inbox;
@@ -324,6 +325,9 @@ pub struct World<T: Elem> {
     /// Serializes whole `run` calls: jobs from two overlapping runs would
     /// interleave differently per rank and desynchronize the barrier.
     run_lock: Mutex<()>,
+    /// Context-id allocator for communicators created over this world
+    /// ([`dup_comm`](Self::dup_comm)/[`split_comm`](Self::split_comm)).
+    ctxs: CtxAlloc,
 }
 
 impl<T: Elem> World<T> {
@@ -380,7 +384,27 @@ impl<T: Elem> World<T> {
             jobs.push(ch);
             handles.push(handle);
         }
-        World { cfg, jobs, pools, chaos, handles, run_lock: Mutex::new(()) }
+        World { cfg, jobs, pools, chaos, handles, run_lock: Mutex::new(()), ctxs: CtxAlloc::new() }
+    }
+
+    /// The implicit world communicator (context 0, all ranks). Collectives
+    /// run *outside* any [`RankCtx::with_comm`] scope already use it.
+    pub fn comm_world(&self) -> Comm {
+        Comm::world(self.size())
+    }
+
+    /// `MPI_Comm_dup`: same members as `parent`, fresh context id —
+    /// collectives on the two are match-isolated and may be in flight on
+    /// this world simultaneously.
+    pub fn dup_comm(&self, parent: &Comm) -> Comm {
+        parent.dup(&self.ctxs)
+    }
+
+    /// `MPI_Comm_split`: partition `parent` by color (one entry per
+    /// member, in communicator-rank order); returns one communicator per
+    /// distinct color, each with a fresh context id.
+    pub fn split_comm(&self, parent: &Comm, colors: &[usize]) -> Vec<Comm> {
+        parent.split(&self.ctxs, colors)
     }
 
     pub fn config(&self) -> &WorldConfig {

@@ -1,0 +1,458 @@
+//! Batch planning: turning a queue of independent small-m requests into
+//! the fewest collectives.
+//!
+//! Coalescing exploits that `⊕` is element-wise, so one wide vector scan
+//! *is* many independent scans:
+//!
+//! * **Lane concatenation** — full-world requests sharing an operator
+//!   concatenate their vectors per rank and run one collective of width
+//!   `Σ mₖ`. Works for any associative `⊕`; K requests pay one
+//!   collective's rounds.
+//! * **Segmented lanes** — sub-range requests (contiguous rank ranges)
+//!   whose operator is *liftable* pack into shared lanes of one
+//!   world-wide scan under the lifted `(flag, value)` operator
+//!   (Blelloch's construction, [`crate::coll::segmented`]): requests with
+//!   disjoint ranges share a lane; segment-start flags at each request's
+//!   first rank stop any value from crossing request boundaries. Lanes
+//!   are filled greedily in arrival order (interval partitioning).
+//! * **Solo** — anything that cannot coalesce (a sub-range request with
+//!   an opaque operator, a singleton group, or a segmented candidate
+//!   whose world-wide cost `rounds(p)` would not strictly beat the
+//!   members' summed solo cost) runs as its own collective on a
+//!   communicator over exactly its ranks, paying only `rounds(span)`.
+//!
+//! Planning is pure (no I/O, no clocks): the engine feeds it whatever the
+//! batching window collected.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::mpi::Elem;
+
+use super::metrics::ServiceMetrics;
+use super::request::{HandleState, ScanRequest, SvcError};
+
+/// Coalescing policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// How long the dispatcher keeps collecting after the first queued
+    /// request before executing the cycle ([`ScanEngine::flush`] cuts it
+    /// short).
+    ///
+    /// [`ScanEngine::flush`]: super::ScanEngine::flush
+    pub window: Duration,
+    /// Maximum requests coalesced into one collective.
+    pub max_batch: usize,
+    /// Cap on the per-rank element count of one coalesced collective
+    /// (concatenated width, or `lanes × m` for segmented batches).
+    pub max_coalesced_elems: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            window: Duration::from_micros(200),
+            max_batch: 64,
+            max_coalesced_elems: 1 << 20,
+        }
+    }
+}
+
+/// A queued request plus the handle its result scatters back to (and the
+/// engine's metrics, so the abandonment path below stays accountable).
+pub(crate) struct PendingReq<T: Elem> {
+    pub req: ScanRequest<T>,
+    pub state: Arc<HandleState<T>>,
+    pub metrics: Arc<ServiceMetrics>,
+}
+
+impl<T: Elem> Drop for PendingReq<T> {
+    /// Last-resort containment: a request dropped without being fulfilled
+    /// (a dispatcher panic unwinding a cycle, queue teardown after a
+    /// dispatcher death) resolves its handle to a typed
+    /// [`SvcError::Shutdown`] instead of leaving `wait` blocked forever,
+    /// and counts the failure so `submitted == completed + failed` holds
+    /// on every path. A no-op when the scatter already fulfilled.
+    fn drop(&mut self) {
+        if self.state.fulfill_if_empty(Err(SvcError::Shutdown)) {
+            self.metrics.on_failed(1);
+        }
+    }
+}
+
+/// One planned collective, referencing requests by index into the cycle's
+/// pending list.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) enum Plan {
+    /// Full-world lane concatenation, members in concatenation order.
+    Concat { members: Vec<usize> },
+    /// Segmented world-wide scan: `lanes[l]` holds members with pairwise
+    /// disjoint rank ranges; all members share (op, m).
+    Segmented { lanes: Vec<Vec<usize>>, m: usize },
+    /// One request on a communicator over exactly its ranks.
+    Solo { member: usize },
+}
+
+impl Plan {
+    /// Requests this collective serves.
+    pub fn batch_size(&self) -> usize {
+        match self {
+            Plan::Concat { members } => members.len(),
+            Plan::Segmented { lanes, .. } => lanes.iter().map(|l| l.len()).sum(),
+            Plan::Solo { .. } => 1,
+        }
+    }
+
+    /// All member indices, in scatter order.
+    pub fn members(&self) -> Vec<usize> {
+        match self {
+            Plan::Concat { members } => members.clone(),
+            Plan::Segmented { lanes, .. } => lanes.iter().flatten().copied().collect(),
+            Plan::Solo { member } => vec![*member],
+        }
+    }
+}
+
+/// Group the cycle's pending requests into collectives. Deterministic and
+/// arrival-order preserving within each group (so results are reproducible
+/// given the same queue contents).
+///
+/// `rounds_for(n, m)` is the configured algorithm's closed-form round
+/// count on an n-rank communicator at vector length m (m-aware so the
+/// chunked/pipelined schedules are costed by what their traces will
+/// actually measure): a segmented batch runs world-wide at width
+/// `lanes·m` and is only kept when that is strictly cheaper than the
+/// members' summed solo cost `Σ rounds_for(spanₖ, m)` — short-span pairs
+/// on a large world fall back to solo sub-communicator execution instead
+/// of a losing coalesce.
+pub(crate) fn plan_batches<T: Elem>(
+    pending: &[PendingReq<T>],
+    p: usize,
+    policy: &BatchPolicy,
+    rounds_for: impl Fn(usize, usize) -> u32,
+) -> Vec<Plan> {
+    let mut plans = Vec::new();
+    let mut consumed = vec![false; pending.len()];
+
+    // ── Full-world requests: concat per operator name. ──
+    // Group indices by op name, preserving arrival order.
+    let mut concat_groups: Vec<(String, Vec<usize>)> = Vec::new();
+    for (i, pr) in pending.iter().enumerate() {
+        if pr.req.ranks != (0..p) {
+            continue;
+        }
+        consumed[i] = true;
+        let name = pr.req.op.name();
+        match concat_groups.iter_mut().find(|(n, _)| n == name) {
+            Some((_, g)) => g.push(i),
+            None => concat_groups.push((name.to_string(), vec![i])),
+        }
+    }
+    for (_, group) in concat_groups {
+        let mut members: Vec<usize> = Vec::new();
+        let mut width = 0usize;
+        for i in group {
+            let m = pending[i].req.m();
+            if !members.is_empty()
+                && (members.len() >= policy.max_batch
+                    || width + m > policy.max_coalesced_elems)
+            {
+                plans.push(Plan::Concat { members: std::mem::take(&mut members) });
+                width = 0;
+            }
+            members.push(i);
+            width += m;
+        }
+        if !members.is_empty() {
+            plans.push(Plan::Concat { members });
+        }
+    }
+
+    // ── Sub-range liftable requests: segmented lanes per (op name, m). ──
+    let mut seg_groups: Vec<((String, usize), Vec<usize>)> = Vec::new();
+    for (i, pr) in pending.iter().enumerate() {
+        if consumed[i] || !pr.req.op.is_liftable() {
+            continue;
+        }
+        consumed[i] = true;
+        let key = (pr.req.op.name().to_string(), pr.req.m());
+        match seg_groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, g)) => g.push(i),
+            None => seg_groups.push((key, vec![i])),
+        }
+    }
+    for ((_, m), group) in seg_groups {
+        if group.len() == 1 {
+            plans.push(Plan::Solo { member: group[0] });
+            continue;
+        }
+        let max_lanes = if m == 0 {
+            policy.max_batch // zero-width lanes cost nothing
+        } else {
+            (policy.max_coalesced_elems / m).max(1)
+        };
+        // Greedy interval partitioning into open batches of lanes.
+        let mut lanes: Vec<Vec<usize>> = Vec::new();
+        let mut batch_count = 0usize;
+        let rounds_ref = &rounds_for;
+        let mut flush =
+            |lanes: &mut Vec<Vec<usize>>, batch_count: &mut usize, plans: &mut Vec<Plan>| {
+                if lanes.is_empty() {
+                    return;
+                }
+                // Benefit gate: the world-wide lifted scan pays the
+                // rounds of a p-rank collective at width lanes·m; keep
+                // the batch only when that strictly beats the members'
+                // summed solo cost (a lone leftover always fails this
+                // and runs solo).
+                let world_rounds = rounds_ref(p, lanes.len() * m);
+                let solo_sum: u32 = lanes
+                    .iter()
+                    .flatten()
+                    .map(|&j| rounds_ref(pending[j].req.span(), m))
+                    .sum();
+                if world_rounds >= solo_sum {
+                    for &j in lanes.iter().flatten() {
+                        plans.push(Plan::Solo { member: j });
+                    }
+                } else {
+                    plans.push(Plan::Segmented { lanes: std::mem::take(lanes), m });
+                }
+                lanes.clear();
+                *batch_count = 0;
+            };
+        for i in group {
+            let range = pending[i].req.ranks.clone();
+            if batch_count >= policy.max_batch {
+                flush(&mut lanes, &mut batch_count, &mut plans);
+            }
+            let lane_idx = lanes.iter().position(|lane| {
+                lane.iter().all(|&j| {
+                    let r = &pending[j].req.ranks;
+                    r.end <= range.start || range.end <= r.start
+                })
+            });
+            match lane_idx {
+                Some(li) => lanes[li].push(i),
+                None if lanes.len() < max_lanes => lanes.push(vec![i]),
+                None => {
+                    flush(&mut lanes, &mut batch_count, &mut plans);
+                    lanes.push(vec![i]);
+                }
+            }
+            batch_count += 1;
+        }
+        flush(&mut lanes, &mut batch_count, &mut plans);
+    }
+
+    // ── Everything else runs solo on its own sub-communicator. ──
+    for (i, done) in consumed.iter().enumerate() {
+        if !done {
+            plans.push(Plan::Solo { member: i });
+        }
+    }
+    plans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::ops;
+    use crate::svc::request::ReqOp;
+    use crate::util::bits::rounds_123;
+
+    /// All planning tests use the 123-doubling closed form (m-independent),
+    /// matching the engine's default algorithm.
+    fn plan(pending: &[PendingReq<i64>], p: usize, policy: &BatchPolicy) -> Vec<Plan> {
+        plan_batches(pending, p, policy, |n, _m| rounds_123(n))
+    }
+
+    fn pend(req: ScanRequest<i64>) -> PendingReq<i64> {
+        PendingReq {
+            req,
+            state: HandleState::new(),
+            metrics: Arc::new(ServiceMetrics::default()),
+        }
+    }
+
+    fn full(op: ReqOp<i64>, p: usize, m: usize) -> PendingReq<i64> {
+        pend(ScanRequest::full(op, vec![vec![1i64; m]; p]))
+    }
+
+    fn sub(op: ReqOp<i64>, start: usize, span: usize, m: usize) -> PendingReq<i64> {
+        pend(ScanRequest::over(op, start, vec![vec![1i64; m]; span]))
+    }
+
+    #[test]
+    fn same_op_full_world_requests_concat() {
+        let p = 8;
+        let pending = vec![
+            full(ReqOp::sum_i64(), p, 4),
+            full(ReqOp::sum_i64(), p, 2),
+            full(ReqOp::sum_i64(), p, 8),
+        ];
+        let plans = plan(&pending, p, &BatchPolicy::default());
+        assert_eq!(plans, vec![Plan::Concat { members: vec![0, 1, 2] }]);
+        assert_eq!(plans[0].batch_size(), 3);
+    }
+
+    #[test]
+    fn different_ops_do_not_mix() {
+        let p = 4;
+        let pending = vec![
+            full(ReqOp::sum_i64(), p, 1),
+            full(ReqOp::bxor_i64(), p, 1),
+            full(ReqOp::sum_i64(), p, 1),
+        ];
+        let plans = plan(&pending, p, &BatchPolicy::default());
+        assert_eq!(
+            plans,
+            vec![
+                Plan::Concat { members: vec![0, 2] },
+                Plan::Concat { members: vec![1] },
+            ]
+        );
+    }
+
+    #[test]
+    fn max_batch_splits_concat_groups() {
+        let p = 2;
+        let pending: Vec<_> = (0..5).map(|_| full(ReqOp::sum_i64(), p, 1)).collect();
+        let policy = BatchPolicy { max_batch: 2, ..Default::default() };
+        let plans = plan(&pending, p, &policy);
+        assert_eq!(
+            plans,
+            vec![
+                Plan::Concat { members: vec![0, 1] },
+                Plan::Concat { members: vec![2, 3] },
+                Plan::Concat { members: vec![4] },
+            ]
+        );
+    }
+
+    #[test]
+    fn elems_cap_splits_but_never_starves() {
+        let p = 2;
+        let pending = vec![
+            full(ReqOp::sum_i64(), p, 600),
+            full(ReqOp::sum_i64(), p, 600),
+            full(ReqOp::sum_i64(), p, 2000), // alone over the cap: still admitted
+        ];
+        let policy = BatchPolicy { max_coalesced_elems: 1000, ..Default::default() };
+        let plans = plan(&pending, p, &policy);
+        assert_eq!(
+            plans,
+            vec![
+                Plan::Concat { members: vec![0] },
+                Plan::Concat { members: vec![1] },
+                Plan::Concat { members: vec![2] },
+            ]
+        );
+    }
+
+    #[test]
+    fn disjoint_subranges_share_a_lane() {
+        let p = 8;
+        let pending = vec![
+            sub(ReqOp::sum_i64(), 0, 3, 2), // ranks 0..3
+            sub(ReqOp::sum_i64(), 5, 3, 2), // ranks 5..8 — disjoint
+            sub(ReqOp::sum_i64(), 1, 4, 2), // ranks 1..5 — overlaps both? (overlaps #0 only)
+        ];
+        let plans = plan(&pending, p, &BatchPolicy::default());
+        assert_eq!(
+            plans,
+            vec![Plan::Segmented { lanes: vec![vec![0, 1], vec![2]], m: 2 }]
+        );
+        assert_eq!(plans[0].batch_size(), 3);
+        assert_eq!(plans[0].members(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn segmented_groups_key_on_op_and_m() {
+        // p = 6 so the benefit gate passes: rounds(6) = 3 < 2 + 2, the
+        // solo cost of the two span-3 members.
+        let p = 6;
+        let pending = vec![
+            sub(ReqOp::sum_i64(), 0, 3, 3),
+            sub(ReqOp::sum_i64(), 4, 2, 5), // different m → different group (singleton → solo)
+            sub(ReqOp::bxor_i64(), 2, 2, 3), // different op → different group (singleton → solo)
+            sub(ReqOp::sum_i64(), 3, 3, 3), // coalesces with #0
+        ];
+        let plans = plan(&pending, p, &BatchPolicy::default());
+        assert_eq!(
+            plans,
+            vec![
+                Plan::Segmented { lanes: vec![vec![0, 3]], m: 3 },
+                Plan::Solo { member: 1 },
+                Plan::Solo { member: 2 },
+            ]
+        );
+    }
+
+    #[test]
+    fn losing_coalesce_falls_back_to_solo() {
+        // Two span-2 requests on a big world: the world-wide lifted scan
+        // would pay rounds(64) = 7 for work that costs 1 + 1 solo — the
+        // benefit gate must refuse the batch.
+        let p = 64;
+        let pending = vec![
+            sub(ReqOp::sum_i64(), 0, 2, 4),
+            sub(ReqOp::sum_i64(), 10, 2, 4),
+        ];
+        let plans = plan(&pending, p, &BatchPolicy::default());
+        assert_eq!(
+            plans,
+            vec![Plan::Solo { member: 0 }, Plan::Solo { member: 1 }]
+        );
+        // Enough members flip the economics: four span-2 requests at
+        // p = 5 cost 4 × rounds(2) = 4 solo vs rounds(5) = 3 batched —
+        // the gate keeps the segmented batch (two lanes of two).
+        let p = 5;
+        let pending: Vec<_> = [0usize, 2, 0, 2]
+            .iter()
+            .map(|&s| sub(ReqOp::sum_i64(), s, 2, 4))
+            .collect();
+        let plans = plan(&pending, p, &BatchPolicy::default());
+        assert_eq!(
+            plans,
+            vec![Plan::Segmented { lanes: vec![vec![0, 1], vec![2, 3]], m: 4 }]
+        );
+    }
+
+    #[test]
+    fn opaque_subrange_runs_solo() {
+        let p = 6;
+        let pending = vec![
+            sub(ReqOp::from_op(&ops::bxor()), 1, 3, 4),
+            full(ReqOp::from_op(&ops::bxor()), p, 4),
+        ];
+        let plans = plan(&pending, p, &BatchPolicy::default());
+        // The full-world opaque request still concats (with itself); the
+        // sub-range one cannot lift and runs solo.
+        assert_eq!(
+            plans,
+            vec![Plan::Concat { members: vec![1] }, Plan::Solo { member: 0 }]
+        );
+    }
+
+    #[test]
+    fn zero_m_requests_plan_cleanly() {
+        // p = 6 keeps the benefit gate open for the two span-3 members
+        // (rounds(6) = 3 < 2 + 2) even at zero width.
+        let p = 6;
+        let pending = vec![
+            full(ReqOp::sum_i64(), p, 0),
+            full(ReqOp::sum_i64(), p, 0),
+            sub(ReqOp::sum_i64(), 0, 3, 0),
+            sub(ReqOp::sum_i64(), 3, 3, 0),
+        ];
+        let plans = plan(&pending, p, &BatchPolicy::default());
+        assert_eq!(
+            plans,
+            vec![
+                Plan::Concat { members: vec![0, 1] },
+                Plan::Segmented { lanes: vec![vec![2, 3]], m: 0 },
+            ]
+        );
+    }
+}

@@ -1,0 +1,626 @@
+//! The scan engine: a multi-tenant front-end over one persistent
+//! [`World`].
+//!
+//! Clients [`submit`](ScanEngine::submit) independent exclusive-scan
+//! requests and get nonblocking [`ScanHandle`]s back. A dispatcher thread
+//! collects requests for a short window, plans them into as few
+//! collectives as possible ([`super::batcher`]), and executes each cycle's
+//! plans **concurrently in flight** on one world: every plan runs on its
+//! own communicator (a recycled ring of dup'd contexts), and within one
+//! executor job each rank works through the plans it is a member of in
+//! plan order — so rank A can already be deep in plan 3 while rank B still
+//! finishes plan 1, with the packed [`TagKey`](crate::mpi::TagKey)
+//! guaranteeing no cross-matching. Per-edge blocking receives bound the
+//! skew; the global plan order rules out cyclic waits.
+//!
+//! Context-ring discipline: context ids are 16-bit and never reallocated,
+//! so a long-lived service must recycle them. The ring holds [`CTX_RING`]
+//! dup'd communicator contexts; a context is reused only in a later wave,
+//! after the executor's completion latch has proven every message of its
+//! previous collective consumed. If a wave *fails* (e.g. a receive
+//! deadline under fault injection), stale tagged messages may linger —
+//! the engine then fails the wave's handles with a typed
+//! [`SvcError::Collective`] carrying the `{:#}` error chain, tears the
+//! tainted worlds down and rebuilds them (counted in
+//! [`MetricsSnapshot::worlds_rebuilt`]).
+//!
+//! Segmented plans run over `Seg<T>` elements, which is a different
+//! transport element type — they execute on a lazily created companion
+//! `World<Seg<T>>` with the same topology/chaos configuration (built only
+//! if a segmented batch ever forms).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coll::segmented::Seg;
+use crate::coll::{exscan_by_name, ScanAlgorithm};
+use crate::mpi::{ChaosConfig, Comm, Elem, OpRef, Topology, World, WorldConfig};
+use crate::trace::{RankTrace, TraceReport};
+use crate::util::Channel;
+
+use super::batcher::{plan_batches, BatchPolicy, PendingReq, Plan};
+use super::metrics::{MetricsSnapshot, ServiceMetrics};
+use super::request::{
+    BatchMode, HandleState, RequestStats, ScanHandle, ScanOutput, ScanRequest, SvcError,
+};
+
+/// Recycled communicator contexts (one per in-flight plan of a cycle
+/// wave). Plans beyond the ring run in a follow-up wave of the same cycle.
+pub const CTX_RING: usize = 32;
+
+/// Hard cap on requests collected into one cycle (backpressure bound).
+const COLLECT_CAP: usize = 4096;
+
+/// Engine construction parameters.
+#[derive(Clone)]
+pub struct EngineConfig {
+    pub topology: Topology,
+    /// Registered exscan algorithm the collectives run
+    /// (default `"123-doubling"` — the paper's round-optimal choice for
+    /// the small-m regime the service amortizes).
+    pub algo: String,
+    pub policy: BatchPolicy,
+    /// Seeded fault injection for the engine's worlds (differential
+    /// verification; `None` in production).
+    pub chaos: Option<ChaosConfig>,
+    /// Per-receive deadline override for the engine's worlds.
+    pub recv_timeout: Option<Duration>,
+}
+
+impl EngineConfig {
+    pub fn new(p: usize) -> Self {
+        EngineConfig {
+            topology: Topology::flat(p),
+            algo: "123-doubling".to_string(),
+            policy: BatchPolicy::default(),
+            chaos: None,
+            recv_timeout: None,
+        }
+    }
+
+    pub fn with_algo(mut self, name: &str) -> Self {
+        self.algo = name.to_string();
+        self
+    }
+
+    pub fn with_policy(mut self, policy: BatchPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_chaos(mut self, chaos: ChaosConfig) -> Self {
+        self.chaos = Some(chaos);
+        self
+    }
+
+    pub fn with_recv_timeout(mut self, t: Duration) -> Self {
+        self.recv_timeout = Some(t);
+        self
+    }
+
+    fn world_config(&self) -> WorldConfig {
+        let mut wc = WorldConfig::new(self.topology).with_trace(true);
+        if let Some(t) = self.recv_timeout {
+            wc = wc.with_recv_timeout(t);
+        }
+        if let Some(ch) = &self.chaos {
+            wc = wc.with_chaos(ch.clone());
+        }
+        wc
+    }
+}
+
+struct Shared<T: Elem> {
+    p: usize,
+    queue: Channel<PendingReq<T>>,
+    /// Bumped by [`ScanEngine::flush`]; the dispatcher cuts its batching
+    /// window short when it changes.
+    flush_gen: AtomicU64,
+    /// Shared with every [`PendingReq`] so the abandonment path
+    /// (`PendingReq::drop`) can account its failure.
+    metrics: Arc<ServiceMetrics>,
+}
+
+/// The multi-tenant scan service (see the module docs).
+pub struct ScanEngine<T: Elem> {
+    shared: Arc<Shared<T>>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl<T: Elem> ScanEngine<T> {
+    /// Build the engine and spawn its dispatcher (which owns the
+    /// persistent worlds). Fails on an unknown algorithm name.
+    pub fn new(cfg: EngineConfig) -> Result<Self, SvcError> {
+        let p = cfg.topology.size();
+        if p < 1 {
+            return Err(SvcError::Shape("world must have at least one rank".into()));
+        }
+        if exscan_by_name::<T>(&cfg.algo).is_none() {
+            return Err(SvcError::Shape(format!("unknown scan algorithm {:?}", cfg.algo)));
+        }
+        let shared = Arc::new(Shared {
+            p,
+            queue: Channel::new(),
+            flush_gen: AtomicU64::new(0),
+            metrics: Arc::new(ServiceMetrics::default()),
+        });
+        let dispatcher = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("scan-svc".into())
+                .spawn(move || dispatch_loop(cfg, shared))
+                .expect("failed to spawn scan-service dispatcher")
+        };
+        Ok(ScanEngine { shared, dispatcher: Some(dispatcher) })
+    }
+
+    /// World size the engine serves.
+    pub fn world_size(&self) -> usize {
+        self.shared.p
+    }
+
+    /// Submit one exclusive-scan request; returns immediately with a
+    /// nonblocking handle. Shape errors are reported synchronously.
+    pub fn submit(&self, req: ScanRequest<T>) -> Result<ScanHandle<T>, SvcError> {
+        req.validate(self.shared.p)?;
+        let state = HandleState::new();
+        let pending = PendingReq {
+            req,
+            state: Arc::clone(&state),
+            metrics: Arc::clone(&self.shared.metrics),
+        };
+        // Count the submission first: a push that fails (engine shut
+        // down) drops `pending`, whose `Drop` accounts the failure —
+        // keeping `submitted == completed + failed` on every path.
+        self.shared.metrics.on_submit();
+        if self.shared.queue.push(pending).is_err() {
+            return Err(SvcError::Shutdown);
+        }
+        Ok(ScanHandle { state })
+    }
+
+    /// Convenience: submit a full-world exscan (`inputs[r]` is rank r's
+    /// vector).
+    pub fn submit_exscan(
+        &self,
+        op: super::request::ReqOp<T>,
+        inputs: Vec<Vec<T>>,
+    ) -> Result<ScanHandle<T>, SvcError> {
+        self.submit(ScanRequest::full(op, inputs))
+    }
+
+    /// Cut the current batching window short: everything queued so far is
+    /// planned and executed now. (Tests and benchmarks use this to make
+    /// batch composition deterministic.)
+    pub fn flush(&self) {
+        self.shared.flush_gen.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// Current service counters.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+}
+
+impl<T: Elem> Drop for ScanEngine<T> {
+    /// Graceful shutdown: stop accepting, drain and execute everything
+    /// already queued, then join the dispatcher.
+    fn drop(&mut self) {
+        self.shared.queue.close();
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ───────────────────────── dispatcher internals ─────────────────────────
+
+/// One plan readied for execution: its communicator, operator and
+/// per-communicator-rank prepared inputs.
+struct ExecPlan<E: Elem> {
+    plan: Plan,
+    comm: Comm,
+    op: OpRef<E>,
+    inputs: Vec<Vec<E>>,
+}
+
+/// Dispatcher entry point: contains panics. The cycle loop itself never
+/// intentionally panics, but an internal invariant slip must not leave
+/// clients hanging — on unwind, the queue is closed (so `submit` fails
+/// fast with [`SvcError::Shutdown`]) and every still-queued request is
+/// dropped, which resolves and accounts it typed via `PendingReq::drop`;
+/// requests captured inside the panicked cycle were already resolved the
+/// same way during unwinding.
+fn dispatch_loop<T: Elem>(cfg: EngineConfig, shared: Arc<Shared<T>>) {
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        dispatch_cycles(cfg, &shared);
+    }));
+    if outcome.is_err() {
+        shared.queue.close();
+        while let Some(pr) = shared.queue.try_pop() {
+            drop(pr); // Drop fulfills the handle and counts the failure
+        }
+    }
+}
+
+fn dispatch_cycles<T: Elem>(cfg: EngineConfig, shared: &Arc<Shared<T>>) {
+    let p = shared.p;
+    let world_cfg = cfg.world_config();
+    let mut world: World<T> = World::new(world_cfg.clone());
+    let mut seg_world: Option<World<Seg<T>>> = None;
+    let ring: Vec<u16> = {
+        let wc = world.comm_world();
+        (0..CTX_RING).map(|_| world.dup_comm(&wc).ctx()).collect()
+    };
+    let algo_t: Box<dyn ScanAlgorithm<T>> =
+        exscan_by_name(&cfg.algo).expect("validated in ScanEngine::new");
+    let algo_seg: Box<dyn ScanAlgorithm<Seg<T>>> =
+        exscan_by_name(&cfg.algo).expect("validated in ScanEngine::new");
+
+    // Flush tracking is level-based against the generation at engine
+    // construction (0): any flush not yet consumed by a cycle cuts the
+    // next window short, no matter when it lands relative to the
+    // dispatcher's own progress — a client that submits K requests and
+    // flushes gets them executed now even if the flush raced ahead of
+    // this thread's startup or a previous cycle's teardown.
+    let mut seen_gen: u64 = 0;
+    loop {
+        let Some(first) = shared.queue.pop_wait() else { break };
+        // ── Collect the cycle: batching window from the first arrival. ──
+        let mut collected: Vec<PendingReq<T>> = vec![first];
+        let deadline = Instant::now() + cfg.policy.window;
+        loop {
+            while collected.len() < COLLECT_CAP {
+                match shared.queue.try_pop() {
+                    Some(x) => collected.push(x),
+                    None => break,
+                }
+            }
+            let gen_now = shared.flush_gen.load(Ordering::SeqCst);
+            if gen_now != seen_gen || shared.queue.is_closed() {
+                // Everything enqueued before the flush (or close)
+                // happened-before the generation bump we just observed,
+                // so one final drain collects the complete flush set.
+                while collected.len() < COLLECT_CAP {
+                    match shared.queue.try_pop() {
+                        Some(x) => collected.push(x),
+                        None => break,
+                    }
+                }
+                // Consume the flush only if the drain actually emptied
+                // the queue: when the collection cap cut it short, the
+                // leftover requests still belong to this flush and the
+                // next cycle must start immediately, not wait a window.
+                if shared.queue.is_empty() {
+                    seen_gen = gen_now;
+                }
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline || collected.len() >= COLLECT_CAP {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(50).min(deadline - now));
+        }
+
+        // ── Plan, then execute in waves of ≤ CTX_RING concurrent plans. ──
+        let plans = plan_batches(&collected, p, &cfg.policy, |n, m| {
+            algo_t.predicted_rounds_m(n, m)
+        });
+        let mut pending: Vec<Option<PendingReq<T>>> =
+            collected.into_iter().map(Some).collect();
+        for wave in plans.chunks(CTX_RING) {
+            let mut t_plans: Vec<ExecPlan<T>> = Vec::new();
+            let mut s_plans: Vec<ExecPlan<Seg<T>>> = Vec::new();
+            for (slot, plan) in wave.iter().enumerate() {
+                let ctx = ring[slot];
+                match plan {
+                    Plan::Concat { members } => {
+                        let op = req_of(&pending, members[0]).op.fresh();
+                        let comm = Comm::new(ctx, (0..p).collect());
+                        let inputs: Vec<Vec<T>> = (0..p)
+                            .map(|r| {
+                                let mut v = Vec::new();
+                                for &mi in members {
+                                    v.extend_from_slice(&req_of(&pending, mi).inputs[r]);
+                                }
+                                v
+                            })
+                            .collect();
+                        t_plans.push(ExecPlan { plan: plan.clone(), comm, op, inputs });
+                    }
+                    Plan::Solo { member } => {
+                        let req = req_of(&pending, *member);
+                        let op = req.op.fresh();
+                        let comm = Comm::new(ctx, req.ranks.clone().collect());
+                        let inputs = req.inputs.clone();
+                        t_plans.push(ExecPlan { plan: plan.clone(), comm, op, inputs });
+                    }
+                    Plan::Segmented { lanes, m } => {
+                        let op = req_of(&pending, lanes[0][0])
+                            .op
+                            .lifted()
+                            .expect("segmented plans require a liftable op");
+                        let comm = Comm::new(ctx, (0..p).collect());
+                        let inputs = segmented_inputs(&pending, lanes, *m, p);
+                        s_plans.push(ExecPlan { plan: plan.clone(), comm, op, inputs });
+                    }
+                }
+            }
+
+            // Value-typed plans first, then segmented — two jobs at most;
+            // within each job every plan is simultaneously in flight.
+            let mut wave_failed: Option<String> = None;
+            if !t_plans.is_empty() {
+                match run_wave(&world, algo_t.as_ref(), &t_plans) {
+                    Ok((outs, report)) => scatter_t(
+                        &t_plans,
+                        &outs,
+                        &report,
+                        &mut pending,
+                        &shared,
+                        algo_t.as_ref(),
+                    ),
+                    Err(e) => wave_failed = Some(e),
+                }
+            }
+            if wave_failed.is_none() && !s_plans.is_empty() {
+                let seg = seg_world.get_or_insert_with(|| World::new(world_cfg.clone()));
+                match run_wave(seg, algo_seg.as_ref(), &s_plans) {
+                    Ok((outs, report)) => scatter_seg(
+                        &s_plans,
+                        &outs,
+                        &report,
+                        &mut pending,
+                        &shared,
+                        algo_t.as_ref(),
+                    ),
+                    Err(e) => wave_failed = Some(e),
+                }
+            }
+            if let Some(detail) = wave_failed {
+                // Tainted transport state: fail every still-unconsumed
+                // handle of this wave's plans, then rebuild the worlds.
+                let mut failed = 0u64;
+                for plan in wave {
+                    for mi in plan.members() {
+                        if let Some(pr) = pending[mi].take() {
+                            pr.state.fulfill(Err(SvcError::Collective(detail.clone())));
+                            failed += 1;
+                        }
+                    }
+                }
+                shared.metrics.on_failed(failed);
+                shared.metrics.on_world_rebuilt();
+                world = World::new(world_cfg.clone());
+                seg_world = None;
+            }
+        }
+        debug_assert!(
+            pending.iter().all(|o| o.is_none()),
+            "every request of a cycle must be fulfilled"
+        );
+    }
+}
+
+fn req_of<'a, T: Elem>(
+    pending: &'a [Option<PendingReq<T>>],
+    i: usize,
+) -> &'a ScanRequest<T> {
+    &pending[i].as_ref().expect("planned request already consumed").req
+}
+
+/// Build the per-world-rank `Seg` lanes of one segmented plan
+/// (lane-major layout: element `l·m + j` is lane `l`, offset `j`).
+fn segmented_inputs<T: Elem>(
+    pending: &[Option<PendingReq<T>>],
+    lanes: &[Vec<usize>],
+    m: usize,
+    p: usize,
+) -> Vec<Vec<Seg<T>>> {
+    (0..p)
+        .map(|r| {
+            let mut v = Vec::with_capacity(lanes.len() * m);
+            for lane in lanes {
+                // The request of this lane covering rank r, if any.
+                let req = lane
+                    .iter()
+                    .map(|&mi| req_of(pending, mi))
+                    .find(|req| req.ranks.contains(&r));
+                match req {
+                    Some(req) => {
+                        let local = r - req.ranks.start;
+                        for j in 0..m {
+                            v.push(Seg::new(r == req.ranks.start, req.inputs[local][j]));
+                        }
+                    }
+                    None => {
+                        // Gap rank: a fresh one-element segment of filler,
+                        // so nothing accumulates across it (the next
+                        // request's start flag blocks leakage anyway; this
+                        // keeps gaps inert by construction).
+                        for _ in 0..m {
+                            v.push(Seg::start(T::filler()));
+                        }
+                    }
+                }
+            }
+            v
+        })
+        .collect()
+}
+
+/// Execute one wave's plans of a single element type as one executor job:
+/// each rank runs, in plan order, every plan it is a member of, inside a
+/// `with_comm` scope. Returns per-rank per-plan outputs plus the job's
+/// merged trace.
+#[allow(clippy::type_complexity)]
+fn run_wave<E: Elem>(
+    world: &World<E>,
+    algo: &dyn ScanAlgorithm<E>,
+    plans: &[ExecPlan<E>],
+) -> Result<(Vec<Vec<Option<Vec<E>>>>, TraceReport), String> {
+    let per_rank = world
+        .run(|ctx| {
+            let w = ctx.rank();
+            let mut outs: Vec<Option<Vec<E>>> = (0..plans.len()).map(|_| None).collect();
+            for (pi, ep) in plans.iter().enumerate() {
+                let Some(cr) = ep.comm.rank_of(w) else { continue };
+                let input = &ep.inputs[cr];
+                let mut output = vec![E::filler(); input.len()];
+                ctx.with_comm(&ep.comm, |sub| algo.run(sub, input, &mut output, &ep.op))?;
+                outs[pi] = Some(output);
+            }
+            Ok((outs, ctx.take_trace()))
+        })
+        .map_err(|e| format!("{e:#}"))?;
+
+    let mut traces: Vec<RankTrace> = Vec::with_capacity(per_rank.len());
+    let mut outs: Vec<Vec<Option<Vec<E>>>> = Vec::with_capacity(per_rank.len());
+    for (rank, (o, t)) in per_rank.into_iter().enumerate() {
+        outs.push(o);
+        traces.push(t.unwrap_or_else(|| RankTrace::new(rank)));
+    }
+    Ok((outs, TraceReport::new(traces)))
+}
+
+/// Closed-form rounds the plan's requests would pay executed one
+/// collective each (each on a communicator of its own span, at its own
+/// vector length — m-aware so the chunked/pipelined schedules are costed
+/// by what their traces measure).
+fn solo_equiv_rounds<T: Elem>(
+    pending: &[Option<PendingReq<T>>],
+    members: &[usize],
+    algo: &dyn ScanAlgorithm<T>,
+) -> u64 {
+    members
+        .iter()
+        .map(|&mi| {
+            let req = req_of(pending, mi);
+            algo.predicted_rounds_m(req.span(), req.m()) as u64
+        })
+        .sum()
+}
+
+/// Fulfill the handles of a value-typed wave: slice each request's output
+/// back out of its plan's coalesced result.
+fn scatter_t<T: Elem>(
+    plans: &[ExecPlan<T>],
+    outs: &[Vec<Option<Vec<T>>>],
+    report: &TraceReport,
+    pending: &mut [Option<PendingReq<T>>],
+    shared: &Shared<T>,
+    algo: &dyn ScanAlgorithm<T>,
+) {
+    for (pi, ep) in plans.iter().enumerate() {
+        let rounds = report.for_ctx(ep.comm.ctx(), ep.comm.ranks()).total_rounds();
+        let members = ep.plan.members();
+        let k = ep.plan.batch_size();
+        let coalesced_m = ep.inputs.iter().map(|v| v.len()).max().unwrap_or(0);
+        let mode = match &ep.plan {
+            Plan::Solo { .. } => BatchMode::Solo,
+            Plan::Concat { .. } if k == 1 => BatchMode::Solo,
+            Plan::Concat { .. } => BatchMode::Concat,
+            Plan::Segmented { .. } => unreachable!("segmented plans are Seg-typed"),
+        };
+        let solo_equiv = solo_equiv_rounds(pending, &members, algo);
+        let stats = RequestStats {
+            mode,
+            batch_size: k,
+            coalesced_m,
+            rounds,
+            amortized_rounds: rounds as f64 / k as f64,
+        };
+        match &ep.plan {
+            Plan::Concat { members } => {
+                let mut offset = 0usize;
+                for &mi in members {
+                    let pr = pending[mi].take().expect("concat member pending");
+                    let m = pr.req.m();
+                    let outputs: Vec<Vec<T>> = (0..shared.p)
+                        .map(|wr| {
+                            outs[wr][pi].as_ref().map_or_else(
+                                || vec![T::filler(); m],
+                                |o| o[offset..offset + m].to_vec(),
+                            )
+                        })
+                        .collect();
+                    offset += m;
+                    pr.state.fulfill(Ok(ScanOutput { outputs, stats }));
+                }
+            }
+            Plan::Solo { member } => {
+                let pr = pending[*member].take().expect("solo member pending");
+                let m = pr.req.m();
+                let outputs: Vec<Vec<T>> = ep
+                    .comm
+                    .ranks()
+                    .iter()
+                    .map(|&wr| {
+                        outs[wr][pi].clone().unwrap_or_else(|| vec![T::filler(); m])
+                    })
+                    .collect();
+                pr.state.fulfill(Ok(ScanOutput { outputs, stats }));
+            }
+            Plan::Segmented { .. } => unreachable!(),
+        }
+        shared.metrics.on_batch(mode, k, coalesced_m, rounds, solo_equiv);
+    }
+}
+
+/// Fulfill the handles of a segmented wave: project each request's lane
+/// back to plain values (`val` field), with the segment-start member's
+/// output left as filler (undefined, per `MPI_Exscan`).
+fn scatter_seg<T: Elem>(
+    plans: &[ExecPlan<Seg<T>>],
+    outs: &[Vec<Option<Vec<Seg<T>>>>],
+    report: &TraceReport,
+    pending: &mut [Option<PendingReq<T>>],
+    shared: &Shared<T>,
+    algo: &dyn ScanAlgorithm<T>,
+) {
+    for (pi, ep) in plans.iter().enumerate() {
+        let Plan::Segmented { lanes, m } = &ep.plan else { unreachable!() };
+        let m = *m;
+        let rounds = report.for_ctx(ep.comm.ctx(), ep.comm.ranks()).total_rounds();
+        let members = ep.plan.members();
+        let k = ep.plan.batch_size();
+        let coalesced_m = lanes.len() * m;
+        let solo_equiv = solo_equiv_rounds(pending, &members, algo);
+        let stats = RequestStats {
+            mode: BatchMode::Segmented,
+            batch_size: k,
+            coalesced_m,
+            rounds,
+            amortized_rounds: rounds as f64 / k as f64,
+        };
+        for (l, lane) in lanes.iter().enumerate() {
+            for &mi in lane {
+                let pr = pending[mi].take().expect("segmented member pending");
+                let start = pr.req.ranks.start;
+                let outputs: Vec<Vec<T>> = pr
+                    .req
+                    .ranks
+                    .clone()
+                    .map(|wr| {
+                        if wr == start {
+                            vec![T::filler(); m] // undefined on the first member
+                        } else {
+                            (0..m)
+                                .map(|j| {
+                                    outs[wr][pi]
+                                        .as_ref()
+                                        .map(|o| o[l * m + j].val)
+                                        .unwrap_or_else(T::filler)
+                                })
+                                .collect()
+                        }
+                    })
+                    .collect();
+                pr.state.fulfill(Ok(ScanOutput { outputs, stats }));
+            }
+        }
+        shared.metrics.on_batch(BatchMode::Segmented, k, coalesced_m, rounds, solo_equiv);
+    }
+}

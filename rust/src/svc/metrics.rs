@@ -1,0 +1,185 @@
+//! Service-side accounting: how much the batcher actually amortizes.
+//!
+//! The paper's small-m regime is round-dominated, so the service's
+//! figure of merit is **rounds per request**: a batch of K coalesced
+//! requests pays one collective's rounds for all K. The counters here
+//! track that ratio (plus enough operational detail to debug a
+//! misbehaving deployment: batch-size distribution, failures, world
+//! rebuilds). All counters are relaxed atomics — the dispatcher is the
+//! only writer on the hot path; readers snapshot.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::request::BatchMode;
+
+/// Power-of-two batch-size histogram buckets: 1, 2, 3–4, 5–8, 9–16,
+/// 17–32, 33–64, 65+.
+pub const BATCH_HIST_BUCKETS: usize = 8;
+
+fn bucket(k: usize) -> usize {
+    match k {
+        0 | 1 => 0,
+        2 => 1,
+        3..=4 => 2,
+        5..=8 => 3,
+        9..=16 => 4,
+        17..=32 => 5,
+        33..=64 => 6,
+        _ => 7,
+    }
+}
+
+/// Cumulative service counters (see the module docs).
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    batches: AtomicU64,
+    solo_batches: AtomicU64,
+    concat_batches: AtomicU64,
+    segmented_batches: AtomicU64,
+    /// Per-rank elements the coalesced collectives carried, summed.
+    coalesced_elems: AtomicU64,
+    /// Communication rounds actually paid by executed collectives.
+    rounds_paid: AtomicU64,
+    /// Rounds the same requests would have paid run one collective each
+    /// (closed-form `predicted_rounds` over each request's span).
+    rounds_solo_equiv: AtomicU64,
+    worlds_rebuilt: AtomicU64,
+    batch_hist: [AtomicU64; BATCH_HIST_BUCKETS],
+}
+
+impl ServiceMetrics {
+    pub(crate) fn on_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn on_failed(&self, n: u64) {
+        self.failed.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub(crate) fn on_world_rebuilt(&self) {
+        self.worlds_rebuilt.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one executed collective: `k` requests coalesced,
+    /// `coalesced_m` elements per rank, `rounds` measured from its trace,
+    /// `solo_equiv` the closed-form rounds its requests would have paid
+    /// individually.
+    pub(crate) fn on_batch(
+        &self,
+        mode: BatchMode,
+        k: usize,
+        coalesced_m: usize,
+        rounds: u32,
+        solo_equiv: u64,
+    ) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        match mode {
+            BatchMode::Solo => &self.solo_batches,
+            BatchMode::Concat => &self.concat_batches,
+            BatchMode::Segmented => &self.segmented_batches,
+        }
+        .fetch_add(1, Ordering::Relaxed);
+        self.completed.fetch_add(k as u64, Ordering::Relaxed);
+        self.coalesced_elems.fetch_add(coalesced_m as u64, Ordering::Relaxed);
+        self.rounds_paid.fetch_add(rounds as u64, Ordering::Relaxed);
+        self.rounds_solo_equiv.fetch_add(solo_equiv, Ordering::Relaxed);
+        self.batch_hist[bucket(k)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let completed = self.completed.load(Ordering::Relaxed);
+        let rounds_paid = self.rounds_paid.load(Ordering::Relaxed);
+        let rounds_solo = self.rounds_solo_equiv.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed,
+            failed: self.failed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            solo_batches: self.solo_batches.load(Ordering::Relaxed),
+            concat_batches: self.concat_batches.load(Ordering::Relaxed),
+            segmented_batches: self.segmented_batches.load(Ordering::Relaxed),
+            coalesced_elems: self.coalesced_elems.load(Ordering::Relaxed),
+            rounds_paid,
+            rounds_solo_equiv: rounds_solo,
+            worlds_rebuilt: self.worlds_rebuilt.load(Ordering::Relaxed),
+            batch_hist: std::array::from_fn(|i| self.batch_hist[i].load(Ordering::Relaxed)),
+            amortized_rounds_per_request: if completed == 0 {
+                0.0
+            } else {
+                rounds_paid as f64 / completed as f64
+            },
+            round_amortization: if rounds_paid == 0 {
+                1.0
+            } else {
+                rounds_solo as f64 / rounds_paid as f64
+            },
+        }
+    }
+}
+
+/// Point-in-time view of [`ServiceMetrics`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub solo_batches: u64,
+    pub concat_batches: u64,
+    pub segmented_batches: u64,
+    pub coalesced_elems: u64,
+    pub rounds_paid: u64,
+    pub rounds_solo_equiv: u64,
+    pub worlds_rebuilt: u64,
+    pub batch_hist: [u64; BATCH_HIST_BUCKETS],
+    /// `rounds_paid / completed` — the number batching shrinks.
+    pub amortized_rounds_per_request: f64,
+    /// `rounds_solo_equiv / rounds_paid` — ≥ 1 when coalescing wins.
+    pub round_amortization: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_accounting_amortizes() {
+        let m = ServiceMetrics::default();
+        for _ in 0..8 {
+            m.on_submit();
+        }
+        // One coalesced batch of 8 requests paying 4 rounds, where solo
+        // execution would have paid 8 × 4.
+        m.on_batch(BatchMode::Concat, 8, 64, 4, 32);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 8);
+        assert_eq!(s.completed, 8);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.concat_batches, 1);
+        assert_eq!(s.rounds_paid, 4);
+        assert!((s.amortized_rounds_per_request - 0.5).abs() < 1e-12);
+        assert!((s.round_amortization - 8.0).abs() < 1e-12);
+        assert_eq!(s.batch_hist[3], 1, "8 lands in the 5–8 bucket");
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        assert_eq!(bucket(1), 0);
+        assert_eq!(bucket(2), 1);
+        assert_eq!(bucket(4), 2);
+        assert_eq!(bucket(8), 3);
+        assert_eq!(bucket(16), 4);
+        assert_eq!(bucket(33), 6);
+        assert_eq!(bucket(1000), 7);
+    }
+
+    #[test]
+    fn empty_snapshot_is_neutral() {
+        let s = ServiceMetrics::default().snapshot();
+        assert_eq!(s.amortized_rounds_per_request, 0.0);
+        assert_eq!(s.round_amortization, 1.0);
+    }
+}

@@ -1,0 +1,44 @@
+//! The multi-tenant scan service: nonblocking requests, communicator
+//! isolation, and small-m batch coalescing.
+//!
+//! The paper's regime is small vectors, where latency is dominated by
+//! communication **rounds** — so the production win for serving many
+//! independent exscan requests is amortization: K coalesced requests pay
+//! the `⌈log₂(p−1) + log₂(4/3)⌉` rounds of one collective *once*. This
+//! subsystem supplies the three layers that turn the repo's collectives
+//! into that service:
+//!
+//! * [`request`] — [`ScanRequest`]/[`ReqOp`] (operator with optional
+//!   segmented lift) and the `MPI_Request`-flavoured [`ScanHandle`]
+//!   (`test`/`wait`), plus the typed [`SvcError`].
+//! * [`batcher`] — pure planning: full-world requests sharing an operator
+//!   lane-concatenate; disjoint sub-range requests with a liftable
+//!   operator pack into segmented lanes of one world-wide scan
+//!   (Blelloch's operator lifting, [`crate::coll::segmented`]); the rest
+//!   run solo on sub-communicators.
+//! * [`engine`] — the dispatcher: one persistent [`World`] per element
+//!   type, a recycled ring of communicator contexts, every plan of a
+//!   cycle concurrently in flight, results scattered back to handles.
+//! * [`metrics`] — rounds-per-request accounting (the number batching
+//!   exists to shrink) and operational counters.
+//!
+//! Differential verification: the service path is covered by the chaos
+//! harness — `exscan serve --smoke --chaos-seed N` and
+//! `tests/service.rs` check service results under seeded fault injection
+//! against each request executed serially on a clean world, and
+//! [`crate::coll::validate::chaos_concurrent_comms`] pins the
+//! communicator layer itself (outputs *and* per-context traces).
+//!
+//! [`World`]: crate::mpi::World
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+
+pub use batcher::BatchPolicy;
+pub use engine::{EngineConfig, ScanEngine, CTX_RING};
+pub use metrics::{MetricsSnapshot, ServiceMetrics};
+pub use request::{
+    BatchMode, ReqOp, RequestStats, ScanHandle, ScanOutput, ScanRequest, SvcError,
+};

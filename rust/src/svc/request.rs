@@ -1,0 +1,420 @@
+//! Client-facing request, operator and handle types of the scan service.
+//!
+//! A [`ScanRequest`] is one logical `MPI_Exscan` over a contiguous range of
+//! world ranks (the full world by default): one input vector per member
+//! rank, one operator. [`submit`](super::ScanEngine::submit) returns a
+//! nonblocking [`ScanHandle`] with MPI_Request-style `test`/`wait`
+//! semantics; the engine fulfills it after the request's batch completes.
+//!
+//! [`ReqOp`] wraps the operator two ways: the base element-wise combine
+//! (enough for lane-concatenation coalescing, which works for *any*
+//! associative ⊕), and optionally the scalar combine function, which lets
+//! the batcher lift it into a segmented operator
+//! ([`coll::segmented::lift`](crate::coll::segmented::lift)) and pack
+//! disjoint sub-range requests into shared lanes of one world-wide scan.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coll::segmented::{lift, Seg};
+use crate::mpi::{CombineOp, Elem, OpRef};
+
+// ───────────────────────────── errors ─────────────────────────────
+
+/// Typed service error. Implements [`std::error::Error`], so it converts
+/// into `anyhow::Error` via `?` and participates in `{:#}` context chains
+/// (see the engine's worker-side error paths).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SvcError {
+    /// The request's shape is invalid (rank range, input lengths…).
+    Shape(String),
+    /// The engine is shutting down and can no longer accept or complete
+    /// requests.
+    Shutdown,
+    /// The collective executing this request's batch failed; carries the
+    /// rendered `{:#}` chain of the underlying transport error.
+    Collective(String),
+    /// `wait_timeout` deadline expired before the result arrived.
+    WaitTimeout,
+}
+
+impl std::fmt::Display for SvcError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SvcError::Shape(d) => write!(f, "invalid scan request: {d}"),
+            SvcError::Shutdown => write!(f, "scan engine has shut down"),
+            SvcError::Collective(d) => write!(f, "batch collective failed: {d}"),
+            SvcError::WaitTimeout => write!(f, "timed out waiting for scan result"),
+        }
+    }
+}
+
+impl std::error::Error for SvcError {}
+
+// ───────────────────────────── operator ─────────────────────────────
+
+/// Element-wise combine defined by a scalar closure (the service-side
+/// counterpart of [`FnOp`](crate::mpi::FnOp), which needs a `'static`
+/// name). Marked non-commutative: nothing here exploits commutativity,
+/// and claiming it for an unknown user closure would be wrong.
+struct ScalarOp<T: Elem> {
+    name: String,
+    f: Arc<dyn Fn(T, T) -> T + Send + Sync>,
+}
+
+impl<T: Elem> CombineOp<T> for ScalarOp<T> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn combine(&self, input: &[T], inout: &mut [T]) {
+        for (o, &i) in inout.iter_mut().zip(input) {
+            *o = (self.f)(i, *o); // `input` is the earlier operand
+        }
+    }
+
+    fn commutative(&self) -> bool {
+        false
+    }
+}
+
+/// The operator of a [`ScanRequest`]: a shared combine plus, when known,
+/// the scalar function it is built from. Requests with equal
+/// [`name`](Self::name) are assumed to denote the *same* operator — the
+/// batcher coalesces on that key.
+#[derive(Clone)]
+pub struct ReqOp<T: Elem> {
+    name: String,
+    base: Arc<dyn CombineOp<T>>,
+    scalar: Option<Arc<dyn Fn(T, T) -> T + Send + Sync>>,
+}
+
+impl<T: Elem> ReqOp<T> {
+    /// Wrap an existing operator (concat coalescing only — the scalar is
+    /// unknown, so segmented lifting is unavailable).
+    pub fn from_op(op: &OpRef<T>) -> Self {
+        ReqOp { name: op.name().to_string(), base: op.shared_op(), scalar: None }
+    }
+
+    /// Build from a scalar combine function. Liftable: sub-range requests
+    /// under this operator can be packed into segmented lanes.
+    pub fn liftable(name: &str, f: impl Fn(T, T) -> T + Send + Sync + 'static) -> Self {
+        let f: Arc<dyn Fn(T, T) -> T + Send + Sync> = Arc::new(f);
+        ReqOp {
+            name: name.to_string(),
+            base: Arc::new(ScalarOp { name: name.to_string(), f: Arc::clone(&f) }),
+            scalar: Some(f),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn is_liftable(&self) -> bool {
+        self.scalar.is_some()
+    }
+
+    /// A fresh [`OpRef`] over the shared combine (its own counters).
+    pub(crate) fn fresh(&self) -> OpRef<T> {
+        OpRef::new(Arc::clone(&self.base))
+    }
+
+    /// The segmented lift of the scalar combine, if known.
+    pub(crate) fn lifted(&self) -> Option<OpRef<Seg<T>>> {
+        self.scalar.as_ref().map(|f| {
+            let f = Arc::clone(f);
+            lift(&self.name, move |a, b| f(a, b))
+        })
+    }
+}
+
+impl ReqOp<i64> {
+    /// Wrapping `MPI_SUM` over i64 (liftable).
+    pub fn sum_i64() -> Self {
+        ReqOp::liftable("sum_i64", |a: i64, b: i64| a.wrapping_add(b))
+    }
+
+    /// `MPI_BXOR` over i64 (liftable).
+    pub fn bxor_i64() -> Self {
+        ReqOp::liftable("bxor_i64", |a: i64, b: i64| a ^ b)
+    }
+
+    /// `MPI_MAX` over i64 (liftable).
+    pub fn max_i64() -> Self {
+        ReqOp::liftable("max_i64", |a: i64, b: i64| a.max(b))
+    }
+}
+
+// ───────────────────────────── request ─────────────────────────────
+
+/// One logical exclusive scan: per-member input vectors over a contiguous
+/// world-rank range. Output on the range's first member is undefined, per
+/// `MPI_Exscan` (the service returns it as filler).
+pub struct ScanRequest<T: Elem> {
+    pub op: ReqOp<T>,
+    /// One input vector per member rank, all the same length.
+    pub inputs: Vec<Vec<T>>,
+    /// The contiguous world-rank range this scan spans;
+    /// `inputs.len() == ranks.len()`.
+    pub ranks: std::ops::Range<usize>,
+}
+
+impl<T: Elem> ScanRequest<T> {
+    /// A scan over the full world (`inputs.len()` ranks).
+    pub fn full(op: ReqOp<T>, inputs: Vec<Vec<T>>) -> Self {
+        let p = inputs.len();
+        ScanRequest { op, inputs, ranks: 0..p }
+    }
+
+    /// A scan over world ranks `start..start + inputs.len()`.
+    pub fn over(op: ReqOp<T>, start: usize, inputs: Vec<Vec<T>>) -> Self {
+        let end = start + inputs.len();
+        ScanRequest { op, inputs, ranks: start..end }
+    }
+
+    /// Vector length per rank.
+    pub fn m(&self) -> usize {
+        self.inputs.first().map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Number of member ranks.
+    pub fn span(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Validate against a world of size `p`.
+    pub(crate) fn validate(&self, p: usize) -> Result<(), SvcError> {
+        if self.ranks.start >= self.ranks.end || self.ranks.end > p {
+            return Err(SvcError::Shape(format!(
+                "rank range {:?} invalid for world size {p}",
+                self.ranks
+            )));
+        }
+        if self.inputs.len() != self.ranks.len() {
+            return Err(SvcError::Shape(format!(
+                "{} input vectors for {} member ranks",
+                self.inputs.len(),
+                self.ranks.len()
+            )));
+        }
+        let m = self.m();
+        if self.inputs.iter().any(|v| v.len() != m) {
+            return Err(SvcError::Shape("member input lengths differ".into()));
+        }
+        Ok(())
+    }
+}
+
+// ───────────────────────────── handle ─────────────────────────────
+
+/// How a request was executed (recorded in its [`RequestStats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchMode {
+    /// Ran as its own collective (no coalescing partner).
+    Solo,
+    /// Lane-concatenated with other full-world requests sharing its op.
+    Concat,
+    /// Packed into a segmented lane of a world-wide lifted scan.
+    Segmented,
+}
+
+/// Per-request accounting attached to a completed result.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RequestStats {
+    pub mode: BatchMode,
+    /// Requests that shared this request's collective (≥ 1, incl. itself).
+    pub batch_size: usize,
+    /// Elements per rank the coalesced collective carried.
+    pub coalesced_m: usize,
+    /// Communication rounds the collective paid — measured from the
+    /// batch's [`TraceReport`](crate::trace::TraceReport).
+    pub rounds: u32,
+    /// `rounds / batch_size`: the amortized per-request round cost, the
+    /// number the batching subsystem exists to shrink.
+    pub amortized_rounds: f64,
+}
+
+/// A completed request: per-member output vectors (index 0 = the range's
+/// first rank; its content is undefined/filler, per `MPI_Exscan`) plus the
+/// batch accounting.
+#[derive(Debug)]
+pub struct ScanOutput<T: Elem> {
+    pub outputs: Vec<Vec<T>>,
+    pub stats: RequestStats,
+}
+
+pub(crate) struct HandleState<T: Elem> {
+    slot: Mutex<Option<Result<ScanOutput<T>, SvcError>>>,
+    cv: Condvar,
+}
+
+impl<T: Elem> HandleState<T> {
+    pub(crate) fn new() -> Arc<Self> {
+        Arc::new(HandleState { slot: Mutex::new(None), cv: Condvar::new() })
+    }
+
+    pub(crate) fn fulfill(&self, result: Result<ScanOutput<T>, SvcError>) {
+        let mut slot = self.slot.lock().unwrap();
+        debug_assert!(slot.is_none(), "a handle must be fulfilled exactly once");
+        *slot = Some(result);
+        drop(slot);
+        self.cv.notify_all();
+    }
+
+    /// Fulfill only if nothing has been delivered yet — the last-resort
+    /// path ([`PendingReq`](super::batcher::PendingReq)'s `Drop`) that
+    /// turns an abandoned request into a typed error instead of a hung
+    /// `wait`. Returns whether this call delivered (so the caller can
+    /// account the failure).
+    pub(crate) fn fulfill_if_empty(&self, result: Result<ScanOutput<T>, SvcError>) -> bool {
+        let mut slot = self.slot.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(result);
+            drop(slot);
+            self.cv.notify_all();
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Nonblocking completion handle for a submitted request
+/// (`MPI_Request`-flavoured): [`test`](Self::test) polls,
+/// [`wait`](Self::wait) blocks and consumes.
+pub struct ScanHandle<T: Elem> {
+    pub(crate) state: Arc<HandleState<T>>,
+}
+
+impl<T: Elem> ScanHandle<T> {
+    /// Nonblocking completion probe (`MPI_Test` without result take-out).
+    pub fn test(&self) -> bool {
+        self.state.slot.lock().unwrap().is_some()
+    }
+
+    /// Block until the result is available and take it (`MPI_Wait`).
+    pub fn wait(self) -> Result<ScanOutput<T>, SvcError> {
+        let mut slot = self.state.slot.lock().unwrap();
+        loop {
+            if let Some(result) = slot.take() {
+                return result;
+            }
+            slot = self.state.cv.wait(slot).unwrap();
+        }
+    }
+
+    /// [`wait`](Self::wait) with a deadline; `Err(WaitTimeout)` leaves the
+    /// handle unusable (it is consumed either way — tests use this to
+    /// avoid hanging on a defective engine).
+    pub fn wait_timeout(self, timeout: Duration) -> Result<ScanOutput<T>, SvcError> {
+        let deadline = Instant::now() + timeout;
+        let mut slot = self.state.slot.lock().unwrap();
+        loop {
+            if let Some(result) = slot.take() {
+                return result;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(SvcError::WaitTimeout);
+            }
+            let (guard, _) = self.state.cv.wait_timeout(slot, deadline - now).unwrap();
+            slot = guard;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::ops;
+
+    #[test]
+    fn reqop_from_op_is_not_liftable() {
+        let op = ReqOp::from_op(&ops::bxor());
+        assert_eq!(op.name(), "bxor_i64");
+        assert!(!op.is_liftable());
+        assert!(op.lifted().is_none());
+    }
+
+    #[test]
+    fn liftable_reqop_base_and_lift_agree() {
+        let op = ReqOp::sum_i64();
+        assert!(op.is_liftable());
+        // Base combine: elementwise with `input` as earlier operand.
+        let base = op.fresh();
+        let mut inout = vec![10i64, 20];
+        base.reduce_local(&[1, 2], &mut inout);
+        assert_eq!(inout, vec![11, 22]);
+        // Lifted combine: segment flag blocks the earlier operand.
+        let lifted = op.lifted().unwrap();
+        assert_eq!(lifted.name(), "seg_sum_i64");
+        let mut seg = vec![Seg::cont(5i64), Seg::start(7)];
+        lifted.reduce_local(&[Seg::cont(1), Seg::cont(2)], &mut seg);
+        assert_eq!(seg[0], Seg::cont(6));
+        assert_eq!(seg[1], Seg::start(7), "flag must block the earlier value");
+    }
+
+    #[test]
+    fn request_validation() {
+        let ok = ScanRequest::full(ReqOp::sum_i64(), vec![vec![1i64], vec![2]]);
+        assert!(ok.validate(2).is_ok());
+        assert_eq!(ok.m(), 1);
+        let ragged = ScanRequest::full(ReqOp::sum_i64(), vec![vec![1i64], vec![2, 3]]);
+        assert!(matches!(ragged.validate(2), Err(SvcError::Shape(_))));
+        let out_of_world = ScanRequest::over(ReqOp::sum_i64(), 3, vec![vec![1i64], vec![2]]);
+        assert!(matches!(out_of_world.validate(4), Err(SvcError::Shape(_))));
+        assert!(out_of_world.validate(5).is_ok());
+    }
+
+    #[test]
+    fn handle_test_wait_roundtrip() {
+        let state = HandleState::<i64>::new();
+        let h = ScanHandle { state: Arc::clone(&state) };
+        assert!(!h.test());
+        let filler = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            state.fulfill(Ok(ScanOutput {
+                outputs: vec![vec![], vec![42]],
+                stats: RequestStats {
+                    mode: BatchMode::Solo,
+                    batch_size: 1,
+                    coalesced_m: 1,
+                    rounds: 1,
+                    amortized_rounds: 1.0,
+                },
+            }));
+        });
+        let out = h.wait().unwrap();
+        assert_eq!(out.outputs[1], vec![42]);
+        assert_eq!(out.stats.batch_size, 1);
+        filler.join().unwrap();
+    }
+
+    #[test]
+    fn handle_wait_timeout_expires() {
+        let state = HandleState::<i64>::new();
+        let h = ScanHandle { state };
+        let t0 = Instant::now();
+        let err = h.wait_timeout(Duration::from_millis(40)).unwrap_err();
+        assert_eq!(err, SvcError::WaitTimeout);
+        assert!(t0.elapsed() >= Duration::from_millis(35));
+    }
+
+    #[test]
+    fn svc_error_chains_through_anyhow() {
+        // The typed error must ride the shim's blanket From and render in
+        // `{:#}` context chains — the engine's worker-side pattern.
+        fn inner() -> anyhow::Result<()> {
+            let failed: Result<(), SvcError> =
+                Err(SvcError::Collective("rank 3 deadlocked".into()));
+            failed?; // converts via the blanket `From<E: std::error::Error>`
+            Ok(())
+        }
+        use anyhow::Context as _;
+        let err = inner().context("executing batch 7").unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("executing batch 7"), "{chain}");
+        assert!(chain.contains("rank 3 deadlocked"), "{chain}");
+    }
+}

@@ -11,18 +11,22 @@ use super::{EventKind, TraceReport};
 use std::collections::HashMap;
 
 /// A violated structural invariant, with enough context to debug it.
+/// `ctx` is the communicator context the offending round ran on (0 =
+/// world scope): the one-ported and matching disciplines hold per
+/// (ctx, round), since concurrent collectives legitimately reuse round
+/// indices on distinct communicators.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum InvariantViolation {
     /// Rank sent more than one message in one round.
-    MultipleSends { rank: usize, round: u32, count: usize },
+    MultipleSends { rank: usize, ctx: u16, round: u32, count: usize },
     /// Rank received more than one message in one round.
-    MultipleRecvs { rank: usize, round: u32, count: usize },
+    MultipleRecvs { rank: usize, ctx: u16, round: u32, count: usize },
     /// A send with no matching receive (or vice versa).
-    Unmatched { from: usize, to: usize, round: u32, sends: usize, recvs: usize },
+    Unmatched { from: usize, to: usize, ctx: u16, round: u32, sends: usize, recvs: usize },
     /// A rank messaged itself.
-    SelfMessage { rank: usize, round: u32 },
+    SelfMessage { rank: usize, ctx: u16, round: u32 },
     /// Send and matching receive disagree on the payload size.
-    SizeMismatch { from: usize, to: usize, round: u32, sent: usize, received: usize },
+    SizeMismatch { from: usize, to: usize, ctx: u16, round: u32, sent: usize, received: usize },
 }
 
 impl std::fmt::Display for InvariantViolation {
@@ -39,51 +43,57 @@ pub fn check_all(report: &TraceReport) -> Vec<InvariantViolation> {
     out
 }
 
-/// One-ported model: per (rank, round), at most one send and one receive.
+/// One-ported model: per (rank, ctx, round), at most one send and one
+/// receive.
 fn check_one_ported(report: &TraceReport, out: &mut Vec<InvariantViolation>) {
     for t in &report.traces {
-        let mut sends: HashMap<u32, usize> = HashMap::new();
-        let mut recvs: HashMap<u32, usize> = HashMap::new();
+        let mut sends: HashMap<(u16, u32), usize> = HashMap::new();
+        let mut recvs: HashMap<(u16, u32), usize> = HashMap::new();
         for e in &t.events {
             match e.kind {
                 EventKind::Send { to, .. } => {
-                    *sends.entry(e.round).or_default() += 1;
+                    *sends.entry((e.ctx, e.round)).or_default() += 1;
                     if to == t.rank {
-                        out.push(InvariantViolation::SelfMessage { rank: t.rank, round: e.round });
+                        out.push(InvariantViolation::SelfMessage {
+                            rank: t.rank,
+                            ctx: e.ctx,
+                            round: e.round,
+                        });
                     }
                 }
-                EventKind::Recv { .. } => *recvs.entry(e.round).or_default() += 1,
+                EventKind::Recv { .. } => *recvs.entry((e.ctx, e.round)).or_default() += 1,
                 EventKind::Reduce { .. } => {}
             }
         }
-        for (&round, &count) in &sends {
+        for (&(ctx, round), &count) in &sends {
             if count > 1 {
-                out.push(InvariantViolation::MultipleSends { rank: t.rank, round, count });
+                out.push(InvariantViolation::MultipleSends { rank: t.rank, ctx, round, count });
             }
         }
-        for (&round, &count) in &recvs {
+        for (&(ctx, round), &count) in &recvs {
             if count > 1 {
-                out.push(InvariantViolation::MultipleRecvs { rank: t.rank, round, count });
+                out.push(InvariantViolation::MultipleRecvs { rank: t.rank, ctx, round, count });
             }
         }
     }
 }
 
-/// Every (from, to, round) send is matched by exactly one receive with the
-/// same byte count.
+/// Every (from, to, ctx, round) send is matched by exactly one receive
+/// with the same byte count.
 fn check_matching(report: &TraceReport, out: &mut Vec<InvariantViolation>) {
-    // (from, to, round) -> (send bytes, send count, recv bytes, recv count)
-    let mut table: HashMap<(usize, usize, u32), (usize, usize, usize, usize)> = HashMap::new();
+    // (from, to, ctx, round) -> (send bytes, send count, recv bytes, recv count)
+    type Key = (usize, usize, u16, u32);
+    let mut table: HashMap<Key, (usize, usize, usize, usize)> = HashMap::new();
     for t in &report.traces {
         for e in &t.events {
             match e.kind {
                 EventKind::Send { to, bytes } => {
-                    let ent = table.entry((t.rank, to, e.round)).or_default();
+                    let ent = table.entry((t.rank, to, e.ctx, e.round)).or_default();
                     ent.0 = bytes;
                     ent.1 += 1;
                 }
                 EventKind::Recv { from, bytes } => {
-                    let ent = table.entry((from, t.rank, e.round)).or_default();
+                    let ent = table.entry((from, t.rank, e.ctx, e.round)).or_default();
                     ent.2 = bytes;
                     ent.3 += 1;
                 }
@@ -91,11 +101,18 @@ fn check_matching(report: &TraceReport, out: &mut Vec<InvariantViolation>) {
             }
         }
     }
-    for (&(from, to, round), &(sb, sc, rb, rc)) in &table {
+    for (&(from, to, ctx, round), &(sb, sc, rb, rc)) in &table {
         if sc != rc {
-            out.push(InvariantViolation::Unmatched { from, to, round, sends: sc, recvs: rc });
+            out.push(InvariantViolation::Unmatched { from, to, ctx, round, sends: sc, recvs: rc });
         } else if sb != rb {
-            out.push(InvariantViolation::SizeMismatch { from, to, round, sent: sb, received: rb });
+            out.push(InvariantViolation::SizeMismatch {
+                from,
+                to,
+                ctx,
+                round,
+                sent: sb,
+                received: rb,
+            });
         }
     }
 }
@@ -125,6 +142,28 @@ mod tests {
         t2.push(0, EventKind::Recv { from: 0, bytes: 8 });
         let v = check_all(&TraceReport::new(vec![t0, t1, t2]));
         assert!(v.iter().any(|x| matches!(x, InvariantViolation::MultipleSends { rank: 0, .. })));
+    }
+
+    #[test]
+    fn concurrent_ctxs_may_reuse_round_indices() {
+        // One send per (ctx, round) is one-ported even when two contexts
+        // both use round 0 — and matching is per context, so a ctx-1 send
+        // cannot satisfy a ctx-2 receive.
+        let mut t0 = RankTrace::new(0);
+        t0.push_ctx(1, 0, EventKind::Send { to: 1, bytes: 8 });
+        t0.push_ctx(2, 0, EventKind::Send { to: 1, bytes: 8 });
+        let mut t1 = RankTrace::new(1);
+        t1.push_ctx(1, 0, EventKind::Recv { from: 0, bytes: 8 });
+        t1.push_ctx(2, 0, EventKind::Recv { from: 0, bytes: 8 });
+        assert!(check_all(&TraceReport::new(vec![t0.clone(), t1])).is_empty());
+        // Drop the ctx-2 receive: must surface as unmatched on ctx 2.
+        let mut t1b = RankTrace::new(1);
+        t1b.push_ctx(1, 0, EventKind::Recv { from: 0, bytes: 8 });
+        let v = check_all(&TraceReport::new(vec![t0, t1b]));
+        assert!(
+            v.iter().any(|x| matches!(x, InvariantViolation::Unmatched { ctx: 2, .. })),
+            "{v:?}"
+        );
     }
 
     #[test]

@@ -26,9 +26,14 @@ pub enum EventKind {
     Reduce { bytes: usize },
 }
 
-/// A traced event, attributed to an algorithm-defined round index.
+/// A traced event, attributed to an algorithm-defined round index and the
+/// context id of the communicator it ran on (0 = world scope; see
+/// [`crate::mpi::TagKey`]). Send/recv peers are recorded as **world**
+/// ranks; use [`TraceReport::for_ctx`] to view one communicator's
+/// sub-trace in communicator coordinates.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TraceEvent {
+    pub ctx: u16,
     pub round: u32,
     pub kind: EventKind,
 }
@@ -45,8 +50,14 @@ impl RankTrace {
         RankTrace { rank, events: Vec::new() }
     }
 
+    /// Record a world-scope (context 0) event.
     pub fn push(&mut self, round: u32, kind: EventKind) {
-        self.events.push(TraceEvent { round, kind });
+        self.push_ctx(0, round, kind);
+    }
+
+    /// Record an event attributed to communicator context `ctx`.
+    pub fn push_ctx(&mut self, ctx: u16, round: u32, kind: EventKind) {
+        self.events.push(TraceEvent { ctx, round, kind });
     }
 
     /// Number of ⊕ applications this rank performed.
@@ -54,13 +65,14 @@ impl RankTrace {
         self.events.iter().filter(|e| matches!(e.kind, EventKind::Reduce { .. })).count() as u32
     }
 
-    /// Rounds in which this rank communicated (sent or received).
+    /// Rounds in which this rank communicated (sent or received), counted
+    /// per (ctx, round) so concurrent collectives don't alias.
     pub fn comm_rounds(&self) -> u32 {
-        let mut rounds: Vec<u32> = self
+        let mut rounds: Vec<(u16, u32)> = self
             .events
             .iter()
             .filter(|e| !matches!(e.kind, EventKind::Reduce { .. }))
-            .map(|e| e.round)
+            .map(|e| (e.ctx, e.round))
             .collect();
         rounds.sort_unstable();
         rounds.dedup();
@@ -80,20 +92,67 @@ impl TraceReport {
         TraceReport { p: traces.len(), traces }
     }
 
-    /// Global number of communication rounds: the number of distinct round
-    /// indices in which *any* rank communicated. (For the algorithms here,
-    /// round indices are dense, so this equals `max round + 1`.)
+    /// Global number of communication rounds: the number of distinct
+    /// (ctx, round) indices in which *any* rank communicated. (For a
+    /// single collective round indices are dense, so this equals
+    /// `max round + 1`; for a mixed multi-communicator trace it sums the
+    /// collectives' rounds — extract one with [`for_ctx`](Self::for_ctx)
+    /// for a per-collective count.)
     pub fn total_rounds(&self) -> u32 {
-        let mut rounds: Vec<u32> = self
+        let mut rounds: Vec<(u16, u32)> = self
             .traces
             .iter()
             .flat_map(|t| t.events.iter())
             .filter(|e| !matches!(e.kind, EventKind::Reduce { .. }))
-            .map(|e| e.round)
+            .map(|e| (e.ctx, e.round))
             .collect();
         rounds.sort_unstable();
         rounds.dedup();
         rounds.len() as u32
+    }
+
+    /// Extract the sub-trace of one communicator in **communicator
+    /// coordinates**: `members` is the communicator's world-rank list in
+    /// communicator-rank order (see [`Comm::ranks`]); the result has one
+    /// trace per member, ranks and send/recv peers remapped to
+    /// communicator ranks, and events normalized to context 0 — so it
+    /// compares bit-for-bit against the trace of the same collective run
+    /// standalone on a world of the communicator's size.
+    ///
+    /// [`Comm::ranks`]: crate::mpi::Comm::ranks
+    pub fn for_ctx(&self, ctx: u16, members: &[usize]) -> TraceReport {
+        let comm_rank = |world: usize| {
+            members
+                .iter()
+                .position(|&w| w == world)
+                .expect("event peer must be a communicator member")
+        };
+        let traces = members
+            .iter()
+            .enumerate()
+            .map(|(cr, &wr)| {
+                let mut t = RankTrace::new(cr);
+                if let Some(src) = self.traces.iter().find(|t| t.rank == wr) {
+                    for e in &src.events {
+                        if e.ctx != ctx {
+                            continue;
+                        }
+                        let kind = match e.kind {
+                            EventKind::Send { to, bytes } => {
+                                EventKind::Send { to: comm_rank(to), bytes }
+                            }
+                            EventKind::Recv { from, bytes } => {
+                                EventKind::Recv { from: comm_rank(from), bytes }
+                            }
+                            EventKind::Reduce { .. } => e.kind,
+                        };
+                        t.push(e.round, kind);
+                    }
+                }
+                t
+            })
+            .collect();
+        TraceReport::new(traces)
     }
 
     /// ⊕ applications per rank.
@@ -178,5 +237,49 @@ mod tests {
         t.push(3, EventKind::Reduce { bytes: 8 });
         assert_eq!(t.comm_rounds(), 1);
         assert_eq!(t.ops(), 1);
+    }
+
+    #[test]
+    fn rounds_key_on_ctx_and_round() {
+        // Two concurrent collectives, both using round 0: the totals must
+        // not alias their rounds together.
+        let mut t = RankTrace::new(0);
+        t.push_ctx(1, 0, EventKind::Send { to: 1, bytes: 8 });
+        t.push_ctx(2, 0, EventKind::Send { to: 1, bytes: 8 });
+        assert_eq!(t.comm_rounds(), 2);
+        let mut t1 = RankTrace::new(1);
+        t1.push_ctx(1, 0, EventKind::Recv { from: 0, bytes: 8 });
+        t1.push_ctx(2, 0, EventKind::Recv { from: 0, bytes: 8 });
+        let r = TraceReport::new(vec![t, t1]);
+        assert_eq!(r.total_rounds(), 2);
+    }
+
+    #[test]
+    fn for_ctx_extracts_in_comm_coordinates() {
+        // World of 4; a collective on ctx 7 over world ranks {1, 3}
+        // (comm ranks 0, 1), interleaved with world-scope traffic.
+        let mut t1 = RankTrace::new(1);
+        t1.push(0, EventKind::Send { to: 2, bytes: 8 }); // world-scope noise
+        t1.push_ctx(7, 0, EventKind::Send { to: 3, bytes: 16 });
+        t1.push_ctx(7, 0, EventKind::Recv { from: 3, bytes: 16 });
+        t1.push_ctx(7, 0, EventKind::Reduce { bytes: 16 });
+        let mut t3 = RankTrace::new(3);
+        t3.push_ctx(7, 0, EventKind::Send { to: 1, bytes: 16 });
+        t3.push_ctx(7, 0, EventKind::Recv { from: 1, bytes: 16 });
+        let report =
+            TraceReport::new(vec![RankTrace::new(0), t1, RankTrace::new(2), t3]);
+        let sub = report.for_ctx(7, &[1, 3]);
+        assert_eq!(sub.p, 2);
+        assert_eq!(sub.traces[0].rank, 0);
+        assert_eq!(sub.traces[1].rank, 1);
+        // Peers remapped to comm ranks, ctx normalized to 0 — equal to
+        // what a standalone p=2 run would record.
+        let mut want0 = RankTrace::new(0);
+        want0.push(0, EventKind::Send { to: 1, bytes: 16 });
+        want0.push(0, EventKind::Recv { from: 1, bytes: 16 });
+        want0.push(0, EventKind::Reduce { bytes: 16 });
+        assert_eq!(sub.traces[0].events, want0.events);
+        assert_eq!(sub.total_rounds(), 1);
+        assert_eq!(sub.total_ops(), 1);
     }
 }

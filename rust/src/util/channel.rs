@@ -130,6 +130,13 @@ impl<T> Channel<T> {
         self.cv.notify_all();
     }
 
+    /// Whether [`close`](Self::close) has been called (items may still be
+    /// poppable). Consumers that batch on a time window check this to cut
+    /// the window short at shutdown.
+    pub fn is_closed(&self) -> bool {
+        self.q.lock().unwrap().closed
+    }
+
     pub fn len(&self) -> usize {
         self.q.lock().unwrap().items.len()
     }

@@ -17,7 +17,8 @@ use exscan::mpi::{run_world, ChaosConfig, Topology, World, WorldConfig};
 use exscan::prelude::*;
 
 /// The acceptance sweep: ≥ 3 seeds × all registered algorithms ×
-/// {bxor_i64, sum_i64, rec2_compose (non-commutative)} × m ∈ {0, 1, 17,
+/// {bxor_i64, sum_i64, rec2_compose (non-commutative), seg_bxor_i64 /
+/// seg_sum_i64 (lifted segmented over `Seg<i64>`)} × m ∈ {0, 1, 17,
 /// 4096 (8 chunks on the 512-element chunked variant)}.
 #[test]
 fn chaos_differential_sweep_three_seeds() {

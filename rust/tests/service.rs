@@ -1,0 +1,423 @@
+//! Acceptance tests for the multi-tenant scan service and the
+//! communicator layer under it (ISSUE 4):
+//!
+//! * ≥ 8 concurrent in-flight exscans on distinct communicators over one
+//!   persistent chaos world are bit-identical — outputs AND per-context
+//!   traces — to each request run serially on a clean world, at 3 fixed
+//!   seeds ([`chaos_concurrent_comms`]).
+//! * K coalesced small-m requests pay exactly one collective's rounds
+//!   (closed form asserted via the batch's `TraceReport`-measured round
+//!   count on each request's [`RequestStats`]).
+//! * Segmented coalescing (operator lifting) scatters correct per-request
+//!   results; opaque sub-range requests run solo on sub-communicators.
+//! * The engine survives an injected lost message: typed
+//!   `SvcError::Collective`, world rebuild, subsequent requests succeed.
+
+use std::time::Duration;
+
+use exscan::coll::validate::chaos_concurrent_comms;
+use exscan::coll::{oracle_exscan, Exscan123, ScanAlgorithm};
+use exscan::mpi::{ops, run_scan, ChaosConfig, TagKey, Topology, WorldConfig};
+use exscan::svc::{BatchMode, BatchPolicy, EngineConfig, ReqOp, ScanEngine, ScanRequest, SvcError};
+use exscan::util::bits::rounds_123;
+
+const WAIT: Duration = Duration::from_secs(60);
+
+/// A policy with an effectively infinite window: cycles run only on
+/// `flush`, making batch composition deterministic for closed-form
+/// assertions.
+fn manual_policy() -> BatchPolicy {
+    BatchPolicy { window: Duration::from_secs(600), ..Default::default() }
+}
+
+/// Acceptance: N = 8 concurrent in-flight exscans on distinct
+/// communicators over one persistent world, chaos-verified at 3 fixed
+/// seeds against serial clean-world execution (outputs and per-context
+/// traces bit-identical).
+#[test]
+fn concurrent_comms_chaos_differential_three_seeds() {
+    for seed in [1u64, 0xC0FFEE, 0x5EED] {
+        chaos_concurrent_comms(seed, 8).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}
+
+/// Acceptance: K batched small-m requests pay one collective's worth of
+/// rounds — the closed form `rounds_123(p)` — with per-request amortized
+/// rounds `rounds_123(p) / K`, measured from the batch trace.
+#[test]
+fn batched_requests_pay_one_collectives_rounds() {
+    let p = 8;
+    let k = 12;
+    let m = 4;
+    let engine =
+        ScanEngine::<i64>::new(EngineConfig::new(p).with_policy(manual_policy())).unwrap();
+    let all_inputs: Vec<Vec<Vec<i64>>> =
+        (0..k).map(|i| exscan::bench::inputs_i64(p, m, 100 + i as u64)).collect();
+    let handles: Vec<_> = all_inputs
+        .iter()
+        .map(|inputs| engine.submit_exscan(ReqOp::bxor_i64(), inputs.clone()).unwrap())
+        .collect();
+    engine.flush();
+    for (inputs, h) in all_inputs.iter().zip(handles) {
+        let out = h.wait_timeout(WAIT).unwrap();
+        // Bit-identical to the request run serially on a clean world.
+        let serial =
+            run_scan(&WorldConfig::new(Topology::flat(p)), &Exscan123, &ops::bxor(), inputs)
+                .unwrap();
+        assert_eq!(out.outputs, serial.outputs);
+        // Closed-form round accounting.
+        assert_eq!(out.stats.mode, BatchMode::Concat);
+        assert_eq!(out.stats.batch_size, k);
+        assert_eq!(out.stats.coalesced_m, k * m);
+        assert_eq!(out.stats.rounds, rounds_123(p), "one collective's rounds for all K");
+        let want = rounds_123(p) as f64 / k as f64;
+        assert!((out.stats.amortized_rounds - want).abs() < 1e-12);
+    }
+    let ms = engine.metrics();
+    assert_eq!(ms.submitted, k as u64);
+    assert_eq!(ms.completed, k as u64);
+    assert_eq!(ms.batches, 1, "K same-op full-world requests must coalesce into one");
+    assert_eq!(ms.rounds_paid, rounds_123(p) as u64);
+    assert_eq!(ms.rounds_solo_equiv, (k as u64) * rounds_123(p) as u64);
+    assert!((ms.round_amortization - k as f64).abs() < 1e-9);
+}
+
+/// Amortized rounds per request shrink monotonically as the batch grows.
+#[test]
+fn amortized_rounds_shrink_with_batch_size() {
+    let p = 8;
+    let m = 2;
+    let mut last = f64::INFINITY;
+    for k in [1usize, 4, 16] {
+        let engine =
+            ScanEngine::<i64>::new(EngineConfig::new(p).with_policy(manual_policy()))
+                .unwrap();
+        let handles: Vec<_> = (0..k)
+            .map(|i| {
+                engine
+                    .submit_exscan(
+                        ReqOp::sum_i64(),
+                        exscan::bench::inputs_i64(p, m, i as u64),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        engine.flush();
+        for h in handles {
+            h.wait_timeout(WAIT).unwrap();
+        }
+        let amortized = engine.metrics().amortized_rounds_per_request;
+        assert!((amortized - rounds_123(p) as f64 / k as f64).abs() < 1e-9, "k={k}");
+        assert!(amortized < last || k == 1, "k={k}: {amortized} !< {last}");
+        last = amortized;
+    }
+}
+
+/// Segmented coalescing: disjoint sub-range requests under a liftable
+/// operator pack into lanes of one world-wide lifted scan; each request's
+/// scattered result equals its own serial run.
+#[test]
+fn segmented_coalescing_matches_serial_per_request() {
+    let p = 8;
+    let m = 3;
+    let engine =
+        ScanEngine::<i64>::new(EngineConfig::new(p).with_policy(manual_policy())).unwrap();
+    // Ranges: [0,3) and [5,8) share a lane; [1,5) takes a second lane.
+    let specs: [(usize, usize); 3] = [(0, 3), (5, 3), (1, 4)];
+    let all_inputs: Vec<Vec<Vec<i64>>> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, &(_, span))| exscan::bench::inputs_i64(span, m, 50 + i as u64))
+        .collect();
+    let handles: Vec<_> = specs
+        .iter()
+        .zip(&all_inputs)
+        .map(|(&(start, _), inputs)| {
+            engine
+                .submit(ScanRequest::over(ReqOp::sum_i64(), start, inputs.clone()))
+                .unwrap()
+        })
+        .collect();
+    engine.flush();
+    for ((&(start, span), inputs), h) in specs.iter().zip(&all_inputs).zip(handles) {
+        let out = h.wait_timeout(WAIT).unwrap();
+        assert_eq!(out.stats.mode, BatchMode::Segmented, "start={start}");
+        assert_eq!(out.stats.batch_size, 3);
+        assert_eq!(out.stats.coalesced_m, 2 * m, "two lanes of width m");
+        // The lifted world-wide scan pays the full-p collective's rounds
+        // once for all three requests.
+        assert_eq!(out.stats.rounds, rounds_123(p));
+        assert_eq!(out.outputs.len(), span);
+        let oracle = oracle_exscan(inputs, &ops::sum_i64());
+        for cr in 1..span {
+            assert_eq!(
+                &out.outputs[cr],
+                oracle[cr].as_ref().unwrap(),
+                "start={start} member {cr}"
+            );
+        }
+        assert_eq!(out.outputs[0], vec![0i64; m], "first member undefined → filler");
+    }
+    assert_eq!(engine.metrics().segmented_batches, 1);
+}
+
+/// A mixed cycle: two concat groups (different ops), one opaque sub-range
+/// solo, one liftable singleton solo — four concurrent plans, all
+/// verified, amortization still ≥ 1.
+#[test]
+fn mixed_cycle_runs_all_plans_concurrently() {
+    let p = 6;
+    let m = 5;
+    let engine =
+        ScanEngine::<i64>::new(EngineConfig::new(p).with_policy(manual_policy())).unwrap();
+    let bxor_inputs: Vec<Vec<Vec<i64>>> =
+        (0..3).map(|i| exscan::bench::inputs_i64(p, m, i as u64)).collect();
+    let sum_inputs = exscan::bench::inputs_i64(p, m, 77);
+    let solo_opaque = exscan::bench::inputs_i64(3, m, 88); // ranks 1..4
+    let solo_lift = exscan::bench::inputs_i64(2, m, 99); // ranks 4..6
+    let h_bxor: Vec<_> = bxor_inputs
+        .iter()
+        .map(|v| engine.submit_exscan(ReqOp::bxor_i64(), v.clone()).unwrap())
+        .collect();
+    let h_sum = engine.submit_exscan(ReqOp::sum_i64(), sum_inputs.clone()).unwrap();
+    let h_opaque = engine
+        .submit(ScanRequest::over(ReqOp::from_op(&ops::max_i64()), 1, solo_opaque.clone()))
+        .unwrap();
+    let h_lift = engine
+        .submit(ScanRequest::over(ReqOp::max_i64(), 4, solo_lift.clone()))
+        .unwrap();
+    engine.flush();
+
+    for (v, h) in bxor_inputs.iter().zip(h_bxor) {
+        let out = h.wait_timeout(WAIT).unwrap();
+        assert_eq!(out.stats.mode, BatchMode::Concat);
+        assert_eq!(out.stats.batch_size, 3);
+        let oracle = oracle_exscan(v, &ops::bxor());
+        for r in 1..p {
+            assert_eq!(&out.outputs[r], oracle[r].as_ref().unwrap());
+        }
+    }
+    let out = h_sum.wait_timeout(WAIT).unwrap();
+    assert_eq!(out.stats.mode, BatchMode::Solo, "lone full-world request runs solo");
+    let oracle = oracle_exscan(&sum_inputs, &ops::sum_i64());
+    for r in 1..p {
+        assert_eq!(&out.outputs[r], oracle[r].as_ref().unwrap());
+    }
+    for (start, inputs, h, op) in [
+        (1usize, &solo_opaque, h_opaque, ops::max_i64()),
+        (4, &solo_lift, h_lift, ops::max_i64()),
+    ] {
+        let out = h.wait_timeout(WAIT).unwrap();
+        assert_eq!(out.stats.mode, BatchMode::Solo, "start={start}");
+        assert_eq!(out.stats.batch_size, 1);
+        // Solo sub-range pays the *span's* rounds, not the world's.
+        assert_eq!(out.stats.rounds, rounds_123(inputs.len()));
+        let oracle = oracle_exscan(inputs, &op);
+        for cr in 1..inputs.len() {
+            assert_eq!(&out.outputs[cr], oracle[cr].as_ref().unwrap(), "start={start}");
+        }
+    }
+    let ms = engine.metrics();
+    assert_eq!(ms.completed, 6);
+    assert_eq!(ms.batches, 4);
+    assert_eq!(ms.concat_batches, 1);
+    assert_eq!(ms.solo_batches, 3);
+    assert!(ms.round_amortization >= 1.0, "{ms:?}");
+}
+
+/// Service chaos differential at 3 fixed seeds: results under fault
+/// injection are bit-identical to each request run serially on a clean
+/// world.
+#[test]
+fn engine_chaos_differential_three_seeds() {
+    let p = 8;
+    let m = 4;
+    for seed in [1u64, 2, 3] {
+        let engine = ScanEngine::<i64>::new(
+            EngineConfig::new(p)
+                .with_policy(manual_policy())
+                .with_chaos(ChaosConfig::new(seed)),
+        )
+        .unwrap();
+        // Mixed workload: concat batch + a segmented trio (summed solo
+        // cost 2+2+2 beats rounds(8) = 4, so the benefit gate keeps it)
+        // + whatever the planner decides for each.
+        let full: Vec<Vec<Vec<i64>>> =
+            (0..4).map(|i| exscan::bench::inputs_i64(p, m, seed ^ i)).collect();
+        let sub_a = exscan::bench::inputs_i64(3, m, seed ^ 10); // ranks 0..3
+        let sub_b = exscan::bench::inputs_i64(4, m, seed ^ 11); // ranks 4..8
+        let sub_c = exscan::bench::inputs_i64(4, m, seed ^ 12); // ranks 1..5
+        let h_full: Vec<_> = full
+            .iter()
+            .map(|v| engine.submit_exscan(ReqOp::bxor_i64(), v.clone()).unwrap())
+            .collect();
+        let ha = engine.submit(ScanRequest::over(ReqOp::sum_i64(), 0, sub_a.clone())).unwrap();
+        let hb = engine.submit(ScanRequest::over(ReqOp::sum_i64(), 4, sub_b.clone())).unwrap();
+        let hc = engine.submit(ScanRequest::over(ReqOp::sum_i64(), 1, sub_c.clone())).unwrap();
+        engine.flush();
+
+        let clean = WorldConfig::new(Topology::flat(p));
+        for (v, h) in full.iter().zip(h_full) {
+            let out = h.wait_timeout(WAIT).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            let serial = run_scan(&clean, &Exscan123, &ops::bxor(), v).unwrap();
+            assert_eq!(out.outputs, serial.outputs, "seed {seed}: chaos ≠ serial clean");
+        }
+        let mut seg_seen = false;
+        for (start, inputs, h) in [(0usize, &sub_a, ha), (4, &sub_b, hb), (1, &sub_c, hc)] {
+            let out = h.wait_timeout(WAIT).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            seg_seen |= out.stats.mode == BatchMode::Segmented;
+            let clean_sub = WorldConfig::new(Topology::flat(inputs.len()));
+            let serial = run_scan(&clean_sub, &Exscan123, &ops::sum_i64(), inputs).unwrap();
+            assert_eq!(
+                out.outputs, serial.outputs,
+                "seed {seed} start {start}: chaos ≠ serial clean"
+            );
+        }
+        assert!(seg_seen, "seed {seed}: the trio must coalesce segmented");
+        let ms = engine.metrics();
+        assert_eq!(ms.failed, 0, "seed {seed}: {ms:?}");
+        assert_eq!(ms.completed, 7);
+    }
+}
+
+/// Nonblocking semantics: `test` reports pending before the flush and
+/// complete after; `wait` then returns without blocking.
+#[test]
+fn handle_test_then_wait() {
+    let p = 4;
+    let engine =
+        ScanEngine::<i64>::new(EngineConfig::new(p).with_policy(manual_policy())).unwrap();
+    let h = engine
+        .submit_exscan(ReqOp::sum_i64(), exscan::bench::inputs_i64(p, 2, 5))
+        .unwrap();
+    assert!(!h.test(), "window still open: must be pending");
+    engine.flush();
+    let deadline = std::time::Instant::now() + WAIT;
+    while !h.test() {
+        assert!(std::time::Instant::now() < deadline, "request never completed");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let out = h.wait().unwrap();
+    assert_eq!(out.stats.batch_size, 1);
+}
+
+/// More plans than the context ring: the cycle splits into waves and every
+/// request still completes correctly.
+#[test]
+fn cycle_with_more_plans_than_ring_runs_in_waves() {
+    let p = 4;
+    let m = 2;
+    let k = exscan::svc::CTX_RING + 2; // 34 solo plans → 2 waves
+    let engine =
+        ScanEngine::<i64>::new(EngineConfig::new(p).with_policy(manual_policy())).unwrap();
+    // Opaque sub-range requests cannot coalesce: one solo plan each.
+    let inputs: Vec<Vec<Vec<i64>>> =
+        (0..k).map(|i| exscan::bench::inputs_i64(2, m, i as u64)).collect();
+    let handles: Vec<_> = inputs
+        .iter()
+        .enumerate()
+        .map(|(i, v)| {
+            let start = (i % 3).min(p - 2);
+            engine
+                .submit(ScanRequest::over(ReqOp::from_op(&ops::bxor()), start, v.clone()))
+                .unwrap()
+        })
+        .collect();
+    engine.flush();
+    for (v, h) in inputs.iter().zip(handles) {
+        let out = h.wait_timeout(WAIT).unwrap();
+        let oracle = oracle_exscan(v, &ops::bxor());
+        assert_eq!(&out.outputs[1], oracle[1].as_ref().unwrap());
+    }
+    assert_eq!(engine.metrics().batches, k as u64);
+}
+
+/// A lost message inside a batch surfaces as a typed `SvcError::Collective`
+/// carrying the attributed deadlock chain; the engine rebuilds its world
+/// and keeps serving.
+#[test]
+fn lost_message_fails_typed_and_engine_recovers() {
+    let p = 3;
+    // The first ring context is the first id the engine's world allocates
+    // (= 1). Drop the round-0 message 0 → 1 on that context: the first
+    // full-world plan's collective must time out.
+    let doomed_tag = TagKey::new(1, 0, 0).pack();
+    let chaos = ChaosConfig::new(5)
+        .with_delay_prob(0.0)
+        .with_divert_prob(0.0)
+        .with_yield_prob(0.0)
+        .with_drop(0, 1, doomed_tag);
+    let engine = ScanEngine::<i64>::new(
+        EngineConfig::new(p)
+            .with_policy(manual_policy())
+            .with_chaos(chaos)
+            .with_recv_timeout(Duration::from_millis(300)),
+    )
+    .unwrap();
+
+    let h = engine
+        .submit_exscan(ReqOp::bxor_i64(), exscan::bench::inputs_i64(p, 2, 1))
+        .unwrap();
+    engine.flush();
+    let err = h.wait_timeout(WAIT).unwrap_err();
+    match &err {
+        SvcError::Collective(detail) => {
+            assert!(detail.contains("deadlocked"), "unattributed failure: {detail}");
+        }
+        other => panic!("want Collective, got {other:?}"),
+    }
+
+    // The engine rebuilt its world and still serves: a sub-range request
+    // avoids the doomed (0 → 1, ctx 1, round 0) key entirely.
+    let inputs = exscan::bench::inputs_i64(2, 2, 9);
+    let h2 = engine
+        .submit(ScanRequest::over(ReqOp::bxor_i64(), 1, inputs.clone()))
+        .unwrap();
+    engine.flush();
+    let out = h2.wait_timeout(WAIT).unwrap();
+    let oracle = oracle_exscan(&inputs, &ops::bxor());
+    assert_eq!(&out.outputs[1], oracle[1].as_ref().unwrap());
+    let ms = engine.metrics();
+    assert_eq!(ms.failed, 1);
+    assert!(ms.worlds_rebuilt >= 1, "{ms:?}");
+}
+
+/// Dropping the engine drains queued requests (graceful shutdown), and
+/// submissions after shutdown fail typed.
+#[test]
+fn drop_drains_queued_requests() {
+    let p = 4;
+    let engine =
+        ScanEngine::<i64>::new(EngineConfig::new(p).with_policy(manual_policy())).unwrap();
+    let inputs = exscan::bench::inputs_i64(p, 3, 42);
+    let handles: Vec<_> = (0..3)
+        .map(|_| engine.submit_exscan(ReqOp::sum_i64(), inputs.clone()).unwrap())
+        .collect();
+    drop(engine); // no flush: shutdown must cut the window and drain
+    let oracle = oracle_exscan(&inputs, &ops::sum_i64());
+    for h in handles {
+        let out = h.wait_timeout(WAIT).unwrap();
+        for r in 1..p {
+            assert_eq!(&out.outputs[r], oracle[r].as_ref().unwrap());
+        }
+    }
+}
+
+/// World-level communicator API: dup/split allocate distinct contexts and
+/// `predicted_rounds` drives the solo-equivalent accounting.
+#[test]
+fn world_comm_api_shapes() {
+    use exscan::mpi::World;
+    let world: World<i64> = World::new(WorldConfig::new(Topology::flat(6)));
+    let wc = world.comm_world();
+    assert_eq!(wc.ctx(), 0);
+    let a = world.dup_comm(&wc);
+    let b = world.dup_comm(&wc);
+    assert_ne!(a.ctx(), b.ctx());
+    let parts = world.split_comm(&wc, &[0, 0, 1, 1, 2, 2]);
+    assert_eq!(parts.len(), 3);
+    assert_eq!(parts[2].ranks(), &[4, 5]);
+    assert!(parts.iter().all(|c| c.ctx() != 0));
+    let algo: &dyn ScanAlgorithm<i64> = &Exscan123;
+    assert_eq!(algo.predicted_rounds(6), rounds_123(6));
+}

@@ -204,6 +204,64 @@ mod tests {
     }
 
     #[test]
+    fn typed_enum_error_pattern() {
+        // Audit against the scan service's error handling (rust/src/svc):
+        // a typed error enum implementing std::error::Error must convert
+        // through the blanket `From`, survive `context` layering, and
+        // render its full chain under `{:#}` — the exact pattern the
+        // engine's worker threads use to surface collective failures.
+        #[derive(Debug)]
+        enum SvcLikeError {
+            Collective { detail: String },
+        }
+        impl fmt::Display for SvcLikeError {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                match self {
+                    SvcLikeError::Collective { detail } => {
+                        write!(f, "batch collective failed: {detail}")
+                    }
+                }
+            }
+        }
+        impl std::error::Error for SvcLikeError {}
+
+        fn worker() -> Result<()> {
+            let r: std::result::Result<(), SvcLikeError> =
+                Err(SvcLikeError::Collective { detail: "rank 1 deadlocked".into() });
+            r?;
+            Ok(())
+        }
+        let e = worker().with_context(|| "executing wave 0").unwrap_err();
+        assert_eq!(format!("{e}"), "executing wave 0");
+        assert_eq!(
+            format!("{e:#}"),
+            "executing wave 0: batch collective failed: rank 1 deadlocked"
+        );
+        assert_eq!(e.root_cause(), "batch collective failed: rank 1 deadlocked");
+    }
+
+    #[test]
+    fn source_chain_is_flattened() {
+        // Nested std errors must surface their entire source() chain (the
+        // engine stringifies worker errors with `{:#}` before shipping
+        // them through `SvcError::Collective`).
+        #[derive(Debug)]
+        struct Outer(std::io::Error);
+        impl fmt::Display for Outer {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "outer failure")
+            }
+        }
+        impl std::error::Error for Outer {
+            fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+                Some(&self.0)
+            }
+        }
+        let e = Error::from(Outer(io_err()));
+        assert_eq!(format!("{e:#}"), "outer failure: file missing");
+    }
+
+    #[test]
     fn ensure_without_message() {
         fn f(x: i32) -> Result<()> {
             ensure!(x < 10);
