@@ -10,5 +10,8 @@ pub mod workload;
 
 pub use experiments::{figure1_sweep, table1_rows, ExperimentRow, PaperConfig};
 pub use harness::{measure_exscan, measure_exscan_world, BenchConfig, Harness, Measurement};
-pub use table::{format_table, hotpath_json, to_csv, HotpathPoint, MSweepPoint, SvcPoint};
+pub use table::{
+    format_table, hotpath_json, to_csv, HotpathPoint, KernelPoint, LatencyPoint, MSweepPoint,
+    SvcPoint,
+};
 pub use workload::{inputs_i64, inputs_rec2, inputs_seg_i64, SweepSpec};

@@ -90,6 +90,39 @@ pub struct MSweepPoint {
     pub ops: u64,
 }
 
+/// One kernel-sweep measurement (see `benches/hotpath.rs`): a single ⊕
+/// application of `op` over an m-element slice, under slice-kernel
+/// dispatch (`"slice"`, the resolved `OpKernel` path) or the per-element
+/// reference (`"per-element"`, `CombineOp::combine` through the same
+/// handle). The two paths are asserted bit-identical before timing.
+#[derive(Debug, Clone)]
+pub struct KernelPoint {
+    pub op: String,
+    /// Compared dispatch path: `slice` or `per-element`.
+    pub path: String,
+    pub m: usize,
+    pub ns_per_apply: f64,
+    /// Elements combined per second (m / ns_per_apply, scaled).
+    pub elems_per_sec: f64,
+}
+
+/// One inbox latency-sweep measurement (see `benches/hotpath.rs`): ring
+/// rendezvous ns/round under the adaptive per-slot spin budget
+/// (`"adaptive"`) vs the fixed pre-adaptive budget (`"fixed-spin"`,
+/// `WorldConfig::with_fixed_spin`), with the aggregate receiver-side
+/// spin-probe/park counters over the whole run (warmup included).
+#[derive(Debug, Clone)]
+pub struct LatencyPoint {
+    /// Compared spin policy: `adaptive` or `fixed-spin`.
+    pub mode: String,
+    pub p: usize,
+    /// Rendezvous rounds timed per rank.
+    pub rounds: usize,
+    pub ns_per_round: f64,
+    pub spins: u64,
+    pub parks: u64,
+}
+
 /// One scan-service batching measurement (see `benches/hotpath.rs`): K
 /// small-m requests through the engine, batched (one flush for all K)
 /// vs serial (one flush per request), wall time per request plus the
@@ -126,15 +159,20 @@ fn json_escape(s: &str) -> String {
 /// the repo's machine-readable perf-trajectory record. Hand-rolled (no
 /// serde in this offline build); stable key order so diffs stay readable.
 /// Schema v2 added the `m_sweep` section (fused-vs-unfused and
-/// chunked-vs-flat compute-path points); v3 adds `svc_sweep` (scan-service
-/// batched-vs-serial throughput and amortized rounds/request).
+/// chunked-vs-flat compute-path points); v3 added `svc_sweep` (scan-service
+/// batched-vs-serial throughput and amortized rounds/request); v4 adds
+/// `kernel_sweep` (slice-kernel vs per-element ⊕ dispatch per op × m) and
+/// `latency_sweep` (adaptive vs fixed inbox spin budget per p, with
+/// spin/park counters).
 pub fn hotpath_json(
     meta: &[(&str, String)],
     points: &[HotpathPoint],
     m_sweep: &[MSweepPoint],
     svc_sweep: &[SvcPoint],
+    kernel_sweep: &[KernelPoint],
+    latency_sweep: &[LatencyPoint],
 ) -> String {
-    let mut out = String::from("{\n  \"schema\": \"exscan-hotpath-v3\",\n  \"meta\": {");
+    let mut out = String::from("{\n  \"schema\": \"exscan-hotpath-v4\",\n  \"meta\": {");
     for (i, (k, v)) in meta.iter().enumerate() {
         if i > 0 {
             out.push(',');
@@ -188,6 +226,37 @@ pub fn hotpath_json(
             pt.serial_us_per_req,
             pt.batched_rounds_per_req,
             pt.serial_rounds_per_req
+        ));
+    }
+    out.push_str("\n  ],\n  \"kernel_sweep\": [");
+    for (i, pt) in kernel_sweep.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"op\": \"{}\", \"path\": \"{}\", \"m\": {}, \
+             \"ns_per_apply\": {:.2}, \"elems_per_sec\": {:.1}}}",
+            json_escape(&pt.op),
+            json_escape(&pt.path),
+            pt.m,
+            pt.ns_per_apply,
+            pt.elems_per_sec
+        ));
+    }
+    out.push_str("\n  ],\n  \"latency_sweep\": [");
+    for (i, pt) in latency_sweep.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"mode\": \"{}\", \"p\": {}, \"rounds\": {}, \
+             \"ns_per_round\": {:.1}, \"spins\": {}, \"parks\": {}}}",
+            json_escape(&pt.mode),
+            pt.p,
+            pt.rounds,
+            pt.ns_per_round,
+            pt.spins,
+            pt.parks
         ));
     }
     out.push_str("\n  ]\n}\n");
@@ -270,8 +339,36 @@ mod tests {
             batched_rounds_per_req: 0.25,
             serial_rounds_per_req: 4.0,
         }];
-        let j = hotpath_json(&[("host", "ci \"runner\"".to_string())], &points, &sweep, &svc);
-        assert!(j.contains("\"schema\": \"exscan-hotpath-v3\""), "{j}");
+        let kernels = vec![KernelPoint {
+            op: "bxor_i64".into(),
+            path: "slice".into(),
+            m: 4096,
+            ns_per_apply: 512.25,
+            elems_per_sec: 8.0e9,
+        }];
+        let lat = vec![LatencyPoint {
+            mode: "adaptive".into(),
+            p: 16,
+            rounds: 2000,
+            ns_per_round: 950.0,
+            spins: 123456,
+            parks: 7,
+        }];
+        let j = hotpath_json(
+            &[("host", "ci \"runner\"".to_string())],
+            &points,
+            &sweep,
+            &svc,
+            &kernels,
+            &lat,
+        );
+        assert!(j.contains("\"schema\": \"exscan-hotpath-v4\""), "{j}");
+        assert!(j.contains("\"kernel_sweep\""), "{j}");
+        assert!(j.contains("\"path\": \"slice\""), "{j}");
+        assert!(j.contains("\"ns_per_apply\": 512.25"), "{j}");
+        assert!(j.contains("\"latency_sweep\""), "{j}");
+        assert!(j.contains("\"mode\": \"adaptive\""), "{j}");
+        assert!(j.contains("\"parks\": 7"), "{j}");
         assert!(j.contains("\"transport\": \"slot-pool\""), "{j}");
         assert!(j.contains("\"msgs_per_sec\": 1250000.0"), "{j}");
         assert!(j.contains("ci \\\"runner\\\""), "{j}");

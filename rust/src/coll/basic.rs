@@ -58,6 +58,9 @@ pub fn reduce<T: Elem>(
 ) -> Result<u32> {
     let p = ctx.size();
     let r = ctx.rank();
+    // Resolve ⊕ to its slice kernel once for the whole collective
+    // (the per-application dispatch is then a direct call — mpi::op).
+    let op = &ctx.kernel(op);
     let mut acc = ctx.scratch_from(input);
     let rounds = ceil_log2(p.max(2));
     if p > 1 {
@@ -105,6 +108,9 @@ pub fn allreduce<T: Elem>(
 ) -> Result<u32> {
     let p = ctx.size();
     let r = ctx.rank();
+    // Resolve ⊕ to its slice kernel once for the whole collective
+    // (the per-application dispatch is then a direct call — mpi::op).
+    let op = &ctx.kernel(op);
     output.copy_from_slice(input);
     if p <= 1 {
         return Ok(base);

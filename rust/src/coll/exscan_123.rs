@@ -45,6 +45,9 @@ impl<T: Elem> ScanAlgorithm<T> for Exscan123 {
         if p <= 1 {
             return Ok(());
         }
+        // Resolve ⊕ to its slice kernel once for the whole collective
+        // (the per-application dispatch is then a direct call — mpi::op).
+        let op = &ctx.kernel(op);
         // ── Round 0, s_0 = 1: shift V right; establishes W_r = V_{r-1}. ──
         {
             let (t, f) = (r + 1, r.checked_sub(1));

@@ -41,6 +41,9 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanBlelloch {
         if p <= 1 {
             return Ok(());
         }
+        // Resolve ⊕ to its slice kernel once for the whole collective
+        // (the per-application dispatch is then a direct call — mpi::op).
+        let op = &ctx.kernel(op);
         let levels = ceil_log2(p); // K
         let mut acc = ctx.scratch_from(input);
         // saved[k] = acc before folding the level-k right child (i.e. the

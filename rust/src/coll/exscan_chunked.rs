@@ -108,6 +108,9 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanChunked {
         if p <= 1 {
             return Ok(());
         }
+        // Resolve ⊕ to its slice kernel once for the whole collective
+        // (the per-application dispatch is then a direct call — mpi::op).
+        let op = &ctx.kernel(op);
         let ce = self.chunk_len();
         let nc = self.chunk_count(m);
         let nc32 = nc as u32;

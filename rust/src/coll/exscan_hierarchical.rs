@@ -65,6 +65,9 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanHierarchical {
             // Degenerate: flat 123-doubling.
             return ScanAlgorithm::<T>::run(&Exscan123, ctx, input, output, op);
         }
+        // Resolve ⊕ to its slice kernel once for the whole collective
+        // (the per-application dispatch is then a direct call — mpi::op).
+        let op = &ctx.kernel(op);
         let node = r / k;
         let leader = node * k;
         let node_size = k.min(p - leader); // last node may be short

@@ -33,6 +33,9 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanLinear {
         if p <= 1 {
             return Ok(());
         }
+        // Resolve ⊕ to its slice kernel once for the whole collective
+        // (the per-application dispatch is then a direct call — mpi::op).
+        let op = &ctx.kernel(op);
         if r == 0 {
             ctx.send(0, 1, input)?;
             return Ok(());

@@ -40,6 +40,9 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanMpich {
         if p <= 1 {
             return Ok(());
         }
+        // Resolve ⊕ to its slice kernel once for the whole collective
+        // (the per-application dispatch is then a direct call — mpi::op).
+        let op = &ctx.kernel(op);
         // partial_scan: reduction over the contiguous rank block this rank
         // has subsumed so far; starts as the local input (mpich copies
         // sendbuf into a temporary — here a pooled ctx scratch buffer).

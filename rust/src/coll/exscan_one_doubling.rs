@@ -37,6 +37,9 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanOneDoubling {
         if p <= 1 {
             return Ok(());
         }
+        // Resolve ⊕ to its slice kernel once for the whole collective
+        // (the per-application dispatch is then a direct call — mpi::op).
+        let op = &ctx.kernel(op);
         // Round 0 (s_0 = 1): shift inputs right. Rank 0 only sends and is
         // then done (it neither holds nor contributes any further partial).
         let (to, from) = (r + 1, r.checked_sub(1));

@@ -38,6 +38,9 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanTwoOp {
         if p <= 1 {
             return Ok(()); // rank 0 output undefined
         }
+        // Resolve ⊕ to its slice kernel once for the whole collective
+        // (the per-application dispatch is then a direct call — mpi::op).
+        let op = &ctx.kernel(op);
         // Pooled scratch for the outgoing inclusive partial, reused across
         // rounds (zero steady-state allocations).
         let mut w_prime = ctx.scratch_filled(m);

@@ -34,6 +34,9 @@ impl<T: Elem> ScanAlgorithm<T> for ScanDoubling {
         op: &OpRef<T>,
     ) -> Result<()> {
         let (r, p) = (ctx.rank(), ctx.size());
+        // Resolve ⊕ to its slice kernel once for the whole collective
+        // (the per-application dispatch is then a direct call — mpi::op).
+        let op = &ctx.kernel(op);
         output.copy_from_slice(input); // W_r := V_r establishes the invariant
         let mut s = 1usize; // s_k = 2^k
         let mut k = 0u32;

@@ -79,6 +79,9 @@ impl<T: Elem> ScanAlgorithm<T> for PipelinedChain {
         if p <= 1 {
             return Ok(());
         }
+        // Resolve ⊕ to its slice kernel once for the whole collective
+        // (the per-application dispatch is then a direct call — mpi::op).
+        let op = &ctx.kernel(op);
         let nb = self.block_count(m);
         let ranges = block_ranges(m, nb);
         // Degenerate m = 0: fall back to a single empty "block" so the

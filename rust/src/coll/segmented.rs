@@ -131,14 +131,14 @@ mod tests {
         for (a, b, c) in cases {
             // (a ⊕ b) ⊕ c
             let mut ab = [b];
-            op.reduce_local(&[a], &mut ab);
+            op.reduce_local_sharded(0, &[a], &mut ab);
             let mut ab_c = [c];
-            op.reduce_local(&ab, &mut ab_c);
+            op.reduce_local_sharded(0, &ab, &mut ab_c);
             // a ⊕ (b ⊕ c)
             let mut bc = [c];
-            op.reduce_local(&[b], &mut bc);
+            op.reduce_local_sharded(0, &[b], &mut bc);
             let mut a_bc = bc;
-            op.reduce_local(&[a], &mut a_bc);
+            op.reduce_local_sharded(0, &[a], &mut a_bc);
             assert_eq!(ab_c, a_bc, "{a:?} {b:?} {c:?}");
         }
     }

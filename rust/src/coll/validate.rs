@@ -37,8 +37,9 @@ pub fn oracle_scan<T: Elem>(inputs: &[Vec<T>], op: &OpRef<T>) -> Vec<Vec<T>> {
     let mut out = vec![acc.clone()];
     for v in &inputs[1..] {
         // acc = acc ⊕ v, with acc the earlier operand: inout starts as v.
+        // Single-threaded oracle: counts explicitly on shard 0.
         let mut next = v.clone();
-        op.reduce_local(&acc, &mut next);
+        op.reduce_local_sharded(0, &acc, &mut next);
         acc = next;
         out.push(acc.clone());
     }

@@ -27,6 +27,14 @@
 //! [`WorldConfig::unfused_compat`](super::WorldConfig) as the A/B
 //! reference for the equivalence tests and the hotpath m-sweep.
 //!
+//! ⊕ dispatch funnels through [`OpKernel`]: algorithms resolve the
+//! operator to its slice kernel **once per collective** via
+//! [`kernel`](RankCtx::kernel) (which honours the world's
+//! `with_per_element_ops` A/B flag) and every fused primitive and
+//! [`reduce_local`](RankCtx::reduce_local) applies through the resolved
+//! handle — no per-application dyn lookup for built-in operators (see
+//! [`crate::mpi::op`]).
+//!
 //! Communicator scoping (the scan-service layer): inside
 //! [`with_comm`](RankCtx::with_comm), `rank()`/`size()` and every peer
 //! argument are communicator-relative, and every message tag carries the
@@ -44,9 +52,9 @@ use anyhow::{bail, Result};
 use super::chaos::{Chaos, ChaosAction};
 use super::comm::{Comm, TagKey, WORLD_CTX};
 use super::elem::Elem;
-use super::inbox::Inbox;
+use super::inbox::{Inbox, InboxStats};
 use super::msg::Msg;
-use super::op::OpRef;
+use super::op::{OpKernel, OpRef};
 use super::pool::{BufferPool, PoolBuf, PoolStats};
 use super::vbarrier::VBarrier;
 use crate::cost::CostModel;
@@ -112,6 +120,11 @@ pub struct RankCtx<T: Elem> {
     /// separate reduce pass). Identical results and traces by
     /// construction; one extra memory pass per receive.
     unfused: bool,
+    /// A/B switch: [`kernel`](Self::kernel) resolves operators to the
+    /// per-element reference dispatch instead of the slice kernel.
+    /// Bit-identical results by the [`CombineOp`](super::CombineOp)
+    /// contract; only the per-application dispatch cost differs.
+    per_element: bool,
     /// Deadlock-detection deadline per blocking receive.
     recv_deadline: Duration,
     /// Per-world chaos injection (None outside chaos worlds — the hot
@@ -140,6 +153,7 @@ impl<T: Elem> RankCtx<T> {
         mode: ClockMode,
         tracing: bool,
         unfused: bool,
+        per_element: bool,
         recv_deadline: Duration,
         chaos: Option<Arc<Chaos>>,
     ) -> Self {
@@ -158,6 +172,7 @@ impl<T: Elem> RankCtx<T> {
             barrier_gen: 0,
             mode,
             unfused,
+            per_element,
             recv_deadline,
             chaos,
             chaos_ticks: 0,
@@ -315,6 +330,27 @@ impl<T: Elem> RankCtx<T> {
         self.pool.stats()
     }
 
+    /// This rank's inbox wait counters (spin probes / condvar parks) —
+    /// the adaptive-rendezvous observability used by the hotpath latency
+    /// sweep.
+    pub fn inbox_stats(&self) -> InboxStats {
+        self.inboxes[self.rank].stats()
+    }
+
+    /// Resolve `op` to its dispatch kernel for this collective, honouring
+    /// the world's A/B flag (`WorldConfig::with_per_element_ops`): slice
+    /// kernel by default, per-element reference when the flag is set.
+    /// Call **once** at the top of an algorithm's `run` and pass the
+    /// handle to the fused primitives — resolving per application would
+    /// reintroduce the lookup this exists to hoist.
+    pub fn kernel<'op>(&self, op: &'op OpRef<T>) -> OpKernel<'op, T> {
+        if self.per_element {
+            op.kernel_per_element()
+        } else {
+            op.kernel()
+        }
+    }
+
     fn bytes(len: usize) -> usize {
         len * T::size_bytes()
     }
@@ -433,8 +469,11 @@ impl<T: Elem> RankCtx<T> {
     /// One traced `⊕` application: sharded counter bump, trace event,
     /// virtual-clock advance. Every reduce — fused or explicit — funnels
     /// through here, so op counts and γ costs cannot diverge per path.
-    fn fold(&mut self, round: u32, op: &OpRef<T>, input: &[T], inout: &mut [T]) {
-        op.reduce_local_sharded(self.rank, input, inout);
+    /// Takes the **resolved** [`OpKernel`] (per-collective resolution):
+    /// the application is a relaxed counter add plus the resolved slice
+    /// call, with no per-application dyn lookup for built-in operators.
+    fn fold(&mut self, round: u32, op: &OpKernel<T>, input: &[T], inout: &mut [T]) {
+        op.apply_sharded(self.rank, input, inout);
         self.record(round, EventKind::Reduce { bytes: Self::bytes(input.len()) });
         if let ClockMode::Virtual(model) = &self.mode {
             self.vclock += model.reduce_cost(Self::bytes(input.len()));
@@ -446,7 +485,7 @@ impl<T: Elem> RankCtx<T> {
     /// combine reads straight from the pooled receive buffer. Unfused
     /// compat: copy into a pooled scratch first, then reduce — the
     /// pre-fusion extra memory pass, kept as the A/B reference.
-    fn fold_msg(&mut self, round: u32, op: &OpRef<T>, msg: Msg<T>, inout: &mut [T]) {
+    fn fold_msg(&mut self, round: u32, op: &OpKernel<T>, msg: Msg<T>, inout: &mut [T]) {
         if self.unfused {
             let tmp = BufferPool::acquire_copy(&self.pool, &msg.data);
             drop(msg); // recycle the transport buffer before reducing
@@ -461,7 +500,7 @@ impl<T: Elem> RankCtx<T> {
     /// [`fold_msg`](Self::fold_msg) with the **local** value as the
     /// earlier operand: `keep = keep ⊕ msg`. The combine writes into the
     /// pooled receive buffer, then the result copies back into `keep`.
-    fn fold_msg_right(&mut self, round: u32, op: &OpRef<T>, mut msg: Msg<T>, keep: &mut [T]) {
+    fn fold_msg_right(&mut self, round: u32, op: &OpKernel<T>, mut msg: Msg<T>, keep: &mut [T]) {
         if self.unfused {
             let mut tmp = BufferPool::acquire_copy(&self.pool, &msg.data);
             drop(msg);
@@ -519,7 +558,7 @@ impl<T: Elem> RankCtx<T> {
         &mut self,
         round: u32,
         from: usize,
-        op: &OpRef<T>,
+        op: &OpKernel<T>,
         inout: &mut [T],
     ) -> Result<()> {
         let from = self.resolve_peer(from)?;
@@ -540,7 +579,7 @@ impl<T: Elem> RankCtx<T> {
         &mut self,
         round: u32,
         from: usize,
-        op: &OpRef<T>,
+        op: &OpKernel<T>,
         keep: &mut [T],
     ) -> Result<()> {
         let from = self.resolve_peer(from)?;
@@ -578,7 +617,7 @@ impl<T: Elem> RankCtx<T> {
         round: u32,
         to: usize,
         from: usize,
-        op: &OpRef<T>,
+        op: &OpKernel<T>,
         keep: &mut [T],
     ) -> Result<()> {
         let (to, from) = (self.resolve_peer(to)?, self.resolve_peer(from)?);
@@ -599,7 +638,7 @@ impl<T: Elem> RankCtx<T> {
         round: u32,
         to: usize,
         from: usize,
-        op: &OpRef<T>,
+        op: &OpKernel<T>,
         keep: &mut [T],
     ) -> Result<()> {
         let (to, from) = (self.resolve_peer(to)?, self.resolve_peer(from)?);
@@ -621,7 +660,7 @@ impl<T: Elem> RankCtx<T> {
         to: usize,
         sbuf: &[T],
         from: usize,
-        op: &OpRef<T>,
+        op: &OpKernel<T>,
         inout: &mut [T],
     ) -> Result<()> {
         let (to, from) = (self.resolve_peer(to)?, self.resolve_peer(from)?);
@@ -657,7 +696,7 @@ impl<T: Elem> RankCtx<T> {
     /// `MPI_Reduce_local`: `inout = input ⊕ inout`, attributed to `round`.
     /// Advances the virtual clock by `γ·bytes` and bumps this rank's
     /// shard of the op counters.
-    pub fn reduce_local(&mut self, round: u32, op: &OpRef<T>, input: &[T], inout: &mut [T]) {
+    pub fn reduce_local(&mut self, round: u32, op: &OpKernel<T>, input: &[T], inout: &mut [T]) {
         self.fold(round, op, input, inout);
     }
 
@@ -706,12 +745,13 @@ mod tests {
         let cfg = WorldConfig::new(Topology::flat(2));
         let out = run_world::<i64, Vec<i64>, _>(&cfg, |ctx| {
             let op = ops::bxor();
+            let k = ctx.kernel(&op);
             if ctx.rank() == 0 {
                 ctx.send(0, 1, &[1i64, 2])?;
                 Ok(vec![])
             } else {
                 let mut inout = vec![10i64, 20];
-                ctx.recv_reduce(0, 0, &op, &mut inout)?;
+                ctx.recv_reduce(0, 0, &k, &mut inout)?;
                 Ok(inout)
             }
         })
@@ -728,12 +768,13 @@ mod tests {
         let cfg = WorldConfig::new(Topology::flat(2));
         let out = run_world::<Rec2, Vec<Rec2>, _>(&cfg, |ctx| {
             let op = ops::rec2_compose();
+            let k = ctx.kernel(&op);
             if ctx.rank() == 0 {
                 ctx.send(0, 1, &[b])?;
                 Ok(vec![])
             } else {
                 let mut keep = vec![a];
-                ctx.recv_reduce_right(0, 0, &op, &mut keep)?;
+                ctx.recv_reduce_right(0, 0, &k, &mut keep)?;
                 Ok(keep)
             }
         })
@@ -750,17 +791,19 @@ mod tests {
         let fused = run_world::<i64, i64, _>(&cfg, |ctx| {
             let (r, p) = (ctx.rank(), ctx.size());
             let op = ops::sum_i64();
+            let k = ctx.kernel(&op);
             let mut keep = [r as i64];
-            ctx.sendrecv_reduce(0, (r + 1) % p, (r + p - 1) % p, &op, &mut keep)?;
+            ctx.sendrecv_reduce(0, (r + 1) % p, (r + p - 1) % p, &k, &mut keep)?;
             Ok(keep[0])
         })
         .unwrap();
         let two_step = run_world::<i64, i64, _>(&cfg, |ctx| {
             let (r, p) = (ctx.rank(), ctx.size());
             let op = ops::sum_i64();
+            let k = ctx.kernel(&op);
             let mut keep = [r as i64];
             let t = ctx.sendrecv_owned(0, (r + 1) % p, &keep, (r + p - 1) % p, 1)?;
-            ctx.reduce_local(0, &op, &t, &mut keep);
+            ctx.reduce_local(0, &k, &t, &mut keep);
             Ok(keep[0])
         })
         .unwrap();
@@ -775,9 +818,10 @@ mod tests {
             run_world::<i64, i64, _>(&cfg, |ctx| {
                 let (r, p) = (ctx.rank(), ctx.size());
                 let op = ops::bxor();
+                let k = ctx.kernel(&op);
                 let mut keep = [(r as i64) << 4 | 3];
-                ctx.sendrecv_reduce(0, (r + 1) % p, (r + p - 1) % p, &op, &mut keep)?;
-                ctx.sendrecv_reduce(1, (r + 2) % p, (r + p - 2) % p, &op, &mut keep)?;
+                ctx.sendrecv_reduce(0, (r + 1) % p, (r + p - 1) % p, &k, &mut keep)?;
+                ctx.sendrecv_reduce(1, (r + 2) % p, (r + p - 2) % p, &k, &mut keep)?;
                 Ok(keep[0])
             })
             .unwrap()

@@ -11,7 +11,9 @@
 //! where the tag is a packed [`TagKey`](super::comm::TagKey) carrying
 //! (ctx, chunk, round), so concurrent collectives on distinct
 //! communicators key distinctly even at equal round indices. The inbox
-//! hashes (src, tag) into a small slot array:
+//! hashes (src, tag) into a small slot array (each slot padded to its own
+//! 128 B cache line, so a sender raising one slot's flag never invalidates
+//! the line a receiver is probing for a different slot):
 //!
 //! * **deposit** (sender side): take the slot's own lock (uncontended —
 //!   only this sender and the receiver ever touch it), place the message,
@@ -23,10 +25,60 @@
 //!   draining `overflow` between probes; park on the inbox condvar when
 //!   the spin budget runs out.
 //!
-//! Wakeups use the Dekker-style `parked` flag + mutex handshake; parks are
-//! additionally time-sliced (`PARK_SLICE`) so a theoretically lost wakeup
-//! degrades to a bounded stall rather than a hang. The receive deadline
-//! (deadlock detection) is enforced by the caller via `recv_deadline`.
+//! ## Adaptive spin budget
+//!
+//! The spin budget used to be a fixed 100 probes. It is now driven by a
+//! **per-slot EMA of the observed rendezvous wait** (in probe iterations,
+//! receiver-written only, relaxed): slots whose partner historically
+//! arrives within the spin window earn a budget proportional to the
+//! observed wait; slots whose waits historically overflow into parks are
+//! demoted to a short probe burst, so the receiver pays the park early
+//! instead of burning a core. A park feeds back as a capped large wait;
+//! recovery from demotion is guaranteed by a periodic full-budget
+//! measurement burst (every [`DEMOTED_REPROBE_PERIOD`]th receive) that
+//! observes the true wait, so a phase change in either direction
+//! re-converges geometrically (decay 7/8 per match). Hosts with ≤ 2
+//! cores never spin — the
+//! `available_parallelism` probe is taken once per process and cached in
+//! a `OnceLock` ([`spin_allowed`]), never re-queried inside a receive
+//! loop. `WorldConfig::with_fixed_spin(true)` restores the fixed budget
+//! as the A/B reference for the hotpath latency sweep.
+//!
+//! ## Memory ordering (the Dekker-with-backstop proof sketch)
+//!
+//! All four atomics here (`Slot::full`, `overflow_len`, `delayed_len`,
+//! `parked`) were SeqCst; they are now Release/Acquire/Relaxed. The
+//! downgrade is sound because **no safety property depends on the
+//! atomics**:
+//!
+//! 1. *Message transfer is mutex-protected.* A message is only ever read
+//!    out of `Slot::cell` / `overflow` / `delayed` under that queue's
+//!    lock, and any probe that takes the lock after the depositing
+//!    sender's unlock observes the message (mutex acquire/release
+//!    ordering). The atomics are pure *liveness hints* that let the hot
+//!    path skip the lock — a stale hint can only delay a match, never
+//!    corrupt or duplicate one.
+//! 2. *The park handshake is lock-ordered.* The receiver sets `parked`,
+//!    re-probes, and enters `Condvar::wait` all under `park_lock`; a
+//!    sender whose `wake()` sees `parked == true` takes `park_lock`
+//!    before notifying. So the notify either happens while the receiver
+//!    waits (delivered) or before the receiver's final re-probe (the
+//!    re-probe, lock-ordered after the deposit, finds the message).
+//! 3. *The one remaining race is bounded, not unsafe.* Without SeqCst,
+//!    the classic Dekker store→load pair (sender: store `full`, load
+//!    `parked`; receiver: store `parked`, re-probe `full`) can in theory
+//!    both read stale values — the sender skips the notify *and* the
+//!    receiver misses the deposit. The receiver then sleeps at most one
+//!    `PARK_SLICE` (10 ms) and re-probes; by then the mutex guarantees
+//!    visibility. Safety is unconditional; liveness degrades from
+//!    "immediate" to "≤ one slice" in a window that requires a deposit
+//!    racing the park transition exactly. The previous SeqCst version
+//!    already documented (and sliced its parks against) this lost-wakeup
+//!    shape; the downgrade makes the backstop load-bearing in exchange
+//!    for removing full fences from every deposit and probe.
+//!    Chaos-verified: the 3-seed CI fuzz grid replays bit-identical
+//!    `ChaosReport` digests, outputs and traces across this change
+//!    (`tests/chaos_sweep.rs`, `tests/kernel_equivalence.rs`).
 //!
 //! The matched message's pooled buffer is consumed in place by the fused
 //! `RankCtx::{recv_reduce, sendrecv_reduce}` primitives — the `⊕` combine
@@ -35,7 +87,7 @@
 //! never costs an extra memory pass after leaving the slot.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -48,31 +100,93 @@ use super::msg::Msg;
 const NSLOTS: usize = 64;
 
 /// Upper bound on one condvar park. A correctly delivered wakeup arrives
-/// immediately; the slice only bounds the damage of the (never observed,
-/// but theoretically possible under weak orderings) lost-wakeup race.
+/// immediately; the slice bounds the damage of the lost-wakeup race the
+/// Acquire/Release handshake tolerates (see the module docs: with relaxed
+/// `parked` hints the backstop is load-bearing, not merely theoretical).
 const PARK_SLICE: Duration = Duration::from_millis(10);
 
-/// Bounded spin before parking. Rendezvous partners usually land within a
-/// few hundred nanoseconds, far below the ~1–2 µs cost of a park+unpark
-/// cycle — but spinning only pays off when the peer can run in parallel,
-/// so single-core hosts park immediately (same policy the old channel
-/// used; see EXPERIMENTS.md §Perf).
-fn spin_tries() -> u32 {
-    static N: std::sync::OnceLock<u32> = std::sync::OnceLock::new();
-    *N.get_or_init(|| {
-        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        if cores > 2 {
-            100
-        } else {
-            0
-        }
+/// Fixed spin budget (probes) — the pre-adaptive policy, kept behind
+/// `WorldConfig::with_fixed_spin(true)` as the latency-sweep baseline.
+const FIXED_SPIN_TRIES: u32 = 100;
+
+/// Initial per-slot wait EMA (probe iterations): start where the fixed
+/// policy spun, adapt from there.
+const EMA_INIT: u32 = 100;
+
+/// Cap on one recorded wait observation. Every park contributes the cap,
+/// so repeated parking walks the EMA above [`PARK_EMA_CUTOFF`] within a
+/// few matches (geometric approach to the cap).
+const WAIT_CAP: u32 = 2048;
+
+/// EMA at or above this demotes the slot to the short probe burst: the
+/// partner historically does not arrive within any reasonable spin
+/// window, so park early and cheaply.
+const PARK_EMA_CUTOFF: u32 = 900;
+
+/// Probe burst kept even for park-biased slots (immediate arrivals
+/// record w = 0 through it, pulling the EMA back down).
+const MIN_PROBE_BURST: u32 = 32;
+
+/// Every Nth receive on a *demoted* slot runs a full-budget measurement
+/// burst instead of the short one. Necessary for recovery: a demoted
+/// slot whose partner now lands within the spin window but *after* the
+/// short burst would otherwise park every time and record the cap —
+/// the demotion would be sticky. The periodic burst observes the true
+/// wait, so the EMA decays back under the cutoff geometrically (~7
+/// bursts for a wait of ~100 probes), at a bounded cost of one long
+/// burst per [`DEMOTED_REPROBE_PERIOD`] receives while genuinely slow.
+const DEMOTED_REPROBE_PERIOD: u32 = 16;
+
+/// Ceiling of the adaptive budget.
+const SPIN_BUDGET_MAX: u32 = 1024;
+
+/// Whether spinning can pay off at all: only when the rendezvous partner
+/// can run in parallel, so single-core (and dual-core, where the partner
+/// fights the receiver for the second core) hosts park immediately. The
+/// `available_parallelism` probe is cached in a `OnceLock` — one OS query
+/// per process, never inside a receive loop.
+fn spin_allowed() -> bool {
+    static ALLOWED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ALLOWED.get_or_init(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) > 2
     })
 }
 
+/// Receiver-side wait counters (test/bench observability; see the hotpath
+/// latency sweep). Monotonic over the inbox's lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct InboxStats {
+    /// Spin probes executed across all receives.
+    pub spins: u64,
+    /// Condvar parks entered across all receives.
+    pub parks: u64,
+}
+
+impl InboxStats {
+    pub fn merge(&mut self, other: &InboxStats) {
+        self.spins += other.spins;
+        self.parks += other.parks;
+    }
+}
+
+/// One rendezvous slot, padded to a 128 B cache line (two-line prefetch
+/// granularity on x86, native line on Apple ARM) so neighbouring slots
+/// never false-share under concurrent senders.
+#[repr(align(128))]
 struct Slot<T> {
-    /// Raised (SeqCst) after a message is placed; the receiver's cheap
-    /// probe. SeqCst pairs with the `parked` flag for the Dekker handshake.
+    /// Raised (Release) after a message is placed; the receiver's cheap
+    /// probe (Acquire). A liveness hint only — the message itself is
+    /// transferred under `cell`'s lock (see the module-level proof
+    /// sketch).
     full: AtomicBool,
+    /// EMA of the receiver's observed wait on this slot, in probe
+    /// iterations (capped at [`WAIT_CAP`]). Written only by the owning
+    /// receiver, read only by it — Relaxed.
+    wait_ema: AtomicU32,
+    /// Receives served on this slot while demoted (drives the periodic
+    /// [`DEMOTED_REPROBE_PERIOD`] measurement burst). Receiver-only,
+    /// Relaxed.
+    demoted_recvs: AtomicU32,
     cell: Mutex<Option<Msg<T>>>,
 }
 
@@ -80,19 +194,27 @@ struct Slot<T> {
 /// owning rank calls [`recv_match`](Inbox::recv_match).
 pub(crate) struct Inbox<T> {
     slots: Vec<Slot<T>>,
+    /// Fixed (pre-adaptive) spin budget instead of the per-slot EMA —
+    /// the latency-sweep A/B baseline.
+    fixed_spin: bool,
     overflow: Mutex<VecDeque<Msg<T>>>,
-    /// Lock-free emptiness probe for the overflow queue.
+    /// Lock-free emptiness hint for the overflow queue (Relaxed: a stale
+    /// zero only delays the match until the next probe or park slice).
     overflow_len: AtomicUsize,
     /// Messages under chaos embargo: matchable only once their release
     /// instant passes (see [`super::chaos`]). Empty (and never locked on
     /// the probe path) when chaos is off.
     delayed: Mutex<Vec<(Instant, Msg<T>)>>,
-    /// Lock-free emptiness probe for the embargo queue.
+    /// Lock-free emptiness hint for the embargo queue.
     delayed_len: AtomicUsize,
-    /// Receiver-is-parked flag (Dekker partner of `Slot::full`).
+    /// Receiver-is-parked hint (Dekker partner of `Slot::full`; Relaxed —
+    /// see the module docs for why the park slice bounds the race).
     parked: AtomicBool,
     park_lock: Mutex<()>,
     park_cv: Condvar,
+    /// Receiver-written wait counters (Relaxed).
+    stat_spins: AtomicU64,
+    stat_parks: AtomicU64,
 }
 
 fn slot_index(src: usize, tag: u64) -> usize {
@@ -109,11 +231,24 @@ impl<T> Default for Inbox<T> {
 }
 
 impl<T> Inbox<T> {
+    /// Adaptive-spin inbox (the default policy).
     pub fn new() -> Self {
+        Self::new_with(false)
+    }
+
+    /// `fixed_spin = true` restores the fixed 100-probe budget (the
+    /// pre-adaptive policy) for A/B latency measurement.
+    pub fn new_with(fixed_spin: bool) -> Self {
         Inbox {
             slots: (0..NSLOTS)
-                .map(|_| Slot { full: AtomicBool::new(false), cell: Mutex::new(None) })
+                .map(|_| Slot {
+                    full: AtomicBool::new(false),
+                    wait_ema: AtomicU32::new(EMA_INIT),
+                    demoted_recvs: AtomicU32::new(0),
+                    cell: Mutex::new(None),
+                })
                 .collect(),
+            fixed_spin,
             overflow: Mutex::new(VecDeque::new()),
             overflow_len: AtomicUsize::new(0),
             delayed: Mutex::new(Vec::new()),
@@ -121,6 +256,16 @@ impl<T> Inbox<T> {
             parked: AtomicBool::new(false),
             park_lock: Mutex::new(()),
             park_cv: Condvar::new(),
+            stat_spins: AtomicU64::new(0),
+            stat_parks: AtomicU64::new(0),
+        }
+    }
+
+    /// Receiver-side wait counters since construction.
+    pub fn stats(&self) -> InboxStats {
+        InboxStats {
+            spins: self.stat_spins.load(Ordering::Relaxed),
+            parks: self.stat_parks.load(Ordering::Relaxed),
         }
     }
 
@@ -131,7 +276,7 @@ impl<T> Inbox<T> {
             let mut cell = slot.cell.lock().unwrap();
             if cell.is_none() {
                 *cell = Some(msg);
-                slot.full.store(true, Ordering::SeqCst);
+                slot.full.store(true, Ordering::Release);
                 None
             } else {
                 Some(msg) // collision with a different in-flight message
@@ -139,7 +284,7 @@ impl<T> Inbox<T> {
         };
         if let Some(msg) = overflowed {
             self.overflow.lock().unwrap().push_back(msg);
-            self.overflow_len.fetch_add(1, Ordering::SeqCst);
+            self.overflow_len.fetch_add(1, Ordering::Relaxed);
         }
         self.wake();
     }
@@ -159,7 +304,7 @@ impl<T> Inbox<T> {
             // lock (here and in `release_due`), so it can never drift.
             let mut held = self.delayed.lock().unwrap();
             held.push((release_at, msg));
-            self.delayed_len.store(held.len(), Ordering::SeqCst);
+            self.delayed_len.store(held.len(), Ordering::Relaxed);
         }
         self.wake(); // receiver re-probes and re-slices its park deadline
     }
@@ -169,7 +314,7 @@ impl<T> Inbox<T> {
     /// paths on schedules that would otherwise never touch them.
     pub fn deposit_overflow(&self, msg: Msg<T>) {
         self.overflow.lock().unwrap().push_back(msg);
-        self.overflow_len.fetch_add(1, Ordering::SeqCst);
+        self.overflow_len.fetch_add(1, Ordering::Relaxed);
         self.wake();
     }
 
@@ -177,7 +322,7 @@ impl<T> Inbox<T> {
     /// the normal matching path. Cheap when the embargo queue is empty
     /// (one atomic load).
     fn release_due(&self) {
-        if self.delayed_len.load(Ordering::SeqCst) == 0 {
+        if self.delayed_len.load(Ordering::Relaxed) == 0 {
             return;
         }
         let now = Instant::now();
@@ -192,7 +337,7 @@ impl<T> Inbox<T> {
                     i += 1;
                 }
             }
-            self.delayed_len.store(held.len(), Ordering::SeqCst);
+            self.delayed_len.store(held.len(), Ordering::Relaxed);
             due
         };
         for msg in due {
@@ -204,47 +349,87 @@ impl<T> Inbox<T> {
     /// under the park lock so a just-arrived embargo can never be slept
     /// past (its `wake()` may have fired before `parked` was raised).
     fn next_release_hint(&self) -> Option<Instant> {
-        if self.delayed_len.load(Ordering::SeqCst) == 0 {
+        if self.delayed_len.load(Ordering::Relaxed) == 0 {
             return None;
         }
         self.delayed.lock().unwrap().iter().map(|(t, _)| *t).min()
     }
 
+    /// Wake a parked receiver, if any. Fast path: **one relaxed load, no
+    /// lock** — a sender depositing into an inbox whose receiver is busy
+    /// (the overwhelming steady-state case) pays nothing here. Only when
+    /// the hint reads `true` does the sender take `park_lock` so the
+    /// notify cannot slip between the receiver's final re-probe and its
+    /// wait. A stale `false` (the receiver parking concurrently) is the
+    /// bounded Dekker race analysed in the module docs: the receiver's
+    /// sliced park re-probes within `PARK_SLICE`.
     fn wake(&self) {
-        if self.parked.load(Ordering::SeqCst) {
-            // Take the park lock so the notify cannot slip between the
-            // receiver's final re-check and its wait (no lost wakeup).
-            let _g = self.park_lock.lock().unwrap();
-            self.park_cv.notify_all();
+        if !self.parked.load(Ordering::Relaxed) {
+            return;
         }
+        let _g = self.park_lock.lock().unwrap();
+        self.park_cv.notify_all();
     }
 
-    /// Try to take the message in the slot keyed by (src, tag). Returns
-    /// whatever message occupies that slot — the caller checks the match
-    /// and buffers strangers (slot collisions) itself.
-    fn try_slot(&self, src: usize, tag: u64) -> Option<Msg<T>> {
-        let slot = &self.slots[slot_index(src, tag)];
-        if !slot.full.load(Ordering::SeqCst) {
+    /// Take whatever message occupies `slot` — the caller checks the
+    /// match and buffers strangers (slot collisions) itself.
+    fn take_slot(slot: &Slot<T>) -> Option<Msg<T>> {
+        if !slot.full.load(Ordering::Acquire) {
             return None;
         }
         let mut cell = slot.cell.lock().unwrap();
         let msg = cell.take();
         if msg.is_some() {
-            slot.full.store(false, Ordering::SeqCst);
+            // Receiver-only write, ordered by the cell mutex against the
+            // next depositor's check.
+            slot.full.store(false, Ordering::Relaxed);
         }
         msg
     }
 
     /// Pop one message from the unordered overflow queue.
     fn try_overflow(&self) -> Option<Msg<T>> {
-        if self.overflow_len.load(Ordering::SeqCst) == 0 {
+        if self.overflow_len.load(Ordering::Relaxed) == 0 {
             return None;
         }
         let msg = self.overflow.lock().unwrap().pop_front();
         if msg.is_some() {
-            self.overflow_len.fetch_sub(1, Ordering::SeqCst);
+            self.overflow_len.fetch_sub(1, Ordering::Relaxed);
         }
         msg
+    }
+
+    /// The spin budget for one receive on `slot`, resolved at entry:
+    /// fixed policy, or the per-slot EMA-derived budget (see the module
+    /// docs).
+    fn spin_budget(&self, slot: &Slot<T>) -> u32 {
+        if !spin_allowed() {
+            return 0;
+        }
+        if self.fixed_spin {
+            return FIXED_SPIN_TRIES;
+        }
+        let ema = slot.wait_ema.load(Ordering::Relaxed);
+        if ema >= PARK_EMA_CUTOFF {
+            // Demoted: park early — but re-measure with a full burst every
+            // Nth receive so recovery is possible (see the constant docs).
+            let n = slot.demoted_recvs.fetch_add(1, Ordering::Relaxed);
+            if n % DEMOTED_REPROBE_PERIOD == 0 {
+                SPIN_BUDGET_MAX
+            } else {
+                MIN_PROBE_BURST
+            }
+        } else {
+            (2 * ema + 16).min(SPIN_BUDGET_MAX)
+        }
+    }
+
+    /// Feed one observed wait (probe iterations, capped) into the slot's
+    /// EMA: `ema ← (7·ema + w) / 8`. Receiver-only, Relaxed.
+    fn record_wait(slot: &Slot<T>, waited: u32) {
+        let w = waited.min(WAIT_CAP) as u64;
+        let old = slot.wait_ema.load(Ordering::Relaxed) as u64;
+        slot.wait_ema.store(((old * 7 + w) / 8) as u32, Ordering::Relaxed);
     }
 
     /// Receiver side: block until the message from `src` tagged `tag`
@@ -261,14 +446,29 @@ impl<T> Inbox<T> {
         pending: &mut Vec<Msg<T>>,
         deadline: Instant,
     ) -> Option<Msg<T>> {
-        let mut spins = 0u32;
+        // Hoist the expected slot and its budget out of the probe loop:
+        // one hash, one EMA read per receive — not per probe.
+        let slot = &self.slots[slot_index(src, tag)];
+        let budget = self.spin_budget(slot);
+        let mut waited = 0u32; // probes + park penalties — the EMA's input
+        let mut probes = 0u32; // real spin probes only — the stats' input
+        let mut spins = 0u32; // probes since the last park
+        // Stat flush is deferred to the exit paths: one atomic add per
+        // receive, not one per probe (the probe loop is the hot path).
+        let flush = |probes: u32| {
+            if probes > 0 {
+                self.stat_spins.fetch_add(probes as u64, Ordering::Relaxed);
+            }
+        };
         loop {
             // 0. Release any chaos-embargoed messages that are now due
             // (no-op single atomic probe when chaos is off).
             self.release_due();
             // 1. The expected slot (single atomic probe on the fast path).
-            if let Some(msg) = self.try_slot(src, tag) {
+            if let Some(msg) = Self::take_slot(slot) {
                 if msg.src == src && msg.tag == tag {
+                    Self::record_wait(slot, waited);
+                    flush(probes);
                     return Some(msg);
                 }
                 pending.push(msg);
@@ -277,39 +477,47 @@ impl<T> Inbox<T> {
             // 2. The unordered overflow path.
             if let Some(msg) = self.try_overflow() {
                 if msg.src == src && msg.tag == tag {
+                    flush(probes);
                     return Some(msg);
                 }
                 pending.push(msg);
                 continue;
             }
             // 3. Spin a little, then park until a deposit (or time slice).
-            if spins < spin_tries() {
+            if spins < budget {
                 spins += 1;
+                probes += 1;
+                waited = waited.saturating_add(1);
                 std::hint::spin_loop();
                 continue;
             }
             spins = 0;
             let now = Instant::now();
             if now >= deadline {
+                flush(probes);
                 return None;
             }
             let mut wait = PARK_SLICE.min(deadline - now);
             let guard = self.park_lock.lock().unwrap();
-            self.parked.store(true, Ordering::SeqCst);
+            self.parked.store(true, Ordering::Relaxed);
             // Final re-check under the park lock: a deposit that happened
             // before we raised `parked` is caught here; one that happens
-            // after will see `parked` and take the lock to notify.
-            if let Some(m) = self.try_slot(src, tag) {
-                self.parked.store(false, Ordering::SeqCst);
+            // after will see `parked` and take the lock to notify. (The
+            // store→load race both directions can lose is bounded by the
+            // sliced wait below — module docs.)
+            if let Some(m) = Self::take_slot(slot) {
+                self.parked.store(false, Ordering::Relaxed);
                 drop(guard);
                 if m.src == src && m.tag == tag {
+                    Self::record_wait(slot, waited);
+                    flush(probes);
                     return Some(m);
                 }
                 pending.push(m);
                 continue;
             }
-            if self.overflow_len.load(Ordering::SeqCst) != 0 {
-                self.parked.store(false, Ordering::SeqCst);
+            if self.overflow_len.load(Ordering::Relaxed) != 0 {
+                self.parked.store(false, Ordering::Relaxed);
                 drop(guard);
                 continue;
             }
@@ -321,14 +529,19 @@ impl<T> Inbox<T> {
             if let Some(release_at) = self.next_release_hint() {
                 let now = Instant::now();
                 if release_at <= now {
-                    self.parked.store(false, Ordering::SeqCst);
+                    self.parked.store(false, Ordering::Relaxed);
                     drop(guard);
                     continue;
                 }
                 wait = wait.min((release_at - now).max(Duration::from_micros(50)));
             }
+            self.stat_parks.fetch_add(1, Ordering::Relaxed);
             let (_guard, _res) = self.park_cv.wait_timeout(guard, wait).unwrap();
-            self.parked.store(false, Ordering::SeqCst);
+            self.parked.store(false, Ordering::Relaxed);
+            // A park means the partner was far outside the spin window:
+            // feed the cap so the EMA demotes this slot toward parking
+            // early next time.
+            waited = waited.saturating_add(WAIT_CAP);
         }
     }
 
@@ -337,10 +550,16 @@ impl<T> Inbox<T> {
     #[allow(dead_code)] // crate-internal diagnostics; exercised in tests
     pub fn occupancy(&self) -> usize {
         let in_slots =
-            self.slots.iter().filter(|s| s.full.load(Ordering::SeqCst)).count();
+            self.slots.iter().filter(|s| s.full.load(Ordering::Acquire)).count();
         in_slots
-            + self.overflow_len.load(Ordering::SeqCst)
-            + self.delayed_len.load(Ordering::SeqCst)
+            + self.overflow_len.load(Ordering::Relaxed)
+            + self.delayed_len.load(Ordering::Relaxed)
+    }
+
+    /// Test hook: the wait EMA of the slot keyed by (src, tag).
+    #[cfg(test)]
+    fn ema_of(&self, src: usize, tag: u64) -> u32 {
+        self.slots[slot_index(src, tag)].wait_ema.load(Ordering::Relaxed)
     }
 }
 
@@ -523,5 +742,109 @@ mod tests {
         assert!(pending.is_empty());
         assert_eq!(inbox.occupancy(), 0);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn slots_are_cache_line_padded() {
+        assert!(std::mem::align_of::<Slot<i64>>() >= 128);
+        assert_eq!(std::mem::size_of::<Slot<i64>>() % 128, 0);
+    }
+
+    #[test]
+    fn ema_converges_down_on_immediate_matches() {
+        // Message already present on every receive → observed wait 0 →
+        // the EMA decays geometrically from its initial 100.
+        let inbox: Inbox<i64> = Inbox::new();
+        let mut pending = Vec::new();
+        assert_eq!(inbox.ema_of(5, 5), EMA_INIT);
+        for _ in 0..64 {
+            inbox.deposit(msg(5, 5, 1));
+            let got = inbox.recv_match(5, 5, &mut pending, deadline()).unwrap();
+            assert_eq!(got.data[0], 1);
+        }
+        assert!(
+            inbox.ema_of(5, 5) < EMA_INIT / 4,
+            "EMA must decay on immediate matches: {}",
+            inbox.ema_of(5, 5)
+        );
+    }
+
+    #[test]
+    fn ema_rises_after_parks_and_recovers() {
+        // A parked wait feeds the cap into the EMA (demoting the slot to
+        // the short probe burst); a subsequent run of immediate matches
+        // pulls it back down — the regime-change recovery path.
+        let inbox: Arc<Inbox<i64>> = Arc::new(Inbox::new());
+        let tx = Arc::clone(&inbox);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(25));
+            tx.deposit(msg(2, 8, 7));
+        });
+        let mut pending = Vec::new();
+        let got = inbox.recv_match(2, 8, &mut pending, deadline()).unwrap();
+        assert_eq!(got.data[0], 7);
+        h.join().unwrap();
+        let after_park = inbox.ema_of(2, 8);
+        assert!(after_park > EMA_INIT, "a park must raise the EMA: {after_park}");
+        assert!(inbox.stats().parks >= 1);
+        // The spin counter reports *real* probes only — the EMA's
+        // per-park penalty (WAIT_CAP) must not leak into the stats.
+        assert!(
+            inbox.stats().spins < 2 * WAIT_CAP as u64,
+            "spin stats inflated by park penalties: {:?}",
+            inbox.stats()
+        );
+        for _ in 0..200 {
+            inbox.deposit(msg(2, 8, 7));
+            inbox.recv_match(2, 8, &mut pending, deadline()).unwrap();
+        }
+        assert!(
+            inbox.ema_of(2, 8) < PARK_EMA_CUTOFF,
+            "EMA must recover once arrivals become immediate: {}",
+            inbox.ema_of(2, 8)
+        );
+    }
+
+    #[test]
+    fn demoted_slot_gets_periodic_measurement_bursts() {
+        if !spin_allowed() {
+            return; // budgets are always 0 on <= 2-core hosts
+        }
+        let inbox: Inbox<i64> = Inbox::new();
+        let slot = &inbox.slots[slot_index(4, 4)];
+        slot.wait_ema.store(WAIT_CAP, Ordering::Relaxed); // force demotion
+        let budgets: Vec<u32> = (0..DEMOTED_REPROBE_PERIOD * 2)
+            .map(|_| inbox.spin_budget(slot))
+            .collect();
+        let bursts = budgets.iter().filter(|&&b| b == SPIN_BUDGET_MAX).count();
+        assert_eq!(bursts, 2, "one full measurement burst per period: {budgets:?}");
+        assert!(
+            budgets.iter().all(|&b| b == SPIN_BUDGET_MAX || b == MIN_PROBE_BURST),
+            "{budgets:?}"
+        );
+    }
+
+    #[test]
+    fn fixed_spin_policy_still_matches() {
+        let inbox: Inbox<i64> = Inbox::new_with(true);
+        inbox.deposit(msg(1, 1, 4));
+        let mut pending = Vec::new();
+        let got = inbox.recv_match(1, 1, &mut pending, deadline()).unwrap();
+        assert_eq!(got.data[0], 4);
+        // Budget resolution ignores the EMA under the fixed policy.
+        let budget = inbox.spin_budget(&inbox.slots[slot_index(1, 1)]);
+        assert!(budget == FIXED_SPIN_TRIES || !spin_allowed());
+    }
+
+    #[test]
+    fn stats_count_parks() {
+        let inbox: Inbox<i64> = Inbox::new();
+        let mut pending = Vec::new();
+        let before = inbox.stats();
+        let got =
+            inbox.recv_match(0, 0, &mut pending, Instant::now() + Duration::from_millis(40));
+        assert!(got.is_none());
+        let after = inbox.stats();
+        assert!(after.parks > before.parks, "a timed-out receive must have parked");
     }
 }

@@ -3,7 +3,8 @@
 //!
 //! * [`elem`] — element types (`MPI_Datatype` analogue), incl. [`Rec2`].
 //! * [`op`] — associative operators (`MPI_Op` + `MPI_Reduce_local`) with
-//!   per-rank sharded application counters.
+//!   per-rank sharded application counters and the [`OpKernel`] slice
+//!   dispatch engine (resolved once per collective).
 //! * [`comm`] — communicators with context ids ([`Comm`], `dup`/`split`)
 //!   and the packed [`TagKey`] that match-isolates concurrent collectives.
 //! * [`ctx`] — the per-rank API: `send`/`recv`/`sendrecv`/`reduce_local`
@@ -37,7 +38,8 @@ pub use chaos::{ChaosAction, ChaosConfig, ChaosEvent, ChaosReport};
 pub use comm::{Comm, CtxAlloc, TagKey, WORLD_CTX};
 pub use ctx::{ClockMode, RankCtx};
 pub use elem::{Dtype, Elem, Rec2};
-pub use op::{ops, CombineOp, FnOp, OpRef};
+pub use inbox::InboxStats;
+pub use op::{kernels, ops, CombineOp, FnOp, OpKernel, OpRef, SliceKernelFn};
 pub use pool::{PoolBuf, PoolStats};
 pub use world::{
     rank_threads_spawned, run_scan, run_world, RunResult, Topology, World, WorldConfig,

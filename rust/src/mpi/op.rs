@@ -1,4 +1,5 @@
-//! Binary associative operators (`MPI_Op` equivalents) and `reduce_local`.
+//! Binary associative operators (`MPI_Op` equivalents), `reduce_local`,
+//! and the **slice-kernel dispatch engine**.
 //!
 //! The central contract mirrors `MPI_Reduce_local(inbuf, inoutbuf)`:
 //! `inout[i] = in[i] ⊕ inout[i]`, where `in` holds the *earlier-ranked*
@@ -6,10 +7,30 @@
 //! algorithms in [`crate::coll`] are written to respect it.
 //!
 //! Operators come in three flavours:
-//! * native Rust closures over typed slices (the fast path),
+//! * native Rust operators over typed slices (the fast path),
 //! * the [`Rec2`](crate::mpi::Rec2) affine-composition operator, and
 //! * PJRT-backed operators ([`crate::runtime::PjrtOp`]) that execute the
 //!   AOT-compiled Pallas `reduce_local` kernel — the Layer-1 hot spot.
+//!
+//! ## Kernel dispatch (EXPERIMENTS.md §Perf)
+//!
+//! A ⊕ application used to be one virtual `combine` call through
+//! `Arc<dyn CombineOp<T>>` per application, every round, on every rank —
+//! a per-round constant multiplied by q = ⌈log₂(p−1) + log₂(4/3)⌉.
+//! Dispatch is now resolved **once per collective**, not once per
+//! application: [`OpRef::kernel`] resolves the operator to an
+//! [`OpKernel`] handle holding either a *statically dispatched*
+//! monomorphized slice kernel (the built-in ops: bxor/bor/sum/min/max
+//! over the integer types, f64 sum, Rec2 compose — see [`kernels`]) or
+//! the dyn [`CombineOp::combine_slice`] fallback. All hot-path reduces
+//! (`RankCtx::fold` and everything funnelling through it, plus
+//! [`OpRef::reduce_local_sharded`]) apply through the handle, so the
+//! Arc deref + vtable lookup leaves the per-application path entirely
+//! for built-in operators, and costs exactly one resolved `fn` call per
+//! *slice* otherwise. The per-element reference dispatch survives as
+//! [`OpRef::kernel_per_element`] (selected world-wide by
+//! `WorldConfig::with_per_element_ops(true)`) and is asserted
+//! bit-identical to the slice path in `tests/kernel_equivalence.rs`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -29,19 +50,189 @@ const COUNTER_SHARDS: usize = 64;
 #[derive(Default)]
 struct CounterShard(AtomicU64);
 
+/// A monomorphized whole-slice combine: `inout[i] = input[i] ⊕ inout[i]`
+/// with `input` the earlier operand, over the full slice in one call.
+/// Plain `fn` pointers so an [`OpKernel`] dispatches with a direct call —
+/// no fat pointer, no vtable.
+pub type SliceKernelFn<T> = fn(&[T], &mut [T]);
+
 /// A binary, associative element-wise operator over vectors of `T`.
 pub trait CombineOp<T: Elem>: Send + Sync {
     /// Operator name (used in benchmark tables and artifact lookup).
     fn name(&self) -> &str;
 
     /// `inout[i] = input[i] ⊕ inout[i]` — `input` is the earlier operand.
+    /// This is the semantic ground truth and the per-element *reference*
+    /// path of the A/B comparison (`WorldConfig::with_per_element_ops`);
+    /// implementations apply the scalar ⊕ element by element.
     fn combine(&self, input: &[T], inout: &mut [T]);
+
+    /// Slice-wide combine. The default forwards to [`combine`]: inside a
+    /// concrete impl the call is statically dispatched and the combine
+    /// loop monomorphizes into an autovectorizable tight loop — the dyn
+    /// indirection is paid once per *slice*, never per element.
+    /// Specialized impls (e.g. a blocked or kernel-launched combine)
+    /// override it.
+    ///
+    /// Contract: bit-identical to [`combine`] on every input (asserted
+    /// for all registered operators in `tests/kernel_equivalence.rs`).
+    ///
+    /// [`combine`]: Self::combine
+    fn combine_slice(&self, input: &[T], inout: &mut [T]) {
+        self.combine(input, inout)
+    }
+
+    /// A statically dispatched slice kernel for this operator, if one
+    /// exists. Resolved once per [`OpRef`] construction and once per
+    /// collective into an [`OpKernel`]; `None` falls back to the dyn
+    /// [`combine_slice`](Self::combine_slice) call per application.
+    fn slice_kernel(&self) -> Option<SliceKernelFn<T>> {
+        None
+    }
 
     /// Whether the operator commutes (MPI predefined ops do; user-defined
     /// ops may not). Algorithms never exploit commutativity here, but the
     /// mpich-baseline bookkeeping branches on it, as the real library does.
     fn commutative(&self) -> bool {
         true
+    }
+}
+
+/// The monomorphized tight-loop slice kernels for the built-in operators.
+/// Each is a plain `fn` over asserted-equal-length slices whose loop body
+/// the compiler autovectorizes; [`OpKernel`] calls them directly, with no
+/// dyn dispatch anywhere on the path. Exposed for the hotpath bench's
+/// kernel sweep.
+pub mod kernels {
+    use super::super::elem::Rec2;
+
+    #[inline]
+    pub fn bxor_i64(input: &[i64], inout: &mut [i64]) {
+        for (o, &i) in inout.iter_mut().zip(input) {
+            *o = i ^ *o;
+        }
+    }
+
+    #[inline]
+    pub fn bor_i64(input: &[i64], inout: &mut [i64]) {
+        for (o, &i) in inout.iter_mut().zip(input) {
+            *o = i | *o;
+        }
+    }
+
+    #[inline]
+    pub fn sum_i64(input: &[i64], inout: &mut [i64]) {
+        for (o, &i) in inout.iter_mut().zip(input) {
+            *o = i.wrapping_add(*o);
+        }
+    }
+
+    #[inline]
+    pub fn sum_u64(input: &[u64], inout: &mut [u64]) {
+        for (o, &i) in inout.iter_mut().zip(input) {
+            *o = i.wrapping_add(*o);
+        }
+    }
+
+    #[inline]
+    pub fn sum_f64(input: &[f64], inout: &mut [f64]) {
+        for (o, &i) in inout.iter_mut().zip(input) {
+            *o = i + *o;
+        }
+    }
+
+    #[inline]
+    pub fn max_i64(input: &[i64], inout: &mut [i64]) {
+        for (o, &i) in inout.iter_mut().zip(input) {
+            *o = i.max(*o);
+        }
+    }
+
+    #[inline]
+    pub fn min_i64(input: &[i64], inout: &mut [i64]) {
+        for (o, &i) in inout.iter_mut().zip(input) {
+            *o = i.min(*o);
+        }
+    }
+
+    /// Affine-map composition (`earlier.then(&later)`), 22 flops per
+    /// element, fully inlined — the "expensive ⊕" regime where removing
+    /// the per-application dispatch matters least in relative terms but
+    /// the inlined `then` still beats an opaque closure call.
+    #[inline]
+    pub fn rec2_compose(input: &[Rec2], inout: &mut [Rec2]) {
+        for (o, &i) in inout.iter_mut().zip(input) {
+            *o = i.then(&*o);
+        }
+    }
+}
+
+/// Resolved dispatch of one [`OpKernel`].
+#[derive(Clone, Copy)]
+enum Kern<T: Elem> {
+    /// Monomorphized tight loop, called directly (built-in operators).
+    Static(SliceKernelFn<T>),
+    /// One virtual `combine_slice` call per application (user-defined
+    /// operators without a registered kernel, lifted/segmented operators,
+    /// PJRT-backed kernels).
+    DynSlice,
+    /// The per-element reference path (`combine`), kept behind
+    /// `WorldConfig::with_per_element_ops(true)` as the A/B baseline.
+    PerElement,
+}
+
+/// An operator resolved to its slice kernel, **once per collective**.
+///
+/// Obtained from [`OpRef::kernel`] (or `RankCtx::kernel`, which honours
+/// the world's A/B flag) at the top of an algorithm's `run` and passed to
+/// the fused `RankCtx` primitives: every subsequent ⊕ application is a
+/// counter bump plus a direct (or single-dyn) slice call. `Copy`, two
+/// words — cheap to pass around by reference or value.
+#[derive(Clone, Copy)]
+pub struct OpKernel<'op, T: Elem> {
+    op: &'op OpRef<T>,
+    kern: Kern<T>,
+}
+
+impl<'op, T: Elem> OpKernel<'op, T> {
+    /// Apply `inout = input ⊕ inout`, counting on the caller's shard
+    /// (`shard` is the rank id; wrapped into the shard array). The hot
+    /// path: one relaxed add on a rank-private cache line, then the
+    /// resolved slice call.
+    #[inline]
+    pub fn apply_sharded(&self, shard: usize, input: &[T], inout: &mut [T]) {
+        debug_assert_eq!(input.len(), inout.len());
+        self.op.bump(shard);
+        match self.kern {
+            Kern::Static(f) => f(input, inout),
+            Kern::DynSlice => self.op.op.combine_slice(input, inout),
+            Kern::PerElement => self.op.op.combine(input, inout),
+        }
+    }
+
+    /// The operator handle this kernel was resolved from.
+    pub fn op(&self) -> &'op OpRef<T> {
+        self.op
+    }
+
+    /// Operator name (borrowed; see [`OpRef::name`]).
+    pub fn name(&self) -> &str {
+        self.op.name()
+    }
+
+    pub fn commutative(&self) -> bool {
+        self.op.commutative()
+    }
+
+    /// How this kernel dispatches: `"static"` (monomorphized fn pointer),
+    /// `"dyn-slice"` (virtual `combine_slice`) or `"per-element"` (the
+    /// reference path). Bench/table reporting only.
+    pub fn dispatch(&self) -> &'static str {
+        match self.kern {
+            Kern::Static(_) => "static",
+            Kern::DynSlice => "dyn-slice",
+            Kern::PerElement => "per-element",
+        }
     }
 }
 
@@ -54,17 +245,25 @@ pub trait CombineOp<T: Elem>: Send + Sync {
 /// point of true sharing for all p ranks on every ⊕). Aggregation happens
 /// lazily, only when the trace/table layer asks via [`applications`].
 ///
+/// The operator's slice kernel is resolved once, at construction; see the
+/// module docs and [`kernel`](Self::kernel).
+///
 /// [`applications`]: OpRef::applications
 pub struct OpRef<T: Elem> {
     op: Arc<dyn CombineOp<T>>,
+    /// Slice kernel resolved at construction (one dyn `slice_kernel`
+    /// call, ever), so per-collective [`kernel`](Self::kernel) resolution
+    /// is a field read.
+    kern: Option<SliceKernelFn<T>>,
     shards: Box<[CounterShard]>,
 }
 
 impl<T: Elem> OpRef<T> {
     pub fn new(op: Arc<dyn CombineOp<T>>) -> Self {
+        let kern = op.slice_kernel();
         let shards: Vec<CounterShard> =
             (0..COUNTER_SHARDS).map(|_| CounterShard::default()).collect();
-        OpRef { op, shards: shards.into_boxed_slice() }
+        OpRef { op, kern, shards: shards.into_boxed_slice() }
     }
 
     /// Operator name. Borrowed — this is read inside sweep loops and table
@@ -83,20 +282,51 @@ impl<T: Elem> OpRef<T> {
         self.op.commutative()
     }
 
-    /// Apply `inout = input ⊕ inout`, counting on shard 0. Single-threaded
-    /// callers (oracles, unit tests); rank threads use
-    /// [`reduce_local_sharded`](Self::reduce_local_sharded) via `RankCtx`.
+    /// Resolve the slice-dispatch kernel for this operator: the collective
+    /// entry point (call once per `run`, not per application). Static for
+    /// the built-in operators, dyn `combine_slice` otherwise.
+    #[inline]
+    pub fn kernel(&self) -> OpKernel<'_, T> {
+        OpKernel {
+            op: self,
+            kern: match self.kern {
+                Some(f) => Kern::Static(f),
+                None => Kern::DynSlice,
+            },
+        }
+    }
+
+    /// The per-element reference dispatch (`combine`), kept for the A/B
+    /// comparison (`WorldConfig::with_per_element_ops(true)` routes every
+    /// collective through it). Bit-identical to [`kernel`](Self::kernel)
+    /// by the [`CombineOp`] contract.
+    #[inline]
+    pub fn kernel_per_element(&self) -> OpKernel<'_, T> {
+        OpKernel { op: self, kern: Kern::PerElement }
+    }
+
+    /// One application on the given shard (relaxed, rank-private line).
+    #[inline]
+    fn bump(&self, shard: usize) {
+        self.shards[shard & (COUNTER_SHARDS - 1)].0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Apply `inout = input ⊕ inout`, counting on shard 0.
+    #[deprecated(
+        since = "0.2.0",
+        note = "pass an explicit caller shard: `reduce_local_sharded(shard, …)` \
+                (shard 0 silently aliased every unsharded caller onto one counter line)"
+    )]
     pub fn reduce_local(&self, input: &[T], inout: &mut [T]) {
         self.reduce_local_sharded(0, input, inout);
     }
 
     /// Apply `inout = input ⊕ inout`, counting on the caller's shard
-    /// (`shard` is the rank id; wrapped into the shard array). The hot
-    /// path: one relaxed add on a rank-private cache line.
+    /// (`shard` is the rank id — single-threaded callers such as oracles
+    /// and unit tests pass 0 explicitly; rank threads funnel through
+    /// `RankCtx`). Dispatches through the resolved slice kernel.
     pub fn reduce_local_sharded(&self, shard: usize, input: &[T], inout: &mut [T]) {
-        debug_assert_eq!(input.len(), inout.len());
-        self.shards[shard & (COUNTER_SHARDS - 1)].0.fetch_add(1, Ordering::Relaxed);
-        self.op.combine(input, inout);
+        self.kernel().apply_sharded(shard, input, inout);
     }
 
     /// Total ⊕ applications across all ranks since construction/reset
@@ -112,11 +342,16 @@ impl<T: Elem> OpRef<T> {
     }
 }
 
-/// A native operator defined by a per-element closure.
+/// A native operator defined by a per-element closure, optionally paired
+/// with a monomorphized slice kernel (the built-in constructors in
+/// [`ops`] all register one).
 pub struct FnOp<T: Elem, F: Fn(T, T) -> T + Send + Sync> {
     name: &'static str,
     commutative: bool,
     f: F,
+    /// Statically dispatched slice kernel; must be bit-identical to the
+    /// per-element loop over `f`.
+    kernel: Option<SliceKernelFn<T>>,
     _t: std::marker::PhantomData<T>,
 }
 
@@ -129,6 +364,17 @@ impl<T: Elem, F: Fn(T, T) -> T + Send + Sync> CombineOp<T> for FnOp<T, F> {
         for (o, &i) in inout.iter_mut().zip(input) {
             *o = (self.f)(i, *o);
         }
+    }
+
+    fn combine_slice(&self, input: &[T], inout: &mut [T]) {
+        match self.kernel {
+            Some(k) => k(input, inout),
+            None => self.combine(input, inout),
+        }
+    }
+
+    fn slice_kernel(&self) -> Option<SliceKernelFn<T>> {
+        self.kernel
     }
 
     fn commutative(&self) -> bool {
@@ -144,56 +390,69 @@ pub mod ops {
         name: &'static str,
         commutative: bool,
         f: F,
+        kernel: Option<SliceKernelFn<T>>,
     ) -> OpRef<T> {
-        OpRef::new(Arc::new(FnOp { name, commutative, f, _t: std::marker::PhantomData }))
+        OpRef::new(Arc::new(FnOp {
+            name,
+            commutative,
+            f,
+            kernel,
+            _t: std::marker::PhantomData,
+        }))
     }
 
     /// `MPI_BXOR` over i64 — the operator the paper benchmarks.
     pub fn bxor() -> OpRef<i64> {
-        mk("bxor_i64", true, |a: i64, b: i64| a ^ b)
+        mk("bxor_i64", true, |a: i64, b: i64| a ^ b, Some(kernels::bxor_i64))
     }
 
     /// `MPI_BOR` over i64.
     pub fn bor() -> OpRef<i64> {
-        mk("bor_i64", true, |a: i64, b: i64| a | b)
+        mk("bor_i64", true, |a: i64, b: i64| a | b, Some(kernels::bor_i64))
     }
 
     /// `MPI_SUM` over i64 (wrapping, as C longs would overflow silently).
     pub fn sum_i64() -> OpRef<i64> {
-        mk("sum_i64", true, |a: i64, b: i64| a.wrapping_add(b))
+        mk("sum_i64", true, |a: i64, b: i64| a.wrapping_add(b), Some(kernels::sum_i64))
     }
 
     /// `MPI_SUM` over u64 (wrapping — exactly associative & commutative,
     /// ideal for property tests).
     pub fn sum_u64() -> OpRef<u64> {
-        mk("sum_u64", true, |a: u64, b: u64| a.wrapping_add(b))
+        mk("sum_u64", true, |a: u64, b: u64| a.wrapping_add(b), Some(kernels::sum_u64))
     }
 
     /// `MPI_SUM` over f64. NOTE: float addition is not exactly associative;
     /// tests using it must compare with tolerance.
     pub fn sum_f64() -> OpRef<f64> {
-        mk("sum_f64", true, |a: f64, b: f64| a + b)
+        mk("sum_f64", true, |a: f64, b: f64| a + b, Some(kernels::sum_f64))
     }
 
     /// `MPI_MAX` over i64.
     pub fn max_i64() -> OpRef<i64> {
-        mk("max_i64", true, |a: i64, b: i64| a.max(b))
+        mk("max_i64", true, |a: i64, b: i64| a.max(b), Some(kernels::max_i64))
     }
 
     /// `MPI_MIN` over i64.
     pub fn min_i64() -> OpRef<i64> {
-        mk("min_i64", true, |a: i64, b: i64| a.min(b))
+        mk("min_i64", true, |a: i64, b: i64| a.min(b), Some(kernels::min_i64))
     }
 
     /// Affine-map composition over [`Rec2`]: the input (earlier) map is
     /// applied first. Non-commutative.
     pub fn rec2_compose() -> OpRef<Rec2> {
-        mk("matrec_f32", false, |earlier: Rec2, later: Rec2| earlier.then(&later))
+        mk(
+            "matrec_f32",
+            false,
+            |earlier: Rec2, later: Rec2| earlier.then(&later),
+            Some(kernels::rec2_compose),
+        )
     }
 
     /// A deliberately slow operator for the op-cost ablation: BXOR plus a
     /// tunable amount of busy work per element, emulating an expensive
-    /// user-defined MPI operator.
+    /// user-defined MPI operator. Registers no slice kernel, so it also
+    /// exercises the dyn `combine_slice` fallback dispatch.
     pub fn expensive_bxor(work_iters: u32) -> OpRef<i64> {
         OpRef::new(Arc::new(ExpensiveBxor { work_iters }))
     }
@@ -235,7 +494,7 @@ mod tests {
         let earlier = Rec2::new([2.0, 0.0, 0.0, 2.0], [1.0, 1.0]);
         let later = Rec2::new([1.0, 1.0, 0.0, 1.0], [0.0, 3.0]);
         let mut inout = [later];
-        op.reduce_local(&[earlier], &mut inout);
+        op.reduce_local_sharded(0, &[earlier], &mut inout);
         assert_eq!(inout[0], earlier.then(&later));
     }
 
@@ -243,8 +502,8 @@ mod tests {
     fn application_counter() {
         let op = ops::bxor();
         let mut buf = vec![0i64; 4];
-        op.reduce_local(&[1, 2, 3, 4], &mut buf);
-        op.reduce_local(&[1, 2, 3, 4], &mut buf);
+        op.reduce_local_sharded(0, &[1, 2, 3, 4], &mut buf);
+        op.reduce_local_sharded(0, &[1, 2, 3, 4], &mut buf);
         assert_eq!(op.applications(), 2);
         assert_eq!(buf, vec![0, 0, 0, 0]);
         op.reset_applications();
@@ -263,8 +522,16 @@ mod tests {
         assert_eq!(op.applications(), 6);
         op.reset_applications();
         assert_eq!(op.applications(), 0);
-        op.reduce_local(&[1, 2], &mut buf); // shard-0 convenience path
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_unsharded_entry_still_forwards_to_shard_0() {
+        let op = ops::sum_u64();
+        let mut buf = vec![0u64; 2];
+        op.reduce_local(&[1, 2], &mut buf);
         assert_eq!(op.applications(), 1);
+        assert_eq!(buf, vec![1, 2]);
     }
 
     #[test]
@@ -278,7 +545,7 @@ mod tests {
     fn bxor_semantics() {
         let op = ops::bxor();
         let mut b = vec![0b1010i64, -1];
-        op.reduce_local(&[0b0110, 0], &mut b);
+        op.reduce_local_sharded(0, &[0b0110, 0], &mut b);
         assert_eq!(b, vec![0b1100, -1]);
     }
 
@@ -289,8 +556,8 @@ mod tests {
         let input: Vec<i64> = (0..33).map(|i| i * 7 - 11).collect();
         let mut a: Vec<i64> = (0..33).map(|i| i ^ 0x5a).collect();
         let mut b = a.clone();
-        slow.reduce_local(&input, &mut a);
-        fast.reduce_local(&input, &mut b);
+        slow.reduce_local_sharded(0, &input, &mut a);
+        fast.reduce_local_sharded(0, &input, &mut b);
         assert_eq!(a, b);
     }
 
@@ -298,7 +565,7 @@ mod tests {
     fn sum_wrapping() {
         let op = ops::sum_i64();
         let mut b = vec![i64::MAX];
-        op.reduce_local(&[1], &mut b);
+        op.reduce_local_sharded(0, &[1], &mut b);
         assert_eq!(b, vec![i64::MIN]);
     }
 
@@ -307,10 +574,67 @@ mod tests {
         let mx = ops::max_i64();
         let mn = ops::min_i64();
         let mut b = vec![3i64, -5];
-        mx.reduce_local(&[1, 7], &mut b);
+        mx.reduce_local_sharded(0, &[1, 7], &mut b);
         assert_eq!(b, vec![3, 7]);
         let mut b = vec![3i64, -5];
-        mn.reduce_local(&[1, 7], &mut b);
+        mn.reduce_local_sharded(0, &[1, 7], &mut b);
         assert_eq!(b, vec![1, -5]);
+    }
+
+    #[test]
+    fn builtin_ops_resolve_static_kernels() {
+        assert_eq!(ops::bxor().kernel().dispatch(), "static");
+        assert_eq!(ops::sum_u64().kernel().dispatch(), "static");
+        assert_eq!(ops::rec2_compose().kernel().dispatch(), "static");
+        // No registered kernel → dyn combine_slice fallback.
+        assert_eq!(ops::expensive_bxor(4).kernel().dispatch(), "dyn-slice");
+        // The reference dispatch is always available.
+        assert_eq!(ops::bxor().kernel_per_element().dispatch(), "per-element");
+    }
+
+    #[test]
+    fn kernel_paths_are_bit_identical_and_count_once() {
+        let op = ops::sum_i64();
+        let input: Vec<i64> = (0..257).map(|i| i * 31 - 9).collect();
+        let base: Vec<i64> = (0..257).map(|i| !(i * 7)).collect();
+        let mut a = base.clone();
+        let mut b = base.clone();
+        let mut c = base.clone();
+        op.kernel().apply_sharded(1, &input, &mut a);
+        op.kernel_per_element().apply_sharded(2, &input, &mut b);
+        op.reduce_local_sharded(3, &input, &mut c);
+        assert_eq!(a, b, "slice kernel must match the per-element reference");
+        assert_eq!(a, c, "reduce_local_sharded must route through the kernel");
+        assert_eq!(op.applications(), 3, "each application counts exactly once");
+    }
+
+    #[test]
+    fn kernel_resolution_is_per_collective_not_per_apply() {
+        // The handle is Copy and borrows the OpRef: resolve once, apply
+        // many times; counters aggregate on the one underlying operator.
+        let op = ops::bxor();
+        let k = op.kernel();
+        let k2 = k; // Copy
+        let mut buf = vec![0i64; 8];
+        for shard in 0..10 {
+            k.apply_sharded(shard, &[1; 8], &mut buf);
+            k2.apply_sharded(shard, &[1; 8], &mut buf);
+        }
+        assert_eq!(op.applications(), 20);
+        assert_eq!(buf, vec![0i64; 8]);
+    }
+
+    #[test]
+    fn dyn_slice_fallback_matches_reference() {
+        // expensive_bxor has no static kernel: dyn combine_slice must
+        // still be bit-identical to the per-element reference.
+        let op = ops::expensive_bxor(16);
+        let input: Vec<i64> = (0..100).map(|i| i * 13 + 5).collect();
+        let base: Vec<i64> = (0..100).map(|i| i ^ 0x77).collect();
+        let mut a = base.clone();
+        let mut b = base;
+        op.kernel().apply_sharded(0, &input, &mut a);
+        op.kernel_per_element().apply_sharded(0, &input, &mut b);
+        assert_eq!(a, b);
     }
 }

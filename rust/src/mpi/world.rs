@@ -82,6 +82,18 @@ pub struct WorldConfig {
     /// differs. A/B reference for `tests/fused_equivalence.rs` and the
     /// hotpath m-sweep — leave `false` for real measurements.
     pub unfused_compat: bool,
+    /// Route every ⊕ application through the per-element reference
+    /// dispatch (`CombineOp::combine`) instead of the resolved slice
+    /// kernel. Bit-identical results and traces by the `CombineOp`
+    /// contract (asserted in `tests/kernel_equivalence.rs`); A/B
+    /// reference for the hotpath kernel sweep — leave `false` for real
+    /// measurements.
+    pub per_element_ops: bool,
+    /// Give every inbox the fixed (pre-adaptive) 100-probe spin budget
+    /// instead of the per-slot EMA-driven adaptive budget. A/B reference
+    /// for the hotpath latency sweep — leave `false` for real
+    /// measurements.
+    pub fixed_spin: bool,
     /// Seeded deterministic fault injection (message embargo/diversion,
     /// scheduler yields, pool pressure, targeted drops). `None` for real
     /// measurements; see [`ChaosConfig`] and EXPERIMENTS.md §Chaos.
@@ -99,6 +111,8 @@ impl WorldConfig {
             recv_timeout: None,
             pool_budget_bytes: DEFAULT_BUDGET_BYTES,
             unfused_compat: false,
+            per_element_ops: false,
+            fixed_spin: false,
             chaos: None,
         }
     }
@@ -126,6 +140,20 @@ impl WorldConfig {
     /// two-pass flow (A/B reference; see the field docs).
     pub fn with_unfused_compat(mut self, unfused: bool) -> Self {
         self.unfused_compat = unfused;
+        self
+    }
+
+    /// Route this world's ⊕ applications through the per-element
+    /// reference dispatch (A/B reference; see the field docs).
+    pub fn with_per_element_ops(mut self, per_element: bool) -> Self {
+        self.per_element_ops = per_element;
+        self
+    }
+
+    /// Use the fixed (pre-adaptive) spin budget in this world's inboxes
+    /// (A/B reference; see the field docs).
+    pub fn with_fixed_spin(mut self, fixed: bool) -> Self {
+        self.fixed_spin = fixed;
         self
     }
 
@@ -201,7 +229,8 @@ where
 {
     let p = cfg.size();
     assert!(p >= 1);
-    let inboxes: Arc<Vec<Inbox<T>>> = Arc::new((0..p).map(|_| Inbox::new()).collect());
+    let inboxes: Arc<Vec<Inbox<T>>> =
+        Arc::new((0..p).map(|_| Inbox::new_with(cfg.fixed_spin)).collect());
     let pools: Vec<Arc<BufferPool<T>>> = (0..p).map(|_| cfg.build_pool()).collect();
     let barrier = Arc::new(VBarrier::new(p));
     let recv_deadline = cfg.recv_deadline();
@@ -217,6 +246,7 @@ where
             let mode = cfg.mode.clone();
             let tracing = cfg.tracing;
             let unfused = cfg.unfused_compat;
+            let per_element = cfg.per_element_ops;
             let chaos = chaos.clone();
             let builder = std::thread::Builder::new()
                 .name(format!("rank-{rank}"))
@@ -233,6 +263,7 @@ where
                         mode,
                         tracing,
                         unfused,
+                        per_element,
                         recv_deadline,
                         chaos,
                     );
@@ -335,7 +366,8 @@ impl<T: Elem> World<T> {
     pub fn new(cfg: WorldConfig) -> Self {
         let p = cfg.size();
         assert!(p >= 1);
-        let inboxes: Arc<Vec<Inbox<T>>> = Arc::new((0..p).map(|_| Inbox::new()).collect());
+        let inboxes: Arc<Vec<Inbox<T>>> =
+            Arc::new((0..p).map(|_| Inbox::new_with(cfg.fixed_spin)).collect());
         let pools: Vec<Arc<BufferPool<T>>> = (0..p).map(|_| cfg.build_pool()).collect();
         let barrier = Arc::new(VBarrier::new(p));
         let recv_deadline = cfg.recv_deadline();
@@ -352,6 +384,7 @@ impl<T: Elem> World<T> {
             let mode = cfg.mode.clone();
             let tracing = cfg.tracing;
             let unfused = cfg.unfused_compat;
+            let per_element = cfg.per_element_ops;
             let rank_chaos = chaos.clone();
             let stack = cfg.stack_size;
             let handle = std::thread::Builder::new()
@@ -368,6 +401,7 @@ impl<T: Elem> World<T> {
                         mode,
                         tracing,
                         unfused,
+                        per_element,
                         recv_deadline,
                         rank_chaos,
                     );

@@ -344,13 +344,13 @@ mod tests {
         // Base combine: elementwise with `input` as earlier operand.
         let base = op.fresh();
         let mut inout = vec![10i64, 20];
-        base.reduce_local(&[1, 2], &mut inout);
+        base.reduce_local_sharded(0, &[1, 2], &mut inout);
         assert_eq!(inout, vec![11, 22]);
         // Lifted combine: segment flag blocks the earlier operand.
         let lifted = op.lifted().unwrap();
         assert_eq!(lifted.name(), "seg_sum_i64");
         let mut seg = vec![Seg::cont(5i64), Seg::start(7)];
-        lifted.reduce_local(&[Seg::cont(1), Seg::cont(2)], &mut seg);
+        lifted.reduce_local_sharded(0, &[Seg::cont(1), Seg::cont(2)], &mut seg);
         assert_eq!(seg[0], Seg::cont(6));
         assert_eq!(seg[1], Seg::start(7), "flag must block the earlier value");
     }

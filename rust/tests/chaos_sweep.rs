@@ -42,6 +42,39 @@ fn chaos_differential_sweep_three_seeds() {
     }
 }
 
+/// The Acquire/Release inbox (PR 5's memory-ordering downgrade + adaptive
+/// spin budget) must be invisible to the chaos layer: at the exact 3 seeds
+/// CI pins (`for seed in 1 2 3`), the fuzz grid still passes every
+/// differential check and the `ChaosReport` schedule digest replays
+/// bit-identically run over run. Chaos decisions are pure functions of
+/// (seed, src, dst, tag)/(seed, rank, tick), so any ordering bug that let
+/// a message be matched twice, lost, or matched out of its key would
+/// surface here as a failure or a digest drift.
+#[test]
+fn acqrel_inbox_replays_bit_identical_digests_at_ci_seeds() {
+    let p_values = [4usize, 7];
+    let m_values = [0usize, 1, 17];
+    for seed in [1u64, 2, 3] {
+        let a = chaos_fuzz(seed, &p_values, &m_values);
+        assert!(
+            a.failures.is_empty(),
+            "seed {seed}: {} failures under the Acquire/Release inbox, first: {}",
+            a.failures.len(),
+            a.failures[0]
+        );
+        let b = chaos_fuzz(seed, &p_values, &m_values);
+        assert_eq!(
+            a.schedule_digest, b.schedule_digest,
+            "seed {seed}: ChaosReport digest must replay bit-identically"
+        );
+        assert_eq!(
+            (a.delayed, a.diverted, a.yields, a.dropped),
+            (b.delayed, b.diverted, b.yields, b.dropped),
+            "seed {seed}: injection totals must replay"
+        );
+    }
+}
+
 /// Replayability: the same seed injects the identical schedule (equal
 /// digests, equal injection counts); a different seed does not.
 #[test]

@@ -24,7 +24,7 @@ fn kernel_reduce_matches_native() {
         let mut kernel = (0..n as i64).map(|i| !i).collect::<Vec<_>>();
         let mut native = kernel.clone();
         h.reduce_i64("bxor_i64", &a, &mut kernel).unwrap();
-        ops::bxor().reduce_local(&a, &mut native);
+        ops::bxor().reduce_local_sharded(0, &a, &mut native);
         assert_eq!(kernel, native, "n={n}");
     }
 }

@@ -1,0 +1,287 @@
+//! Property suite for the slice-kernel ⊕ engine: for every registered
+//! operator, `CombineOp::combine_slice` (and the resolved `OpKernel`
+//! dispatch built on it) must be **bit-identical** to the per-element
+//! `combine` reference — across the satellite m grid {0, 1, 17, 4096},
+//! random inputs, and both operand layouts. Bit-identity (not tolerance)
+//! is the point: the kernels re-express the same scalar arithmetic in an
+//! autovectorizable loop, and any reassociation, operand swap or
+//! off-by-one in a tight loop shows up here — including for the
+//! non-commutative `rec2_compose` and the direction-sensitive lifted
+//! segmented operators. The world-level A/B
+//! (`WorldConfig::with_per_element_ops`) is then pinned end to end:
+//! identical outputs, traces and ⊕ counts for every exscan algorithm.
+
+use exscan::coll::{
+    all_exscan_algorithms, seg_bxor_i64, seg_max_i64, seg_sum_i64, ExscanChunked,
+    ExscanHierarchical, Seg,
+};
+use exscan::prelude::*;
+use exscan::util::quickcheck::{cases, forall, Gen};
+
+/// The satellite's m grid: empty, single element, odd small, one memory
+/// page's worth (the autovectorized regime).
+const MS: [usize; 4] = [0, 1, 17, 4096];
+
+/// Assert the three dispatch paths (static-or-dyn slice kernel via
+/// `OpKernel`, raw `reduce_local_sharded`, per-element reference) agree
+/// bit-for-bit and each count exactly one application.
+fn assert_dispatch_equiv<T: Elem>(op: &OpRef<T>, input: &[T], base: &[T]) {
+    let before = op.applications();
+    let mut slice = base.to_vec();
+    op.kernel().apply_sharded(1, input, &mut slice);
+    let mut pe = base.to_vec();
+    op.kernel_per_element().apply_sharded(2, input, &mut pe);
+    let mut sharded = base.to_vec();
+    op.reduce_local_sharded(3, input, &mut sharded);
+    assert_eq!(
+        slice,
+        pe,
+        "op {} m {}: slice kernel != per-element reference",
+        op.name(),
+        input.len()
+    );
+    assert_eq!(
+        slice,
+        sharded,
+        "op {} m {}: reduce_local_sharded != kernel path",
+        op.name(),
+        input.len()
+    );
+    assert_eq!(
+        op.applications(),
+        before + 3,
+        "op {}: every dispatch path must count exactly once",
+        op.name()
+    );
+}
+
+#[test]
+fn slice_kernels_match_per_element_i64_ops() {
+    let mk: Vec<fn() -> OpRef<i64>> = vec![
+        ops::bxor,
+        ops::bor,
+        ops::sum_i64,
+        ops::max_i64,
+        ops::min_i64,
+        || ops::expensive_bxor(16), // dyn-slice fallback path
+    ];
+    forall(cases(10), |g| {
+        for &m in &MS {
+            let input: Vec<i64> = (0..m).map(|_| g.i64()).collect();
+            let base: Vec<i64> = (0..m).map(|_| g.i64()).collect();
+            for f in &mk {
+                assert_dispatch_equiv(&f(), &input, &base);
+            }
+        }
+    });
+}
+
+#[test]
+fn slice_kernels_match_per_element_u64_sum() {
+    forall(cases(10), |g| {
+        for &m in &MS {
+            let input: Vec<u64> = (0..m).map(|_| g.u64()).collect();
+            let base: Vec<u64> = (0..m).map(|_| g.u64()).collect();
+            assert_dispatch_equiv(&ops::sum_u64(), &input, &base);
+        }
+    });
+}
+
+#[test]
+fn slice_kernel_matches_per_element_f64_sum_bitwise() {
+    // PartialEq would already fail on any value drift; additionally pin
+    // exact bit patterns (−0.0 vs 0.0, NaN payloads aside) since float
+    // reassociation is the classic vectorization hazard.
+    forall(cases(10), |g| {
+        for &m in &MS {
+            let input: Vec<f64> = (0..m).map(|_| g.f32_in(-1e6, 1e6) as f64).collect();
+            let base: Vec<f64> = (0..m).map(|_| g.f32_in(-1e6, 1e6) as f64).collect();
+            let op = ops::sum_f64();
+            let mut slice = base.clone();
+            op.kernel().apply_sharded(0, &input, &mut slice);
+            let mut pe = base.clone();
+            op.kernel_per_element().apply_sharded(0, &input, &mut pe);
+            let sb: Vec<u64> = slice.iter().map(|x| x.to_bits()).collect();
+            let pb: Vec<u64> = pe.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(sb, pb, "sum_f64 m {m}: slice kernel not bit-identical");
+        }
+    });
+}
+
+fn rec2_of(g: &mut Gen) -> Rec2 {
+    Rec2::new(
+        [
+            g.f32_in(-2.0, 2.0),
+            g.f32_in(-2.0, 2.0),
+            g.f32_in(-2.0, 2.0),
+            g.f32_in(-2.0, 2.0),
+        ],
+        [g.f32_in(-4.0, 4.0), g.f32_in(-4.0, 4.0)],
+    )
+}
+
+#[test]
+fn slice_kernel_matches_per_element_rec2_compose() {
+    // Non-commutative: the kernel must keep `input` as the earlier map.
+    forall(cases(10), |g| {
+        for &m in &MS {
+            let input: Vec<Rec2> = (0..m).map(|_| rec2_of(g)).collect();
+            let base: Vec<Rec2> = (0..m).map(|_| rec2_of(g)).collect();
+            assert_dispatch_equiv(&ops::rec2_compose(), &input, &base);
+        }
+    });
+}
+
+#[test]
+fn slice_dispatch_matches_per_element_lifted_segmented() {
+    // The lifted operators have no static kernel: this pins the dyn
+    // `combine_slice` default (monomorphized forward to `combine`)
+    // against the reference, flag rule included.
+    let mk: Vec<fn() -> OpRef<Seg<i64>>> = vec![seg_bxor_i64, seg_sum_i64, seg_max_i64];
+    forall(cases(10), |g| {
+        for &m in &MS {
+            let input: Vec<Seg<i64>> =
+                (0..m).map(|_| Seg::new(g.bool(), g.i64())).collect();
+            let base: Vec<Seg<i64>> =
+                (0..m).map(|_| Seg::new(g.bool(), g.i64())).collect();
+            for f in &mk {
+                assert_dispatch_equiv(&f(), &input, &base);
+            }
+        }
+    });
+}
+
+/// Every exclusive-scan algorithm in the library, plus variants that
+/// force the multi-chunk and hierarchical paths at these small m.
+fn algorithms<T: Elem>() -> Vec<Box<dyn ScanAlgorithm<T>>> {
+    let mut algos = all_exscan_algorithms::<T>();
+    algos.push(Box::new(ExscanChunked::with_chunk_elems(7)));
+    algos.push(Box::new(ExscanHierarchical::new(3)));
+    algos
+}
+
+/// Run one algorithm under both world-level dispatch modes with fresh
+/// operators, returning ((result, ops), (result, ops)).
+fn run_ab<T: Elem>(
+    algo: &dyn ScanAlgorithm<T>,
+    mk_op: impl Fn() -> OpRef<T>,
+    inputs: &[Vec<T>],
+) -> ((RunResult<T>, u64), (RunResult<T>, u64)) {
+    let p = inputs.len();
+    let slice_cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+    let pe_cfg = WorldConfig::new(Topology::flat(p))
+        .with_per_element_ops(true)
+        .with_trace(true);
+    let op = mk_op();
+    let slice = run_scan(&slice_cfg, algo, &op, inputs).unwrap();
+    let slice_ops = op.applications();
+    let op = mk_op();
+    let pe = run_scan(&pe_cfg, algo, &op, inputs).unwrap();
+    let pe_ops = op.applications();
+    ((slice, slice_ops), (pe, pe_ops))
+}
+
+fn assert_ab_identical<T: Elem>(
+    algo: &dyn ScanAlgorithm<T>,
+    slice: (RunResult<T>, u64),
+    pe: (RunResult<T>, u64),
+    p: usize,
+    m: usize,
+) {
+    let ((slice, slice_ops), (pe, pe_ops)) = (slice, pe);
+    assert_eq!(
+        slice.outputs,
+        pe.outputs,
+        "{} p={p} m={m}: slice and per-element outputs must be bit-identical",
+        algo.name()
+    );
+    let (st, pt) = (slice.trace.unwrap(), pe.trace.unwrap());
+    assert_eq!(
+        st.traces.iter().map(|t| &t.events).collect::<Vec<_>>(),
+        pt.traces.iter().map(|t| &t.events).collect::<Vec<_>>(),
+        "{} p={p} m={m}: traces diverged between dispatch paths",
+        algo.name()
+    );
+    // The engine changes per-application cost, never application count:
+    // sharded counters must equal the trace total on both paths.
+    assert_eq!(slice_ops, st.total_ops(), "{} p={p} m={m}: slice counters", algo.name());
+    assert_eq!(pe_ops, pt.total_ops(), "{} p={p} m={m}: per-element counters", algo.name());
+    assert_eq!(slice_ops, pe_ops, "{} p={p} m={m}: ⊕ counts diverged", algo.name());
+}
+
+#[test]
+fn world_ab_slice_vs_per_element_bxor_i64() {
+    forall(cases(8), |g| {
+        let p = g.usize_in(2, 16).max(2);
+        let m = *g.choose(&[0usize, 1, 17, 256]);
+        let inputs = exscan::bench::inputs_i64(p, m, g.u64());
+        for algo in algorithms::<i64>() {
+            let (s, e) = run_ab(algo.as_ref(), ops::bxor, &inputs);
+            assert_ab_identical(algo.as_ref(), s, e, p, m);
+        }
+    });
+}
+
+#[test]
+fn world_ab_slice_vs_per_element_rec2() {
+    // Non-commutative float composition: identical operand association on
+    // both paths ⇒ bit-identical outputs, no tolerance needed.
+    forall(cases(6), |g| {
+        let p = g.usize_in(2, 12).max(2);
+        let m = *g.choose(&[1usize, 5, 17]);
+        let inputs = exscan::bench::inputs_rec2(p, m, g.u64());
+        for algo in algorithms::<Rec2>() {
+            let (s, e) = run_ab(algo.as_ref(), ops::rec2_compose, &inputs);
+            assert_ab_identical(algo.as_ref(), s, e, p, m);
+        }
+    });
+}
+
+/// The A/B must also hold under adversarial delivery: chaos decisions
+/// are pure in (seed, src, dst, tag), so a chaos world on the slice path
+/// and a chaos world on the per-element path at the same seed inject the
+/// identical schedule — outputs and traces must stay bit-identical
+/// between the two dispatch modes across the fuzz-style grid.
+#[test]
+fn world_ab_holds_under_chaos_grid() {
+    use exscan::mpi::ChaosConfig;
+    for seed in [1u64, 2, 3] {
+        for p in [4usize, 7] {
+            for m in [0usize, 1, 17] {
+                let inputs = exscan::bench::inputs_i64(p, m, seed ^ ((m as u64) << 8));
+                for algo in algorithms::<i64>() {
+                    let run = |per_element: bool| {
+                        let cfg = WorldConfig::new(Topology::flat(p))
+                            .with_trace(true)
+                            .with_per_element_ops(per_element)
+                            .with_chaos(ChaosConfig::new(seed));
+                        let op = ops::bxor();
+                        let res = run_scan(&cfg, algo.as_ref(), &op, &inputs).unwrap();
+                        (res, op.applications())
+                    };
+                    let (s, e) = (run(false), run(true));
+                    assert_ab_identical(algo.as_ref(), s, e, p, m);
+                }
+            }
+        }
+    }
+}
+
+/// Theorem-1 closed forms hold on the slice-kernel path: the engine must
+/// never change an application *count* (the paper's metric), only the
+/// per-application constant.
+#[test]
+fn theorem1_counts_hold_under_slice_dispatch() {
+    for p in [2usize, 5, 9, 16, 36] {
+        let inputs = exscan::bench::inputs_i64(p, 3, 0xD15);
+        let cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+        let algo = Exscan123;
+        let op = ops::bxor();
+        let res = run_scan(&cfg, &algo, &op, &inputs).unwrap();
+        let tr = res.trace.unwrap();
+        let a: &dyn ScanAlgorithm<i64> = &algo;
+        assert_eq!(tr.total_rounds(), a.predicted_rounds(p), "rounds p={p}");
+        assert_eq!(tr.last_rank_ops(), a.predicted_ops(p), "last-rank ⊕ p={p}");
+        assert_eq!(op.applications(), tr.total_ops(), "counters vs trace p={p}");
+    }
+}
