@@ -31,17 +31,26 @@
 //!     collective per request) wall time per request, with a hard
 //!     deterministic gate on the amortized rounds/request closed form
 //!     (`rounds(p) / K`, measured from the batch trace);
+//!   * **service latency under failure** (§Robustness): a sustained
+//!     submit stream, baseline vs seeded rank-death mid-run, reporting
+//!     the engine's histogram p50/p99/p999 with SLO gates (quantile
+//!     sanity, zero lost requests, attributed failures, live rebuild);
+//!   * **soak** (§Robustness): waves of mixed full-world + sub-range
+//!     requests under a periodic rank-death schedule — gates the
+//!     `submitted == completed + failed` invariant, a drained
+//!     inflight-bytes gauge, and flat steady-state memory via the pool
+//!     miss counters;
 //!   * one full 123-doubling at p=36 end to end.
 //!
 //! Writes the machine-readable trajectory record `BENCH_hotpath.json`
-//! (schema `exscan-hotpath-v4`). Pass `--quick` for the CI smoke run.
+//! (schema `exscan-hotpath-v5`). Pass `--quick` for the CI smoke run.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use exscan::bench::{
     hotpath_json, measure_exscan_world, HotpathPoint, KernelPoint, LatencyPoint, MSweepPoint,
-    SvcPoint,
+    SoakPoint, SvcLatencyPoint, SvcPoint,
 };
 use exscan::coll::oracle_exscan;
 use exscan::mpi::World;
@@ -55,6 +64,20 @@ fn bench_ns<F: FnMut()>(iters: usize, mut f: F) -> f64 {
         f();
     }
     t0.elapsed().as_nanos() as f64 / iters as f64
+}
+
+/// Snapshot the engine's metrics once the counters have quiesced: handle
+/// fulfillment races the dispatcher's batch accounting by microseconds,
+/// so right after a `wait` the `completed` counter can transiently lag.
+fn quiesced_metrics(engine: &ScanEngine<i64>) -> exscan::svc::MetricsSnapshot {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let s = engine.metrics();
+        if s.submitted == s.completed + s.failed || Instant::now() >= deadline {
+            return s;
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
 }
 
 // ───────────────────────── legacy transport (v0) ─────────────────────────
@@ -454,6 +477,7 @@ fn main() -> anyhow::Result<()> {
             window: Duration::from_secs(600), // cycles cut by flush only
             max_batch: k.max(1),
             max_coalesced_elems: 1 << 24,
+            window_range: None, // fixed window: batch composition stays deterministic
         };
         let all_inputs: Vec<Vec<Vec<i64>>> = (0..k)
             .map(|i| exscan::bench::inputs_i64(p_svc, m_svc, 0x5EC + i as u64))
@@ -539,6 +563,225 @@ fn main() -> anyhow::Result<()> {
     }
     println!("svc amortization gate: rounds/request == rounds(p)/K for every K");
 
+    // ── Service latency under failure (EXPERIMENTS.md §Robustness): a
+    // sustained submit stream through the engine with an adaptive
+    // batching window, baseline vs a seeded rank-death mid-run. The SLO
+    // gates are deterministic invariants (quantile sanity, zero lost
+    // requests, attributed failures, live rebuild) plus one generous
+    // absolute tail bound — wall-clock quantiles themselves are
+    // reported, not tightly gated, so shared CI runners stay green. ──
+    let mut svc_latency: Vec<SvcLatencyPoint> = Vec::new();
+    let lat_requests: u64 = if quick { 240 } else { 1200 };
+    let lat_policy = || {
+        exscan::svc::BatchPolicy {
+            window: Duration::from_micros(200),
+            max_batch: 16,
+            max_coalesced_elems: 1 << 24,
+            window_range: None,
+        }
+        .with_adaptive_window(Duration::from_micros(50), Duration::from_millis(2))
+    };
+    println!("\nscan service latency at p={p_svc}, m={m_svc}, {lat_requests} requests:");
+    for scenario in ["baseline", "rank-death"] {
+        let mut ecfg = EngineConfig::new(p_svc)
+            .with_policy(lat_policy())
+            .with_recv_timeout(Duration::from_millis(500));
+        if scenario == "rank-death" {
+            // Death only — delay/divert/yield off so every failure in
+            // this scenario is attributable to the kill.
+            ecfg = ecfg.with_chaos(
+                ChaosConfig::new(0xD0A)
+                    .with_delay_prob(0.0)
+                    .with_divert_prob(0.0)
+                    .with_yield_prob(0.0)
+                    // Low tick so the kill reliably fires mid-stream
+                    // (each 16-request burst advances a rank's chaos
+                    // counter by only a handful of ticks; `>=` trigger
+                    // means an early estimate can only fire sooner).
+                    .with_rank_death(p_svc / 2, if quick { 60 } else { 300 }),
+            );
+        }
+        let engine = ScanEngine::<i64>::new(ecfg).unwrap();
+        // Closed-loop stream: submit a 16-request burst, flush, wait it
+        // out, repeat — each cycle stays small, so a rank death fails at
+        // most one burst and the post-rebuild tail keeps measuring.
+        let (mut ok, mut err) = (0u64, 0u64);
+        for burst in 0..(lat_requests / 16) {
+            let handles: Vec<_> = (0..16)
+                .map(|i| {
+                    let inputs =
+                        exscan::bench::inputs_i64(p_svc, m_svc, 0xA110 + burst * 16 + i);
+                    engine.submit_exscan(ReqOp::bxor_i64(), inputs).unwrap()
+                })
+                .collect();
+            engine.flush();
+            for h in handles {
+                match h.wait_timeout(Duration::from_secs(60)) {
+                    Ok(_) => ok += 1,
+                    Err(SvcError::WaitTimeout) => panic!("svc latency: handle timed out"),
+                    Err(_) => err += 1,
+                }
+            }
+        }
+        let s = quiesced_metrics(&engine);
+        drop(engine);
+        println!(
+            "  {scenario:<10}: p50 {:>9.1} µs  p99 {:>9.1} µs  p999 {:>9.1} µs   \
+             ok {ok}  failed {err}  rebuilds {}",
+            s.latency_p50_us, s.latency_p99_us, s.latency_p999_us, s.worlds_rebuilt
+        );
+        // SLO gates (deterministic invariants).
+        assert_eq!(s.submitted, lat_requests, "{scenario}: all submissions admitted");
+        assert_eq!(
+            s.submitted,
+            s.completed + s.failed,
+            "{scenario}: zero-lost-requests invariant"
+        );
+        assert_eq!(s.completed, ok, "{scenario}: observed completions match metrics");
+        assert_eq!(s.failed, err, "{scenario}: observed failures match metrics");
+        assert_eq!(s.inflight_bytes, 0, "{scenario}: inflight gauge drained");
+        assert_eq!(s.latency_count, s.completed, "{scenario}: histogram covers completions");
+        assert!(
+            s.latency_p50_us <= s.latency_p99_us && s.latency_p99_us <= s.latency_p999_us,
+            "{scenario}: quantiles monotone"
+        );
+        assert!(
+            s.latency_p999_us < 60_000_000.0,
+            "{scenario}: p999 under the wait deadline"
+        );
+        match scenario {
+            "baseline" => {
+                assert_eq!(s.failed, 0, "baseline: no failures");
+                assert_eq!(s.rank_failures, 0, "baseline: no rank failures");
+            }
+            _ => {
+                assert!(s.rank_failures >= 1, "rank-death: attributed failures present");
+                assert!(s.worlds_rebuilt >= 1, "rank-death: live rebuild happened");
+                assert!(
+                    s.completed > s.failed,
+                    "rank-death: engine kept serving after the kill"
+                );
+                assert_eq!(
+                    s.rank_failures, s.failed,
+                    "rank-death: every failure attributed to the kill"
+                );
+            }
+        }
+        svc_latency.push(SvcLatencyPoint {
+            scenario: scenario.into(),
+            p: p_svc,
+            requests: lat_requests,
+            p50_us: s.latency_p50_us,
+            p99_us: s.latency_p99_us,
+            p999_us: s.latency_p999_us,
+            failed: s.failed,
+            rank_failures: s.rank_failures,
+            worlds_rebuilt: s.worlds_rebuilt,
+        });
+    }
+    println!("svc latency SLO gates: invariants hold in both scenarios");
+
+    // ── Soak (EXPERIMENTS.md §Robustness): waves of mixed full-world +
+    // sub-range requests under a periodic seeded rank-death schedule.
+    // Deaths are scheduled to land in the first half; the second half is
+    // the steady state whose pool counters must stay flat. ──
+    let mut soak: Vec<SoakPoint> = Vec::new();
+    let soak_waves: usize = if quick { 80 } else { 400 };
+    let soak_seeds: &[u64] = if quick { &[11] } else { &[11, 12] };
+    let death_sched: &[(usize, u64)] =
+        if quick { &[(2, 150), (5, 300)] } else { &[(2, 600), (5, 1200)] };
+    println!("\nsoak at p={p_svc}: {soak_waves} waves × 8 requests, deaths {death_sched:?}:");
+    for &seed in soak_seeds {
+        let mut chaos = ChaosConfig::new(seed)
+            .with_delay_prob(0.0)
+            .with_divert_prob(0.0)
+            .with_yield_prob(0.0);
+        for &(r, t) in death_sched {
+            chaos = chaos.with_rank_death(r, t);
+        }
+        let engine = ScanEngine::<i64>::new(
+            EngineConfig::new(p_svc)
+                .with_policy(lat_policy())
+                .with_chaos(chaos)
+                .with_recv_timeout(Duration::from_millis(500)),
+        )
+        .unwrap();
+        let (mut mid_misses, mut mid_rebuilds) = (0u64, 0u64);
+        for w in 0..soak_waves {
+            let mut handles = Vec::with_capacity(8);
+            for i in 0..6u64 {
+                let inputs =
+                    exscan::bench::inputs_i64(p_svc, m_svc, seed * 7919 + w as u64 * 8 + i);
+                handles.push(engine.submit_exscan(ReqOp::bxor_i64(), inputs).unwrap());
+            }
+            // Two disjoint sub-range requests ride along so the solo /
+            // segmented paths soak too.
+            for start in [0, p_svc / 2] {
+                let inputs: Vec<Vec<i64>> = (start..start + p_svc / 2)
+                    .map(|r| vec![(r as i64) ^ (w as i64); m_svc])
+                    .collect();
+                handles
+                    .push(engine.submit(ScanRequest::over(ReqOp::bxor_i64(), start, inputs)).unwrap());
+            }
+            engine.flush();
+            for h in handles {
+                match h.wait_timeout(Duration::from_secs(60)) {
+                    Ok(_) | Err(SvcError::RankFailed { .. }) | Err(SvcError::Collective(_)) => {}
+                    Err(e) => panic!("soak seed {seed} wave {w}: unexpected error {e:?}"),
+                }
+            }
+            if w == soak_waves / 2 {
+                let s = engine.metrics();
+                mid_misses = s.pool_misses;
+                mid_rebuilds = s.worlds_rebuilt;
+            }
+        }
+        let s = quiesced_metrics(&engine);
+        drop(engine);
+        let pool_miss_delta = s.pool_misses.saturating_sub(mid_misses);
+        println!(
+            "  seed {seed}: submitted {}  completed {}  failed {}  rebuilds {}  \
+             p99 {:>9.1} µs  pool-miss Δ(2nd half) {pool_miss_delta}",
+            s.submitted, s.completed, s.failed, s.worlds_rebuilt, s.latency_p99_us
+        );
+        assert_eq!(
+            s.submitted,
+            s.completed + s.failed,
+            "soak seed {seed}: zero-lost-requests invariant"
+        );
+        assert_eq!(s.inflight_bytes, 0, "soak seed {seed}: inflight gauge drained");
+        assert_eq!(s.rejected, 0, "soak seed {seed}: wave pacing never trips admission");
+        assert!(s.worlds_rebuilt >= 1, "soak seed {seed}: at least one death fired");
+        assert!(s.rank_failures >= 1, "soak seed {seed}: failures attributed");
+        assert!(
+            s.completed > s.failed,
+            "soak seed {seed}: steady state dominated by successes"
+        );
+        // Flat-memory gate, valid only when the second half saw no
+        // rebuild (a rebuild legitimately re-warms fresh pools).
+        if s.worlds_rebuilt == mid_rebuilds {
+            assert_eq!(
+                pool_miss_delta, 0,
+                "soak seed {seed}: steady-state pools must recycle, not allocate"
+            );
+        }
+        soak.push(SoakPoint {
+            seed,
+            p: p_svc,
+            submitted: s.submitted,
+            completed: s.completed,
+            failed: s.failed,
+            rejected: s.rejected,
+            // Every rebuild in this scenario is death-caused (all other
+            // chaos faults are disabled).
+            rank_deaths: s.worlds_rebuilt,
+            worlds_rebuilt: s.worlds_rebuilt,
+            p99_us: s.latency_p99_us,
+            pool_miss_delta,
+        });
+    }
+    println!("soak gates: zero lost requests and flat steady-state memory");
+
     // ── World spawn/teardown vs persistent job submit at the same p. ──
     let mut spawn_meta = Vec::new();
     for p in [16usize, 144] {
@@ -598,7 +841,16 @@ fn main() -> anyhow::Result<()> {
             format!("min={:.1}us mean={:.1}us", meas.min_us, meas.mean_us),
         ),
     ];
-    let json = hotpath_json(&meta, &points, &m_sweep, &svc_sweep, &kernel_sweep, &latency_sweep);
+    let json = hotpath_json(
+        &meta,
+        &points,
+        &m_sweep,
+        &svc_sweep,
+        &kernel_sweep,
+        &latency_sweep,
+        &svc_latency,
+        &soak,
+    );
     // Cargo runs bench binaries with cwd = the *package* root (rust/), so
     // anchor the output at the workspace root explicitly — that is where
     // the committed placeholder lives and where CI validates the schema.

@@ -141,6 +141,49 @@ pub struct SvcPoint {
     pub serial_rounds_per_req: f64,
 }
 
+/// One scan-service latency measurement (see `benches/hotpath.rs`): a
+/// sustained submit stream through the engine under one scenario
+/// (`"baseline"` clean run, `"rank-death"` with a seeded mid-run kill),
+/// with the engine's histogram-derived latency quantiles and failure
+/// accounting. The quantiles are the SLO-gated numbers.
+#[derive(Debug, Clone)]
+pub struct SvcLatencyPoint {
+    /// Scenario id: `baseline` or `rank-death`.
+    pub scenario: String,
+    pub p: usize,
+    /// Requests submitted over the scenario.
+    pub requests: u64,
+    /// Histogram quantiles (µs, conservative bucket upper bounds).
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    pub failed: u64,
+    /// Requests failed with an attributed `RankFailed`.
+    pub rank_failures: u64,
+    pub worlds_rebuilt: u64,
+}
+
+/// One soak measurement (see `benches/hotpath.rs`): a sustained mixed
+/// workload with periodic seeded rank death, checking the zero-lost-
+/// requests invariant (`submitted == completed + failed`), flat memory
+/// (pool-miss growth between the mid-point and the end of the soak) and
+/// the tail-latency SLO.
+#[derive(Debug, Clone)]
+pub struct SoakPoint {
+    pub seed: u64,
+    pub p: usize,
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub rejected: u64,
+    pub rank_deaths: u64,
+    pub worlds_rebuilt: u64,
+    pub p99_us: f64,
+    /// Pool misses accrued in the second half of the soak (steady state
+    /// ⇒ ~0: the pools recycle instead of allocating).
+    pub pool_miss_delta: u64,
+}
+
 fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
@@ -163,7 +206,10 @@ fn json_escape(s: &str) -> String {
 /// batched-vs-serial throughput and amortized rounds/request); v4 adds
 /// `kernel_sweep` (slice-kernel vs per-element ⊕ dispatch per op × m) and
 /// `latency_sweep` (adaptive vs fixed inbox spin budget per p, with
-/// spin/park counters).
+/// spin/park counters); v5 adds `svc_latency` (service p50/p99/p999
+/// under baseline and rank-death scenarios — the SLO-gated numbers) and
+/// `soak` (sustained mixed workload with periodic rank death:
+/// zero-lost-requests and flat-memory evidence).
 pub fn hotpath_json(
     meta: &[(&str, String)],
     points: &[HotpathPoint],
@@ -171,8 +217,10 @@ pub fn hotpath_json(
     svc_sweep: &[SvcPoint],
     kernel_sweep: &[KernelPoint],
     latency_sweep: &[LatencyPoint],
+    svc_latency: &[SvcLatencyPoint],
+    soak: &[SoakPoint],
 ) -> String {
-    let mut out = String::from("{\n  \"schema\": \"exscan-hotpath-v4\",\n  \"meta\": {");
+    let mut out = String::from("{\n  \"schema\": \"exscan-hotpath-v5\",\n  \"meta\": {");
     for (i, (k, v)) in meta.iter().enumerate() {
         if i > 0 {
             out.push(',');
@@ -257,6 +305,47 @@ pub fn hotpath_json(
             pt.ns_per_round,
             pt.spins,
             pt.parks
+        ));
+    }
+    out.push_str("\n  ],\n  \"svc_latency\": [");
+    for (i, pt) in svc_latency.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"scenario\": \"{}\", \"p\": {}, \"requests\": {}, \
+             \"p50_us\": {:.3}, \"p99_us\": {:.3}, \"p999_us\": {:.3}, \
+             \"failed\": {}, \"rank_failures\": {}, \"worlds_rebuilt\": {}}}",
+            json_escape(&pt.scenario),
+            pt.p,
+            pt.requests,
+            pt.p50_us,
+            pt.p99_us,
+            pt.p999_us,
+            pt.failed,
+            pt.rank_failures,
+            pt.worlds_rebuilt
+        ));
+    }
+    out.push_str("\n  ],\n  \"soak\": [");
+    for (i, pt) in soak.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"seed\": {}, \"p\": {}, \"submitted\": {}, \"completed\": {}, \
+             \"failed\": {}, \"rejected\": {}, \"rank_deaths\": {}, \
+             \"worlds_rebuilt\": {}, \"p99_us\": {:.3}, \"pool_miss_delta\": {}}}",
+            pt.seed,
+            pt.p,
+            pt.submitted,
+            pt.completed,
+            pt.failed,
+            pt.rejected,
+            pt.rank_deaths,
+            pt.worlds_rebuilt,
+            pt.p99_us,
+            pt.pool_miss_delta
         ));
     }
     out.push_str("\n  ]\n}\n");
@@ -354,6 +443,29 @@ mod tests {
             spins: 123456,
             parks: 7,
         }];
+        let svc_lat = vec![SvcLatencyPoint {
+            scenario: "rank-death".into(),
+            p: 8,
+            requests: 512,
+            p50_us: 100.0,
+            p99_us: 750.5,
+            p999_us: 4000.0,
+            failed: 3,
+            rank_failures: 3,
+            worlds_rebuilt: 1,
+        }];
+        let soak = vec![SoakPoint {
+            seed: 11,
+            p: 8,
+            submitted: 4096,
+            completed: 4000,
+            failed: 96,
+            rejected: 12,
+            rank_deaths: 2,
+            worlds_rebuilt: 2,
+            p99_us: 900.25,
+            pool_miss_delta: 0,
+        }];
         let j = hotpath_json(
             &[("host", "ci \"runner\"".to_string())],
             &points,
@@ -361,8 +473,16 @@ mod tests {
             &svc,
             &kernels,
             &lat,
+            &svc_lat,
+            &soak,
         );
-        assert!(j.contains("\"schema\": \"exscan-hotpath-v4\""), "{j}");
+        assert!(j.contains("\"schema\": \"exscan-hotpath-v5\""), "{j}");
+        assert!(j.contains("\"svc_latency\""), "{j}");
+        assert!(j.contains("\"scenario\": \"rank-death\""), "{j}");
+        assert!(j.contains("\"p999_us\": 4000.000"), "{j}");
+        assert!(j.contains("\"soak\""), "{j}");
+        assert!(j.contains("\"rank_deaths\": 2"), "{j}");
+        assert!(j.contains("\"pool_miss_delta\": 0"), "{j}");
         assert!(j.contains("\"kernel_sweep\""), "{j}");
         assert!(j.contains("\"path\": \"slice\""), "{j}");
         assert!(j.contains("\"ns_per_apply\": 512.25"), "{j}");

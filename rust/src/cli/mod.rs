@@ -45,6 +45,8 @@ COMMANDS:
               --p LIST    pin exact world sizes (overrides --p-max grid)
               --m LIST    pin exact vector lengths
               --quick     small-p, small-m budget (the CI profile)
+            also runs the pinned pool steady-state and rank-death
+            differential checks at the same seed
   serve     multi-tenant scan service demo: N independent small-m exscan
             requests through the batching engine, every result verified
             against its serial oracle, amortized rounds/request reported
@@ -55,6 +57,14 @@ COMMANDS:
               --chaos-seed S    run the engine under seeded chaos and
                                 differentially verify the service path
                                 (plus the concurrent-communicator check)
+              --soak N          repeat the workload for N waves through
+                                one engine (sustained-load soak mode)
+              --kill-rank R     inject rank death: kill rank R once it
+                                reaches chaos tick T (--kill-tick,
+                                default 16); failed requests must come
+                                back typed RankFailed, the engine must
+                                rebuild its worlds live, and the
+                                zero-lost-requests invariant must hold
               --smoke           small deterministic CI budget
   kernel-smoke  exercise the AOT PJRT kernel path
               --artifacts DIR       (default: artifacts)
@@ -356,7 +366,16 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
         Err(e) => println!("pool steady state under chaos: FAIL ({e})"),
     }
 
-    if out.failures.is_empty() && pool.is_ok() {
+    // Pinned at p = 6 regardless of the grid: the check is about failure
+    // *attribution* (typed rank-death, poison wake, registry contents),
+    // not about scaling, and a fixed size keeps the repro seed-only.
+    let rd = crate::coll::validate::rank_death_differential(seed, 6);
+    match &rd {
+        Ok(()) => println!("rank-death differential (p=6): attributed + oracle-clean"),
+        Err(e) => println!("rank-death differential (p=6): FAIL ({e})"),
+    }
+
+    if out.failures.is_empty() && pool.is_ok() && rd.is_ok() {
         println!("all cases bit-identical to oracle with Theorem-1 counts");
         Ok(())
     } else {
@@ -365,7 +384,7 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
         }
         bail!(
             "{} chaos-fuzz failure(s); reproduce with `exscan fuzz --seed {seed}{}`",
-            out.failures.len() + usize::from(pool.is_err()),
+            out.failures.len() + usize::from(pool.is_err()) + usize::from(rd.is_err()),
             if quick { " --quick" } else { "" }
         )
     }
@@ -382,13 +401,24 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
 /// exactly associative, so the serial-clean-world reference and the
 /// oracle coincide bit for bit); the concurrent-communicator differential
 /// (`validate::chaos_concurrent_comms`) runs on top.
+///
+/// `--soak N` repeats the workload for N waves through one engine
+/// (sustained load through the batching/backpressure path), and
+/// `--kill-rank R` arms rank-death injection: once rank R reaches chaos
+/// tick `--kill-tick` (a per-rank count of chaos decision points — low
+/// values fire within the first batch), it dies mid-collective. Requests
+/// caught in the dying wave must come back typed
+/// [`SvcError::RankFailed`](crate::svc::SvcError) naming the victim, the
+/// engine must rebuild its worlds live, later waves must verify against
+/// the oracle again, and `submitted == completed + failed` must hold at
+/// quiesce (EXPERIMENTS.md §Robustness).
 fn cmd_serve(args: &Args) -> Result<()> {
-    use std::time::Duration;
+    use std::time::{Duration, Instant};
 
     use crate::coll::validate::chaos_concurrent_comms;
     use crate::coll::validate::oracle_exscan;
     use crate::mpi::ChaosConfig;
-    use crate::svc::{BatchPolicy, EngineConfig, ReqOp, ScanEngine, ScanRequest};
+    use crate::svc::{BatchPolicy, EngineConfig, ReqOp, ScanEngine, ScanRequest, SvcError};
 
     let smoke = args.switch("smoke");
     let p: usize = args.get("p", 8)?;
@@ -410,75 +440,143 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Some(s.parse().map_err(|_| anyhow!("--chaos-seed: cannot parse {s:?}"))?)
         }
     };
+    let waves: usize = args.get("soak", 1)?;
+    let kill_rank: Option<usize> = match args.flag("kill-rank") {
+        None => None,
+        Some(s) => {
+            Some(s.parse().map_err(|_| anyhow!("--kill-rank: cannot parse {s:?}"))?)
+        }
+    };
+    let kill_tick: u64 = args.get("kill-tick", 16u64)?;
     anyhow::ensure!(p >= 4, "serve needs p >= 4 (got {p})");
+    anyhow::ensure!(waves >= 1, "--soak needs at least one wave");
+    if let Some(r) = kill_rank {
+        anyhow::ensure!(r < p, "--kill-rank {r} out of range for p={p}");
+    }
 
     let mut cfg = EngineConfig::new(p).with_algo(&algo).with_policy(BatchPolicy {
         window: Duration::from_micros(window_us),
         max_batch,
         ..Default::default()
     });
-    if let Some(seed) = chaos_seed {
-        cfg = cfg.with_chaos(ChaosConfig::new(seed));
+    let mut chaos = chaos_seed.map(ChaosConfig::new);
+    if let Some(r) = kill_rank {
+        // Without --chaos-seed the death is the *only* injected fault
+        // (delay/divert/yield off), so every failure must be attributed
+        // RankFailed — a generic timeout here is a bug, not bad luck.
+        let base = chaos.take().unwrap_or_else(|| {
+            ChaosConfig::new(0xDEAD)
+                .with_delay_prob(0.0)
+                .with_divert_prob(0.0)
+                .with_yield_prob(0.0)
+        });
+        chaos = Some(base.with_rank_death(r, kill_tick));
+    }
+    if let Some(c) = chaos {
+        cfg = cfg.with_chaos(c);
     }
     let engine = ScanEngine::<i64>::new(cfg).map_err(|e| anyhow!("{e}"))?;
     println!(
-        "scan service: {requests} requests, p={p}, m={m}, algo={algo}, \
-         window={window_us}µs, max-batch={max_batch}{}",
+        "scan service: {requests} requests × {waves} wave(s), p={p}, m={m}, algo={algo}, \
+         window={window_us}µs, max-batch={max_batch}{}{}",
         match chaos_seed {
             Some(s) => format!(", chaos seed {s}"),
+            None => String::new(),
+        },
+        match kill_rank {
+            Some(r) => format!(", kill rank {r} at tick {kill_tick}"),
             None => String::new(),
         }
     );
 
     // Deterministic mixed workload; expected results precomputed from the
-    // serial oracle (bit-exact for these integer operators).
+    // serial oracle (bit-exact for these integer operators). Each wave
+    // submits, flushes, and drains before the next — closed-loop, so a
+    // rank death fails at most the in-flight wave and the post-rebuild
+    // waves prove the engine recovered.
     let seed_base = chaos_seed.unwrap_or(0xCAFE);
-    let mut handles = Vec::with_capacity(requests);
-    let mut expected = Vec::with_capacity(requests);
-    for i in 0..requests {
-        let rseed = seed_base ^ (i as u64 + 1).wrapping_mul(0x9E37_79B9);
-        let (req, oracle) = if i % 3 == 2 {
-            // Sub-range request: exercises segmented lanes / solo plans.
-            let start = i % (p / 2);
-            let span = 2 + i % (p - start - 1).max(1).min(3);
-            let inputs = crate::bench::inputs_i64(span, m, rseed);
-            let oracle = oracle_exscan(&inputs, &ops::sum_i64());
-            (ScanRequest::over(ReqOp::sum_i64(), start, inputs), oracle)
-        } else if i % 2 == 0 {
-            let inputs = crate::bench::inputs_i64(p, m, rseed);
-            let oracle = oracle_exscan(&inputs, &ops::bxor());
-            (ScanRequest::full(ReqOp::bxor_i64(), inputs), oracle)
-        } else {
-            let inputs = crate::bench::inputs_i64(p, m, rseed);
-            let oracle = oracle_exscan(&inputs, &ops::sum_i64());
-            (ScanRequest::full(ReqOp::sum_i64(), inputs), oracle)
-        };
-        handles.push(engine.submit(req).map_err(|e| anyhow!("submit {i}: {e}"))?);
-        expected.push(oracle);
-    }
-    engine.flush();
-
+    let total = waves * requests;
     let mut verified = 0usize;
-    for (i, (h, oracle)) in handles.into_iter().zip(expected).enumerate() {
-        let out = h
-            .wait_timeout(Duration::from_secs(120))
-            .map_err(|e| anyhow!("request {i} failed: {e}"))?;
-        for (r, want) in oracle.iter().enumerate() {
-            if let Some(want) = want {
-                anyhow::ensure!(
-                    &out.outputs[r] == want,
-                    "request {i}: member {r} diverged from serial oracle"
-                );
+    let mut death_failed = 0usize;
+    for wave in 0..waves {
+        let mut handles = Vec::with_capacity(requests);
+        let mut expected = Vec::with_capacity(requests);
+        for i in 0..requests {
+            let g = wave * requests + i;
+            let rseed = seed_base ^ (g as u64 + 1).wrapping_mul(0x9E37_79B9);
+            let (req, oracle) = if i % 3 == 2 {
+                // Sub-range request: exercises segmented lanes / solo plans.
+                let start = i % (p / 2);
+                let span = 2 + i % (p - start - 1).max(1).min(3);
+                let inputs = crate::bench::inputs_i64(span, m, rseed);
+                let oracle = oracle_exscan(&inputs, &ops::sum_i64());
+                (ScanRequest::over(ReqOp::sum_i64(), start, inputs), oracle)
+            } else if i % 2 == 0 {
+                let inputs = crate::bench::inputs_i64(p, m, rseed);
+                let oracle = oracle_exscan(&inputs, &ops::bxor());
+                (ScanRequest::full(ReqOp::bxor_i64(), inputs), oracle)
+            } else {
+                let inputs = crate::bench::inputs_i64(p, m, rseed);
+                let oracle = oracle_exscan(&inputs, &ops::sum_i64());
+                (ScanRequest::full(ReqOp::sum_i64(), inputs), oracle)
+            };
+            handles.push(engine.submit(req).map_err(|e| anyhow!("submit {g}: {e}"))?);
+            expected.push(oracle);
+        }
+        engine.flush();
+
+        for (i, (h, oracle)) in handles.into_iter().zip(expected).enumerate() {
+            match h.wait_timeout(Duration::from_secs(120)) {
+                Ok(out) => {
+                    for (r, want) in oracle.iter().enumerate() {
+                        if let Some(want) = want {
+                            anyhow::ensure!(
+                                &out.outputs[r] == want,
+                                "wave {wave} request {i}: member {r} diverged \
+                                 from serial oracle"
+                            );
+                        }
+                    }
+                    verified += 1;
+                }
+                Err(SvcError::RankFailed { rank, .. }) if kill_rank.is_some() => {
+                    anyhow::ensure!(
+                        Some(rank) == kill_rank,
+                        "wave {wave} request {i}: death attributed to rank {rank}, \
+                         expected {kill_rank:?}"
+                    );
+                    death_failed += 1;
+                }
+                Err(e) => bail!("wave {wave} request {i} failed: {e}"),
             }
         }
-        verified += 1;
     }
 
-    let ms = engine.metrics();
+    // `completed` is bumped after the handles are fulfilled, so give the
+    // dispatcher a beat to finish its accounting before gating on it.
+    let ms = {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let s = engine.metrics();
+            if (s.submitted == s.completed + s.failed && s.inflight_bytes == 0)
+                || Instant::now() >= deadline
+            {
+                break s;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    };
     println!(
-        "verified {verified}/{requests} against the serial oracle{}",
+        "verified {verified}/{total} against the serial oracle{}",
         if chaos_seed.is_some() { " (under chaos)" } else { "" }
     );
+    if kill_rank.is_some() {
+        println!(
+            "rank-death: {death_failed} request(s) failed typed RankFailed, \
+             {} world rebuild(s), engine kept serving",
+            ms.worlds_rebuilt
+        );
+    }
     println!(
         "batches: {} ({} concat, {} segmented, {} solo); coalesced elems/rank total: {}",
         ms.batches, ms.concat_batches, ms.segmented_batches, ms.solo_batches, ms.coalesced_elems
@@ -491,11 +589,46 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ms.round_amortization,
         ms.amortized_rounds_per_request
     );
-    anyhow::ensure!(ms.failed == 0, "{} requests failed", ms.failed);
-    anyhow::ensure!(
-        ms.round_amortization >= 1.0 - 1e-9,
-        "coalescing must never pay more rounds than solo execution"
+    println!(
+        "latency: p50 {:.1} µs, p99 {:.1} µs, p999 {:.1} µs over {} completions",
+        ms.latency_p50_us, ms.latency_p99_us, ms.latency_p999_us, ms.latency_count
     );
+    anyhow::ensure!(
+        ms.submitted == ms.completed + ms.failed,
+        "lost requests: submitted {} != completed {} + failed {}",
+        ms.submitted,
+        ms.completed,
+        ms.failed
+    );
+    anyhow::ensure!(
+        ms.inflight_bytes == 0,
+        "inflight-bytes gauge must drain to 0 at quiesce (got {})",
+        ms.inflight_bytes
+    );
+    if kill_rank.is_some() {
+        anyhow::ensure!(
+            ms.rank_failures >= 1,
+            "--kill-rank produced no attributed failure; raise --soak or \
+             lower --kill-tick so the victim reaches its death tick"
+        );
+        anyhow::ensure!(
+            ms.worlds_rebuilt >= 1,
+            "rank death must trigger a live world rebuild"
+        );
+        anyhow::ensure!(
+            ms.rank_failures == ms.failed,
+            "every failure under rank-death injection must be typed RankFailed \
+             ({} of {} were)",
+            ms.rank_failures,
+            ms.failed
+        );
+    } else {
+        anyhow::ensure!(ms.failed == 0, "{} requests failed", ms.failed);
+        anyhow::ensure!(
+            ms.round_amortization >= 1.0 - 1e-9,
+            "coalescing must never pay more rounds than solo execution"
+        );
+    }
 
     if let Some(seed) = chaos_seed {
         chaos_concurrent_comms(seed, 8)

@@ -719,6 +719,100 @@ pub fn chaos_pool_steady_state(seed: u64) -> std::result::Result<(), String> {
     Err(last_err)
 }
 
+/// Rank-death differential: the same (seed, p, inputs) run twice —
+/// once on a **doomed** world where rank `p/2` is killed at its first
+/// chaos point, once on a clean world.
+///
+/// The doomed run must fail *attributed* — the error chain names
+/// `rank-death` (no survivor waits out its receive deadline; the
+/// poison wake in [`crate::mpi::Inbox`] guarantees that) — and the
+/// world's [`World::dead_ranks`] registry must contain exactly the
+/// victim. The clean run must match [`oracle_exscan`] bit-for-bit.
+/// Together these pin the structural attribution path the scan
+/// service's live-rebuild logic depends on: a death is never reported
+/// as a generic timeout, and death injection never corrupts results
+/// computed without it.
+pub fn rank_death_differential(seed: u64, p: usize) -> std::result::Result<(), String> {
+    assert!(p >= 2, "rank-death differential needs p >= 2");
+    const M: usize = 64;
+    let victim = p / 2;
+    let op = ops::bxor();
+    let inputs = crate::bench::inputs_i64(p, M, seed);
+    let algo = Exscan123;
+    let job = |world: &World<i64>| {
+        world.run(|ctx| {
+            let input = &inputs[ctx.rank()];
+            let mut output = vec![0i64; M];
+            // No barrier before the scan: the victim dies at tick 1, so
+            // the first chaos point it reaches kills it; a barrier would
+            // only move where the survivors observe the death.
+            algo.run(ctx, input, &mut output, &op)?;
+            Ok(output)
+        })
+    };
+
+    // ── Doomed run: delay/divert/yield off so the only injected fault
+    // is the death itself, and the attribution cannot hide behind an
+    // embargo-induced timeout. ──
+    let chaos = ChaosConfig::new(seed)
+        .with_delay_prob(0.0)
+        .with_divert_prob(0.0)
+        .with_yield_prob(0.0)
+        .with_rank_death(victim, 1);
+    let doomed: World<i64> = World::new(
+        WorldConfig::new(Topology::flat(p))
+            .with_chaos(chaos)
+            .with_recv_timeout(std::time::Duration::from_secs(2)),
+    );
+    let t0 = std::time::Instant::now();
+    match job(&doomed) {
+        Ok(_) => {
+            return Err(format!(
+                "seed {seed} p={p}: doomed world succeeded despite rank-death injection"
+            ))
+        }
+        Err(e) => {
+            let err = format!("{e:#}");
+            if !err.contains("rank-death") {
+                return Err(format!(
+                    "seed {seed} p={p}: failure not attributed to rank-death: {err}"
+                ));
+            }
+        }
+    }
+    if t0.elapsed() >= std::time::Duration::from_secs(2) {
+        return Err(format!(
+            "seed {seed} p={p}: survivors waited out the receive deadline \
+             instead of being poisoned awake"
+        ));
+    }
+    let dead = doomed.dead_ranks();
+    if dead != vec![victim] {
+        return Err(format!(
+            "seed {seed} p={p}: dead-rank registry {dead:?} != [{victim}]"
+        ));
+    }
+    match doomed.chaos_report() {
+        Some(r) if r.rank_deaths == 1 => {}
+        Some(r) => {
+            return Err(format!(
+                "seed {seed} p={p}: chaos report counted {} deaths, expected 1",
+                r.rank_deaths
+            ))
+        }
+        None => return Err(format!("seed {seed} p={p}: doomed world has no chaos report")),
+    }
+
+    // ── Clean differential: same seed-derived inputs, no chaos. ──
+    let clean: World<i64> = World::new(WorldConfig::new(Topology::flat(p)));
+    let outputs = job(&clean)
+        .map_err(|e| format!("seed {seed} p={p}: clean run failed: {e:#}"))?;
+    if let Some(msg) = oracle_check_exact(&inputs, &op, &outputs) {
+        return Err(format!("seed {seed} p={p}: clean run oracle mismatch: {msg}"));
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -740,6 +834,11 @@ mod tests {
         assert!(out[0].is_none());
         assert_eq!(out[1].as_ref().unwrap(), &vec![1]);
         assert_eq!(out[3].as_ref().unwrap(), &vec![6]);
+    }
+
+    #[test]
+    fn rank_death_differential_attributes_and_matches_oracle() {
+        rank_death_differential(0xD1FF, 4).unwrap();
     }
 
     #[test]

@@ -25,6 +25,11 @@
 //! * **Targeted drops** — an exact (src, dst, round) message can be
 //!   discarded to prove that lost messages surface as clean, attributed
 //!   `recv_timeout` errors instead of hangs.
+//! * **Rank death** — a `(rank, tick)` fault escalates a drop into the
+//!   deterministic demise of a whole rank: past the trigger tick, every
+//!   send/receive on that rank fails, its world poisons survivors'
+//!   blocking receives, and the failure is *attributed* ("rank N died")
+//!   rather than surfacing as an anonymous timeout.
 //!
 //! Every decision is a pure function of `(seed, src, dst, round)` or
 //! `(seed, rank, tick)` — no global RNG state, no time dependence — so a
@@ -63,6 +68,14 @@ pub struct ChaosConfig {
     /// Messages to silently discard, keyed (src, dst, round) — the
     /// lost-message fault used by the `recv_timeout` tests.
     pub drop: Vec<(usize, usize, u64)>,
+    /// Rank-death faults, keyed (rank, tick): once the rank's private
+    /// chaos-point counter reaches `tick`, every subsequent send/receive
+    /// on that rank fails deterministically — the in-job equivalent of
+    /// the thread dying. The `>=` trigger (rather than `==`) is load-
+    /// bearing: ticks also advance at barriers, where death is *not*
+    /// checked (a dead rank inside `VBarrier::wait` would hang the
+    /// world), so an exact match could be skipped over.
+    pub rank_death: Vec<(usize, u64)>,
 }
 
 impl ChaosConfig {
@@ -77,6 +90,7 @@ impl ChaosConfig {
             yield_prob: 0.2,
             pool_discard_period: 0,
             drop: Vec::new(),
+            rank_death: Vec::new(),
         }
     }
 
@@ -111,6 +125,16 @@ impl ChaosConfig {
         self.drop.push((src, dst, round));
         self
     }
+
+    /// Kill `rank` once its chaos-point counter reaches `tick`: all of
+    /// its later sends/receives fail deterministically and survivors see
+    /// an attributed rank-failure instead of a bare timeout. Multiple
+    /// entries for distinct ranks (or the same rank at increasing ticks
+    /// after an engine rebuild) model periodic death for soak runs.
+    pub fn with_rank_death(mut self, rank: usize, tick: u64) -> Self {
+        self.rank_death.push((rank, tick));
+        self
+    }
 }
 
 /// What the chaos layer decided to do with one message.
@@ -143,6 +167,8 @@ pub struct ChaosReport {
     pub diverted: u64,
     pub dropped: u64,
     pub yields: u64,
+    /// Distinct ranks this chaos instance killed.
+    pub rank_deaths: u64,
     /// Order-insensitive digest over all message decisions: equal digests
     /// ⇒ the identical schedule was injected (replay check).
     pub schedule_digest: u64,
@@ -179,6 +205,7 @@ pub struct Chaos {
     diverted: AtomicU64,
     dropped: AtomicU64,
     yields: AtomicU64,
+    rank_deaths: AtomicU64,
     /// XOR-accumulated digest of message decisions — XOR commutes, so the
     /// digest is independent of the thread interleaving that records it.
     digest: AtomicU64,
@@ -200,6 +227,7 @@ impl Chaos {
             diverted: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
             yields: AtomicU64::new(0),
+            rank_deaths: AtomicU64::new(0),
             digest: AtomicU64::new(0),
             seen: Mutex::new(HashMap::new()),
             log: Mutex::new(Vec::new()),
@@ -271,6 +299,19 @@ impl Chaos {
         action
     }
 
+    /// Whether `rank` is scheduled to die at or before chaos-point
+    /// `tick`. Pure in `(cfg, rank, tick)` — the caller (RankCtx) owns
+    /// the one-time transition and the side effects (poisoning inboxes,
+    /// registering with the world's dead-rank set).
+    pub(crate) fn should_die(&self, rank: usize, tick: u64) -> bool {
+        self.cfg.rank_death.iter().any(|&(r, t)| r == rank && tick >= t)
+    }
+
+    /// Record one rank's (first) death for the report.
+    pub(crate) fn note_death(&self) {
+        self.rank_deaths.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Deterministically yield the current thread at a rank boundary.
     /// `tick` is the rank's private, monotonically increasing chaos-point
     /// counter, so the decision sequence per rank is schedule-independent.
@@ -298,6 +339,7 @@ impl Chaos {
             diverted: self.diverted.load(Ordering::Relaxed),
             dropped: self.dropped.load(Ordering::Relaxed),
             yields: self.yields.load(Ordering::Relaxed),
+            rank_deaths: self.rank_deaths.load(Ordering::Relaxed),
             schedule_digest: self.digest.load(Ordering::Relaxed),
             events,
         }
@@ -389,6 +431,19 @@ mod tests {
         let twice = c.report().schedule_digest;
         assert_ne!(twice, 0, "even repetition counts must stay visible");
         assert_ne!(twice, once);
+    }
+
+    #[test]
+    fn rank_death_triggers_at_and_after_tick() {
+        let c = Chaos::new(ChaosConfig::new(5).with_rank_death(2, 10));
+        assert!(!c.should_die(2, 0));
+        assert!(!c.should_die(2, 9));
+        assert!(c.should_die(2, 10), "trigger tick is inclusive");
+        assert!(c.should_die(2, 11), ">= trigger keeps firing (barrier ticks may skip exact)");
+        assert!(!c.should_die(1, 10_000), "only the configured rank dies");
+        assert_eq!(c.report().rank_deaths, 0, "should_die is pure; note_death counts");
+        c.note_death();
+        assert_eq!(c.report().rank_deaths, 1);
     }
 
     #[test]

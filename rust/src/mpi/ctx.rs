@@ -57,6 +57,7 @@ use super::msg::Msg;
 use super::op::{OpKernel, OpRef};
 use super::pool::{BufferPool, PoolBuf, PoolStats};
 use super::vbarrier::VBarrier;
+use super::world::DeadRanks;
 use crate::cost::CostModel;
 use crate::trace::{EventKind, RankTrace};
 
@@ -133,6 +134,14 @@ pub struct RankCtx<T: Elem> {
     /// This rank's chaos-point counter: the deterministic "time" axis of
     /// injected scheduler yields (advances once per send/receive/barrier).
     chaos_ticks: u64,
+    /// World-shared registry of chaos-killed ranks (attributed failures
+    /// for survivors; see [`DeadRanks`]).
+    dead: Arc<DeadRanks>,
+    /// Set once this rank's own death fires: every later send/receive on
+    /// this rank fails immediately. The rank thread itself stays alive —
+    /// an OS-thread exit would wedge the executor's completion latch, so
+    /// "death" is an in-job bail that still participates in barriers.
+    is_dead: bool,
     /// Virtual clock (µs). Meaningless in real mode.
     vclock: f64,
     /// Whether tracing was requested for this world (lets a persistent
@@ -156,6 +165,7 @@ impl<T: Elem> RankCtx<T> {
         per_element: bool,
         recv_deadline: Duration,
         chaos: Option<Arc<Chaos>>,
+        dead: Arc<DeadRanks>,
     ) -> Self {
         RankCtx {
             rank,
@@ -176,6 +186,8 @@ impl<T: Elem> RankCtx<T> {
             recv_deadline,
             chaos,
             chaos_ticks: 0,
+            dead,
+            is_dead: false,
             vclock: 0.0,
             tracing,
             trace: tracing.then(|| RankTrace::new(rank)),
@@ -189,6 +201,34 @@ impl<T: Elem> RankCtx<T> {
             self.chaos_ticks += 1;
             chaos.maybe_yield(self.rank, self.chaos_ticks);
         }
+    }
+
+    /// Rank-death gate, called from `post` and `take` (never from
+    /// `barrier` — a rank absent from `VBarrier::wait` would hang the
+    /// whole world, so a dead rank keeps attending barriers and only its
+    /// point-to-point traffic fails). On the first firing the rank
+    /// registers in the world's [`DeadRanks`] set and poisons **every**
+    /// inbox so all blocked survivors wake immediately and attribute.
+    fn ensure_alive(&mut self) -> Result<()> {
+        if self.is_dead {
+            bail!("rank {} is dead (chaos rank-death)", self.rank);
+        }
+        let Some(chaos) = &self.chaos else { return Ok(()) };
+        if !chaos.should_die(self.rank, self.chaos_ticks) {
+            return Ok(());
+        }
+        self.is_dead = true;
+        if self.dead.mark_dead(self.rank) {
+            chaos.note_death();
+        }
+        for inbox in self.inboxes.iter() {
+            inbox.poison();
+        }
+        bail!(
+            "rank {} killed by chaos rank-death at tick {}",
+            self.rank,
+            self.chaos_ticks
+        );
     }
 
     /// This rank's id, `0 <= rank < size` — communicator-relative inside a
@@ -370,6 +410,7 @@ impl<T: Elem> RankCtx<T> {
             bail!("rank {} sending to out-of-range rank {}", self.rank, to);
         }
         self.chaos_point();
+        self.ensure_alive()?;
         let tag = self.tag(round);
         let msg = Msg {
             src: self.rank,
@@ -395,22 +436,52 @@ impl<T: Elem> RankCtx<T> {
     /// arrivals (including messages for other contexts or lanes).
     fn take(&mut self, from: usize, round: u32) -> Result<Msg<T>> {
         self.chaos_point();
+        self.ensure_alive()?;
         let tag = self.tag(round);
         if let Some(i) = self.pending.iter().position(|m| m.src == from && m.tag == tag) {
             return Ok(self.pending.swap_remove(i));
         }
         let deadline = Instant::now() + self.recv_deadline;
-        match self.inboxes[self.rank].recv_match(from, tag, &mut self.pending, deadline) {
-            Some(msg) => Ok(msg),
-            None if self.tag_ctx == WORLD_CTX => bail!(
-                "rank {} deadlocked waiting for (from={from}, round={round})",
-                self.rank
-            ),
-            None => bail!(
-                "rank {} deadlocked waiting for (from={from}, round={round}) on ctx={}",
-                self.rank,
-                self.tag_ctx
-            ),
+        loop {
+            // A rank that died before we started blocking: fail fast and
+            // attributed rather than waiting out the full deadline for a
+            // message that may never come (the whole job is doomed — every
+            // survivor bails, the caller rebuilds the world).
+            if self.dead.any() {
+                bail!(
+                    "rank {} aborting receive (from={from}, round={round}): rank(s) {:?} died (chaos rank-death)",
+                    self.rank,
+                    self.dead.list()
+                );
+            }
+            match self.inboxes[self.rank].recv_match(from, tag, &mut self.pending, deadline) {
+                Some(msg) => return Ok(msg),
+                None => {
+                    // None is overloaded: poison wake-up (a rank died — the
+                    // next loop pass attributes it) or deadline expiry (a
+                    // genuine lost message / deadlock). Distinguish by the
+                    // registry and the clock; a spurious early return with
+                    // neither re-enters the receive with the remaining
+                    // deadline.
+                    if self.dead.any() {
+                        continue;
+                    }
+                    if Instant::now() < deadline {
+                        continue;
+                    }
+                    if self.tag_ctx == WORLD_CTX {
+                        bail!(
+                            "rank {} deadlocked waiting for (from={from}, round={round})",
+                            self.rank
+                        );
+                    }
+                    bail!(
+                        "rank {} deadlocked waiting for (from={from}, round={round}) on ctx={}",
+                        self.rank,
+                        self.tag_ctx
+                    );
+                }
+            }
         }
     }
 

@@ -207,6 +207,12 @@ pub(crate) struct Inbox<T> {
     delayed: Mutex<Vec<(Instant, Msg<T>)>>,
     /// Lock-free emptiness hint for the embargo queue.
     delayed_len: AtomicUsize,
+    /// Bumped by [`poison`](Self::poison) when a rank dies in this world:
+    /// a receiver whose blocking receive observes the epoch change bails
+    /// out early (returning `None` before its deadline) so its caller can
+    /// attribute the failure to the dead rank instead of waiting out a
+    /// full timeout that can never be satisfied.
+    poison_epoch: AtomicU64,
     /// Receiver-is-parked hint (Dekker partner of `Slot::full`; Relaxed —
     /// see the module docs for why the park slice bounds the race).
     parked: AtomicBool,
@@ -253,6 +259,7 @@ impl<T> Inbox<T> {
             overflow_len: AtomicUsize::new(0),
             delayed: Mutex::new(Vec::new()),
             delayed_len: AtomicUsize::new(0),
+            poison_epoch: AtomicU64::new(0),
             parked: AtomicBool::new(false),
             park_lock: Mutex::new(()),
             park_cv: Condvar::new(),
@@ -371,6 +378,15 @@ impl<T> Inbox<T> {
         self.park_cv.notify_all();
     }
 
+    /// Rank-death hook: force any in-flight (and every future) blocking
+    /// receive on this inbox to return early. The epoch bump is observed
+    /// by [`recv_match`](Self::recv_match)'s loop and the `wake()` kicks
+    /// a parked receiver out of its condvar slice immediately.
+    pub fn poison(&self) {
+        self.poison_epoch.fetch_add(1, Ordering::Release);
+        self.wake();
+    }
+
     /// Take whatever message occupies `slot` — the caller checks the
     /// match and buffers strangers (slot collisions) itself.
     fn take_slot(slot: &Slot<T>) -> Option<Msg<T>> {
@@ -434,7 +450,10 @@ impl<T> Inbox<T> {
 
     /// Receiver side: block until the message from `src` tagged `tag`
     /// arrives, buffering strangers into `pending`. Returns `None` on
-    /// deadline expiry (the caller reports the deadlock).
+    /// deadline expiry **or** when the inbox is poisoned mid-receive
+    /// (rank death elsewhere in the world) — the caller distinguishes the
+    /// two by consulting the world's dead-rank registry and reports an
+    /// attributed failure or a deadlock accordingly.
     ///
     /// `pending` is the rank-local out-of-order buffer: messages that
     /// collided in the slot array or arrived through overflow for a later
@@ -446,6 +465,11 @@ impl<T> Inbox<T> {
         pending: &mut Vec<Msg<T>>,
         deadline: Instant,
     ) -> Option<Msg<T>> {
+        // Poison is edge-triggered against the epoch at entry: a world
+        // whose rank died *before* this call is the caller's problem (it
+        // checks the dead-rank registry first); this detects deaths that
+        // happen while we block.
+        let entry_epoch = self.poison_epoch.load(Ordering::Acquire);
         // Hoist the expected slot and its budget out of the probe loop:
         // one hash, one EMA read per receive — not per probe.
         let slot = &self.slots[slot_index(src, tag)];
@@ -461,8 +485,13 @@ impl<T> Inbox<T> {
             }
         };
         loop {
-            // 0. Release any chaos-embargoed messages that are now due
-            // (no-op single atomic probe when chaos is off).
+            // 0. Bail out on rank death (single relaxed-cost atomic when
+            // healthy) and release any chaos-embargoed messages that are
+            // now due (no-op single atomic probe when chaos is off).
+            if self.poison_epoch.load(Ordering::Acquire) != entry_epoch {
+                flush(probes);
+                return None;
+            }
             self.release_due();
             // 1. The expected slot (single atomic probe on the fast path).
             if let Some(msg) = Self::take_slot(slot) {
@@ -834,6 +863,28 @@ mod tests {
         // Budget resolution ignores the EMA under the fixed policy.
         let budget = inbox.spin_budget(&inbox.slots[slot_index(1, 1)]);
         assert!(budget == FIXED_SPIN_TRIES || !spin_allowed());
+    }
+
+    #[test]
+    fn poison_interrupts_a_blocked_receive_early() {
+        let inbox: Arc<Inbox<i64>> = Arc::new(Inbox::new());
+        let tx = Arc::clone(&inbox);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            tx.poison();
+        });
+        let mut pending = Vec::new();
+        let t0 = Instant::now();
+        // 5 s deadline, but the poison must kick us out in ~30 ms.
+        let got = inbox.recv_match(0, 0, &mut pending, deadline());
+        assert!(got.is_none());
+        assert!(t0.elapsed() < Duration::from_secs(2), "poison must not wait out the deadline");
+        h.join().unwrap();
+        // A poisoned inbox still matches already-buffered messages for
+        // receives entered after the poison (edge-triggered semantics).
+        inbox.deposit(msg(1, 1, 8));
+        let got = inbox.recv_match(1, 1, &mut pending, deadline()).unwrap();
+        assert_eq!(got.data[0], 8);
     }
 
     #[test]

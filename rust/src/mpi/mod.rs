@@ -15,8 +15,10 @@
 //! * [`world`] — topology, the one-shot [`run_world`]/[`run_scan`] entry
 //!   points and the persistent [`World`] executor.
 //! * [`chaos`] — seeded deterministic fault injection (message embargo,
-//!   slot diversion, scheduler yields, pool pressure, targeted drops) for
-//!   the differential self-verification harness (EXPERIMENTS.md §Chaos).
+//!   slot diversion, scheduler yields, pool pressure, targeted drops, and
+//!   scheduled **rank death** with poison-wake attribution via
+//!   [`World::dead_ranks`]) for the differential self-verification
+//!   harness (EXPERIMENTS.md §Chaos, §Robustness).
 //!
 //! Real MPI is deliberately *not* a dependency: the paper's claims are
 //! about round structure and ⊕ counts, which this substrate reproduces

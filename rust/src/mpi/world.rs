@@ -209,6 +209,45 @@ pub fn rank_threads_spawned() -> usize {
     RANK_THREADS_SPAWNED.load(Ordering::SeqCst)
 }
 
+/// Shared registry of ranks killed by chaos rank-death in one world.
+///
+/// The dying rank registers itself here (from inside its job — the worker
+/// thread itself must stay alive to keep counting the completion latch
+/// down), and survivors consult it from their blocking-receive loops to
+/// convert a poison wake-up into an *attributed* failure ("rank N died")
+/// instead of an anonymous deadline expiry. `any()` is the hot-path
+/// check: a single relaxed load that stays zero for chaos-free worlds.
+#[derive(Debug, Default)]
+pub(crate) struct DeadRanks {
+    count: AtomicUsize,
+    set: Mutex<Vec<usize>>,
+}
+
+impl DeadRanks {
+    /// Register `rank` as dead; returns true the first time only (the
+    /// caller bumps the chaos report exactly once per rank).
+    pub(crate) fn mark_dead(&self, rank: usize) -> bool {
+        let mut set = lock_recover(&self.set);
+        if set.contains(&rank) {
+            return false;
+        }
+        set.push(rank);
+        set.sort_unstable();
+        self.count.fetch_add(1, Ordering::Release);
+        true
+    }
+
+    /// Fast check: has any rank died in this world?
+    pub(crate) fn any(&self) -> bool {
+        self.count.load(Ordering::Acquire) > 0
+    }
+
+    /// Sorted list of dead ranks.
+    pub(crate) fn list(&self) -> Vec<usize> {
+        lock_recover(&self.set).clone()
+    }
+}
+
 fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     payload
         .downcast_ref::<&str>()
@@ -235,6 +274,7 @@ where
     let barrier = Arc::new(VBarrier::new(p));
     let recv_deadline = cfg.recv_deadline();
     let chaos = cfg.build_chaos();
+    let dead = Arc::new(DeadRanks::default());
 
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(p);
@@ -248,6 +288,7 @@ where
             let unfused = cfg.unfused_compat;
             let per_element = cfg.per_element_ops;
             let chaos = chaos.clone();
+            let dead = Arc::clone(&dead);
             let builder = std::thread::Builder::new()
                 .name(format!("rank-{rank}"))
                 .stack_size(cfg.stack_size);
@@ -266,6 +307,7 @@ where
                         per_element,
                         recv_deadline,
                         chaos,
+                        dead,
                     );
                     fref(&mut ctx)
                 })
@@ -352,6 +394,7 @@ pub struct World<T: Elem> {
     jobs: Vec<Arc<Channel<Job<T>>>>,
     pools: Vec<Arc<BufferPool<T>>>,
     chaos: Option<Arc<Chaos>>,
+    dead: Arc<DeadRanks>,
     handles: Vec<std::thread::JoinHandle<()>>,
     /// Serializes whole `run` calls: jobs from two overlapping runs would
     /// interleave differently per rank and desynchronize the barrier.
@@ -372,6 +415,7 @@ impl<T: Elem> World<T> {
         let barrier = Arc::new(VBarrier::new(p));
         let recv_deadline = cfg.recv_deadline();
         let chaos = cfg.build_chaos();
+        let dead = Arc::new(DeadRanks::default());
 
         let mut jobs: Vec<Arc<Channel<Job<T>>>> = Vec::with_capacity(p);
         let mut handles = Vec::with_capacity(p);
@@ -386,6 +430,7 @@ impl<T: Elem> World<T> {
             let unfused = cfg.unfused_compat;
             let per_element = cfg.per_element_ops;
             let rank_chaos = chaos.clone();
+            let rank_dead = Arc::clone(&dead);
             let stack = cfg.stack_size;
             let handle = std::thread::Builder::new()
                 .name(format!("rank-{rank}"))
@@ -404,6 +449,7 @@ impl<T: Elem> World<T> {
                         per_element,
                         recv_deadline,
                         rank_chaos,
+                        rank_dead,
                     );
                     while let Some((job, done)) = rx.pop_wait() {
                         job(&mut ctx);
@@ -418,7 +464,16 @@ impl<T: Elem> World<T> {
             jobs.push(ch);
             handles.push(handle);
         }
-        World { cfg, jobs, pools, chaos, handles, run_lock: Mutex::new(()), ctxs: CtxAlloc::new() }
+        World {
+            cfg,
+            jobs,
+            pools,
+            chaos,
+            dead,
+            handles,
+            run_lock: Mutex::new(()),
+            ctxs: CtxAlloc::new(),
+        }
     }
 
     /// The implicit world communicator (context 0, all ranks). Collectives
@@ -464,6 +519,14 @@ impl<T: Elem> World<T> {
     /// worlds at the same seed running the same jobs report equal digests.
     pub fn chaos_report(&self) -> Option<ChaosReport> {
         self.chaos.as_ref().map(|c| c.report())
+    }
+
+    /// Sorted list of ranks killed by chaos rank-death in this world
+    /// (empty for healthy worlds). This is the engine's *structural*
+    /// failure-attribution source — no error-string parsing. A non-empty
+    /// list means the world is permanently degraded: rebuild it.
+    pub fn dead_ranks(&self) -> Vec<usize> {
+        self.dead.list()
     }
 
     /// Run `f` once on every rank and collect results in rank order.
@@ -767,6 +830,40 @@ mod tests {
         // The world survives a panicked job: workers caught the unwind.
         let ok = world.run(|ctx| Ok(ctx.rank())).unwrap();
         assert_eq!(ok, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn rank_death_attributes_and_registers() {
+        // Kill rank 2 at its very first chaos point (tick 1, the ring
+        // send). Its own job must fail with the rank-death message; any
+        // survivor blocked on it must be poisoned awake and attribute the
+        // death instead of waiting out the receive deadline.
+        let chaos = ChaosConfig::new(9)
+            .with_delay_prob(0.0)
+            .with_divert_prob(0.0)
+            .with_yield_prob(0.0)
+            .with_rank_death(2, 1);
+        let cfg = WorldConfig::new(Topology::flat(4))
+            .with_chaos(chaos)
+            .with_recv_timeout(Duration::from_secs(10));
+        let world: World<i64> = World::new(cfg);
+        let t0 = std::time::Instant::now();
+        let res = world.run(|ctx| {
+            let p = ctx.size();
+            let r = ctx.rank();
+            let sbuf = [r as i64];
+            let mut rbuf = [0i64];
+            ctx.sendrecv(0, (r + 1) % p, &sbuf, (r + p - 1) % p, &mut rbuf)?;
+            Ok(rbuf[0])
+        });
+        let err = format!("{:#}", res.unwrap_err());
+        assert!(err.contains("rank-death"), "{err}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(8),
+            "survivors must not wait out the full receive deadline"
+        );
+        assert_eq!(world.dead_ranks(), vec![2]);
+        assert_eq!(world.chaos_report().unwrap().rank_deaths, 1);
     }
 
     #[test]

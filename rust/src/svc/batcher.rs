@@ -25,7 +25,7 @@
 //! batching window collected.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::mpi::Elem;
 
@@ -46,6 +46,14 @@ pub struct BatchPolicy {
     /// Cap on the per-rank element count of one coalesced collective
     /// (concatenated width, or `lanes × m` for segmented batches).
     pub max_coalesced_elems: usize,
+    /// Opt-in **adaptive batching window**: `Some((lo, hi))` lets the
+    /// dispatcher widen the collection window (×2, up to `hi`) when a
+    /// cycle fills `max_batch` — trading p50 latency for amortization
+    /// under load — and narrow it (÷2, down to `lo`) when a cycle
+    /// collects ≤ `max_batch / 4`, so an idle service converges back to
+    /// low latency. `None` (the default) keeps the fixed `window`, which
+    /// also keeps the deterministic manual-flush tests byte-stable.
+    pub window_range: Option<(Duration, Duration)>,
 }
 
 impl Default for BatchPolicy {
@@ -54,7 +62,20 @@ impl Default for BatchPolicy {
             window: Duration::from_micros(200),
             max_batch: 64,
             max_coalesced_elems: 1 << 20,
+            window_range: None,
         }
+    }
+}
+
+impl BatchPolicy {
+    /// Enable the adaptive window between `lo` and `hi` (see
+    /// [`window_range`](Self::window_range)). The starting width is the
+    /// current `window`, clamped into the range.
+    pub fn with_adaptive_window(mut self, lo: Duration, hi: Duration) -> Self {
+        assert!(lo <= hi, "adaptive window range must have lo <= hi");
+        self.window = self.window.clamp(lo, hi);
+        self.window_range = Some((lo, hi));
+        self
     }
 }
 
@@ -64,6 +85,12 @@ pub(crate) struct PendingReq<T: Elem> {
     pub req: ScanRequest<T>,
     pub state: Arc<HandleState<T>>,
     pub metrics: Arc<ServiceMetrics>,
+    /// Admission instant — the latency histogram measures submit →
+    /// fulfill.
+    pub submitted_at: Instant,
+    /// Payload bytes charged against the engine's inflight-bytes gauge at
+    /// admission; released exactly once, in `drop` below.
+    pub bytes: usize,
 }
 
 impl<T: Elem> Drop for PendingReq<T> {
@@ -73,7 +100,13 @@ impl<T: Elem> Drop for PendingReq<T> {
     /// [`SvcError::Shutdown`] instead of leaving `wait` blocked forever,
     /// and counts the failure so `submitted == completed + failed` holds
     /// on every path. A no-op when the scatter already fulfilled.
+    ///
+    /// The inflight-bytes release lives here too — every `PendingReq`
+    /// drops exactly once, *after* any fulfillment, so the gauge returns
+    /// to zero on every path (success, failure, shutdown, unwind) without
+    /// per-path bookkeeping.
     fn drop(&mut self) {
+        self.metrics.sub_inflight_bytes(self.bytes as u64);
         if self.state.fulfill_if_empty(Err(SvcError::Shutdown)) {
             self.metrics.on_failed(1);
         }
@@ -272,6 +305,8 @@ mod tests {
             req,
             state: HandleState::new(),
             metrics: Arc::new(ServiceMetrics::default()),
+            submitted_at: Instant::now(),
+            bytes: 0,
         }
     }
 

@@ -28,6 +28,33 @@
 //! transport element type — they execute on a lazily created companion
 //! `World<Seg<T>>` with the same topology/chaos configuration (built only
 //! if a segmented batch ever forms).
+//!
+//! # Admission control and backpressure
+//!
+//! The submit queue is bounded. [`ScanEngine::submit`] admits a request
+//! only while both limits hold: open requests (submitted but not yet
+//! completed or failed) below [`EngineConfig::max_inflight`], and the
+//! in-flight payload gauge plus the new request's payload within
+//! [`EngineConfig::max_inflight_bytes`]. Over either limit the engine
+//! either fast-fails with typed [`SvcError::Overloaded`] (the
+//! [`AdmissionMode::FailFast`] default) or polls for capacity until a
+//! deadline ([`AdmissionMode::Block`]), then rejects. Rejected requests
+//! are **not** counted as submitted — `submitted == completed + failed`
+//! stays an exact invariant and `rejected` is its own counter. A single
+//! request larger than the whole byte budget is still admitted when the
+//! gauge is at zero, so no request can starve forever.
+//!
+//! # Rank death and live rebuild
+//!
+//! Under chaos rank-death injection ([`ChaosConfig::with_rank_death`]) a
+//! rank deterministically dies mid-collective; survivors' receives are
+//! poisoned and fail fast, attributed via the world's dead-rank registry.
+//! The dispatcher classifies such wave failures as
+//! [`SvcError::RankFailed`] (structural — no error-string parsing),
+//! fails every handle of the wave typed, strips the consumed death
+//! entries from its chaos config so the rebuilt world does not re-die at
+//! the same tick, and rebuilds the worlds — the engine keeps serving and
+//! no request is ever lost.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -37,7 +64,7 @@ use crate::coll::segmented::Seg;
 use crate::coll::{exscan_by_name, ScanAlgorithm};
 use crate::mpi::{ChaosConfig, Comm, Elem, OpRef, Topology, World, WorldConfig};
 use crate::trace::{RankTrace, TraceReport};
-use crate::util::Channel;
+use crate::util::{Channel, PushError};
 
 use super::batcher::{plan_batches, BatchPolicy, PendingReq, Plan};
 use super::metrics::{MetricsSnapshot, ServiceMetrics};
@@ -52,6 +79,31 @@ pub const CTX_RING: usize = 32;
 /// Hard cap on requests collected into one cycle (backpressure bound).
 const COLLECT_CAP: usize = 4096;
 
+/// Default per-receive deadline for the engine's worlds. Finite by
+/// design: an engine world that waits forever on a dead peer turns a
+/// rank failure into a service hang. 5 s is four orders of magnitude
+/// above the chaos embargo-release cap (delayed deliveries are bounded
+/// by `ChaosConfig::max_delay`, default 200 µs), so fault-injected
+/// slowness can never masquerade as rank death.
+pub const DEFAULT_RECV_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Default cap on open requests (submitted, not yet completed/failed).
+pub const DEFAULT_MAX_INFLIGHT: usize = 4096;
+
+/// Default cap on the summed payload bytes of open requests (64 MiB).
+pub const DEFAULT_MAX_INFLIGHT_BYTES: usize = 64 << 20;
+
+/// What [`ScanEngine::submit`] does when admission limits are hit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// Reject immediately with [`SvcError::Overloaded`] (the default —
+    /// latency-predictable; callers own their retry policy).
+    FailFast,
+    /// Poll for capacity up to this long, then reject with
+    /// [`SvcError::Overloaded`].
+    Block(Duration),
+}
+
 /// Engine construction parameters.
 #[derive(Clone)]
 pub struct EngineConfig {
@@ -64,8 +116,15 @@ pub struct EngineConfig {
     /// Seeded fault injection for the engine's worlds (differential
     /// verification; `None` in production).
     pub chaos: Option<ChaosConfig>,
-    /// Per-receive deadline override for the engine's worlds.
-    pub recv_timeout: Option<Duration>,
+    /// Per-receive deadline for the engine's worlds
+    /// ([`DEFAULT_RECV_TIMEOUT`] unless overridden).
+    pub recv_timeout: Duration,
+    /// Admission cap on open requests; see the module docs.
+    pub max_inflight: usize,
+    /// Admission cap on summed open-request payload bytes.
+    pub max_inflight_bytes: usize,
+    /// Behaviour at the admission limits.
+    pub admission: AdmissionMode,
 }
 
 impl EngineConfig {
@@ -75,7 +134,10 @@ impl EngineConfig {
             algo: "123-doubling".to_string(),
             policy: BatchPolicy::default(),
             chaos: None,
-            recv_timeout: None,
+            recv_timeout: DEFAULT_RECV_TIMEOUT,
+            max_inflight: DEFAULT_MAX_INFLIGHT,
+            max_inflight_bytes: DEFAULT_MAX_INFLIGHT_BYTES,
+            admission: AdmissionMode::FailFast,
         }
     }
 
@@ -95,15 +157,27 @@ impl EngineConfig {
     }
 
     pub fn with_recv_timeout(mut self, t: Duration) -> Self {
-        self.recv_timeout = Some(t);
+        self.recv_timeout = t;
+        self
+    }
+
+    /// Cap open requests / open payload bytes at admission.
+    pub fn with_admission_limits(mut self, max_inflight: usize, max_bytes: usize) -> Self {
+        assert!(max_inflight >= 1, "max_inflight must be at least 1");
+        self.max_inflight = max_inflight;
+        self.max_inflight_bytes = max_bytes;
+        self
+    }
+
+    pub fn with_admission_mode(mut self, mode: AdmissionMode) -> Self {
+        self.admission = mode;
         self
     }
 
     fn world_config(&self) -> WorldConfig {
-        let mut wc = WorldConfig::new(self.topology).with_trace(true);
-        if let Some(t) = self.recv_timeout {
-            wc = wc.with_recv_timeout(t);
-        }
+        let mut wc = WorldConfig::new(self.topology)
+            .with_trace(true)
+            .with_recv_timeout(self.recv_timeout);
         if let Some(ch) = &self.chaos {
             wc = wc.with_chaos(ch.clone());
         }
@@ -120,6 +194,11 @@ struct Shared<T: Elem> {
     /// Shared with every [`PendingReq`] so the abandonment path
     /// (`PendingReq::drop`) can account its failure.
     metrics: Arc<ServiceMetrics>,
+    /// Admission caps and mode (copied out of [`EngineConfig`] so
+    /// `submit` needs no lock).
+    max_inflight: usize,
+    max_inflight_bytes: usize,
+    admission: AdmissionMode,
 }
 
 /// The multi-tenant scan service (see the module docs).
@@ -141,9 +220,15 @@ impl<T: Elem> ScanEngine<T> {
         }
         let shared = Arc::new(Shared {
             p,
-            queue: Channel::new(),
+            // The queue cap mirrors the open-request cap: admission is
+            // the real limit, the bounded queue a structural backstop
+            // (queued ⊆ open, so it can only fill under a submit race).
+            queue: Channel::bounded(cfg.max_inflight),
             flush_gen: AtomicU64::new(0),
             metrics: Arc::new(ServiceMetrics::default()),
+            max_inflight: cfg.max_inflight,
+            max_inflight_bytes: cfg.max_inflight_bytes,
+            admission: cfg.admission,
         });
         let dispatcher = {
             let shared = Arc::clone(&shared);
@@ -161,23 +246,70 @@ impl<T: Elem> ScanEngine<T> {
     }
 
     /// Submit one exclusive-scan request; returns immediately with a
-    /// nonblocking handle. Shape errors are reported synchronously.
+    /// nonblocking handle. Shape errors are reported synchronously;
+    /// admission-limit rejections return [`SvcError::Overloaded`]
+    /// (immediately under [`AdmissionMode::FailFast`], after the poll
+    /// deadline under [`AdmissionMode::Block`]).
     pub fn submit(&self, req: ScanRequest<T>) -> Result<ScanHandle<T>, SvcError> {
         req.validate(self.shared.p)?;
+        let bytes = req.payload_bytes();
+        self.admit(bytes)?;
         let state = HandleState::new();
+        // Gauge and counter move together, before the push: a push that
+        // fails drops `pending`, whose `Drop` releases the gauge and
+        // accounts the failure — keeping `submitted == completed +
+        // failed` and a zero-returning gauge on every path.
+        self.shared.metrics.on_submit();
+        self.shared.metrics.add_inflight_bytes(bytes as u64);
         let pending = PendingReq {
             req,
             state: Arc::clone(&state),
             metrics: Arc::clone(&self.shared.metrics),
+            submitted_at: Instant::now(),
+            bytes,
         };
-        // Count the submission first: a push that fails (engine shut
-        // down) drops `pending`, whose `Drop` accounts the failure —
-        // keeping `submitted == completed + failed` on every path.
-        self.shared.metrics.on_submit();
-        if self.shared.queue.push(pending).is_err() {
-            return Err(SvcError::Shutdown);
+        match self.shared.queue.try_push(pending) {
+            Ok(()) => Ok(ScanHandle { state }),
+            Err(PushError::Closed(pr)) => {
+                drop(pr);
+                Err(SvcError::Shutdown)
+            }
+            Err(PushError::Full(pr)) => {
+                // Backstop only: admission bounds open requests at the
+                // queue cap, so Full needs a submit race. The dropped
+                // request is accounted failed (it *was* submitted).
+                drop(pr);
+                Err(SvcError::Overloaded)
+            }
         }
-        Ok(ScanHandle { state })
+    }
+
+    /// Block or fail until the request fits under both admission caps.
+    /// A request larger than the whole byte budget is admitted once the
+    /// gauge reaches zero, so nothing starves forever.
+    fn admit(&self, bytes: usize) -> Result<(), SvcError> {
+        let deadline = match self.shared.admission {
+            AdmissionMode::FailFast => None,
+            AdmissionMode::Block(t) => Some(Instant::now() + t),
+        };
+        loop {
+            let open = self.shared.metrics.open_requests();
+            let gauge = self.shared.metrics.inflight_bytes() as usize;
+            let fits = (open as usize) < self.shared.max_inflight
+                && (gauge == 0 || gauge + bytes <= self.shared.max_inflight_bytes);
+            if fits {
+                return Ok(());
+            }
+            match deadline {
+                Some(d) if Instant::now() < d && !self.shared.queue.is_closed() => {
+                    std::thread::sleep(Duration::from_micros(50));
+                }
+                _ => {
+                    self.shared.metrics.on_rejected();
+                    return Err(SvcError::Overloaded);
+                }
+            }
+        }
     }
 
     /// Convenience: submit a full-world exscan (`inputs[r]` is rank r's
@@ -200,6 +332,14 @@ impl<T: Elem> ScanEngine<T> {
     /// Current service counters.
     pub fn metrics(&self) -> MetricsSnapshot {
         self.shared.metrics.snapshot()
+    }
+
+    /// Shared handle to the live counters. Outlives the engine, so a
+    /// monitoring pipeline (or a shutdown test) can snapshot after drop
+    /// — e.g. to check `submitted == completed + failed` and a drained
+    /// `inflight_bytes` gauge once the dispatcher has quiesced.
+    pub fn metrics_shared(&self) -> Arc<ServiceMetrics> {
+        Arc::clone(&self.shared.metrics)
     }
 }
 
@@ -244,9 +384,30 @@ fn dispatch_loop<T: Elem>(cfg: EngineConfig, shared: Arc<Shared<T>>) {
     }
 }
 
+/// Adaptive batching window step (pure, unit-tested): widen ×2 when the
+/// cycle filled its batch cap (more coalescing headroom under load),
+/// narrow ÷2 when it collected ≤ cap/4 (don't tax latency when idle),
+/// hold otherwise; always clamped to `[lo, hi]`.
+fn next_window(win: Duration, lo: Duration, hi: Duration, collected: usize, max_batch: usize) -> Duration {
+    let max_batch = max_batch.max(1);
+    if collected >= max_batch {
+        (win * 2).clamp(lo, hi)
+    } else if collected <= max_batch / 4 {
+        (win / 2).clamp(lo, hi)
+    } else {
+        win.clamp(lo, hi)
+    }
+}
+
 fn dispatch_cycles<T: Elem>(cfg: EngineConfig, shared: &Arc<Shared<T>>) {
     let p = shared.p;
-    let world_cfg = cfg.world_config();
+    // The running config is mutable: after a rank-death rebuild the
+    // consumed death entries are stripped so the fresh world does not
+    // re-die at the same tick (remaining entries keep firing — that is
+    // what the soak bench's periodic-death schedule is made of).
+    let mut run_cfg = cfg;
+    let cfg = run_cfg.clone();
+    let mut world_cfg = run_cfg.world_config();
     let mut world: World<T> = World::new(world_cfg.clone());
     let mut seg_world: Option<World<Seg<T>>> = None;
     let ring: Vec<u16> = {
@@ -265,11 +426,14 @@ fn dispatch_cycles<T: Elem>(cfg: EngineConfig, shared: &Arc<Shared<T>>) {
     // flushes gets them executed now even if the flush raced ahead of
     // this thread's startup or a previous cycle's teardown.
     let mut seen_gen: u64 = 0;
+    // Adaptive batching window (fixed at `policy.window` unless a
+    // `window_range` is configured; see `next_window`).
+    let mut window = cfg.policy.window;
     loop {
         let Some(first) = shared.queue.pop_wait() else { break };
         // ── Collect the cycle: batching window from the first arrival. ──
         let mut collected: Vec<PendingReq<T>> = vec![first];
-        let deadline = Instant::now() + cfg.policy.window;
+        let deadline = Instant::now() + window;
         loop {
             while collected.len() < COLLECT_CAP {
                 match shared.queue.try_pop() {
@@ -302,6 +466,9 @@ fn dispatch_cycles<T: Elem>(cfg: EngineConfig, shared: &Arc<Shared<T>>) {
                 break;
             }
             std::thread::sleep(Duration::from_micros(50).min(deadline - now));
+        }
+        if let Some((lo, hi)) = cfg.policy.window_range {
+            window = next_window(window, lo, hi, collected.len(), cfg.policy.max_batch);
         }
 
         // ── Plan, then execute in waves of ≤ CTX_RING concurrent plans. ──
@@ -381,17 +548,45 @@ fn dispatch_cycles<T: Elem>(cfg: EngineConfig, shared: &Arc<Shared<T>>) {
             }
             if let Some(detail) = wave_failed {
                 // Tainted transport state: fail every still-unconsumed
-                // handle of this wave's plans, then rebuild the worlds.
+                // handle of this wave's plans typed, then rebuild the
+                // worlds. Classification is structural — the dead-rank
+                // registry, not error-string parsing — so a rank death
+                // surfaces as an attributed `RankFailed` and anything
+                // else (deadline, chaos drop) stays `Collective`.
+                let mut dead: Vec<usize> = world.dead_ranks();
+                if let Some(sw) = &seg_world {
+                    dead.extend(sw.dead_ranks());
+                }
+                dead.sort_unstable();
+                dead.dedup();
                 let mut failed = 0u64;
                 for plan in wave {
                     for mi in plan.members() {
                         if let Some(pr) = pending[mi].take() {
-                            pr.state.fulfill(Err(SvcError::Collective(detail.clone())));
+                            let err = match dead.first() {
+                                Some(&rank) => {
+                                    SvcError::RankFailed { rank, detail: detail.clone() }
+                                }
+                                None => SvcError::Collective(detail.clone()),
+                            };
+                            if pr.state.fulfill(Err(err)) {
+                                shared.metrics.on_abandoned();
+                            }
                             failed += 1;
                         }
                     }
                 }
                 shared.metrics.on_failed(failed);
+                if !dead.is_empty() {
+                    shared.metrics.on_rank_failed(failed);
+                    // Strip the consumed death entries before rebuilding:
+                    // the fresh world's ranks restart at tick 0 and would
+                    // otherwise re-die at the same trigger forever.
+                    if let Some(ch) = &mut run_cfg.chaos {
+                        ch.rank_death.retain(|(r, _)| !dead.contains(r));
+                    }
+                    world_cfg = run_cfg.world_config();
+                }
                 shared.metrics.on_world_rebuilt();
                 world = World::new(world_cfg.clone());
                 seg_world = None;
@@ -401,6 +596,14 @@ fn dispatch_cycles<T: Elem>(cfg: EngineConfig, shared: &Arc<Shared<T>>) {
             pending.iter().all(|o| o.is_none()),
             "every request of a cycle must be fulfilled"
         );
+        // Mirror the worlds' pool counters into the metrics gauges once
+        // per cycle (the soak bench's flat-memory evidence: a steady
+        // state allocates nothing, so `pool_misses` plateaus).
+        let mut ps = world.pool_stats();
+        if let Some(sw) = &seg_world {
+            ps.merge(&sw.pool_stats());
+        }
+        shared.metrics.set_pool_gauges(ps.hits, ps.misses);
     }
 }
 
@@ -409,6 +612,18 @@ fn req_of<'a, T: Elem>(
     i: usize,
 ) -> &'a ScanRequest<T> {
     &pending[i].as_ref().expect("planned request already consumed").req
+}
+
+/// Fulfill one successfully executed request: record its submit→fulfill
+/// latency in the histogram (successful completions only — failures
+/// would pollute the SLO tail with injected-fault timing) and account a
+/// late delivery into a `wait_timeout`-abandoned handle.
+fn complete<T: Elem>(pr: PendingReq<T>, out: ScanOutput<T>, shared: &Shared<T>) {
+    let elapsed_ns = pr.submitted_at.elapsed().as_nanos() as u64;
+    if pr.state.fulfill(Ok(out)) {
+        shared.metrics.on_abandoned();
+    }
+    shared.metrics.record_latency_ns(elapsed_ns);
 }
 
 /// Build the per-world-rank `Seg` lanes of one segmented plan
@@ -547,7 +762,7 @@ fn scatter_t<T: Elem>(
                         })
                         .collect();
                     offset += m;
-                    pr.state.fulfill(Ok(ScanOutput { outputs, stats }));
+                    complete(pr, ScanOutput { outputs, stats }, shared);
                 }
             }
             Plan::Solo { member } => {
@@ -561,7 +776,7 @@ fn scatter_t<T: Elem>(
                         outs[wr][pi].clone().unwrap_or_else(|| vec![T::filler(); m])
                     })
                     .collect();
-                pr.state.fulfill(Ok(ScanOutput { outputs, stats }));
+                complete(pr, ScanOutput { outputs, stats }, shared);
             }
             Plan::Segmented { .. } => unreachable!(),
         }
@@ -618,9 +833,51 @@ fn scatter_seg<T: Elem>(
                         }
                     })
                     .collect();
-                pr.state.fulfill(Ok(ScanOutput { outputs, stats }));
+                complete(pr, ScanOutput { outputs, stats }, shared);
             }
         }
         shared.metrics.on_batch(BatchMode::Segmented, k, coalesced_m, rounds, solo_equiv);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MS: Duration = Duration::from_millis(1);
+
+    #[test]
+    fn window_widens_under_load_and_narrows_when_idle() {
+        let (lo, hi) = (MS, 16 * MS);
+        // Saturated cycles double up to the cap.
+        let mut w = 2 * MS;
+        w = next_window(w, lo, hi, 64, 64);
+        assert_eq!(w, 4 * MS);
+        w = next_window(w, lo, hi, 200, 64);
+        assert_eq!(w, 8 * MS);
+        w = next_window(w, lo, hi, 64, 64);
+        assert_eq!(w, 16 * MS);
+        w = next_window(w, lo, hi, 64, 64);
+        assert_eq!(w, 16 * MS, "clamped at hi");
+        // Idle cycles halve down to the floor.
+        w = next_window(w, lo, hi, 0, 64);
+        assert_eq!(w, 8 * MS);
+        w = next_window(w, lo, hi, 16, 64);
+        assert_eq!(w, 4 * MS, "quarter-full still counts as idle");
+        w = next_window(w, lo, hi, 1, 64);
+        w = next_window(w, lo, hi, 1, 64);
+        w = next_window(w, lo, hi, 1, 64);
+        assert_eq!(w, lo, "clamped at lo");
+        // Mid-load holds steady.
+        assert_eq!(next_window(4 * MS, lo, hi, 32, 64), 4 * MS);
+    }
+
+    #[test]
+    fn window_step_clamps_an_out_of_range_start() {
+        let (lo, hi) = (2 * MS, 8 * MS);
+        assert_eq!(next_window(MS, lo, hi, 32, 64), 2 * MS);
+        assert_eq!(next_window(100 * MS, lo, hi, 32, 64), 8 * MS);
+        // Degenerate max_batch never divides by zero.
+        assert_eq!(next_window(4 * MS, lo, hi, 0, 0), 2 * MS);
     }
 }

@@ -1,4 +1,5 @@
-//! Service-side accounting: how much the batcher actually amortizes.
+//! Service-side accounting: how much the batcher actually amortizes,
+//! and what the failure-hardening layer costs in tail latency.
 //!
 //! The paper's small-m regime is round-dominated, so the service's
 //! figure of merit is **rounds per request**: a batch of K coalesced
@@ -7,6 +8,17 @@
 //! misbehaving deployment: batch-size distribution, failures, world
 //! rebuilds). All counters are relaxed atomics — the dispatcher is the
 //! only writer on the hot path; readers snapshot.
+//!
+//! ## Latency histogram
+//!
+//! Completion latency (submit → fulfilled, successful requests only)
+//! feeds a **fixed log-linear bucket histogram**: 4 sub-buckets per
+//! power-of-two octave over nanoseconds, 256 pre-allocated atomic
+//! buckets total — one relaxed `fetch_add` per completion, zero hot-path
+//! allocation, ≤ 25 % relative bucket width. Quantiles (p50/p99/p999)
+//! are derived at snapshot time by a cumulative rank walk and reported
+//! as the matched bucket's **upper** bound — conservative, so an SLO
+//! gate on them can only over-estimate, never excuse, the tail.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -29,6 +41,61 @@ fn bucket(k: usize) -> usize {
     }
 }
 
+/// Latency histogram size: 4 sub-buckets per octave over the full u64
+/// nanosecond range (4·63 + 4 < 256), fixed at construction.
+pub const LAT_BUCKETS: usize = 256;
+
+/// Bucket index of a latency observation in nanoseconds (log-linear:
+/// 4 sub-buckets per power-of-two octave; exact below 4 ns).
+fn lat_bucket(ns: u64) -> usize {
+    let n = ns.max(1);
+    if n < 4 {
+        return n as usize;
+    }
+    let e = 63 - n.leading_zeros() as usize; // 2^e <= n < 2^(e+1), e >= 2
+    let sub = ((n >> (e - 2)) & 3) as usize;
+    4 * (e - 1) + sub
+}
+
+/// Inclusive lower bound (ns) of bucket `idx` — the inverse of
+/// [`lat_bucket`]'s truncation.
+fn lat_bucket_lower(idx: usize) -> u64 {
+    if idx < 4 {
+        return idx as u64;
+    }
+    let e = idx / 4 + 1;
+    let sub = (idx % 4) as u64;
+    if e - 2 >= 62 {
+        return u64::MAX; // buckets past the top octave are unreachable
+    }
+    (4 + sub) << (e - 2)
+}
+
+/// Exclusive upper bound (ns) of bucket `idx` (saturating at the top).
+fn lat_bucket_upper(idx: usize) -> u64 {
+    if idx + 1 >= LAT_BUCKETS {
+        return u64::MAX;
+    }
+    lat_bucket_lower(idx + 1).max(idx as u64 + 1)
+}
+
+/// Rank-walk quantile over a bucket snapshot: the upper bound of the
+/// bucket holding the `q`-quantile observation (0 when empty).
+fn quantile_ns(hist: &[u64; LAT_BUCKETS], count: u64, q: f64) -> u64 {
+    if count == 0 {
+        return 0;
+    }
+    let target = ((count as f64) * q).ceil().max(1.0) as u64;
+    let mut seen = 0u64;
+    for (idx, &c) in hist.iter().enumerate() {
+        seen += c;
+        if seen >= target {
+            return lat_bucket_upper(idx);
+        }
+    }
+    lat_bucket_upper(LAT_BUCKETS - 1)
+}
+
 /// Cumulative service counters (see the module docs).
 #[derive(Debug, Default)]
 pub struct ServiceMetrics {
@@ -48,6 +115,29 @@ pub struct ServiceMetrics {
     rounds_solo_equiv: AtomicU64,
     worlds_rebuilt: AtomicU64,
     batch_hist: [AtomicU64; BATCH_HIST_BUCKETS],
+    /// Requests refused at admission (never counted in `submitted`).
+    rejected: AtomicU64,
+    /// Timed-out handles whose late result was delivered unobserved.
+    abandoned: AtomicU64,
+    /// Requests failed with an attributed `SvcError::RankFailed`.
+    rank_failures: AtomicU64,
+    /// Gauge: payload bytes of accepted, not-yet-resolved requests.
+    inflight_bytes: AtomicU64,
+    /// Gauges mirroring the engine worlds' pool counters (set, not added).
+    pool_hits: AtomicU64,
+    pool_misses: AtomicU64,
+    latency_count: AtomicU64,
+    latency_hist: LatencyHist,
+}
+
+/// 256 pre-allocated buckets; a nested struct keeps `Default` derivable.
+#[derive(Debug)]
+struct LatencyHist([AtomicU64; LAT_BUCKETS]);
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist(std::array::from_fn(|_| AtomicU64::new(0)))
+    }
 }
 
 impl ServiceMetrics {
@@ -61,6 +151,51 @@ impl ServiceMetrics {
 
     pub(crate) fn on_world_rebuilt(&self) {
         self.worlds_rebuilt.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn on_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn on_abandoned(&self) {
+        self.abandoned.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn on_rank_failed(&self, n: u64) {
+        self.rank_failures.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub(crate) fn add_inflight_bytes(&self, n: u64) {
+        self.inflight_bytes.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub(crate) fn sub_inflight_bytes(&self, n: u64) {
+        self.inflight_bytes.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub(crate) fn inflight_bytes(&self) -> u64 {
+        self.inflight_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Requests submitted but not yet completed or failed — the count
+    /// the engine's admission gate bounds. Three relaxed loads, so
+    /// transiently approximate under concurrent submitters; the bounded
+    /// queue is the structural backstop.
+    pub(crate) fn open_requests(&self) -> u64 {
+        let done = self.completed.load(Ordering::Relaxed)
+            + self.failed.load(Ordering::Relaxed);
+        self.submitted.load(Ordering::Relaxed).saturating_sub(done)
+    }
+
+    pub(crate) fn set_pool_gauges(&self, hits: u64, misses: u64) {
+        self.pool_hits.store(hits, Ordering::Relaxed);
+        self.pool_misses.store(misses, Ordering::Relaxed);
+    }
+
+    /// One relaxed increment into the fixed histogram — no allocation.
+    pub(crate) fn record_latency_ns(&self, ns: u64) {
+        self.latency_count.fetch_add(1, Ordering::Relaxed);
+        self.latency_hist.0[lat_bucket(ns)].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one executed collective: `k` requests coalesced,
@@ -93,6 +228,10 @@ impl ServiceMetrics {
         let completed = self.completed.load(Ordering::Relaxed);
         let rounds_paid = self.rounds_paid.load(Ordering::Relaxed);
         let rounds_solo = self.rounds_solo_equiv.load(Ordering::Relaxed);
+        let latency_count = self.latency_count.load(Ordering::Relaxed);
+        let hist: [u64; LAT_BUCKETS] =
+            std::array::from_fn(|i| self.latency_hist.0[i].load(Ordering::Relaxed));
+        let us = |ns: u64| ns as f64 / 1_000.0;
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed,
@@ -106,6 +245,16 @@ impl ServiceMetrics {
             rounds_solo_equiv: rounds_solo,
             worlds_rebuilt: self.worlds_rebuilt.load(Ordering::Relaxed),
             batch_hist: std::array::from_fn(|i| self.batch_hist[i].load(Ordering::Relaxed)),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            abandoned: self.abandoned.load(Ordering::Relaxed),
+            rank_failures: self.rank_failures.load(Ordering::Relaxed),
+            inflight_bytes: self.inflight_bytes.load(Ordering::Relaxed),
+            pool_hits: self.pool_hits.load(Ordering::Relaxed),
+            pool_misses: self.pool_misses.load(Ordering::Relaxed),
+            latency_count,
+            latency_p50_us: us(quantile_ns(&hist, latency_count, 0.50)),
+            latency_p99_us: us(quantile_ns(&hist, latency_count, 0.99)),
+            latency_p999_us: us(quantile_ns(&hist, latency_count, 0.999)),
             amortized_rounds_per_request: if completed == 0 {
                 0.0
             } else {
@@ -135,6 +284,24 @@ pub struct MetricsSnapshot {
     pub rounds_solo_equiv: u64,
     pub worlds_rebuilt: u64,
     pub batch_hist: [u64; BATCH_HIST_BUCKETS],
+    /// Requests refused at admission (excluded from `submitted`).
+    pub rejected: u64,
+    /// Late fulfillments into handles already abandoned by `wait_timeout`.
+    pub abandoned: u64,
+    /// Requests that failed with `SvcError::RankFailed`.
+    pub rank_failures: u64,
+    /// Gauge: payload bytes of accepted, unresolved requests (0 at quiesce).
+    pub inflight_bytes: u64,
+    /// Gauges from the engine worlds' buffer pools (flat-memory evidence).
+    pub pool_hits: u64,
+    pub pool_misses: u64,
+    /// Successful completions recorded in the latency histogram.
+    pub latency_count: u64,
+    /// Quantiles in µs, each the matched bucket's upper bound (≤ 25 %
+    /// over-estimate — conservative for SLO gating). 0 when empty.
+    pub latency_p50_us: f64,
+    pub latency_p99_us: f64,
+    pub latency_p999_us: f64,
     /// `rounds_paid / completed` — the number batching shrinks.
     pub amortized_rounds_per_request: f64,
     /// `rounds_solo_equiv / rounds_paid` — ≥ 1 when coalescing wins.
@@ -181,5 +348,86 @@ mod tests {
         let s = ServiceMetrics::default().snapshot();
         assert_eq!(s.amortized_rounds_per_request, 0.0);
         assert_eq!(s.round_amortization, 1.0);
+        assert_eq!(s.latency_count, 0);
+        assert_eq!(s.latency_p50_us, 0.0);
+        assert_eq!(s.latency_p999_us, 0.0);
+    }
+
+    #[test]
+    fn lat_bucket_bounds_are_consistent() {
+        // Every bucket's lower bound maps back to that bucket, and
+        // bounds are monotone non-decreasing across the whole range.
+        for idx in 1..LAT_BUCKETS {
+            let lo = lat_bucket_lower(idx);
+            if lo > 0 && idx < 4 * 62 {
+                assert_eq!(lat_bucket(lo), idx, "lower bound of bucket {idx}");
+            }
+            assert!(lat_bucket_lower(idx) >= lat_bucket_lower(idx - 1));
+        }
+        // Spot-check the log-linear shape: 4 sub-buckets per octave.
+        assert_eq!(lat_bucket(4), 4);
+        assert_eq!(lat_bucket(5), 5);
+        assert_eq!(lat_bucket(7), 7);
+        assert_eq!(lat_bucket(8), 8);
+        assert_eq!(lat_bucket(1_000), lat_bucket(1_023));
+        assert!(lat_bucket(u64::MAX) < LAT_BUCKETS);
+        // Relative width ≤ 25 %: upper/lower ratio within one bucket.
+        let idx = lat_bucket(1_000_000);
+        let (lo, hi) = (lat_bucket_lower(idx), lat_bucket_upper(idx));
+        assert!(lo <= 1_000_000 && 1_000_000 < hi);
+        assert!((hi - lo) as f64 / lo as f64 <= 0.25 + 1e-9);
+    }
+
+    #[test]
+    fn latency_quantiles_are_conservative_and_monotone() {
+        let m = ServiceMetrics::default();
+        // 99 fast observations at ~1 µs, one slow outlier at ~1 ms.
+        for _ in 0..99 {
+            m.record_latency_ns(1_000);
+        }
+        m.record_latency_ns(1_000_000);
+        let s = m.snapshot();
+        assert_eq!(s.latency_count, 100);
+        // p50 covers the fast cluster; upper-bound convention means the
+        // reported value is >= the true 1 µs but within one bucket.
+        assert!(s.latency_p50_us >= 1.0 && s.latency_p50_us <= 1.5);
+        // p99 rank (ceil(100·0.99) = 99) still lands in the fast cluster;
+        // p999 (rank 100) must surface the outlier.
+        assert!(s.latency_p99_us <= 1.5);
+        assert!(s.latency_p999_us >= 1_000.0);
+        assert!(s.latency_p50_us <= s.latency_p99_us);
+        assert!(s.latency_p99_us <= s.latency_p999_us);
+    }
+
+    #[test]
+    fn robustness_counters_round_trip() {
+        let m = ServiceMetrics::default();
+        m.on_rejected();
+        m.on_rejected();
+        m.on_abandoned();
+        m.on_rank_failed(3);
+        m.add_inflight_bytes(4096);
+        m.sub_inflight_bytes(1024);
+        m.set_pool_gauges(10, 2);
+        let s = m.snapshot();
+        assert_eq!(s.rejected, 2);
+        assert_eq!(s.abandoned, 1);
+        assert_eq!(s.rank_failures, 3);
+        assert_eq!(s.inflight_bytes, 3072);
+        assert_eq!(m.inflight_bytes(), 3072);
+        assert_eq!((s.pool_hits, s.pool_misses), (10, 2));
+    }
+
+    #[test]
+    fn open_requests_tracks_submit_minus_resolved() {
+        let m = ServiceMetrics::default();
+        assert_eq!(m.open_requests(), 0);
+        m.on_submit();
+        m.on_submit();
+        m.on_submit();
+        assert_eq!(m.open_requests(), 3);
+        m.on_batch(BatchMode::Solo, 1, 1, 1, 1); // completes one
+        m.on_failed(1);
+        assert_eq!(m.open_requests(), 1);
     }
 }

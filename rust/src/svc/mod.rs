@@ -1,33 +1,45 @@
 //! The multi-tenant scan service: nonblocking requests, communicator
-//! isolation, and small-m batch coalescing.
+//! isolation, small-m batch coalescing, and failure hardening.
 //!
 //! The paper's regime is small vectors, where latency is dominated by
 //! communication **rounds** — so the production win for serving many
 //! independent exscan requests is amortization: K coalesced requests pay
 //! the `⌈log₂(p−1) + log₂(4/3)⌉` rounds of one collective *once*. This
-//! subsystem supplies the three layers that turn the repo's collectives
-//! into that service:
+//! subsystem supplies the layers that turn the repo's collectives into
+//! that service:
 //!
 //! * [`request`] — [`ScanRequest`]/[`ReqOp`] (operator with optional
 //!   segmented lift) and the `MPI_Request`-flavoured [`ScanHandle`]
-//!   (`test`/`wait`), plus the typed [`SvcError`].
+//!   (`test`/`wait`/`wait_timeout`), plus the typed [`SvcError`] —
+//!   including [`SvcError::Overloaded`] (admission rejection) and the
+//!   attributed [`SvcError::RankFailed`].
 //! * [`batcher`] — pure planning: full-world requests sharing an operator
 //!   lane-concatenate; disjoint sub-range requests with a liftable
 //!   operator pack into segmented lanes of one world-wide scan
 //!   (Blelloch's operator lifting, [`crate::coll::segmented`]); the rest
-//!   run solo on sub-communicators.
+//!   run solo on sub-communicators. [`BatchPolicy`] optionally carries an
+//!   adaptive batching-window range (widens under load, narrows idle).
 //! * [`engine`] — the dispatcher: one persistent [`World`] per element
 //!   type, a recycled ring of communicator contexts, every plan of a
 //!   cycle concurrently in flight, results scattered back to handles.
+//!   The submit side is a **bounded admission gate** (open-request and
+//!   inflight-byte caps, fail-fast or block-with-deadline), and wave
+//!   failures under chaos rank-death rebuild the worlds live with the
+//!   `submitted == completed + failed` invariant intact.
 //! * [`metrics`] — rounds-per-request accounting (the number batching
-//!   exists to shrink) and operational counters.
+//!   exists to shrink), robustness counters (rejected / abandoned /
+//!   rank_failures / inflight_bytes / pool gauges), and a fixed
+//!   log-bucket latency histogram with conservative p50/p99/p999
+//!   quantiles for SLO gating.
 //!
 //! Differential verification: the service path is covered by the chaos
 //! harness — `exscan serve --smoke --chaos-seed N` and
 //! `tests/service.rs` check service results under seeded fault injection
 //! against each request executed serially on a clean world, and
 //! [`crate::coll::validate::chaos_concurrent_comms`] pins the
-//! communicator layer itself (outputs *and* per-context traces).
+//! communicator layer itself (outputs *and* per-context traces). The
+//! rank-death path is pinned by `validate::rank_death_differential` and
+//! the soak/kill modes of `exscan serve`.
 //!
 //! [`World`]: crate::mpi::World
 
@@ -37,7 +49,10 @@ pub mod metrics;
 pub mod request;
 
 pub use batcher::BatchPolicy;
-pub use engine::{EngineConfig, ScanEngine, CTX_RING};
+pub use engine::{
+    AdmissionMode, EngineConfig, ScanEngine, CTX_RING, DEFAULT_MAX_INFLIGHT,
+    DEFAULT_MAX_INFLIGHT_BYTES, DEFAULT_RECV_TIMEOUT,
+};
 pub use metrics::{MetricsSnapshot, ServiceMetrics};
 pub use request::{
     BatchMode, ReqOp, RequestStats, ScanHandle, ScanOutput, ScanRequest, SvcError,

@@ -31,9 +31,24 @@ pub enum SvcError {
     /// The engine is shutting down and can no longer accept or complete
     /// requests.
     Shutdown,
+    /// Admission control refused the request: the engine is at its
+    /// configured in-flight depth/bytes limit (see
+    /// [`EngineConfig`](super::EngineConfig)). The request was never
+    /// queued — retry later or shed load upstream.
+    Overloaded,
     /// The collective executing this request's batch failed; carries the
     /// rendered `{:#}` chain of the underlying transport error.
     Collective(String),
+    /// A rank of the engine's world died (chaos rank-death injection, or
+    /// any fault that permanently kills a rank) while this request's
+    /// batch was in flight. The engine rebuilds its worlds after
+    /// reporting this; subsequent requests run on the fresh world.
+    RankFailed {
+        /// World rank that died (the first one, if several).
+        rank: usize,
+        /// Rendered `{:#}` chain of the underlying failure.
+        detail: String,
+    },
     /// `wait_timeout` deadline expired before the result arrived.
     WaitTimeout,
 }
@@ -43,7 +58,13 @@ impl std::fmt::Display for SvcError {
         match self {
             SvcError::Shape(d) => write!(f, "invalid scan request: {d}"),
             SvcError::Shutdown => write!(f, "scan engine has shut down"),
+            SvcError::Overloaded => {
+                write!(f, "scan engine overloaded: admission limit reached")
+            }
             SvcError::Collective(d) => write!(f, "batch collective failed: {d}"),
+            SvcError::RankFailed { rank, detail } => {
+                write!(f, "rank {rank} failed during batch collective: {detail}")
+            }
             SvcError::WaitTimeout => write!(f, "timed out waiting for scan result"),
         }
     }
@@ -183,6 +204,12 @@ impl<T: Elem> ScanRequest<T> {
         self.ranks.len()
     }
 
+    /// Total payload size (all member input vectors), the unit the
+    /// engine's inflight-bytes admission gauge is kept in.
+    pub fn payload_bytes(&self) -> usize {
+        self.inputs.iter().map(|v| v.len()).sum::<usize>() * T::size_bytes()
+    }
+
     /// Validate against a world of size `p`.
     pub(crate) fn validate(&self, p: usize) -> Result<(), SvcError> {
         if self.ranks.start >= self.ranks.end || self.ranks.end > p {
@@ -247,19 +274,34 @@ pub struct ScanOutput<T: Elem> {
 pub(crate) struct HandleState<T: Elem> {
     slot: Mutex<Option<Result<ScanOutput<T>, SvcError>>>,
     cv: Condvar,
+    /// Raised by [`ScanHandle::wait_timeout`] when the client gives up on
+    /// the request: the dispatcher's eventual `fulfill` still resolves
+    /// the slot (exactly-once discipline), but reports the delivery as
+    /// unobserved so the engine can count it
+    /// ([`MetricsSnapshot::abandoned`](super::MetricsSnapshot)) instead
+    /// of completing into a dead handle silently.
+    abandoned: std::sync::atomic::AtomicBool,
 }
 
 impl<T: Elem> HandleState<T> {
     pub(crate) fn new() -> Arc<Self> {
-        Arc::new(HandleState { slot: Mutex::new(None), cv: Condvar::new() })
+        Arc::new(HandleState {
+            slot: Mutex::new(None),
+            cv: Condvar::new(),
+            abandoned: std::sync::atomic::AtomicBool::new(false),
+        })
     }
 
-    pub(crate) fn fulfill(&self, result: Result<ScanOutput<T>, SvcError>) {
+    /// Deliver the result. Returns `true` when the client already
+    /// abandoned the handle (`wait_timeout` expired), so the caller can
+    /// account an unobserved completion.
+    pub(crate) fn fulfill(&self, result: Result<ScanOutput<T>, SvcError>) -> bool {
         let mut slot = self.slot.lock().unwrap();
         debug_assert!(slot.is_none(), "a handle must be fulfilled exactly once");
         *slot = Some(result);
         drop(slot);
         self.cv.notify_all();
+        self.abandoned.load(std::sync::atomic::Ordering::Acquire)
     }
 
     /// Fulfill only if nothing has been delivered yet — the last-resort
@@ -307,6 +349,12 @@ impl<T: Elem> ScanHandle<T> {
     /// [`wait`](Self::wait) with a deadline; `Err(WaitTimeout)` leaves the
     /// handle unusable (it is consumed either way — tests use this to
     /// avoid hanging on a defective engine).
+    ///
+    /// Timing out marks the pending slot *abandoned*: the request stays
+    /// in flight and the dispatcher still resolves it exactly once, but
+    /// that late delivery is counted in
+    /// [`MetricsSnapshot::abandoned`](super::MetricsSnapshot) rather than
+    /// vanishing into a dropped handle unobserved.
     pub fn wait_timeout(self, timeout: Duration) -> Result<ScanOutput<T>, SvcError> {
         let deadline = Instant::now() + timeout;
         let mut slot = self.state.slot.lock().unwrap();
@@ -316,6 +364,14 @@ impl<T: Elem> ScanHandle<T> {
             }
             let now = Instant::now();
             if now >= deadline {
+                // Publish the abandonment while still holding the slot
+                // lock: a fulfill racing this timeout either delivered
+                // already (taken above on a later iteration — impossible
+                // here, we return) or will take the lock after us and
+                // observe the flag.
+                self.state
+                    .abandoned
+                    .store(true, std::sync::atomic::Ordering::Release);
                 return Err(SvcError::WaitTimeout);
             }
             let (guard, _) = self.state.cv.wait_timeout(slot, deadline - now).unwrap();
@@ -399,6 +455,21 @@ mod tests {
         let err = h.wait_timeout(Duration::from_millis(40)).unwrap_err();
         assert_eq!(err, SvcError::WaitTimeout);
         assert!(t0.elapsed() >= Duration::from_millis(35));
+    }
+
+    #[test]
+    fn fulfill_after_timeout_reports_abandoned() {
+        let state = HandleState::<i64>::new();
+        let h = ScanHandle { state: Arc::clone(&state) };
+        let err = h.wait_timeout(Duration::from_millis(5)).unwrap_err();
+        assert_eq!(err, SvcError::WaitTimeout);
+        // The dispatcher's late delivery still resolves the slot but is
+        // flagged unobserved — the engine counts it as abandoned.
+        let abandoned = state.fulfill(Err(SvcError::Shutdown));
+        assert!(abandoned, "delivery into a timed-out handle must be flagged");
+        // A live handle's delivery is not flagged.
+        let live = HandleState::<i64>::new();
+        assert!(!live.fulfill(Err(SvcError::Shutdown)));
     }
 
     #[test]

@@ -13,6 +13,16 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+/// Why a push was refused (the item is handed back in both cases so the
+/// caller can resolve or account it — nothing is silently dropped).
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// Bounded channel at capacity (backpressure; see [`Channel::bounded`]).
+    Full(T),
+    /// [`Channel::close`] was called.
+    Closed(T),
+}
+
 /// Bounded spin attempts before parking in `pop_timeout` (tuned in
 /// `benches/hotpath.rs`; see EXPERIMENTS.md §Perf). Spinning only helps
 /// when the sending thread can actually run in parallel — on a 1–2 core
@@ -29,10 +39,21 @@ fn spin_tries() -> u32 {
     })
 }
 
-/// An unbounded MPMC queue.
+/// An MPMC queue, unbounded by default; [`bounded`](Channel::bounded)
+/// adds a capacity for backpressure-aware producers ([`try_push`] /
+/// [`push_deadline`]).
+///
+/// [`try_push`]: Channel::try_push
+/// [`push_deadline`]: Channel::push_deadline
 pub struct Channel<T> {
     q: Mutex<ChannelState<T>>,
     cv: Condvar,
+    /// Producers blocked on a full bounded channel park here; every pop
+    /// on a bounded channel notifies it.
+    space_cv: Condvar,
+    /// `None` = unbounded (the executor job queues), `Some(cap)` = at
+    /// most `cap` items buffered (the scan service's admission backstop).
+    cap: Option<usize>,
 }
 
 struct ChannelState<T> {
@@ -49,22 +70,97 @@ impl<T> Default for Channel<T> {
 
 impl<T> Channel<T> {
     pub fn new() -> Self {
+        Self::with_cap(None)
+    }
+
+    /// A channel holding at most `cap` items: pushes beyond that report
+    /// [`PushError::Full`] (or block, for the deadline variants) instead
+    /// of growing the queue without bound.
+    pub fn bounded(cap: usize) -> Self {
+        Self::with_cap(Some(cap.max(1)))
+    }
+
+    fn with_cap(cap: Option<usize>) -> Self {
         Channel {
             q: Mutex::new(ChannelState { items: VecDeque::new(), closed: false }),
             cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            cap,
         }
     }
 
-    /// Enqueue an item. Returns `Err(item)` if the channel is closed.
+    fn is_full(&self, s: &ChannelState<T>) -> bool {
+        self.cap.is_some_and(|c| s.items.len() >= c)
+    }
+
+    /// Enqueue an item. Returns `Err(item)` if the channel is closed. On
+    /// a *bounded* channel this blocks while full (no deadline); use
+    /// [`try_push`](Self::try_push) / [`push_deadline`](Self::push_deadline)
+    /// for backpressure-aware producers.
     pub fn push(&self, item: T) -> Result<(), T> {
         let mut s = self.q.lock().unwrap();
+        loop {
+            if s.closed {
+                return Err(item);
+            }
+            if !self.is_full(&s) {
+                s.items.push_back(item);
+                drop(s);
+                self.cv.notify_one();
+                return Ok(());
+            }
+            s = self.space_cv.wait(s).unwrap();
+        }
+    }
+
+    /// Non-blocking enqueue: fails fast with [`PushError::Full`] on a
+    /// bounded channel at capacity (never fails `Full` when unbounded).
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut s = self.q.lock().unwrap();
         if s.closed {
-            return Err(item);
+            return Err(PushError::Closed(item));
+        }
+        if self.is_full(&s) {
+            return Err(PushError::Full(item));
         }
         s.items.push_back(item);
         drop(s);
         self.cv.notify_one();
         Ok(())
+    }
+
+    /// Enqueue, waiting up to `timeout` for space on a full bounded
+    /// channel (the blocking admission mode). [`PushError::Full`] once
+    /// the deadline expires with the channel still at capacity.
+    pub fn push_deadline(&self, item: T, timeout: Duration) -> Result<(), PushError<T>> {
+        let deadline = Instant::now() + timeout;
+        let mut s = self.q.lock().unwrap();
+        loop {
+            if s.closed {
+                return Err(PushError::Closed(item));
+            }
+            if !self.is_full(&s) {
+                s.items.push_back(item);
+                drop(s);
+                self.cv.notify_one();
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(PushError::Full(item));
+            }
+            let (guard, _) = self.space_cv.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
+        }
+    }
+
+    /// Wake one producer parked on a full bounded channel. No-op (and no
+    /// atomics beyond the branch) for unbounded channels — the executor
+    /// hot path is unchanged.
+    fn notify_space(&self) {
+        if self.cap.is_some() {
+            self.space_cv.notify_one();
+        }
     }
 
     /// Blocking pop with timeout. `None` on timeout or when closed+empty.
@@ -85,6 +181,8 @@ impl<T> Channel<T> {
         let mut s = self.q.lock().unwrap();
         loop {
             if let Some(item) = s.items.pop_front() {
+                drop(s);
+                self.notify_space();
                 return Some(item);
             }
             if s.closed {
@@ -104,7 +202,11 @@ impl<T> Channel<T> {
 
     /// Non-blocking pop.
     pub fn try_pop(&self) -> Option<T> {
-        self.q.lock().unwrap().items.pop_front()
+        let item = self.q.lock().unwrap().items.pop_front();
+        if item.is_some() {
+            self.notify_space();
+        }
+        item
     }
 
     /// Blocking pop with no deadline: waits until an item arrives or the
@@ -115,6 +217,8 @@ impl<T> Channel<T> {
         let mut s = self.q.lock().unwrap();
         loop {
             if let Some(item) = s.items.pop_front() {
+                drop(s);
+                self.notify_space();
                 return Some(item);
             }
             if s.closed {
@@ -124,10 +228,12 @@ impl<T> Channel<T> {
         }
     }
 
-    /// Close the channel: pending items remain poppable; pushes fail.
+    /// Close the channel: pending items remain poppable; pushes fail
+    /// (including producers blocked on a full bounded channel).
     pub fn close(&self) {
         self.q.lock().unwrap().closed = true;
         self.cv.notify_all();
+        self.space_cv.notify_all();
     }
 
     /// Whether [`close`](Self::close) has been called (items may still be
@@ -239,6 +345,64 @@ mod tests {
         assert!(c.push(2).is_err());
         assert_eq!(c.pop_timeout(Duration::from_millis(10)), Some(1));
         assert_eq!(c.pop_timeout(Duration::from_millis(10)), None);
+    }
+
+    #[test]
+    fn bounded_try_push_fails_full_and_frees_on_pop() {
+        let c: Channel<i32> = Channel::bounded(2);
+        c.try_push(1).unwrap();
+        c.try_push(2).unwrap();
+        assert!(matches!(c.try_push(3), Err(PushError::Full(3))));
+        assert_eq!(c.try_pop(), Some(1));
+        c.try_push(3).unwrap();
+        assert_eq!(c.try_pop(), Some(2));
+        assert_eq!(c.try_pop(), Some(3));
+    }
+
+    #[test]
+    fn bounded_push_deadline_times_out_then_succeeds_after_pop() {
+        let c: Channel<i32> = Channel::bounded(1);
+        c.try_push(1).unwrap();
+        let t0 = Instant::now();
+        assert!(matches!(
+            c.push_deadline(2, Duration::from_millis(30)),
+            Err(PushError::Full(2))
+        ));
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        let c = Arc::new(c);
+        let popper = Arc::clone(&c);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(15));
+            assert_eq!(popper.try_pop(), Some(1));
+        });
+        c.push_deadline(2, Duration::from_secs(5)).unwrap();
+        h.join().unwrap();
+        assert_eq!(c.try_pop(), Some(2));
+    }
+
+    #[test]
+    fn bounded_close_unblocks_waiting_producer() {
+        let c: Arc<Channel<i32>> = Arc::new(Channel::bounded(1));
+        c.try_push(1).unwrap();
+        let closer = Arc::clone(&c);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(15));
+            closer.close();
+        });
+        assert!(matches!(
+            c.push_deadline(2, Duration::from_secs(5)),
+            Err(PushError::Closed(2))
+        ));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn unbounded_try_push_never_reports_full() {
+        let c: Channel<i32> = Channel::new();
+        for i in 0..10_000 {
+            c.try_push(i).unwrap();
+        }
+        assert_eq!(c.len(), 10_000);
     }
 
     #[test]

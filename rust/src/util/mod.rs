@@ -10,6 +10,6 @@ pub mod rng;
 pub mod stats;
 
 pub use bits::{ceil_log2, floor_log2, is_pow2};
-pub use channel::{Channel, OneShot};
+pub use channel::{Channel, OneShot, PushError};
 pub use rng::Rng;
 pub use stats::Summary;

@@ -12,13 +12,30 @@
 //!   results; opaque sub-range requests run solo on sub-communicators.
 //! * The engine survives an injected lost message: typed
 //!   `SvcError::Collective`, world rebuild, subsequent requests succeed.
+//!
+//! Failure hardening (ISSUE 6):
+//!
+//! * Admission control: over-limit submissions fail typed
+//!   (`SvcError::Overloaded`) under fail-fast and after the deadline
+//!   under blocking mode; rejected requests are never counted submitted.
+//! * Rank death under load: a seeded kill fails the wave's handles with
+//!   an attributed `SvcError::RankFailed`, the engine rebuilds its world
+//!   live (death entry stripped) and keeps serving — zero lost requests.
+//! * Drain under chaos: closing the engine mid-chaotic-wave resolves
+//!   every outstanding handle and leaves `submitted == completed +
+//!   failed` with a fully drained inflight-bytes gauge.
+//! * A timed-out (abandoned) handle's late completion is counted in
+//!   `MetricsSnapshot::abandoned` instead of vanishing unobserved.
 
 use std::time::Duration;
 
 use exscan::coll::validate::chaos_concurrent_comms;
 use exscan::coll::{oracle_exscan, Exscan123, ScanAlgorithm};
 use exscan::mpi::{ops, run_scan, ChaosConfig, TagKey, Topology, WorldConfig};
-use exscan::svc::{BatchMode, BatchPolicy, EngineConfig, ReqOp, ScanEngine, ScanRequest, SvcError};
+use exscan::svc::{
+    AdmissionMode, BatchMode, BatchPolicy, EngineConfig, ReqOp, ScanEngine, ScanRequest,
+    ServiceMetrics, SvcError,
+};
 use exscan::util::bits::rounds_123;
 
 const WAIT: Duration = Duration::from_secs(60);
@@ -401,6 +418,248 @@ fn drop_drains_queued_requests() {
             assert_eq!(&out.outputs[r], oracle[r].as_ref().unwrap());
         }
     }
+}
+
+/// Poll until the counters quiesce (handle fulfillment races the
+/// dispatcher's batch accounting by microseconds) and the given
+/// predicate holds, then return the snapshot.
+fn await_metrics(
+    metrics: &ServiceMetrics,
+    what: &str,
+    pred: impl Fn(&exscan::svc::MetricsSnapshot) -> bool,
+) -> exscan::svc::MetricsSnapshot {
+    let deadline = std::time::Instant::now() + WAIT;
+    loop {
+        let s = metrics.snapshot();
+        if s.submitted == s.completed + s.failed && pred(&s) {
+            return s;
+        }
+        assert!(std::time::Instant::now() < deadline, "metrics never quiesced: {what}: {s:?}");
+        std::thread::sleep(Duration::from_micros(200));
+    }
+}
+
+/// Admission control, fail-fast mode: the open-request cap rejects the
+/// over-limit submission with a typed `Overloaded`, rejected requests
+/// are never counted submitted, and capacity freed by completion admits
+/// again.
+#[test]
+fn backpressure_rejects_typed_overloaded_and_recovers() {
+    let p = 4;
+    let engine = ScanEngine::<i64>::new(
+        EngineConfig::new(p)
+            .with_policy(manual_policy())
+            .with_admission_limits(4, usize::MAX),
+    )
+    .unwrap();
+    let inputs = exscan::bench::inputs_i64(p, 2, 7);
+    // No flush: all four stay open, holding the admission window full.
+    let handles: Vec<_> = (0..4)
+        .map(|_| engine.submit_exscan(ReqOp::bxor_i64(), inputs.clone()).unwrap())
+        .collect();
+    let err = engine.submit_exscan(ReqOp::bxor_i64(), inputs.clone()).unwrap_err();
+    assert!(matches!(err, SvcError::Overloaded), "want Overloaded, got {err:?}");
+    let ms = engine.metrics();
+    assert_eq!(ms.submitted, 4, "rejected request must not count as submitted");
+    assert_eq!(ms.rejected, 1);
+
+    engine.flush();
+    for h in handles {
+        h.wait_timeout(WAIT).unwrap();
+    }
+    // Capacity freed: the same submission is admitted now.
+    let m = engine.metrics_shared();
+    await_metrics(&m, "after first batch", |s| s.completed == 4);
+    let h = engine.submit_exscan(ReqOp::bxor_i64(), inputs).unwrap();
+    engine.flush();
+    h.wait_timeout(WAIT).unwrap();
+    let s = await_metrics(&m, "after recovery", |s| s.completed == 5);
+    assert_eq!(s.rejected, 1);
+    assert_eq!(s.inflight_bytes, 0, "gauge drained at quiesce");
+}
+
+/// Admission control, byte budget: the inflight-bytes cap rejects once
+/// payload accumulates, but a request bigger than the whole budget is
+/// still admitted when the gauge is at zero (no permanent starvation).
+#[test]
+fn backpressure_byte_budget_rejects_but_never_starves() {
+    let p = 4;
+    let m = 4; // payload: 4 ranks × 4 elems × 8 bytes = 128 bytes
+    let engine = ScanEngine::<i64>::new(
+        EngineConfig::new(p)
+            .with_policy(manual_policy())
+            .with_admission_limits(4096, 64),
+    )
+    .unwrap();
+    let inputs = exscan::bench::inputs_i64(p, m, 3);
+    // 128 bytes > the 64-byte budget, but the gauge is 0 → admitted.
+    let h1 = engine.submit_exscan(ReqOp::bxor_i64(), inputs.clone()).unwrap();
+    // Now the gauge is nonzero and over budget → rejected.
+    let err = engine.submit_exscan(ReqOp::bxor_i64(), inputs.clone()).unwrap_err();
+    assert!(matches!(err, SvcError::Overloaded), "want Overloaded, got {err:?}");
+    engine.flush();
+    h1.wait_timeout(WAIT).unwrap();
+    // Drained gauge admits the oversized request again.
+    let m_shared = engine.metrics_shared();
+    await_metrics(&m_shared, "gauge drain", |s| s.inflight_bytes == 0);
+    let h2 = engine.submit_exscan(ReqOp::bxor_i64(), inputs).unwrap();
+    engine.flush();
+    h2.wait_timeout(WAIT).unwrap();
+    assert_eq!(engine.metrics().rejected, 1);
+}
+
+/// Admission control, blocking mode: an over-limit submission polls for
+/// capacity until the deadline, then rejects typed.
+#[test]
+fn backpressure_block_mode_times_out_then_rejects() {
+    let p = 4;
+    let engine = ScanEngine::<i64>::new(
+        EngineConfig::new(p)
+            .with_policy(manual_policy())
+            .with_admission_limits(2, usize::MAX)
+            .with_admission_mode(AdmissionMode::Block(Duration::from_millis(150))),
+    )
+    .unwrap();
+    let inputs = exscan::bench::inputs_i64(p, 2, 5);
+    let handles: Vec<_> = (0..2)
+        .map(|_| engine.submit_exscan(ReqOp::bxor_i64(), inputs.clone()).unwrap())
+        .collect();
+    let t0 = std::time::Instant::now();
+    let err = engine.submit_exscan(ReqOp::bxor_i64(), inputs.clone()).unwrap_err();
+    let waited = t0.elapsed();
+    assert!(matches!(err, SvcError::Overloaded), "want Overloaded, got {err:?}");
+    assert!(waited >= Duration::from_millis(100), "blocked only {waited:?}");
+    // With the window draining concurrently, blocking mode admits
+    // instead of rejecting.
+    engine.flush();
+    for h in handles {
+        h.wait_timeout(WAIT).unwrap();
+    }
+    let m = engine.metrics_shared();
+    await_metrics(&m, "block-mode drain", |s| s.completed == 2);
+    let h = engine.submit_exscan(ReqOp::bxor_i64(), inputs).unwrap();
+    engine.flush();
+    h.wait_timeout(WAIT).unwrap();
+}
+
+/// Rank death under load: the doomed wave's handles all fail with an
+/// attributed `RankFailed { rank }`, the engine strips the consumed
+/// death entry, rebuilds its world live and keeps serving — with
+/// `submitted == completed + failed` intact.
+#[test]
+fn rank_death_fails_typed_and_engine_rebuilds_live() {
+    let p = 4;
+    let victim = 2;
+    let chaos = ChaosConfig::new(7)
+        .with_delay_prob(0.0)
+        .with_divert_prob(0.0)
+        .with_yield_prob(0.0)
+        .with_rank_death(victim, 1); // dies at its first send/receive
+    let engine = ScanEngine::<i64>::new(
+        EngineConfig::new(p)
+            .with_policy(manual_policy())
+            .with_chaos(chaos)
+            .with_recv_timeout(Duration::from_secs(2)),
+    )
+    .unwrap();
+
+    // Three full-world requests coalesce into one doomed collective.
+    let inputs = exscan::bench::inputs_i64(p, 3, 21);
+    let handles: Vec<_> = (0..3)
+        .map(|_| engine.submit_exscan(ReqOp::bxor_i64(), inputs.clone()).unwrap())
+        .collect();
+    engine.flush();
+    for h in handles {
+        let err = h.wait_timeout(WAIT).unwrap_err();
+        match &err {
+            SvcError::RankFailed { rank, detail } => {
+                assert_eq!(*rank, victim, "attribution names the victim: {detail}");
+                assert!(detail.contains("rank-death"), "chain names the fault: {detail}");
+            }
+            other => panic!("want RankFailed, got {other:?}"),
+        }
+    }
+
+    // Live rebuild: the same full-world shape (including the victim's
+    // rank) succeeds now — the consumed death entry was stripped.
+    let h = engine.submit_exscan(ReqOp::bxor_i64(), inputs.clone()).unwrap();
+    engine.flush();
+    let out = h.wait_timeout(WAIT).unwrap();
+    let oracle = oracle_exscan(&inputs, &ops::bxor());
+    for r in 1..p {
+        assert_eq!(&out.outputs[r], oracle[r].as_ref().unwrap());
+    }
+    let m = engine.metrics_shared();
+    let s = await_metrics(&m, "post-rebuild", |s| s.completed == 1);
+    assert_eq!(s.submitted, 4);
+    assert_eq!(s.failed, 3);
+    assert_eq!(s.rank_failures, 3, "every failure attributed to the kill");
+    assert!(s.worlds_rebuilt >= 1);
+    assert_eq!(s.inflight_bytes, 0);
+}
+
+/// Drain under chaos (ISSUE 6 satellite): close the engine while a
+/// chaotic wave is in flight. Every outstanding handle still resolves,
+/// nothing is lost (`submitted == completed + failed` after quiesce) and
+/// the inflight-bytes gauge returns to zero — no leaked buffers.
+#[test]
+fn drop_mid_chaotic_wave_resolves_every_handle() {
+    let p = 6;
+    let engine = ScanEngine::<i64>::new(
+        EngineConfig::new(p)
+            .with_policy(manual_policy())
+            .with_chaos(ChaosConfig::new(0xD1E))
+            .with_recv_timeout(Duration::from_secs(10)),
+    )
+    .unwrap();
+    let metrics = engine.metrics_shared();
+    let mut handles = Vec::new();
+    for i in 0..16u64 {
+        let inputs = exscan::bench::inputs_i64(p, 3, 900 + i);
+        handles.push(engine.submit_exscan(ReqOp::bxor_i64(), inputs).unwrap());
+    }
+    for start in [0usize, 3] {
+        let inputs = exscan::bench::inputs_i64(3, 3, 950 + start as u64);
+        handles.push(engine.submit(ScanRequest::over(ReqOp::sum_i64(), start, inputs)).unwrap());
+    }
+    engine.flush();
+    drop(engine); // close mid-wave: dispatcher must drain, not abandon
+
+    let mut resolved = 0u64;
+    for h in handles {
+        match h.wait_timeout(WAIT) {
+            Ok(_) | Err(SvcError::Collective(_)) | Err(SvcError::Shutdown) => resolved += 1,
+            Err(e) => panic!("handle resolved untyped: {e:?}"),
+        }
+    }
+    assert_eq!(resolved, 18, "every outstanding handle resolves");
+    let s = metrics.snapshot();
+    assert_eq!(s.submitted, 18);
+    assert_eq!(s.submitted, s.completed + s.failed, "zero lost requests at shutdown");
+    assert_eq!(s.inflight_bytes, 0, "no leaked request buffers");
+}
+
+/// A handle abandoned by `wait_timeout` does not lose its request: the
+/// dispatcher still resolves it exactly once, and the unobserved late
+/// delivery is counted in `MetricsSnapshot::abandoned`.
+#[test]
+fn timed_out_handle_counts_abandoned_on_late_delivery() {
+    let p = 4;
+    let engine =
+        ScanEngine::<i64>::new(EngineConfig::new(p).with_policy(manual_policy())).unwrap();
+    let h = engine
+        .submit_exscan(ReqOp::sum_i64(), exscan::bench::inputs_i64(p, 2, 77))
+        .unwrap();
+    // Window still open (no flush): the wait must time out.
+    let err = h.wait_timeout(Duration::from_millis(50)).unwrap_err();
+    assert!(matches!(err, SvcError::WaitTimeout), "got {err:?}");
+    // The request is still in flight; release it and watch it complete
+    // into the abandoned handle.
+    engine.flush();
+    let m = engine.metrics_shared();
+    let s = await_metrics(&m, "abandoned delivery", |s| s.abandoned == 1);
+    assert_eq!(s.completed, 1, "request resolved despite the abandoned handle");
+    assert_eq!(s.failed, 0);
 }
 
 /// World-level communicator API: dup/split allocate distinct contexts and
