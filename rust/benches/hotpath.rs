@@ -40,19 +40,29 @@
 //!     `submitted == completed + failed` invariant, a drained
 //!     inflight-bytes gauge, and flat steady-state memory via the pool
 //!     miss counters;
+//!   * **large-m selection crossover** (§Perf large-m): at every (p, m)
+//!     grid point the algorithm [`select_exscan`] picks under the
+//!     calibrated paper parameters must equal the closed-form argmin
+//!     over the candidate pool — the honest-selection gate — and the
+//!     predicted round-regime → bandwidth-regime boundary per p is
+//!     solved with [`crossover_m`] and reported; the block-decomposed
+//!     and reduce-scatter+allgather engines also ride the compute-path
+//!     m-sweep and the op-count gate, so the quick run smokes them end
+//!     to end;
 //!   * one full 123-doubling at p=36 end to end.
 //!
 //! Writes the machine-readable trajectory record `BENCH_hotpath.json`
-//! (schema `exscan-hotpath-v5`). Pass `--quick` for the CI smoke run.
+//! (schema `exscan-hotpath-v6`). Pass `--quick` for the CI smoke run.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use exscan::bench::{
-    hotpath_json, measure_exscan_world, HotpathPoint, KernelPoint, LatencyPoint, MSweepPoint,
-    SoakPoint, SvcLatencyPoint, SvcPoint,
+    hotpath_json, measure_exscan_world, CrossoverPoint, HotpathPoint, KernelPoint, LatencyPoint,
+    MSweepPoint, SoakPoint, SvcLatencyPoint, SvcPoint,
 };
-use exscan::coll::oracle_exscan;
+use exscan::coll::{oracle_exscan, select_candidates, select_exscan};
+use exscan::cost::{crossover_m, predict_schedule};
 use exscan::mpi::World;
 use exscan::prelude::*;
 use exscan::util::bits::rounds_123;
@@ -390,9 +400,16 @@ fn main() -> anyhow::Result<()> {
         let unfused = point("unfused", &unfused_world, &Exscan123);
         let chunked = point("chunked", &fused_world, &ExscanChunked::auto());
         let flat = point("flat", &fused_world, &ExscanOneDoubling);
+        // The large-m engines ride the same sweep so even the quick run
+        // smokes them on a real world. No ordering is asserted here:
+        // their bandwidth advantage needs p ≫ 8 (see the selection
+        // crossover gate below).
+        let block = point("block", &fused_world, &ExscanBlock::auto());
+        let rsag = point("rsag", &fused_world, &ExscanRsag);
         println!(
             "  m={m:>6}: fused {fused:>9.2}  unfused {unfused:>9.2}  ({:>4.2}x)   \
-             chunked {chunked:>9.2}  flat {flat:>9.2}  ({:>4.2}x)",
+             chunked {chunked:>9.2}  flat {flat:>9.2}  ({:>4.2}x)   \
+             block {block:>9.2}  rsag {rsag:>9.2}",
             unfused / fused,
             flat / chunked
         );
@@ -437,6 +454,41 @@ fn main() -> anyhow::Result<()> {
             "dispatch path changed the ⊕ application count at m={m}"
         );
 
+        // The large-m engines through the same gate: outputs must match
+        // the round-optimal reference (rank 0 is undefined for exscan,
+        // so it is excluded) and the trace must match each engine's
+        // closed-form round and last-rank ⊕ counts.
+        let block = ExscanBlock::auto();
+        let op_blk = ops::bxor();
+        let res_blk = run_scan(&cfg, &block, &op_blk, &inputs)?;
+        assert_eq!(
+            res_blk.outputs[1..],
+            res.outputs[1..],
+            "block-exscan diverged from 123-doubling at m={m}"
+        );
+        let tr_blk = res_blk.trace.expect("tracing enabled");
+        assert_eq!(
+            tr_blk.total_rounds(),
+            block.rounds_for(p_sweep, m, 8),
+            "block-exscan round count off at m={m}"
+        );
+        assert_eq!(
+            tr_blk.last_rank_ops(),
+            block.ops_for(p_sweep, m, 8),
+            "block-exscan ⊕ count off at m={m}"
+        );
+        let op_rs = ops::bxor();
+        let res_rs = run_scan(&cfg, &ExscanRsag, &op_rs, &inputs)?;
+        assert_eq!(
+            res_rs.outputs[1..],
+            res.outputs[1..],
+            "rsag diverged from 123-doubling at m={m}"
+        );
+        let tr_rs = res_rs.trace.expect("tracing enabled");
+        let (rs_rounds, rs_ops) = ExscanRsag::closed_form(p_sweep);
+        assert_eq!(tr_rs.total_rounds(), rs_rounds, "rsag round count off at m={m}");
+        assert_eq!(tr_rs.last_rank_ops(), rs_ops, "rsag ⊕ count off at m={m}");
+
         // Small fixed chunks so the quick grid exercises multi-chunk
         // schedules through the gate (at every m > 16; m = 1 still runs
         // the degenerate single-chunk schedule).
@@ -461,6 +513,92 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("op-count gate: Theorem 1, sharded counters and dispatch A/B OK");
+
+    // ── Large-m selection crossover (schema-v6 `m_crossover`): at every
+    // (p, m) grid point the algorithm `select_exscan` picks under the
+    // calibrated paper parameters must equal the closed-form argmin over
+    // the candidate pool, each candidate priced through its own
+    // critical_schedule(p, m) — the honest-selection gate. The grid spans
+    // both regimes (m = 1 round-dominated → m = 2^20 bandwidth-dominated)
+    // and the predicted boundary per p is solved with `crossover_m`
+    // against the eventual bandwidth-regime winner. Closed form only: no
+    // execution, so the full p = 256 sweep costs microseconds. ──
+    let mut m_crossover: Vec<CrossoverPoint> = Vec::new();
+    let xo_params = CostParams::paper_36x1();
+    let xo_ms: &[usize] =
+        if quick { &[1, 4096, 1 << 20] } else { &[1, 64, 4096, 262_144, 1 << 20] };
+    println!("\nlarge-m selection crossover (paper 36x1 params, closed form):");
+    for &p in &[8usize, 36, 256] {
+        for &m in xo_ms {
+            let picked = select_exscan::<i64>(p, m, &xo_params, 1);
+            let picked_pred =
+                predict_schedule(&picked.critical_schedule(p, m), p, 1, 8, &xo_params);
+            let mut best: Option<(f64, String)> = None;
+            for algo in select_candidates::<i64>() {
+                let pred =
+                    predict_schedule(&algo.critical_schedule(p, m), p, 1, 8, &xo_params);
+                if best.as_ref().map(|(t, _)| pred.time_us < *t).unwrap_or(true) {
+                    best = Some((pred.time_us, algo.name().to_string()));
+                }
+            }
+            let (argmin_us, argmin) = best.expect("non-empty candidate pool");
+            assert_eq!(
+                picked.name(),
+                argmin,
+                "selection is not the argmin at p={p} m={m}"
+            );
+            println!(
+                "  p={p:>3} m={m:>8}: {:<16} ({:>10.2} µs predicted)",
+                picked.name(),
+                picked_pred.time_us
+            );
+            m_crossover.push(CrossoverPoint {
+                p,
+                m,
+                selected: picked.name().to_string(),
+                argmin,
+                selected_us: picked_pred.time_us,
+                argmin_us,
+            });
+        }
+        // The regime boundary: first m where the large-m winner's
+        // schedule undercuts round-optimal 123-doubling.
+        let bw_winner = select_exscan::<i64>(p, 1 << 20, &xo_params, 1);
+        let boundary = crossover_m(
+            |m| Exscan123.critical_schedule(p, m),
+            |m| bw_winner.critical_schedule(p, m),
+            p,
+            1,
+            8,
+            &xo_params,
+            1 << 24,
+        );
+        match boundary {
+            Some(b) => println!(
+                "  p={p:>3}: predicted crossover 123-doubling → {} at m ≈ {b}",
+                bw_winner.name()
+            ),
+            None => println!(
+                "  p={p:>3}: no crossover to {} below m = 2^24",
+                bw_winner.name()
+            ),
+        }
+        // The sweep must not drift back: once the selection leaves the
+        // round-optimal pair along increasing m, it stays left.
+        let picks: Vec<&str> = m_crossover
+            .iter()
+            .filter(|pt| pt.p == p)
+            .map(|pt| pt.selected.as_str())
+            .collect();
+        let round_regime =
+            |n: &str| n == "123-doubling" || n == "two-op-doubling" || n == "1-doubling";
+        let first_bw = picks.iter().position(|n| !round_regime(n)).unwrap_or(picks.len());
+        assert!(
+            picks[first_bw..].iter().all(|n| !round_regime(n)),
+            "selection flapped back to the round regime at p={p}: {picks:?}"
+        );
+    }
+    println!("crossover gate: selection == closed-form argmin at every grid point");
 
     // ── Scan-service batching sweep: K small-m requests through the
     // engine, batched (all K submitted, one flush → one coalesced
@@ -850,6 +988,7 @@ fn main() -> anyhow::Result<()> {
         &latency_sweep,
         &svc_latency,
         &soak,
+        &m_crossover,
     );
     // Cargo runs bench binaries with cwd = the *package* root (rust/), so
     // anchor the output at the workspace root explicitly — that is where

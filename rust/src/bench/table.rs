@@ -74,11 +74,13 @@ pub struct HotpathPoint {
 /// One compute-path m-sweep measurement (see `benches/hotpath.rs`): a
 /// whole-scan timing of `algo` at vector length `m`, under one of the
 /// compared paths — `"fused"` / `"unfused"` (the A/B on the receive-reduce
-/// primitives) or `"chunked"` / `"flat"` (the large-m pipeline vs the flat
-/// schedule).
+/// primitives), `"chunked"` / `"flat"` (the large-m pipeline vs the flat
+/// schedule), or `"block"` / `"rsag"` (the large-m engines riding the same
+/// sweep for smoke coverage).
 #[derive(Debug, Clone)]
 pub struct MSweepPoint {
-    /// Compared path id: `fused`, `unfused`, `chunked` or `flat`.
+    /// Compared path id: `fused`, `unfused`, `chunked`, `flat`, `block`
+    /// or `rsag`.
     pub path: String,
     pub algo: String,
     pub p: usize,
@@ -184,6 +186,29 @@ pub struct SoakPoint {
     pub pool_miss_delta: u64,
 }
 
+/// One large-m selection-sweep measurement (see `benches/hotpath.rs`):
+/// at world size `p` and vector length `m`, the algorithm
+/// [`crate::coll::select_exscan`] picked under the calibrated paper
+/// parameters, the closed-form argmin over the candidate pool at the
+/// same point, and both predicted times. Selection is honest iff
+/// `selected == argmin` at every sweep point — the crossover gate in the
+/// bench asserts exactly that, and the recorded rows make the
+/// round-regime → bandwidth-regime boundary visible in the trajectory.
+#[derive(Debug, Clone)]
+pub struct CrossoverPoint {
+    pub p: usize,
+    pub m: usize,
+    /// Algorithm `select_exscan` actually picked at this (p, m).
+    pub selected: String,
+    /// Closed-form argmin over `select_candidates` at the same point.
+    pub argmin: String,
+    /// Predicted completion of the selected algorithm (µs).
+    pub selected_us: f64,
+    /// Predicted completion of the argmin (µs) — equals `selected_us`
+    /// whenever selection is honest.
+    pub argmin_us: f64,
+}
+
 fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
@@ -209,7 +234,10 @@ fn json_escape(s: &str) -> String {
 /// spin/park counters); v5 adds `svc_latency` (service p50/p99/p999
 /// under baseline and rank-death scenarios — the SLO-gated numbers) and
 /// `soak` (sustained mixed workload with periodic rank death:
-/// zero-lost-requests and flat-memory evidence).
+/// zero-lost-requests and flat-memory evidence); v6 adds `m_crossover`
+/// (the large-m selection sweep: `select_exscan`'s pick vs the
+/// closed-form argmin over the candidate pool at each (p, m), tracing
+/// the round-regime → bandwidth-regime boundary).
 pub fn hotpath_json(
     meta: &[(&str, String)],
     points: &[HotpathPoint],
@@ -219,8 +247,9 @@ pub fn hotpath_json(
     latency_sweep: &[LatencyPoint],
     svc_latency: &[SvcLatencyPoint],
     soak: &[SoakPoint],
+    m_crossover: &[CrossoverPoint],
 ) -> String {
-    let mut out = String::from("{\n  \"schema\": \"exscan-hotpath-v5\",\n  \"meta\": {");
+    let mut out = String::from("{\n  \"schema\": \"exscan-hotpath-v6\",\n  \"meta\": {");
     for (i, (k, v)) in meta.iter().enumerate() {
         if i > 0 {
             out.push(',');
@@ -348,6 +377,22 @@ pub fn hotpath_json(
             pt.pool_miss_delta
         ));
     }
+    out.push_str("\n  ],\n  \"m_crossover\": [");
+    for (i, pt) in m_crossover.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"p\": {}, \"m\": {}, \"selected\": \"{}\", \"argmin\": \"{}\", \
+             \"selected_us\": {:.4}, \"argmin_us\": {:.4}}}",
+            pt.p,
+            pt.m,
+            json_escape(&pt.selected),
+            json_escape(&pt.argmin),
+            pt.selected_us,
+            pt.argmin_us
+        ));
+    }
     out.push_str("\n  ]\n}\n");
     out
 }
@@ -466,6 +511,14 @@ mod tests {
             p99_us: 900.25,
             pool_miss_delta: 0,
         }];
+        let crossover = vec![CrossoverPoint {
+            p: 256,
+            m: 1 << 20,
+            selected: "rsag".into(),
+            argmin: "rsag".into(),
+            selected_us: 1234.5,
+            argmin_us: 1234.5,
+        }];
         let j = hotpath_json(
             &[("host", "ci \"runner\"".to_string())],
             &points,
@@ -475,8 +528,12 @@ mod tests {
             &lat,
             &svc_lat,
             &soak,
+            &crossover,
         );
-        assert!(j.contains("\"schema\": \"exscan-hotpath-v5\""), "{j}");
+        assert!(j.contains("\"schema\": \"exscan-hotpath-v6\""), "{j}");
+        assert!(j.contains("\"m_crossover\""), "{j}");
+        assert!(j.contains("\"selected\": \"rsag\""), "{j}");
+        assert!(j.contains("\"argmin_us\": 1234.5000"), "{j}");
         assert!(j.contains("\"svc_latency\""), "{j}");
         assert!(j.contains("\"scenario\": \"rank-death\""), "{j}");
         assert!(j.contains("\"p999_us\": 4000.000"), "{j}");

@@ -242,7 +242,7 @@ fn cmd_trace(args: &Args) -> Result<()> {
     println!(
         "communication rounds: {} (predicted {})",
         trace.total_rounds(),
-        algo.predicted_rounds(p)
+        algo.predicted_rounds_m(p, m)
     );
     println!(
         "⊕ applications: last rank {} (predicted {}), max over ranks {}",
@@ -281,7 +281,12 @@ fn cmd_trace(args: &Args) -> Result<()> {
                 (Some(f), Some(l)) => format!("round {:>2}: rank {:>4} ← {:>4} ({l:?})", h.round, h.rank, f),
                 _ => format!("round {:>2}: rank {:>4} ⊕", h.round, h.rank),
             };
-            println!("  {what:<44} +{:>7.3} µs  @ {:>8.3} µs{}", h.cost_us, h.at_us, if h.waited { "  (waited)" } else { "" });
+            let waited = if h.wait_us > 0.0 {
+                format!("  (waited {:.3} µs)", h.wait_us)
+            } else {
+                String::new()
+            };
+            println!("  {what:<44} +{:>7.3} µs  @ {:>8.3} µs{waited}", h.cost_us, h.at_us);
         }
     }
     Ok(())
@@ -304,6 +309,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
                 "two-op-doubling" => "2op",
                 "1-doubling" => "1dbl",
                 "pipelined-chain" => "pipe",
+                "block-exscan" => "blk",
                 other => other,
             };
             print!(" {short:>10}");

@@ -19,8 +19,99 @@
 use anyhow::Result;
 
 use super::{ScanAlgorithm, ScanKind};
-use crate::mpi::{Elem, OpRef, RankCtx};
+use crate::mpi::{Elem, OpKernel, OpRef, RankCtx};
 use crate::util::bits::rounds_123;
+
+/// The 123-doubling exscan run over an arbitrary **participant list**
+/// (`ranks`, scope-relative, ascending participant order), with rounds
+/// based at `base`: participant `i` contributes `total` and receives
+/// `total_0 ⊕ … ⊕ total_{i−1}` into `prefix`. Returns whether `prefix`
+/// was written (`false` for participant 0 — the "empty prefix" is
+/// tracked out of band, no identity element required). Non-participants
+/// must not call this. The caller owns round-base bookkeeping: rounds
+/// `base .. base + rounds_123(ranks.len())` are consumed.
+///
+/// This is the inner engine shared by [`ExscanHierarchical`]
+/// (participants = node leaders) and [`ExscanBlock`] (participants =
+/// same-index members across groups): one source for the translated
+/// round-0/round-1/doubling arms instead of three hand-inlined copies.
+///
+/// [`ExscanHierarchical`]: super::ExscanHierarchical
+/// [`ExscanBlock`]: super::ExscanBlock
+pub(crate) fn exscan_123_group<T: Elem>(
+    ctx: &mut RankCtx<T>,
+    base: u32,
+    ranks: &[usize],
+    op: &OpKernel<T>,
+    total: &[T],
+    prefix: &mut [T],
+) -> Result<bool> {
+    let nodes = ranks.len();
+    let nr = ranks
+        .iter()
+        .position(|&x| x == ctx.rank())
+        .expect("exscan_123_group caller must be a participant");
+    if nodes <= 1 {
+        return Ok(false);
+    }
+    let mut have = false;
+    // Round 0 (skip 1): shift totals right.
+    {
+        let (t, f) = (nr + 1, nr.checked_sub(1));
+        match (t < nodes, f) {
+            (true, Some(f)) => {
+                ctx.sendrecv(base, ranks[t], total, ranks[f], prefix)?;
+                have = true;
+            }
+            (true, None) => ctx.send(base, ranks[t], total)?,
+            (false, Some(f)) => {
+                ctx.recv(base, ranks[f], prefix)?;
+                have = true;
+            }
+            (false, None) => {}
+        }
+    }
+    if nodes > 2 {
+        // Round 1 (skip 2): send W ⊕ total so the receiver's coverage
+        // jumps to three trailing participants (the 123 trick).
+        let (t, f) = (nr + 2, nr.checked_sub(2));
+        match (t < nodes, f, nr) {
+            (true, Some(f), _) => {
+                let mut w_prime = ctx.scratch_from(total);
+                ctx.reduce_local(base + 1, op, prefix, &mut w_prime);
+                ctx.sendrecv_reduce_into(base + 1, ranks[t], &w_prime, ranks[f], op, prefix)?;
+            }
+            (true, None, 0) => ctx.send(base + 1, ranks[t], total)?,
+            (true, None, _) => {
+                let mut w_prime = ctx.scratch_from(total);
+                ctx.reduce_local(base + 1, op, prefix, &mut w_prime);
+                ctx.send(base + 1, ranks[t], &w_prime)?;
+            }
+            (false, Some(f), _) => {
+                ctx.recv_reduce(base + 1, ranks[f], op, prefix)?;
+            }
+            _ => {}
+        }
+        // Rounds >= 2 with skips 3·2^(j-2); participant 0 is done.
+        let mut j = 2u32;
+        let mut s = 3usize;
+        while nr != 0 {
+            let t = nr + s;
+            let f = if nr > s { Some(nr - s) } else { None };
+            match (t < nodes, f) {
+                (true, Some(f)) => {
+                    ctx.sendrecv_reduce(base + j, ranks[t], ranks[f], op, prefix)?
+                }
+                (true, None) => ctx.send(base + j, ranks[t], prefix)?,
+                (false, Some(f)) => ctx.recv_reduce(base + j, ranks[f], op, prefix)?,
+                (false, None) => break,
+            }
+            j += 1;
+            s *= 2;
+        }
+    }
+    Ok(have)
+}
 
 /// 123-doubling exclusive scan (Algorithm 1 of the paper).
 pub struct Exscan123;

@@ -1,0 +1,472 @@
+//! Block-decomposed exclusive scan — the paper's "for large input
+//! vectors, other algorithms must be used" regime, built **around** the
+//! round-optimal engine instead of replacing it.
+//!
+//! The world splits into `p/g` **groups** of `g` consecutive ranks, and
+//! the m-vector into `g` element blocks; member `j` of each group owns
+//! block `j` (SNIPPETS.md snippet 2's scatter → local-scan → allgather
+//! shape, generalized from scalar `+` to every registered ⊕ and to the
+//! pooled one-ported transport):
+//!
+//! 1. **Group transpose**: `g−1` cyclic in-group steps; member `j`
+//!    collects every group member's slice of block `j` (`m/g` elements
+//!    per message).
+//! 2. **Local scan**: one [`scan_rows`](crate::mpi::RankCtx::scan_rows)
+//!    launch promotes the `g` rows to group-local inclusive prefixes
+//!    (tight-loop kernels, `g−1` ⊕ at block width); row `g−1` is the
+//!    group **total**.
+//! 3. **Inner exscan**: member `j` of every group runs the shared
+//!    round-optimal [`exscan_123_group`](super::exscan_123) engine over
+//!    the group totals of block `j` — `rounds_123(p/g)` rounds of
+//!    `m/g`-element messages, the same Theorem-1 schedule as the flat
+//!    algorithm but on vectors `g×` smaller. The per-block participant
+//!    sets are disjoint (ranks ≡ j mod g), so all `g` inner scans run
+//!    concurrently in the same rounds, each on its own
+//!    [`TagKey`](crate::mpi::TagKey) lane.
+//! 4. **Fused apply + return**: one slice pass folds the inner prefix
+//!    into the local rows (`g−1` ⊕), then `g−1` cyclic steps return
+//!    each rank's finished `W` block.
+//!
+//! Cost: `2(g−1) + q(p/g)` rounds of `m/g`-element messages — the knob
+//! `g` trades α-rounds for β-bandwidth. `g = 1` **is** the flat
+//! 123-doubling (phases 1/2/4 vanish); `g = p` is the pure column-owner
+//! scheme (cf. [`ExscanRsag`](super::ExscanRsag), which additionally
+//! drops rank `p−1`'s unused vector). [`ExscanBlock::auto`] resolves `g`
+//! per `(p, m)` as the closed-form α-β-γ argmin over the divisors of
+//! `p`, with the **same** pure function used by `run` and
+//! [`critical_schedule`](ScanAlgorithm::critical_schedule), so the
+//! prediction always prices the schedule that actually executes.
+
+use anyhow::Result;
+
+use super::exscan_123::exscan_123_group;
+use super::exscan_rsag::block_range;
+use super::{Exscan123, ScanAlgorithm, ScanKind};
+use crate::cost::{predict_flat, CostParams};
+use crate::mpi::{Elem, OpRef, RankCtx};
+use crate::util::bits::rounds_123;
+
+/// Block-decomposed exclusive scan with a group-width policy.
+pub struct ExscanBlock {
+    /// Requested group width, or `None` to auto-select the cost-model
+    /// argmin over the divisors of `p` per `(p, m)`.
+    pub group: Option<usize>,
+}
+
+impl ExscanBlock {
+    /// Cost-model auto-selected group width.
+    pub fn auto() -> Self {
+        ExscanBlock { group: None }
+    }
+
+    /// Fixed group-width request (≥ 1); snapped down to the largest
+    /// divisor of `p` at run time, so any request degrades gracefully.
+    pub fn with_group(g: usize) -> Self {
+        assert!(g >= 1);
+        ExscanBlock { group: Some(g) }
+    }
+
+    /// The group width actually used for `(p, m)` and the element size —
+    /// a pure function shared by `run`, the closed forms and the
+    /// prediction schedule (they must never disagree).
+    pub fn group_for(&self, p: usize, m: usize, elem_bytes: usize) -> usize {
+        if p <= 1 {
+            return 1;
+        }
+        match self.group {
+            Some(g) => largest_divisor_at_most(p, g.min(p)),
+            None => auto_group(p, m, elem_bytes),
+        }
+    }
+
+    /// Exact round count: `2(g−1) + rounds_123(p/g)`.
+    pub fn rounds_for(&self, p: usize, m: usize, elem_bytes: usize) -> u32 {
+        if p <= 1 {
+            return 0;
+        }
+        let g = self.group_for(p, m, elem_bytes);
+        2 * (g as u32 - 1) + rounds_123(p / g)
+    }
+
+    /// ⊕ applications on the completion-critical rank `p−1`: the local
+    /// scan (`g−1`), the inner exscan's critical count (`q−1`) and the
+    /// fused prefix apply (`g−1`) — m-independent by construction.
+    pub fn ops_for(&self, p: usize, m: usize, elem_bytes: usize) -> u32 {
+        if p <= 1 {
+            return 0;
+        }
+        let g = self.group_for(p, m, elem_bytes);
+        last_ops_for_group(g, p / g)
+    }
+
+    /// Upper bound on any rank's ⊕ count: `2(g−1) + q` (middle inner
+    /// participants pay one extra ⊕ for the round-1 send preparation).
+    pub fn max_ops_for(&self, p: usize, m: usize, elem_bytes: usize) -> u32 {
+        if p <= 1 {
+            return 0;
+        }
+        let g = self.group_for(p, m, elem_bytes);
+        2 * (g as u32 - 1) + rounds_123(p / g)
+    }
+}
+
+/// Largest divisor of `p` that is ≤ `cap` (≥ 1).
+fn largest_divisor_at_most(p: usize, cap: usize) -> usize {
+    (1..=cap.max(1)).rev().find(|d| p % d == 0).unwrap_or(1)
+}
+
+/// Critical-path ⊕ count for a concrete group width.
+fn last_ops_for_group(g: usize, n_g: usize) -> u32 {
+    let gm1 = (g - 1) as u32;
+    if n_g >= 2 {
+        gm1 + (rounds_123(n_g) - 1) + gm1
+    } else {
+        gm1
+    }
+}
+
+/// The `(skips, critical ⊕, elements per message)` schedule for a
+/// concrete group width — what `critical_schedule` reports and what the
+/// auto-selection prices.
+pub(crate) fn schedule_for_group(p: usize, g: usize, m: usize) -> (Vec<usize>, u32, usize) {
+    let n_g = p / g;
+    let mut skips: Vec<usize> = (1..g).collect(); // group transpose (intra)
+    for s in Exscan123.critical_skips_nodes(n_g) {
+        skips.push(s * g); // inner hops are group-distance × g ranks
+    }
+    skips.extend(1..g); // return steps (intra)
+    (skips, last_ops_for_group(g, n_g), m.div_ceil(g))
+}
+
+/// Closed-form α-β-γ argmin over the divisors of `p` (ties → smaller g,
+/// i.e. fewer rounds). Priced with [`CostParams::generic`] at one rank
+/// per node — a fixed, deterministic yardstick so the auto policy does
+/// not depend on any caller-supplied model; callers who want the
+/// cross-over under *calibrated* parameters go through
+/// [`select_exscan`](super::select_exscan), which ranks the resulting
+/// schedule against every other algorithm under the real params.
+fn auto_group(p: usize, m: usize, elem_bytes: usize) -> usize {
+    let params = CostParams::generic();
+    let mut best = (f64::INFINITY, 1usize);
+    for g in 1..=p {
+        if p % g != 0 {
+            continue;
+        }
+        let (skips, ops, msg_elems) = schedule_for_group(p, g, m);
+        let pred = predict_flat(&skips, ops, p, 1, msg_elems * elem_bytes, &params);
+        if pred.time_us < best.0 {
+            best = (pred.time_us, g);
+        }
+    }
+    best.1
+}
+
+impl<T: Elem> ScanAlgorithm<T> for ExscanBlock {
+    fn name(&self) -> &'static str {
+        "block-exscan"
+    }
+
+    fn kind(&self) -> ScanKind {
+        ScanKind::Exclusive
+    }
+
+    fn run(
+        &self,
+        ctx: &mut RankCtx<T>,
+        input: &[T],
+        output: &mut [T],
+        op: &OpRef<T>,
+    ) -> Result<()> {
+        let (r, p, m) = (ctx.rank(), ctx.size(), input.len());
+        if p <= 1 {
+            return Ok(());
+        }
+        let op = &ctx.kernel(op);
+        let g = self.group_for(p, m, T::size_bytes());
+        let n_g = p / g;
+        let gi = r / g; // group index
+        let j = r % g; // member index == owned element block
+        let first = gi * g; // first rank of this group
+        let my = block_range(m, g, j);
+        let w = my.len();
+
+        // Rows of this member's owned block, group-member-major i = 0..g−1.
+        let mut rows = vec![T::filler(); g * w];
+        rows[j * w..(j + 1) * w].copy_from_slice(&input[my.clone()]);
+
+        // ── Phase 1: in-group cyclic transpose (g−1 steps, one lane per
+        // step). Every member both sends and receives every step — the
+        // owner needs all g rows, including the last member's, for the
+        // group total. ──
+        for k in 1..g {
+            let round = (k - 1) as u32;
+            let t = (j + k) % g;
+            let f = (j + g - k) % g;
+            ctx.with_chunk(k as u16, |c| {
+                let rrow = &mut rows[f * w..];
+                c.sendrecv(
+                    round,
+                    first + t,
+                    &input[block_range(m, g, t)],
+                    first + f,
+                    &mut rrow[..w],
+                )
+            })?;
+        }
+
+        // ── Phase 2: one scan launch — row i becomes the group-local
+        // inclusive prefix through member i (g−1 ⊕ at block width). ──
+        let base2 = (g - 1) as u32;
+        ctx.scan_rows(base2, op, &mut rows, w, g);
+
+        // ── Phase 3: inner round-optimal exscan over the group totals of
+        // this block. Participants are member j of every group (disjoint
+        // sets per block ⇒ all g inner scans share the same rounds, each
+        // on its own lane). `prefix` = ⊕ of all earlier groups' totals. ──
+        let mut prefix = ctx.scratch_filled(w);
+        let have_prefix = if n_g >= 2 {
+            let participants: Vec<usize> = (0..n_g).map(|gg| gg * g + j).collect();
+            ctx.with_chunk(j as u16, |c| {
+                exscan_123_group(c, base2, &participants, op, &rows[(g - 1) * w..], &mut prefix)
+            })?
+        } else {
+            false
+        };
+
+        // ── Phase 4: fused prefix apply — fold the earlier-groups prefix
+        // into rows 0..g−2 (row i then holds W for in-group target i+1;
+        // target 0's W is `prefix` itself), then g−1 cyclic return steps.
+        // Round bases are uniform across ranks: phases 1/3/4 use the
+        // disjoint ranges [0, g−1), [g−1, g−1+q), [g−1+q, 2(g−1)+q). ──
+        let base3 = base2 + rounds_123(n_g);
+        if have_prefix {
+            for i in 0..g - 1 {
+                ctx.reduce_local(base3, op, &prefix, &mut rows[i * w..(i + 1) * w]);
+            }
+        }
+        for k in 1..g {
+            let round = base3 + (k - 1) as u32;
+            let t = (j + k) % g;
+            let f = (j + g - k) % g;
+            let send_active = !(gi == 0 && t == 0); // world rank 0: W undefined
+            let recv_active = !(gi == 0 && j == 0);
+            ctx.with_chunk(k as u16, |c| {
+                let sbuf: &[T] = if t >= 1 { &rows[(t - 1) * w..t * w] } else { &prefix };
+                let dst = block_range(m, g, f);
+                match (send_active, recv_active) {
+                    (true, true) => {
+                        c.sendrecv(round, first + t, sbuf, first + f, &mut output[dst])
+                    }
+                    (true, false) => c.send(round, first + t, sbuf),
+                    (false, true) => c.recv(round, first + f, &mut output[dst]),
+                    (false, false) => Ok(()),
+                }
+            })?;
+        }
+        if j >= 1 {
+            output[my].copy_from_slice(&rows[(j - 1) * w..j * w]);
+        } else if have_prefix {
+            output[my].copy_from_slice(&prefix);
+        }
+        Ok(())
+    }
+
+    fn predicted_rounds(&self, p: usize) -> u32 {
+        // Depends on m via the group width; report the g = 1 envelope
+        // (callers needing the exact count use `rounds_for(p, m, …)`).
+        rounds_123(p)
+    }
+
+    /// m-aware round count — what the trace measures.
+    fn predicted_rounds_m(&self, p: usize, m: usize) -> u32 {
+        self.rounds_for(p, m, T::size_bytes())
+    }
+
+    fn predicted_ops(&self, p: usize) -> u32 {
+        rounds_123(p).saturating_sub(1) // g = 1 envelope
+    }
+
+    fn critical_skips(&self, p: usize) -> Vec<usize> {
+        Exscan123.critical_skips_nodes(p) // g = 1 envelope
+    }
+
+    /// The honest m-aware schedule for the group width `run` would use.
+    fn critical_schedule(&self, p: usize, m: usize) -> (Vec<usize>, u32, usize) {
+        if p <= 1 {
+            return (vec![], 0, m);
+        }
+        let g = self.group_for(p, m, T::size_bytes());
+        schedule_for_group(p, g, m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::validate::assert_exscan_matches;
+    use crate::mpi::{ops, run_scan, Topology, WorldConfig};
+
+    #[test]
+    fn matches_oracle_over_divisor_grid() {
+        for p in [2usize, 4, 6, 8, 9, 12] {
+            for g in 1..=p {
+                if p % g != 0 {
+                    continue;
+                }
+                for m in [0usize, 1, 5, 64] {
+                    let algo = ExscanBlock::with_group(g);
+                    let cfg = WorldConfig::new(Topology::flat(p));
+                    let inputs: Vec<Vec<i64>> = (0..p)
+                        .map(|r| (0..m).map(|i| ((r * 131 + i * 17) as i64) ^ 0x0F0F).collect())
+                        .collect();
+                    let res = run_scan(&cfg, &algo, &ops::bxor(), &inputs).unwrap();
+                    assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn non_divisor_requests_snap_down() {
+        // p = 12, requested 5 → effective 4; p = 7 (prime), requested 4 →
+        // effective 1 (degenerates to the flat 123 schedule).
+        assert_eq!(ExscanBlock::with_group(5).group_for(12, 100, 8), 4);
+        assert_eq!(ExscanBlock::with_group(4).group_for(7, 100, 8), 1);
+        assert_eq!(ExscanBlock::with_group(100).group_for(6, 100, 8), 6);
+        for (p, req) in [(12usize, 5usize), (7, 4), (10, 9)] {
+            let algo = ExscanBlock::with_group(req);
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<i64>> =
+                (0..p).map(|r| (0..21).map(|i| (r * 31 + i * 7) as i64).collect()).collect();
+            let res = run_scan(&cfg, &algo, &ops::sum_i64(), &inputs).unwrap();
+            assert_exscan_matches(&inputs, &ops::sum_i64(), &res.outputs);
+        }
+    }
+
+    #[test]
+    fn closed_form_rounds_and_ops() {
+        for p in [2usize, 4, 6, 8, 9, 12, 16] {
+            for g in 1..=p {
+                if p % g != 0 {
+                    continue;
+                }
+                let algo = ExscanBlock::with_group(g);
+                let m = 24;
+                let cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+                let inputs: Vec<Vec<i64>> =
+                    (0..p).map(|r| (0..m).map(|i| (r * 7 + i) as i64).collect()).collect();
+                let res = run_scan(&cfg, &algo, &ops::bxor(), &inputs).unwrap();
+                let trace = res.trace.unwrap();
+                let eb = 8; // i64
+                assert_eq!(
+                    trace.total_rounds(),
+                    algo.rounds_for(p, m, eb),
+                    "rounds p={p} g={g}"
+                );
+                assert_eq!(
+                    trace.last_rank_ops(),
+                    algo.ops_for(p, m, eb),
+                    "last-rank ops p={p} g={g}"
+                );
+                assert!(
+                    trace.max_ops() <= algo.max_ops_for(p, m, eb),
+                    "max ops p={p} g={g}: {} > {}",
+                    trace.max_ops(),
+                    algo.max_ops_for(p, m, eb)
+                );
+                assert!(crate::trace::check_all(&trace).is_empty(), "invariants p={p} g={g}");
+            }
+        }
+    }
+
+    #[test]
+    fn ops_are_m_independent() {
+        for m in [0usize, 1, 2, 31] {
+            let (p, g) = (8usize, 4usize);
+            let algo = ExscanBlock::with_group(g);
+            let cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+            let inputs: Vec<Vec<i64>> = (0..p).map(|r| vec![r as i64; m]).collect();
+            let res = run_scan(&cfg, &algo, &ops::bxor(), &inputs).unwrap();
+            let trace = res.trace.unwrap();
+            assert_eq!(trace.total_rounds(), algo.rounds_for(p, m, 8), "m={m}");
+            assert_eq!(trace.last_rank_ops(), algo.ops_for(p, m, 8), "m={m}");
+        }
+    }
+
+    #[test]
+    fn auto_group_scales_with_m_and_matches_run() {
+        // Small m → round count dominates → g = 1 (the flat schedule);
+        // large m → bandwidth dominates → g grows. And the traced run
+        // must match the closed form for the SAME auto-resolved g.
+        let algo = ExscanBlock::auto();
+        assert_eq!(algo.group_for(8, 1, 8), 1, "tiny m keeps the round-optimal g=1");
+        let g_large = algo.group_for(8, 1_000_000, 8);
+        assert!(g_large > 1, "large m must widen the group, got {g_large}");
+        for m in [1usize, 512, 65_536] {
+            let p = 8;
+            let cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+            let inputs: Vec<Vec<i64>> =
+                (0..p).map(|r| (0..m).map(|i| (r * 13 + i) as i64).collect()).collect();
+            let res = run_scan(&cfg, &algo, &ops::sum_i64(), &inputs).unwrap();
+            assert_exscan_matches(&inputs, &ops::sum_i64(), &res.outputs);
+            let trace = res.trace.unwrap();
+            assert_eq!(trace.total_rounds(), algo.rounds_for(p, m, 8), "m={m}");
+        }
+    }
+
+    #[test]
+    fn noncommutative_order() {
+        use crate::coll::validate::oracle_exscan;
+        use crate::mpi::Rec2;
+        for (p, g) in [(9usize, 3usize), (8, 4), (6, 2), (12, 6)] {
+            let m = 7; // ragged blocks
+            let algo = ExscanBlock::with_group(g);
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<Rec2>> = (0..p)
+                .map(|r| {
+                    (0..m)
+                        .map(|i| {
+                            Rec2::new(
+                                [1.0, 0.02 * r as f32, -0.01 * i as f32, 1.0],
+                                [r as f32 * 0.5, 1.0 - i as f32 * 0.25],
+                            )
+                        })
+                        .collect()
+                })
+                .collect();
+            let res = run_scan(&cfg, &algo, &ops::rec2_compose(), &inputs).unwrap();
+            let oracle = oracle_exscan(&inputs, &ops::rec2_compose());
+            for r in 1..p {
+                let e = oracle[r].as_ref().unwrap();
+                for (a, b) in res.outputs[r].iter().zip(e) {
+                    for i in 0..4 {
+                        assert!((a.a[i] - b.a[i]).abs() < 1e-3, "p={p} g={g} r={r}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_reordering_is_bit_identical() {
+        use crate::mpi::ChaosConfig;
+        for (p, g) in [(4usize, 2usize), (8, 4), (9, 3), (6, 6)] {
+            for seed in [1u64, 2, 3] {
+                let algo = ExscanBlock::with_group(g);
+                let cfg = WorldConfig::new(Topology::flat(p))
+                    .with_trace(true)
+                    .with_chaos(ChaosConfig::new(seed ^ ((p as u64) << 8) ^ (g as u64)));
+                let inputs: Vec<Vec<i64>> = (0..p)
+                    .map(|r| (0..9).map(|i| ((r + 2) * (i + 5)) as i64).collect())
+                    .collect();
+                let res = run_scan(&cfg, &algo, &ops::bxor(), &inputs).unwrap();
+                assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+                let trace = res.trace.unwrap();
+                assert!(
+                    crate::trace::check_all(&trace).is_empty(),
+                    "invariants p={p} g={g} seed={seed}"
+                );
+            }
+        }
+    }
+}

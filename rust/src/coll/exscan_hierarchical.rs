@@ -101,78 +101,20 @@ impl<T: Elem> ScanAlgorithm<T> for ExscanHierarchical {
             }
             let total = acc;
 
-            // Inter-node exclusive scan over totals, 123-doubling pattern
-            // on the leader group (translate node index <-> rank), on the
-            // fused receive-reduce primitives.
+            // Inter-node exclusive scan over totals: the shared
+            // translated-123 engine ([`super::exscan_123::exscan_123_group`])
+            // over the leader list (leader of node j = j·k), on the fused
+            // receive-reduce primitives.
             let nodes = p.div_ceil(k);
-            let nr = node;
-            let base = after_gather;
-            // Round 0 (skip 1): shift totals right.
-            {
-                let (t, f) = (nr + 1, nr.checked_sub(1));
-                match (t < nodes, f) {
-                    (true, Some(f)) => {
-                        ctx.sendrecv(base, (nr + 1) * k, &total, f * k, &mut node_prefix)?;
-                        let _ = t;
-                        have_node_prefix = true;
-                    }
-                    (true, None) => ctx.send(base, k, &total)?,
-                    (false, Some(f)) => {
-                        ctx.recv(base, f * k, &mut node_prefix)?;
-                        have_node_prefix = true;
-                    }
-                    (false, None) => {}
-                }
-            }
-            if nodes > 2 {
-                // Round 1 (skip 2): send W ⊕ total.
-                let (t, f) = (nr + 2, nr.checked_sub(2));
-                match (t < nodes, f, nr) {
-                    (true, Some(f), _) => {
-                        let mut w_prime = ctx.scratch_from(&total);
-                        ctx.reduce_local(base + 1, op, &node_prefix, &mut w_prime);
-                        ctx.sendrecv_reduce_into(
-                            base + 1,
-                            t * k,
-                            &w_prime,
-                            f * k,
-                            op,
-                            &mut node_prefix,
-                        )?;
-                    }
-                    (true, None, 0) => ctx.send(base + 1, t * k, &total)?,
-                    (true, None, _) => {
-                        let mut w_prime = ctx.scratch_from(&total);
-                        ctx.reduce_local(base + 1, op, &node_prefix, &mut w_prime);
-                        ctx.send(base + 1, t * k, &w_prime)?;
-                    }
-                    (false, Some(f), _) => {
-                        ctx.recv_reduce(base + 1, f * k, op, &mut node_prefix)?;
-                    }
-                    _ => {}
-                }
-                // Rounds >= 2 with skips 3·2^(j-2).
-                let mut j = 2u32;
-                let mut s = 3usize;
-                while nr != 0 {
-                    let t = nr + s;
-                    let f = if nr > s { Some(nr - s) } else { None };
-                    match (t < nodes, f) {
-                        (true, Some(f)) => {
-                            ctx.sendrecv_reduce(base + j, t * k, f * k, op, &mut node_prefix)?
-                        }
-                        (true, None) => ctx.send(base + j, t * k, &node_prefix)?,
-                        (false, Some(f)) => {
-                            ctx.recv_reduce(base + j, f * k, op, &mut node_prefix)?
-                        }
-                        (false, None) => break,
-                    }
-                    j += 1;
-                    s *= 2;
-                }
-                // Node 0's leader is done: rounds >= 2 only receive from
-                // nodes f >= 1, exactly as in the flat Exscan123.
-            }
+            let leaders: Vec<usize> = (0..nodes).map(|j| j * k).collect();
+            have_node_prefix = super::exscan_123::exscan_123_group(
+                ctx,
+                after_gather,
+                &leaders,
+                op,
+                &total,
+                &mut node_prefix,
+            )?;
         }
 
         // Phase 3: scatter node_prefix ⊕ local_prefix_row to each rank.

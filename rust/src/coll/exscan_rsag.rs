@@ -1,0 +1,314 @@
+//! Reduce-scatter + allgather–composed exclusive scan — the
+//! bandwidth-optimal large-m regime, after Träff's "Optimal,
+//! Non-pipelined Reduce-scatter and Allreduce Algorithms" (2024).
+//!
+//! The full-vector doubling algorithms move the *whole* m-vector every
+//! round: `q·mβ` bandwidth on the critical path. Here the vector is cut
+//! into `p` blocks and rank `b` becomes the **owner** of block `b`:
+//!
+//! 1. **Transpose (reduce-scatter shape)**: `p−1` cyclic exchange steps;
+//!    at step `k` rank `r` sends its block-`(r+k) mod p` slice to rank
+//!    `(r+k) mod p` and receives rank `(r−k) mod p`'s contribution to its
+//!    own block. Rank `p−1`'s vector appears in no exclusive prefix, so
+//!    it never sends. Each step moves `m/p` elements per port.
+//! 2. **Local prefix scan**: the owner scans its `p−1` collected rows in
+//!    one [`scan_rows`](crate::mpi::RankCtx::scan_rows) launch (the
+//!    tight-loop kernels of [`crate::mpi::kernels`]); row `j` becomes
+//!    `V_0 ⊕ … ⊕ V_j` restricted to the owned block — i.e. the owner now
+//!    holds `W_t`'s block for **every** target `t ≥ 1`.
+//! 3. **Return (allgather shape)**: `p−1` more cyclic steps deliver
+//!    `W_t[block r]` from each owner `r` to each target `t` (rank 0's
+//!    output is undefined and receives nothing).
+//!
+//! Every exchange step runs on its own [`TagKey`](crate::mpi::TagKey)
+//! chunk lane, so the blocks of different steps stream through the
+//! transport without cross-matching; trace rounds stay distinct per step
+//! (the trace does not record lanes, and the one-ported invariant is per
+//! round). Cost: `2(p−1)` rounds of `m/p`-element messages and `p−2`
+//! block-width ⊕ — `≈ 2mβ` critical-path bandwidth and `≈ mγ` compute,
+//! independent of `p`, versus the doubling family's `q·mβ` and
+//! `(q−1)·mγ`. The α-β crossover against the round-optimal family is
+//! what [`select_exscan`](super::select_exscan) predicts (see
+//! EXPERIMENTS.md §Perf).
+
+use anyhow::Result;
+
+use super::{ScanAlgorithm, ScanKind};
+use crate::mpi::{Elem, OpRef, RankCtx};
+
+/// Element range of block `b` when `m` elements split into `p` even
+/// blocks: the first `m mod p` blocks take `⌈m/p⌉` elements, the rest
+/// `⌊m/p⌋` (empty blocks are fine when `m < p`).
+pub(crate) fn block_range(m: usize, p: usize, b: usize) -> std::ops::Range<usize> {
+    let q = m / p;
+    let rem = m % p;
+    let start = b * q + b.min(rem);
+    start..start + q + usize::from(b < rem)
+}
+
+/// Reduce-scatter/allgather-composed exclusive scan (block owners).
+pub struct ExscanRsag;
+
+impl ExscanRsag {
+    /// Shared closed forms (also used by the differential harness so the
+    /// instance and its check cannot diverge): `(rounds, ops-per-rank)`.
+    pub fn closed_form(p: usize) -> (u32, u32) {
+        if p <= 1 {
+            return (0, 0);
+        }
+        (2 * (p as u32 - 1), p as u32 - 2)
+    }
+}
+
+impl<T: Elem> ScanAlgorithm<T> for ExscanRsag {
+    fn name(&self) -> &'static str {
+        "rsag"
+    }
+
+    fn kind(&self) -> ScanKind {
+        ScanKind::Exclusive
+    }
+
+    fn run(
+        &self,
+        ctx: &mut RankCtx<T>,
+        input: &[T],
+        output: &mut [T],
+        op: &OpRef<T>,
+    ) -> Result<()> {
+        let (r, p, m) = (ctx.rank(), ctx.size(), input.len());
+        if p <= 1 {
+            return Ok(());
+        }
+        let op = &ctx.kernel(op);
+        let my = block_range(m, p, r);
+        let w = my.len();
+
+        // Rows of this rank's owned block, rank-major j = 0..p−2 (rank
+        // p−1's vector is in no exclusive prefix, so p−1 rows suffice).
+        let mut rows = vec![T::filler(); (p - 1) * w];
+        if r + 1 < p {
+            rows[r * w..(r + 1) * w].copy_from_slice(&input[my.clone()]);
+        }
+
+        // ── Phase 1: cyclic transpose (reduce-scatter shape). Step k on
+        // its own chunk lane; rank p−1 only receives. ──
+        for k in 1..p {
+            let round = (k - 1) as u32;
+            let to = (r + k) % p;
+            let from = (r + p - k) % p;
+            let send_active = r + 1 < p;
+            let recv_active = from + 1 < p;
+            ctx.with_chunk(k as u16, |c| {
+                let rrow = &mut rows[from * w..]; // row `from` (recv arm only)
+                match (send_active, recv_active) {
+                    (true, true) => c.sendrecv(
+                        round,
+                        to,
+                        &input[block_range(m, p, to)],
+                        from,
+                        &mut rrow[..w],
+                    ),
+                    (true, false) => c.send(round, to, &input[block_range(m, p, to)]),
+                    (false, true) => c.recv(round, from, &mut rrow[..w]),
+                    (false, false) => Ok(()),
+                }
+            })?;
+        }
+
+        // ── Phase 2: one prefix-scan launch over the p−1 rows; row j
+        // becomes V_0 ⊕ … ⊕ V_j on this block (p−2 applications). ──
+        ctx.scan_rows((p - 1) as u32, op, &mut rows, w, p - 1);
+
+        // ── Phase 3: cyclic return (allgather shape). Owner r holds
+        // W_t[block r] = rows[t−1]; target rank 0 receives nothing. ──
+        for k in 1..p {
+            let round = (p - 1 + k - 1) as u32;
+            let to = (r + k) % p;
+            let from = (r + p - k) % p;
+            let send_active = to != 0;
+            let recv_active = r != 0;
+            ctx.with_chunk(k as u16, |c| {
+                let dst = block_range(m, p, from);
+                match (send_active, recv_active) {
+                    (true, true) => {
+                        c.sendrecv(round, to, &rows[(to - 1) * w..to * w], from, &mut output[dst])
+                    }
+                    (true, false) => c.send(round, to, &rows[(to - 1) * w..to * w]),
+                    (false, true) => c.recv(round, from, &mut output[dst]),
+                    (false, false) => Ok(()),
+                }
+            })?;
+        }
+        if r >= 1 {
+            output[my].copy_from_slice(&rows[(r - 1) * w..r * w]);
+        }
+        Ok(())
+    }
+
+    fn predicted_rounds(&self, p: usize) -> u32 {
+        Self::closed_form(p).0
+    }
+
+    /// `p − 2` block-width ⊕ on **every** rank (the scan phase), so the
+    /// critical rank's count equals the per-rank count.
+    fn predicted_ops(&self, p: usize) -> u32 {
+        Self::closed_form(p).1
+    }
+
+    fn critical_skips(&self, p: usize) -> Vec<usize> {
+        // Rank p−1 receives at cyclic distance k in both phases.
+        if p <= 1 {
+            return vec![];
+        }
+        (1..p).chain(1..p).collect()
+    }
+
+    /// `2(p−1)` rounds of `⌈m/p⌉`-element messages; `p−2` ⊕ at block
+    /// width — the honest bandwidth-regime schedule for the α-β-γ model.
+    fn critical_schedule(&self, p: usize, m: usize) -> (Vec<usize>, u32, usize) {
+        if p <= 1 {
+            return (vec![], 0, m);
+        }
+        (
+            <Self as ScanAlgorithm<T>>::critical_skips(self, p),
+            Self::closed_form(p).1,
+            m.div_ceil(p),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::validate::assert_exscan_matches;
+    use crate::mpi::{ops, run_scan, Topology, WorldConfig};
+
+    #[test]
+    fn block_ranges_partition_exactly() {
+        for (m, p) in [(0usize, 4usize), (3, 4), (4, 4), (10, 4), (17, 5), (100, 7), (5, 9)] {
+            let mut covered = 0;
+            for b in 0..p {
+                let range = block_range(m, p, b);
+                assert_eq!(range.start, covered, "m={m} p={p} b={b}");
+                covered = range.end;
+            }
+            assert_eq!(covered, m, "m={m} p={p}");
+        }
+    }
+
+    #[test]
+    fn matches_oracle_grid() {
+        for p in 2usize..=16 {
+            for m in [0usize, 1, 3, 17, 40] {
+                let cfg = WorldConfig::new(Topology::flat(p));
+                let inputs: Vec<Vec<i64>> = (0..p)
+                    .map(|r| (0..m).map(|i| ((r * 131 + i * 17) as i64) ^ 0x5A5A).collect())
+                    .collect();
+                let res = run_scan(&cfg, &ExscanRsag, &ops::bxor(), &inputs).unwrap();
+                assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+            }
+        }
+    }
+
+    #[test]
+    fn uneven_blocks_and_sums() {
+        // m not divisible by p (ragged block widths) and m < p (empty
+        // trailing blocks) — the partition arithmetic must stay exact.
+        for (p, m) in [(7usize, 5usize), (7, 64), (7, 100), (13, 6), (9, 1000)] {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<i64>> = (0..p)
+                .map(|r| (0..m).map(|i| (r * 31 + i * 7) as i64).collect())
+                .collect();
+            let res = run_scan(&cfg, &ExscanRsag, &ops::sum_i64(), &inputs).unwrap();
+            assert_exscan_matches(&inputs, &ops::sum_i64(), &res.outputs);
+        }
+    }
+
+    #[test]
+    fn noncommutative_order() {
+        use crate::coll::validate::oracle_exscan;
+        use crate::mpi::Rec2;
+        for p in [3usize, 5, 9, 12] {
+            let m = 6; // blocks of width 0 and 1 at p > m, ragged otherwise
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<Rec2>> = (0..p)
+                .map(|r| {
+                    (0..m)
+                        .map(|i| {
+                            Rec2::new(
+                                [1.0, 0.02 * r as f32, -0.01 * i as f32, 1.0],
+                                [r as f32 * 0.5, 1.0 - i as f32 * 0.25],
+                            )
+                        })
+                        .collect()
+                })
+                .collect();
+            let res = run_scan(&cfg, &ExscanRsag, &ops::rec2_compose(), &inputs).unwrap();
+            let oracle = oracle_exscan(&inputs, &ops::rec2_compose());
+            for r in 1..p {
+                let e = oracle[r].as_ref().unwrap();
+                for (a, b) in res.outputs[r].iter().zip(e) {
+                    for i in 0..4 {
+                        assert!((a.a[i] - b.a[i]).abs() < 1e-3, "p={p} r={r}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn closed_form_rounds_and_ops() {
+        for p in 2usize..=24 {
+            let cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+            let inputs: Vec<Vec<i64>> =
+                (0..p).map(|r| (0..10).map(|i| (r * 7 + i) as i64).collect()).collect();
+            let res = run_scan(&cfg, &ExscanRsag, &ops::bxor(), &inputs).unwrap();
+            let trace = res.trace.unwrap();
+            let algo: &dyn ScanAlgorithm<i64> = &ExscanRsag;
+            assert_eq!(trace.total_rounds(), algo.predicted_rounds(p), "rounds p={p}");
+            assert_eq!(trace.last_rank_ops(), algo.predicted_ops(p), "last-rank ops p={p}");
+            // Every rank scans: the max equals the closed form too.
+            assert_eq!(trace.max_ops(), algo.predicted_ops(p), "max ops p={p}");
+            assert!(crate::trace::check_all(&trace).is_empty(), "invariants p={p}");
+        }
+    }
+
+    #[test]
+    fn ops_are_m_independent() {
+        // Closed-form ⊕ counts hold even at m = 0 (empty blocks): the scan
+        // launch records its n−1 applications regardless of width.
+        for m in [0usize, 1, 2, 31] {
+            let p = 6;
+            let cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+            let inputs: Vec<Vec<i64>> = (0..p).map(|r| vec![r as i64; m]).collect();
+            let res = run_scan(&cfg, &ExscanRsag, &ops::bxor(), &inputs).unwrap();
+            let trace = res.trace.unwrap();
+            let algo: &dyn ScanAlgorithm<i64> = &ExscanRsag;
+            assert_eq!(trace.total_rounds(), algo.predicted_rounds(p), "m={m}");
+            assert_eq!(trace.last_rank_ops(), algo.predicted_ops(p), "m={m}");
+        }
+    }
+
+    #[test]
+    fn chaos_reordering_is_bit_identical() {
+        use crate::mpi::ChaosConfig;
+        for p in [2usize, 3, 5, 8] {
+            for seed in [1u64, 2, 3] {
+                let cfg = WorldConfig::new(Topology::flat(p))
+                    .with_trace(true)
+                    .with_chaos(ChaosConfig::new(seed ^ ((p as u64) << 8)));
+                let inputs: Vec<Vec<i64>> = (0..p)
+                    .map(|r| (0..9).map(|i| ((r + 1) * (i + 3)) as i64).collect())
+                    .collect();
+                let res = run_scan(&cfg, &ExscanRsag, &ops::bxor(), &inputs).unwrap();
+                assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+                let trace = res.trace.unwrap();
+                assert!(
+                    crate::trace::check_all(&trace).is_empty(),
+                    "invariants p={p} seed={seed}"
+                );
+            }
+        }
+    }
+}

@@ -14,15 +14,28 @@
 //! | [`ExscanLinear`] | exclusive | p−1 | 1 |
 //! | [`PipelinedChain`] | exclusive | p+B−2 | B (blocks) |
 //! | [`ExscanChunked`] | exclusive | (1+⌈log₂(p−1)⌉)·C | ⌈log₂(p−1)⌉·C (C chunks) |
+//! | [`ExscanBlock`] | exclusive | 2(g−1)+q(p/g) | 2(g−1)+q(p/g)−1, m/g-elem msgs |
+//! | [`ExscanRsag`] | exclusive | 2(p−1) | p−2, m/p-element messages |
+//!
+//! The first block of rows is the paper's **small-m** regime: full-vector
+//! messages every round, so fewer rounds wins. The last two rows are the
+//! **large-m** (bandwidth) regime the paper defers to other algorithms:
+//! [`ExscanBlock`] decomposes the vector over groups of `g` ranks and
+//! reuses the round-optimal 123 engine over `m/g`-element group totals,
+//! and [`ExscanRsag`] composes a reduce-scatter with an allgather so every
+//! message carries only `m/p` elements. [`select_exscan`] crosses over
+//! between the regimes at the α-β-γ-predicted m.
 
 pub mod basic;
 pub mod exscan_123;
 pub mod exscan_blelloch;
+pub mod exscan_block;
 pub mod exscan_chunked;
 pub mod exscan_hierarchical;
 pub mod exscan_linear;
 pub mod exscan_mpich;
 pub mod exscan_one_doubling;
+pub mod exscan_rsag;
 pub mod exscan_shift_scan;
 pub mod exscan_two_op;
 pub mod scan_doubling;
@@ -37,14 +50,16 @@ pub use exscan_chunked::ExscanChunked;
 pub use exscan_hierarchical::ExscanHierarchical;
 pub use segmented::{seg_bxor_i64, seg_max_i64, seg_sum_i64, Seg};
 pub use exscan_blelloch::ExscanBlelloch;
+pub use exscan_block::ExscanBlock;
 pub use exscan_linear::ExscanLinear;
 pub use exscan_mpich::ExscanMpich;
 pub use exscan_one_doubling::ExscanOneDoubling;
+pub use exscan_rsag::ExscanRsag;
 pub use exscan_shift_scan::ExscanShiftScan;
 pub use exscan_two_op::ExscanTwoOp;
 pub use scan_doubling::ScanDoubling;
 pub use scan_pipelined::PipelinedChain;
-pub use select::{select_exscan, TuningTable};
+pub use select::{select_candidates, select_exscan, TuningTable};
 pub use validate::{oracle_exscan, oracle_scan};
 
 use anyhow::Result;
@@ -138,6 +153,8 @@ pub fn all_exscan_algorithms<T: Elem>() -> Vec<Box<dyn ScanAlgorithm<T>>> {
         Box::new(ExscanLinear),
         Box::new(PipelinedChain::auto()),
         Box::new(ExscanChunked::auto()),
+        Box::new(ExscanBlock::auto()),
+        Box::new(ExscanRsag),
     ]
 }
 

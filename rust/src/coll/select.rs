@@ -11,29 +11,41 @@ use crate::cost::{predict_flat, CostParams};
 use crate::mpi::Elem;
 
 use super::{
-    exscan_by_name, paper_exscan_algorithms, PipelinedChain, ScanAlgorithm,
+    exscan_by_name, paper_exscan_algorithms, ExscanBlock, ExscanRsag, PipelinedChain,
+    ScanAlgorithm,
 };
 
+/// The selection candidate pool: the paper's three portable round-optimal
+/// algorithms plus the three bandwidth-regime engines (pipelined chain,
+/// block decomposition, reduce-scatter + allgather). Public so the bench
+/// crossover gate can recompute the argmin over the *same* pool.
+pub fn select_candidates<T: Elem>() -> Vec<Box<dyn ScanAlgorithm<T>>> {
+    let mut candidates: Vec<Box<dyn ScanAlgorithm<T>>> = paper_exscan_algorithms::<T>()
+        .into_iter()
+        .filter(|a| a.name() != "native-mpich") // the baseline, not a candidate
+        .collect();
+    candidates.push(Box::new(PipelinedChain::auto()));
+    candidates.push(Box::new(ExscanBlock::auto()));
+    candidates.push(Box::new(ExscanRsag));
+    candidates
+}
+
 /// Choose the predicted-fastest exclusive-scan algorithm for (p, bytes).
-/// Candidates: the paper's three portable algorithms plus the pipelined
-/// chain (which takes over for very large vectors). Every candidate is
-/// ranked through its own `critical_schedule(p, m)`, so m-dependent
-/// schedules (the chain's blocks) price their real round count and
-/// per-message payload.
+/// Every candidate is ranked through its own `critical_schedule(p, m)`,
+/// so m-dependent schedules (the chain's blocks, the block decomposition's
+/// group width, rsag's m/p messages) price their real round count and
+/// per-message payload — this is where the selection crosses over from the
+/// round-optimal regime (small m: full-vector messages, fewest rounds
+/// wins) to the bandwidth regime (large m: more rounds of m/g- or
+/// m/p-element messages win).
 pub fn select_exscan<T: Elem>(
     p: usize,
     m: usize,
     params: &CostParams,
     ranks_per_node: usize,
 ) -> Box<dyn ScanAlgorithm<T>> {
-    let mut candidates: Vec<Box<dyn ScanAlgorithm<T>>> = paper_exscan_algorithms::<T>()
-        .into_iter()
-        .filter(|a| a.name() != "native-mpich") // the baseline, not a candidate
-        .collect();
-    candidates.push(Box::new(PipelinedChain::auto()));
-
     let mut best: Option<(f64, Box<dyn ScanAlgorithm<T>>)> = None;
-    for algo in candidates {
+    for algo in select_candidates::<T>() {
         let (skips, ops, msg_elems) = algo.critical_schedule(p, m);
         let pred =
             predict_flat(&skips, ops, p, ranks_per_node, msg_elems * T::size_bytes(), params);
@@ -96,6 +108,8 @@ fn leak_name(n: &str) -> &'static str {
         "1-doubling" => "1-doubling",
         "two-op-doubling" => "two-op-doubling",
         "pipelined-chain" => "pipelined-chain",
+        "block-exscan" => "block-exscan",
+        "rsag" => "rsag",
         "native-mpich" => "native-mpich",
         other => Box::leak(other.to_string().into_boxed_str()),
     }
@@ -120,9 +134,53 @@ mod tests {
 
     #[test]
     fn huge_messages_prefer_pipeline() {
-        // 8 MB vectors on 8 ranks: bandwidth dominates → pipelined chain.
+        // 8 MB vectors on 8 ranks: bandwidth dominates, and at small p the
+        // chain's β factor 1+(p−2)/B (B = 64) ≈ 1.1 undercuts the block
+        // and rsag factors (≈ 2) → pipelined chain.
         let a = select_exscan::<i64>(8, 1_000_000, &CostParams::paper_36x1(), 1);
         assert_eq!(a.name(), "pipelined-chain");
+    }
+
+    #[test]
+    fn large_p_large_m_crosses_over_to_block_or_rsag() {
+        let params = CostParams::paper_36x1();
+        // Small m at p = 256: the α term dominates, fewest rounds wins
+        // (two-op's ⌈log₂p⌉ = 8 or 123's q = 9; both round-regime).
+        let a = select_exscan::<i64>(256, 1, &params, 1);
+        assert!(
+            a.name() == "123-doubling" || a.name() == "two-op-doubling",
+            "small m picked {}",
+            a.name()
+        );
+        // Large m at p = 256: the chain's block cap (B ≤ 64) leaves it a β
+        // factor of 1+(p−2)/64 ≈ 5, while block/rsag move ≈ 2m elements
+        // over the critical path regardless of p → bandwidth regime.
+        let b = select_exscan::<i64>(256, 1 << 20, &params, 1);
+        assert!(
+            b.name() == "block-exscan" || b.name() == "rsag",
+            "large m picked {}",
+            b.name()
+        );
+    }
+
+    #[test]
+    fn selection_is_argmin_over_candidate_pool() {
+        use crate::cost::predict_flat;
+        let params = CostParams::paper_36x1();
+        for m in [1usize, 64, 4096, 262_144, 1 << 20] {
+            for p in [8usize, 36, 256] {
+                let picked = select_exscan::<i64>(p, m, &params, 1);
+                let mut best: Option<(f64, &'static str)> = None;
+                for algo in select_candidates::<i64>() {
+                    let (skips, ops, msg_elems) = algo.critical_schedule(p, m);
+                    let pred = predict_flat(&skips, ops, p, 1, msg_elems * 8, &params);
+                    if best.map(|(t, _)| pred.time_us < t).unwrap_or(true) {
+                        best = Some((pred.time_us, leak_name(algo.name())));
+                    }
+                }
+                assert_eq!(picked.name(), best.unwrap().1, "p={p} m={m}");
+            }
+        }
     }
 
     #[test]

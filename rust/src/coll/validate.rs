@@ -22,8 +22,9 @@ use anyhow::Result;
 
 use super::segmented::{seg_bxor_i64, seg_sum_i64, Seg};
 use super::{
-    Exscan123, ExscanBlelloch, ExscanChunked, ExscanHierarchical, ExscanLinear, ExscanMpich,
-    ExscanOneDoubling, ExscanShiftScan, ExscanTwoOp, PipelinedChain, ScanAlgorithm,
+    Exscan123, ExscanBlelloch, ExscanBlock, ExscanChunked, ExscanHierarchical, ExscanLinear,
+    ExscanMpich, ExscanOneDoubling, ExscanRsag, ExscanShiftScan, ExscanTwoOp, PipelinedChain,
+    ScanAlgorithm,
 };
 use crate::mpi::{ops, ChaosConfig, Comm, Elem, OpRef, Rec2, Topology, World, WorldConfig};
 use crate::trace::{check_all, RankTrace, TraceReport};
@@ -217,6 +218,50 @@ fn fuzz_candidates<T: Elem>() -> Vec<(Box<dyn ScanAlgorithm<T>>, CheckFn)> {
             // checks apply.
             Box::new(ExscanHierarchical::new(3)),
             Box::new(|_, _| CountCheck::default()),
+        ),
+        (
+            // Reduce-scatter + allgather composition: exact closed forms
+            // 2(p−1) rounds, p−2 ⊕ on every rank.
+            Box::new(ExscanRsag),
+            Box::new(|p, _| {
+                let (rounds, ops) = ExscanRsag::closed_form(p);
+                CountCheck {
+                    rounds: Some(rounds),
+                    last_ops: Some(ops),
+                    max_ops_le: Some(ops),
+                    ..Default::default()
+                }
+            }),
+        ),
+        (
+            // Block decomposition with the cost-model auto group (g = 1 at
+            // the small fuzz m values → exercises the degenerate path).
+            Box::new(ExscanBlock::auto()),
+            Box::new(|p, m| {
+                let a = ExscanBlock::auto();
+                let eb = T::size_bytes();
+                CountCheck {
+                    rounds: Some(a.rounds_for(p, m, eb)),
+                    last_ops: Some(a.ops_for(p, m, eb)),
+                    max_ops_le: Some(a.max_ops_for(p, m, eb)),
+                    ..Default::default()
+                }
+            }),
+        ),
+        (
+            // Forced two-wide groups: a genuinely decomposed schedule at
+            // every even fuzz p (odd p snaps to g = 1).
+            Box::new(ExscanBlock::with_group(2)),
+            Box::new(|p, m| {
+                let a = ExscanBlock::with_group(2);
+                let eb = T::size_bytes();
+                CountCheck {
+                    rounds: Some(a.rounds_for(p, m, eb)),
+                    last_ops: Some(a.ops_for(p, m, eb)),
+                    max_ops_le: Some(a.max_ops_for(p, m, eb)),
+                    ..Default::default()
+                }
+            }),
         ),
     ];
     v.shrink_to_fit();

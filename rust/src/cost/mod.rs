@@ -20,6 +20,13 @@
 //! linear least squares; [`predict`] produces closed-form and trace-replay
 //! predictions used for algorithm selection and for the model-vs-measured
 //! experiment.
+//!
+//! The model prices **per-message** bytes, so it covers both of the
+//! paper's regimes with one formula: small m (full-vector messages —
+//! round count decides) and large m (block-decomposed `m/g`- or
+//! `m/p`-element messages — the bandwidth factor decides). See the
+//! regime derivation in [`predict`] and the [`predict::crossover_m`]
+//! boundary solver that the large-m selection gates build on.
 
 pub mod calibrate;
 pub mod model;
@@ -27,4 +34,4 @@ pub mod predict;
 
 pub use calibrate::{fit_flat, CalibrationReport, Table1Data, PAPER_TABLE1_36X1, PAPER_TABLE1_36X32};
 pub use model::{CostModel, CostParams, LinkClass};
-pub use predict::{predict_flat, skip_link, FlatPrediction};
+pub use predict::{crossover_m, predict_flat, predict_schedule, skip_link, FlatPrediction};

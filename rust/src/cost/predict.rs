@@ -13,6 +13,27 @@
 //! captured by the trace-replay predictor ([`crate::trace::replay`]);
 //! this closed form is what the algorithm-selection tuning table uses
 //! (cheap, no execution needed) and what the calibration fit inverts.
+//!
+//! # The two regimes and the bandwidth term
+//!
+//! `bytes` above is the **per-message payload**, not the vector size, so
+//! the same formula prices both regimes honestly once each algorithm's
+//! `critical_schedule(p, m)` reports its real `(skips, ops, msg_elems)`:
+//!
+//! * **Round regime** (small m): full-vector messages, `msg_elems = m`.
+//!   `T ≈ q·α + c` — the α term dominates, so the round-optimal
+//!   123-doubling (q = ⌈log₂(p−1) + log₂(4/3)⌉) wins.
+//! * **Bandwidth regime** (large m): decomposed messages. The β term is
+//!   `rounds · (msg_elems · elem_bytes) · β`, i.e. `F · m · elem_bytes ·
+//!   β` with the **bandwidth factor** `F = rounds · msg_elems / m`:
+//!   123-doubling F = q; pipelined chain F = 1 + (p−2)/B (B ≤ 64);
+//!   block decomposition F = 2 − 2/g + q(p/g)/g; reduce-scatter +
+//!   allgather F = 2 − 2/p. The crossover m between any two schedules is
+//!   where `ΔF · m · elem_bytes · β = Δrounds · α + Δ(ops·bytes) · γ`;
+//!   [`crossover_m`] solves it numerically against the actual (possibly
+//!   m-dependent) schedules and the selection sweep in
+//!   `benches/hotpath.rs` gates that [`crate::coll::select_exscan`]
+//!   lands on the argmin at every sweep point.
 
 use super::model::{CostParams, LinkClass};
 
@@ -68,6 +89,47 @@ pub fn predict_flat(
     FlatPrediction { rounds: skips.len() as u32, intra_rounds: intra, inter_rounds: inter, ops, time_us: time }
 }
 
+/// Price one `(skips, ops, msg_elems)` schedule — the triple
+/// [`crate::coll::ScanAlgorithm::critical_schedule`] reports — at a
+/// concrete element width.
+pub fn predict_schedule(
+    schedule: &(Vec<usize>, u32, usize),
+    p: usize,
+    ranks_per_node: usize,
+    elem_bytes: usize,
+    params: &CostParams,
+) -> FlatPrediction {
+    let (skips, ops, msg_elems) = schedule;
+    predict_flat(skips, *ops, p, ranks_per_node, msg_elems * elem_bytes, params)
+}
+
+/// Smallest vector length `m ∈ [1, m_max]` at which schedule `b` prices
+/// strictly below schedule `a`, or `None` if `a` wins everywhere in the
+/// range. Both schedules are functions of m (group widths and block
+/// counts may change along the sweep), so this scans doubling m — exact
+/// enough for regime boundaries, which the tuning table buckets by
+/// powers of two anyway.
+pub fn crossover_m(
+    schedule_a: impl Fn(usize) -> (Vec<usize>, u32, usize),
+    schedule_b: impl Fn(usize) -> (Vec<usize>, u32, usize),
+    p: usize,
+    ranks_per_node: usize,
+    elem_bytes: usize,
+    params: &CostParams,
+    m_max: usize,
+) -> Option<usize> {
+    let mut m = 1usize;
+    while m <= m_max {
+        let ta = predict_schedule(&schedule_a(m), p, ranks_per_node, elem_bytes, params);
+        let tb = predict_schedule(&schedule_b(m), p, ranks_per_node, elem_bytes, params);
+        if tb.time_us < ta.time_us {
+            return Some(m);
+        }
+        m = m.saturating_mul(2);
+    }
+    None
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,6 +162,25 @@ mod tests {
         assert_eq!(pred.intra_rounds, 1);
         // 5 + 2*(10+10) + 1*1 + 2*100*0.01 = 5+40+1+2 = 48
         assert!((pred.time_us - 48.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn crossover_finds_bandwidth_regime_boundary() {
+        // Round-regime schedule: 6 full-vector rounds (123 at p = 36).
+        // Bandwidth-regime schedule: 70 rounds of m/36 elements (rsag).
+        // Tiny m → a wins (fewer α); large m → b wins (F ≈ 1.94 < 6).
+        let params = CostParams::generic();
+        let a = |m: usize| (vec![1usize; 6], 5u32, m);
+        let b = |m: usize| (vec![1usize; 70], 34u32, m.div_ceil(36));
+        let m_star = crossover_m(a, b, 36, 1, 8, &params, 1 << 24).expect("must cross");
+        assert!(m_star > 1, "a must win at m = 1");
+        // On either side of the boundary the ordering flips.
+        let ta = predict_schedule(&a(m_star), 36, 1, 8, &params);
+        let tb = predict_schedule(&b(m_star), 36, 1, 8, &params);
+        assert!(tb.time_us < ta.time_us);
+        let ta1 = predict_schedule(&a(1), 36, 1, 8, &params);
+        let tb1 = predict_schedule(&b(1), 36, 1, 8, &params);
+        assert!(ta1.time_us < tb1.time_us);
     }
 
     #[test]

@@ -60,8 +60,9 @@ pub mod util;
 pub mod prelude {
     pub use crate::bench::{BenchConfig, Harness, SweepSpec};
     pub use crate::coll::{
-        all_exscan_algorithms, Exscan123, ExscanBlelloch, ExscanChunked, ExscanLinear,
-        ExscanMpich, ExscanOneDoubling, ExscanTwoOp, ScanAlgorithm, ScanDoubling, ScanKind,
+        all_exscan_algorithms, Exscan123, ExscanBlelloch, ExscanBlock, ExscanChunked,
+        ExscanLinear, ExscanMpich, ExscanOneDoubling, ExscanRsag, ExscanTwoOp, ScanAlgorithm,
+        ScanDoubling, ScanKind,
     };
     pub use crate::cost::{CostModel, CostParams, LinkClass};
     pub use crate::mpi::{

@@ -771,6 +771,28 @@ impl<T: Elem> RankCtx<T> {
         self.fold(round, op, input, inout);
     }
 
+    /// Local inclusive prefix scan over the first `n` row-major rows of
+    /// `rows` (each `width` elements): row `j` becomes `row_0 ⊕ … ⊕
+    /// row_j`, attributed to `round` — the local phase of the large-m
+    /// block algorithms. One [`OpKernel::scan_sharded`] launch applies
+    /// all `n − 1` ⊕ in a tight loop (no per-row dispatch), while the
+    /// trace records the same `n − 1` [`Reduce`](EventKind::Reduce)
+    /// events `reduce_local` would have — counters, traces and the γ
+    /// clock cost stay exactly equivalent to the unfused row-by-row
+    /// formulation, including for `width == 0` (where `fold` also counts
+    /// applications on empty slices).
+    pub fn scan_rows(&mut self, round: u32, op: &OpKernel<T>, rows: &mut [T], width: usize, n: usize) {
+        op.scan_sharded(self.rank, rows, width, n);
+        for _ in 1..n {
+            self.record(round, EventKind::Reduce { bytes: Self::bytes(width) });
+        }
+        if let ClockMode::Virtual(model) = &self.mode {
+            if n > 1 {
+                self.vclock += model.reduce_cost(Self::bytes(width)) * (n - 1) as f64;
+            }
+        }
+    }
+
     /// Pooled scratch buffer initialized to a copy of `src` — the
     /// replacement for algorithm-side `input.to_vec()` temporaries. The
     /// buffer comes from this rank's transport pool and recycles to it on

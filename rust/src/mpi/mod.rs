@@ -41,7 +41,7 @@ pub use comm::{Comm, CtxAlloc, TagKey, WORLD_CTX};
 pub use ctx::{ClockMode, RankCtx};
 pub use elem::{Dtype, Elem, Rec2};
 pub use inbox::InboxStats;
-pub use op::{kernels, ops, CombineOp, FnOp, OpKernel, OpRef, SliceKernelFn};
+pub use op::{kernels, ops, CombineOp, FnOp, OpKernel, OpRef, ScanKernelFn, SliceKernelFn};
 pub use pool::{PoolBuf, PoolStats};
 pub use world::{
     rank_threads_spawned, run_scan, run_world, RunResult, Topology, World, WorldConfig,

@@ -56,6 +56,15 @@ struct CounterShard(AtomicU64);
 /// no fat pointer, no vtable.
 pub type SliceKernelFn<T> = fn(&[T], &mut [T]);
 
+/// A monomorphized in-place **inclusive prefix scan across rows**: the
+/// buffer is row-major `n × width` and after the call row `j` holds
+/// `row_0 ⊕ … ⊕ row_j` (earlier rows are the earlier ⊕ operands). This is
+/// the local phase of the large-m block algorithms ([`crate::coll`]):
+/// one direct call scans all rows in a single tight loop nest the
+/// compiler can autovectorize, instead of `n−1` dispatched `combine`
+/// calls. `width == 0` is a no-op.
+pub type ScanKernelFn<T> = fn(&mut [T], usize);
+
 /// A binary, associative element-wise operator over vectors of `T`.
 pub trait CombineOp<T: Elem>: Send + Sync {
     /// Operator name (used in benchmark tables and artifact lookup).
@@ -87,6 +96,30 @@ pub trait CombineOp<T: Elem>: Send + Sync {
     /// collective into an [`OpKernel`]; `None` falls back to the dyn
     /// [`combine_slice`](Self::combine_slice) call per application.
     fn slice_kernel(&self) -> Option<SliceKernelFn<T>> {
+        None
+    }
+
+    /// In-place inclusive prefix scan over row-major `n × width` rows:
+    /// row `j` becomes `row_0 ⊕ … ⊕ row_j`. The default folds each row
+    /// into the next via [`combine_slice`](Self::combine_slice) — one dyn
+    /// call per *row*, never per element — and is the semantic reference
+    /// the tight-loop [`scan_kernel`](Self::scan_kernel)s must match
+    /// bit-identically (asserted in `tests/kernel_equivalence.rs`).
+    fn scan_slice(&self, rows: &mut [T], width: usize) {
+        if width == 0 {
+            return;
+        }
+        let n = rows.len() / width;
+        for j in 1..n {
+            let (earlier, rest) = rows.split_at_mut(j * width);
+            self.combine_slice(&earlier[(j - 1) * width..], &mut rest[..width]);
+        }
+    }
+
+    /// A statically dispatched prefix-scan kernel, if one exists (the
+    /// built-in operators register the [`kernels::scan_*`] tight loops).
+    /// `None` falls back to the dyn [`scan_slice`](Self::scan_slice).
+    fn scan_kernel(&self) -> Option<ScanKernelFn<T>> {
         None
     }
 
@@ -165,6 +198,40 @@ pub mod kernels {
             *o = i.then(&*o);
         }
     }
+
+    // ── Prefix-scan tight loops (the local phase of the large-m block
+    // algorithms). Row-major n × width; row j ← row_{j-1} ⊕ row_j with
+    // the earlier row as the earlier operand. Both loop bounds are plain
+    // slice arithmetic, so the inner column loop autovectorizes exactly
+    // like the combine kernels above. ──
+
+    macro_rules! scan_kernel {
+        ($name:ident, $ty:ty, $o:ident, $i:ident, $body:expr) => {
+            #[inline]
+            pub fn $name(rows: &mut [$ty], width: usize) {
+                if width == 0 {
+                    return;
+                }
+                let n = rows.len() / width;
+                for j in 1..n {
+                    let (earlier, rest) = rows.split_at_mut(j * width);
+                    let prev = &earlier[(j - 1) * width..];
+                    for ($o, &$i) in rest[..width].iter_mut().zip(prev) {
+                        *$o = $body;
+                    }
+                }
+            }
+        };
+    }
+
+    scan_kernel!(scan_bxor_i64, i64, o, i, i ^ *o);
+    scan_kernel!(scan_bor_i64, i64, o, i, i | *o);
+    scan_kernel!(scan_sum_i64, i64, o, i, i.wrapping_add(*o));
+    scan_kernel!(scan_sum_u64, u64, o, i, i.wrapping_add(*o));
+    scan_kernel!(scan_sum_f64, f64, o, i, i + *o);
+    scan_kernel!(scan_max_i64, i64, o, i, i.max(*o));
+    scan_kernel!(scan_min_i64, i64, o, i, i.min(*o));
+    scan_kernel!(scan_rec2_compose, Rec2, o, i, i.then(&*o));
 }
 
 /// Resolved dispatch of one [`OpKernel`].
@@ -207,6 +274,44 @@ impl<'op, T: Elem> OpKernel<'op, T> {
             Kern::Static(f) => f(input, inout),
             Kern::DynSlice => self.op.op.combine_slice(input, inout),
             Kern::PerElement => self.op.op.combine(input, inout),
+        }
+    }
+
+    /// In-place inclusive prefix scan over the first `n` rows of the
+    /// row-major `n × width` buffer (`rows.len() >= n * width`), counting
+    /// the `n − 1` ⊕ applications on the caller's shard in one bump.
+    /// Dispatch follows the handle's resolution: static handles use the
+    /// registered [`ScanKernelFn`] tight loop (falling back to the dyn
+    /// [`CombineOp::scan_slice`] when the operator registered a combine
+    /// kernel but no scan kernel), dyn-slice handles use `scan_slice`,
+    /// and the per-element reference path folds row into row via
+    /// `combine`. All three are bit-identical by contract.
+    ///
+    /// `width == 0` rows still count their `n − 1` applications — the
+    /// algorithms' closed-form ⊕ counts stay m-independent, matching
+    /// `RankCtx::fold`'s unconditional accounting.
+    pub fn scan_sharded(&self, shard: usize, rows: &mut [T], width: usize, n: usize) {
+        debug_assert!(rows.len() >= n * width);
+        if n <= 1 {
+            return;
+        }
+        self.op.bump_n(shard, (n - 1) as u64);
+        if width == 0 {
+            return;
+        }
+        let rows = &mut rows[..n * width];
+        match self.kern {
+            Kern::Static(_) => match self.op.scan {
+                Some(s) => s(rows, width),
+                None => self.op.op.scan_slice(rows, width),
+            },
+            Kern::DynSlice => self.op.op.scan_slice(rows, width),
+            Kern::PerElement => {
+                for j in 1..n {
+                    let (earlier, rest) = rows.split_at_mut(j * width);
+                    self.op.op.combine(&earlier[(j - 1) * width..], &mut rest[..width]);
+                }
+            }
         }
     }
 
@@ -255,15 +360,18 @@ pub struct OpRef<T: Elem> {
     /// call, ever), so per-collective [`kernel`](Self::kernel) resolution
     /// is a field read.
     kern: Option<SliceKernelFn<T>>,
+    /// Prefix-scan kernel resolved at construction, same discipline.
+    scan: Option<ScanKernelFn<T>>,
     shards: Box<[CounterShard]>,
 }
 
 impl<T: Elem> OpRef<T> {
     pub fn new(op: Arc<dyn CombineOp<T>>) -> Self {
         let kern = op.slice_kernel();
+        let scan = op.scan_kernel();
         let shards: Vec<CounterShard> =
             (0..COUNTER_SHARDS).map(|_| CounterShard::default()).collect();
-        OpRef { op, kern, shards: shards.into_boxed_slice() }
+        OpRef { op, kern, scan, shards: shards.into_boxed_slice() }
     }
 
     /// Operator name. Borrowed — this is read inside sweep loops and table
@@ -311,6 +419,13 @@ impl<T: Elem> OpRef<T> {
         self.shards[shard & (COUNTER_SHARDS - 1)].0.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// `n` applications on the given shard in one relaxed add — the scan
+    /// kernels apply `n − 1` ⊕ per launch and count them all at once.
+    #[inline]
+    fn bump_n(&self, shard: usize, n: u64) {
+        self.shards[shard & (COUNTER_SHARDS - 1)].0.fetch_add(n, Ordering::Relaxed);
+    }
+
     /// Apply `inout = input ⊕ inout`, counting on shard 0.
     #[deprecated(
         since = "0.2.0",
@@ -352,6 +467,9 @@ pub struct FnOp<T: Elem, F: Fn(T, T) -> T + Send + Sync> {
     /// Statically dispatched slice kernel; must be bit-identical to the
     /// per-element loop over `f`.
     kernel: Option<SliceKernelFn<T>>,
+    /// Statically dispatched prefix-scan kernel; must be bit-identical
+    /// to folding each row into the next with `f`.
+    scan: Option<ScanKernelFn<T>>,
     _t: std::marker::PhantomData<T>,
 }
 
@@ -377,6 +495,10 @@ impl<T: Elem, F: Fn(T, T) -> T + Send + Sync> CombineOp<T> for FnOp<T, F> {
         self.kernel
     }
 
+    fn scan_kernel(&self) -> Option<ScanKernelFn<T>> {
+        self.scan
+    }
+
     fn commutative(&self) -> bool {
         self.commutative
     }
@@ -391,51 +513,95 @@ pub mod ops {
         commutative: bool,
         f: F,
         kernel: Option<SliceKernelFn<T>>,
+        scan: Option<ScanKernelFn<T>>,
     ) -> OpRef<T> {
         OpRef::new(Arc::new(FnOp {
             name,
             commutative,
             f,
             kernel,
+            scan,
             _t: std::marker::PhantomData,
         }))
     }
 
     /// `MPI_BXOR` over i64 — the operator the paper benchmarks.
     pub fn bxor() -> OpRef<i64> {
-        mk("bxor_i64", true, |a: i64, b: i64| a ^ b, Some(kernels::bxor_i64))
+        mk(
+            "bxor_i64",
+            true,
+            |a: i64, b: i64| a ^ b,
+            Some(kernels::bxor_i64),
+            Some(kernels::scan_bxor_i64),
+        )
     }
 
     /// `MPI_BOR` over i64.
     pub fn bor() -> OpRef<i64> {
-        mk("bor_i64", true, |a: i64, b: i64| a | b, Some(kernels::bor_i64))
+        mk(
+            "bor_i64",
+            true,
+            |a: i64, b: i64| a | b,
+            Some(kernels::bor_i64),
+            Some(kernels::scan_bor_i64),
+        )
     }
 
     /// `MPI_SUM` over i64 (wrapping, as C longs would overflow silently).
     pub fn sum_i64() -> OpRef<i64> {
-        mk("sum_i64", true, |a: i64, b: i64| a.wrapping_add(b), Some(kernels::sum_i64))
+        mk(
+            "sum_i64",
+            true,
+            |a: i64, b: i64| a.wrapping_add(b),
+            Some(kernels::sum_i64),
+            Some(kernels::scan_sum_i64),
+        )
     }
 
     /// `MPI_SUM` over u64 (wrapping — exactly associative & commutative,
     /// ideal for property tests).
     pub fn sum_u64() -> OpRef<u64> {
-        mk("sum_u64", true, |a: u64, b: u64| a.wrapping_add(b), Some(kernels::sum_u64))
+        mk(
+            "sum_u64",
+            true,
+            |a: u64, b: u64| a.wrapping_add(b),
+            Some(kernels::sum_u64),
+            Some(kernels::scan_sum_u64),
+        )
     }
 
     /// `MPI_SUM` over f64. NOTE: float addition is not exactly associative;
     /// tests using it must compare with tolerance.
     pub fn sum_f64() -> OpRef<f64> {
-        mk("sum_f64", true, |a: f64, b: f64| a + b, Some(kernels::sum_f64))
+        mk(
+            "sum_f64",
+            true,
+            |a: f64, b: f64| a + b,
+            Some(kernels::sum_f64),
+            Some(kernels::scan_sum_f64),
+        )
     }
 
     /// `MPI_MAX` over i64.
     pub fn max_i64() -> OpRef<i64> {
-        mk("max_i64", true, |a: i64, b: i64| a.max(b), Some(kernels::max_i64))
+        mk(
+            "max_i64",
+            true,
+            |a: i64, b: i64| a.max(b),
+            Some(kernels::max_i64),
+            Some(kernels::scan_max_i64),
+        )
     }
 
     /// `MPI_MIN` over i64.
     pub fn min_i64() -> OpRef<i64> {
-        mk("min_i64", true, |a: i64, b: i64| a.min(b), Some(kernels::min_i64))
+        mk(
+            "min_i64",
+            true,
+            |a: i64, b: i64| a.min(b),
+            Some(kernels::min_i64),
+            Some(kernels::scan_min_i64),
+        )
     }
 
     /// Affine-map composition over [`Rec2`]: the input (earlier) map is
@@ -446,6 +612,7 @@ pub mod ops {
             false,
             |earlier: Rec2, later: Rec2| earlier.then(&later),
             Some(kernels::rec2_compose),
+            Some(kernels::scan_rec2_compose),
         )
     }
 
@@ -622,6 +789,87 @@ mod tests {
         }
         assert_eq!(op.applications(), 20);
         assert_eq!(buf, vec![0i64; 8]);
+    }
+
+    #[test]
+    fn scan_kernel_matches_repeated_combine_bitwise() {
+        // The tight-loop prefix scan must be bit-identical to folding each
+        // row into the next with the combine kernel — including f64, where
+        // "equal" means equal bits, not approximate.
+        fn check<T: Elem>(op: &OpRef<T>, base: &[T], width: usize) {
+            let n = base.len() / width.max(1);
+            let mut scanned = base.to_vec();
+            op.kernel().scan_sharded(0, &mut scanned, width, n);
+            let mut reference = base.to_vec();
+            for j in 1..n {
+                let (earlier, rest) = reference.split_at_mut(j * width);
+                op.kernel().apply_sharded(0, &earlier[(j - 1) * width..], &mut rest[..width]);
+            }
+            assert_eq!(scanned, reference, "op={}", op.name());
+        }
+        let rows_i64: Vec<i64> = (0..7 * 5).map(|i| (i * 37 - 91) ^ (i << 3)).collect();
+        for op in [ops::bxor(), ops::bor(), ops::sum_i64(), ops::max_i64(), ops::min_i64()] {
+            check(&op, &rows_i64, 5);
+        }
+        let rows_u64: Vec<u64> = (0..6 * 4).map(|i| (i as u64).wrapping_mul(0x9E37_79B9)).collect();
+        check(&ops::sum_u64(), &rows_u64, 4);
+        let rows_f64: Vec<f64> = (0..5 * 3).map(|i| (i as f64) * 0.7 - 3.1).collect();
+        let f = ops::sum_f64();
+        let mut scanned = rows_f64.clone();
+        f.kernel().scan_sharded(0, &mut scanned, 3, 5);
+        let mut reference = rows_f64;
+        for j in 1..5 {
+            let (earlier, rest) = reference.split_at_mut(j * 3);
+            f.kernel().apply_sharded(0, &earlier[(j - 1) * 3..], &mut rest[..3]);
+        }
+        for (a, b) in scanned.iter().zip(&reference) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f64 prefix scan must match by bits");
+        }
+        let rows_rec2: Vec<Rec2> = (0..4 * 2)
+            .map(|i| {
+                Rec2::new(
+                    [1.0, 0.03 * i as f32, -0.02 * i as f32, 1.0],
+                    [i as f32 * 0.5, 1.0 - i as f32 * 0.25],
+                )
+            })
+            .collect();
+        check(&ops::rec2_compose(), &rows_rec2, 2);
+    }
+
+    #[test]
+    fn scan_counts_n_minus_one_applications() {
+        let op = ops::sum_i64();
+        let mut rows = vec![1i64; 6 * 8];
+        op.kernel().scan_sharded(3, &mut rows, 8, 6);
+        assert_eq!(op.applications(), 5, "n rows scan in n−1 applications");
+        // Zero-width rows: the accounting is m-independent — the n−1
+        // applications still count, matching RankCtx::fold on empty slices.
+        let mut empty: Vec<i64> = vec![];
+        op.kernel().scan_sharded(3, &mut empty, 0, 6);
+        assert_eq!(op.applications(), 10);
+        // n <= 1 scans nothing and counts nothing.
+        op.kernel().scan_sharded(3, &mut rows, 8, 1);
+        op.kernel().scan_sharded(3, &mut empty, 0, 0);
+        assert_eq!(op.applications(), 10);
+    }
+
+    #[test]
+    fn scan_dispatch_paths_agree() {
+        // Static tight loop ≡ dyn scan_slice fallback ≡ per-element
+        // reference, and a no-scan-kernel operator (expensive_bxor) takes
+        // the dyn fallback without misbehaving.
+        let rows: Vec<i64> = (0..9 * 4).map(|i| (i * 13 + 5) ^ 0x2A).collect();
+        let op = ops::bxor();
+        let mut a = rows.clone();
+        op.kernel().scan_sharded(0, &mut a, 4, 9);
+        let mut b = rows.clone();
+        op.kernel_per_element().scan_sharded(0, &mut b, 4, 9);
+        assert_eq!(a, b, "per-element scan path must match static");
+        let slow = ops::expensive_bxor(8);
+        let mut c = rows;
+        slow.kernel().scan_sharded(0, &mut c, 4, 9);
+        assert_eq!(a, c, "dyn scan_slice fallback must match");
+        assert_eq!(slow.applications(), 8);
     }
 
     #[test]

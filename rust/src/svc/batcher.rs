@@ -51,8 +51,11 @@ pub struct BatchPolicy {
     /// cycle fills `max_batch` — trading p50 latency for amortization
     /// under load — and narrow it (÷2, down to `lo`) when a cycle
     /// collects ≤ `max_batch / 4`, so an idle service converges back to
-    /// low latency. `None` (the default) keeps the fixed `window`, which
-    /// also keeps the deterministic manual-flush tests byte-stable.
+    /// low latency. When the admission gauge reports `Overloaded`
+    /// pressure the window only narrows (see
+    /// [`next_window`](Self::next_window)). `None` (the default) keeps
+    /// the fixed `window`, which also keeps the deterministic
+    /// manual-flush tests byte-stable.
     pub window_range: Option<(Duration, Duration)>,
 }
 
@@ -76,6 +79,32 @@ impl BatchPolicy {
         self.window = self.window.clamp(lo, hi);
         self.window_range = Some((lo, hi));
         self
+    }
+
+    /// One adaptive-window step (pure — the engine calls it once per
+    /// dispatch cycle): widen ×2 when the cycle filled `max_batch` (more
+    /// coalescing headroom under load), narrow ÷2 when it collected
+    /// ≤ `max_batch / 4` (don't tax latency when idle), hold otherwise;
+    /// always clamped to the configured range.
+    ///
+    /// `overloaded` is the admission-gauge hint: when the service is
+    /// rejecting or blocking submits at its inflight caps, the cure is
+    /// draining the queue sooner, not coalescing harder — a wider window
+    /// only lets the gauge press the cap for longer. Under pressure the
+    /// window therefore never widens; it narrows toward `lo` regardless
+    /// of how full the cycle was.
+    ///
+    /// Returns `win` unchanged when no `window_range` is configured.
+    pub fn next_window(&self, win: Duration, collected: usize, overloaded: bool) -> Duration {
+        let Some((lo, hi)) = self.window_range else { return win };
+        let max_batch = self.max_batch.max(1);
+        if overloaded || collected <= max_batch / 4 {
+            (win / 2).clamp(lo, hi)
+        } else if collected >= max_batch {
+            (win * 2).clamp(lo, hi)
+        } else {
+            win.clamp(lo, hi)
+        }
     }
 }
 

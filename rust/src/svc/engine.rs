@@ -384,19 +384,16 @@ fn dispatch_loop<T: Elem>(cfg: EngineConfig, shared: Arc<Shared<T>>) {
     }
 }
 
-/// Adaptive batching window step (pure, unit-tested): widen ×2 when the
-/// cycle filled its batch cap (more coalescing headroom under load),
-/// narrow ÷2 when it collected ≤ cap/4 (don't tax latency when idle),
-/// hold otherwise; always clamped to `[lo, hi]`.
-fn next_window(win: Duration, lo: Duration, hi: Duration, collected: usize, max_batch: usize) -> Duration {
-    let max_batch = max_batch.max(1);
-    if collected >= max_batch {
-        (win * 2).clamp(lo, hi)
-    } else if collected <= max_batch / 4 {
-        (win / 2).clamp(lo, hi)
-    } else {
-        win.clamp(lo, hi)
-    }
+/// Admission-gauge pressure test for the adaptive window
+/// ([`BatchPolicy::next_window`]'s `overloaded` hint): true when a
+/// fresh submit would find no headroom under either inflight cap — the
+/// same predicate `admit` blocks or rejects on. The dispatcher reads it
+/// once per cycle; a racy read is fine (the hint only biases the next
+/// window's width).
+fn admission_overloaded<T: Elem>(shared: &Shared<T>) -> bool {
+    let open = shared.metrics.open_requests() as usize;
+    let gauge = shared.metrics.inflight_bytes() as usize;
+    open >= shared.max_inflight || (gauge > 0 && gauge >= shared.max_inflight_bytes)
 }
 
 fn dispatch_cycles<T: Elem>(cfg: EngineConfig, shared: &Arc<Shared<T>>) {
@@ -427,7 +424,7 @@ fn dispatch_cycles<T: Elem>(cfg: EngineConfig, shared: &Arc<Shared<T>>) {
     // this thread's startup or a previous cycle's teardown.
     let mut seen_gen: u64 = 0;
     // Adaptive batching window (fixed at `policy.window` unless a
-    // `window_range` is configured; see `next_window`).
+    // `window_range` is configured; see `BatchPolicy::next_window`).
     let mut window = cfg.policy.window;
     loop {
         let Some(first) = shared.queue.pop_wait() else { break };
@@ -467,9 +464,7 @@ fn dispatch_cycles<T: Elem>(cfg: EngineConfig, shared: &Arc<Shared<T>>) {
             }
             std::thread::sleep(Duration::from_micros(50).min(deadline - now));
         }
-        if let Some((lo, hi)) = cfg.policy.window_range {
-            window = next_window(window, lo, hi, collected.len(), cfg.policy.max_batch);
-        }
+        window = cfg.policy.next_window(window, collected.len(), admission_overloaded(shared));
 
         // ── Plan, then execute in waves of ≤ CTX_RING concurrent plans. ──
         let plans = plan_batches(&collected, p, &cfg.policy, |n, m| {
@@ -846,38 +841,66 @@ mod tests {
 
     const MS: Duration = Duration::from_millis(1);
 
+    /// Adaptive policy used by the pure window-step tests: range
+    /// `[1 ms, 16 ms]`, `max_batch` 64 (the default).
+    fn adaptive() -> BatchPolicy {
+        BatchPolicy::default().with_adaptive_window(MS, 16 * MS)
+    }
+
     #[test]
     fn window_widens_under_load_and_narrows_when_idle() {
-        let (lo, hi) = (MS, 16 * MS);
+        let p = adaptive();
         // Saturated cycles double up to the cap.
         let mut w = 2 * MS;
-        w = next_window(w, lo, hi, 64, 64);
+        w = p.next_window(w, 64, false);
         assert_eq!(w, 4 * MS);
-        w = next_window(w, lo, hi, 200, 64);
+        w = p.next_window(w, 200, false);
         assert_eq!(w, 8 * MS);
-        w = next_window(w, lo, hi, 64, 64);
+        w = p.next_window(w, 64, false);
         assert_eq!(w, 16 * MS);
-        w = next_window(w, lo, hi, 64, 64);
+        w = p.next_window(w, 64, false);
         assert_eq!(w, 16 * MS, "clamped at hi");
         // Idle cycles halve down to the floor.
-        w = next_window(w, lo, hi, 0, 64);
+        w = p.next_window(w, 0, false);
         assert_eq!(w, 8 * MS);
-        w = next_window(w, lo, hi, 16, 64);
+        w = p.next_window(w, 16, false);
         assert_eq!(w, 4 * MS, "quarter-full still counts as idle");
-        w = next_window(w, lo, hi, 1, 64);
-        w = next_window(w, lo, hi, 1, 64);
-        w = next_window(w, lo, hi, 1, 64);
-        assert_eq!(w, lo, "clamped at lo");
+        w = p.next_window(w, 1, false);
+        w = p.next_window(w, 1, false);
+        w = p.next_window(w, 1, false);
+        assert_eq!(w, lo_of(&p), "clamped at lo");
         // Mid-load holds steady.
-        assert_eq!(next_window(4 * MS, lo, hi, 32, 64), 4 * MS);
+        assert_eq!(p.next_window(4 * MS, 32, false), 4 * MS);
     }
 
     #[test]
     fn window_step_clamps_an_out_of_range_start() {
-        let (lo, hi) = (2 * MS, 8 * MS);
-        assert_eq!(next_window(MS, lo, hi, 32, 64), 2 * MS);
-        assert_eq!(next_window(100 * MS, lo, hi, 32, 64), 8 * MS);
+        let p = BatchPolicy::default().with_adaptive_window(2 * MS, 8 * MS);
+        assert_eq!(p.next_window(MS, 32, false), 2 * MS);
+        assert_eq!(p.next_window(100 * MS, 32, false), 8 * MS);
         // Degenerate max_batch never divides by zero.
-        assert_eq!(next_window(4 * MS, lo, hi, 0, 0), 2 * MS);
+        let mut degenerate = p.clone();
+        degenerate.max_batch = 0;
+        assert_eq!(degenerate.next_window(4 * MS, 0, false), 2 * MS);
+    }
+
+    #[test]
+    fn overloaded_hint_narrows_and_never_widens() {
+        let p = adaptive();
+        // Even a cycle that filled the batch cap — which would widen the
+        // window under normal load — narrows when the admission gauge is
+        // at its caps: the service must drain, not coalesce harder.
+        assert_eq!(p.next_window(8 * MS, 64, true), 4 * MS);
+        assert_eq!(p.next_window(8 * MS, 200, true), 4 * MS);
+        assert_eq!(p.next_window(8 * MS, 32, true), 4 * MS);
+        // Still clamped at the floor.
+        assert_eq!(p.next_window(MS, 64, true), MS);
+        // A fixed-window policy (no range) is untouched by the hint.
+        let fixed = BatchPolicy::default();
+        assert_eq!(fixed.next_window(8 * MS, 64, true), 8 * MS);
+    }
+
+    fn lo_of(p: &BatchPolicy) -> Duration {
+        p.window_range.expect("adaptive").0
     }
 }

@@ -21,8 +21,15 @@ pub struct Hop {
     /// Sender, for communication hops; `None` for ⊕ applications.
     pub from: Option<usize>,
     pub link: Option<LinkClass>,
-    /// Time spent in this hop (µs): round cost or reduce cost.
+    /// Time spent in this hop (µs): round cost or reduce cost, measured
+    /// end-to-end along the chain (so the hops telescope to the
+    /// completion time).
     pub cost_us: f64,
+    /// Portion of the rank's elapsed time spent blocked before this hop's
+    /// transfer began (µs): the gap between the rank becoming idle and
+    /// the matching send being posted. Zero for local ⊕ hops and for
+    /// receives whose message was already in flight.
+    pub wait_us: f64,
     /// Clock after the hop (µs).
     pub at_us: f64,
     /// True when the rank had to wait on the sender (the hop is a genuine
@@ -66,6 +73,10 @@ pub fn critical_path(report: &TraceReport, model: &CostModel, bytes: usize) -> C
         rank: usize,
         idx: usize,
         start: f64,
+        /// When the hop's transfer/compute actually began: `start` for
+        /// local work and already-arrived messages, the sender's posting
+        /// stamp for waited receives.
+        ready: f64,
         end: f64,
         dep: Option<(usize, usize)>, // (rank, idx) of the sender event we waited on
         waited: bool,
@@ -90,7 +101,7 @@ pub fn critical_path(report: &TraceReport, model: &CostModel, bytes: usize) -> C
                     EventKind::Reduce { .. } => {
                         let start = clock[r];
                         clock[r] += model.reduce_cost(bytes);
-                        evs.insert(key, Ev { rank: r, idx: i, start, end: clock[r], dep: last_ev[r], waited: false });
+                        evs.insert(key, Ev { rank: r, idx: i, start, ready: start, end: clock[r], dep: last_ev[r], waited: false });
                         last_ev[r] = Some(key);
                         idxp[r] += 1;
                         progressed = true;
@@ -110,10 +121,11 @@ pub fn critical_path(report: &TraceReport, model: &CostModel, bytes: usize) -> C
                                 let c_in = model.round_cost(from, r, bytes);
                                 let start = clock[r];
                                 let waited = st > clock[r];
-                                clock[r] = clock[r].max(st) + c_out.max(c_in);
+                                let ready = clock[r].max(st);
+                                clock[r] = ready + c_out.max(c_in);
                                 let dep = if waited { Some(skey) } else { last_ev[r] };
                                 let rkey = (r, i + 1);
-                                evs.insert(rkey, Ev { rank: r, idx: i + 1, start, end: clock[r], dep, waited });
+                                evs.insert(rkey, Ev { rank: r, idx: i + 1, start, ready, end: clock[r], dep, waited });
                                 last_ev[r] = Some(rkey);
                                 idxp[r] += 2;
                                 progressed = true;
@@ -121,7 +133,7 @@ pub fn critical_path(report: &TraceReport, model: &CostModel, bytes: usize) -> C
                             None => {
                                 let start = clock[r];
                                 clock[r] += model.round_cost(r, to, bytes);
-                                evs.insert(key, Ev { rank: r, idx: i, start, end: clock[r], dep: last_ev[r], waited: false });
+                                evs.insert(key, Ev { rank: r, idx: i, start, ready: start, end: clock[r], dep: last_ev[r], waited: false });
                                 last_ev[r] = Some(key);
                                 idxp[r] += 1;
                                 progressed = true;
@@ -134,9 +146,10 @@ pub fn critical_path(report: &TraceReport, model: &CostModel, bytes: usize) -> C
                         };
                         let start = clock[r];
                         let waited = st > clock[r];
-                        clock[r] = clock[r].max(st) + model.round_cost(from, r, bytes);
+                        let ready = clock[r].max(st);
+                        clock[r] = ready + model.round_cost(from, r, bytes);
                         let dep = if waited { Some(skey) } else { last_ev[r] };
-                        evs.insert(key, Ev { rank: r, idx: i, start, end: clock[r], dep, waited });
+                        evs.insert(key, Ev { rank: r, idx: i, start, ready, end: clock[r], dep, waited });
                         last_ev[r] = Some(key);
                         idxp[r] += 1;
                         progressed = true;
@@ -172,17 +185,26 @@ pub fn critical_path(report: &TraceReport, model: &CostModel, bytes: usize) -> C
             rank: ev.rank,
             from,
             link,
-            cost_us: ev.end - ev.start.max(if ev.waited { ev.start } else { ev.start }),
+            // Pure transfer/compute cost: waits are reported separately,
+            // not silently folded in (a waited hop's elapsed time is
+            // wait_us + the transfer itself).
+            cost_us: ev.end - ev.ready,
+            wait_us: ev.ready - ev.start,
             at_us: ev.end,
             waited: ev.waited,
         });
         cur = ev.dep;
     }
     hops.reverse();
-    // Fix hop costs to be end-to-end along the chain (include waits).
+    // Re-base hop costs end-to-end along the chain so they telescope to
+    // the completion time; when a dependency chain leaves slack between
+    // consecutive hops (the sender posted before its own chain-end), the
+    // slack is accounted as additional wait, never as transfer cost.
     let mut prev_end = 0.0;
     for h in &mut hops {
-        h.cost_us = h.at_us - prev_end;
+        let total = h.at_us - prev_end;
+        h.wait_us += (total - h.cost_us - h.wait_us).max(0.0);
+        h.cost_us = total;
         prev_end = h.at_us;
     }
     CriticalPath { completion_us: clock[final_rank], final_rank, hops }
@@ -236,6 +258,46 @@ mod tests {
         // ternary-reduce-local footnote made visible).
         assert_eq!(cp.comm_rounds() as u32, 6);
         assert!(cp.reduce_hops() >= 5 && cp.reduce_hops() <= 6, "{}", cp.reduce_hops());
+    }
+
+    #[test]
+    fn waited_hop_charges_wait_separately_from_transfer() {
+        use crate::trace::{EventKind, RankTrace, TraceReport};
+        // Rank 0 computes three ⊕ (32 µs each at γ = 1, 32 B) and then
+        // sends; rank 1 only receives, so it blocks 96 µs before the
+        // 1 µs (α) transfer. The pre-fix code folded the wait into
+        // cost_us (charging 97); the wait must be reported separately.
+        let params = CostParams {
+            alpha_intra: 1.0,
+            alpha_inter: 1.0,
+            beta_intra: 0.0,
+            beta_inter: 0.0,
+            gamma: 1.0,
+            overhead: 0.0,
+        };
+        let model = CostModel::new(params, 1);
+        let mut t0 = RankTrace::new(0);
+        for _ in 0..3 {
+            t0.push(0, EventKind::Reduce { bytes: 32 });
+        }
+        t0.push(0, EventKind::Send { to: 1, bytes: 32 });
+        let mut t1 = RankTrace::new(1);
+        t1.push(0, EventKind::Recv { from: 0, bytes: 32 });
+        let cp = critical_path(&TraceReport::new(vec![t0, t1]), &model, 32);
+        assert!((cp.completion_us - 97.0).abs() < 1e-9, "{}", cp.completion_us);
+        let recv = cp.hops.last().unwrap();
+        assert_eq!((recv.rank, recv.from), (1, Some(0)));
+        assert!(recv.waited);
+        assert!((recv.cost_us - 1.0).abs() < 1e-9, "transfer cost {}", recv.cost_us);
+        assert!((recv.wait_us - 96.0).abs() < 1e-9, "wait {}", recv.wait_us);
+        // Local ⊕ hops never wait, and the chain still telescopes.
+        for h in &cp.hops[..cp.hops.len() - 1] {
+            assert_eq!(h.wait_us, 0.0, "round {} rank {}", h.round, h.rank);
+        }
+        // The chain still telescopes: the 96 µs rank 1 waited is the
+        // sender's ⊕ hops on the chain, so it is NOT added again.
+        let total: f64 = cp.hops.iter().map(|h| h.cost_us).sum();
+        assert!((total - cp.completion_us).abs() < 1e-9);
     }
 
     #[test]

@@ -12,7 +12,7 @@
 //! identical outputs, traces and ⊕ counts for every exscan algorithm.
 
 use exscan::coll::{
-    all_exscan_algorithms, seg_bxor_i64, seg_max_i64, seg_sum_i64, ExscanChunked,
+    all_exscan_algorithms, seg_bxor_i64, seg_max_i64, seg_sum_i64, ExscanBlock, ExscanChunked,
     ExscanHierarchical, Seg,
 };
 use exscan::prelude::*;
@@ -151,12 +151,93 @@ fn slice_dispatch_matches_per_element_lifted_segmented() {
     });
 }
 
-/// Every exclusive-scan algorithm in the library, plus variants that
-/// force the multi-chunk and hierarchical paths at these small m.
+/// The prefix-scan kernels (`OpKernel::scan_sharded`, used by the block
+/// and rsag engines' local-scan phase) vs the per-element fold reference:
+/// bit-identical promoted rows and identical application counts (n−1 per
+/// launch) on both dispatch paths.
+fn assert_scan_equiv<T: Elem>(op: &OpRef<T>, rows: &[T], width: usize, n: usize) {
+    let before = op.applications();
+    let mut fast = rows.to_vec();
+    op.kernel().scan_sharded(1, &mut fast, width, n);
+    let mut pe = rows.to_vec();
+    op.kernel_per_element().scan_sharded(2, &mut pe, width, n);
+    assert_eq!(
+        fast,
+        pe,
+        "op {} n {n} width {width}: scan kernel != per-element fold",
+        op.name()
+    );
+    let per_launch = n.saturating_sub(1) as u64;
+    assert_eq!(
+        op.applications(),
+        before + 2 * per_launch,
+        "op {} n {n} width {width}: scan launches must count n−1 each",
+        op.name()
+    );
+}
+
+#[test]
+fn scan_kernels_match_per_element_fold_all_ops() {
+    let mk: Vec<fn() -> OpRef<i64>> = vec![
+        ops::bxor,
+        ops::bor,
+        ops::sum_i64,
+        ops::max_i64,
+        ops::min_i64,
+        || ops::expensive_bxor(16), // no static scan kernel → dyn fallback
+    ];
+    forall(cases(10), |g| {
+        for n in [0usize, 1, 2, 5, 8] {
+            for width in [0usize, 1, 17] {
+                let rows: Vec<i64> = (0..n * width).map(|_| g.i64()).collect();
+                for f in &mk {
+                    assert_scan_equiv(&f(), &rows, width, n);
+                }
+                let urows: Vec<u64> = (0..n * width).map(|_| g.u64()).collect();
+                assert_scan_equiv(&ops::sum_u64(), &urows, width, n);
+                let rrows: Vec<Rec2> = (0..n * width).map(|_| rec2_of(g)).collect();
+                assert_scan_equiv(&ops::rec2_compose(), &rrows, width, n);
+                let srows: Vec<Seg<i64>> =
+                    (0..n * width).map(|_| Seg::new(g.bool(), g.i64())).collect();
+                assert_scan_equiv(&seg_sum_i64(), &srows, width, n);
+            }
+        }
+    });
+}
+
+#[test]
+fn scan_kernel_matches_per_element_fold_f64_bitwise() {
+    // Float prefix sums are the reassociation hazard: the tight-loop
+    // kernel must fold rows in exactly the per-element order, bit for bit.
+    forall(cases(10), |g| {
+        for n in [2usize, 5, 8] {
+            for width in [1usize, 17, 64] {
+                let rows: Vec<f64> =
+                    (0..n * width).map(|_| g.f32_in(-1e6, 1e6) as f64).collect();
+                let op = ops::sum_f64();
+                let mut fast = rows.clone();
+                op.kernel().scan_sharded(0, &mut fast, width, n);
+                let mut pe = rows.clone();
+                op.kernel_per_element().scan_sharded(0, &mut pe, width, n);
+                let fb: Vec<u64> = fast.iter().map(|x| x.to_bits()).collect();
+                let pb: Vec<u64> = pe.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(fb, pb, "sum_f64 scan n {n} width {width}: not bit-identical");
+            }
+        }
+    });
+}
+
+/// Every exclusive-scan algorithm in the library (which now includes the
+/// auto block decomposition and rsag), plus variants that force the
+/// multi-chunk, hierarchical and decomposed-group paths at these small m
+/// (the auto policy would pick g = 1 here, so the forced groups are what
+/// actually exercise the transpose/return phases).
 fn algorithms<T: Elem>() -> Vec<Box<dyn ScanAlgorithm<T>>> {
     let mut algos = all_exscan_algorithms::<T>();
     algos.push(Box::new(ExscanChunked::with_chunk_elems(7)));
     algos.push(Box::new(ExscanHierarchical::new(3)));
+    algos.push(Box::new(ExscanBlock::with_group(2)));
+    algos.push(Box::new(ExscanBlock::with_group(4)));
     algos
 }
 
