@@ -15,7 +15,7 @@ use crate::coll::{
     all_exscan_algorithms, exscan_by_name, select_exscan, ScanAlgorithm, TuningTable,
 };
 use crate::cost::{fit_flat, predict_flat, CostParams, PAPER_TABLE1_36X1, PAPER_TABLE1_36X32};
-use crate::mpi::{ops, run_scan, Topology, WorldConfig};
+use crate::mpi::{ops, run_scan, Topology, TransportBackend, WorldConfig};
 use args::Args;
 
 pub const USAGE: &str = "exscan — exclusive prefix sums (Träff 2025 reproduction)
@@ -32,8 +32,9 @@ COMMANDS:
   calibrate fit the α-β-γ model to the embedded paper data
   predict   closed-form predictions for all algorithms
               --p N  --m N  --ranks-per-node N
-  run       run one algorithm on the real thread transport
+  run       run one algorithm on a real transport backend
               --algo NAME  --p N  --m N  --reps N
+              --transport thread|shm|tcp|uds  (default: thread)
   trace     rounds, ⊕ counts and invariant check for one algorithm
               --algo NAME  --p N  --ranks-per-node N  --m N  --critical
   tune      print the cost-model-driven selection table
@@ -45,6 +46,7 @@ COMMANDS:
               --p LIST    pin exact world sizes (overrides --p-max grid)
               --m LIST    pin exact vector lengths
               --quick     small-p, small-m budget (the CI profile)
+              --transport thread|shm|tcp|uds  (default: thread)
             also runs the pinned pool steady-state and rank-death
             differential checks at the same seed
   serve     multi-tenant scan service demo: N independent small-m exscan
@@ -66,6 +68,10 @@ COMMANDS:
                                 rebuild its worlds live, and the
                                 zero-lost-requests invariant must hold
               --smoke           small deterministic CI budget
+              --transport thread|shm|tcp|uds  (default: thread)
+  transports  list transport backends and probe availability on this host
+              (exit 0; machine-readable `name available|unavailable` lines
+              — CI uses this to gate its backend matrix)
   kernel-smoke  exercise the AOT PJRT kernel path
               --artifacts DIR       (default: artifacts)
   verify-claims run the full evaluation and check every §3 claim
@@ -85,6 +91,7 @@ pub fn run_argv(argv: &[String]) -> Result<()> {
         Some("tune") => cmd_tune(&args),
         Some("fuzz") => cmd_fuzz(&args),
         Some("serve") => cmd_serve(&args),
+        Some("transports") => cmd_transports(),
         Some("kernel-smoke") => cmd_kernel_smoke(&args),
         Some("verify-claims") => cmd_verify_claims(),
         Some("help") | None => {
@@ -93,6 +100,32 @@ pub fn run_argv(argv: &[String]) -> Result<()> {
         }
         Some(other) => bail!("unknown command {other:?}\n{USAGE}"),
     }
+}
+
+/// Parse `--transport` (default `thread`) and probe the backend, so an
+/// unavailable backend fails *here* with an attributed error — before any
+/// world construction — rather than deep inside an engine rebuild.
+fn transport_arg(args: &Args) -> Result<TransportBackend> {
+    let backend: TransportBackend = match args.flag("transport") {
+        None => TransportBackend::Thread,
+        Some(s) => s.parse()?,
+    };
+    backend.probe()?;
+    Ok(backend)
+}
+
+/// `exscan transports`: one `name available|unavailable [reason]` line per
+/// backend. CI's backend matrix greps this to decide which backends the
+/// runner can exercise (shm needs mmap; uds needs unix sockets; tcp needs
+/// a bindable loopback).
+fn cmd_transports() -> Result<()> {
+    for b in TransportBackend::all() {
+        match b.probe() {
+            Ok(()) => println!("{} available", b.name()),
+            Err(e) => println!("{} unavailable ({e:#})", b.name()),
+        }
+    }
+    Ok(())
 }
 
 fn configs(args: &Args) -> Result<Vec<PaperConfig>> {
@@ -211,13 +244,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     let reps: usize = args.get("reps", 20)?;
     let algo: Box<dyn ScanAlgorithm<i64>> =
         exscan_by_name(&name).ok_or_else(|| anyhow!("unknown algorithm {name}"))?;
-    let world = WorldConfig::new(Topology::flat(p));
+    let backend = transport_arg(args)?;
+    let world = WorldConfig::new(Topology::flat(p)).with_transport(backend);
     let bench = BenchConfig { warmups: 3, reps, validate: true };
     let inputs = crate::bench::inputs_i64(p, m, 1);
     let meas =
         crate::bench::measure_exscan(&world, &bench, algo.as_ref(), &ops::bxor(), &inputs)?;
     println!(
-        "{} p={p} m={m}: min {:.2} µs, mean {:.2} µs (±{:.2}), {} reps — output verified",
+        "{} p={p} m={m} transport={backend}: min {:.2} µs, mean {:.2} µs (±{:.2}), \
+         {} reps — output verified",
         meas.algo, meas.min_us, meas.mean_us, meas.stddev_us, meas.reps
     );
     Ok(())
@@ -353,13 +388,14 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
     let default_ms: Vec<usize> =
         if quick { vec![0, 1, 17, 1024] } else { vec![0, 1, 17, 4096] };
     let m_values = args.get_list("m", &default_ms)?;
+    let backend = transport_arg(args)?;
 
     println!(
-        "chaos fuzz: seed={seed}, p ∈ {p_values:?}, m ∈ {m_values:?} \
-         (all exscan algorithms × {{bxor_i64, sum_i64, rec2_compose, \
-         seg_bxor_i64, seg_sum_i64}})"
+        "chaos fuzz: seed={seed}, p ∈ {p_values:?}, m ∈ {m_values:?}, \
+         transport={backend} (all exscan algorithms × {{bxor_i64, sum_i64, \
+         rec2_compose, seg_bxor_i64, seg_sum_i64}})"
     );
-    let out = crate::coll::validate::chaos_fuzz(seed, &p_values, &m_values);
+    let out = crate::coll::validate::chaos_fuzz_on(backend, seed, &p_values, &m_values);
     println!(
         "{} cases; injected: {} delayed, {} diverted, {} yields, {} dropped \
          (schedule digest {:#018x})",
@@ -389,9 +425,14 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
             println!("FAIL {f}");
         }
         bail!(
-            "{} chaos-fuzz failure(s); reproduce with `exscan fuzz --seed {seed}{}`",
+            "{} chaos-fuzz failure(s); reproduce with `exscan fuzz --seed {seed}{}{}`",
             out.failures.len() + usize::from(pool.is_err()) + usize::from(rd.is_err()),
-            if quick { " --quick" } else { "" }
+            if quick { " --quick" } else { "" },
+            if backend == TransportBackend::Thread {
+                String::new()
+            } else {
+                format!(" --transport {backend}")
+            }
         )
     }
 }
@@ -460,11 +501,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         anyhow::ensure!(r < p, "--kill-rank {r} out of range for p={p}");
     }
 
-    let mut cfg = EngineConfig::new(p).with_algo(&algo).with_policy(BatchPolicy {
-        window: Duration::from_micros(window_us),
-        max_batch,
-        ..Default::default()
-    });
+    let backend = transport_arg(args)?;
+    let mut cfg = EngineConfig::new(p)
+        .with_algo(&algo)
+        .with_transport(backend)
+        .with_policy(BatchPolicy {
+            window: Duration::from_micros(window_us),
+            max_batch,
+            ..Default::default()
+        });
     let mut chaos = chaos_seed.map(ChaosConfig::new);
     if let Some(r) = kill_rank {
         // Without --chaos-seed the death is the *only* injected fault
@@ -484,7 +529,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let engine = ScanEngine::<i64>::new(cfg).map_err(|e| anyhow!("{e}"))?;
     println!(
         "scan service: {requests} requests × {waves} wave(s), p={p}, m={m}, algo={algo}, \
-         window={window_us}µs, max-batch={max_batch}{}{}",
+         transport={backend}, window={window_us}µs, max-batch={max_batch}{}{}",
         match chaos_seed {
             Some(s) => format!(", chaos seed {s}"),
             None => String::new(),

@@ -40,6 +40,22 @@ impl<T: Elem> Elem for Seg<T> {
     fn filler() -> Self {
         Seg { flag: false, val: T::filler() }
     }
+
+    // Wire form: one flag byte (0/1) + the inner element. The in-memory
+    // struct may pad the bool; the explicit encoding never ships padding,
+    // so segmented scans run over the shm/socket backends too.
+    fn wire_bytes() -> usize {
+        1 + T::wire_bytes()
+    }
+
+    fn write_wire(&self, out: &mut Vec<u8>) {
+        out.push(self.flag as u8);
+        self.val.write_wire(out);
+    }
+
+    fn read_wire(bytes: &[u8]) -> Self {
+        Seg { flag: bytes[0] != 0, val: T::read_wire(&bytes[1..]) }
+    }
 }
 
 /// The lifted operator over a scalar combine function.

@@ -26,7 +26,9 @@ use super::{
     ExscanMpich, ExscanOneDoubling, ExscanRsag, ExscanShiftScan, ExscanTwoOp, PipelinedChain,
     ScanAlgorithm,
 };
-use crate::mpi::{ops, ChaosConfig, Comm, Elem, OpRef, Rec2, Topology, World, WorldConfig};
+use crate::mpi::{
+    ops, ChaosConfig, Comm, Elem, OpRef, Rec2, Topology, TransportBackend, World, WorldConfig,
+};
 use crate::trace::{check_all, RankTrace, TraceReport};
 use crate::util::bits::{rounds_123, rounds_one_doubling};
 use crate::util::ceil_log2;
@@ -350,6 +352,7 @@ fn oracle_check_rec2(
 /// × m, chaos run differentially checked against the clean run, the
 /// oracle and the closed-form counts.
 fn fuzz_world<T: Elem>(
+    backend: TransportBackend,
     seed: u64,
     p: usize,
     m_values: &[usize],
@@ -364,11 +367,17 @@ fn fuzz_world<T: Elem>(
         World::new(
             WorldConfig::new(Topology::flat(p))
                 .with_trace(true)
+                .with_transport(backend)
                 .with_chaos(ChaosConfig::new(chaos_seed)),
         )
     };
-    let mk_clean =
-        || -> World<T> { World::new(WorldConfig::new(Topology::flat(p)).with_trace(true)) };
+    let mk_clean = || -> World<T> {
+        World::new(
+            WorldConfig::new(Topology::flat(p))
+                .with_trace(true)
+                .with_transport(backend),
+        )
+    };
     // Fold a (possibly about-to-be-replaced) chaos world's injection
     // totals into the outcome.
     fn absorb<T: Elem>(world: &World<T>, out: &mut FuzzOutcome) {
@@ -515,9 +524,26 @@ fn fuzz_world<T: Elem>(
 /// if any algorithm mis-ordered a fold. Failures are collected (not
 /// panicked) so the CLI can print them with the repro seed.
 pub fn chaos_fuzz(seed: u64, p_values: &[usize], m_values: &[usize]) -> FuzzOutcome {
+    chaos_fuzz_on(TransportBackend::Thread, seed, p_values, m_values)
+}
+
+/// [`chaos_fuzz`] on an explicit transport backend. The chaos layer sits
+/// above the transport boundary (decisions are made in `RankCtx::post` and
+/// shipped inside the frame), so for a given seed the injected schedule —
+/// and therefore `schedule_digest` and every injection counter — must be
+/// **bit-identical across backends**. The backend-oracle test
+/// (`tests/backend_matrix.rs`) asserts exactly that against the thread
+/// world.
+pub fn chaos_fuzz_on(
+    backend: TransportBackend,
+    seed: u64,
+    p_values: &[usize],
+    m_values: &[usize],
+) -> FuzzOutcome {
     let mut out = FuzzOutcome::default();
     for &p in p_values {
         fuzz_world::<i64>(
+            backend,
             seed,
             p,
             m_values,
@@ -527,6 +553,7 @@ pub fn chaos_fuzz(seed: u64, p_values: &[usize], m_values: &[usize]) -> FuzzOutc
             &mut out,
         );
         fuzz_world::<Rec2>(
+            backend,
             seed,
             p,
             m_values,
@@ -536,6 +563,7 @@ pub fn chaos_fuzz(seed: u64, p_values: &[usize], m_values: &[usize]) -> FuzzOutc
             &mut out,
         );
         fuzz_world::<Seg<i64>>(
+            backend,
             seed,
             p,
             m_values,

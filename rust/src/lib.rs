@@ -67,7 +67,8 @@ pub mod prelude {
     pub use crate::cost::{CostModel, CostParams, LinkClass};
     pub use crate::mpi::{
         ops, run_scan, ChaosConfig, ChaosReport, CombineOp, Comm, Elem, OpKernel, OpRef,
-        PoolStats, RankCtx, Rec2, RunResult, TagKey, Topology, World, WorldConfig,
+        PoolStats, RankCtx, Rec2, RunResult, TagKey, Topology, TransportBackend, World,
+        WorldConfig,
     };
     pub use crate::svc::{
         BatchPolicy, EngineConfig, ReqOp, ScanEngine, ScanHandle, ScanRequest, SvcError,

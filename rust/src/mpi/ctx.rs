@@ -8,12 +8,16 @@
 //! deterministic, cluster-scale simulation (LogP-style) with the exact same
 //! message flow.
 //!
-//! Transport hot path (EXPERIMENTS.md §Perf): sends copy into a buffer
-//! recycled through the sending rank's [`BufferPool`] (no allocation in
-//! steady state) and deposit into the receiver's slot-keyed
-//! [`Inbox`](super::inbox::Inbox) (no shared MPMC lock, no linear
-//! matching scan). `recv_owned` hands the pooled buffer straight to the
-//! algorithm; dropping it recycles the buffer.
+//! Transport hot path (EXPERIMENTS.md §Perf, §Transport): sends copy into
+//! a buffer recycled through the sending rank's [`BufferPool`] (no
+//! allocation in steady state) and post through the world's pluggable
+//! [`Transport`] — the thread backend deposits straight into the
+//! receiver's slot-keyed [`Inbox`](super::inbox::Inbox) (no shared MPMC
+//! lock, no linear matching scan); the shm/socket backends frame the
+//! message over their medium into the same matcher. `recv_owned` hands
+//! the pooled buffer straight to the algorithm; dropping it recycles the
+//! buffer. Chaos decisions are made *here*, above the transport boundary,
+//! so injected schedules and digests are backend-independent.
 //!
 //! Compute hot path (this PR): the fused primitives
 //! [`recv_reduce`](RankCtx::recv_reduce) /
@@ -52,10 +56,11 @@ use anyhow::{bail, Result};
 use super::chaos::{Chaos, ChaosAction};
 use super::comm::{Comm, TagKey, WORLD_CTX};
 use super::elem::Elem;
-use super::inbox::{Inbox, InboxStats};
+use super::inbox::InboxStats;
 use super::msg::Msg;
 use super::op::{OpKernel, OpRef};
 use super::pool::{BufferPool, PoolBuf, PoolStats};
+use super::transport::Transport;
 use super::vbarrier::VBarrier;
 use super::world::DeadRanks;
 use crate::cost::CostModel;
@@ -105,8 +110,10 @@ pub struct RankCtx<T: Elem> {
     /// Sub-round lane id stamped into every [`TagKey`] (0 outside a
     /// [`with_chunk`](Self::with_chunk) scope).
     tag_chunk: u16,
-    /// `inboxes[r]` is rank r's inbox; this rank matches on `inboxes[rank]`.
-    inboxes: Arc<Vec<Inbox<T>>>,
+    /// The world's rendezvous backend: posts address the destination
+    /// rank's matcher, takes match on this rank's (`transport.take(rank,
+    /// …)`). All ranks of a world share one instance.
+    transport: Arc<dyn Transport<T>>,
     /// This rank's send-buffer pool (buffers recycle back here when the
     /// receiver drops them).
     pool: Arc<BufferPool<T>>,
@@ -156,7 +163,7 @@ impl<T: Elem> RankCtx<T> {
     pub(crate) fn new(
         rank: usize,
         size: usize,
-        inboxes: Arc<Vec<Inbox<T>>>,
+        transport: Arc<dyn Transport<T>>,
         pool: Arc<BufferPool<T>>,
         barrier: Arc<VBarrier>,
         mode: ClockMode,
@@ -175,7 +182,7 @@ impl<T: Elem> RankCtx<T> {
             vsize: size,
             tag_ctx: WORLD_CTX,
             tag_chunk: 0,
-            inboxes,
+            transport,
             pool,
             pending: Vec::new(),
             barrier,
@@ -207,8 +214,8 @@ impl<T: Elem> RankCtx<T> {
     /// `barrier` — a rank absent from `VBarrier::wait` would hang the
     /// whole world, so a dead rank keeps attending barriers and only its
     /// point-to-point traffic fails). On the first firing the rank
-    /// registers in the world's [`DeadRanks`] set and poisons **every**
-    /// inbox so all blocked survivors wake immediately and attribute.
+    /// registers in the world's [`DeadRanks`] set and poisons the whole
+    /// transport so all blocked survivors wake immediately and attribute.
     fn ensure_alive(&mut self) -> Result<()> {
         if self.is_dead {
             bail!("rank {} is dead (chaos rank-death)", self.rank);
@@ -221,9 +228,7 @@ impl<T: Elem> RankCtx<T> {
         if self.dead.mark_dead(self.rank) {
             chaos.note_death();
         }
-        for inbox in self.inboxes.iter() {
-            inbox.poison();
-        }
+        self.transport.poison_all();
         bail!(
             "rank {} killed by chaos rank-death at tick {}",
             self.rank,
@@ -374,7 +379,7 @@ impl<T: Elem> RankCtx<T> {
     /// the adaptive-rendezvous observability used by the hotpath latency
     /// sweep.
     pub fn inbox_stats(&self) -> InboxStats {
-        self.inboxes[self.rank].stats()
+        self.transport.stats(self.rank)
     }
 
     /// Resolve `op` to its dispatch kernel for this collective, honouring
@@ -419,10 +424,11 @@ impl<T: Elem> RankCtx<T> {
             vtime: self.vclock,
         };
         match self.chaos.as_ref().map(|c| c.plan_message(self.rank, to, tag)) {
-            None | Some(ChaosAction::Deliver) => self.inboxes[to].deposit(msg),
-            Some(ChaosAction::Delay { micros }) => self.inboxes[to]
-                .deposit_delayed(msg, Instant::now() + Duration::from_micros(micros)),
-            Some(ChaosAction::Divert) => self.inboxes[to].deposit_overflow(msg),
+            None | Some(ChaosAction::Deliver) => self.transport.post(to, msg),
+            Some(ChaosAction::Delay { micros }) => self
+                .transport
+                .post_delayed(to, msg, Instant::now() + Duration::from_micros(micros)),
+            Some(ChaosAction::Divert) => self.transport.post_overflow(to, msg),
             // Fault injection: the message is lost. The matching receive
             // surfaces it as a per-world recv_timeout error naming
             // (rank, round, src) — see tests/chaos_sweep.rs.
@@ -454,7 +460,7 @@ impl<T: Elem> RankCtx<T> {
                     self.dead.list()
                 );
             }
-            match self.inboxes[self.rank].recv_match(from, tag, &mut self.pending, deadline) {
+            match self.transport.take(self.rank, from, tag, &mut self.pending, deadline) {
                 Some(msg) => return Ok(msg),
                 None => {
                     // None is overloaded: poison wake-up (a rank died — the
@@ -471,14 +477,18 @@ impl<T: Elem> RankCtx<T> {
                     }
                     if self.tag_ctx == WORLD_CTX {
                         bail!(
-                            "rank {} deadlocked waiting for (from={from}, round={round})",
-                            self.rank
+                            "rank {} deadlocked waiting for (from={from}, round={round}) \
+                             [transport={}]",
+                            self.rank,
+                            self.transport.name()
                         );
                     }
                     bail!(
-                        "rank {} deadlocked waiting for (from={from}, round={round}) on ctx={}",
+                        "rank {} deadlocked waiting for (from={from}, round={round}) on ctx={} \
+                         [transport={}]",
                         self.rank,
-                        self.tag_ctx
+                        self.tag_ctx,
+                        self.transport.name()
                     );
                 }
             }

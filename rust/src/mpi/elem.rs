@@ -49,6 +49,41 @@ pub trait Elem: Copy + Clone + Send + Sync + std::fmt::Debug + PartialEq + 'stat
     fn size_bytes() -> usize {
         std::mem::size_of::<Self>()
     }
+
+    /// Bytes of one element's **wire encoding** — the padding-free
+    /// little-endian form the cross-process transports (shm rings, socket
+    /// frames) ship. Distinct from [`size_bytes`](Self::size_bytes): the
+    /// in-memory layout may carry padding (e.g. `Seg<T>` packs its `bool`
+    /// flag into one byte on the wire), and the encoding is explicit per
+    /// field so no uninitialized padding bytes are ever read.
+    fn wire_bytes() -> usize;
+
+    /// Append this element's wire encoding (exactly
+    /// [`wire_bytes`](Self::wire_bytes) bytes) to `out`.
+    fn write_wire(&self, out: &mut Vec<u8>);
+
+    /// Decode one element from `bytes[..Self::wire_bytes()]`. Callers
+    /// guarantee the slice is at least that long (the frame codec
+    /// length-checks payloads before decoding).
+    fn read_wire(bytes: &[u8]) -> Self;
+}
+
+/// The scalar impls share one shape: `to_le_bytes`/`from_le_bytes` over
+/// the full in-memory width (no padding to skip).
+macro_rules! scalar_wire {
+    () => {
+        fn wire_bytes() -> usize {
+            std::mem::size_of::<Self>()
+        }
+        fn write_wire(&self, out: &mut Vec<u8>) {
+            out.extend_from_slice(&self.to_le_bytes());
+        }
+        fn read_wire(bytes: &[u8]) -> Self {
+            let mut raw = [0u8; std::mem::size_of::<Self>()];
+            raw.copy_from_slice(&bytes[..std::mem::size_of::<Self>()]);
+            Self::from_le_bytes(raw)
+        }
+    };
 }
 
 impl Elem for i64 {
@@ -56,6 +91,7 @@ impl Elem for i64 {
     fn filler() -> Self {
         0
     }
+    scalar_wire!();
 }
 
 impl Elem for u64 {
@@ -63,6 +99,7 @@ impl Elem for u64 {
     fn filler() -> Self {
         0
     }
+    scalar_wire!();
 }
 
 impl Elem for f32 {
@@ -70,6 +107,7 @@ impl Elem for f32 {
     fn filler() -> Self {
         0.0
     }
+    scalar_wire!();
 }
 
 impl Elem for f64 {
@@ -77,6 +115,7 @@ impl Elem for f64 {
     fn filler() -> Self {
         0.0
     }
+    scalar_wire!();
 }
 
 /// Element of the 2x2 affine linear recurrence `x_i = A_i x_{i-1} + b_i`.
@@ -133,6 +172,25 @@ impl Elem for Rec2 {
     fn filler() -> Self {
         Rec2::identity()
     }
+    fn wire_bytes() -> usize {
+        24 // 6 × f32, field by field — repr(Rust) offers no layout promise
+    }
+    fn write_wire(&self, out: &mut Vec<u8>) {
+        for v in self.a {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in self.b {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fn read_wire(bytes: &[u8]) -> Self {
+        let f = |i: usize| {
+            let mut raw = [0u8; 4];
+            raw.copy_from_slice(&bytes[i * 4..i * 4 + 4]);
+            f32::from_le_bytes(raw)
+        };
+        Rec2 { a: [f(0), f(1), f(2), f(3)], b: [f(4), f(5)] }
+    }
 }
 
 #[cfg(test)]
@@ -144,6 +202,21 @@ mod tests {
         assert_eq!(i64::size_bytes(), 8);
         assert_eq!(f32::size_bytes(), 4);
         assert_eq!(Rec2::size_bytes(), 24);
+    }
+
+    #[test]
+    fn wire_roundtrip_every_elem() {
+        fn rt<T: Elem>(v: T) {
+            let mut buf = Vec::new();
+            v.write_wire(&mut buf);
+            assert_eq!(buf.len(), T::wire_bytes());
+            assert_eq!(T::read_wire(&buf), v);
+        }
+        rt(-37i64);
+        rt(u64::MAX - 3);
+        rt(1.5f32);
+        rt(-0.25f64);
+        rt(Rec2::new([1.0, -2.0, 3.5, 0.0], [9.0, -1.0]));
     }
 
     #[test]

@@ -1,7 +1,11 @@
-//! The message-passing substrate: an MPI-flavoured, typed, thread-backed
-//! communication layer with two interchangeable clock modes.
+//! The message-passing substrate: an MPI-flavoured, typed communication
+//! layer with two interchangeable clock modes and a **pluggable
+//! rendezvous transport** — worlds run over in-process thread inboxes,
+//! shared-memory rings, or socket meshes, selected per world.
 //!
-//! * [`elem`] — element types (`MPI_Datatype` analogue), incl. [`Rec2`].
+//! * [`elem`] — element types (`MPI_Datatype` analogue), incl. [`Rec2`];
+//!   every element also defines a padding-free little-endian **wire
+//!   encoding** used by the cross-process transports.
 //! * [`op`] — associative operators (`MPI_Op` + `MPI_Reduce_local`) with
 //!   per-rank sharded application counters and the [`OpKernel`] slice
 //!   dispatch engine (resolved once per collective).
@@ -9,16 +13,34 @@
 //!   and the packed [`TagKey`] that match-isolates concurrent collectives.
 //! * [`ctx`] — the per-rank API: `send`/`recv`/`sendrecv`/`reduce_local`
 //!   plus the fused `recv_reduce`/`sendrecv_reduce` compute hot path and
-//!   communicator scoping (`with_comm`/`with_chunk`).
+//!   communicator scoping (`with_comm`/`with_chunk`). Chaos decisions are
+//!   made here, **above** the transport boundary, so injected schedules
+//!   and digests are backend-independent by construction.
 //! * [`pool`] — recycling per-rank buffer pools (zero-allocation sends).
-//! * [`inbox`] — slot-keyed rendezvous matching (no MPMC lock, no scan).
+//! * [`transport`] — the [`Transport`](transport::Transport) boundary
+//!   (post / matched take / poison-wake, pooled-buffer lease semantics)
+//!   and the [`TransportBackend`] selector. Three backends:
+//!   * **thread** ([`inbox`]) — the slot-keyed rendezvous matcher (no
+//!     MPMC lock, no scan; adaptive per-slot EMA spin budget). The
+//!     default, and the oracle every other backend is differentially
+//!     verified against.
+//!   * **shm** ([`shm`]) — per-(src, dst) SPSC byte rings in one
+//!     `MAP_SHARED` mmap'd segment; checksummed frames ([`wire`]),
+//!     drained into the same inbox matcher with the same
+//!     (src, ctx, chunk, round) keying.
+//!   * **tcp / uds** ([`socket`]) — loopback TCP or Unix-domain stream
+//!     mesh with per-peer send/recv threads feeding the inbox matcher;
+//!     length-prefixed, versioned, checksummed frames.
 //! * [`world`] — topology, the one-shot [`run_world`]/[`run_scan`] entry
-//!   points and the persistent [`World`] executor.
+//!   points and the persistent [`World`] executor;
+//!   [`WorldConfig::with_transport`] selects the backend.
 //! * [`chaos`] — seeded deterministic fault injection (message embargo,
 //!   slot diversion, scheduler yields, pool pressure, targeted drops, and
 //!   scheduled **rank death** with poison-wake attribution via
 //!   [`World::dead_ranks`]) for the differential self-verification
-//!   harness (EXPERIMENTS.md §Chaos, §Robustness).
+//!   harness. The chaos layer wraps **any** backend verbatim — same
+//!   seeds, same XOR digests, same trace invariants (EXPERIMENTS.md
+//!   §Chaos, §Robustness, §Transport).
 //!
 //! Real MPI is deliberately *not* a dependency: the paper's claims are
 //! about round structure and ⊕ counts, which this substrate reproduces
@@ -33,7 +55,11 @@ pub(crate) mod inbox;
 pub mod msg;
 pub mod op;
 pub mod pool;
+pub(crate) mod shm;
+pub(crate) mod socket;
+pub(crate) mod transport;
 pub mod vbarrier;
+pub(crate) mod wire;
 pub mod world;
 
 pub use chaos::{ChaosAction, ChaosConfig, ChaosEvent, ChaosReport};
@@ -43,6 +69,7 @@ pub use elem::{Dtype, Elem, Rec2};
 pub use inbox::InboxStats;
 pub use op::{kernels, ops, CombineOp, FnOp, OpKernel, OpRef, ScanKernelFn, SliceKernelFn};
 pub use pool::{PoolBuf, PoolStats};
+pub use transport::TransportBackend;
 pub use world::{
     rank_threads_spawned, run_scan, run_world, RunResult, Topology, World, WorldConfig,
 };

@@ -1,4 +1,6 @@
-//! In-flight message envelope used by both transports.
+//! In-flight message envelope used by every transport backend: thread
+//! inboxes carry it directly; shm and socket backends serialize it into a
+//! [`wire`](super::wire) frame and rebuild it on the receiving side.
 
 use super::pool::PoolBuf;
 

@@ -1,0 +1,478 @@
+//! Shared-memory transport backend: per-(src, dst) SPSC byte rings laid
+//! out in one `MAP_SHARED | MAP_ANONYMOUS` mmap'd segment, carrying
+//! [`wire`](super::wire)-encoded frames.
+//!
+//! ## Layout
+//!
+//! ```text
+//! segment := seg_header (128 B: poison flag + reserved)
+//!          ∥ p² × channel,  channel (src, dst) at index src·p + dst
+//! channel := head (AtomicU64, own 128-B line)   — consumer cursor
+//!          ∥ tail (AtomicU64, own 128-B line)   — producer cursor
+//!          ∥ ring data (RING_CAP bytes, power of two)
+//! ```
+//!
+//! `head`/`tail` are monotonically increasing byte counters (index =
+//! counter & (RING_CAP − 1), wrap by split copy). The producer copies the
+//! whole frame **before** its single `Release` store of `tail`, so the
+//! consumer can never observe a partial frame; the consumer advances
+//! `head` with a `Release` store only after copying the frame out. One
+//! producer per channel (the sending rank's thread), one consumer (the
+//! receiving rank's thread — the executor pins one thread per rank).
+//!
+//! ## Matching
+//!
+//! The segment only moves bytes. Each rank keeps a process-local slot
+//! [`Inbox`] as its matcher: [`ShmTransport::take`] alternates draining
+//! the rank's p incoming rings (decode, verify checksum, deposit through
+//! the same `deposit`/`deposit_delayed`/`deposit_overflow` entry points
+//! the thread backend uses — the frame's `kind` byte carries the sender's
+//! chaos decision) with short-sliced `recv_match` waits, so the
+//! (src, ctx, chunk, round) slot keying, overflow and embargo semantics
+//! are byte-for-byte the inbox's own. A ring write does not wake a parked
+//! receiver, so waits are sliced at [`DRAIN_SLICE`]; that bounds the
+//! added rendezvous latency, and the cross-backend differential suite
+//! verifies outputs/digests/traces are unaffected.
+//!
+//! The anonymous shared mapping is inherited across `fork`, and all
+//! transport state that crosses the rendezvous boundary (cursors, poison
+//! flag, frames) lives inside the segment — the matcher inboxes are
+//! per-process caches of in-flight frames, so a forked multi-process
+//! world needs no additional shared state. In-process worlds (this
+//! crate's executors) run one thread per rank over the same segment.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::elem::Elem;
+use super::inbox::{Inbox, InboxStats};
+use super::msg::Msg;
+use super::pool::PoolBuf;
+use super::transport::Transport;
+use super::wire::{
+    decode_header, decode_payload, encode_frame, verify_payload, FrameKind, HEADER_BYTES,
+};
+
+/// Ring capacity per directed channel, bytes (power of two). Bounds the
+/// largest frame a channel can carry: `HEADER_BYTES + payload` must fit.
+/// 1 MiB covers every registered workload up to m = 65536 × i64 with
+/// room; larger messages belong on the thread backend (the error names
+/// this constant).
+const RING_CAP: usize = 1 << 20;
+/// Mask for cursor → ring index (RING_CAP is a power of two).
+const RING_MASK: u64 = (RING_CAP as u64) - 1;
+/// Segment header: one cache line holding the poison flag.
+const SEG_HEADER: usize = 128;
+/// Channel header: head and tail on their own 128-byte lines.
+const CH_HEADER: usize = 256;
+/// Byte stride of one channel inside the segment.
+const CH_STRIDE: usize = CH_HEADER + RING_CAP;
+/// Receive waits are sliced at this period so the consumer keeps
+/// draining its rings while blocked (ring writes cannot wake a parked
+/// inbox receiver).
+const DRAIN_SLICE: Duration = Duration::from_micros(100);
+/// On entry to a blocking take, poll spin-only (no park) for this long
+/// before falling back to parked slices — keeps the in-window rendezvous
+/// latency near the thread backend's.
+const HOT_POLL: Duration = Duration::from_micros(300);
+
+#[cfg(any(target_os = "linux", target_os = "android", target_os = "macos"))]
+mod sys {
+    use core::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const PROT_WRITE: i32 = 2;
+    pub const MAP_SHARED: i32 = 0x01;
+    #[cfg(any(target_os = "linux", target_os = "android"))]
+    pub const MAP_ANONYMOUS: i32 = 0x20;
+    #[cfg(target_os = "macos")]
+    pub const MAP_ANONYMOUS: i32 = 0x1000;
+
+    // Self-declared bindings (the workspace deliberately has no libc
+    // dependency); signatures match POSIX.
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+/// Probe whether this host can construct the shm backend (maps and
+/// unmaps one page). Attributed error otherwise.
+pub fn probe() -> Result<()> {
+    #[cfg(any(target_os = "linux", target_os = "android", target_os = "macos"))]
+    {
+        let len = 4096usize;
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ | sys::PROT_WRITE,
+                sys::MAP_SHARED | sys::MAP_ANONYMOUS,
+                -1,
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            bail!(
+                "transport backend 'shm' unavailable: mmap(MAP_SHARED|MAP_ANONYMOUS) failed \
+                 (errno via OS): {}",
+                std::io::Error::last_os_error()
+            );
+        }
+        unsafe { sys::munmap(ptr, len) };
+        Ok(())
+    }
+    #[cfg(not(any(target_os = "linux", target_os = "android", target_os = "macos")))]
+    {
+        bail!("transport backend 'shm' unavailable: no mmap bindings for this OS")
+    }
+}
+
+/// Owns the mapped segment; unmapped on drop.
+struct Segment {
+    base: *mut u8,
+    len: usize,
+}
+
+// The raw pointer is into a MAP_SHARED mapping private to this transport;
+// all concurrent access goes through the atomics and the SPSC publish
+// protocol documented above.
+unsafe impl Send for Segment {}
+unsafe impl Sync for Segment {}
+
+impl Segment {
+    fn map(len: usize) -> Result<Segment> {
+        #[cfg(any(target_os = "linux", target_os = "android", target_os = "macos"))]
+        {
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ | sys::PROT_WRITE,
+                    sys::MAP_SHARED | sys::MAP_ANONYMOUS,
+                    -1,
+                    0,
+                )
+            };
+            if ptr as isize == -1 {
+                bail!(
+                    "transport backend 'shm' unavailable: mmap of {len} bytes failed: {}",
+                    std::io::Error::last_os_error()
+                );
+            }
+            // Anonymous mappings are zero-filled: cursors and the poison
+            // flag start at 0 with no extra initialization.
+            Ok(Segment { base: ptr as *mut u8, len })
+        }
+        #[cfg(not(any(target_os = "linux", target_os = "android", target_os = "macos")))]
+        {
+            let _ = len;
+            bail!("transport backend 'shm' unavailable: no mmap bindings for this OS")
+        }
+    }
+}
+
+impl Drop for Segment {
+    fn drop(&mut self) {
+        #[cfg(any(target_os = "linux", target_os = "android", target_os = "macos"))]
+        unsafe {
+            sys::munmap(self.base as *mut core::ffi::c_void, self.len);
+        }
+    }
+}
+
+/// The shared-memory backend. See the module docs for the protocol.
+pub(crate) struct ShmTransport<T> {
+    seg: Segment,
+    p: usize,
+    /// Per-rank process-local matchers (identical machinery to the
+    /// thread backend; frames land here once drained from the rings).
+    inboxes: Vec<Inbox<T>>,
+}
+
+impl<T: Elem> ShmTransport<T> {
+    pub fn new(p: usize, fixed_spin: bool) -> Result<Self> {
+        let len = SEG_HEADER + p * p * CH_STRIDE;
+        let seg = Segment::map(len)?;
+        Ok(ShmTransport {
+            seg,
+            p,
+            inboxes: (0..p).map(|_| Inbox::new_with(fixed_spin)).collect(),
+        })
+    }
+
+    /// The segment-resident poison flag (cache line 0).
+    fn poison_flag(&self) -> &AtomicU64 {
+        unsafe { &*(self.seg.base as *const AtomicU64) }
+    }
+
+    fn channel_base(&self, src: usize, dst: usize) -> *mut u8 {
+        debug_assert!(src < self.p && dst < self.p);
+        unsafe { self.seg.base.add(SEG_HEADER + (src * self.p + dst) * CH_STRIDE) }
+    }
+
+    fn cursors(&self, src: usize, dst: usize) -> (&AtomicU64, &AtomicU64) {
+        let base = self.channel_base(src, dst);
+        unsafe { (&*(base as *const AtomicU64), &*(base.add(128) as *const AtomicU64)) }
+    }
+
+    fn ring_ptr(&self, src: usize, dst: usize) -> *mut u8 {
+        unsafe { self.channel_base(src, dst).add(CH_HEADER) }
+    }
+
+    /// Copy `bytes` into the ring at absolute cursor `at` (split on wrap).
+    fn ring_copy_in(&self, src: usize, dst: usize, at: u64, bytes: &[u8]) {
+        let ring = self.ring_ptr(src, dst);
+        let idx = (at & RING_MASK) as usize;
+        let first = bytes.len().min(RING_CAP - idx);
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), ring.add(idx), first);
+            if first < bytes.len() {
+                std::ptr::copy_nonoverlapping(
+                    bytes.as_ptr().add(first),
+                    ring,
+                    bytes.len() - first,
+                );
+            }
+        }
+    }
+
+    /// Copy `out.len()` bytes out of the ring at absolute cursor `at`.
+    fn ring_copy_out(&self, src: usize, dst: usize, at: u64, out: &mut [u8]) {
+        let ring = self.ring_ptr(src, dst);
+        let idx = (at & RING_MASK) as usize;
+        let first = out.len().min(RING_CAP - idx);
+        unsafe {
+            std::ptr::copy_nonoverlapping(ring.add(idx), out.as_mut_ptr(), first);
+            if first < out.len() {
+                std::ptr::copy_nonoverlapping(
+                    ring,
+                    out.as_mut_ptr().add(first),
+                    out.len() - first,
+                );
+            }
+        }
+    }
+
+    /// Producer side: block (spin + yield) until the channel has room,
+    /// then publish the frame with one Release store of `tail`. Frames
+    /// are dropped silently once the transport is poisoned (the world is
+    /// tearing down; receivers are already waking attributed).
+    fn ring_write(&self, src: usize, dst: usize, frame: &[u8]) {
+        assert!(
+            frame.len() <= RING_CAP,
+            "shm transport: {}-byte frame exceeds the {}-byte ring capacity \
+             (src={src} dst={dst}); use the thread backend for messages this large \
+             or raise shm::RING_CAP",
+            frame.len(),
+            RING_CAP
+        );
+        let (head, tail) = self.cursors(src, dst);
+        let t = tail.load(Ordering::Relaxed); // sole producer: own cursor
+        loop {
+            let h = head.load(Ordering::Acquire);
+            let free = RING_CAP as u64 - (t - h);
+            if free >= frame.len() as u64 {
+                break;
+            }
+            if self.poison_flag().load(Ordering::Acquire) != 0 {
+                return; // dropped on the floor: world death in progress
+            }
+            std::hint::spin_loop();
+            std::thread::yield_now();
+        }
+        self.ring_copy_in(src, dst, t, frame);
+        tail.store(t + frame.len() as u64, Ordering::Release);
+    }
+
+    /// Consumer side: drain every complete frame addressed to rank `me`
+    /// into its local inbox. Sole consumer of channels (*, me).
+    fn drain(&self, me: usize) {
+        let mut header = [0u8; HEADER_BYTES];
+        for src in 0..self.p {
+            let (head, tail) = self.cursors(src, me);
+            loop {
+                let h = head.load(Ordering::Relaxed); // sole consumer
+                let t = tail.load(Ordering::Acquire);
+                let avail = t - h;
+                if avail < HEADER_BYTES as u64 {
+                    break; // producer publishes whole frames: nothing here
+                }
+                self.ring_copy_out(src, me, h, &mut header);
+                let fh = decode_header(&header).unwrap_or_else(|e| {
+                    panic!("shm transport: corrupt frame header in channel {src}→{me}: {e:#}")
+                });
+                let total = (HEADER_BYTES + fh.payload_len) as u64;
+                debug_assert!(avail >= total, "partial frame published");
+                let mut payload = vec![0u8; fh.payload_len];
+                self.ring_copy_out(src, me, h + HEADER_BYTES as u64, &mut payload);
+                verify_payload(&header, &payload).unwrap_or_else(|e| {
+                    panic!("shm transport: corrupt frame in channel {src}→{me}: {e:#}")
+                });
+                head.store(h + total, Ordering::Release);
+                let data: Vec<T> = decode_payload(&fh, &payload).unwrap_or_else(|e| {
+                    panic!("shm transport: undecodable payload in channel {src}→{me}: {e:#}")
+                });
+                let msg = Msg {
+                    src: fh.src,
+                    tag: fh.tag,
+                    data: PoolBuf::detached(data),
+                    vtime: fh.vtime,
+                };
+                match fh.kind {
+                    FrameKind::Deliver => self.inboxes[me].deposit(msg),
+                    FrameKind::Delayed => self.inboxes[me].deposit_delayed(
+                        msg,
+                        Instant::now() + Duration::from_micros(fh.delay_micros),
+                    ),
+                    FrameKind::Overflow => self.inboxes[me].deposit_overflow(msg),
+                }
+            }
+        }
+    }
+
+    fn send_frame(&self, to: usize, kind: FrameKind, delay_micros: u64, msg: Msg<T>) {
+        let frame = encode_frame(kind, msg.src, to, msg.tag, delay_micros, msg.vtime, &msg.data);
+        let src = msg.src;
+        drop(msg); // lease ends here: the pooled send buffer recycles now
+        self.ring_write(src, to, &frame);
+    }
+}
+
+impl<T: Elem> Transport<T> for ShmTransport<T> {
+    fn post(&self, to: usize, msg: Msg<T>) {
+        self.send_frame(to, FrameKind::Deliver, 0, msg);
+    }
+
+    fn post_delayed(&self, to: usize, msg: Msg<T>, release_at: Instant) {
+        // The embargo crosses the boundary as a relative hold: Instants
+        // are process-local. Computed back on the receiving side at
+        // deposit time; the hold is what chaos planned, minus transit.
+        let micros = release_at.saturating_duration_since(Instant::now()).as_micros() as u64;
+        self.send_frame(to, FrameKind::Delayed, micros, msg);
+    }
+
+    fn post_overflow(&self, to: usize, msg: Msg<T>) {
+        self.send_frame(to, FrameKind::Overflow, 0, msg);
+    }
+
+    fn take(
+        &self,
+        me: usize,
+        src: usize,
+        tag: u64,
+        pending: &mut Vec<Msg<T>>,
+        deadline: Instant,
+    ) -> Option<Msg<T>> {
+        let hot_until = Instant::now() + HOT_POLL;
+        loop {
+            self.drain(me);
+            let now = Instant::now();
+            // Hot window: spin-probe only (a deadline already in the past
+            // still probes the slot + overflow once per recv_match).
+            // After it: park in DRAIN_SLICE slices so arriving frames are
+            // picked up promptly even though ring writes can't wake us.
+            let slice = if now < hot_until {
+                now
+            } else {
+                deadline.min(now + DRAIN_SLICE)
+            };
+            if let Some(m) = self.inboxes[me].recv_match(src, tag, pending, slice) {
+                return Some(m);
+            }
+            if self.poison_flag().load(Ordering::Acquire) != 0 {
+                return None;
+            }
+            if Instant::now() >= deadline {
+                return None;
+            }
+        }
+    }
+
+    fn poison_all(&self) {
+        self.poison_flag().store(1, Ordering::Release);
+        for inbox in &self.inboxes {
+            inbox.poison();
+        }
+    }
+
+    fn stats(&self, me: usize) -> InboxStats {
+        self.inboxes[me].stats()
+    }
+
+    fn name(&self) -> &'static str {
+        "shm"
+    }
+}
+
+#[cfg(all(test, any(target_os = "linux", target_os = "android", target_os = "macos")))]
+mod tests {
+    use super::*;
+    use crate::mpi::pool::PoolBuf;
+
+    fn mk_msg(src: usize, tag: u64, data: Vec<i64>) -> Msg<i64> {
+        Msg { src, tag, data: PoolBuf::detached(data), vtime: 0.0 }
+    }
+
+    #[test]
+    fn shm_roundtrip_and_matching() {
+        let t: ShmTransport<i64> = ShmTransport::new(2, false).unwrap();
+        t.post(1, mk_msg(0, 7, vec![1, 2, 3]));
+        t.post(1, mk_msg(0, 8, vec![9]));
+        let mut pending = Vec::new();
+        // Out-of-order take: tag 8 before tag 7 — both land intact.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let m = t.take(1, 0, 8, &mut pending, deadline).unwrap();
+        assert_eq!(&m.data[..], &[9]);
+        let m = t.take(1, 0, 7, &mut pending, deadline).unwrap();
+        assert_eq!(&m.data[..], &[1, 2, 3]);
+    }
+
+    #[test]
+    fn shm_ring_wraparound_preserves_frames() {
+        let t: ShmTransport<i64> = ShmTransport::new(2, false).unwrap();
+        // Push enough traffic through one channel to wrap the ring
+        // several times; every frame must come back intact and in order.
+        let m = 4096; // 32 KiB payloads: ~32 KiB/frame, > 3 wraps total
+        let rounds = 3 * (RING_CAP / (m * 8)) as u32 + 5;
+        let mut pending = Vec::new();
+        for k in 0..rounds {
+            let payload: Vec<i64> = (0..m as i64).map(|i| i ^ k as i64).collect();
+            t.post(1, mk_msg(0, k as u64, payload.clone()));
+            let got = t
+                .take(1, 0, k as u64, &mut pending, Instant::now() + Duration::from_secs(5))
+                .unwrap();
+            assert_eq!(&got.data[..], &payload[..], "round {k}");
+        }
+        assert!(pending.is_empty());
+    }
+
+    #[test]
+    fn shm_poison_wakes_blocked_take() {
+        let t = std::sync::Arc::new(ShmTransport::<i64>::new(2, false).unwrap());
+        let t2 = std::sync::Arc::clone(&t);
+        let waiter = std::thread::spawn(move || {
+            let mut pending = Vec::new();
+            let deadline = Instant::now() + Duration::from_secs(30);
+            t2.take(1, 0, 99, &mut pending, deadline)
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        t.poison_all();
+        let got = waiter.join().unwrap();
+        assert!(got.is_none(), "poison must wake the blocked take promptly");
+    }
+
+    #[test]
+    fn probe_reports_available_here() {
+        probe().unwrap();
+    }
+}

@@ -1,0 +1,469 @@
+//! Socket transport backend: TCP loopback or Unix-domain stream pairs
+//! carrying [`wire`](super::wire)-encoded frames, with per-peer send and
+//! receive threads feeding the same slot-inbox matching logic the thread
+//! backend uses.
+//!
+//! One stream per **ordered** rank pair (src, dst): the sending rank's
+//! `post` enqueues an encoded frame on the pair's send queue; a dedicated
+//! send thread drains the queue and writes frames to the stream; a
+//! dedicated receive thread on the destination side reads frames
+//! (`read_exact` header, then payload), verifies version + checksum, and
+//! deposits the decoded message into the destination rank's local
+//! [`Inbox`] through the entry point named by the frame's `kind` byte
+//! (deliver / delayed-embargo / overflow-diversion — the sender's chaos
+//! decision shipped over the wire). Receives therefore block in plain
+//! `recv_match` and are woken by the deposit like any thread-backend
+//! receive; rendezvous latency past the wire hop is the inbox's own.
+//!
+//! ## Failure attribution
+//!
+//! A stream fault or corrupt frame (bad magic/version/checksum, length
+//! mismatch) records an attributed fault naming the channel and poisons
+//! every inbox; the next `take` on any rank panics with that fault, which
+//! the world's panic containment surfaces as the run's error. A message
+//! chaos-dropped at the send site never reaches the transport at all, so
+//! the matching receive times out with the standard attributed
+//! `recv_timeout` error naming backend, rank, round and src.
+//!
+//! ## Teardown
+//!
+//! Dropping the transport closes every send queue; send threads drain,
+//! exit and drop their write halves; receive threads see EOF and exit.
+//! Writes carry a watchdog timeout so a wedged peer cannot hang the
+//! drop. Worlds are torn down before their transport, so no rank thread
+//! is still posting at that point.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::elem::Elem;
+use super::inbox::{Inbox, InboxStats};
+use super::msg::Msg;
+use super::pool::PoolBuf;
+use super::transport::{Transport, TransportBackend};
+use super::wire::{
+    decode_header, decode_payload, encode_frame, verify_payload, FrameKind, HEADER_BYTES,
+    WIRE_MAGIC,
+};
+use crate::util::Channel;
+
+/// Watchdog on stream writes: a peer that stops reading for this long is
+/// treated as faulted rather than wedging the send thread (and any later
+/// teardown) forever.
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Either stream flavor behind one interface.
+enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn set_write_timeout(&self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_write_timeout(Some(WRITE_TIMEOUT)),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_write_timeout(Some(WRITE_TIMEOUT)),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// Shared fault slot: first attributed transport fault wins; every
+/// subsequent `take` re-raises it on the rank threads.
+#[derive(Default)]
+struct Fault {
+    slot: Mutex<Option<String>>,
+}
+
+impl Fault {
+    fn set(&self, msg: String) {
+        let mut slot = self.slot.lock().unwrap();
+        slot.get_or_insert(msg);
+    }
+
+    fn get(&self) -> Option<String> {
+        self.slot.lock().unwrap().clone()
+    }
+}
+
+pub(crate) struct SocketTransport<T> {
+    p: usize,
+    flavor: TransportBackend,
+    /// Per-rank local matchers; receive threads deposit into them.
+    inboxes: Arc<Vec<Inbox<T>>>,
+    /// Send queue per ordered pair, index src·p + dst.
+    queues: Vec<Arc<Channel<Vec<u8>>>>,
+    send_threads: Vec<JoinHandle<()>>,
+    recv_threads: Vec<JoinHandle<()>>,
+    fault: Arc<Fault>,
+}
+
+/// Pairing hello written on each fresh TCP connection so the accepting
+/// side can route the stream to its (src, dst) pair regardless of accept
+/// order: magic, src, dst, zero.
+fn write_hello(s: &mut TcpStream, src: usize, dst: usize) -> std::io::Result<()> {
+    let mut hello = [0u8; 16];
+    hello[0..4].copy_from_slice(&WIRE_MAGIC.to_le_bytes());
+    hello[4..8].copy_from_slice(&(src as u32).to_le_bytes());
+    hello[8..12].copy_from_slice(&(dst as u32).to_le_bytes());
+    s.write_all(&hello)
+}
+
+fn read_hello(s: &mut TcpStream) -> Result<(usize, usize)> {
+    let mut hello = [0u8; 16];
+    s.read_exact(&mut hello).context("reading pairing hello")?;
+    let magic = u32::from_le_bytes([hello[0], hello[1], hello[2], hello[3]]);
+    if magic != WIRE_MAGIC {
+        bail!("bad pairing hello magic {magic:#010x}");
+    }
+    let src = u32::from_le_bytes([hello[4], hello[5], hello[6], hello[7]]) as usize;
+    let dst = u32::from_le_bytes([hello[8], hello[9], hello[10], hello[11]]) as usize;
+    Ok((src, dst))
+}
+
+/// Build the p² stream mesh for the requested flavor. Entry (src, dst)
+/// is a (write half, read half) pair: the write half goes to the pair's
+/// send thread, the read half to its receive thread.
+fn build_mesh(flavor: TransportBackend, p: usize) -> Result<Vec<(Stream, Stream)>> {
+    let mut mesh = Vec::with_capacity(p * p);
+    match flavor {
+        #[cfg(unix)]
+        TransportBackend::Uds => {
+            for _ in 0..p * p {
+                let (w, r) = UnixStream::pair()
+                    .context("transport backend 'uds': socketpair failed")?;
+                mesh.push((Stream::Unix(w), Stream::Unix(r)));
+            }
+        }
+        #[cfg(not(unix))]
+        TransportBackend::Uds => {
+            bail!("transport backend 'uds' unavailable: unix-domain sockets need a unix host")
+        }
+        TransportBackend::Tcp => {
+            let listener = TcpListener::bind("127.0.0.1:0")
+                .context("transport backend 'tcp': cannot bind a loopback listener")?;
+            let addr = listener.local_addr()?;
+            // Connect + accept one pair at a time: loopback connects
+            // complete against the listen backlog, and the hello routes
+            // the accepted stream even if the kernel reordered anything.
+            let mut read_halves: Vec<Option<Stream>> = (0..p * p).map(|_| None).collect();
+            let mut write_halves: Vec<Option<Stream>> = (0..p * p).map(|_| None).collect();
+            for src in 0..p {
+                for dst in 0..p {
+                    let mut w = TcpStream::connect(addr)
+                        .context("transport backend 'tcp': loopback connect failed")?;
+                    w.set_nodelay(true)?;
+                    write_hello(&mut w, src, dst)
+                        .context("transport backend 'tcp': pairing hello failed")?;
+                    write_halves[src * p + dst] = Some(Stream::Tcp(w));
+                    let (mut r, _) = listener
+                        .accept()
+                        .context("transport backend 'tcp': accept failed")?;
+                    r.set_nodelay(true)?;
+                    let (hsrc, hdst) = read_hello(&mut r)?;
+                    if hsrc >= p || hdst >= p || read_halves[hsrc * p + hdst].is_some() {
+                        bail!(
+                            "transport backend 'tcp': pairing hello claims duplicate or \
+                             out-of-range channel {hsrc}→{hdst}"
+                        );
+                    }
+                    read_halves[hsrc * p + hdst] = Some(Stream::Tcp(r));
+                }
+            }
+            for i in 0..p * p {
+                let (Some(w), Some(r)) = (write_halves[i].take(), read_halves[i].take()) else {
+                    bail!("transport backend 'tcp': mesh pairing left channel {i} unpaired");
+                };
+                mesh.push((w, r));
+            }
+        }
+        TransportBackend::Thread | TransportBackend::Shm => {
+            unreachable!("not a socket flavor")
+        }
+    }
+    Ok(mesh)
+}
+
+impl<T: Elem> SocketTransport<T> {
+    pub fn new(flavor: TransportBackend, p: usize, fixed_spin: bool) -> Result<Self> {
+        debug_assert!(matches!(flavor, TransportBackend::Tcp | TransportBackend::Uds));
+        let mesh = build_mesh(flavor, p)?;
+        let inboxes: Arc<Vec<Inbox<T>>> =
+            Arc::new((0..p).map(|_| Inbox::new_with(fixed_spin)).collect());
+        let fault = Arc::new(Fault::default());
+        let mut queues = Vec::with_capacity(p * p);
+        let mut send_threads = Vec::with_capacity(p * p);
+        let mut recv_threads = Vec::with_capacity(p * p);
+
+        for (i, (write_half, read_half)) in mesh.into_iter().enumerate() {
+            let (src, dst) = (i / p, i % p);
+            let name = flavor.name();
+
+            let queue: Arc<Channel<Vec<u8>>> = Arc::new(Channel::new());
+            let q = Arc::clone(&queue);
+            let f = Arc::clone(&fault);
+            let ib = Arc::clone(&inboxes);
+            let mut w = write_half;
+            if let Err(e) = w.set_write_timeout() {
+                bail!("transport backend '{name}': cannot arm write watchdog: {e}");
+            }
+            send_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("{name}-send-{src}-{dst}"))
+                    .spawn(move || {
+                        while let Some(frame) = q.pop_wait() {
+                            if let Err(e) = w.write_all(&frame).and_then(|()| w.flush()) {
+                                f.set(format!(
+                                    "{name} transport: write on channel {src}→{dst} failed: {e}"
+                                ));
+                                for inbox in ib.iter() {
+                                    inbox.poison();
+                                }
+                                return;
+                            }
+                        }
+                        // Queue closed: drop the write half → peer reads EOF.
+                    })
+                    .expect("failed to spawn transport send thread"),
+            );
+            queues.push(queue);
+
+            let f = Arc::clone(&fault);
+            let ib = Arc::clone(&inboxes);
+            let mut r = read_half;
+            recv_threads.push(
+                std::thread::Builder::new()
+                    .name(format!("{name}-recv-{src}-{dst}"))
+                    .spawn(move || {
+                        let mut header = [0u8; HEADER_BYTES];
+                        loop {
+                            match r.read_exact(&mut header) {
+                                Ok(()) => {}
+                                // EOF between frames is the orderly
+                                // teardown path; anything else (including
+                                // EOF mid-header) is a fault.
+                                Err(e) => {
+                                    if e.kind() != std::io::ErrorKind::UnexpectedEof {
+                                        f.set(format!(
+                                            "{name} transport: read on channel {src}→{dst} failed: {e}"
+                                        ));
+                                        for inbox in ib.iter() {
+                                            inbox.poison();
+                                        }
+                                    }
+                                    return;
+                                }
+                            }
+                            let step = || -> Result<()> {
+                                let fh = decode_header(&header)?;
+                                let mut payload = vec![0u8; fh.payload_len];
+                                r.read_exact(&mut payload)
+                                    .context("reading frame payload")?;
+                                verify_payload(&header, &payload)?;
+                                let data: Vec<T> = decode_payload(&fh, &payload)?;
+                                let msg = Msg {
+                                    src: fh.src,
+                                    tag: fh.tag,
+                                    data: PoolBuf::detached(data),
+                                    vtime: fh.vtime,
+                                };
+                                match fh.kind {
+                                    FrameKind::Deliver => ib[dst].deposit(msg),
+                                    FrameKind::Delayed => ib[dst].deposit_delayed(
+                                        msg,
+                                        Instant::now()
+                                            + Duration::from_micros(fh.delay_micros),
+                                    ),
+                                    FrameKind::Overflow => ib[dst].deposit_overflow(msg),
+                                }
+                                Ok(())
+                            };
+                            if let Err(e) = step() {
+                                f.set(format!(
+                                    "{name} transport: corrupt frame on channel {src}→{dst}: {e:#}"
+                                ));
+                                for inbox in ib.iter() {
+                                    inbox.poison();
+                                }
+                                return;
+                            }
+                        }
+                    })
+                    .expect("failed to spawn transport recv thread"),
+            );
+        }
+
+        Ok(SocketTransport { p, flavor, inboxes, queues, send_threads, recv_threads, fault })
+    }
+
+    fn enqueue(&self, to: usize, kind: FrameKind, delay_micros: u64, msg: Msg<T>) {
+        let frame = encode_frame(kind, msg.src, to, msg.tag, delay_micros, msg.vtime, &msg.data);
+        let src = msg.src;
+        drop(msg); // lease ends: the pooled send buffer recycles now
+        // A closed queue means teardown is in progress; the frame is
+        // dropped like any post into a dying world.
+        let _ = self.queues[src * self.p + to].push(frame);
+    }
+
+    /// Re-raise a recorded transport fault on the calling rank thread —
+    /// the world's panic containment turns it into the run's error.
+    fn check_fault(&self) {
+        if let Some(e) = self.fault.get() {
+            panic!("{e}");
+        }
+    }
+}
+
+impl<T: Elem> Transport<T> for SocketTransport<T> {
+    fn post(&self, to: usize, msg: Msg<T>) {
+        self.check_fault();
+        self.enqueue(to, FrameKind::Deliver, 0, msg);
+    }
+
+    fn post_delayed(&self, to: usize, msg: Msg<T>, release_at: Instant) {
+        self.check_fault();
+        let micros = release_at.saturating_duration_since(Instant::now()).as_micros() as u64;
+        self.enqueue(to, FrameKind::Delayed, micros, msg);
+    }
+
+    fn post_overflow(&self, to: usize, msg: Msg<T>) {
+        self.check_fault();
+        self.enqueue(to, FrameKind::Overflow, 0, msg);
+    }
+
+    fn take(
+        &self,
+        me: usize,
+        src: usize,
+        tag: u64,
+        pending: &mut Vec<Msg<T>>,
+        deadline: Instant,
+    ) -> Option<Msg<T>> {
+        // A fault recorded before this call would not re-trigger the
+        // edge-triggered poison inside recv_match — raise it up front.
+        self.check_fault();
+        // Deposits come from the receive threads and wake parked
+        // receivers through the inbox itself, so a single full-deadline
+        // recv_match suffices — no drain slicing needed on this backend.
+        let got = self.inboxes[me].recv_match(src, tag, pending, deadline);
+        if got.is_none() {
+            self.check_fault();
+        }
+        got
+    }
+
+    fn poison_all(&self) {
+        for inbox in self.inboxes.iter() {
+            inbox.poison();
+        }
+    }
+
+    fn stats(&self, me: usize) -> InboxStats {
+        self.inboxes[me].stats()
+    }
+
+    fn name(&self) -> &'static str {
+        self.flavor.name()
+    }
+}
+
+impl<T> Drop for SocketTransport<T> {
+    fn drop(&mut self) {
+        // Close every send queue: send threads drain what's left, exit,
+        // and drop their write halves; receive threads then read EOF and
+        // exit. The write watchdog bounds a wedged peer.
+        for q in &self.queues {
+            q.close();
+        }
+        for h in self.send_threads.drain(..) {
+            let _ = h.join();
+        }
+        for h in self.recv_threads.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_msg(src: usize, tag: u64, data: Vec<i64>) -> Msg<i64> {
+        Msg { src, tag, data: PoolBuf::detached(data), vtime: 0.0 }
+    }
+
+    fn roundtrip_on(flavor: TransportBackend) {
+        let t: SocketTransport<i64> = SocketTransport::new(flavor, 3, false).unwrap();
+        let mut pending = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        t.post(2, mk_msg(0, 5, vec![10, 20]));
+        t.post(2, mk_msg(1, 5, vec![30]));
+        let a = t.take(2, 0, 5, &mut pending, deadline).unwrap();
+        let b = t.take(2, 1, 5, &mut pending, deadline).unwrap();
+        assert_eq!(&a.data[..], &[10, 20]);
+        assert_eq!(&b.data[..], &[30]);
+        assert_eq!(t.name(), flavor.name());
+    }
+
+    #[test]
+    fn tcp_loopback_roundtrip() {
+        if TransportBackend::Tcp.is_available() {
+            roundtrip_on(TransportBackend::Tcp);
+        }
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn uds_roundtrip() {
+        roundtrip_on(TransportBackend::Uds);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn poison_wakes_blocked_socket_take() {
+        let t = Arc::new(SocketTransport::<i64>::new(TransportBackend::Uds, 2, false).unwrap());
+        let t2 = Arc::clone(&t);
+        let waiter = std::thread::spawn(move || {
+            let mut pending = Vec::new();
+            t2.take(1, 0, 42, &mut pending, Instant::now() + Duration::from_secs(30))
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        t.poison_all();
+        assert!(waiter.join().unwrap().is_none());
+    }
+}

@@ -1,0 +1,277 @@
+//! The rendezvous transport boundary: every world moves messages through
+//! a [`Transport`] — post on the sender side, matched take on the
+//! receiver side, poison to wake every blocked receiver on rank death.
+//!
+//! Three backends implement the contract (selected per world via
+//! [`WorldConfig::with_transport`](super::world::WorldConfig::with_transport)):
+//!
+//! * [`ThreadTransport`] — the in-process slot inbox
+//!   ([`inbox`](super::inbox)), extracted verbatim: one [`Inbox`] per
+//!   rank, pooled buffers handed sender → receiver by move, the adaptive
+//!   per-slot EMA spin budget untouched. The oracle backend.
+//! * [`ShmTransport`](super::shm::ShmTransport) — per-(src, dst) SPSC
+//!   byte rings in one `MAP_SHARED` mmap'd segment; frames are encoded
+//!   with the [`wire`](super::wire) codec and drained by the receiving
+//!   rank into its local inbox, so matching (and the (src, ctx, chunk,
+//!   round) slot keying) is byte-for-byte the same machinery.
+//! * [`SocketTransport`](super::socket::SocketTransport) — TCP loopback
+//!   or Unix-domain stream pairs with per-peer send and receive threads;
+//!   receive threads decode frames and deposit into the destination
+//!   rank's local inbox.
+//!
+//! ## The contract
+//!
+//! * **Ordering** — frames between one (src, dst) pair arrive in post
+//!   order; matching is by exact (src, tag), so cross-key reordering
+//!   (which the chaos embargo deliberately produces) is always legal.
+//! * **Chaos stays above the boundary** — injection decisions are made
+//!   once, at the send site in `RankCtx::post`, before the transport is
+//!   involved; the wire backends ship the decision in the frame's `kind`
+//!   byte. Seeds, XOR schedule digests and trace invariants are therefore
+//!   backend-independent by construction — the property the cross-backend
+//!   differential tests (`tests/backend_matrix.rs`) hold every backend to.
+//! * **Poison wakes everyone** — [`Transport::poison_all`] must make
+//!   every in-flight and future [`Transport::take`] return `None`
+//!   promptly (the caller disambiguates death from deadline via the
+//!   dead-rank registry).
+//! * **Buffer lease** — the posted [`Msg`] owns a pooled buffer leased
+//!   from the *sender's* pool. The thread backend moves the lease to the
+//!   receiver (dropping the received message recycles the buffer into the
+//!   sender's pool — the zero-allocation steady state). Wire backends end
+//!   the lease at serialization time (the sender's buffer recycles
+//!   immediately) and surface received payloads as detached buffers.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::elem::Elem;
+use super::inbox::{Inbox, InboxStats};
+use super::msg::Msg;
+
+/// Which rendezvous backend a world's ranks communicate through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportBackend {
+    /// In-process slot inboxes (the default, and the oracle the other
+    /// backends are differentially verified against).
+    #[default]
+    Thread,
+    /// Shared-memory rings over a `MAP_SHARED` mmap'd segment (unix).
+    Shm,
+    /// TCP loopback streams with framed messages.
+    Tcp,
+    /// Unix-domain stream pairs with framed messages (unix).
+    Uds,
+}
+
+impl TransportBackend {
+    /// Every selectable backend, in CLI presentation order.
+    pub fn all() -> [TransportBackend; 4] {
+        [
+            TransportBackend::Thread,
+            TransportBackend::Shm,
+            TransportBackend::Tcp,
+            TransportBackend::Uds,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportBackend::Thread => "thread",
+            TransportBackend::Shm => "shm",
+            TransportBackend::Tcp => "tcp",
+            TransportBackend::Uds => "uds",
+        }
+    }
+
+    /// Cheap host-capability check with an attributed error: names the
+    /// backend and the reason it cannot run here. `Ok(())` means a world
+    /// over this backend can be constructed on this host right now.
+    pub fn probe(&self) -> Result<()> {
+        match self {
+            TransportBackend::Thread => Ok(()),
+            TransportBackend::Shm => super::shm::probe(),
+            TransportBackend::Tcp => match std::net::TcpListener::bind("127.0.0.1:0") {
+                Ok(_) => Ok(()),
+                Err(e) => bail!(
+                    "transport backend 'tcp' unavailable: cannot bind a loopback listener: {e}"
+                ),
+            },
+            #[cfg(unix)]
+            TransportBackend::Uds => match std::os::unix::net::UnixStream::pair() {
+                Ok(_) => Ok(()),
+                Err(e) => {
+                    bail!("transport backend 'uds' unavailable: cannot create a socket pair: {e}")
+                }
+            },
+            #[cfg(not(unix))]
+            TransportBackend::Uds => {
+                bail!("transport backend 'uds' unavailable: unix-domain sockets need a unix host")
+            }
+        }
+    }
+
+    pub fn is_available(&self) -> bool {
+        self.probe().is_ok()
+    }
+
+    /// The backends that probe as usable on this host, thread first.
+    pub fn available() -> Vec<TransportBackend> {
+        Self::all().into_iter().filter(|b| b.is_available()).collect()
+    }
+}
+
+impl std::fmt::Display for TransportBackend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for TransportBackend {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "thread" => Ok(TransportBackend::Thread),
+            "shm" => Ok(TransportBackend::Shm),
+            "tcp" => Ok(TransportBackend::Tcp),
+            "uds" => Ok(TransportBackend::Uds),
+            other => bail!("unknown transport backend {other:?} (expected thread|shm|tcp|uds)"),
+        }
+    }
+}
+
+/// The rendezvous operations a world needs from its message substrate.
+/// All ranks share one transport instance; `me` is always the calling
+/// rank (receive-side operations are single-consumer per rank — the
+/// executor pins one thread per rank, which the shm ring relies on).
+pub(crate) trait Transport<T: Elem>: Send + Sync {
+    /// Deliver `msg` toward rank `to`'s matcher (normal path).
+    fn post(&self, to: usize, msg: Msg<T>);
+
+    /// Chaos embargo: hold `msg` until `release_at`, then make it
+    /// matchable at rank `to` (delivery order across keys may invert).
+    fn post_delayed(&self, to: usize, msg: Msg<T>, release_at: Instant);
+
+    /// Chaos slot diversion: deliver via rank `to`'s unordered overflow
+    /// path, bypassing the keyed slot.
+    fn post_overflow(&self, to: usize, msg: Msg<T>);
+
+    /// Blocking matched receive on rank `me` for (src, tag). Non-matching
+    /// arrivals go to `pending` (the caller's rank-private out-of-order
+    /// buffer, which the caller scans before calling). Returns `None` on
+    /// deadline expiry or poison wake-up — the caller disambiguates and
+    /// may re-enter with the remaining deadline.
+    fn take(
+        &self,
+        me: usize,
+        src: usize,
+        tag: u64,
+        pending: &mut Vec<Msg<T>>,
+        deadline: Instant,
+    ) -> Option<Msg<T>>;
+
+    /// Rank-death wake: force every blocked and future [`take`](Self::take)
+    /// on every rank to return `None` promptly.
+    fn poison_all(&self);
+
+    /// Receive-side spin/park counters for rank `me`.
+    fn stats(&self, me: usize) -> InboxStats;
+
+    /// Backend name for attributed errors ("thread" | "shm" | "tcp" | "uds").
+    fn name(&self) -> &'static str;
+}
+
+/// The extracted in-process backend: one slot [`Inbox`] per rank, all
+/// operations delegated verbatim. Zero behavior change from the
+/// pre-trait transport — the adaptive-spin/EMA machinery, overflow and
+/// embargo queues, poison epochs and Dekker park handshake live in
+/// [`inbox`](super::inbox) untouched.
+pub(crate) struct ThreadTransport<T> {
+    inboxes: Vec<Inbox<T>>,
+}
+
+impl<T> ThreadTransport<T> {
+    pub fn new(p: usize, fixed_spin: bool) -> Self {
+        ThreadTransport { inboxes: (0..p).map(|_| Inbox::new_with(fixed_spin)).collect() }
+    }
+}
+
+impl<T: Elem> Transport<T> for ThreadTransport<T> {
+    fn post(&self, to: usize, msg: Msg<T>) {
+        self.inboxes[to].deposit(msg);
+    }
+
+    fn post_delayed(&self, to: usize, msg: Msg<T>, release_at: Instant) {
+        self.inboxes[to].deposit_delayed(msg, release_at);
+    }
+
+    fn post_overflow(&self, to: usize, msg: Msg<T>) {
+        self.inboxes[to].deposit_overflow(msg);
+    }
+
+    fn take(
+        &self,
+        me: usize,
+        src: usize,
+        tag: u64,
+        pending: &mut Vec<Msg<T>>,
+        deadline: Instant,
+    ) -> Option<Msg<T>> {
+        self.inboxes[me].recv_match(src, tag, pending, deadline)
+    }
+
+    fn poison_all(&self) {
+        for inbox in &self.inboxes {
+            inbox.poison();
+        }
+    }
+
+    fn stats(&self, me: usize) -> InboxStats {
+        self.inboxes[me].stats()
+    }
+
+    fn name(&self) -> &'static str {
+        "thread"
+    }
+}
+
+/// Construct the selected backend for a `p`-rank world, or fail with an
+/// attributed error naming the backend and the host-side reason.
+pub(crate) fn build_transport<T: Elem>(
+    backend: TransportBackend,
+    p: usize,
+    fixed_spin: bool,
+) -> Result<Arc<dyn Transport<T>>> {
+    match backend {
+        TransportBackend::Thread => Ok(Arc::new(ThreadTransport::new(p, fixed_spin))),
+        TransportBackend::Shm => {
+            Ok(Arc::new(super::shm::ShmTransport::new(p, fixed_spin)?))
+        }
+        TransportBackend::Tcp | TransportBackend::Uds => Ok(Arc::new(
+            super::socket::SocketTransport::new(backend, p, fixed_spin)?,
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse_and_names() {
+        for b in TransportBackend::all() {
+            assert_eq!(b.name().parse::<TransportBackend>().unwrap(), b);
+            assert_eq!(format!("{b}"), b.name());
+        }
+        let err = "rdma".parse::<TransportBackend>().unwrap_err();
+        assert!(format!("{err:#}").contains("thread|shm|tcp|uds"));
+    }
+
+    #[test]
+    fn thread_backend_always_probes_available() {
+        assert!(TransportBackend::Thread.is_available());
+        assert!(TransportBackend::available().contains(&TransportBackend::Thread));
+    }
+}

@@ -1,0 +1,259 @@
+//! Frame codec shared by the cross-process transports (shm rings and
+//! socket streams): length-prefixed, versioned, checksummed message
+//! frames carrying one [`Msg`](super::msg::Msg) each.
+//!
+//! A frame is a fixed 56-byte little-endian header followed by the
+//! payload (`elem_count × T::wire_bytes()` bytes, elements encoded via
+//! [`Elem::write_wire`](super::elem::Elem::write_wire)):
+//!
+//! | offset | size | field          | notes                                   |
+//! |-------:|-----:|----------------|-----------------------------------------|
+//! |      0 |    4 | magic          | `0x5853_434E` ("XSCN")                  |
+//! |      4 |    2 | version        | [`WIRE_VERSION`]                        |
+//! |      6 |    1 | kind           | 0 deliver · 1 delayed · 2 overflow      |
+//! |      7 |    1 | reserved       | must be 0                               |
+//! |      8 |    4 | src            | sender's **world** rank                 |
+//! |     12 |    4 | dst            | receiver's world rank                   |
+//! |     16 |    8 | tag            | packed `TagKey` (ctx, chunk, round)     |
+//! |     24 |    8 | delay_micros   | embargo hold (kind = delayed only)      |
+//! |     32 |    8 | vtime          | sender's virtual clock, f64 bits        |
+//! |     40 |    4 | elem_count     | payload elements                        |
+//! |     44 |    4 | payload_len    | payload bytes (= count × wire_bytes)    |
+//! |     48 |    8 | checksum       | FNV-1a 64 over header[0..48] ∥ payload  |
+//!
+//! The `kind` byte ships the chaos plan over the wire: the sender's
+//! [`plan_message`](super::chaos::Chaos::plan_message) decision (deliver /
+//! embargo / divert-to-overflow) is made once at the send site and encoded
+//! here, so the receiving side deposits into its local inbox through
+//! exactly the same three entry points the thread backend uses — chaos
+//! schedules, XOR digests and trace invariants are backend-independent by
+//! construction. Checksum or header corruption is surfaced as an
+//! attributed decode error, never a silent drop.
+
+use anyhow::{bail, Result};
+
+use super::elem::Elem;
+
+/// "XSCN" — rejects cross-talk from anything that is not an exscan peer.
+pub const WIRE_MAGIC: u32 = 0x5853_434E;
+/// Bumped on any incompatible frame-layout change.
+pub const WIRE_VERSION: u16 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_BYTES: usize = 56;
+
+/// How the receiving side must deposit the decoded message into its
+/// local inbox — the sender's chaos decision, shipped in the frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Normal delivery: `Inbox::deposit`.
+    Deliver,
+    /// Chaos embargo: `Inbox::deposit_delayed(now + delay_micros)`.
+    Delayed,
+    /// Chaos slot diversion: `Inbox::deposit_overflow`.
+    Overflow,
+}
+
+impl FrameKind {
+    fn code(self) -> u8 {
+        match self {
+            FrameKind::Deliver => 0,
+            FrameKind::Delayed => 1,
+            FrameKind::Overflow => 2,
+        }
+    }
+
+    fn from_code(code: u8) -> Result<Self> {
+        match code {
+            0 => Ok(FrameKind::Deliver),
+            1 => Ok(FrameKind::Delayed),
+            2 => Ok(FrameKind::Overflow),
+            other => bail!("wire: unknown frame kind {other}"),
+        }
+    }
+}
+
+/// Decoded frame header.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrameHeader {
+    pub kind: FrameKind,
+    pub src: usize,
+    pub dst: usize,
+    pub tag: u64,
+    pub delay_micros: u64,
+    pub vtime: f64,
+    pub elem_count: usize,
+    pub payload_len: usize,
+}
+
+/// FNV-1a 64-bit over a byte stream — cheap, dependency-free, and enough
+/// to catch framing bugs and torn writes (this is an integrity check
+/// against software defects, not an adversarial MAC).
+pub fn fnv1a(chunks: &[&[u8]]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for chunk in chunks {
+        for &b in *chunk {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Encode one message into a self-delimiting frame.
+pub fn encode_frame<T: Elem>(
+    kind: FrameKind,
+    src: usize,
+    dst: usize,
+    tag: u64,
+    delay_micros: u64,
+    vtime: f64,
+    data: &[T],
+) -> Vec<u8> {
+    let payload_len = data.len() * T::wire_bytes();
+    let mut out = Vec::with_capacity(HEADER_BYTES + payload_len);
+    out.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+    out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    out.push(kind.code());
+    out.push(0); // reserved
+    out.extend_from_slice(&(src as u32).to_le_bytes());
+    out.extend_from_slice(&(dst as u32).to_le_bytes());
+    out.extend_from_slice(&tag.to_le_bytes());
+    out.extend_from_slice(&delay_micros.to_le_bytes());
+    out.extend_from_slice(&vtime.to_bits().to_le_bytes());
+    out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(payload_len as u32).to_le_bytes());
+    debug_assert_eq!(out.len(), 48);
+    for v in data {
+        v.write_wire(&mut out);
+    }
+    let checksum = fnv1a(&[&out[..48], &out[48..]]);
+    // Splice the checksum in at offset 48 (it was computed over
+    // header[0..48] ∥ payload, i.e. with itself absent).
+    let mut framed = Vec::with_capacity(HEADER_BYTES + payload_len);
+    framed.extend_from_slice(&out[..48]);
+    framed.extend_from_slice(&checksum.to_le_bytes());
+    framed.extend_from_slice(&out[48..]);
+    framed
+}
+
+fn le_u32(bytes: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes([bytes[at], bytes[at + 1], bytes[at + 2], bytes[at + 3]])
+}
+
+fn le_u64(bytes: &[u8], at: usize) -> u64 {
+    let mut raw = [0u8; 8];
+    raw.copy_from_slice(&bytes[at..at + 8]);
+    u64::from_le_bytes(raw)
+}
+
+/// Decode and validate a frame header (`header.len() == HEADER_BYTES`).
+/// The payload checksum is verified separately by
+/// [`verify_payload`] once the payload bytes are available.
+pub fn decode_header(header: &[u8]) -> Result<FrameHeader> {
+    assert_eq!(header.len(), HEADER_BYTES);
+    let magic = le_u32(header, 0);
+    if magic != WIRE_MAGIC {
+        bail!("wire: bad magic {magic:#010x} (want {WIRE_MAGIC:#010x})");
+    }
+    let version = u16::from_le_bytes([header[4], header[5]]);
+    if version != WIRE_VERSION {
+        bail!("wire: version {version} (this build speaks {WIRE_VERSION})");
+    }
+    if header[7] != 0 {
+        bail!("wire: nonzero reserved byte {}", header[7]);
+    }
+    Ok(FrameHeader {
+        kind: FrameKind::from_code(header[6])?,
+        src: le_u32(header, 8) as usize,
+        dst: le_u32(header, 12) as usize,
+        tag: le_u64(header, 16),
+        delay_micros: le_u64(header, 24),
+        vtime: f64::from_bits(le_u64(header, 32)),
+        elem_count: le_u32(header, 40) as usize,
+        payload_len: le_u32(header, 44) as usize,
+    })
+}
+
+/// Verify the frame checksum (header bytes with the checksum field as
+/// transmitted at offset 48, payload bytes as received).
+pub fn verify_payload(header: &[u8], payload: &[u8]) -> Result<()> {
+    assert_eq!(header.len(), HEADER_BYTES);
+    let want = le_u64(header, 48);
+    let got = fnv1a(&[&header[..48], payload]);
+    if got != want {
+        bail!("wire: checksum mismatch (got {got:#018x}, frame says {want:#018x})");
+    }
+    Ok(())
+}
+
+/// Decode a verified payload into elements. Rejects length mismatches
+/// (truncation, count/len disagreement) before touching element bytes.
+pub fn decode_payload<T: Elem>(h: &FrameHeader, payload: &[u8]) -> Result<Vec<T>> {
+    let stride = T::wire_bytes();
+    if h.payload_len != h.elem_count * stride || payload.len() != h.payload_len {
+        bail!(
+            "wire: payload length {} != {} elements × {} bytes (header says {})",
+            payload.len(),
+            h.elem_count,
+            stride,
+            h.payload_len
+        );
+    }
+    let mut out = Vec::with_capacity(h.elem_count);
+    for i in 0..h.elem_count {
+        out.push(T::read_wire(&payload[i * stride..(i + 1) * stride]));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::elem::Rec2;
+
+    fn roundtrip<T: Elem>(kind: FrameKind, data: &[T]) {
+        let frame = encode_frame(kind, 3, 5, 0xABCD_EF01, 150, 2.5, data);
+        assert_eq!(frame.len(), HEADER_BYTES + data.len() * T::wire_bytes());
+        let h = decode_header(&frame[..HEADER_BYTES]).unwrap();
+        verify_payload(&frame[..HEADER_BYTES], &frame[HEADER_BYTES..]).unwrap();
+        assert_eq!(h.kind, kind);
+        assert_eq!((h.src, h.dst, h.tag), (3, 5, 0xABCD_EF01));
+        assert_eq!(h.delay_micros, 150);
+        assert_eq!(h.vtime, 2.5);
+        let decoded: Vec<T> = decode_payload(&h, &frame[HEADER_BYTES..]).unwrap();
+        assert_eq!(decoded, data);
+    }
+
+    #[test]
+    fn frame_roundtrip_all_kinds_and_types() {
+        roundtrip(FrameKind::Deliver, &[1i64, -2, i64::MAX]);
+        roundtrip(FrameKind::Delayed, &[0.5f64; 17]);
+        roundtrip(FrameKind::Overflow, &[] as &[i64]); // m = 0 frames exist
+        roundtrip(
+            FrameKind::Deliver,
+            &[Rec2::new([1.0, 2.0, 3.0, 4.0], [5.0, 6.0]), Rec2::identity()],
+        );
+    }
+
+    #[test]
+    fn corruption_is_caught() {
+        let mut frame = encode_frame(FrameKind::Deliver, 0, 1, 7, 0, 0.0, &[42i64]);
+        // Flip one payload bit: checksum must catch it.
+        frame[HEADER_BYTES] ^= 0x10;
+        assert!(verify_payload(&frame[..HEADER_BYTES], &frame[HEADER_BYTES..]).is_err());
+        // Bad magic / version / kind are rejected at header decode.
+        let good = encode_frame(FrameKind::Deliver, 0, 1, 7, 0, 0.0, &[42i64]);
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(decode_header(&bad[..HEADER_BYTES]).is_err());
+        let mut bad = good.clone();
+        bad[4] = 99;
+        assert!(decode_header(&bad[..HEADER_BYTES]).is_err());
+        let mut bad = good.clone();
+        bad[6] = 9;
+        assert!(decode_header(&bad[..HEADER_BYTES]).is_err());
+        // Truncated payload is rejected by the length check.
+        let h = decode_header(&good[..HEADER_BYTES]).unwrap();
+        assert!(decode_payload::<i64>(&h, &good[HEADER_BYTES..HEADER_BYTES + 4]).is_err());
+    }
+}

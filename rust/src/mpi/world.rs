@@ -8,7 +8,9 @@
 //!   number of jobs to them. The benchmark harness sweeps hundreds of
 //!   (algorithm, m) points per configuration; respawning p = 1152 OS
 //!   threads per point used to dominate sweep wall-time and perturb the
-//!   measured times (EXPERIMENTS.md §Perf). Rank state (transport inboxes,
+//!   measured times (EXPERIMENTS.md §Perf). Rank state (the transport —
+//!   thread inboxes, shm rings or a socket mesh, per
+//!   [`WorldConfig::with_transport`] —
 //!   buffer pools, barrier, virtual clocks) persists across jobs, so
 //!   steady-state measurement points run with warm pools and no allocator
 //!   or scheduler noise.
@@ -23,8 +25,8 @@ use super::chaos::{Chaos, ChaosConfig, ChaosReport};
 use super::comm::{Comm, CtxAlloc};
 use super::ctx::{recv_timeout, ClockMode, RankCtx};
 use super::elem::Elem;
-use super::inbox::Inbox;
 use super::pool::{BufferPool, PoolStats, DEFAULT_BUDGET_BYTES};
+use super::transport::{build_transport, Transport, TransportBackend};
 use super::vbarrier::VBarrier;
 use crate::coll::ScanAlgorithm;
 use crate::cost::{CostModel, CostParams};
@@ -98,6 +100,13 @@ pub struct WorldConfig {
     /// scheduler yields, pool pressure, targeted drops). `None` for real
     /// measurements; see [`ChaosConfig`] and EXPERIMENTS.md §Chaos.
     pub chaos: Option<ChaosConfig>,
+    /// Which rendezvous backend this world's ranks communicate through
+    /// (EXPERIMENTS.md §Transport). `Thread` — the in-process slot inbox
+    /// — is the default and the differential oracle; `Shm`/`Tcp`/`Uds`
+    /// move every message through a shared-memory ring or a socket mesh
+    /// and are host-capability gated (probe with
+    /// [`TransportBackend::probe`]).
+    pub backend: TransportBackend,
 }
 
 impl WorldConfig {
@@ -114,6 +123,7 @@ impl WorldConfig {
             per_element_ops: false,
             fixed_spin: false,
             chaos: None,
+            backend: TransportBackend::Thread,
         }
     }
 
@@ -161,6 +171,19 @@ impl WorldConfig {
     pub fn with_chaos(mut self, chaos: ChaosConfig) -> Self {
         self.chaos = Some(chaos);
         self
+    }
+
+    /// Select the rendezvous transport backend for this world (see the
+    /// field docs; default [`TransportBackend::Thread`]).
+    pub fn with_transport(mut self, backend: TransportBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Construct this world's transport, or fail attributed (backend
+    /// name + host-side reason) when the backend is unavailable here.
+    fn build_transport<T: Elem>(&self, p: usize) -> Result<Arc<dyn Transport<T>>> {
+        build_transport::<T>(self.backend, p, self.fixed_spin)
     }
 
     fn build_chaos(&self) -> Option<Arc<Chaos>> {
@@ -268,8 +291,7 @@ where
 {
     let p = cfg.size();
     assert!(p >= 1);
-    let inboxes: Arc<Vec<Inbox<T>>> =
-        Arc::new((0..p).map(|_| Inbox::new_with(cfg.fixed_spin)).collect());
+    let transport: Arc<dyn Transport<T>> = cfg.build_transport(p)?;
     let pools: Vec<Arc<BufferPool<T>>> = (0..p).map(|_| cfg.build_pool()).collect();
     let barrier = Arc::new(VBarrier::new(p));
     let recv_deadline = cfg.recv_deadline();
@@ -280,7 +302,7 @@ where
         let mut handles = Vec::with_capacity(p);
         let fref = &f;
         for rank in 0..p {
-            let inboxes = Arc::clone(&inboxes);
+            let transport = Arc::clone(&transport);
             let pool = Arc::clone(&pools[rank]);
             let barrier = Arc::clone(&barrier);
             let mode = cfg.mode.clone();
@@ -298,7 +320,7 @@ where
                     let mut ctx = RankCtx::new(
                         rank,
                         p,
-                        inboxes,
+                        transport,
                         pool,
                         barrier,
                         mode,
@@ -406,11 +428,23 @@ pub struct World<T: Elem> {
 
 impl<T: Elem> World<T> {
     /// Spawn the rank threads for this configuration (exactly once).
+    /// Panics (attributed) when the configured transport backend is
+    /// unavailable on this host — probe with
+    /// [`TransportBackend::probe`] or use [`try_new`](Self::try_new)
+    /// where construction failure must be recoverable.
     pub fn new(cfg: WorldConfig) -> Self {
+        let backend = cfg.backend;
+        Self::try_new(cfg).unwrap_or_else(|e| {
+            panic!("world construction failed on transport '{backend}': {e:#}")
+        })
+    }
+
+    /// Fallible construction: `Err` (instead of a panic) when the
+    /// configured transport backend cannot be built on this host.
+    pub fn try_new(cfg: WorldConfig) -> Result<Self> {
         let p = cfg.size();
         assert!(p >= 1);
-        let inboxes: Arc<Vec<Inbox<T>>> =
-            Arc::new((0..p).map(|_| Inbox::new_with(cfg.fixed_spin)).collect());
+        let transport: Arc<dyn Transport<T>> = cfg.build_transport(p)?;
         let pools: Vec<Arc<BufferPool<T>>> = (0..p).map(|_| cfg.build_pool()).collect();
         let barrier = Arc::new(VBarrier::new(p));
         let recv_deadline = cfg.recv_deadline();
@@ -422,7 +456,7 @@ impl<T: Elem> World<T> {
         for rank in 0..p {
             let ch: Arc<Channel<Job<T>>> = Arc::new(Channel::new());
             let rx = Arc::clone(&ch);
-            let inboxes = Arc::clone(&inboxes);
+            let transport = Arc::clone(&transport);
             let pool = Arc::clone(&pools[rank]);
             let barrier = Arc::clone(&barrier);
             let mode = cfg.mode.clone();
@@ -440,7 +474,7 @@ impl<T: Elem> World<T> {
                     let mut ctx = RankCtx::new(
                         rank,
                         p,
-                        inboxes,
+                        transport,
                         pool,
                         barrier,
                         mode,
@@ -464,7 +498,7 @@ impl<T: Elem> World<T> {
             jobs.push(ch);
             handles.push(handle);
         }
-        World {
+        Ok(World {
             cfg,
             jobs,
             pools,
@@ -473,7 +507,7 @@ impl<T: Elem> World<T> {
             handles,
             run_lock: Mutex::new(()),
             ctxs: CtxAlloc::new(),
-        }
+        })
     }
 
     /// The implicit world communicator (context 0, all ranks). Collectives

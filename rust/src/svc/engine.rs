@@ -62,7 +62,7 @@ use std::time::{Duration, Instant};
 
 use crate::coll::segmented::Seg;
 use crate::coll::{exscan_by_name, ScanAlgorithm};
-use crate::mpi::{ChaosConfig, Comm, Elem, OpRef, Topology, World, WorldConfig};
+use crate::mpi::{ChaosConfig, Comm, Elem, OpRef, Topology, TransportBackend, World, WorldConfig};
 use crate::trace::{RankTrace, TraceReport};
 use crate::util::{Channel, PushError};
 
@@ -125,6 +125,11 @@ pub struct EngineConfig {
     pub max_inflight_bytes: usize,
     /// Behaviour at the admission limits.
     pub admission: AdmissionMode,
+    /// Transport backend the engine's worlds run on (default
+    /// [`TransportBackend::Thread`]). The service layer is
+    /// backend-agnostic: waves, rebuilds and chaos injection behave
+    /// identically on any backend.
+    pub transport: TransportBackend,
 }
 
 impl EngineConfig {
@@ -138,6 +143,7 @@ impl EngineConfig {
             max_inflight: DEFAULT_MAX_INFLIGHT,
             max_inflight_bytes: DEFAULT_MAX_INFLIGHT_BYTES,
             admission: AdmissionMode::FailFast,
+            transport: TransportBackend::Thread,
         }
     }
 
@@ -174,10 +180,17 @@ impl EngineConfig {
         self
     }
 
+    /// Run the engine's worlds on a specific transport backend.
+    pub fn with_transport(mut self, backend: TransportBackend) -> Self {
+        self.transport = backend;
+        self
+    }
+
     fn world_config(&self) -> WorldConfig {
         let mut wc = WorldConfig::new(self.topology)
             .with_trace(true)
-            .with_recv_timeout(self.recv_timeout);
+            .with_recv_timeout(self.recv_timeout)
+            .with_transport(self.transport);
         if let Some(ch) = &self.chaos {
             wc = wc.with_chaos(ch.clone());
         }

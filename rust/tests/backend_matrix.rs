@@ -1,0 +1,246 @@
+//! Cross-backend transport equivalence: the thread world is the oracle,
+//! and every other available backend (shm rings, TCP/UDS socket meshes)
+//! must be observationally identical to it — same outputs, same per-rank
+//! trace event logs, same chaos schedule digests under the same seeds
+//! (EXPERIMENTS.md §Transport).
+//!
+//! Backends that this host cannot provide (e.g. unix sockets on a
+//! non-unix runner) are skipped via [`TransportBackend::probe`] — the
+//! same capability probe CI's `exscan transports` step uses.
+
+use std::time::{Duration, Instant};
+
+use exscan::coll::validate::chaos_fuzz_on;
+use exscan::coll::{all_exscan_algorithms, ScanAlgorithm};
+use exscan::mpi::{run_world, TransportBackend};
+use exscan::prelude::*;
+
+/// Every backend this host can actually run (always includes `thread`).
+fn available() -> Vec<TransportBackend> {
+    let avail = TransportBackend::available();
+    assert!(
+        avail.contains(&TransportBackend::Thread),
+        "the thread backend must always be available"
+    );
+    avail
+}
+
+/// Wire backends to hold against the thread oracle.
+fn wire_backends() -> Vec<TransportBackend> {
+    available()
+        .into_iter()
+        .filter(|b| *b != TransportBackend::Thread)
+        .collect()
+}
+
+/// Point-to-point smoke on every available backend: out-of-order tag
+/// matching, an empty-payload message, and a multi-round exchange.
+#[test]
+fn send_recv_smoke_on_every_available_backend() {
+    const P: usize = 4;
+    const K: u32 = 8;
+    for backend in available() {
+        let cfg = WorldConfig::new(Topology::flat(P)).with_transport(backend);
+        run_world::<i64, (), _>(&cfg, |ctx| {
+            let r = ctx.rank();
+            // Post all rounds to all peers up front, then drain them in
+            // reverse round order — exercises slot + pending matching on
+            // top of whatever the backend's delivery order is.
+            for k in 0..K {
+                for dst in 0..P {
+                    if dst != r {
+                        ctx.send(k, dst, &[((r as i64) << 8) | k as i64])?;
+                    }
+                }
+            }
+            for k in (0..K).rev() {
+                for src in 0..P {
+                    if src != r {
+                        let mut buf = [0i64];
+                        ctx.recv(k, src, &mut buf)?;
+                        assert_eq!(
+                            buf[0],
+                            ((src as i64) << 8) | k as i64,
+                            "backend={backend} src={src} k={k}"
+                        );
+                    }
+                }
+            }
+            // Zero-length payload round-trips too (m = 0 collectives).
+            let empty: [i64; 0] = [];
+            let next = (r + 1) % P;
+            let prev = (r + P - 1) % P;
+            ctx.send(K, next, &empty)?;
+            let mut sink: [i64; 0] = [];
+            ctx.recv(K, prev, &mut sink)?;
+            Ok(())
+        })
+        .unwrap_or_else(|e| panic!("smoke failed on backend {backend}: {e:#}"));
+    }
+}
+
+/// The backend oracle, clean path: every registered exscan algorithm at
+/// m ∈ {0, 1, 17, 4096} must produce bit-identical outputs AND bit-
+/// identical per-rank trace event logs on every wire backend as on the
+/// thread world. Trace equality is the strong form: it pins rounds,
+/// message/reduce interleaving and byte counts, not just the numerics.
+#[test]
+fn clean_trace_equality_across_backends() {
+    const P: usize = 6;
+    let wires = wire_backends();
+    if wires.is_empty() {
+        eprintln!("no wire backends available on this host; thread-only run");
+        return;
+    }
+    for m in [0usize, 1, 17, 4096] {
+        let inputs = exscan::bench::inputs_i64(P, m, 0xB0A7 ^ m as u64);
+        for algo in all_exscan_algorithms::<i64>() {
+            let cfg = WorldConfig::new(Topology::flat(P)).with_trace(true);
+            let reference = run_scan(&cfg, algo.as_ref(), &ops::bxor(), &inputs)
+                .unwrap_or_else(|e| panic!("thread run failed: {} m={m}: {e:#}", algo.name()));
+            let ref_trace = reference.trace.as_ref().expect("tracing enabled");
+            for &backend in &wires {
+                let cfg = WorldConfig::new(Topology::flat(P))
+                    .with_trace(true)
+                    .with_transport(backend);
+                let got = run_scan(&cfg, algo.as_ref(), &ops::bxor(), &inputs)
+                    .unwrap_or_else(|e| {
+                        panic!("{backend} run failed: {} m={m}: {e:#}", algo.name())
+                    });
+                assert_eq!(
+                    got.outputs,
+                    reference.outputs,
+                    "outputs diverged from thread oracle: algo={} m={m} backend={backend}",
+                    algo.name()
+                );
+                let got_trace = got.trace.as_ref().expect("tracing enabled");
+                assert_eq!(got_trace.traces.len(), ref_trace.traces.len());
+                for (a, b) in got_trace.traces.iter().zip(&ref_trace.traces) {
+                    assert_eq!(
+                        a.events,
+                        b.events,
+                        "rank {} trace diverged from thread oracle: algo={} m={m} \
+                         backend={backend}",
+                        a.rank,
+                        algo.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The backend oracle, chaos path: `chaos_fuzz` (every registered
+/// algorithm × operator grid, differential vs clean + serial oracle +
+/// Theorem-1 counts) must pass on every backend at three fixed seeds —
+/// and, because chaos decisions are made above the transport boundary,
+/// the injected schedule itself (digest and every injection counter)
+/// must be bit-identical across backends.
+#[test]
+fn chaos_fuzz_digest_identical_across_backends() {
+    let p_values = [2usize, 5];
+    let m_values = [0usize, 1, 17];
+    for seed in [1u64, 0xC0FFEE, 0x5EED_5EED] {
+        let oracle = chaos_fuzz_on(TransportBackend::Thread, seed, &p_values, &m_values);
+        assert!(
+            oracle.failures.is_empty(),
+            "thread-backend chaos fuzz failed at seed {seed}: {:?}",
+            oracle.failures
+        );
+        for backend in wire_backends() {
+            let got = chaos_fuzz_on(backend, seed, &p_values, &m_values);
+            assert!(
+                got.failures.is_empty(),
+                "{backend} chaos fuzz failed at seed {seed}: {:?}",
+                got.failures
+            );
+            assert_eq!(got.cases, oracle.cases, "case count: seed={seed} {backend}");
+            assert_eq!(
+                (got.delayed, got.diverted, got.yields, got.dropped),
+                (oracle.delayed, oracle.diverted, oracle.yields, oracle.dropped),
+                "injection counters must be backend-independent: seed={seed} {backend}"
+            );
+            assert_eq!(
+                got.schedule_digest, oracle.schedule_digest,
+                "chaos schedule digest must be backend-independent: seed={seed} {backend}"
+            );
+        }
+    }
+}
+
+/// Dropped-frame attribution: a receive that can never be satisfied must
+/// fail within the configured deadline on EVERY backend, and the error
+/// must name the waiting rank, the missing sender, the round, and the
+/// backend it happened on — that attribution line is what turns a hung
+/// distributed run into a one-glance diagnosis.
+#[test]
+fn missing_frame_times_out_attributed_on_every_backend() {
+    for backend in available() {
+        let cfg = WorldConfig::new(Topology::flat(2))
+            .with_recv_timeout(Duration::from_millis(300))
+            .with_transport(backend);
+        let t0 = Instant::now();
+        let res = run_world::<i64, (), _>(&cfg, |ctx| {
+            if ctx.rank() == 1 {
+                let mut buf = [0i64];
+                ctx.recv(5, 0, &mut buf)?; // nobody ever sends this
+            }
+            Ok(())
+        });
+        let err = format!("{:#}", res.unwrap_err());
+        assert!(err.contains("deadlocked"), "[{backend}] unexpected error: {err}");
+        assert!(err.contains("rank 1"), "[{backend}] missing rank in: {err}");
+        assert!(err.contains("round=5"), "[{backend}] missing round in: {err}");
+        assert!(err.contains("from=0"), "[{backend}] missing sender in: {err}");
+        assert!(
+            err.contains(&format!("transport={backend}")),
+            "[{backend}] missing backend attribution in: {err}"
+        );
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "[{backend}] must fail fast, took {:?}",
+            t0.elapsed()
+        );
+    }
+}
+
+/// The service layer is backend-agnostic: a small engine workload
+/// verifies against the serial oracle on every available backend.
+#[test]
+fn scan_engine_serves_on_every_available_backend() {
+    use exscan::coll::validate::oracle_exscan;
+    use exscan::svc::ReqOp;
+
+    const P: usize = 4;
+    const M: usize = 8;
+    for backend in available() {
+        let cfg = EngineConfig::new(P).with_transport(backend);
+        let engine = ScanEngine::<i64>::new(cfg)
+            .unwrap_or_else(|e| panic!("engine construction failed on {backend}: {e}"));
+        let mut handles = Vec::new();
+        let mut expected = Vec::new();
+        for i in 0..12u64 {
+            let inputs = exscan::bench::inputs_i64(P, M, 0xFADE ^ i);
+            expected.push(oracle_exscan(&inputs, &ops::bxor()));
+            handles.push(
+                engine
+                    .submit(ScanRequest::full(ReqOp::bxor_i64(), inputs))
+                    .unwrap_or_else(|e| panic!("submit failed on {backend}: {e}")),
+            );
+        }
+        engine.flush();
+        for (i, (h, oracle)) in handles.into_iter().zip(expected).enumerate() {
+            let out = h
+                .wait_timeout(Duration::from_secs(60))
+                .unwrap_or_else(|e| panic!("request {i} failed on {backend}: {e}"));
+            for (r, want) in oracle.iter().enumerate() {
+                if let Some(want) = want {
+                    assert_eq!(
+                        &out.outputs[r], want,
+                        "member {r} diverged on {backend} (request {i})"
+                    );
+                }
+            }
+        }
+    }
+}
