@@ -49,19 +49,25 @@
 //!     and reduce-scatter+allgather engines also ride the compute-path
 //!     m-sweep and the op-count gate, so the quick run smokes them end
 //!     to end;
+//!   * **topology sweep** (§Topology): virtual-clock completion of the
+//!     two-level leader scheme vs flat 123-doubling on every hierarchical
+//!     `Topo` preset and on the uniform null-hypothesis matrix, with hard
+//!     gates — two-level strictly faster on every hierarchical matrix,
+//!     never faster on the uniform one, and `select_exscan_topo` never
+//!     picks it where hierarchy is absent;
 //!   * one full 123-doubling at p=36 end to end.
 //!
 //! Writes the machine-readable trajectory record `BENCH_hotpath.json`
-//! (schema `exscan-hotpath-v6`). Pass `--quick` for the CI smoke run.
+//! (schema `exscan-hotpath-v7`). Pass `--quick` for the CI smoke run.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use exscan::bench::{
     hotpath_json, measure_exscan_world, CrossoverPoint, HotpathPoint, KernelPoint, LatencyPoint,
-    MSweepPoint, SoakPoint, SvcLatencyPoint, SvcPoint,
+    MSweepPoint, SoakPoint, SvcLatencyPoint, SvcPoint, TopoSweepPoint,
 };
-use exscan::coll::{oracle_exscan, select_candidates, select_exscan};
+use exscan::coll::{oracle_exscan, select_candidates, select_exscan, select_exscan_topo};
 use exscan::cost::{crossover_m, predict_schedule};
 use exscan::mpi::World;
 use exscan::prelude::*;
@@ -942,6 +948,73 @@ fn main() -> anyhow::Result<()> {
     }
     println!("soak gates: zero lost requests and flat steady-state memory");
 
+    // ── Topology sweep (schema-v7 `topo_sweep`): the two-level leader
+    // scheme vs flat 123-doubling on the virtual clock, priced by the
+    // seeded per-link matrices. Gates: two-level strictly faster at every
+    // (hierarchical preset, m) point; on the uniform null-hypothesis
+    // matrix it must never be faster and the topology-aware selection
+    // must never pick it (classic flat selection is untouched by
+    // construction). Virtual clock only, so the sweep is deterministic
+    // and costs seconds even in the full run. ──
+    let topo_seed = 7u64;
+    let topo_ms: &[usize] = if quick { &[4] } else { &[1, 4, 64, 4096] };
+    let mut topo_sweep: Vec<TopoSweepPoint> = Vec::new();
+    println!("\ntopology sweep (virtual clock, seed {topo_seed}):");
+    let mut topo_presets = Topo::hierarchical_presets(topo_seed);
+    topo_presets.push(Topo::flat(36, topo_seed));
+    for topo in topo_presets {
+        let topo = Arc::new(topo);
+        let p = topo.size();
+        for &m in topo_ms {
+            let inputs = exscan::bench::inputs_i64(p, m, topo_seed);
+            let completion = |algo: &dyn ScanAlgorithm<i64>| -> f64 {
+                let cfg =
+                    WorldConfig::new(Topology::flat(p)).virtual_clock_topo(topo.clone());
+                run_scan(&cfg, algo, &ops::bxor(), &inputs).unwrap().completion_us()
+            };
+            let two = completion(&ExscanTwoLevel::new(topo.ranks_per_node()));
+            let flat = completion(&Exscan123);
+            let selected = select_exscan_topo::<i64>(p, m, &topo).name().to_string();
+            if topo.is_hierarchical() {
+                assert!(
+                    two < flat,
+                    "{} m={m}: two-level {two:.2} µs must strictly beat flat 123 {flat:.2} µs",
+                    topo.name()
+                );
+            } else {
+                assert!(
+                    two >= flat,
+                    "{} m={m}: two-level {two:.2} µs must not beat flat 123 {flat:.2} µs \
+                     on the uniform matrix",
+                    topo.name()
+                );
+                assert_ne!(
+                    selected, "two-level",
+                    "{} m={m}: selection must never pick two-level on a uniform matrix",
+                    topo.name()
+                );
+            }
+            println!(
+                "  {:<12} m={m:>5}: two-level {two:>9.2} µs vs flat123 {flat:>9.2} µs → {selected}",
+                topo.name()
+            );
+            topo_sweep.push(TopoSweepPoint {
+                topo: topo.name().to_string(),
+                seed: topo_seed,
+                digest: topo.matrix_digest(),
+                p,
+                m,
+                two_level_us: two,
+                flat123_us: flat,
+                selected,
+            });
+        }
+    }
+    println!(
+        "topo gate: two-level strictly beats flat 123 on every hierarchical preset, \
+         never on the uniform matrix"
+    );
+
     // ── World spawn/teardown vs persistent job submit at the same p. ──
     let mut spawn_meta = Vec::new();
     for p in [16usize, 144] {
@@ -1013,6 +1086,7 @@ fn main() -> anyhow::Result<()> {
         &svc_latency,
         &soak,
         &m_crossover,
+        &topo_sweep,
     );
     // Cargo runs bench binaries with cwd = the *package* root (rust/), so
     // anchor the output at the workspace root explicitly — that is where

@@ -209,6 +209,30 @@ pub struct CrossoverPoint {
     pub argmin_us: f64,
 }
 
+/// One topology-sweep measurement (see `benches/hotpath.rs`): at a given
+/// topology preset (identified by spec name + seed + matrix digest, so
+/// the exact per-link matrix is replayable), the virtual-clock completion
+/// of the two-level scheme vs flat 123-doubling, plus what the
+/// topology-aware selection picked. The bench gates that `two_level_us <
+/// flat123_us` on every hierarchical preset and never on the uniform one,
+/// and that `selected` is `two-level` exactly where hierarchy exists.
+#[derive(Debug, Clone)]
+pub struct TopoSweepPoint {
+    /// Topology spec (`"2level:4x9"`, `"flat:36"`, …).
+    pub topo: String,
+    pub seed: u64,
+    /// FNV-1a digest of the per-link matrix — the replay fingerprint.
+    pub digest: u64,
+    pub p: usize,
+    pub m: usize,
+    /// Virtual-clock completion of `ExscanTwoLevel` (µs).
+    pub two_level_us: f64,
+    /// Virtual-clock completion of flat `Exscan123` (µs).
+    pub flat123_us: f64,
+    /// Algorithm `select_exscan_topo` picked at this point.
+    pub selected: String,
+}
+
 fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
@@ -237,7 +261,9 @@ fn json_escape(s: &str) -> String {
 /// zero-lost-requests and flat-memory evidence); v6 adds `m_crossover`
 /// (the large-m selection sweep: `select_exscan`'s pick vs the
 /// closed-form argmin over the candidate pool at each (p, m), tracing
-/// the round-regime → bandwidth-regime boundary).
+/// the round-regime → bandwidth-regime boundary); v7 adds `topo_sweep`
+/// (two-level vs flat 123-doubling virtual-clock completion per topology
+/// preset × m, with the matrix digest and the topology-aware selection).
 pub fn hotpath_json(
     meta: &[(&str, String)],
     points: &[HotpathPoint],
@@ -248,8 +274,9 @@ pub fn hotpath_json(
     svc_latency: &[SvcLatencyPoint],
     soak: &[SoakPoint],
     m_crossover: &[CrossoverPoint],
+    topo_sweep: &[TopoSweepPoint],
 ) -> String {
-    let mut out = String::from("{\n  \"schema\": \"exscan-hotpath-v6\",\n  \"meta\": {");
+    let mut out = String::from("{\n  \"schema\": \"exscan-hotpath-v7\",\n  \"meta\": {");
     for (i, (k, v)) in meta.iter().enumerate() {
         if i > 0 {
             out.push(',');
@@ -393,6 +420,25 @@ pub fn hotpath_json(
             pt.argmin_us
         ));
     }
+    out.push_str("\n  ],\n  \"topo_sweep\": [");
+    for (i, pt) in topo_sweep.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"topo\": \"{}\", \"seed\": {}, \"digest\": \"{:#018x}\", \
+             \"p\": {}, \"m\": {}, \"two_level_us\": {:.4}, \"flat123_us\": {:.4}, \
+             \"selected\": \"{}\"}}",
+            json_escape(&pt.topo),
+            pt.seed,
+            pt.digest,
+            pt.p,
+            pt.m,
+            pt.two_level_us,
+            pt.flat123_us,
+            json_escape(&pt.selected)
+        ));
+    }
     out.push_str("\n  ]\n}\n");
     out
 }
@@ -519,6 +565,16 @@ mod tests {
             selected_us: 1234.5,
             argmin_us: 1234.5,
         }];
+        let topo = vec![TopoSweepPoint {
+            topo: "2level:4x9".into(),
+            seed: 7,
+            digest: 0x1234_5678_9abc_def0,
+            p: 36,
+            m: 4,
+            two_level_us: 24.5,
+            flat123_us: 60.25,
+            selected: "two-level".into(),
+        }];
         let j = hotpath_json(
             &[("host", "ci \"runner\"".to_string())],
             &points,
@@ -529,8 +585,14 @@ mod tests {
             &svc_lat,
             &soak,
             &crossover,
+            &topo,
         );
-        assert!(j.contains("\"schema\": \"exscan-hotpath-v6\""), "{j}");
+        assert!(j.contains("\"schema\": \"exscan-hotpath-v7\""), "{j}");
+        assert!(j.contains("\"topo_sweep\""), "{j}");
+        assert!(j.contains("\"topo\": \"2level:4x9\""), "{j}");
+        assert!(j.contains("\"digest\": \"0x123456789abcdef0\""), "{j}");
+        assert!(j.contains("\"two_level_us\": 24.5000"), "{j}");
+        assert!(j.contains("\"selected\": \"two-level\""), "{j}");
         assert!(j.contains("\"m_crossover\""), "{j}");
         assert!(j.contains("\"selected\": \"rsag\""), "{j}");
         assert!(j.contains("\"argmin_us\": 1234.5000"), "{j}");

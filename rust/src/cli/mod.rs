@@ -32,9 +32,15 @@ COMMANDS:
   calibrate fit the α-β-γ model to the embedded paper data
   predict   closed-form predictions for all algorithms
               --p N  --m N  --ranks-per-node N
+              --topo SPEC  per-link predictions + topology-aware selection
+                           (SPEC: flat:P | 2level:NxK | paper36x1;
+                            --topo-seed N, default 1)
   run       run one algorithm on a real transport backend
               --algo NAME  --p N  --m N  --reps N
               --transport thread|shm|tcp|uds  (default: thread)
+              --topo SPEC  run on the virtual clock priced by the per-link
+                           matrix instead (p comes from the spec; the
+                           two-level algo takes its node shape from it)
   trace     rounds, ⊕ counts and invariant check for one algorithm
               --algo NAME  --p N  --ranks-per-node N  --m N  --critical
   tune      print the cost-model-driven selection table
@@ -212,8 +218,12 @@ fn cmd_calibrate() -> Result<()> {
 }
 
 fn cmd_predict(args: &Args) -> Result<()> {
-    let p: usize = args.get("p", 36)?;
     let m: usize = args.get("m", 1000)?;
+    if let Some(spec) = args.flag("topo") {
+        let spec = spec.to_string();
+        return cmd_predict_topo(args, &spec, m);
+    }
+    let p: usize = args.get("p", 36)?;
     let rpn: usize = args.get("ranks-per-node", 1)?;
     let params = CostParams::paper_36x1();
     println!("closed-form α-β-γ predictions (p={p}, m={m}, {rpn} ranks/node):");
@@ -237,8 +247,57 @@ fn cmd_predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `exscan predict --topo SPEC`: per-link closed forms for every flat
+/// candidate plus the phase-composed two-level prediction, and the
+/// topology-aware selection winner.
+fn cmd_predict_topo(args: &Args, spec: &str, m: usize) -> Result<()> {
+    use crate::cost::{predict_flat_topo, predict_two_level};
+    let seed: u64 = args.get("topo-seed", 1u64)?;
+    let topo = crate::topo::Topo::parse(spec, seed)?;
+    let p = topo.size();
+    println!(
+        "per-link α-β-γ predictions on {} (p={p}, m={m}, seed {seed}, \
+         digest {:#018x}):",
+        topo.name(),
+        topo.matrix_digest()
+    );
+    println!(
+        "{:>18} {:>8} {:>6} {:>6} {:>12}",
+        "algorithm", "rounds", "ops", "inter", "time (µs)"
+    );
+    for algo in all_exscan_algorithms::<i64>() {
+        if algo.name() == "two-level" {
+            continue; // priced below with the topology's own node shape
+        }
+        let (skips, ops, msg_elems) = algo.critical_schedule(p, m);
+        let pred = predict_flat_topo(&skips, ops, msg_elems * 8, &topo);
+        println!(
+            "{:>18} {:>8} {:>6} {:>6} {:>12.2}",
+            algo.name(),
+            pred.rounds,
+            pred.ops,
+            pred.inter_rounds,
+            pred.time_us
+        );
+    }
+    if topo.is_hierarchical() {
+        let pred = predict_two_level(&topo, m * 8);
+        println!(
+            "{:>18} {:>8} {:>6} {:>6} {:>12.2}",
+            "two-level", pred.rounds, pred.ops, pred.inter_rounds, pred.time_us
+        );
+    }
+    let best = crate::coll::select_exscan_topo::<i64>(p, m, &topo);
+    println!("selected: {}", best.name());
+    Ok(())
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let name: String = args.get("algo", "123-doubling".to_string())?;
+    if let Some(spec) = args.flag("topo") {
+        let spec = spec.to_string();
+        return cmd_run_topo(args, &name, &spec);
+    }
     let p: usize = args.get("p", 36)?;
     let m: usize = args.get("m", 1000)?;
     let reps: usize = args.get("reps", 20)?;
@@ -254,6 +313,42 @@ fn cmd_run(args: &Args) -> Result<()> {
         "{} p={p} m={m} transport={backend}: min {:.2} µs, mean {:.2} µs (±{:.2}), \
          {} reps — output verified",
         meas.algo, meas.min_us, meas.mean_us, meas.stddev_us, meas.reps
+    );
+    Ok(())
+}
+
+/// `exscan run --topo SPEC`: one collective on a virtual-clock world
+/// priced by the per-link matrix, oracle-verified, with the modeled
+/// completion time and traced round count. The world size comes from the
+/// spec; `--algo two-level` takes its node shape from the matrix.
+fn cmd_run_topo(args: &Args, name: &str, spec: &str) -> Result<()> {
+    use std::sync::Arc;
+    let seed: u64 = args.get("topo-seed", 1u64)?;
+    let m: usize = args.get("m", 1000)?;
+    let topo = Arc::new(crate::topo::Topo::parse(spec, seed)?);
+    let p = topo.size();
+    let algo: Box<dyn ScanAlgorithm<i64>> = if name == "two-level" {
+        Box::new(crate::coll::ExscanTwoLevel::new(topo.ranks_per_node()))
+    } else {
+        exscan_by_name(name).ok_or_else(|| anyhow!("unknown algorithm {name}"))?
+    };
+    let cfg = WorldConfig::new(Topology::flat(p))
+        .virtual_clock_topo(topo.clone())
+        .with_trace(true);
+    let inputs = crate::bench::inputs_i64(p, m, 1);
+    let res = run_scan(&cfg, algo.as_ref(), &ops::bxor(), &inputs)?;
+    crate::coll::validate::assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+    let trace = res.trace.expect("tracing enabled");
+    let violations = crate::trace::check_all(&trace);
+    anyhow::ensure!(violations.is_empty(), "{} invariant violations", violations.len());
+    println!(
+        "{} on {} (seed {seed}, digest {:#018x}) p={p} m={m}: \
+         {:.2} µs virtual completion, {} rounds — output verified",
+        algo.name(),
+        topo.name(),
+        topo.matrix_digest(),
+        res.completion_us(),
+        trace.total_rounds()
     );
     Ok(())
 }

@@ -1,0 +1,273 @@
+//! **1247-doubling exclusive scan** — the doubly-fortified algorithm from
+//! Träff's 2026 follow-up *"Two Efficient Message-passing Exclusive Scan
+//! Algorithms"*: skips `1, 2, 4, 7, 14, 28, …` with **two** fortified
+//! rounds where [`Exscan123`](super::Exscan123) has one.
+//!
+//! * Round 0 shifts `V_{r-1}` into `W_r` (no ⊕), as in 123-doubling.
+//! * Rounds 1 (skip 2) and 2 (skip 4) are *fortified*: rank `r` sends
+//!   the inclusive partial `W ⊕ V`, so the receiver's trailing coverage
+//!   jumps `1 → 3 → 7` — one doubling-plus-one step further than 123's
+//!   single fortified round.
+//! * Rounds `k ≥ 3` are plain exclusive doubling with skips
+//!   `s_k = 7·2^{k-3} = c_{k-1}`: fold the incoming `W_{r-s}`, sent
+//!   as-is. Rank 0 (whose W is empty) exits after its round-2 send.
+//!
+//! Coverage after round `k` is `c_0 = 1, c_1 = 3, c_2 = 7, c_k =
+//! 2·c_{k-1}`, so the total is `q = ⌈log₂(p−1) + log₂(8/7)⌉` rounds —
+//! between [`ExscanPow2`](super::ExscanPow2)'s `⌈log₂ p⌉` lower bound and
+//! 123's `⌈log₂(p−1) + log₂(4/3)⌉` (strictly fewer than 123 at e.g.
+//! p = 29, equal at p = 36). The completion-critical rank still applies
+//! only `q − 1` ⊕ (round 0 is a copy); middle ranks pay up to one extra
+//! ⊕ in each of the two fortified rounds, so no rank exceeds `q + 1`.
+//! This is the middle step of the fortification ladder: more fortified
+//! rounds trade per-rank ⊕ for round count.
+
+use anyhow::Result;
+
+use super::{ScanAlgorithm, ScanKind};
+use crate::mpi::{Elem, OpRef, RankCtx};
+use crate::util::bits::rounds_1247;
+
+/// 1247-doubling exclusive scan (2026 follow-up paper).
+pub struct Exscan1247;
+
+impl<T: Elem> ScanAlgorithm<T> for Exscan1247 {
+    fn name(&self) -> &'static str {
+        "1247-doubling"
+    }
+
+    fn kind(&self) -> ScanKind {
+        ScanKind::Exclusive
+    }
+
+    fn run(
+        &self,
+        ctx: &mut RankCtx<T>,
+        input: &[T],
+        output: &mut [T],
+        op: &OpRef<T>,
+    ) -> Result<()> {
+        let (r, p) = (ctx.rank(), ctx.size());
+        if p <= 1 {
+            return Ok(());
+        }
+        let op = &ctx.kernel(op);
+        // ── Round 0, s_0 = 1: shift V right; establishes W_r = V_{r-1}. ──
+        {
+            let (t, f) = (r + 1, r.checked_sub(1));
+            match (t < p, f) {
+                (true, Some(f)) => ctx.sendrecv(0, t, input, f, output)?,
+                (true, None) => ctx.send(0, t, input)?, // rank 0
+                (false, Some(f)) => ctx.recv(0, f, output)?, // rank p-1
+                (false, None) => unreachable!("p > 1"),
+            }
+        }
+        if p == 2 {
+            return Ok(()); // rank 1 already holds V_0
+        }
+
+        // ── Fortified rounds 1 (skip 2) and 2 (skip 4): send W ⊕ V so the
+        // receiver's coverage jumps 1 → 3 → 7. Rank 0 sends its bare input
+        // (its inclusive partial is V_0) and pays no ⊕; the incoming
+        // partial always folds as the earlier operand. ──
+        for (k, s) in [(1u32, 2usize), (2, 4)] {
+            let send = r + s < p;
+            let recv = r >= s;
+            match (send, recv) {
+                (true, true) => {
+                    let mut w_prime = ctx.scratch_from(input);
+                    ctx.reduce_local(k, op, output, &mut w_prime);
+                    ctx.sendrecv_reduce_into(k, r + s, &w_prime, r - s, op, output)?;
+                }
+                (true, false) if r == 0 => ctx.send(k, r + s, input)?,
+                (true, false) => {
+                    let mut w_prime = ctx.scratch_from(input);
+                    ctx.reduce_local(k, op, output, &mut w_prime);
+                    ctx.send(k, r + s, &w_prime)?;
+                }
+                (false, true) => ctx.recv_reduce(k, r - s, op, output)?,
+                (false, false) => {}
+            }
+        }
+
+        // ── Rounds k >= 3, s_k = 7·2^(k-3) = c_{k-1}: plain exclusive
+        // doubling — the value sent is the value kept. Receives come from
+        // ranks f >= 1 only (r > s ⇒ f = r − s >= 1; rank 0 has left),
+        // and a rank whose coverage already reaches r (r <= c_{k-1}) only
+        // keeps sending. Both conditions are monotone in k, so a rank is
+        // done once neither holds. ──
+        let mut k = 3u32;
+        let mut s = 7usize;
+        loop {
+            let send = r >= 1 && r + s < p;
+            let recv = r > s; // r > c_{k-1}: still missing trailing inputs
+            match (send, recv) {
+                (true, true) => ctx.sendrecv_reduce(k, r + s, r - s, op, output)?,
+                (true, false) => ctx.send(k, r + s, output)?,
+                (false, true) => ctx.recv_reduce(k, r - s, op, output)?,
+                (false, false) => break,
+            }
+            k += 1;
+            s *= 2;
+        }
+        Ok(())
+    }
+
+    fn predicted_rounds(&self, p: usize) -> u32 {
+        rounds_1247(p)
+    }
+
+    /// `q − 1` ⊕ on the completion-critical rank `p−1` (round 0 is a
+    /// copy) — same count as 123-doubling at fewer-or-equal rounds.
+    fn predicted_ops(&self, p: usize) -> u32 {
+        rounds_1247(p).saturating_sub(1)
+    }
+
+    fn critical_skips(&self, p: usize) -> Vec<usize> {
+        // Receive distances of rank p-1: 1, 2, 4, 7, 14, … until coverage.
+        let q = rounds_1247(p);
+        (0..q)
+            .map(|k| match k {
+                0 => 1,
+                1 => 2,
+                2 => 4,
+                _ => 7 * (1usize << (k - 3)),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::validate::assert_exscan_matches;
+    use crate::mpi::{ops, run_scan, Topology, WorldConfig};
+    use crate::util::bits::{rounds_123, rounds_pow2};
+
+    #[test]
+    fn matches_oracle_exhaustive_small_p() {
+        for p in 2usize..=40 {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<i64>> = (0..p)
+                .map(|r| vec![(r as i64).wrapping_mul(0x2545_F491) ^ 0x3C3C, 1 << (r % 60)])
+                .collect();
+            let res = run_scan(&cfg, &Exscan1247, &ops::bxor(), &inputs).unwrap();
+            assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+        }
+    }
+
+    #[test]
+    fn closed_form_rounds_and_ops() {
+        for p in 2usize..=70 {
+            let cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+            let inputs: Vec<Vec<i64>> = (0..p).map(|r| vec![r as i64]).collect();
+            let res = run_scan(&cfg, &Exscan1247, &ops::bxor(), &inputs).unwrap();
+            let trace = res.trace.unwrap();
+            let algo: &dyn ScanAlgorithm<i64> = &Exscan1247;
+            let q = algo.predicted_rounds(p);
+            assert_eq!(trace.total_rounds(), q, "rounds p={p}");
+            assert_eq!(trace.last_rank_ops(), algo.predicted_ops(p), "last-rank ops p={p}");
+            // Middle ranks pay one extra ⊕ in each of the two fortified rounds.
+            assert!(trace.max_ops() <= q + 1, "max ops bound p={p}");
+            assert!(crate::trace::check_all(&trace).is_empty(), "invariants p={p}");
+        }
+    }
+
+    #[test]
+    fn sits_between_pow2_and_123() {
+        let algo: &dyn ScanAlgorithm<i64> = &Exscan1247;
+        for p in 2usize..=4096 {
+            assert!(rounds_pow2(p) <= algo.predicted_rounds(p), "p={p}");
+            assert!(algo.predicted_rounds(p) <= rounds_123(p), "p={p}");
+        }
+        // The second fortified round buys a real round at e.g. p = 29…
+        assert_eq!(algo.predicted_rounds(29), 5);
+        assert_eq!(rounds_123(29), 6);
+        // …and matches 123 at the paper's p = 36.
+        assert_eq!(algo.predicted_rounds(36), 6);
+    }
+
+    #[test]
+    fn small_p_edge_arms_exhaustive_under_chaos() {
+        use crate::mpi::ChaosConfig;
+        use crate::trace::EventKind;
+        for p in 2usize..=9 {
+            for seed in [21u64, 22, 23] {
+                let cfg = WorldConfig::new(Topology::flat(p))
+                    .with_trace(true)
+                    .with_chaos(ChaosConfig::new(seed ^ ((p as u64) << 8)));
+                let inputs: Vec<Vec<i64>> =
+                    (0..p).map(|r| vec![(r as i64 + 3) * 11, !(r as i64)]).collect();
+                let res = run_scan(&cfg, &Exscan1247, &ops::bxor(), &inputs).unwrap();
+                assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+                let trace = res.trace.unwrap();
+                let algo: &dyn ScanAlgorithm<i64> = &Exscan1247;
+                let q = algo.predicted_rounds(p);
+                assert_eq!(trace.total_rounds(), q, "rounds p={p} seed={seed}");
+                assert_eq!(
+                    trace.last_rank_ops(),
+                    algo.predicted_ops(p),
+                    "last-rank ops p={p} seed={seed}"
+                );
+                assert!(
+                    crate::trace::check_all(&trace).is_empty(),
+                    "invariants p={p} seed={seed}"
+                );
+                // Rank 0 only sends (rounds 0-2, as far as targets exist),
+                // never receives or reduces, even under chaos ordering.
+                let r0 = &trace.traces[0];
+                assert!(
+                    r0.events.iter().all(|e| !matches!(e.kind, EventKind::Recv { .. })),
+                    "rank 0 must not receive, p={p} seed={seed}"
+                );
+                assert_eq!(r0.ops(), 0, "rank 0 must not reduce, p={p} seed={seed}");
+                assert_eq!(
+                    r0.comm_rounds(),
+                    q.min(3),
+                    "rank 0 exits after its round-2 send, p={p} seed={seed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn noncommutative_order() {
+        use crate::coll::validate::oracle_exscan;
+        use crate::mpi::Rec2;
+        for p in [3usize, 5, 9, 14, 29] {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<Rec2>> = (0..p)
+                .map(|r| {
+                    vec![Rec2::new(
+                        [1.0, 0.02 * r as f32, -0.03 * r as f32, 1.0],
+                        [r as f32 * 0.4, 1.0 - r as f32 * 0.2],
+                    )]
+                })
+                .collect();
+            let res = run_scan(&cfg, &Exscan1247, &ops::rec2_compose(), &inputs).unwrap();
+            let oracle = oracle_exscan(&inputs, &ops::rec2_compose());
+            for r in 1..p {
+                let e = oracle[r].as_ref().unwrap();
+                for i in 0..4 {
+                    assert!(
+                        (res.outputs[r][0].a[i] - e[0].a[i]).abs() < 1e-3,
+                        "p={p} r={r} a[{i}]"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_element_vectors() {
+        let p = 23;
+        for m in [0usize, 1, 2, 17, 256] {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<i64>> = (0..p)
+                .map(|r| (0..m).map(|i| (r * 37 + i * 13) as i64).collect())
+                .collect();
+            let res = run_scan(&cfg, &Exscan1247, &ops::sum_i64(), &inputs).unwrap();
+            assert_exscan_matches(&inputs, &ops::sum_i64(), &res.outputs);
+        }
+    }
+}

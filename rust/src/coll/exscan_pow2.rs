@@ -1,0 +1,253 @@
+//! **Pow2-doubling exclusive scan** — the fully-fortified algorithm from
+//! Träff's 2026 follow-up *"Two Efficient Message-passing Exclusive Scan
+//! Algorithms"*: every round sends the *inclusive* partial `W ⊕ V`, which
+//! drives the round count down to the one-ported information lower bound
+//! `⌈log₂ p⌉` at the price of roughly one extra ⊕ per rank per round.
+//!
+//! Invariant before round `k`: rank `r` holds `W` covering its
+//! `min(2^k − 1, r)` trailing inputs `V_{r−c} … V_{r−1}`. Round `k`
+//! (skip `2^k`): rank `r` sends `W ⊕ V` (covering `min(2^k, r+1)`
+//! trailing inputs *ending at* `V_r`) to `r + 2^k` iff that exists, and
+//! receives from `r − 2^k` iff `r ≥ 2^k`, folding the incoming partial
+//! as the *earlier* operand. The two operands abut exactly, so coverage
+//! doubles (+1): after round `k` it is `min(2^{k+1} − 1, r)` and rank
+//! `p−1` completes once `2^q − 1 ≥ p − 1`, i.e. after `⌈log₂ p⌉` rounds.
+//!
+//! Compared to [`Exscan123`](super::Exscan123) (one fortified round,
+//! `⌈log₂(p−1) + log₂(4/3)⌉` rounds, ~1 ⊕/rank/round) this is the other
+//! end of the fortification ladder: every round fortified, fewest
+//! possible rounds, up to 2 ⊕ per rank per round. [`Exscan1247`]
+//! (two fortified rounds) sits between them.
+//!
+//! Closed forms (checked against traces): rounds `K = ⌈log₂ p⌉`;
+//! completion-critical rank `p−1` applies `K − 1` ⊕ (its round-0 receive
+//! is a plain copy); no rank applies more than `2(K−1)`.
+//!
+//! [`Exscan1247`]: super::Exscan1247
+
+use anyhow::Result;
+
+use super::{ScanAlgorithm, ScanKind};
+use crate::mpi::{Elem, OpRef, RankCtx};
+use crate::util::bits::rounds_pow2;
+
+/// Fully-fortified pow2-doubling exclusive scan (2026 follow-up paper).
+pub struct ExscanPow2;
+
+impl<T: Elem> ScanAlgorithm<T> for ExscanPow2 {
+    fn name(&self) -> &'static str {
+        "pow2-doubling"
+    }
+
+    fn kind(&self) -> ScanKind {
+        ScanKind::Exclusive
+    }
+
+    fn run(
+        &self,
+        ctx: &mut RankCtx<T>,
+        input: &[T],
+        output: &mut [T],
+        op: &OpRef<T>,
+    ) -> Result<()> {
+        let (r, p) = (ctx.rank(), ctx.size());
+        if p <= 1 {
+            return Ok(());
+        }
+        let op = &ctx.kernel(op);
+        // ── Round 0, skip 1: plain shift. The outgoing inclusive partial
+        // is just V (W is still empty everywhere), and the incoming V_{r-1}
+        // is a copy, not a fold — this is where the critical rank saves
+        // its ⊕ relative to the naive two-⊕ doubling. ──
+        {
+            let (t, f) = (r + 1, r.checked_sub(1));
+            match (t < p, f) {
+                (true, Some(f)) => ctx.sendrecv(0, t, input, f, output)?,
+                (true, None) => ctx.send(0, t, input)?, // rank 0
+                (false, Some(f)) => ctx.recv(0, f, output)?, // rank p-1
+                (false, None) => unreachable!("p > 1"),
+            }
+        }
+
+        // ── Rounds k >= 1, skip 2^k: send W ⊕ V, fold the incoming as the
+        // earlier operand. Rank 0's W stays empty for the whole run, so it
+        // keeps sending its bare input (its inclusive partial *is* V_0)
+        // and never pays a ⊕. Send/recv activity are both monotone in k,
+        // so a rank is done once neither port is active. ──
+        let mut k = 1u32;
+        let mut s = 2usize;
+        loop {
+            let send = r + s < p;
+            let recv = r >= s;
+            match (send, recv) {
+                (true, true) => {
+                    let mut w_prime = ctx.scratch_from(input);
+                    ctx.reduce_local(k, op, output, &mut w_prime);
+                    ctx.sendrecv_reduce_into(k, r + s, &w_prime, r - s, op, output)?;
+                }
+                (true, false) if r == 0 => ctx.send(k, r + s, input)?,
+                (true, false) => {
+                    let mut w_prime = ctx.scratch_from(input);
+                    ctx.reduce_local(k, op, output, &mut w_prime);
+                    ctx.send(k, r + s, &w_prime)?;
+                }
+                (false, true) => ctx.recv_reduce(k, r - s, op, output)?,
+                (false, false) => break,
+            }
+            k += 1;
+            s *= 2;
+        }
+        Ok(())
+    }
+
+    /// `⌈log₂ p⌉` — the one-ported round lower bound, met exactly.
+    fn predicted_rounds(&self, p: usize) -> u32 {
+        rounds_pow2(p)
+    }
+
+    /// `K − 1` ⊕ on the completion-critical rank `p−1`: it folds one
+    /// incoming partial per round except round 0 (a copy).
+    fn predicted_ops(&self, p: usize) -> u32 {
+        rounds_pow2(p).saturating_sub(1)
+    }
+
+    fn critical_skips(&self, p: usize) -> Vec<usize> {
+        // Rank p-1 receives every round: distances 1, 2, 4, …, 2^(K-1).
+        (0..rounds_pow2(p)).map(|k| 1usize << k).collect()
+    }
+
+    /// Selection prices the sender-side fortification honestly: each
+    /// critical-path arrival was preceded by the sender's own `W ⊕ V`
+    /// preparation, which serializes on the same dependency chain. So the
+    /// schedule carries `2(K−1)` ⊕ even though the critical *rank's* trace
+    /// shows `K−1` — otherwise pow2 would falsely dominate 123-doubling
+    /// at large m, where its extra ⊕ volume is exactly what 123 avoids.
+    fn critical_schedule(&self, p: usize, m: usize) -> (Vec<usize>, u32, usize) {
+        let k = rounds_pow2(p);
+        (
+            <Self as ScanAlgorithm<T>>::critical_skips(self, p),
+            2 * k.saturating_sub(1),
+            m,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::validate::assert_exscan_matches;
+    use crate::mpi::{ops, run_scan, Topology, WorldConfig};
+    use crate::util::bits::rounds_123;
+
+    #[test]
+    fn matches_oracle_exhaustive_small_p() {
+        for p in 2usize..=40 {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<i64>> = (0..p)
+                .map(|r| vec![(r as i64).wrapping_mul(0x9E37_79B9) ^ 0x0F0F, 1 << (r % 60)])
+                .collect();
+            let res = run_scan(&cfg, &ExscanPow2, &ops::bxor(), &inputs).unwrap();
+            assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+        }
+    }
+
+    #[test]
+    fn closed_form_rounds_and_ops() {
+        for p in 2usize..=70 {
+            let cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+            let inputs: Vec<Vec<i64>> = (0..p).map(|r| vec![r as i64]).collect();
+            let res = run_scan(&cfg, &ExscanPow2, &ops::bxor(), &inputs).unwrap();
+            let trace = res.trace.unwrap();
+            let algo: &dyn ScanAlgorithm<i64> = &ExscanPow2;
+            let k = algo.predicted_rounds(p);
+            assert_eq!(trace.total_rounds(), k, "rounds p={p}");
+            assert_eq!(trace.last_rank_ops(), algo.predicted_ops(p), "last-rank ops p={p}");
+            // Middle ranks pay at most 2 ⊕ per fortified round.
+            assert!(trace.max_ops() <= 2 * k.saturating_sub(1), "max ops bound p={p}");
+            assert!(crate::trace::check_all(&trace).is_empty(), "invariants p={p}");
+        }
+    }
+
+    #[test]
+    fn meets_round_lower_bound_beating_123() {
+        let algo: &dyn ScanAlgorithm<i64> = &ExscanPow2;
+        // p = 256: 8 rounds, one fewer than 123-doubling's 9.
+        assert_eq!(algo.predicted_rounds(256), 8);
+        assert_eq!(rounds_123(256), 9);
+        // And never more rounds than 123 anywhere.
+        for p in 2usize..=4096 {
+            assert!(algo.predicted_rounds(p) <= rounds_123(p), "p={p}");
+        }
+    }
+
+    #[test]
+    fn rank0_never_receives_or_reduces_under_chaos() {
+        use crate::mpi::ChaosConfig;
+        use crate::trace::EventKind;
+        for p in 2usize..=6 {
+            for seed in [11u64, 12, 13] {
+                let cfg = WorldConfig::new(Topology::flat(p))
+                    .with_trace(true)
+                    .with_chaos(ChaosConfig::new(seed ^ ((p as u64) << 8)));
+                let inputs: Vec<Vec<i64>> =
+                    (0..p).map(|r| vec![(r as i64 + 7) * 5, !(r as i64)]).collect();
+                let res = run_scan(&cfg, &ExscanPow2, &ops::bxor(), &inputs).unwrap();
+                assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+                let trace = res.trace.unwrap();
+                let algo: &dyn ScanAlgorithm<i64> = &ExscanPow2;
+                let k = algo.predicted_rounds(p);
+                assert_eq!(trace.total_rounds(), k, "rounds p={p} seed={seed}");
+                assert!(crate::trace::check_all(&trace).is_empty(), "invariants p={p} seed={seed}");
+                // Rank 0 sends its bare input every round and never folds.
+                let r0 = &trace.traces[0];
+                assert!(
+                    r0.events.iter().all(|e| !matches!(e.kind, EventKind::Recv { .. })),
+                    "rank 0 must not receive, p={p} seed={seed}"
+                );
+                assert_eq!(r0.ops(), 0, "rank 0 must not reduce, p={p} seed={seed}");
+                assert_eq!(r0.comm_rounds(), k, "rank 0 sends in every round, p={p} seed={seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn noncommutative_order() {
+        use crate::coll::validate::oracle_exscan;
+        use crate::mpi::Rec2;
+        for p in [3usize, 5, 9, 16, 27] {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<Rec2>> = (0..p)
+                .map(|r| {
+                    vec![Rec2::new(
+                        [1.0, 0.03 * r as f32, -0.02 * r as f32, 1.0],
+                        [r as f32 * 0.25, 1.0 - r as f32 * 0.5],
+                    )]
+                })
+                .collect();
+            let res = run_scan(&cfg, &ExscanPow2, &ops::rec2_compose(), &inputs).unwrap();
+            let oracle = oracle_exscan(&inputs, &ops::rec2_compose());
+            for r in 1..p {
+                let e = oracle[r].as_ref().unwrap();
+                for i in 0..4 {
+                    assert!(
+                        (res.outputs[r][0].a[i] - e[0].a[i]).abs() < 1e-3,
+                        "p={p} r={r} a[{i}]"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_element_vectors() {
+        let p = 21;
+        for m in [0usize, 1, 2, 17, 256] {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<i64>> = (0..p)
+                .map(|r| (0..m).map(|i| (r * 29 + i * 11) as i64).collect())
+                .collect();
+            let res = run_scan(&cfg, &ExscanPow2, &ops::sum_i64(), &inputs).unwrap();
+            assert_exscan_matches(&inputs, &ops::sum_i64(), &res.outputs);
+        }
+    }
+}

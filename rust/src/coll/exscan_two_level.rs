@@ -1,0 +1,416 @@
+//! **Two-level topology-aware exclusive scan**: leaders run the
+//! round-optimal [`Exscan123`] *across* node groups while members
+//! resolve intra-node over the cheap links — the optimization the
+//! hierarchical-network analysis leaves open and [`crate::topo`] makes
+//! measurable.
+//!
+//! Ranks are block-grouped by `ppn` (group `j` = scope ranks
+//! `[j·ppn, min((j+1)·ppn, p))`, ragged last group allowed; matches
+//! [`crate::topo::Topo::node_of`]), each group's first member is its
+//! leader. Four phases, all on reserved sub-communicator contexts so
+//! nothing collides with the ambient scope:
+//!
+//! 1. **Intra-node exscan** — every group runs [`Exscan123`] on its own
+//!    node communicator: member `i` of group `j` holds
+//!    `W = V_{lo} ⊕ … ⊕ V_{lo+i−1}` (`lo = j·ppn`).
+//! 2. **Node totals** — each group's *last* member computes
+//!    `total_j = W ⊕ V` (one ⊕) and sends it to its leader (a plain
+//!    receive; a singleton group's total is just its input).
+//! 3. **Leader exscan** — leaders run [`Exscan123`] over the totals on
+//!    the leader communicator (the only inter-node phase:
+//!    `rounds_123(G)` expensive hops). Leader `j > 0` receives
+//!    `P_j = total_0 ⊕ … ⊕ total_{j−1}` **directly into its main output**
+//!    — exactly its exscan value; leader 0's output stays untouched,
+//!    per MPI_Exscan.
+//! 4. **Broadcast + fold** — leader `j > 0` broadcasts `P_j` down its
+//!    group (binomial, intra-node); member `i > 0` folds it as the
+//!    *earlier* operand into its phase-1 `W`. Group 0 skips both.
+//!
+//! All groups share ONE node context id (disjoint rank sets cannot
+//! cross-match; message keys carry the source rank), so the traced
+//! global round count is the *union* of per-group round indices — the
+//! round plan [`two_level_rounds`] states in closed form — plus the
+//! leader phase, not a per-group sum. No world [`barrier`] is used
+//! anywhere (it is world-wide; this code is group-divergent).
+//!
+//! Closed forms (checked against traces): rounds = [`two_level_rounds`];
+//! the completion-critical rank `p−1` applies [`two_level_ops`] ⊕
+//! (`rounds_123(k_last) + 1` in the common case: its phase-1 count plus
+//! the total preparation plus the final fold); no rank exceeds
+//! `rounds_123(ppn) + rounds_123(G) + 2`.
+//!
+//! [`Exscan123`]: super::Exscan123
+//! [`barrier`]: crate::mpi::RankCtx::barrier
+
+use anyhow::Result;
+
+use super::basic::bcast;
+use super::exscan_123::Exscan123;
+use super::{ScanAlgorithm, ScanKind};
+use crate::mpi::{Comm, Elem, OpRef, RankCtx};
+use crate::util::bits::rounds_123;
+use crate::util::ceil_log2;
+
+/// Closed-form global round count of the two-level scheme at group width
+/// `ppn`: the union of every group's node-context round indices (each
+/// group uses the prefix `{0 .. r123(k_j)}`, groups `j > 0` extend it by
+/// their `⌈log₂ k_j⌉` broadcast rounds) plus the `rounds_123(G)` leader
+/// rounds. Degenerate shapes collapse: one group → plain `rounds_123(p)`;
+/// all-singleton groups → pure leader exscan.
+pub fn two_level_rounds(ppn: usize, p: usize) -> u32 {
+    assert!(ppn >= 1);
+    if p <= 1 {
+        return 0;
+    }
+    let g = p.div_ceil(ppn);
+    if g == 1 {
+        return rounds_123(p);
+    }
+    let mut node_max = 0u32;
+    for j in 0..g {
+        let lo = j * ppn;
+        let kj = ppn.min(p - lo);
+        if kj <= 1 {
+            continue; // singleton group: no node-context traffic at all
+        }
+        // Phase-1 rounds 0..r123(kj)-1, the totals hop at r123(kj)…
+        let mut top = rounds_123(kj) + 1;
+        // …and for j > 0 the broadcast rounds stacked after it.
+        if j > 0 {
+            top += ceil_log2(kj);
+        }
+        node_max = node_max.max(top);
+    }
+    node_max + rounds_123(g)
+}
+
+/// Closed-form ⊕ count on the completion-critical rank `p−1`.
+pub fn two_level_ops(ppn: usize, p: usize) -> u32 {
+    assert!(ppn >= 1);
+    if p <= 1 {
+        return 0;
+    }
+    let g = p.div_ceil(ppn);
+    if g == 1 {
+        return rounds_123(p).saturating_sub(1);
+    }
+    let kl = p - (g - 1) * ppn;
+    if kl == 1 {
+        // Rank p−1 is the last leader: its leader-phase receives only
+        // (the first is a copy), no total prep, no final fold.
+        rounds_123(g).saturating_sub(1)
+    } else {
+        // Phase-1 last-rank count + the total preparation + the fold of
+        // the broadcast prefix.
+        rounds_123(kl) + 1
+    }
+}
+
+/// Safe upper bound on any rank's ⊕ count (leaders pay the leader-phase
+/// fortification, members the total prep and final fold).
+pub fn two_level_max_ops(ppn: usize, p: usize) -> u32 {
+    let g = p.div_ceil(ppn.max(1));
+    rounds_123(ppn.min(p)) + rounds_123(g) + 2
+}
+
+/// Two-level topology-aware exclusive scan (leaders bridge node groups).
+pub struct ExscanTwoLevel {
+    ppn: usize,
+}
+
+impl ExscanTwoLevel {
+    /// Group width (ranks per node). Pair it with the matching
+    /// [`crate::topo::Topo`] preset so the grouping and the link matrix
+    /// agree (`ExscanTwoLevel::new(topo.ranks_per_node())`).
+    pub fn new(ppn: usize) -> Self {
+        assert!(ppn >= 1, "ranks-per-node must be >= 1");
+        ExscanTwoLevel { ppn }
+    }
+
+    pub fn ppn(&self) -> usize {
+        self.ppn
+    }
+}
+
+impl<T: Elem> ScanAlgorithm<T> for ExscanTwoLevel {
+    fn name(&self) -> &'static str {
+        "two-level"
+    }
+
+    fn kind(&self) -> ScanKind {
+        ScanKind::Exclusive
+    }
+
+    fn run(
+        &self,
+        ctx: &mut RankCtx<T>,
+        input: &[T],
+        output: &mut [T],
+        op: &OpRef<T>,
+    ) -> Result<()> {
+        let (r, p) = (ctx.rank(), ctx.size());
+        if p <= 1 {
+            return Ok(());
+        }
+        let ppn = self.ppn;
+        let g = p.div_ceil(ppn);
+        if g == 1 {
+            // One group: the leader scheme degenerates to the flat
+            // round-optimal algorithm on the ambient scope.
+            return Exscan123.run(ctx, input, output, op);
+        }
+
+        // Reserved sub-communicator contexts, derived from the ambient
+        // scope so concurrent two-level runs on different communicators
+        // stay match-isolated. CtxAlloc hands out ids from 1 upward, so
+        // the 0x8000+ range is free until ~32k live communicators.
+        let ambient = ctx.ctx_id();
+        assert!(
+            ambient < 0x80,
+            "two-level reserves contexts 0x8000+ per ambient ctx; ambient {ambient} too large"
+        );
+        let leader_ctx: u16 = 0x8000 + ambient * 0x100;
+        let node_ctx: u16 = leader_ctx + 1;
+
+        let j = r / ppn;
+        let lo = j * ppn;
+        let kj = ppn.min(p - lo);
+        let q_k = rounds_123(kj);
+
+        // ONE shared node context for all (disjoint) groups: message keys
+        // carry the source rank, so groups cannot cross-match, and the
+        // traced global round count stays the union of the groups' round
+        // indices instead of a per-group sum.
+        let group: Vec<usize> = (lo..lo + kj).map(|i| ctx.scope_world_rank(i)).collect();
+        let node_comm = Comm::new(node_ctx, group);
+        let opk = ctx.kernel(op);
+
+        // ── Phase 1: intra-node exscan (node rounds 0 .. q_k−1). ──
+        ctx.with_comm(&node_comm, |c| Exscan123.run(c, input, output, op))?;
+
+        if r == lo {
+            // ── Leader: collect the node total, bridge the groups, then
+            // broadcast the group prefix back down. ──
+            let mut total = ctx.scratch_from(input); // k_j == 1: total = V
+            if kj > 1 {
+                ctx.with_comm(&node_comm, |c| c.recv(q_k, kj - 1, &mut total))?;
+            }
+            let leaders: Vec<usize> = (0..g).map(|jj| ctx.scope_world_rank(jj * ppn)).collect();
+            let leader_comm = Comm::new(leader_ctx, leaders);
+            // ── Phase 3 (leader rounds 0 .. r123(G)−1): P_j lands
+            // directly in the main output — it IS leader j's exscan
+            // value; leader 0's output stays untouched. ──
+            ctx.with_comm(&leader_comm, |c| Exscan123.run(c, &total, output, op))?;
+            if j > 0 && kj > 1 {
+                ctx.with_comm(&node_comm, |c| bcast(c, q_k + 1, 0, output).map(|_| ()))?;
+            }
+        } else {
+            if r == lo + kj - 1 {
+                // ── Phase 2 (node round q_k): last member prepares
+                // total_j = W ⊕ V (W is the earlier operand) and ships it
+                // to the leader. ──
+                let mut total = ctx.scratch_from(input);
+                ctx.with_comm(&node_comm, |c| {
+                    c.reduce_local(q_k, &opk, output, &mut total);
+                    c.send(q_k, 0, &total)
+                })?;
+            }
+            if j > 0 {
+                // ── Phase 4 (node rounds q_k+1 ..): receive P_j and fold
+                // it as the earlier operand into the phase-1 W. Group 0's
+                // members already hold their final value. ──
+                let mut pfx = ctx.scratch_from(input);
+                ctx.with_comm(&node_comm, |c| {
+                    bcast(c, q_k + 1, 0, &mut pfx)?;
+                    c.reduce_local(q_k + ceil_log2(kj), &opk, &pfx, output);
+                    Ok(())
+                })?;
+            }
+        }
+        Ok(())
+    }
+
+    fn predicted_rounds(&self, p: usize) -> u32 {
+        two_level_rounds(self.ppn, p)
+    }
+
+    fn predicted_ops(&self, p: usize) -> u32 {
+        two_level_ops(self.ppn, p)
+    }
+
+    fn critical_skips(&self, p: usize) -> Vec<usize> {
+        // Flat-model approximation of the critical dependency chain (the
+        // topology-aware predictor prices the phases off the link matrix
+        // instead — `cost::predict::predict_two_level`): phase-1 receive
+        // distances inside the last group (intra), the leader hops scaled
+        // by the group width (inter), and the binomial broadcast hops
+        // back down (intra).
+        let ppn = self.ppn;
+        if p <= 1 {
+            return Vec::new();
+        }
+        let g = p.div_ceil(ppn);
+        if g == 1 {
+            return <Exscan123 as ScanAlgorithm<T>>::critical_skips(&Exscan123, p);
+        }
+        let kl = p - (g - 1) * ppn;
+        let mut skips = Vec::new();
+        if kl > 1 {
+            skips.extend(<Exscan123 as ScanAlgorithm<T>>::critical_skips(&Exscan123, kl));
+            skips.push(kl - 1); // totals hop to the leader
+        }
+        for s in <Exscan123 as ScanAlgorithm<T>>::critical_skips(&Exscan123, g) {
+            skips.push(s * ppn); // leader hops span whole groups
+        }
+        if kl > 1 {
+            for i in 0..ceil_log2(kl) {
+                skips.push(1usize << i); // binomial broadcast back down
+            }
+        }
+        skips
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coll::validate::assert_exscan_matches;
+    use crate::mpi::{ops, run_scan, Topology, WorldConfig};
+
+    #[test]
+    fn matches_oracle_exhaustive_small_p() {
+        for ppn in [1usize, 2, 3, 4, 5, 8] {
+            for p in 2usize..=40 {
+                let cfg = WorldConfig::new(Topology::flat(p));
+                let inputs: Vec<Vec<i64>> = (0..p)
+                    .map(|r| vec![(r as i64).wrapping_mul(0x6C62_272E) ^ 0xA5A5, 1 << (r % 60)])
+                    .collect();
+                let res =
+                    run_scan(&cfg, &ExscanTwoLevel::new(ppn), &ops::bxor(), &inputs).unwrap();
+                assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+            }
+        }
+    }
+
+    #[test]
+    fn closed_form_rounds_and_ops() {
+        for ppn in [1usize, 2, 3, 4, 7] {
+            for p in 2usize..=40 {
+                let cfg = WorldConfig::new(Topology::flat(p)).with_trace(true);
+                let inputs: Vec<Vec<i64>> = (0..p).map(|r| vec![r as i64]).collect();
+                let algo = ExscanTwoLevel::new(ppn);
+                let res = run_scan(&cfg, &algo, &ops::bxor(), &inputs).unwrap();
+                let trace = res.trace.unwrap();
+                let a: &dyn ScanAlgorithm<i64> = &algo;
+                assert_eq!(
+                    trace.total_rounds(),
+                    a.predicted_rounds(p),
+                    "rounds ppn={ppn} p={p}"
+                );
+                assert_eq!(
+                    trace.last_rank_ops(),
+                    a.predicted_ops(p),
+                    "last-rank ops ppn={ppn} p={p}"
+                );
+                assert!(
+                    trace.max_ops() <= two_level_max_ops(ppn, p),
+                    "max ops bound ppn={ppn} p={p}"
+                );
+                assert!(
+                    crate::trace::check_all(&trace).is_empty(),
+                    "invariants ppn={ppn} p={p}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_collapse() {
+        // One group: identical round/⊕ counts to plain 123-doubling.
+        for p in 2usize..=8 {
+            assert_eq!(two_level_rounds(8, p), rounds_123(p), "p={p}");
+            assert_eq!(two_level_ops(8, p), rounds_123(p).saturating_sub(1), "p={p}");
+        }
+        // All-singleton groups: a pure leader exscan.
+        for p in 2usize..=16 {
+            assert_eq!(two_level_rounds(1, p), rounds_123(p), "p={p}");
+        }
+        // The paper-shaped 4x9 cluster: 4 node rounds + 1 totals hop +
+        // leader exscan over 4 + 4 broadcast rounds... stated exactly.
+        let expect = rounds_123(9) + 1 + ceil_log2(9) + rounds_123(4);
+        assert_eq!(two_level_rounds(9, 36), expect);
+        assert_eq!(two_level_ops(9, 36), rounds_123(9) + 1);
+    }
+
+    #[test]
+    fn chaos_differential_at_fixed_seeds() {
+        use crate::mpi::ChaosConfig;
+        for ppn in [2usize, 3, 4] {
+            for p in [5usize, 9, 12, 17] {
+                for seed in [31u64, 32, 33] {
+                    let cfg = WorldConfig::new(Topology::flat(p))
+                        .with_trace(true)
+                        .with_chaos(ChaosConfig::new(seed ^ ((p as u64) << 8) ^ (ppn as u64)));
+                    let inputs: Vec<Vec<i64>> =
+                        (0..p).map(|r| vec![(r as i64 + 13) * 7, !(r as i64)]).collect();
+                    let algo = ExscanTwoLevel::new(ppn);
+                    let res = run_scan(&cfg, &algo, &ops::bxor(), &inputs).unwrap();
+                    assert_exscan_matches(&inputs, &ops::bxor(), &res.outputs);
+                    let trace = res.trace.unwrap();
+                    let a: &dyn ScanAlgorithm<i64> = &algo;
+                    assert_eq!(
+                        trace.total_rounds(),
+                        a.predicted_rounds(p),
+                        "rounds ppn={ppn} p={p} seed={seed}"
+                    );
+                    assert!(
+                        crate::trace::check_all(&trace).is_empty(),
+                        "invariants ppn={ppn} p={p} seed={seed}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn noncommutative_order() {
+        use crate::coll::validate::oracle_exscan;
+        use crate::mpi::Rec2;
+        for (p, ppn) in [(9usize, 3usize), (12, 4), (14, 4), (27, 9)] {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<Rec2>> = (0..p)
+                .map(|r| {
+                    vec![Rec2::new(
+                        [1.0, 0.02 * r as f32, -0.015 * r as f32, 1.0],
+                        [r as f32 * 0.3, 1.0 - r as f32 * 0.35],
+                    )]
+                })
+                .collect();
+            let res =
+                run_scan(&cfg, &ExscanTwoLevel::new(ppn), &ops::rec2_compose(), &inputs).unwrap();
+            let oracle = oracle_exscan(&inputs, &ops::rec2_compose());
+            for r in 1..p {
+                let e = oracle[r].as_ref().unwrap();
+                for i in 0..4 {
+                    assert!(
+                        (res.outputs[r][0].a[i] - e[0].a[i]).abs() < 1e-3,
+                        "p={p} ppn={ppn} r={r} a[{i}]"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_element_vectors() {
+        let (p, ppn) = (18, 5);
+        for m in [0usize, 1, 2, 17, 256] {
+            let cfg = WorldConfig::new(Topology::flat(p));
+            let inputs: Vec<Vec<i64>> = (0..p)
+                .map(|r| (0..m).map(|i| (r * 41 + i * 17) as i64).collect())
+                .collect();
+            let res = run_scan(&cfg, &ExscanTwoLevel::new(ppn), &ops::sum_i64(), &inputs).unwrap();
+            assert_exscan_matches(&inputs, &ops::sum_i64(), &res.outputs);
+        }
+    }
+}

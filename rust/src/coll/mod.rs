@@ -16,6 +16,9 @@
 //! | [`ExscanChunked`] | exclusive | (1+⌈log₂(p−1)⌉)·C | ⌈log₂(p−1)⌉·C (C chunks) |
 //! | [`ExscanBlock`] | exclusive | 2(g−1)+q(p/g) | 2(g−1)+q(p/g)−1, m/g-elem msgs |
 //! | [`ExscanRsag`] | exclusive | 2(p−1) | p−2, m/p-element messages |
+//! | [`ExscanPow2`] (2026 follow-up) | exclusive | ⌈log₂p⌉ | ⌈log₂p⌉−1 (≤2(⌈log₂p⌉−1) max) |
+//! | [`Exscan1247`] (2026 follow-up) | exclusive | ⌈log₂(p−1)+log₂(8/7)⌉ | q−1 (≤q+1 max) |
+//! | [`ExscanTwoLevel`] (topology-aware) | exclusive | [`exscan_two_level::two_level_rounds`] | r₁₂₃(k)+1 |
 //!
 //! The first block of rows is the paper's **small-m** regime: full-vector
 //! messages every round, so fewer rounds wins. The last two rows are the
@@ -28,6 +31,7 @@
 
 pub mod basic;
 pub mod exscan_123;
+pub mod exscan_1247;
 pub mod exscan_blelloch;
 pub mod exscan_block;
 pub mod exscan_chunked;
@@ -35,8 +39,10 @@ pub mod exscan_hierarchical;
 pub mod exscan_linear;
 pub mod exscan_mpich;
 pub mod exscan_one_doubling;
+pub mod exscan_pow2;
 pub mod exscan_rsag;
 pub mod exscan_shift_scan;
+pub mod exscan_two_level;
 pub mod exscan_two_op;
 pub mod scan_doubling;
 pub mod scan_pipelined;
@@ -46,6 +52,7 @@ pub mod validate;
 
 pub use basic::{allreduce, bcast, gather_chain, reduce, scatter_chain};
 pub use exscan_123::Exscan123;
+pub use exscan_1247::Exscan1247;
 pub use exscan_chunked::ExscanChunked;
 pub use exscan_hierarchical::ExscanHierarchical;
 pub use segmented::{seg_bxor_i64, seg_max_i64, seg_sum_i64, Seg};
@@ -54,12 +61,14 @@ pub use exscan_block::ExscanBlock;
 pub use exscan_linear::ExscanLinear;
 pub use exscan_mpich::ExscanMpich;
 pub use exscan_one_doubling::ExscanOneDoubling;
+pub use exscan_pow2::ExscanPow2;
 pub use exscan_rsag::ExscanRsag;
 pub use exscan_shift_scan::ExscanShiftScan;
+pub use exscan_two_level::{two_level_max_ops, two_level_ops, two_level_rounds, ExscanTwoLevel};
 pub use exscan_two_op::ExscanTwoOp;
 pub use scan_doubling::ScanDoubling;
 pub use scan_pipelined::PipelinedChain;
-pub use select::{select_candidates, select_exscan, TuningTable};
+pub use select::{select_candidates, select_exscan, select_exscan_topo, TuningTable};
 pub use validate::{oracle_exscan, oracle_scan};
 
 use anyhow::Result;
@@ -155,6 +164,9 @@ pub fn all_exscan_algorithms<T: Elem>() -> Vec<Box<dyn ScanAlgorithm<T>>> {
         Box::new(ExscanChunked::auto()),
         Box::new(ExscanBlock::auto()),
         Box::new(ExscanRsag),
+        Box::new(ExscanPow2),
+        Box::new(Exscan1247),
+        Box::new(ExscanTwoLevel::new(4)),
     ]
 }
 

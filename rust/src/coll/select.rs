@@ -7,12 +7,13 @@
 //! [`TuningTable`] caches the decision boundaries so the hot path is a
 //! lookup, exactly like `MPIR_CVAR`-style tuning files.
 
-use crate::cost::{predict_flat, CostParams};
+use crate::cost::{predict_flat, predict_flat_topo, predict_two_level, CostParams};
 use crate::mpi::Elem;
+use crate::topo::Topo;
 
 use super::{
-    exscan_by_name, paper_exscan_algorithms, ExscanBlock, ExscanRsag, PipelinedChain,
-    ScanAlgorithm,
+    exscan_by_name, paper_exscan_algorithms, Exscan1247, ExscanBlock, ExscanPow2, ExscanRsag,
+    ExscanTwoLevel, PipelinedChain, ScanAlgorithm,
 };
 
 /// The selection candidate pool: the paper's three portable round-optimal
@@ -51,6 +52,42 @@ pub fn select_exscan<T: Elem>(
             predict_flat(&skips, ops, p, ranks_per_node, msg_elems * T::size_bytes(), params);
         if best.as_ref().map(|(t, _)| pred.time_us < *t).unwrap_or(true) {
             best = Some((pred.time_us, algo));
+        }
+    }
+    best.expect("at least one candidate").1
+}
+
+/// Topology-aware selection: rank the flat pool *plus* the follow-up
+/// algorithms and the two-level scheme against a concrete [`Topo`] link
+/// matrix. The flat candidates come first and the argmin is strict, so
+/// on a uniform matrix (where per-link pricing degenerates to the class
+/// means) the winner is exactly [`select_exscan`]'s — hierarchy can only
+/// change the decision where the matrix actually is hierarchical. The
+/// two-level scheme is considered only on hierarchical topologies
+/// (`nodes > 1 && ppn > 1`), priced by its phase-composed
+/// [`predict_two_level`] closed form; the follow-up algorithms price
+/// their critical schedules per-link like everyone else.
+pub fn select_exscan_topo<T: Elem>(p: usize, m: usize, topo: &Topo) -> Box<dyn ScanAlgorithm<T>> {
+    assert_eq!(p, topo.size(), "selection is sized to the topology matrix");
+    let elem = T::size_bytes();
+    let mut candidates: Vec<Box<dyn ScanAlgorithm<T>>> = select_candidates::<T>();
+    candidates.push(Box::new(ExscanPow2));
+    candidates.push(Box::new(Exscan1247));
+    let mut best: Option<(f64, Box<dyn ScanAlgorithm<T>>)> = None;
+    for algo in candidates {
+        let (skips, ops, msg_elems) = algo.critical_schedule(p, m);
+        let pred = predict_flat_topo(&skips, ops, msg_elems * elem, topo);
+        if best.as_ref().map(|(t, _)| pred.time_us < *t).unwrap_or(true) {
+            best = Some((pred.time_us, algo));
+        }
+    }
+    if topo.is_hierarchical() {
+        let pred = predict_two_level(topo, m * elem);
+        if best.as_ref().map(|(t, _)| pred.time_us < *t).unwrap_or(true) {
+            best = Some((
+                pred.time_us,
+                Box::new(ExscanTwoLevel::new(topo.ranks_per_node())),
+            ));
         }
     }
     best.expect("at least one candidate").1
@@ -111,6 +148,9 @@ fn leak_name(n: &str) -> &'static str {
         "block-exscan" => "block-exscan",
         "rsag" => "rsag",
         "native-mpich" => "native-mpich",
+        "pow2-doubling" => "pow2-doubling",
+        "1247-doubling" => "1247-doubling",
+        "two-level" => "two-level",
         other => Box::leak(other.to_string().into_boxed_str()),
     }
 }

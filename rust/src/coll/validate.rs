@@ -22,15 +22,16 @@ use anyhow::Result;
 
 use super::segmented::{seg_bxor_i64, seg_sum_i64, Seg};
 use super::{
-    Exscan123, ExscanBlelloch, ExscanBlock, ExscanChunked, ExscanHierarchical, ExscanLinear,
-    ExscanMpich, ExscanOneDoubling, ExscanRsag, ExscanShiftScan, ExscanTwoOp, PipelinedChain,
+    two_level_max_ops, two_level_ops, two_level_rounds, Exscan123, Exscan1247, ExscanBlelloch,
+    ExscanBlock, ExscanChunked, ExscanHierarchical, ExscanLinear, ExscanMpich, ExscanOneDoubling,
+    ExscanPow2, ExscanRsag, ExscanShiftScan, ExscanTwoLevel, ExscanTwoOp, PipelinedChain,
     ScanAlgorithm,
 };
 use crate::mpi::{
     ops, ChaosConfig, Comm, Elem, OpRef, Rec2, Topology, TransportBackend, World, WorldConfig,
 };
 use crate::trace::{check_all, RankTrace, TraceReport};
-use crate::util::bits::{rounds_123, rounds_one_doubling};
+use crate::util::bits::{rounds_123, rounds_1247, rounds_one_doubling, rounds_pow2};
 use crate::util::ceil_log2;
 
 /// Sequential inclusive scan: `out[r] = V_0 ⊕ … ⊕ V_r`, element-wise.
@@ -263,6 +264,45 @@ fn fuzz_candidates<T: Elem>() -> Vec<(Box<dyn ScanAlgorithm<T>>, CheckFn)> {
                     max_ops_le: Some(a.max_ops_for(p, m, eb)),
                     ..Default::default()
                 }
+            }),
+        ),
+        (
+            // 2026 follow-up: ⌈log₂p⌉ rounds (round-optimal), K−1 ⊕ on
+            // the last rank; senders pay up to 2(K−1) preparing W⊕V.
+            Box::new(ExscanPow2),
+            Box::new(|p, _| {
+                let k = rounds_pow2(p);
+                CountCheck {
+                    rounds: Some(k),
+                    last_ops: Some(k.saturating_sub(1)),
+                    max_ops_le: Some(2 * k.saturating_sub(1)),
+                    ..Default::default()
+                }
+            }),
+        ),
+        (
+            // 2026 follow-up: ⌈log₂(p−1)+log₂(8/7)⌉ rounds, q−1 ⊕ on the
+            // last rank, q+1 ⊕ max (two fortified sender folds).
+            Box::new(Exscan1247),
+            Box::new(|p, _| {
+                let q = rounds_1247(p);
+                CountCheck {
+                    rounds: Some(q),
+                    last_ops: Some(q.saturating_sub(1)),
+                    max_ops_le: Some(q + 1),
+                    ..Default::default()
+                }
+            }),
+        ),
+        (
+            // Two-level leader scheme at a fixed node shape: closed forms
+            // from the union round plan (node phases + leader exscan).
+            Box::new(ExscanTwoLevel::new(4)),
+            Box::new(|p, _| CountCheck {
+                rounds: Some(two_level_rounds(4, p)),
+                last_ops: Some(two_level_ops(4, p)),
+                max_ops_le: Some(two_level_max_ops(4, p)),
+                ..Default::default()
             }),
         ),
     ];

@@ -265,6 +265,48 @@ pub fn fit_flat(data: &Table1Data, bytes_per_elem: usize) -> CalibrationReport {
     }
 }
 
+/// Fit separate intra-node vs inter-node α-β class parameters from a
+/// [`Topo`] per-link matrix: classify every directed link by the
+/// topology's block placement and take the class means (the least-squares
+/// estimate under the generative model `link = class_base · jitter`,
+/// since the jitter is mean-one). γ and the overhead are machine-wide,
+/// not per-link, and carry over from the topology. This is what the
+/// topology-aware selection uses when it needs class parameters back out
+/// of a measured (or synthesized) matrix.
+///
+/// [`Topo`]: crate::topo::Topo
+pub fn fit_topo(topo: &crate::topo::Topo) -> CostParams {
+    let p = topo.size();
+    let (mut a_intra, mut b_intra, mut n_intra) = (0.0f64, 0.0f64, 0usize);
+    let (mut a_inter, mut b_inter, mut n_inter) = (0.0f64, 0.0f64, 0usize);
+    for from in 0..p {
+        for to in 0..p {
+            match topo.link(from, to) {
+                LinkClass::SelfLoop => {}
+                LinkClass::IntraNode => {
+                    a_intra += topo.alpha(from, to);
+                    b_intra += topo.beta(from, to);
+                    n_intra += 1;
+                }
+                LinkClass::InterNode => {
+                    a_inter += topo.alpha(from, to);
+                    b_inter += topo.beta(from, to);
+                    n_inter += 1;
+                }
+            }
+        }
+    }
+    let mean = |sum: f64, n: usize| if n > 0 { sum / n as f64 } else { 0.0 };
+    CostParams {
+        alpha_intra: mean(a_intra, n_intra),
+        alpha_inter: mean(a_inter, n_inter),
+        beta_intra: mean(b_intra, n_intra),
+        beta_inter: mean(b_inter, n_inter),
+        gamma: topo.gamma(),
+        overhead: topo.overhead(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -301,6 +343,28 @@ mod tests {
         let rep = fit_flat(&PAPER_TABLE1_36X32, 8);
         assert!(rep.rel_rmse < 0.5, "rel_rmse = {}", rep.rel_rmse);
         assert!(rep.params.beta_inter >= 0.0);
+    }
+
+    #[test]
+    fn fit_topo_recovers_class_means() {
+        // Per-link jitter is mean-one and bounded, so the class means of
+        // a synthesized matrix must land within the jitter band of the
+        // preset bases — and far tighter in practice (many links).
+        let topo = crate::topo::Topo::two_level(4, 9, 77);
+        let base = topo.class_params();
+        let fit = fit_topo(&topo);
+        let close = |got: f64, want: f64| (got - want).abs() <= 0.05 * want + 1e-12;
+        assert!(close(fit.alpha_intra, base.alpha_intra), "α_intra {}", fit.alpha_intra);
+        assert!(close(fit.alpha_inter, base.alpha_inter), "α_inter {}", fit.alpha_inter);
+        assert!(close(fit.beta_intra, base.beta_intra), "β_intra {}", fit.beta_intra);
+        assert!(close(fit.beta_inter, base.beta_inter), "β_inter {}", fit.beta_inter);
+        assert_eq!(fit.gamma, base.gamma);
+        assert_eq!(fit.overhead, base.overhead);
+        // And the recovered classes actually separate on a hierarchy…
+        assert!(fit.alpha_inter > 10.0 * fit.alpha_intra);
+        // …but coincide (within jitter) on the uniform preset.
+        let flat = fit_topo(&crate::topo::Topo::flat(16, 77));
+        assert!(close(flat.alpha_intra, flat.alpha_inter) || flat.alpha_intra == 0.0);
     }
 
     #[test]

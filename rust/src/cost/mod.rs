@@ -32,6 +32,11 @@ pub mod calibrate;
 pub mod model;
 pub mod predict;
 
-pub use calibrate::{fit_flat, CalibrationReport, Table1Data, PAPER_TABLE1_36X1, PAPER_TABLE1_36X32};
+pub use calibrate::{
+    fit_flat, fit_topo, CalibrationReport, Table1Data, PAPER_TABLE1_36X1, PAPER_TABLE1_36X32,
+};
 pub use model::{CostModel, CostParams, LinkClass};
-pub use predict::{crossover_m, predict_flat, predict_schedule, skip_link, FlatPrediction};
+pub use predict::{
+    crossover_m, predict_flat, predict_flat_topo, predict_schedule, predict_two_level, skip_link,
+    FlatPrediction,
+};

@@ -1,5 +1,8 @@
 //! Cost parameters and the link-classified round-cost function.
 
+use std::sync::Arc;
+
+use crate::topo::Topo;
 
 /// Class of the link between two ranks, given a hierarchical placement.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -94,18 +97,35 @@ impl CostParams {
     }
 }
 
-/// The evaluated cost model: parameters + placement geometry.
+/// The evaluated cost model: parameters + placement geometry, with an
+/// optional per-link [`Topo`] matrix overriding the class parameters.
 #[derive(Debug, Clone)]
 pub struct CostModel {
     pub params: CostParams,
     /// Ranks per node under block placement (`node = rank / ranks_per_node`).
     pub ranks_per_node: usize,
+    /// When set, `round_cost` prices each hop off the per-link matrix
+    /// instead of the class parameters (which then only carry γ and the
+    /// overhead). Accounting passes world ranks, so the matrix applies
+    /// transparently inside sub-communicators too.
+    pub topo: Option<Arc<Topo>>,
 }
 
 impl CostModel {
     pub fn new(params: CostParams, ranks_per_node: usize) -> Self {
         assert!(ranks_per_node >= 1);
-        CostModel { params, ranks_per_node }
+        CostModel { params, ranks_per_node, topo: None }
+    }
+
+    /// A model priced entirely off a topology's per-link matrix. The
+    /// class parameters are the topology's base values (so γ, overhead,
+    /// and the closed-form predictors stay consistent with the matrix).
+    pub fn with_topo(topo: Arc<Topo>) -> Self {
+        CostModel {
+            params: topo.class_params(),
+            ranks_per_node: topo.ranks_per_node(),
+            topo: Some(topo),
+        }
     }
 
     /// Classify the link between two ranks under block placement.
@@ -122,6 +142,9 @@ impl CostModel {
     /// Time (µs) for one communication round transferring `bytes` bytes
     /// between `from` and `to` (one simultaneous send-receive slot).
     pub fn round_cost(&self, from: usize, to: usize, bytes: usize) -> f64 {
+        if let Some(topo) = &self.topo {
+            return topo.hop_cost(from, to, bytes);
+        }
         let l = self.link(from, to);
         self.params.alpha(l) + bytes as f64 * self.params.beta(l)
     }
@@ -169,6 +192,25 @@ mod tests {
     fn self_loop_free() {
         let m = CostModel::new(CostParams::generic(), 4);
         assert_eq!(m.round_cost(3, 3, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn topo_matrix_overrides_class_params() {
+        let topo = Arc::new(crate::topo::Topo::two_level(2, 3, 9));
+        let m = CostModel::with_topo(topo.clone());
+        assert_eq!(m.ranks_per_node, 3);
+        // Every hop prices off the matrix exactly…
+        for from in 0..6 {
+            for to in 0..6 {
+                assert_eq!(m.round_cost(from, to, 64), topo.hop_cost(from, to, 64));
+            }
+        }
+        // …so intra hops are cheap, inter hops expensive, self-loops free.
+        assert!(m.round_cost(0, 1, 8) < m.round_cost(0, 3, 8));
+        assert_eq!(m.round_cost(2, 2, 1 << 20), 0.0);
+        // γ and overhead carry over from the topology's base parameters.
+        assert_eq!(m.params.gamma, topo.gamma());
+        assert_eq!(m.params.overhead, topo.overhead());
     }
 
     #[test]

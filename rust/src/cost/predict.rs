@@ -36,6 +36,10 @@
 //!   lands on the argmin at every sweep point.
 
 use super::model::{CostParams, LinkClass};
+use crate::coll::{two_level_ops, two_level_rounds};
+use crate::topo::Topo;
+use crate::util::bits::rounds_123;
+use crate::util::ceil_log2;
 
 /// Closed-form prediction summary for one (algorithm, p, m) point.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -101,6 +105,101 @@ pub fn predict_schedule(
 ) -> FlatPrediction {
     let (skips, ops, msg_elems) = schedule;
     predict_flat(skips, *ops, p, ranks_per_node, msg_elems * elem_bytes, params)
+}
+
+/// [`predict_flat`] against a concrete [`Topo`] link matrix instead of
+/// class parameters: each critical-path round is priced on the actual
+/// `(p−1−s) → (p−1)` link, so jitter and hierarchy show up in the
+/// ranking exactly as the virtual clock will charge them. γ and the
+/// overhead come from the topology's machine-wide base parameters.
+pub fn predict_flat_topo(skips: &[usize], ops: u32, bytes: usize, topo: &Topo) -> FlatPrediction {
+    let p = topo.size();
+    let r = p.saturating_sub(1);
+    let mut time = topo.overhead();
+    let mut intra = 0u32;
+    let mut inter = 0u32;
+    for &s in skips {
+        let partner = r.saturating_sub(s);
+        match topo.link(partner, r) {
+            LinkClass::IntraNode => intra += 1,
+            LinkClass::InterNode => inter += 1,
+            LinkClass::SelfLoop => {}
+        }
+        time += topo.hop_cost(partner, r, bytes);
+    }
+    time += ops as f64 * bytes as f64 * topo.gamma();
+    FlatPrediction { rounds: skips.len() as u32, intra_rounds: intra, inter_rounds: inter, ops, time_us: time }
+}
+
+/// Phase-composed prediction of [`ExscanTwoLevel`] on this topology:
+/// the completion chain runs through the last group's intra-node exscan,
+/// its totals hop, the leader exscan across groups (the only inter-node
+/// hops), and the binomial broadcast plus final fold back down —
+/// each hop priced on its actual link. `bytes` is the full per-message
+/// payload (the scheme never decomposes the vector).
+///
+/// [`ExscanTwoLevel`]: crate::coll::ExscanTwoLevel
+pub fn predict_two_level(topo: &Topo, bytes: usize) -> FlatPrediction {
+    let p = topo.size();
+    let ppn = topo.ranks_per_node();
+    let g = topo.nodes();
+    let ops = two_level_ops(ppn, p);
+    let rounds = two_level_rounds(ppn, p);
+    if p <= 1 {
+        return FlatPrediction { rounds, intra_rounds: 0, inter_rounds: 0, ops, time_us: topo.overhead() };
+    }
+    let mut time = topo.overhead();
+    let mut intra = 0u32;
+    let mut inter = 0u32;
+    let mut hop = |from: usize, to: usize| -> f64 {
+        match topo.link(from, to) {
+            LinkClass::IntraNode => intra += 1,
+            LinkClass::InterNode => inter += 1,
+            LinkClass::SelfLoop => {}
+        }
+        topo.hop_cost(from, to, bytes)
+    };
+    let lo = (g - 1) * ppn; // leader of the last (here: full) group
+    let kl = p - lo;
+    let gamma_term = bytes as f64 * topo.gamma();
+    // Phase 1: intra-node 123 on the last group, completion at its last
+    // member (q−1 folds); phase 2: that member's total prep (one γ) +
+    // hop to the leader.
+    if kl > 1 {
+        let last = p - 1;
+        for k in 0..rounds_123(kl) {
+            let s = match k {
+                0 => 1,
+                1 => 2,
+                _ => 3 * (1usize << (k - 2)),
+            };
+            time += hop(last - s.min(kl - 1), last);
+        }
+        time += rounds_123(kl).saturating_sub(1) as f64 * gamma_term;
+        time += hop(last, lo) + gamma_term;
+    }
+    // Phase 3: leader 123 across groups — completion at the last leader
+    // (its folds serialize on the chain even though they land on a
+    // different rank than the phase-1 ones).
+    if g > 1 {
+        for k in 0..rounds_123(g) {
+            let s = match k {
+                0 => 1,
+                1 => 2,
+                _ => 3 * (1usize << (k - 2)),
+            };
+            time += hop((g - 1 - s.min(g - 1)) * ppn, lo);
+        }
+        time += rounds_123(g).saturating_sub(1) as f64 * gamma_term;
+    }
+    // Phase 4: binomial broadcast back down the last group + final fold.
+    if g > 1 && kl > 1 {
+        for i in 0..ceil_log2(kl) {
+            time += hop(lo, lo + (1usize << i).min(kl - 1));
+        }
+        time += gamma_term;
+    }
+    FlatPrediction { rounds, intra_rounds: intra, inter_rounds: inter, ops, time_us: time }
 }
 
 /// Smallest vector length `m ∈ [1, m_max]` at which schedule `b` prices

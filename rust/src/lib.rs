@@ -53,6 +53,7 @@ pub mod cost;
 pub mod mpi;
 pub mod runtime;
 pub mod svc;
+pub mod topo;
 pub mod trace;
 pub mod util;
 
@@ -60,11 +61,12 @@ pub mod util;
 pub mod prelude {
     pub use crate::bench::{BenchConfig, Harness, SweepSpec};
     pub use crate::coll::{
-        all_exscan_algorithms, Exscan123, ExscanBlelloch, ExscanBlock, ExscanChunked,
-        ExscanLinear, ExscanMpich, ExscanOneDoubling, ExscanRsag, ExscanTwoOp, ScanAlgorithm,
-        ScanDoubling, ScanKind,
+        all_exscan_algorithms, Exscan123, Exscan1247, ExscanBlelloch, ExscanBlock,
+        ExscanChunked, ExscanLinear, ExscanMpich, ExscanOneDoubling, ExscanPow2, ExscanRsag,
+        ExscanTwoLevel, ExscanTwoOp, ScanAlgorithm, ScanDoubling, ScanKind,
     };
     pub use crate::cost::{CostModel, CostParams, LinkClass};
+    pub use crate::topo::Topo;
     pub use crate::mpi::{
         ops, run_scan, ChaosConfig, ChaosReport, CombineOp, Comm, Elem, OpKernel, OpRef,
         PoolStats, RankCtx, Rec2, RunResult, TagKey, Topology, TransportBackend, World,

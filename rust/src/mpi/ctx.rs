@@ -253,6 +253,16 @@ impl<T: Elem> RankCtx<T> {
         self.rank
     }
 
+    /// World rank of scope-relative rank `r` (identity in world scope).
+    /// Lets hierarchical collectives build sub-communicators of the
+    /// *current* scope without assuming they run at world level.
+    pub fn scope_world_rank(&self, r: usize) -> usize {
+        match &self.comm {
+            None => r,
+            Some(c) => c.world_rank(r),
+        }
+    }
+
     /// Context id of the active scope ([`WORLD_CTX`] outside a comm).
     pub fn ctx_id(&self) -> u16 {
         self.tag_ctx

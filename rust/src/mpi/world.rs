@@ -134,6 +134,20 @@ impl WorldConfig {
         self
     }
 
+    /// Switch to the virtual clock priced off a [`crate::topo::Topo`]
+    /// per-link matrix. The topology must cover exactly this world's
+    /// ranks (accounting uses world ranks, so the matrix also applies
+    /// inside sub-communicators).
+    pub fn virtual_clock_topo(mut self, topo: Arc<crate::topo::Topo>) -> Self {
+        assert_eq!(
+            topo.size(),
+            self.topology.size(),
+            "topology matrix must cover the world"
+        );
+        self.mode = ClockMode::Virtual(Arc::new(CostModel::with_topo(topo)));
+        self
+    }
+
     /// Enable per-rank event tracing.
     pub fn with_trace(mut self, tracing: bool) -> Self {
         self.tracing = tracing;

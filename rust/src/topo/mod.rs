@@ -1,0 +1,385 @@
+//! Topology model: node grouping plus a **seeded synthetic per-link α-β
+//! matrix** the virtual clock consults for per-hop costs.
+//!
+//! The flat α-β-γ model ([`crate::cost`]) prices every hop by its *link
+//! class* (intra- vs inter-node) only. Real clusters are messier: links
+//! jitter around the class mean, and hierarchy is the whole reason a
+//! two-level scheme can win. [`Topo`] makes placement a first-class,
+//! deterministic input:
+//!
+//! * **grouping** — `nodes × ranks_per_node` block placement (`node =
+//!   rank / ranks_per_node`, the MPI default), same convention as
+//!   [`crate::mpi::Topology`] (which stays the *executor's* shape; `Topo`
+//!   is the *cost* shape layered on top of it).
+//! * **per-link matrix** — a full `p × p` α (latency, µs) and β (inverse
+//!   bandwidth, µs/byte) matrix, generated from class base parameters
+//!   plus a seeded ±jitter per link. Same seed → bit-identical matrix,
+//!   by construction (one fixed-order [`Rng`] stream), so topology wins
+//!   measured on the virtual clock are replayable.
+//! * **presets** — [`Topo::flat`] (uniform: every distinct-rank link at
+//!   the inter-class base, the null hypothesis where hierarchy-aware
+//!   schemes must *not* win), [`Topo::two_level`] (strongly hierarchical:
+//!   cheap intra-node links, expensive inter-node links), and
+//!   [`Topo::paper_36x1`] (36 single-rank nodes with the α-β parameters
+//!   fitted from the paper's Table 1).
+//!
+//! The virtual clock integration is one hook: [`crate::cost::CostModel`]
+//! holds an optional `Arc<Topo>` and, when present, prices each
+//! `round_cost(from, to, bytes)` off this matrix instead of the class
+//! parameters. `WorldConfig::virtual_clock_topo` installs it; nothing in
+//! `mpi/ctx.rs` changes (accounting already passes world ranks).
+
+use anyhow::{bail, Result};
+
+use crate::cost::{CostParams, LinkClass};
+use crate::util::Rng;
+
+/// Fractional ±jitter applied per link around the class base parameters.
+/// Small enough that class means still predict selection reliably, large
+/// enough that the matrix is a genuine per-link surface (and the
+/// determinism tests have real bits to compare).
+pub const LINK_JITTER: f64 = 0.05;
+
+/// A concrete cluster: block node grouping plus the seeded per-link α-β
+/// matrix. Construct via the presets or [`Topo::parse`]; the matrix is
+/// fully determined by `(preset shape, seed)`.
+#[derive(Debug, Clone)]
+pub struct Topo {
+    /// Human-readable preset spec (`"flat:36"`, `"2level:4x9"`, …).
+    name: String,
+    nodes: usize,
+    ranks_per_node: usize,
+    seed: u64,
+    /// Class base parameters the per-link values jitter around (also the
+    /// γ / overhead source — those are machine-wide, not per-link).
+    base: CostParams,
+    /// Row-major `p × p` per-link latency (µs); diagonal is 0.
+    alpha: Vec<f64>,
+    /// Row-major `p × p` per-link inverse bandwidth (µs/byte); diagonal 0.
+    beta: Vec<f64>,
+}
+
+impl Topo {
+    /// Build a topology from class base parameters: every off-diagonal
+    /// link gets its class base (intra or inter by block placement)
+    /// scaled by a seeded jitter in `[1 - LINK_JITTER, 1 + LINK_JITTER)`.
+    /// Links are generated in fixed row-major order from one
+    /// `Rng::seed_from_u64(seed)` stream, so the matrix is bit-identical
+    /// across runs and hosts for the same `(shape, base, seed)`.
+    pub fn from_params(
+        name: impl Into<String>,
+        nodes: usize,
+        ranks_per_node: usize,
+        base: CostParams,
+        seed: u64,
+    ) -> Self {
+        assert!(nodes >= 1 && ranks_per_node >= 1);
+        let p = nodes * ranks_per_node;
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut alpha = vec![0.0; p * p];
+        let mut beta = vec![0.0; p * p];
+        for from in 0..p {
+            for to in 0..p {
+                if from == to {
+                    continue; // self-loop: free, as in the flat model
+                }
+                // Two draws per link, always in (alpha, beta) order, so
+                // the stream layout is part of the determinism contract.
+                let ja = 1.0 + LINK_JITTER * (2.0 * rng.gen_f64() - 1.0);
+                let jb = 1.0 + LINK_JITTER * (2.0 * rng.gen_f64() - 1.0);
+                let class = link_class(from, to, ranks_per_node);
+                alpha[from * p + to] = base.alpha(class) * ja;
+                beta[from * p + to] = base.beta(class) * jb;
+            }
+        }
+        Topo { name: name.into(), nodes, ranks_per_node, seed, base, alpha, beta }
+    }
+
+    /// Uniform (non-hierarchical) cluster of `p` ranks: every
+    /// distinct-rank link at the *inter*-node base. The null-hypothesis
+    /// preset: on this matrix the two-level scheme must never win.
+    pub fn flat(p: usize, seed: u64) -> Self {
+        assert!(p >= 1);
+        let base = CostParams {
+            alpha_intra: UNIFORM_ALPHA,
+            alpha_inter: UNIFORM_ALPHA,
+            beta_intra: UNIFORM_BETA,
+            beta_inter: UNIFORM_BETA,
+            gamma: SYNTH_GAMMA,
+            overhead: SYNTH_OVERHEAD,
+        };
+        // nodes = 1: every link classifies intra, but intra == inter here
+        // so the classes are indistinguishable — genuinely uniform.
+        Topo::from_params(format!("flat:{p}"), 1, p, base, seed)
+    }
+
+    /// Strongly hierarchical `nodes × ppn` cluster: cheap intra-node
+    /// links, ~20× more expensive inter-node links (the regime
+    /// EXPERIMENTS.md §Topology targets, past the hierarchical-exscan
+    /// crossover).
+    pub fn two_level(nodes: usize, ppn: usize, seed: u64) -> Self {
+        let base = CostParams {
+            alpha_intra: HIER_ALPHA_INTRA,
+            alpha_inter: HIER_ALPHA_INTER,
+            beta_intra: HIER_BETA_INTRA,
+            beta_inter: HIER_BETA_INTER,
+            gamma: SYNTH_GAMMA,
+            overhead: SYNTH_OVERHEAD,
+        };
+        Topo::from_params(format!("2level:{nodes}x{ppn}"), nodes, ppn, base, seed)
+    }
+
+    /// The paper's 36×1 cluster with α-β-γ fitted from Table 1 (every
+    /// distinct-rank link is inter-node — one MPI process per node).
+    pub fn paper_36x1(seed: u64) -> Self {
+        Topo::from_params("paper36x1", 36, 1, CostParams::paper_36x1(), seed)
+    }
+
+    /// Parse a CLI topology spec: `flat:P`, `2level:NxK`, or `paper36x1`.
+    pub fn parse(spec: &str, seed: u64) -> Result<Self> {
+        if spec == "paper36x1" {
+            return Ok(Topo::paper_36x1(seed));
+        }
+        if let Some(p) = spec.strip_prefix("flat:") {
+            let p: usize = p.parse().map_err(|_| bad_spec(spec))?;
+            if p < 1 {
+                return Err(bad_spec(spec));
+            }
+            return Ok(Topo::flat(p, seed));
+        }
+        if let Some(shape) = spec.strip_prefix("2level:") {
+            let (n, k) = shape.split_once('x').ok_or_else(|| bad_spec(spec))?;
+            let n: usize = n.parse().map_err(|_| bad_spec(spec))?;
+            let k: usize = k.parse().map_err(|_| bad_spec(spec))?;
+            if n < 1 || k < 1 {
+                return Err(bad_spec(spec));
+            }
+            return Ok(Topo::two_level(n, k, seed));
+        }
+        Err(bad_spec(spec))
+    }
+
+    /// The hierarchical preset list the `topo_sweep` bench section gates
+    /// on (the flat null-hypothesis preset is added by the caller).
+    pub fn hierarchical_presets(seed: u64) -> Vec<Topo> {
+        vec![
+            Topo::two_level(4, 9, seed),
+            Topo::two_level(4, 8, seed),
+            Topo::two_level(6, 6, seed),
+        ]
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    pub fn ranks_per_node(&self) -> usize {
+        self.ranks_per_node
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Total rank count `p`.
+    pub fn size(&self) -> usize {
+        self.nodes * self.ranks_per_node
+    }
+
+    /// Whether the matrix actually distinguishes link classes (false for
+    /// [`Topo::flat`], where intra and inter bases coincide).
+    pub fn is_hierarchical(&self) -> bool {
+        self.nodes > 1
+            && self.ranks_per_node > 1
+            && (self.base.alpha_intra != self.base.alpha_inter
+                || self.base.beta_intra != self.base.beta_inter)
+    }
+
+    /// Node of a rank (block placement).
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.ranks_per_node
+    }
+
+    /// Class of the `from → to` link under this topology's grouping.
+    pub fn link(&self, from: usize, to: usize) -> LinkClass {
+        link_class(from, to, self.ranks_per_node)
+    }
+
+    /// Per-link latency (µs); 0 on the diagonal.
+    pub fn alpha(&self, from: usize, to: usize) -> f64 {
+        self.alpha[from * self.size() + to]
+    }
+
+    /// Per-link inverse bandwidth (µs/byte); 0 on the diagonal.
+    pub fn beta(&self, from: usize, to: usize) -> f64 {
+        self.beta[from * self.size() + to]
+    }
+
+    /// Machine-wide ⊕ cost (µs/byte).
+    pub fn gamma(&self) -> f64 {
+        self.base.gamma
+    }
+
+    /// Machine-wide per-collective overhead (µs).
+    pub fn overhead(&self) -> f64 {
+        self.base.overhead
+    }
+
+    /// The class base parameters the links jitter around (class-mean view
+    /// of this matrix — what the flat predictor and the calibration
+    /// satellite compare against).
+    pub fn class_params(&self) -> CostParams {
+        self.base
+    }
+
+    /// One `from → to` hop priced off the matrix.
+    pub fn hop_cost(&self, from: usize, to: usize, bytes: usize) -> f64 {
+        self.alpha(from, to) + bytes as f64 * self.beta(from, to)
+    }
+
+    /// FNV-1a digest over the exact bit patterns of both matrices — the
+    /// determinism fingerprint (same seed ⇒ same digest, different seed ⇒
+    /// different digest with overwhelming probability).
+    pub fn matrix_digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |v: f64| {
+            for b in v.to_bits().to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100_0000_01b3);
+            }
+        };
+        for &v in &self.alpha {
+            mix(v);
+        }
+        for &v in &self.beta {
+            mix(v);
+        }
+        h
+    }
+}
+
+/// Block-placement link classification shared with the flat cost model.
+fn link_class(from: usize, to: usize, ranks_per_node: usize) -> LinkClass {
+    if from == to {
+        LinkClass::SelfLoop
+    } else if from / ranks_per_node == to / ranks_per_node {
+        LinkClass::IntraNode
+    } else {
+        LinkClass::InterNode
+    }
+}
+
+fn bad_spec(spec: &str) -> anyhow::Error {
+    anyhow::anyhow!("bad topology spec '{spec}' (want flat:P, 2level:NxK, or paper36x1)")
+}
+
+// Synthetic base parameters (µs, µs/byte). The hierarchical set puts the
+// inter/intra latency ratio at 25× — well past the ≈20× crossover where
+// EXPERIMENTS.md §Perf shows hierarchy-aware schemes start winning — so
+// the topo_sweep gates hold with margin even under ±5% link jitter.
+const UNIFORM_ALPHA: f64 = 8.0;
+const UNIFORM_BETA: f64 = 0.004;
+const HIER_ALPHA_INTRA: f64 = 0.4;
+const HIER_ALPHA_INTER: f64 = 10.0;
+const HIER_BETA_INTRA: f64 = 0.001;
+const HIER_BETA_INTER: f64 = 0.005;
+const SYNTH_GAMMA: f64 = 0.0005;
+const SYNTH_OVERHEAD: f64 = 1.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_bit_identical_matrix() {
+        let a = Topo::two_level(4, 9, 42);
+        let b = Topo::two_level(4, 9, 42);
+        assert_eq!(a.alpha, b.alpha);
+        assert_eq!(a.beta, b.beta);
+        assert_eq!(a.matrix_digest(), b.matrix_digest());
+        let c = Topo::two_level(4, 9, 43);
+        assert_ne!(a.matrix_digest(), c.matrix_digest());
+    }
+
+    #[test]
+    fn link_classes_follow_block_placement() {
+        let t = Topo::two_level(3, 4, 7);
+        assert_eq!(t.link(0, 0), LinkClass::SelfLoop);
+        assert_eq!(t.link(0, 3), LinkClass::IntraNode);
+        assert_eq!(t.link(3, 4), LinkClass::InterNode);
+        assert_eq!(t.node_of(11), 2);
+        assert_eq!(t.size(), 12);
+        assert!(t.is_hierarchical());
+    }
+
+    #[test]
+    fn jitter_stays_within_band_and_classes_separate() {
+        let t = Topo::two_level(4, 9, 5);
+        let p = t.size();
+        for from in 0..p {
+            for to in 0..p {
+                match t.link(from, to) {
+                    LinkClass::SelfLoop => {
+                        assert_eq!(t.alpha(from, to), 0.0);
+                        assert_eq!(t.beta(from, to), 0.0);
+                    }
+                    LinkClass::IntraNode => {
+                        let a = t.alpha(from, to);
+                        assert!(a >= HIER_ALPHA_INTRA * (1.0 - LINK_JITTER) - 1e-12);
+                        assert!(a <= HIER_ALPHA_INTRA * (1.0 + LINK_JITTER) + 1e-12);
+                    }
+                    LinkClass::InterNode => {
+                        let a = t.alpha(from, to);
+                        assert!(a >= HIER_ALPHA_INTER * (1.0 - LINK_JITTER) - 1e-12);
+                        assert!(a <= HIER_ALPHA_INTER * (1.0 + LINK_JITTER) + 1e-12);
+                    }
+                }
+            }
+        }
+        // Even with jitter the classes never overlap (25× ratio ≫ ±5%).
+        let worst_intra = HIER_ALPHA_INTRA * (1.0 + LINK_JITTER);
+        let best_inter = HIER_ALPHA_INTER * (1.0 - LINK_JITTER);
+        assert!(worst_intra < best_inter);
+    }
+
+    #[test]
+    fn flat_preset_is_uniform() {
+        let t = Topo::flat(9, 11);
+        assert!(!t.is_hierarchical());
+        let base = t.class_params();
+        assert_eq!(base.alpha_intra, base.alpha_inter);
+        for from in 0..9 {
+            for to in 0..9 {
+                if from != to {
+                    let a = t.alpha(from, to);
+                    assert!(a >= UNIFORM_ALPHA * (1.0 - LINK_JITTER) - 1e-12);
+                    assert!(a <= UNIFORM_ALPHA * (1.0 + LINK_JITTER) + 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        assert_eq!(Topo::parse("flat:36", 1).unwrap().size(), 36);
+        let t = Topo::parse("2level:4x9", 1).unwrap();
+        assert_eq!((t.nodes(), t.ranks_per_node()), (4, 9));
+        assert_eq!(t.name(), "2level:4x9");
+        assert_eq!(Topo::parse("paper36x1", 1).unwrap().size(), 36);
+        assert!(Topo::parse("ring:8", 1).is_err());
+        assert!(Topo::parse("2level:4", 1).is_err());
+        assert!(Topo::parse("flat:0", 1).is_err());
+    }
+
+    #[test]
+    fn paper_preset_all_inter() {
+        let t = Topo::paper_36x1(3);
+        assert_eq!(t.size(), 36);
+        assert_eq!(t.link(0, 1), LinkClass::InterNode);
+        assert!(t.hop_cost(0, 1, 8) > 0.0);
+    }
+}

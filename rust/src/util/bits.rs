@@ -64,6 +64,39 @@ pub fn rounds_two_op(p: usize) -> u32 {
     }
 }
 
+/// Round count of the fully-fortified pow2-doubling exclusive scan:
+/// `ceil(log2 p)` — the one-ported information lower bound. Every round
+/// sends the *inclusive* partial `W ⊕ V`, so the trailing coverage after
+/// round `k` is `2^(k+1) - 1` and rank `p-1` completes once
+/// `2^q - 1 >= p - 1`.
+pub fn rounds_pow2(p: usize) -> u32 {
+    if p <= 1 {
+        0
+    } else {
+        ceil_log2(p)
+    }
+}
+
+/// Round count of the 1247-doubling exclusive scan: skips
+/// `1, 2, 4, 7, 14, 28, …` (two fortified rounds instead of 123's one).
+/// Coverage after round `k` is `c_0 = 1, c_1 = 3, c_2 = 7, c_k = 2·c_{k-1}`
+/// (`= 7·2^(k-2)` for `k >= 2`), so
+/// `q = ceil(log2(p-1) + log2(8/7)) = min { q : 7·2^(q-3) >= p-1 }` for
+/// `p > 8`, between `rounds_pow2` and `rounds_123` for every p.
+pub fn rounds_1247(p: usize) -> u32 {
+    assert!(p >= 1);
+    if p == 1 {
+        return 0;
+    }
+    let mut q = 1u32;
+    let mut coverage = 1usize; // after round 0 (the shift)
+    while coverage < p - 1 {
+        coverage = if q <= 2 { 2 * coverage + 1 } else { 2 * coverage };
+        q += 1;
+    }
+    q
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,5 +161,47 @@ mod tests {
             // two-⊕ uses ceil(log2 p) rounds, never fewer than 123 minus one.
             assert!(rounds_two_op(p) + 1 >= rounds_123(p), "p={p}");
         }
+    }
+
+    #[test]
+    fn rounds_1247_matches_formula() {
+        // q = ceil(log2(p-1) + log2(8/7)) for p >= 2; the coverage loop is
+        // ground truth and the float formula must agree up to the ceiling.
+        for p in 2usize..=100_000 {
+            let raw = ((p - 1) as f64).log2() + (8f64 / 7f64).log2();
+            let q = rounds_1247(p) as f64;
+            assert!(q >= raw - 1e-9, "p={p} q={q} raw={raw}");
+            assert!(q < raw + 1.0 + 1e-9, "p={p} q={q} raw={raw}");
+        }
+    }
+
+    #[test]
+    fn rounds_1247_small_values() {
+        assert_eq!(rounds_1247(1), 0);
+        assert_eq!(rounds_1247(2), 1);
+        assert_eq!(rounds_1247(3), 2);
+        assert_eq!(rounds_1247(4), 2);
+        assert_eq!(rounds_1247(5), 3);
+        assert_eq!(rounds_1247(8), 3);
+        assert_eq!(rounds_1247(9), 4);
+        assert_eq!(rounds_1247(29), 5); // one fewer than rounds_123(29) = 6
+        assert_eq!(rounds_1247(36), 6);
+    }
+
+    #[test]
+    fn fortification_ladder() {
+        // More fortified rounds buy fewer (never more) total rounds:
+        // pow2 (every round fortified) <= 1247 (two) <= 123 (one), and
+        // pow2 sits exactly on the one-ported information lower bound.
+        for p in 2usize..=10_000 {
+            assert!(rounds_pow2(p) <= rounds_1247(p), "p={p}");
+            assert!(rounds_1247(p) <= rounds_123(p), "p={p}");
+            assert_eq!(rounds_pow2(p), ceil_log2(p), "p={p}");
+        }
+        // And the gap is real: at p = 256 pow2 saves a round over 123,
+        // at p = 29 even 1247 does.
+        assert_eq!(rounds_pow2(256), 8);
+        assert_eq!(rounds_123(256), 9);
+        assert!(rounds_1247(29) < rounds_123(29));
     }
 }

@@ -13,7 +13,7 @@
 
 use exscan::coll::{
     all_exscan_algorithms, seg_bxor_i64, seg_max_i64, seg_sum_i64, ExscanBlock, ExscanChunked,
-    ExscanHierarchical, Seg,
+    ExscanHierarchical, ExscanTwoLevel, Seg,
 };
 use exscan::prelude::*;
 use exscan::util::quickcheck::{cases, forall, Gen};
@@ -238,6 +238,11 @@ fn algorithms<T: Elem>() -> Vec<Box<dyn ScanAlgorithm<T>>> {
     algos.push(Box::new(ExscanHierarchical::new(3)));
     algos.push(Box::new(ExscanBlock::with_group(2)));
     algos.push(Box::new(ExscanBlock::with_group(4)));
+    // Node shapes that leave ragged last groups at the fuzzed p values,
+    // forcing the two-level send/bcast/fold phases (the registry's
+    // ppn = 4 instance degenerates to plain 123 whenever p ≤ 4).
+    algos.push(Box::new(ExscanTwoLevel::new(3)));
+    algos.push(Box::new(ExscanTwoLevel::new(5)));
     algos
 }
 

@@ -1,0 +1,173 @@
+//! Integration suite for the topology subsystem: matrix determinism,
+//! the two-level scheme's differential correctness on topo-clocked
+//! worlds, per-context sub-trace equivalence of the leader phase, and
+//! the headline virtual-clock win gates (two-level strictly beats flat
+//! 123-doubling on every hierarchical preset, and never wins on the
+//! uniform null-hypothesis matrix).
+
+use std::sync::Arc;
+
+use exscan::coll::{oracle_exscan, select_exscan_topo};
+use exscan::prelude::*;
+use exscan::trace::check_all;
+
+/// Same (shape, seed) must yield a bit-identical matrix no matter how
+/// the topology is constructed; different seeds must diverge.
+#[test]
+fn same_seed_same_matrix_across_construction_paths() {
+    let a = Topo::two_level(4, 9, 42);
+    let b = Topo::parse("2level:4x9", 42).unwrap();
+    assert_eq!(a.matrix_digest(), b.matrix_digest());
+    let p = a.size();
+    for from in 0..p {
+        for to in 0..p {
+            assert_eq!(a.alpha(from, to).to_bits(), b.alpha(from, to).to_bits());
+            assert_eq!(a.beta(from, to).to_bits(), b.beta(from, to).to_bits());
+        }
+    }
+    assert_ne!(a.matrix_digest(), Topo::two_level(4, 9, 43).matrix_digest());
+    assert_ne!(a.matrix_digest(), Topo::flat(36, 42).matrix_digest());
+}
+
+/// Two-level under chaos on a topo-clocked world ≡ the sequential
+/// oracle, and the virtual completion time is chaos-invariant (the
+/// clock advances on message vtimes, which adversarial delivery must
+/// not perturb). Three fixed seeds × every hierarchical preset.
+#[test]
+fn two_level_matches_oracle_under_chaos_on_topo_worlds() {
+    for seed in [31u64, 32, 33] {
+        for topo in Topo::hierarchical_presets(seed) {
+            let p = topo.size();
+            let ppn = topo.ranks_per_node();
+            let topo = Arc::new(topo);
+            let inputs = exscan::bench::inputs_i64(p, 17, seed);
+            let algo = ExscanTwoLevel::new(ppn);
+            let run = |chaos: bool| {
+                let mut cfg = WorldConfig::new(Topology::flat(p))
+                    .virtual_clock_topo(topo.clone())
+                    .with_trace(true);
+                if chaos {
+                    cfg = cfg.with_chaos(ChaosConfig::new(seed));
+                }
+                run_scan(&cfg, &algo, &ops::bxor(), &inputs).unwrap()
+            };
+            let (chaos, clean) = (run(true), run(false));
+            assert_eq!(chaos.outputs, clean.outputs, "seed {seed} {}", topo.name());
+            assert_eq!(
+                chaos.completion_us(),
+                clean.completion_us(),
+                "seed {seed} {}: virtual clock must be chaos-invariant",
+                topo.name()
+            );
+            let oracle = oracle_exscan(&inputs, &ops::bxor());
+            for r in 1..p {
+                assert_eq!(
+                    Some(&chaos.outputs[r]),
+                    oracle[r].as_ref(),
+                    "seed {seed} {} rank {r}",
+                    topo.name()
+                );
+            }
+            let tr = chaos.trace.unwrap();
+            assert!(check_all(&tr).is_empty(), "seed {seed} {}", topo.name());
+        }
+    }
+}
+
+/// The leader phase is a genuine 123-doubling: projecting the two-level
+/// trace onto the leader context must reproduce, event for event, a
+/// standalone `Exscan123` run over the node totals.
+#[test]
+fn leader_subtrace_matches_standalone_exscan123() {
+    const PPN: usize = 3;
+    const G: usize = 4;
+    const P: usize = G * PPN;
+    const M: usize = 5;
+    let inputs = exscan::bench::inputs_i64(P, M, 0x70D0);
+    let cfg = WorldConfig::new(Topology::flat(P)).with_trace(true);
+    let res = run_scan(&cfg, &ExscanTwoLevel::new(PPN), &ops::bxor(), &inputs).unwrap();
+    let report = res.trace.unwrap();
+
+    // Node totals: T_j = ⊕ of group j's inputs (elementwise xor here).
+    let totals: Vec<Vec<i64>> = (0..G)
+        .map(|j| {
+            let mut acc = inputs[j * PPN].clone();
+            for v in &inputs[j * PPN + 1..(j + 1) * PPN] {
+                for (a, b) in acc.iter_mut().zip(v) {
+                    *a ^= *b;
+                }
+            }
+            acc
+        })
+        .collect();
+    let leader_cfg = WorldConfig::new(Topology::flat(G)).with_trace(true);
+    let standalone = run_scan(&leader_cfg, &Exscan123, &ops::bxor(), &totals).unwrap();
+    let serial = standalone.trace.unwrap();
+
+    // Ambient world ctx is 0, so the reserved leader context is 0x8000.
+    let leaders: Vec<usize> = (0..G).map(|j| j * PPN).collect();
+    let sub = report.for_ctx(0x8000, &leaders);
+    for j in 0..G {
+        assert_eq!(
+            sub.traces[j].events, serial.traces[j].events,
+            "leader {j}: sub-trace diverged from standalone 123-doubling"
+        );
+    }
+    assert!(check_all(&sub).is_empty());
+    // And the leaders' exscan really computed the group-total prefixes.
+    let leader_oracle = oracle_exscan(&totals, &ops::bxor());
+    for j in 1..G {
+        assert_eq!(Some(&res.outputs[j * PPN]), leader_oracle[j].as_ref(), "leader {j}");
+    }
+}
+
+/// The headline gates: on every hierarchical preset the two-level scheme
+/// strictly beats flat 123-doubling in virtual-clock completion time; on
+/// the uniform matrix it never does.
+#[test]
+fn two_level_beats_flat_123_exactly_on_hierarchical_matrices() {
+    const M: usize = 4;
+    let seed = 7u64;
+    let completion = |topo: &Arc<Topo>, algo: &dyn ScanAlgorithm<i64>| {
+        let p = topo.size();
+        let cfg = WorldConfig::new(Topology::flat(p)).virtual_clock_topo(topo.clone());
+        let inputs = exscan::bench::inputs_i64(p, M, seed);
+        run_scan(&cfg, algo, &ops::bxor(), &inputs).unwrap().completion_us()
+    };
+    for topo in Topo::hierarchical_presets(seed) {
+        let ppn = topo.ranks_per_node();
+        let topo = Arc::new(topo);
+        let two = completion(&topo, &ExscanTwoLevel::new(ppn));
+        let flat = completion(&topo, &Exscan123);
+        assert!(
+            two < flat,
+            "{}: two-level {two:.2}µs must strictly beat flat 123 {flat:.2}µs",
+            topo.name()
+        );
+    }
+    let uniform = Arc::new(Topo::flat(36, seed));
+    let two = completion(&uniform, &ExscanTwoLevel::new(9));
+    let flat = completion(&uniform, &Exscan123);
+    assert!(
+        two >= flat,
+        "uniform matrix: two-level {two:.2}µs must not beat flat 123 {flat:.2}µs"
+    );
+}
+
+/// Topology-aware selection: picks the two-level scheme on hierarchical
+/// matrices at round-dominated m, and never even considers it on the
+/// uniform matrix (where classic flat selection stays authoritative).
+#[test]
+fn topo_selection_gates() {
+    for topo in Topo::hierarchical_presets(11) {
+        for m in [1usize, 16] {
+            let a = select_exscan_topo::<i64>(topo.size(), m, &topo);
+            assert_eq!(a.name(), "two-level", "{} m={m}", topo.name());
+        }
+    }
+    let uniform = Topo::flat(36, 11);
+    for m in [1usize, 64, 4096, 1 << 20] {
+        let a = select_exscan_topo::<i64>(36, m, &uniform);
+        assert_ne!(a.name(), "two-level", "uniform m={m} picked two-level");
+    }
+}
