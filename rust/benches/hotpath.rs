@@ -55,21 +55,28 @@
 //!     gates — two-level strictly faster on every hierarchical matrix,
 //!     never faster on the uniform one, and `select_exscan_topo` never
 //!     picks it where hierarchy is absent;
+//!   * **wire-fault overhead** (§Robustness): the same whole-scan
+//!     workload on every wire backend this host offers, clean vs the
+//!     seeded fault plan with recovery on — every faulted run must still
+//!     verify bit-exactly against the oracle, with nonzero repair
+//!     counters proving the recovery layer (not luck) carried it;
 //!   * one full 123-doubling at p=36 end to end.
 //!
 //! Writes the machine-readable trajectory record `BENCH_hotpath.json`
-//! (schema `exscan-hotpath-v7`). Pass `--quick` for the CI smoke run.
+//! (schema `exscan-hotpath-v8`). Pass `--quick` for the CI smoke run.
+//! `EXSCAN_SOAK_REQUESTS` scales the soak's total request budget without
+//! a rebuild (the same knob `exscan serve --soak` honors).
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use exscan::bench::{
     hotpath_json, measure_exscan_world, CrossoverPoint, HotpathPoint, KernelPoint, LatencyPoint,
-    MSweepPoint, SoakPoint, SvcLatencyPoint, SvcPoint, TopoSweepPoint,
+    MSweepPoint, SoakPoint, SvcLatencyPoint, SvcPoint, TopoSweepPoint, WireFaultPoint,
 };
 use exscan::coll::{oracle_exscan, select_candidates, select_exscan, select_exscan_topo};
 use exscan::cost::{crossover_m, predict_schedule};
-use exscan::mpi::World;
+use exscan::mpi::{WireFaultConfig, World};
 use exscan::prelude::*;
 use exscan::util::bits::rounds_123;
 use exscan::util::Channel;
@@ -852,17 +859,43 @@ fn main() -> anyhow::Result<()> {
     // Deaths are scheduled to land in the first half; the second half is
     // the steady state whose pool counters must stay flat. ──
     let mut soak: Vec<SoakPoint> = Vec::new();
-    let soak_waves: usize = if quick { 80 } else { 400 };
+    // Scale knob: total request budget per seed (8 requests/wave), env-
+    // overridable so CI and long-haul runs share one binary. Same knob
+    // `exscan serve --soak` reads; the flag wins there, only the env
+    // exists here (cargo benches take no custom flags).
+    let soak_waves: usize = match std::env::var("EXSCAN_SOAK_REQUESTS") {
+        Ok(s) => {
+            let budget: usize = s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("EXSCAN_SOAK_REQUESTS={s:?}: {e}"))?;
+            (budget / 8).max(1)
+        }
+        Err(_) => {
+            if quick {
+                80
+            } else {
+                400
+            }
+        }
+    };
     let soak_seeds: &[u64] = if quick { &[11] } else { &[11, 12] };
-    let death_sched: &[(usize, u64)] =
+    // Death ticks are tuned so both kills land in the first half at the
+    // default wave count; scale them with the wave count so an env-
+    // overridden budget keeps that property (and the death-fired gate).
+    let base_waves: usize = if quick { 80 } else { 400 };
+    let base_sched: &[(usize, u64)] =
         if quick { &[(2, 150), (5, 300)] } else { &[(2, 600), (5, 1200)] };
+    let death_sched: Vec<(usize, u64)> = base_sched
+        .iter()
+        .map(|&(r, t)| (r, ((t as usize * soak_waves / base_waves) as u64).max(1)))
+        .collect();
     println!("\nsoak at p={p_svc}: {soak_waves} waves × 8 requests, deaths {death_sched:?}:");
     for &seed in soak_seeds {
         let mut chaos = ChaosConfig::new(seed)
             .with_delay_prob(0.0)
             .with_divert_prob(0.0)
             .with_yield_prob(0.0);
-        for &(r, t) in death_sched {
+        for &(r, t) in &death_sched {
             chaos = chaos.with_rank_death(r, t);
         }
         let engine = ScanEngine::<i64>::new(
@@ -1015,6 +1048,105 @@ fn main() -> anyhow::Result<()> {
          never on the uniform matrix"
     );
 
+    // ── Wire-fault overhead (schema-v8 `wire_fault`, §Robustness): the
+    // same whole-scan workload on every wire backend this host offers,
+    // clean vs the seeded fault plan with recovery on. The gate is
+    // correctness, not speed: every faulted run must verify bit-exactly
+    // against the oracle, with the plan demonstrably injecting and the
+    // repair counters proving the recovery layer (not luck) carried it.
+    // The overhead ratio is the reported trajectory number. Thread
+    // backend has no wire layer; hosts without a wire backend record an
+    // empty section. ──
+    let mut wire_fault: Vec<WireFaultPoint> = Vec::new();
+    let wf_seed = 0xA11CEu64;
+    // Enough reps that the ~9%-per-frame plan injects with overwhelming
+    // probability even on the quick grid (the gates below demand it).
+    let wf_reps = if quick { 4 } else { 8 };
+    let wf_p = 4usize;
+    let wf_m: usize = if quick { 64 } else { 1024 };
+    println!("\nwire-fault overhead at p={wf_p}, m={wf_m} (seed {wf_seed:#x}, recovery on):");
+    for b in TransportBackend::available() {
+        if b == TransportBackend::Thread {
+            continue;
+        }
+        let wf_inputs = exscan::bench::inputs_i64(wf_p, wf_m, wf_seed);
+        let wf_oracle = oracle_exscan(&wf_inputs, &ops::bxor());
+        let time_world = |world: &World<i64>| -> (f64, bool) {
+            let op = ops::bxor();
+            let mut best = f64::INFINITY;
+            let mut ok = true;
+            for _ in 0..wf_reps {
+                let t0 = Instant::now();
+                let outs = world
+                    .run(|ctx| {
+                        let input = &wf_inputs[ctx.rank()];
+                        let mut output = vec![0i64; wf_m];
+                        ctx.barrier();
+                        Exscan123.run(ctx, input, &mut output, &op)?;
+                        Ok(output)
+                    })
+                    .expect("wire-fault bench run failed (recovery is on)");
+                best = best.min(t0.elapsed().as_secs_f64() * 1e6);
+                for r in 1..wf_p {
+                    ok &= Some(&outs[r]) == wf_oracle[r].as_ref();
+                }
+            }
+            (best, ok)
+        };
+        let clean_world: World<i64> =
+            World::new(WorldConfig::new(Topology::flat(wf_p)).with_transport(b));
+        let (clean_us, clean_ok) = time_world(&clean_world);
+        assert!(clean_ok, "{b}: clean reference run failed verification");
+        let faulted_world: World<i64> = World::new(
+            WorldConfig::new(Topology::flat(wf_p))
+                .with_transport(b)
+                .with_wire_faults(WireFaultConfig::new(wf_seed)),
+        );
+        let (faulted_us, verified) = time_world(&faulted_world);
+        let stats = faulted_world.wire_stats();
+        let report = faulted_world.wire_report().expect("fault plan armed");
+        assert!(
+            verified,
+            "{b}: faulted run must verify bit-exactly at seed {wf_seed:#x}"
+        );
+        assert!(
+            report.injected() >= 1,
+            "{b}: the plan injected nothing — not a wire-fault measurement"
+        );
+        assert!(
+            stats.retransmits + stats.reconnects + stats.dropped_dups >= 1,
+            "{b}: verified run shows no recovery activity at seed {wf_seed:#x}"
+        );
+        println!(
+            "  {b:<6}: clean {clean_us:>9.2} µs  faulted {faulted_us:>9.2} µs ({:>4.2}x)   \
+             {} injected, {} retransmits, {} reconnects, {} dups dropped",
+            faulted_us / clean_us,
+            report.injected(),
+            stats.retransmits,
+            stats.reconnects,
+            stats.dropped_dups
+        );
+        wire_fault.push(WireFaultPoint {
+            backend: b.to_string(),
+            seed: wf_seed,
+            p: wf_p,
+            m: wf_m,
+            clean_us,
+            faulted_us,
+            injected: report.injected(),
+            retransmits: stats.retransmits,
+            reconnects: stats.reconnects,
+            dropped_dups: stats.dropped_dups,
+            fault_digest: report.digest,
+            verified,
+        });
+    }
+    if wire_fault.is_empty() {
+        println!("  no wire backends available on this host; section empty");
+    } else {
+        println!("wire-fault gate: every faulted run verified with live recovery counters");
+    }
+
     // ── World spawn/teardown vs persistent job submit at the same p. ──
     let mut spawn_meta = Vec::new();
     for p in [16usize, 144] {
@@ -1087,6 +1219,7 @@ fn main() -> anyhow::Result<()> {
         &soak,
         &m_crossover,
         &topo_sweep,
+        &wire_fault,
     );
     // Cargo runs bench binaries with cwd = the *package* root (rust/), so
     // anchor the output at the workspace root explicitly — that is where

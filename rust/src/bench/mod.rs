@@ -12,6 +12,6 @@ pub use experiments::{figure1_sweep, table1_rows, ExperimentRow, PaperConfig};
 pub use harness::{measure_exscan, measure_exscan_world, BenchConfig, Harness, Measurement};
 pub use table::{
     format_table, hotpath_json, to_csv, CrossoverPoint, HotpathPoint, KernelPoint, LatencyPoint,
-    MSweepPoint, SoakPoint, SvcLatencyPoint, SvcPoint, TopoSweepPoint,
+    MSweepPoint, SoakPoint, SvcLatencyPoint, SvcPoint, TopoSweepPoint, WireFaultPoint,
 };
 pub use workload::{inputs_i64, inputs_rec2, inputs_seg_i64, SweepSpec};

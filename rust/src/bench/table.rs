@@ -233,6 +233,33 @@ pub struct TopoSweepPoint {
     pub selected: String,
 }
 
+/// One wire-fault overhead measurement (see `benches/hotpath.rs`): the
+/// same rendezvous workload on a wire backend with the seeded fault plan
+/// armed (recovery on) vs clean, plus the recovery counters and the
+/// replayable fault digest. The bench gates that every faulted run still
+/// verified bit-exactly (`verified` true) — the overhead column is only
+/// meaningful if the repaired stream stayed correct.
+#[derive(Debug, Clone)]
+pub struct WireFaultPoint {
+    /// Wire backend id (`"shm"`, `"uds"`).
+    pub backend: String,
+    pub seed: u64,
+    pub p: usize,
+    pub m: usize,
+    /// Clean (no fault plan) completion, µs.
+    pub clean_us: f64,
+    /// Faulted-with-recovery completion, µs.
+    pub faulted_us: f64,
+    pub injected: u64,
+    pub retransmits: u64,
+    pub reconnects: u64,
+    pub dropped_dups: u64,
+    /// XOR'd `WireFaultReport` digest — the replay fingerprint.
+    pub fault_digest: u64,
+    /// Whether the faulted run verified bit-exactly against the oracle.
+    pub verified: bool,
+}
+
 fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
@@ -263,7 +290,11 @@ fn json_escape(s: &str) -> String {
 /// closed-form argmin over the candidate pool at each (p, m), tracing
 /// the round-regime → bandwidth-regime boundary); v7 adds `topo_sweep`
 /// (two-level vs flat 123-doubling virtual-clock completion per topology
-/// preset × m, with the matrix digest and the topology-aware selection).
+/// preset × m, with the matrix digest and the topology-aware selection);
+/// v8 adds `wire_fault` (recovered-vs-clean overhead per wire backend
+/// under the seeded fault plan, with retransmit/reconnect/dup counters
+/// and the replayable fault digest — every row oracle-verified).
+#[allow(clippy::too_many_arguments)]
 pub fn hotpath_json(
     meta: &[(&str, String)],
     points: &[HotpathPoint],
@@ -275,8 +306,9 @@ pub fn hotpath_json(
     soak: &[SoakPoint],
     m_crossover: &[CrossoverPoint],
     topo_sweep: &[TopoSweepPoint],
+    wire_fault: &[WireFaultPoint],
 ) -> String {
-    let mut out = String::from("{\n  \"schema\": \"exscan-hotpath-v7\",\n  \"meta\": {");
+    let mut out = String::from("{\n  \"schema\": \"exscan-hotpath-v8\",\n  \"meta\": {");
     for (i, (k, v)) in meta.iter().enumerate() {
         if i > 0 {
             out.push(',');
@@ -439,6 +471,30 @@ pub fn hotpath_json(
             json_escape(&pt.selected)
         ));
     }
+    out.push_str("\n  ],\n  \"wire_fault\": [");
+    for (i, pt) in wire_fault.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n    {{\"backend\": \"{}\", \"seed\": {}, \"p\": {}, \"m\": {}, \
+             \"clean_us\": {:.3}, \"faulted_us\": {:.3}, \"injected\": {}, \
+             \"retransmits\": {}, \"reconnects\": {}, \"dropped_dups\": {}, \
+             \"fault_digest\": \"{:#018x}\", \"verified\": {}}}",
+            json_escape(&pt.backend),
+            pt.seed,
+            pt.p,
+            pt.m,
+            pt.clean_us,
+            pt.faulted_us,
+            pt.injected,
+            pt.retransmits,
+            pt.reconnects,
+            pt.dropped_dups,
+            pt.fault_digest,
+            pt.verified
+        ));
+    }
     out.push_str("\n  ]\n}\n");
     out
 }
@@ -575,6 +631,20 @@ mod tests {
             flat123_us: 60.25,
             selected: "two-level".into(),
         }];
+        let wire = vec![WireFaultPoint {
+            backend: "shm".into(),
+            seed: 0xA11CE,
+            p: 4,
+            m: 64,
+            clean_us: 42.125,
+            faulted_us: 63.5,
+            injected: 19,
+            retransmits: 11,
+            reconnects: 1,
+            dropped_dups: 3,
+            fault_digest: 0x0fed_cba9_8765_4321,
+            verified: true,
+        }];
         let j = hotpath_json(
             &[("host", "ci \"runner\"".to_string())],
             &points,
@@ -586,8 +656,14 @@ mod tests {
             &soak,
             &crossover,
             &topo,
+            &wire,
         );
-        assert!(j.contains("\"schema\": \"exscan-hotpath-v7\""), "{j}");
+        assert!(j.contains("\"schema\": \"exscan-hotpath-v8\""), "{j}");
+        assert!(j.contains("\"wire_fault\""), "{j}");
+        assert!(j.contains("\"backend\": \"shm\""), "{j}");
+        assert!(j.contains("\"retransmits\": 11"), "{j}");
+        assert!(j.contains("\"fault_digest\": \"0x0fedcba987654321\""), "{j}");
+        assert!(j.contains("\"verified\": true"), "{j}");
         assert!(j.contains("\"topo_sweep\""), "{j}");
         assert!(j.contains("\"topo\": \"2level:4x9\""), "{j}");
         assert!(j.contains("\"digest\": \"0x123456789abcdef0\""), "{j}");

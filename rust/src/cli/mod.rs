@@ -38,6 +38,8 @@ COMMANDS:
   run       run one algorithm on a real transport backend
               --algo NAME  --p N  --m N  --reps N
               --transport thread|shm|tcp|uds  (default: thread)
+              --write-timeout-ms MS  per-write deadline for socket sends
+                                     (default: 10000)
               --topo SPEC  run on the virtual clock priced by the per-link
                            matrix instead (p comes from the spec; the
                            two-level algo takes its node shape from it)
@@ -53,6 +55,13 @@ COMMANDS:
               --m LIST    pin exact vector lengths
               --quick     small-p, small-m budget (the CI profile)
               --transport thread|shm|tcp|uds  (default: thread)
+              --wire-fault-seed S  (wire backends only) also run the
+                          wire-fault differential: seeded frame faults
+                          injected below the chaos boundary; with
+                          recovery the run must be bit-identical to the
+                          thread oracle (nonzero retransmissions), and
+                          with recovery off the same storm must fail as
+                          a typed, attributed transport fault
             also runs the pinned pool steady-state and rank-death
             differential checks at the same seed
   serve     multi-tenant scan service demo: N independent small-m exscan
@@ -67,6 +76,16 @@ COMMANDS:
                                 (plus the concurrent-communicator check)
               --soak N          repeat the workload for N waves through
                                 one engine (sustained-load soak mode)
+              --soak-requests N total request budget for the whole soak,
+                                split evenly across the waves (overrides
+                                --requests; env: EXSCAN_SOAK_REQUESTS)
+              --write-timeout-ms MS  per-write deadline for the engine
+                                worlds' socket sends (default: 10000)
+              --wire-fault-seed S  arm seeded wire-frame faults (with
+                                recovery) on the engine's worlds: every
+                                result must still verify against its
+                                oracle, and the wire recovery counters
+                                are reported
               --kill-rank R     inject rank death: kill rank R once it
                                 reaches chaos tick T (--kill-tick,
                                 default 16); failed requests must come
@@ -123,15 +142,61 @@ fn transport_arg(args: &Args) -> Result<TransportBackend> {
 /// `exscan transports`: one `name available|unavailable [reason]` line per
 /// backend. CI's backend matrix greps this to decide which backends the
 /// runner can exercise (shm needs mmap; uds needs unix sockets; tcp needs
-/// a bindable loopback).
+/// a bindable loopback). Available wire backends additionally run a tiny
+/// recovered fault smoke and report its recovery counters — the
+/// parenthetical rides after the `available` token CI matches on.
 fn cmd_transports() -> Result<()> {
     for b in TransportBackend::all() {
         match b.probe() {
-            Ok(()) => println!("{} available", b.name()),
+            Ok(()) => match wire_fault_smoke(b) {
+                Some(detail) => println!("{} available ({detail})", b.name()),
+                None => println!("{} available", b.name()),
+            },
             Err(e) => println!("{} unavailable ({e:#})", b.name()),
         }
     }
     Ok(())
+}
+
+/// A 4-rank recovered fault smoke on one wire backend: storm-level
+/// seeded injection with recovery on, output checked against the serial
+/// oracle, recovery counters returned for the listing. `None` for the
+/// thread backend, which has no wire layer to fault.
+fn wire_fault_smoke(backend: TransportBackend) -> Option<String> {
+    use crate::mpi::{WireFaultConfig, World};
+    if backend == TransportBackend::Thread {
+        return None;
+    }
+    const P: usize = 4;
+    const M: usize = 16;
+    const SEED: u64 = 7;
+    let inputs = crate::bench::inputs_i64(P, M, SEED);
+    let world: World<i64> = World::new(
+        WorldConfig::new(Topology::flat(P))
+            .with_transport(backend)
+            .with_wire_faults(WireFaultConfig::storm(SEED)),
+    );
+    let op = ops::bxor();
+    let run = world.run(|ctx| {
+        let mut out = vec![0i64; M];
+        crate::coll::Exscan123.run(ctx, &inputs[ctx.rank()], &mut out, &op)?;
+        Ok(out)
+    });
+    let s = world.wire_stats();
+    Some(match run {
+        Ok(outs) => {
+            let oracle = crate::coll::validate::oracle_exscan(&inputs, &op);
+            let ok = (1..P).all(|r| Some(&outs[r]) == oracle[r].as_ref());
+            format!(
+                "fault-smoke {}: {} retransmits, {} reconnects, {} dups suppressed",
+                if ok { "ok" } else { "MISMATCH" },
+                s.retransmits,
+                s.reconnects,
+                s.dropped_dups
+            )
+        }
+        Err(e) => format!("fault-smoke FAILED: {e:#}"),
+    })
 }
 
 fn configs(args: &Args) -> Result<Vec<PaperConfig>> {
@@ -304,7 +369,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     let algo: Box<dyn ScanAlgorithm<i64>> =
         exscan_by_name(&name).ok_or_else(|| anyhow!("unknown algorithm {name}"))?;
     let backend = transport_arg(args)?;
-    let world = WorldConfig::new(Topology::flat(p)).with_transport(backend);
+    let write_timeout_ms: u64 = args.get("write-timeout-ms", 10_000u64)?;
+    let world = WorldConfig::new(Topology::flat(p))
+        .with_transport(backend)
+        .with_write_timeout(std::time::Duration::from_millis(write_timeout_ms));
     let bench = BenchConfig { warmups: 3, reps, validate: true };
     let inputs = crate::bench::inputs_i64(p, m, 1);
     let meas =
@@ -512,7 +580,51 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
         Err(e) => println!("rank-death differential (p=6): FAIL ({e})"),
     }
 
-    if out.failures.is_empty() && pool.is_ok() && rd.is_ok() {
+    // ── Wire-fault differential (EXPERIMENTS.md §Robustness): frame
+    // faults injected *below* the chaos boundary; recovery-enabled runs
+    // must be bit-identical to the thread oracle, recovery-disabled runs
+    // must fail typed and attributed — never panic. ──
+    let mut wf_failures = 0usize;
+    if let Some(s) = args.flag("wire-fault-seed") {
+        let wf_seed: u64 =
+            s.parse().map_err(|_| anyhow!("--wire-fault-seed: cannot parse {s:?}"))?;
+        anyhow::ensure!(
+            backend != TransportBackend::Thread,
+            "--wire-fault-seed needs a wire backend (--transport shm|tcp|uds); \
+             the thread backend has no wire layer to fault"
+        );
+        // Wire worlds are OS-thread meshes per rank; keep the sweep to
+        // small sizes (the machinery, not the scaling, is under test).
+        let wf_ps: Vec<usize> = p_values.iter().copied().filter(|&p| p <= 8).collect();
+        anyhow::ensure!(!wf_ps.is_empty(), "wire-fault differential needs a p <= 8");
+        let wf_ms: Vec<usize> =
+            m_values.iter().copied().filter(|&m| m <= 1024).collect();
+        let wf = crate::coll::validate::wire_fault_differential(
+            backend, wf_seed, &wf_ps, &wf_ms,
+        );
+        println!(
+            "wire-fault differential: {} cases, {} injected; {} retransmits, \
+             {} reconnects, {} dups suppressed (fault digest {:#018x})",
+            wf.cases, wf.injected, wf.retransmits, wf.reconnects, wf.dropped_dups,
+            wf.fault_digest
+        );
+        for f in &wf.failures {
+            println!("FAIL {f}");
+        }
+        wf_failures += wf.failures.len();
+        match crate::coll::validate::wire_fault_no_recovery(backend, wf_seed, 4) {
+            Ok(()) => println!(
+                "wire-fault no-recovery (p=4): typed transport fault, attributed, \
+                 no panic"
+            ),
+            Err(e) => {
+                println!("wire-fault no-recovery (p=4): FAIL ({e})");
+                wf_failures += 1;
+            }
+        }
+    }
+
+    if out.failures.is_empty() && pool.is_ok() && rd.is_ok() && wf_failures == 0 {
         println!("all cases bit-identical to oracle with Theorem-1 counts");
         Ok(())
     } else {
@@ -521,7 +633,10 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
         }
         bail!(
             "{} chaos-fuzz failure(s); reproduce with `exscan fuzz --seed {seed}{}{}`",
-            out.failures.len() + usize::from(pool.is_err()) + usize::from(rd.is_err()),
+            out.failures.len()
+                + usize::from(pool.is_err())
+                + usize::from(rd.is_err())
+                + wf_failures,
             if quick { " --quick" } else { "" },
             if backend == TransportBackend::Thread {
                 String::new()
@@ -559,12 +674,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     use crate::coll::validate::chaos_concurrent_comms;
     use crate::coll::validate::oracle_exscan;
-    use crate::mpi::ChaosConfig;
+    use crate::mpi::{ChaosConfig, WireFaultConfig};
     use crate::svc::{BatchPolicy, EngineConfig, ReqOp, ScanEngine, ScanRequest, SvcError};
 
     let smoke = args.switch("smoke");
     let p: usize = args.get("p", 8)?;
-    let requests: usize = {
+    let mut requests: usize = {
         let n = args.get("requests", if smoke { 24 } else { 256 })?;
         if smoke {
             n.min(24)
@@ -592,19 +707,60 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let kill_tick: u64 = args.get("kill-tick", 16u64)?;
     anyhow::ensure!(p >= 4, "serve needs p >= 4 (got {p})");
     anyhow::ensure!(waves >= 1, "--soak needs at least one wave");
+    // Explicit soak request budget: total requests over the whole soak,
+    // split evenly across the waves. The flag wins over the
+    // EXSCAN_SOAK_REQUESTS env; either overrides --requests (the road to
+    // the million-request soak without a command-line forest).
+    let soak_budget: Option<usize> = match args.flag("soak-requests") {
+        Some(s) => {
+            Some(s.parse().map_err(|_| anyhow!("--soak-requests: cannot parse {s:?}"))?)
+        }
+        None => match std::env::var("EXSCAN_SOAK_REQUESTS") {
+            Ok(v) => Some(
+                v.parse()
+                    .map_err(|_| anyhow!("EXSCAN_SOAK_REQUESTS: cannot parse {v:?}"))?,
+            ),
+            Err(_) => None,
+        },
+    };
+    if let Some(budget) = soak_budget {
+        anyhow::ensure!(budget >= 1, "the soak request budget must be at least 1");
+        requests = (budget / waves).max(1);
+        if smoke {
+            requests = requests.min(24);
+        }
+    }
     if let Some(r) = kill_rank {
         anyhow::ensure!(r < p, "--kill-rank {r} out of range for p={p}");
     }
 
     let backend = transport_arg(args)?;
+    let write_timeout_ms: u64 = args.get("write-timeout-ms", 10_000u64)?;
+    let wf_seed: Option<u64> = match args.flag("wire-fault-seed") {
+        None => None,
+        Some(s) => Some(
+            s.parse().map_err(|_| anyhow!("--wire-fault-seed: cannot parse {s:?}"))?,
+        ),
+    };
+    if wf_seed.is_some() {
+        anyhow::ensure!(
+            backend != TransportBackend::Thread,
+            "--wire-fault-seed needs a wire backend (--transport shm|tcp|uds); \
+             the thread backend has no wire layer to fault"
+        );
+    }
     let mut cfg = EngineConfig::new(p)
         .with_algo(&algo)
         .with_transport(backend)
+        .with_write_timeout(Duration::from_millis(write_timeout_ms))
         .with_policy(BatchPolicy {
             window: Duration::from_micros(window_us),
             max_batch,
             ..Default::default()
         });
+    if let Some(s) = wf_seed {
+        cfg = cfg.with_wire_faults(WireFaultConfig::new(s));
+    }
     let mut chaos = chaos_seed.map(ChaosConfig::new);
     if let Some(r) = kill_rank {
         // Without --chaos-seed the death is the *only* injected fault
@@ -634,6 +790,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             None => String::new(),
         }
     );
+    if let Some(s) = wf_seed {
+        println!(
+            "wire faults armed (seed {s}, recovery on): every result must still \
+             verify bit-exactly against its oracle"
+        );
+    }
 
     // Deterministic mixed workload; expected results precomputed from the
     // serial oracle (bit-exact for these integer operators). Each wave
@@ -739,6 +901,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "latency: p50 {:.1} µs, p99 {:.1} µs, p999 {:.1} µs over {} completions",
         ms.latency_p50_us, ms.latency_p99_us, ms.latency_p999_us, ms.latency_count
     );
+    let wire_active = ms.wire_retransmits
+        + ms.wire_reconnects
+        + ms.wire_dropped_dups
+        + ms.transport_faults;
+    if wf_seed.is_some() || wire_active > 0 {
+        println!(
+            "wire recovery: {} retransmits, {} reconnects, {} dups suppressed, \
+             {} typed faults",
+            ms.wire_retransmits, ms.wire_reconnects, ms.wire_dropped_dups,
+            ms.transport_faults
+        );
+    }
+    if wf_seed.is_some() {
+        anyhow::ensure!(
+            ms.wire_retransmits + ms.wire_reconnects + ms.wire_dropped_dups >= 1,
+            "wire faults were armed but the recovery layer never acted — \
+             the self-healing run proved nothing"
+        );
+    }
     anyhow::ensure!(
         ms.submitted == ms.completed + ms.failed,
         "lost requests: submitted {} != completed {} + failed {}",

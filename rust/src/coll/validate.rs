@@ -28,7 +28,8 @@ use super::{
     ScanAlgorithm,
 };
 use crate::mpi::{
-    ops, ChaosConfig, Comm, Elem, OpRef, Rec2, Topology, TransportBackend, World, WorldConfig,
+    ops, ChaosConfig, Comm, Elem, OpRef, Rec2, Topology, TransportBackend, WireFaultConfig,
+    World, WorldConfig,
 };
 use crate::trace::{check_all, RankTrace, TraceReport};
 use crate::util::bits::{rounds_123, rounds_1247, rounds_one_doubling, rounds_pow2};
@@ -922,6 +923,271 @@ pub fn rank_death_differential(seed: u64, p: usize) -> std::result::Result<(), S
         .map_err(|e| format!("seed {seed} p={p}: clean run failed: {e:#}"))?;
     if let Some(msg) = oracle_check_exact(&inputs, &op, &outputs) {
         return Err(format!("seed {seed} p={p}: clean run oracle mismatch: {msg}"));
+    }
+    Ok(())
+}
+
+// ───────────────────── wire-fault differential ─────────────────────
+
+/// Aggregate result of one wire-fault differential sweep.
+#[derive(Debug, Default)]
+pub struct WireFaultOutcome {
+    pub cases: usize,
+    /// Recovery counters summed over every faulted world in the sweep.
+    pub retransmits: u64,
+    pub reconnects: u64,
+    pub dropped_dups: u64,
+    /// Total injected wire faults, by the injectors' own accounting.
+    pub injected: u64,
+    /// XOR of the per-world [`crate::mpi::WireFaultReport`] digests —
+    /// the replay fingerprint: the same sweep at the same seed yields
+    /// the same value.
+    pub fault_digest: u64,
+    /// Human-readable failure descriptions (empty = all cases passed).
+    pub failures: Vec<String>,
+}
+
+/// Fold a (possibly about-to-be-replaced) faulted world's recovery
+/// counters and injection report into the outcome.
+fn absorb_wire<T: Elem>(world: &World<T>, out: &mut WireFaultOutcome) {
+    let s = world.wire_stats();
+    out.retransmits += s.retransmits;
+    out.reconnects += s.reconnects;
+    out.dropped_dups += s.dropped_dups;
+    if let Some(r) = world.wire_report() {
+        out.injected += r.injected();
+        out.fault_digest ^= r.digest;
+    }
+}
+
+/// The self-healing gate (EXPERIMENTS.md §Robustness): a representative
+/// algorithm set run on a wire backend with seeded frame faults injected
+/// **below** the chaos boundary and recovery enabled must be
+/// bit-identical — outputs, traces and chaos schedule digest — to the
+/// clean thread-world oracle at the same seeds, while actually
+/// exercising the repair machinery (the sweep must retransmit at least
+/// once, or it proved nothing and fails). Chaos injection runs on *both*
+/// worlds at the same derived seed, so the digest comparison pins the
+/// layering claim: wire corruption and repair below the boundary is
+/// invisible to everything above it.
+pub fn wire_fault_differential(
+    backend: TransportBackend,
+    seed: u64,
+    p_values: &[usize],
+    m_values: &[usize],
+) -> WireFaultOutcome {
+    let mut out = WireFaultOutcome::default();
+    for &p in p_values {
+        assert!(p >= 2, "wire-fault differential needs p >= 2");
+        let chaos_seed = seed ^ (p as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mk_faulted = || -> World<i64> {
+            World::new(
+                WorldConfig::new(Topology::flat(p))
+                    .with_trace(true)
+                    .with_transport(backend)
+                    .with_chaos(ChaosConfig::new(chaos_seed))
+                    .with_wire_faults(WireFaultConfig::new(seed)),
+            )
+        };
+        let mk_oracle = || -> World<i64> {
+            World::new(
+                WorldConfig::new(Topology::flat(p))
+                    .with_trace(true)
+                    .with_chaos(ChaosConfig::new(chaos_seed)),
+            )
+        };
+        let mut faulted = mk_faulted();
+        let mut oracle_w = mk_oracle();
+        let fails_before = out.failures.len();
+        let algos: Vec<Box<dyn ScanAlgorithm<i64>>> = vec![
+            Box::new(Exscan123),
+            Box::new(ExscanOneDoubling),
+            Box::new(ExscanMpich),
+            Box::new(Exscan1247),
+        ];
+        let mk_ops =
+            [ops::bxor as fn() -> OpRef<i64>, ops::sum_i64 as fn() -> OpRef<i64>];
+        for &m in m_values {
+            for mk_op in &mk_ops {
+                let inputs = crate::bench::inputs_i64(
+                    p,
+                    m,
+                    seed ^ (m as u64).wrapping_mul(0xC2B2_AE35),
+                );
+                for algo in &algos {
+                    out.cases += 1;
+                    let op = mk_op();
+                    let label = format!(
+                        "wire-fault algo={} op={} backend={backend} p={p} m={m} \
+                         seed={seed} (reproduce: exscan fuzz --transport {backend} \
+                         --wire-fault-seed {seed} --p {p} --m {m})",
+                        algo.name(),
+                        op.name()
+                    );
+                    let f_run = run_world_scan(&faulted, algo.as_ref(), &op, &inputs);
+                    let o_run = run_world_scan(&oracle_w, algo.as_ref(), &op, &inputs);
+                    let ((f_out, f_tr), (o_out, o_tr)) = match (f_run, o_run) {
+                        (Ok(f), Ok(o)) => (f, o),
+                        // A failed run leaves the faulted transport
+                        // poisoned (and the oracle world possibly holding
+                        // stale tags): rebuild both, absorbing the
+                        // faulted world's counters first.
+                        (Err(e), _) => {
+                            out.failures
+                                .push(format!("{label}: faulted run failed: {e:#}"));
+                            absorb_wire(&faulted, &mut out);
+                            faulted = mk_faulted();
+                            oracle_w = mk_oracle();
+                            continue;
+                        }
+                        (_, Err(e)) => {
+                            out.failures
+                                .push(format!("{label}: oracle run failed: {e:#}"));
+                            absorb_wire(&faulted, &mut out);
+                            faulted = mk_faulted();
+                            oracle_w = mk_oracle();
+                            continue;
+                        }
+                    };
+                    if f_out != o_out {
+                        out.failures.push(format!(
+                            "{label}: outputs diverged from the thread oracle"
+                        ));
+                        continue;
+                    }
+                    if let Some(msg) = oracle_check_exact(&inputs, &op, &f_out) {
+                        out.failures.push(format!("{label}: oracle mismatch: {msg}"));
+                        continue;
+                    }
+                    if f_tr.traces.len() != o_tr.traces.len()
+                        || f_tr
+                            .traces
+                            .iter()
+                            .zip(&o_tr.traces)
+                            .any(|(a, b)| a.events != b.events)
+                    {
+                        out.failures.push(format!(
+                            "{label}: traces diverged from the thread oracle"
+                        ));
+                        continue;
+                    }
+                }
+            }
+        }
+        // Chaos decisions live above the transport boundary: for a clean
+        // sweep the schedule digests must agree bit for bit even though
+        // the wire below was being corrupted and repaired the whole time.
+        if out.failures.len() == fails_before {
+            let fd = faulted.chaos_report().map(|r| r.schedule_digest);
+            let od = oracle_w.chaos_report().map(|r| r.schedule_digest);
+            if fd != od {
+                out.failures.push(format!(
+                    "wire-fault backend={backend} p={p} seed={seed}: chaos schedule \
+                     digest {fd:?} != thread-oracle digest {od:?}"
+                ));
+            }
+        }
+        absorb_wire(&faulted, &mut out);
+    }
+    if out.failures.is_empty() && out.retransmits == 0 {
+        out.failures.push(format!(
+            "wire-fault sweep (backend={backend}, seed={seed}) exercised no \
+             retransmission — the self-healing gate proved nothing"
+        ));
+    }
+    out
+}
+
+/// Recovery disabled: the same class of injected wire faults must
+/// surface as a **typed, attributed** failure — an error chain naming
+/// the transport fault, a populated [`World::transport_fault`], the
+/// faulting channel's source rank in [`World::dead_ranks`] — and must
+/// surface promptly via poison-wake, never as a receiver-thread panic
+/// and never by waiting out the receive deadline. Storm-level
+/// probabilities (boosted further here) make the first faults land
+/// within a handful of frames at any seed.
+pub fn wire_fault_no_recovery(
+    backend: TransportBackend,
+    seed: u64,
+    p: usize,
+) -> std::result::Result<(), String> {
+    assert!(p >= 2, "wire-fault differential needs p >= 2");
+    const M: usize = 64;
+    let deadline = std::time::Duration::from_secs(2);
+    let op = ops::bxor();
+    let inputs = crate::bench::inputs_i64(p, M, seed);
+    let cfg = WireFaultConfig::storm(seed)
+        .with_checksum_prob(0.5)
+        .with_truncate_prob(0.25)
+        .without_recovery();
+    let world: World<i64> = World::new(
+        WorldConfig::new(Topology::flat(p))
+            .with_transport(backend)
+            .with_wire_faults(cfg)
+            .with_recv_timeout(deadline),
+    );
+    // Per-frame corruption odds are ~2/3, so a fault lands almost surely
+    // in the first scan; the retries only guard pathological seeds
+    // (decisions are pure in seq, so later runs sample fresh ones).
+    let mut failure: Option<String> = None;
+    for _ in 0..4 {
+        let t0 = std::time::Instant::now();
+        let run = world.run(|ctx| {
+            let input = &inputs[ctx.rank()];
+            let mut output = vec![0i64; M];
+            Exscan123.run(ctx, input, &mut output, &op)?;
+            Ok(output)
+        });
+        match run {
+            Ok(_) => continue,
+            Err(e) => {
+                if t0.elapsed() >= deadline {
+                    return Err(format!(
+                        "backend={backend} seed={seed} p={p}: survivors waited out \
+                         the receive deadline instead of being poisoned awake"
+                    ));
+                }
+                failure = Some(format!("{e:#}"));
+                break;
+            }
+        }
+    }
+    let Some(err) = failure else {
+        return Err(format!(
+            "backend={backend} seed={seed} p={p}: storm-faulted world kept \
+             succeeding with recovery disabled"
+        ));
+    };
+    if !err.contains("transport fault") {
+        return Err(format!(
+            "backend={backend} seed={seed} p={p}: failure not attributed to a \
+             transport fault: {err}"
+        ));
+    }
+    let Some(fault) = world.transport_fault() else {
+        return Err(format!(
+            "backend={backend} seed={seed} p={p}: no typed fault recorded on the \
+             transport"
+        ));
+    };
+    if fault.attempts < 1 {
+        return Err(format!(
+            "backend={backend} seed={seed} p={p}: typed fault carries zero attempts"
+        ));
+    }
+    if !world.dead_ranks().contains(&fault.src) {
+        return Err(format!(
+            "backend={backend} seed={seed} p={p}: fault channel source {} absent \
+             from the dead-rank registry {:?}",
+            fault.src,
+            world.dead_ranks()
+        ));
+    }
+    if world.wire_stats().faults == 0 {
+        return Err(format!(
+            "backend={backend} seed={seed} p={p}: fault counter still zero after \
+             an attributed failure"
+        ));
     }
     Ok(())
 }

@@ -459,6 +459,18 @@ impl<T: Elem> RankCtx<T> {
         }
         let deadline = Instant::now() + self.recv_deadline;
         loop {
+            // A typed wire-transport fault (budget-exhausted corruption,
+            // stream reset, write timeout): register the faulted *source*
+            // rank as dead — the engine's structural failure attribution
+            // then classifies the run as RankFailed without parsing any
+            // error string — and surface the typed fault itself.
+            if let Some(f) = self.transport.fault() {
+                self.dead.mark_dead(f.src);
+                bail!(
+                    "rank {} aborting receive (from={from}, round={round}): {f}",
+                    self.rank
+                );
+            }
             // A rank that died before we started blocking: fail fast and
             // attributed rather than waiting out the full deadline for a
             // message that may never come (the whole job is doomed — every
@@ -473,13 +485,14 @@ impl<T: Elem> RankCtx<T> {
             match self.transport.take(self.rank, from, tag, &mut self.pending, deadline) {
                 Some(msg) => return Ok(msg),
                 None => {
-                    // None is overloaded: poison wake-up (a rank died — the
-                    // next loop pass attributes it) or deadline expiry (a
-                    // genuine lost message / deadlock). Distinguish by the
-                    // registry and the clock; a spurious early return with
-                    // neither re-enters the receive with the remaining
-                    // deadline.
-                    if self.dead.any() {
+                    // None is overloaded: poison wake-up (a rank died or
+                    // the wire faulted — the next loop pass attributes
+                    // it) or deadline expiry (a genuine lost message /
+                    // deadlock). Distinguish by the fault slot, the
+                    // registry and the clock; a spurious early return
+                    // with none of them re-enters the receive with the
+                    // remaining deadline.
+                    if self.dead.any() || self.transport.fault().is_some() {
                         continue;
                     }
                     if Instant::now() < deadline {

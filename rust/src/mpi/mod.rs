@@ -31,6 +31,17 @@
 //!   * **tcp / uds** ([`socket`]) — loopback TCP or Unix-domain stream
 //!     mesh with per-peer send/recv threads feeding the inbox matcher;
 //!     length-prefixed, versioned, checksummed frames.
+//!
+//!   Both wire backends share the [`recover`] layer: sequence-numbered
+//!   frames (wire v2), seq-based duplicate suppression, NACK/retransmit
+//!   repair of corrupt frames under a bounded exponential-backoff
+//!   budget, and the typed [`TransportFault`] taxonomy that replaced
+//!   every receiver-thread panic — faults funnel through poison-wake
+//!   into the engine's `RankFailed` attribution. [`wirefault`] is the
+//!   seeded, replayable fault *injector* driving that machinery from
+//!   **below** the chaos boundary (frame bit flips, checksum smashes,
+//!   truncation, duplication, stream resets), armed per world via
+//!   [`WorldConfig::with_wire_faults`].
 //! * [`world`] — topology, the one-shot [`run_world`]/[`run_scan`] entry
 //!   points and the persistent [`World`] executor;
 //!   [`WorldConfig::with_transport`] selects the backend.
@@ -55,11 +66,13 @@ pub(crate) mod inbox;
 pub mod msg;
 pub mod op;
 pub mod pool;
+pub(crate) mod recover;
 pub(crate) mod shm;
 pub(crate) mod socket;
 pub(crate) mod transport;
 pub mod vbarrier;
 pub(crate) mod wire;
+pub mod wirefault;
 pub mod world;
 
 pub use chaos::{ChaosAction, ChaosConfig, ChaosEvent, ChaosReport};
@@ -69,7 +82,9 @@ pub use elem::{Dtype, Elem, Rec2};
 pub use inbox::InboxStats;
 pub use op::{kernels, ops, CombineOp, FnOp, OpKernel, OpRef, ScanKernelFn, SliceKernelFn};
 pub use pool::{PoolBuf, PoolStats};
-pub use transport::TransportBackend;
+pub use recover::{TransportFault, TransportFaultKind, TransportStats};
+pub use transport::{TransportBackend, DEFAULT_WRITE_TIMEOUT};
+pub use wirefault::{WireFaultConfig, WireFaultEvent, WireFaultKind, WireFaultReport};
 pub use world::{
     rank_threads_spawned, run_scan, run_world, RunResult, Topology, World, WorldConfig,
 };

@@ -1,0 +1,613 @@
+//! The **wire recovery layer** shared by both cross-process backends
+//! (`mpi/shm.rs` rings and `mpi/socket.rs` meshes): sequence-number
+//! accounting, duplicate suppression, NACK/retransmit repair of corrupt
+//! frames with a bounded exponential-backoff retry budget, and the typed
+//! [`TransportFault`] taxonomy that replaces every receiver-thread
+//! `panic!` the backends used to contain corruption with.
+//!
+//! ## The protocol
+//!
+//! Every frame carries a per-(src → dst) channel sequence number
+//! (`seq`, wire v2 — see `mpi/wire.rs`), assigned at encode time from a
+//! monotone per-channel counter. The receiver tracks the next expected
+//! seq per channel; both shm rings and socket streams are FIFO per
+//! channel, so in a fault-free run the observed stream is exactly
+//! 0, 1, 2, ….
+//!
+//! * **Duplicate suppression:** a frame with `seq <` expected is a
+//!   replay (injected duplication, or a retransmission that crossed a
+//!   repaired original) — dropped and counted, never double-delivered.
+//! * **NACK/retransmit:** on a verification failure (bad header, bad
+//!   checksum, truncation) the receiver NACKs the frame *by sequence
+//!   number*. The sender keeps a bounded per-channel **retransmit
+//!   shelf** of recently transmitted frames; because both backends run
+//!   their channel endpoints in one process today, the NACK is serviced
+//!   synchronously — the receiver pulls the shelved clean copy directly
+//!   instead of round-tripping a control frame (the shelf would move
+//!   into the shm segment / onto the socket once the multi-process
+//!   launcher of ROADMAP item 3 lands; the protocol is already keyed
+//!   for it). Each retry backs off exponentially (2^attempt µs, capped)
+//!   and re-enters fault injection with the attempt number in the key,
+//!   so a retransmission can itself be faulted.
+//! * **Budget exhaustion:** after `max_attempts` transmission attempts
+//!   (or a shelf miss — the bounded shelf evicted the frame), the
+//!   receiver gives up with a typed [`TransportFault`] recording
+//!   backend, channel, seq, fault kind and attempt count. The backend
+//!   stores it (first-wins), poisons every inbox, and the rank context
+//!   turns it into the existing dead-rank / `RankFailed` attribution —
+//!   a receiver thread never aborts the process.
+//!
+//! Recovery is **below the chaos boundary**: a repaired frame is
+//! byte-identical to the original, so recovered runs stay bit-identical
+//! to the clean thread-world oracle (outputs, traces, chaos digests) —
+//! the gate `tests/wirefault.rs` holds both backends to.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::transport::TransportBackend;
+use super::wire::{self, FrameHeader, HEADER_BYTES};
+use super::wirefault::{
+    WireFaultConfig, WireFaultKind, WireFaultPlan, WireFaultReport, WireMutation,
+};
+
+/// What a wire transport observed going wrong, as a receiver sees it —
+/// the observable taxonomy (a receiver cannot tell a header flip from a
+/// checksum smash; both verify as corruption).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportFaultKind {
+    /// Frame header failed structural decode (magic/version/kind/...).
+    CorruptHeader,
+    /// FNV checksum mismatch over header ∥ payload.
+    ChecksumMismatch,
+    /// Frame shorter than its header claims.
+    Truncated,
+    /// Sequence number jumped forward: a frame went missing on a FIFO
+    /// channel.
+    SeqGap,
+    /// Header and checksum verified but the payload would not decode.
+    UndecodablePayload,
+    /// Peer stream reset mid-run (socket backends).
+    ConnectionReset,
+    /// Send-side write watchdog expired.
+    WriteTimeout,
+}
+
+impl TransportFaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportFaultKind::CorruptHeader => "corrupt-header",
+            TransportFaultKind::ChecksumMismatch => "checksum-mismatch",
+            TransportFaultKind::Truncated => "truncated",
+            TransportFaultKind::SeqGap => "seq-gap",
+            TransportFaultKind::UndecodablePayload => "undecodable-payload",
+            TransportFaultKind::ConnectionReset => "connection-reset",
+            TransportFaultKind::WriteTimeout => "write-timeout",
+        }
+    }
+}
+
+impl std::fmt::Display for TransportFaultKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A typed, attributed transport failure: which backend, which ordered
+/// channel, which frame, what kind, and how many transmission attempts
+/// the recovery layer burned before giving up. This is the value that
+/// replaces the old receiver-thread `panic!`s and the socket mesh's
+/// first-wins fault *string* — it funnels through `poison_all` into the
+/// engine's `RankFailed` attribution instead of aborting anything.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransportFault {
+    pub backend: TransportBackend,
+    pub src: usize,
+    pub dst: usize,
+    pub seq: u64,
+    pub kind: TransportFaultKind,
+    pub attempts: u32,
+}
+
+impl std::fmt::Display for TransportFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "transport fault [{}]: channel {}→{} seq={} kind={} after {} attempt(s)",
+            self.backend, self.src, self.dst, self.seq, self.kind, self.attempts
+        )
+    }
+}
+
+/// Whole-transport recovery/fault counters, surfaced by
+/// `Transport::wire_stats` → `exscan transports` and the service
+/// metrics. Monotonic over the transport's lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    /// Frames repaired by a shelf retransmission.
+    pub retransmits: u64,
+    /// Simulated stream reconnects after an injected reset (sockets).
+    pub reconnects: u64,
+    /// Frames dropped by seq-based duplicate suppression.
+    pub dropped_dups: u64,
+    /// Fatal typed faults raised (budget exhaustion, resets without
+    /// recovery, write timeouts).
+    pub faults: u64,
+}
+
+impl TransportStats {
+    /// Fold another transport's counters in (e.g. the engine's value and
+    /// segmented worlds feeding one metrics gauge set).
+    pub fn merge(&mut self, other: &TransportStats) {
+        self.retransmits += other.retransmits;
+        self.reconnects += other.reconnects;
+        self.dropped_dups += other.dropped_dups;
+        self.faults += other.faults;
+    }
+}
+
+/// Verdict of [`WireRecovery::process_frame`] for one incoming frame.
+pub enum FrameVerdict {
+    /// Frame verified clean and in-order: decode and deposit these
+    /// bytes (header ∥ payload, byte-identical to what was encoded).
+    Deliver(Vec<u8>),
+    /// Duplicate sequence number on this channel — suppressed.
+    Dup,
+}
+
+/// Per-transport recovery state: seq counters and retransmit shelves
+/// for every ordered channel, the optional fault-injection plan, the
+/// first-wins typed fault slot, and the counters.
+pub(crate) struct WireRecovery {
+    backend: TransportBackend,
+    p: usize,
+    plan: Option<WireFaultPlan>,
+    recover: bool,
+    max_attempts: u32,
+    shelf_cap: usize,
+    /// Next seq to assign per channel (sender side), row-major src*p+dst.
+    send_seq: Vec<AtomicU64>,
+    /// Next seq expected per channel (receiver side). Each channel has a
+    /// single consumer (the owning rank's drain / the pair's recv
+    /// thread), so a plain store after load is race-free.
+    expect_seq: Vec<AtomicU64>,
+    /// Bounded FIFO of (seq, clean frame) per channel; empty (and never
+    /// pushed) when no fault plan is armed.
+    shelves: Vec<Mutex<VecDeque<(u64, Vec<u8>)>>>,
+    retransmits: AtomicU64,
+    reconnects: AtomicU64,
+    dropped_dups: AtomicU64,
+    faults: AtomicU64,
+    fault: Mutex<Option<TransportFault>>,
+}
+
+/// Sender-side injection decisions for one frame, resolved at encode
+/// time so backends apply them uniformly. (Stream resets are re-derived
+/// on the socket send thread via [`WireRecovery::reset_planned`] — plan
+/// decisions are pure, so no decision needs to cross threads.)
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct SendPlan {
+    /// Write the frame to the wire twice.
+    pub duplicate: bool,
+}
+
+impl WireRecovery {
+    pub fn new(backend: TransportBackend, p: usize, cfg: Option<&WireFaultConfig>) -> Self {
+        let (recover, max_attempts, shelf_cap) = match cfg {
+            Some(c) => (c.recover, c.max_attempts.max(1), c.shelf_cap.max(1)),
+            None => (true, 1, 1),
+        };
+        Self {
+            backend,
+            p,
+            plan: cfg.map(|c| WireFaultPlan::new(c.clone())),
+            recover,
+            max_attempts,
+            shelf_cap,
+            send_seq: (0..p * p).map(|_| AtomicU64::new(0)).collect(),
+            expect_seq: (0..p * p).map(|_| AtomicU64::new(0)).collect(),
+            shelves: (0..p * p).map(|_| Mutex::new(VecDeque::new())).collect(),
+            retransmits: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+            dropped_dups: AtomicU64::new(0),
+            faults: AtomicU64::new(0),
+            fault: Mutex::new(None),
+        }
+    }
+
+    fn ch(&self, src: usize, dst: usize) -> usize {
+        src * self.p + dst
+    }
+
+    /// Assign the next sequence number on channel src → dst.
+    pub fn next_seq(&self, src: usize, dst: usize) -> u64 {
+        self.send_seq[self.ch(src, dst)].fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Sender-side hook, called with the fully encoded frame: shelve a
+    /// clean copy for possible retransmission and resolve the send-side
+    /// injection decisions. Free (no copy, no decisions) when no fault
+    /// plan is armed.
+    pub fn on_send(&self, src: usize, dst: usize, seq: u64, frame: &[u8]) -> SendPlan {
+        let Some(plan) = &self.plan else {
+            return SendPlan::default();
+        };
+        {
+            let mut shelf =
+                self.shelves[self.ch(src, dst)].lock().unwrap_or_else(|e| e.into_inner());
+            if shelf.len() >= self.shelf_cap {
+                shelf.pop_front();
+            }
+            shelf.push_back((seq, frame.to_vec()));
+        }
+        let duplicate = plan.duplicate(src, dst, seq);
+        if duplicate {
+            plan.note(WireFaultKind::Duplicate, src, dst, seq, 0);
+        }
+        SendPlan { duplicate }
+    }
+
+    /// Whether the fault plan schedules a connection reset before the
+    /// frame `seq` on channel src → dst. Decisions are pure in
+    /// (seed, src, dst, seq), so the socket send thread re-derives the
+    /// sampler's answer without any cross-thread marker. Always false
+    /// for shm (rings have no stream to reset) and without a plan.
+    pub fn reset_planned(&self, src: usize, dst: usize, seq: u64) -> bool {
+        match &self.plan {
+            Some(plan) => self.backend != TransportBackend::Shm && plan.reset(src, dst, seq),
+            None => false,
+        }
+    }
+
+    /// Whether faulted frames are repaired (retransmit/reconnect) or
+    /// immediately fatal.
+    pub fn recovery_enabled(&self) -> bool {
+        self.recover
+    }
+
+    /// Record an applied stream reset + simulated reconnect (sockets,
+    /// recovery enabled).
+    pub fn note_reset_reconnect(&self, src: usize, dst: usize, seq: u64) {
+        if let Some(plan) = &self.plan {
+            plan.note(WireFaultKind::Reset, src, dst, seq, 0);
+        }
+        self.reconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an applied stream reset that will *not* be recovered
+    /// (recovery disabled): the caller raises the typed fault.
+    pub fn note_reset_fatal(&self, src: usize, dst: usize, seq: u64) {
+        if let Some(plan) = &self.plan {
+            plan.note(WireFaultKind::Reset, src, dst, seq, 0);
+        }
+    }
+
+    /// Exponential backoff for transmission attempt `attempt`:
+    /// 2^attempt µs, capped at 256 µs — long enough to be a real
+    /// escalation ladder, short enough that a full retry budget costs
+    /// well under a millisecond.
+    pub fn backoff(attempt: u32) -> Duration {
+        Duration::from_micros(1u64 << attempt.min(8))
+    }
+
+    /// Receiver-side path for one incoming frame (header ∥ payload,
+    /// pristine as read from the ring/stream). Applies the fault plan's
+    /// receiver-side mutations, verifies, repairs via the retransmit
+    /// shelf inside the bounded backoff budget, suppresses duplicates,
+    /// and either yields deliverable clean bytes or a typed fault.
+    pub fn process_frame(
+        &self,
+        src: usize,
+        dst: usize,
+        frame: Vec<u8>,
+    ) -> Result<FrameVerdict, TransportFault> {
+        let seq = wire::peek_seq(&frame).unwrap_or(0);
+        let fault = |kind: TransportFaultKind, attempts: u32| TransportFault {
+            backend: self.backend,
+            src,
+            dst,
+            seq,
+            kind,
+            attempts,
+        };
+        if frame.len() < HEADER_BYTES {
+            // Backends always hand over at least a header's worth; this
+            // is a framing bug, not an injected fault — still typed.
+            return Err(self.raise(fault(TransportFaultKind::Truncated, 1)));
+        }
+        let mut wire_bytes = frame;
+        let mut attempt: u32 = 0;
+        loop {
+            if let Some(plan) = &self.plan {
+                if let Some(m) = plan.mutation(src, dst, seq, attempt) {
+                    apply_mutation(&mut wire_bytes, m);
+                    plan.note(m.kind, src, dst, seq, attempt);
+                }
+            }
+            match validate_frame(&wire_bytes) {
+                Ok(header) => {
+                    let expect = &self.expect_seq[self.ch(src, dst)];
+                    let e = expect.load(Ordering::Relaxed);
+                    if header.seq < e {
+                        self.dropped_dups.fetch_add(1, Ordering::Relaxed);
+                        return Ok(FrameVerdict::Dup);
+                    }
+                    if header.seq > e {
+                        return Err(self.raise(fault(TransportFaultKind::SeqGap, attempt + 1)));
+                    }
+                    expect.store(e + 1, Ordering::Relaxed);
+                    return Ok(FrameVerdict::Deliver(wire_bytes));
+                }
+                Err(kind) => {
+                    attempt += 1;
+                    if !self.recover || attempt >= self.max_attempts {
+                        return Err(self.raise(fault(kind, attempt)));
+                    }
+                    // NACK by seq: pull the shelved clean copy (the
+                    // synchronous in-process form of the retransmit
+                    // round-trip) after backing off.
+                    std::thread::sleep(Self::backoff(attempt));
+                    match self.shelf_fetch(src, dst, seq) {
+                        Some(clean) => {
+                            self.retransmits.fetch_add(1, Ordering::Relaxed);
+                            wire_bytes = clean;
+                        }
+                        None => return Err(self.raise(fault(kind, attempt))),
+                    }
+                }
+            }
+        }
+    }
+
+    fn shelf_fetch(&self, src: usize, dst: usize, seq: u64) -> Option<Vec<u8>> {
+        let shelf = self.shelves[self.ch(src, dst)].lock().unwrap_or_else(|e| e.into_inner());
+        shelf.iter().find(|(s, _)| *s == seq).map(|(_, f)| f.clone())
+    }
+
+    /// Count and store a fatal fault (first one wins), returning it for
+    /// the caller to propagate. The caller is responsible for poisoning
+    /// its inboxes so blocked receivers wake and attribute it.
+    pub fn raise(&self, f: TransportFault) -> TransportFault {
+        self.faults.fetch_add(1, Ordering::Relaxed);
+        let mut slot = self.fault.lock().unwrap_or_else(|e| e.into_inner());
+        if slot.is_none() {
+            *slot = Some(f);
+        }
+        f
+    }
+
+    /// Count and store a fault observed outside [`Self::process_frame`]
+    /// (payload decode after delivery, stream-level errors), attributed
+    /// to the channel's most recently accepted seq.
+    pub fn raise_external(
+        &self,
+        src: usize,
+        dst: usize,
+        kind: TransportFaultKind,
+    ) -> TransportFault {
+        let seq =
+            self.expect_seq[self.ch(src, dst)].load(Ordering::Relaxed).saturating_sub(1);
+        self.raise(TransportFault { backend: self.backend, src, dst, seq, kind, attempts: 1 })
+    }
+
+    /// The backend this recovery layer is attached to.
+    pub fn backend(&self) -> TransportBackend {
+        self.backend
+    }
+
+    /// First recorded fatal fault, if any.
+    pub fn fault(&self) -> Option<TransportFault> {
+        *self.fault.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn stats(&self) -> TransportStats {
+        TransportStats {
+            retransmits: self.retransmits.load(Ordering::Relaxed),
+            reconnects: self.reconnects.load(Ordering::Relaxed),
+            dropped_dups: self.dropped_dups.load(Ordering::Relaxed),
+            faults: self.faults.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Injection report, when a fault plan is armed.
+    pub fn report(&self) -> Option<WireFaultReport> {
+        self.plan.as_ref().map(|p| p.report())
+    }
+}
+
+/// Structural validation shared by both backends: header decode, length
+/// agreement, checksum — classified into the observable fault taxonomy.
+fn validate_frame(frame: &[u8]) -> Result<FrameHeader, TransportFaultKind> {
+    if frame.len() < HEADER_BYTES {
+        return Err(TransportFaultKind::Truncated);
+    }
+    let header = wire::decode_header(&frame[..HEADER_BYTES])
+        .map_err(|_| TransportFaultKind::CorruptHeader)?;
+    if frame.len() != HEADER_BYTES + header.payload_len {
+        return Err(TransportFaultKind::Truncated);
+    }
+    wire::verify_payload(&frame[..HEADER_BYTES], &frame[HEADER_BYTES..])
+        .map_err(|_| TransportFaultKind::ChecksumMismatch)?;
+    Ok(header)
+}
+
+/// Apply one sampled receiver-side mutation to the frame bytes in
+/// place — the moment "the wire" corrupts the frame.
+fn apply_mutation(frame: &mut Vec<u8>, m: WireMutation) {
+    match m.kind {
+        WireFaultKind::HeaderFlip => {
+            let bit = (m.raw as usize) % (HEADER_BYTES * 8);
+            frame[bit / 8] ^= 1 << (bit % 8);
+        }
+        WireFaultKind::PayloadFlip => {
+            let payload_bits = (frame.len() - HEADER_BYTES) * 8;
+            if payload_bits == 0 {
+                // m = 0 frames have no payload; corrupt the checksum
+                // instead so the injection still lands.
+                frame[HEADER_BYTES - 1] ^= 0x40;
+            } else {
+                let bit = (m.raw as usize) % payload_bits;
+                frame[HEADER_BYTES + bit / 8] ^= 1 << (bit % 8);
+            }
+        }
+        WireFaultKind::ChecksumSmash => {
+            frame[wire::CHECKSUM_OFFSET] ^= 0xA5;
+        }
+        WireFaultKind::Truncate => {
+            // Cut anywhere strictly inside the frame, header included.
+            let keep = (m.raw as usize) % frame.len();
+            frame.truncate(keep);
+        }
+        // Sender-side kinds never reach the mutation applier.
+        WireFaultKind::Duplicate | WireFaultKind::Reset => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpi::wire::{encode_frame, FrameKind};
+
+    fn frame(seq: u64, data: &[i64]) -> Vec<u8> {
+        encode_frame(FrameKind::Deliver, 0, 1, 7, 0, 0.0, seq, data)
+    }
+
+    fn clean_recovery() -> WireRecovery {
+        WireRecovery::new(TransportBackend::Shm, 2, None)
+    }
+
+    #[test]
+    fn clean_frames_deliver_in_order() {
+        let r = clean_recovery();
+        for seq in 0..5u64 {
+            assert_eq!(r.next_seq(0, 1), seq);
+            match r.process_frame(0, 1, frame(seq, &[seq as i64])).unwrap() {
+                FrameVerdict::Deliver(bytes) => {
+                    let h = wire::decode_header(&bytes[..HEADER_BYTES]).unwrap();
+                    assert_eq!(h.seq, seq);
+                }
+                FrameVerdict::Dup => panic!("clean in-order frame flagged dup"),
+            }
+        }
+        assert_eq!(r.stats(), TransportStats::default());
+    }
+
+    #[test]
+    fn duplicates_are_suppressed_by_seq() {
+        let r = clean_recovery();
+        assert!(matches!(
+            r.process_frame(0, 1, frame(0, &[1])).unwrap(),
+            FrameVerdict::Deliver(_)
+        ));
+        assert!(matches!(r.process_frame(0, 1, frame(0, &[1])).unwrap(), FrameVerdict::Dup));
+        assert_eq!(r.stats().dropped_dups, 1);
+    }
+
+    #[test]
+    fn seq_gap_is_a_typed_fault() {
+        let r = clean_recovery();
+        let err = r.process_frame(0, 1, frame(3, &[1])).unwrap_err();
+        assert_eq!(err.kind, TransportFaultKind::SeqGap);
+        assert_eq!((err.src, err.dst, err.seq), (0, 1, 3));
+        assert_eq!(r.fault(), Some(err));
+        assert_eq!(r.stats().faults, 1);
+    }
+
+    #[test]
+    fn corruption_recovers_from_the_shelf() {
+        // Checksum smash on every first attempt, clean afterwards is not
+        // expressible with one probability — instead corrupt the frame
+        // bytes ourselves and verify the shelf repairs them.
+        let cfg = WireFaultConfig {
+            header_flip_prob: 0.0,
+            payload_flip_prob: 0.0,
+            checksum_prob: 0.0,
+            truncate_prob: 0.0,
+            duplicate_prob: 0.0,
+            reset_prob: 0.0,
+            ..WireFaultConfig::new(1)
+        };
+        let r = WireRecovery::new(TransportBackend::Shm, 2, Some(&cfg));
+        let seq = r.next_seq(0, 1);
+        let clean = frame(seq, &[42]);
+        assert!(!r.on_send(0, 1, seq, &clean).duplicate);
+        let mut corrupt = clean.clone();
+        corrupt[HEADER_BYTES] ^= 0xFF; // payload corruption on the "wire"
+        match r.process_frame(0, 1, corrupt).unwrap() {
+            FrameVerdict::Deliver(bytes) => assert_eq!(bytes, clean),
+            FrameVerdict::Dup => panic!("repaired frame flagged dup"),
+        }
+        assert_eq!(r.stats().retransmits, 1);
+        assert_eq!(r.stats().faults, 0);
+    }
+
+    #[test]
+    fn exhausted_budget_is_a_typed_fault_with_attempts() {
+        // Without a plan there is no shelf, so recovery cannot repair:
+        // set recover off via a plan with certain corruption.
+        let cfg = WireFaultConfig::new(1)
+            .with_checksum_prob(1.0)
+            .with_header_flip_prob(0.0)
+            .with_payload_flip_prob(0.0)
+            .with_truncate_prob(0.0)
+            .with_duplicate_prob(0.0)
+            .with_reset_prob(0.0)
+            .with_max_attempts(3);
+        let r = WireRecovery::new(TransportBackend::Shm, 2, Some(&cfg));
+        let seq = r.next_seq(0, 1);
+        let clean = frame(seq, &[7]);
+        r.on_send(0, 1, seq, &clean);
+        let err = r.process_frame(0, 1, clean).unwrap_err();
+        assert_eq!(err.kind, TransportFaultKind::ChecksumMismatch);
+        assert_eq!(err.attempts, 3, "budget of 3 attempts burned");
+        assert_eq!(r.stats().retransmits, 2, "two shelf retransmissions before giving up");
+        let shown = err.to_string();
+        assert!(shown.contains("checksum-mismatch"), "{shown}");
+        assert!(shown.contains("0→1"), "{shown}");
+    }
+
+    #[test]
+    fn recovery_disabled_faults_on_first_corruption() {
+        let cfg = WireFaultConfig::new(1)
+            .with_checksum_prob(1.0)
+            .with_header_flip_prob(0.0)
+            .with_payload_flip_prob(0.0)
+            .with_truncate_prob(0.0)
+            .with_duplicate_prob(0.0)
+            .with_reset_prob(0.0)
+            .without_recovery();
+        let r = WireRecovery::new(TransportBackend::Uds, 2, Some(&cfg));
+        let seq = r.next_seq(0, 1);
+        let clean = frame(seq, &[7]);
+        r.on_send(0, 1, seq, &clean);
+        let err = r.process_frame(0, 1, clean).unwrap_err();
+        assert_eq!(err.attempts, 1);
+        assert_eq!(err.backend, TransportBackend::Uds);
+        assert_eq!(r.stats().retransmits, 0);
+    }
+
+    #[test]
+    fn mutations_always_yield_error_or_valid_decode() {
+        // Property sweep: every mutation kind over many raws must leave
+        // validate_frame either Ok (impossible here — all kinds damage
+        // the checksummed region) or a classified error — never a panic.
+        let base = frame(0, &[1, 2, 3]);
+        for kind in [
+            WireFaultKind::HeaderFlip,
+            WireFaultKind::PayloadFlip,
+            WireFaultKind::ChecksumSmash,
+            WireFaultKind::Truncate,
+        ] {
+            for raw in 0..4096u64 {
+                let mut f = base.clone();
+                apply_mutation(&mut f, WireMutation { kind, raw });
+                assert!(
+                    validate_frame(&f).is_err(),
+                    "{kind} raw={raw} slipped past validation"
+                );
+            }
+        }
+    }
+}

@@ -24,8 +24,9 @@
 //!
 //! The segment only moves bytes. Each rank keeps a process-local slot
 //! [`Inbox`] as its matcher: [`ShmTransport::take`] alternates draining
-//! the rank's p incoming rings (decode, verify checksum, deposit through
-//! the same `deposit`/`deposit_delayed`/`deposit_overflow` entry points
+//! the rank's p incoming rings (seq-check/verify/repair through the
+//! shared [`WireRecovery`] layer, then decode and deposit through the
+//! same `deposit`/`deposit_delayed`/`deposit_overflow` entry points
 //! the thread backend uses — the frame's `kind` byte carries the sender's
 //! chaos decision) with short-sliced `recv_match` waits, so the
 //! (src, ctx, chunk, round) slot keying, overflow and embargo semantics
@@ -50,10 +51,12 @@ use super::elem::Elem;
 use super::inbox::{Inbox, InboxStats};
 use super::msg::Msg;
 use super::pool::PoolBuf;
-use super::transport::Transport;
-use super::wire::{
-    decode_header, decode_payload, encode_frame, verify_payload, FrameKind, HEADER_BYTES,
+use super::recover::{
+    FrameVerdict, TransportFault, TransportFaultKind, TransportStats, WireRecovery,
 };
+use super::transport::{Transport, TransportBackend, TransportTuning};
+use super::wire::{decode_header, decode_payload, encode_frame, FrameKind, HEADER_BYTES};
+use super::wirefault::WireFaultReport;
 
 /// Ring capacity per directed channel, bytes (power of two). Bounds the
 /// largest frame a channel can carry: `HEADER_BYTES + payload` must fit.
@@ -197,16 +200,21 @@ pub(crate) struct ShmTransport<T> {
     /// Per-rank process-local matchers (identical machinery to the
     /// thread backend; frames land here once drained from the rings).
     inboxes: Vec<Inbox<T>>,
+    /// Seq accounting, duplicate suppression, retransmit shelf and the
+    /// typed-fault slot — shared machinery with the socket backend
+    /// (`mpi/recover.rs`).
+    recovery: WireRecovery,
 }
 
 impl<T: Elem> ShmTransport<T> {
-    pub fn new(p: usize, fixed_spin: bool) -> Result<Self> {
+    pub fn new(p: usize, tuning: &TransportTuning) -> Result<Self> {
         let len = SEG_HEADER + p * p * CH_STRIDE;
         let seg = Segment::map(len)?;
         Ok(ShmTransport {
             seg,
             p,
-            inboxes: (0..p).map(|_| Inbox::new_with(fixed_spin)).collect(),
+            inboxes: (0..p).map(|_| Inbox::new_with(tuning.fixed_spin)).collect(),
+            recovery: WireRecovery::new(TransportBackend::Shm, p, tuning.wirefault.as_ref()),
         })
     }
 
@@ -296,6 +304,14 @@ impl<T: Elem> ShmTransport<T> {
 
     /// Consumer side: drain every complete frame addressed to rank `me`
     /// into its local inbox. Sole consumer of channels (*, me).
+    ///
+    /// Every frame is copied out contiguously and routed through
+    /// [`WireRecovery::process_frame`] — that is where injected wire
+    /// faults mutate the local copy, where checksum failures trigger the
+    /// retransmit shelf, and where duplicates are suppressed by seq. A
+    /// corrupt frame is **never** a panic: when the retry budget
+    /// exhausts, the typed fault is recorded first-wins and the whole
+    /// transport is poisoned so blocked receivers wake attributed.
     fn drain(&self, me: usize) {
         let mut header = [0u8; HEADER_BYTES];
         for src in 0..self.p {
@@ -308,20 +324,51 @@ impl<T: Elem> ShmTransport<T> {
                     break; // producer publishes whole frames: nothing here
                 }
                 self.ring_copy_out(src, me, h, &mut header);
-                let fh = decode_header(&header).unwrap_or_else(|e| {
-                    panic!("shm transport: corrupt frame header in channel {src}→{me}: {e:#}")
-                });
-                let total = (HEADER_BYTES + fh.payload_len) as u64;
+                // The transmitted length comes straight off the ring: the
+                // producer publishes whole frames with one Release store,
+                // and injected mutations happen on the copied-out frame
+                // inside process_frame, so these bytes are as written.
+                let payload_len =
+                    u32::from_le_bytes(header[44..48].try_into().unwrap()) as usize;
+                let total = (HEADER_BYTES + payload_len) as u64;
                 debug_assert!(avail >= total, "partial frame published");
-                let mut payload = vec![0u8; fh.payload_len];
-                self.ring_copy_out(src, me, h + HEADER_BYTES as u64, &mut payload);
-                verify_payload(&header, &payload).unwrap_or_else(|e| {
-                    panic!("shm transport: corrupt frame in channel {src}→{me}: {e:#}")
-                });
+                let mut frame = vec![0u8; HEADER_BYTES + payload_len];
+                self.ring_copy_out(src, me, h, &mut frame);
                 head.store(h + total, Ordering::Release);
-                let data: Vec<T> = decode_payload(&fh, &payload).unwrap_or_else(|e| {
-                    panic!("shm transport: undecodable payload in channel {src}→{me}: {e:#}")
-                });
+                let bytes = match self.recovery.process_frame(src, me, frame) {
+                    Ok(FrameVerdict::Dup) => continue,
+                    Ok(FrameVerdict::Deliver(bytes)) => bytes,
+                    Err(_fault) => {
+                        // Typed fault already recorded first-wins in the
+                        // recovery slot; wake everyone attributed.
+                        self.poison_all();
+                        return;
+                    }
+                };
+                let fh = match decode_header(&bytes) {
+                    Ok(fh) => fh,
+                    Err(_) => {
+                        self.recovery.raise_external(
+                            src,
+                            me,
+                            TransportFaultKind::CorruptHeader,
+                        );
+                        self.poison_all();
+                        return;
+                    }
+                };
+                let data: Vec<T> = match decode_payload(&fh, &bytes[HEADER_BYTES..]) {
+                    Ok(data) => data,
+                    Err(_) => {
+                        self.recovery.raise_external(
+                            src,
+                            me,
+                            TransportFaultKind::UndecodablePayload,
+                        );
+                        self.poison_all();
+                        return;
+                    }
+                };
                 let msg = Msg {
                     src: fh.src,
                     tag: fh.tag,
@@ -341,10 +388,17 @@ impl<T: Elem> ShmTransport<T> {
     }
 
     fn send_frame(&self, to: usize, kind: FrameKind, delay_micros: u64, msg: Msg<T>) {
-        let frame = encode_frame(kind, msg.src, to, msg.tag, delay_micros, msg.vtime, &msg.data);
         let src = msg.src;
+        let seq = self.recovery.next_seq(src, to);
+        let frame =
+            encode_frame(kind, src, to, msg.tag, delay_micros, msg.vtime, seq, &msg.data);
         drop(msg); // lease ends here: the pooled send buffer recycles now
+        let plan = self.recovery.on_send(src, to, seq, &frame);
         self.ring_write(src, to, &frame);
+        if plan.duplicate {
+            // Injected duplicate: the receiver must suppress it by seq.
+            self.ring_write(src, to, &frame);
+        }
     }
 }
 
@@ -409,6 +463,18 @@ impl<T: Elem> Transport<T> for ShmTransport<T> {
         self.inboxes[me].stats()
     }
 
+    fn wire_stats(&self) -> TransportStats {
+        self.recovery.stats()
+    }
+
+    fn fault(&self) -> Option<TransportFault> {
+        self.recovery.fault()
+    }
+
+    fn wire_report(&self) -> Option<WireFaultReport> {
+        self.recovery.report()
+    }
+
     fn name(&self) -> &'static str {
         "shm"
     }
@@ -425,7 +491,7 @@ mod tests {
 
     #[test]
     fn shm_roundtrip_and_matching() {
-        let t: ShmTransport<i64> = ShmTransport::new(2, false).unwrap();
+        let t: ShmTransport<i64> = ShmTransport::new(2, &TransportTuning::default()).unwrap();
         t.post(1, mk_msg(0, 7, vec![1, 2, 3]));
         t.post(1, mk_msg(0, 8, vec![9]));
         let mut pending = Vec::new();
@@ -439,7 +505,7 @@ mod tests {
 
     #[test]
     fn shm_ring_wraparound_preserves_frames() {
-        let t: ShmTransport<i64> = ShmTransport::new(2, false).unwrap();
+        let t: ShmTransport<i64> = ShmTransport::new(2, &TransportTuning::default()).unwrap();
         // Push enough traffic through one channel to wrap the ring
         // several times; every frame must come back intact and in order.
         let m = 4096; // 32 KiB payloads: ~32 KiB/frame, > 3 wraps total
@@ -458,7 +524,8 @@ mod tests {
 
     #[test]
     fn shm_poison_wakes_blocked_take() {
-        let t = std::sync::Arc::new(ShmTransport::<i64>::new(2, false).unwrap());
+        let t =
+            std::sync::Arc::new(ShmTransport::<i64>::new(2, &TransportTuning::default()).unwrap());
         let t2 = std::sync::Arc::clone(&t);
         let waiter = std::thread::spawn(move || {
             let mut pending = Vec::new();
@@ -469,6 +536,60 @@ mod tests {
         t.poison_all();
         let got = waiter.join().unwrap();
         assert!(got.is_none(), "poison must wake the blocked take promptly");
+    }
+
+    #[test]
+    fn corrupt_ring_frame_is_a_typed_fault_not_a_panic() {
+        // Corrupt a published frame in place on the ring (no fault plan
+        // armed, so no shelf to repair from): take must return None with
+        // a typed first-wins fault recorded — never a receiver panic.
+        let t: ShmTransport<i64> = ShmTransport::new(2, &TransportTuning::default()).unwrap();
+        t.post(1, mk_msg(0, 7, vec![1, 2, 3]));
+        // Flip a payload byte of the frame sitting at cursor 0 of the
+        // (0 → 1) channel. The header stays intact (so framing holds)
+        // but the checksum no longer verifies.
+        unsafe {
+            *t.ring_ptr(0, 1).add(HEADER_BYTES) ^= 0xFF;
+        }
+        let mut pending = Vec::new();
+        let got = t.take(1, 0, 7, &mut pending, Instant::now() + Duration::from_secs(5));
+        assert!(got.is_none(), "corrupt frame must not deliver");
+        let fault = t.fault().expect("typed fault recorded");
+        assert_eq!(fault.kind, TransportFaultKind::ChecksumMismatch);
+        assert_eq!((fault.src, fault.dst, fault.seq), (0, 1, 0));
+        assert_eq!(t.wire_stats().faults, 1);
+        // The transport is poisoned: later takes wake attributed too.
+        let got = t.take(1, 0, 8, &mut pending, Instant::now() + Duration::from_secs(5));
+        assert!(got.is_none());
+    }
+
+    #[test]
+    fn injected_duplicates_are_suppressed_end_to_end() {
+        use crate::mpi::wirefault::WireFaultConfig;
+        // Certain duplication on every frame, everything else off: each
+        // frame is written to the ring twice and must deliver exactly
+        // once, with the dup counter accounting for the copies.
+        let cfg = WireFaultConfig::new(3)
+            .with_header_flip_prob(0.0)
+            .with_payload_flip_prob(0.0)
+            .with_checksum_prob(0.0)
+            .with_truncate_prob(0.0)
+            .with_duplicate_prob(1.0)
+            .with_reset_prob(0.0);
+        let tuning = TransportTuning { wirefault: Some(cfg), ..TransportTuning::default() };
+        let t: ShmTransport<i64> = ShmTransport::new(2, &tuning).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut pending = Vec::new();
+        for k in 0..4u64 {
+            t.post(1, mk_msg(0, k, vec![k as i64]));
+            let m = t.take(1, 0, k, &mut pending, deadline).unwrap();
+            assert_eq!(&m.data[..], &[k as i64]);
+        }
+        assert_eq!(t.wire_stats().dropped_dups, 4);
+        assert_eq!(t.wire_stats().faults, 0);
+        let report = t.wire_report().expect("plan armed");
+        assert_eq!(report.duplicates, 4);
+        assert!(pending.is_empty());
     }
 
     #[test]

@@ -17,19 +17,28 @@
 //!
 //! ## Failure attribution
 //!
-//! A stream fault or corrupt frame (bad magic/version/checksum, length
-//! mismatch) records an attributed fault naming the channel and poisons
-//! every inbox; the next `take` on any rank panics with that fault, which
-//! the world's panic containment surfaces as the run's error. A message
-//! chaos-dropped at the send site never reaches the transport at all, so
-//! the matching receive times out with the standard attributed
-//! `recv_timeout` error naming backend, rank, round and src.
+//! Every stream-level failure is a **typed** [`TransportFault`] — never
+//! a receiver-thread panic. Frames carry per-channel sequence numbers
+//! (wire v2); the shared [`WireRecovery`] layer suppresses duplicates,
+//! repairs corrupt frames from the sender's retransmit shelf inside a
+//! bounded exponential-backoff budget, and on budget exhaustion (or a
+//! reset/write timeout with recovery disabled) records the fault
+//! first-wins and poisons every inbox. Blocked `take`s then return
+//! `None`; the rank context polls [`Transport::fault`], marks the
+//! faulted source dead, and bails attributed — funneling into the
+//! engine's `RankFailed` classification. A message chaos-dropped at the
+//! send site never reaches the transport at all, so the matching receive
+//! times out with the standard attributed `recv_timeout` error naming
+//! backend, rank, round and src.
 //!
 //! ## Teardown
 //!
-//! Dropping the transport closes every send queue; send threads drain,
-//! exit and drop their write halves; receive threads see EOF and exit.
-//! Writes carry a watchdog timeout so a wedged peer cannot hang the
+//! Dropping the transport raises the `closing` flag, then closes every
+//! send queue; send threads drain, exit and drop their write halves;
+//! receive threads see EOF **with the flag up** and exit silently (EOF
+//! with the flag down is a mid-run connection reset: typed fault).
+//! Writes carry a configurable watchdog timeout
+//! ([`TransportTuning::write_timeout`]) so a wedged peer cannot hang the
 //! drop. Worlds are torn down before their transport, so no rank thread
 //! is still posting at that point.
 
@@ -37,7 +46,8 @@ use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 #[cfg(unix)]
 use std::os::unix::net::UnixStream;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -47,17 +57,15 @@ use super::elem::Elem;
 use super::inbox::{Inbox, InboxStats};
 use super::msg::Msg;
 use super::pool::PoolBuf;
-use super::transport::{Transport, TransportBackend};
-use super::wire::{
-    decode_header, decode_payload, encode_frame, verify_payload, FrameKind, HEADER_BYTES,
-    WIRE_MAGIC,
+use super::recover::{
+    FrameVerdict, TransportFault, TransportFaultKind, TransportStats, WireRecovery,
 };
+use super::transport::{Transport, TransportBackend, TransportTuning};
+use super::wire::{
+    decode_header, decode_payload, encode_frame, peek_seq, FrameKind, HEADER_BYTES, WIRE_MAGIC,
+};
+use super::wirefault::WireFaultReport;
 use crate::util::Channel;
-
-/// Watchdog on stream writes: a peer that stops reading for this long is
-/// treated as faulted rather than wedging the send thread (and any later
-/// teardown) forever.
-const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Either stream flavor behind one interface.
 enum Stream {
@@ -67,12 +75,22 @@ enum Stream {
 }
 
 impl Stream {
-    fn set_write_timeout(&self) -> std::io::Result<()> {
+    fn set_write_timeout(&self, timeout: Duration) -> std::io::Result<()> {
         match self {
-            Stream::Tcp(s) => s.set_write_timeout(Some(WRITE_TIMEOUT)),
+            Stream::Tcp(s) => s.set_write_timeout(Some(timeout)),
             #[cfg(unix)]
-            Stream::Unix(s) => s.set_write_timeout(Some(WRITE_TIMEOUT)),
+            Stream::Unix(s) => s.set_write_timeout(Some(timeout)),
         }
+    }
+
+    /// Tear the stream down both ways — the injected connection-reset
+    /// path (recovery disabled): the peer's read fails mid-run.
+    fn shutdown(&self) {
+        let _ = match self {
+            Stream::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+        };
     }
 }
 
@@ -103,24 +121,6 @@ impl Write for Stream {
     }
 }
 
-/// Shared fault slot: first attributed transport fault wins; every
-/// subsequent `take` re-raises it on the rank threads.
-#[derive(Default)]
-struct Fault {
-    slot: Mutex<Option<String>>,
-}
-
-impl Fault {
-    fn set(&self, msg: String) {
-        let mut slot = self.slot.lock().unwrap();
-        slot.get_or_insert(msg);
-    }
-
-    fn get(&self) -> Option<String> {
-        self.slot.lock().unwrap().clone()
-    }
-}
-
 pub(crate) struct SocketTransport<T> {
     p: usize,
     flavor: TransportBackend,
@@ -130,7 +130,13 @@ pub(crate) struct SocketTransport<T> {
     queues: Vec<Arc<Channel<Vec<u8>>>>,
     send_threads: Vec<JoinHandle<()>>,
     recv_threads: Vec<JoinHandle<()>>,
-    fault: Arc<Fault>,
+    /// Seq accounting, duplicate suppression, retransmit shelf and the
+    /// first-wins typed-fault slot — shared machinery with the shm
+    /// backend (`mpi/recover.rs`).
+    recovery: Arc<WireRecovery>,
+    /// Raised before the orderly teardown closes the send queues, so
+    /// receive threads can tell clean EOF from a mid-run reset.
+    closing: Arc<AtomicBool>,
 }
 
 /// Pairing hello written on each fresh TCP connection so the accepting
@@ -219,13 +225,22 @@ fn build_mesh(flavor: TransportBackend, p: usize) -> Result<Vec<(Stream, Stream)
     Ok(mesh)
 }
 
+/// Poison every inbox so blocked receivers wake (and return `None`; the
+/// rank context then polls the typed fault and attributes it).
+fn poison_inboxes<T: Elem>(inboxes: &[Inbox<T>]) {
+    for inbox in inboxes {
+        inbox.poison();
+    }
+}
+
 impl<T: Elem> SocketTransport<T> {
-    pub fn new(flavor: TransportBackend, p: usize, fixed_spin: bool) -> Result<Self> {
+    pub fn new(flavor: TransportBackend, p: usize, tuning: &TransportTuning) -> Result<Self> {
         debug_assert!(matches!(flavor, TransportBackend::Tcp | TransportBackend::Uds));
         let mesh = build_mesh(flavor, p)?;
         let inboxes: Arc<Vec<Inbox<T>>> =
-            Arc::new((0..p).map(|_| Inbox::new_with(fixed_spin)).collect());
-        let fault = Arc::new(Fault::default());
+            Arc::new((0..p).map(|_| Inbox::new_with(tuning.fixed_spin)).collect());
+        let recovery = Arc::new(WireRecovery::new(flavor, p, tuning.wirefault.as_ref()));
+        let closing = Arc::new(AtomicBool::new(false));
         let mut queues = Vec::with_capacity(p * p);
         let mut send_threads = Vec::with_capacity(p * p);
         let mut recv_threads = Vec::with_capacity(p * p);
@@ -236,10 +251,10 @@ impl<T: Elem> SocketTransport<T> {
 
             let queue: Arc<Channel<Vec<u8>>> = Arc::new(Channel::new());
             let q = Arc::clone(&queue);
-            let f = Arc::clone(&fault);
+            let rec = Arc::clone(&recovery);
             let ib = Arc::clone(&inboxes);
             let mut w = write_half;
-            if let Err(e) = w.set_write_timeout() {
+            if let Err(e) = w.set_write_timeout(tuning.write_timeout) {
                 bail!("transport backend '{name}': cannot arm write watchdog: {e}");
             }
             send_threads.push(
@@ -247,13 +262,53 @@ impl<T: Elem> SocketTransport<T> {
                     .name(format!("{name}-send-{src}-{dst}"))
                     .spawn(move || {
                         while let Some(frame) = q.pop_wait() {
-                            if let Err(e) = w.write_all(&frame).and_then(|()| w.flush()) {
-                                f.set(format!(
-                                    "{name} transport: write on channel {src}→{dst} failed: {e}"
-                                ));
-                                for inbox in ib.iter() {
-                                    inbox.poison();
+                            let seq = peek_seq(&frame).unwrap_or(0);
+                            // Injected connection reset: the plan is pure
+                            // in (seed, src, dst, seq), so this thread
+                            // re-derives the decision the sampler made.
+                            if rec.reset_planned(src, dst, seq) {
+                                if rec.recovery_enabled() {
+                                    // Reconnect-with-backoff: on the
+                                    // in-process mesh the "fresh stream"
+                                    // is the same socketpair, so recovery
+                                    // is a counted backoff before the
+                                    // frame goes out untouched.
+                                    rec.note_reset_reconnect(src, dst, seq);
+                                    std::thread::sleep(WireRecovery::backoff(1));
+                                } else {
+                                    rec.note_reset_fatal(src, dst, seq);
+                                    rec.raise(TransportFault {
+                                        backend: rec.backend(),
+                                        src,
+                                        dst,
+                                        seq,
+                                        kind: TransportFaultKind::ConnectionReset,
+                                        attempts: 1,
+                                    });
+                                    w.shutdown();
+                                    poison_inboxes(&ib);
+                                    return;
                                 }
+                            }
+                            if let Err(e) = w.write_all(&frame).and_then(|()| w.flush()) {
+                                let kind = if matches!(
+                                    e.kind(),
+                                    std::io::ErrorKind::WouldBlock
+                                        | std::io::ErrorKind::TimedOut
+                                ) {
+                                    TransportFaultKind::WriteTimeout
+                                } else {
+                                    TransportFaultKind::ConnectionReset
+                                };
+                                rec.raise(TransportFault {
+                                    backend: rec.backend(),
+                                    src,
+                                    dst,
+                                    seq,
+                                    kind,
+                                    attempts: 1,
+                                });
+                                poison_inboxes(&ib);
                                 return;
                             }
                         }
@@ -263,8 +318,9 @@ impl<T: Elem> SocketTransport<T> {
             );
             queues.push(queue);
 
-            let f = Arc::clone(&fault);
+            let rec = Arc::clone(&recovery);
             let ib = Arc::clone(&inboxes);
+            let cl = Arc::clone(&closing);
             let mut r = read_half;
             recv_threads.push(
                 std::thread::Builder::new()
@@ -272,55 +328,91 @@ impl<T: Elem> SocketTransport<T> {
                     .spawn(move || {
                         let mut header = [0u8; HEADER_BYTES];
                         loop {
-                            match r.read_exact(&mut header) {
-                                Ok(()) => {}
-                                // EOF between frames is the orderly
-                                // teardown path; anything else (including
-                                // EOF mid-header) is a fault.
-                                Err(e) => {
-                                    if e.kind() != std::io::ErrorKind::UnexpectedEof {
-                                        f.set(format!(
-                                            "{name} transport: read on channel {src}→{dst} failed: {e}"
-                                        ));
-                                        for inbox in ib.iter() {
-                                            inbox.poison();
-                                        }
-                                    }
-                                    return;
-                                }
-                            }
-                            let step = || -> Result<()> {
-                                let fh = decode_header(&header)?;
-                                let mut payload = vec![0u8; fh.payload_len];
-                                r.read_exact(&mut payload)
-                                    .context("reading frame payload")?;
-                                verify_payload(&header, &payload)?;
-                                let data: Vec<T> = decode_payload(&fh, &payload)?;
-                                let msg = Msg {
-                                    src: fh.src,
-                                    tag: fh.tag,
-                                    data: PoolBuf::detached(data),
-                                    vtime: fh.vtime,
-                                };
-                                match fh.kind {
-                                    FrameKind::Deliver => ib[dst].deposit(msg),
-                                    FrameKind::Delayed => ib[dst].deposit_delayed(
-                                        msg,
-                                        Instant::now()
-                                            + Duration::from_micros(fh.delay_micros),
-                                    ),
-                                    FrameKind::Overflow => ib[dst].deposit_overflow(msg),
-                                }
-                                Ok(())
-                            };
-                            if let Err(e) = step() {
-                                f.set(format!(
-                                    "{name} transport: corrupt frame on channel {src}→{dst}: {e:#}"
-                                ));
-                                for inbox in ib.iter() {
-                                    inbox.poison();
+                            if let Err(e) = r.read_exact(&mut header) {
+                                // EOF between frames with the closing
+                                // flag up (or a fault already recorded —
+                                // the peer's send thread bailed) is the
+                                // orderly exit; anything else is a
+                                // mid-run reset: typed fault, poison,
+                                // exit — never a panic.
+                                let orderly = e.kind() == std::io::ErrorKind::UnexpectedEof
+                                    && (cl.load(Ordering::Acquire) || rec.fault().is_some());
+                                if !orderly {
+                                    rec.raise_external(
+                                        src,
+                                        dst,
+                                        TransportFaultKind::ConnectionReset,
+                                    );
+                                    poison_inboxes(&ib);
                                 }
                                 return;
+                            }
+                            // Injected mutations happen inside
+                            // process_frame on the local copy, so the
+                            // header bytes on the stream are as written;
+                            // a header that fails structural decode here
+                            // is genuine corruption — unframeable, fatal.
+                            let payload_len = match decode_header(&header) {
+                                Ok(fh) => fh.payload_len,
+                                Err(_) => {
+                                    rec.raise_external(
+                                        src,
+                                        dst,
+                                        TransportFaultKind::CorruptHeader,
+                                    );
+                                    poison_inboxes(&ib);
+                                    return;
+                                }
+                            };
+                            let mut frame = vec![0u8; HEADER_BYTES + payload_len];
+                            frame[..HEADER_BYTES].copy_from_slice(&header);
+                            if r.read_exact(&mut frame[HEADER_BYTES..]).is_err() {
+                                rec.raise_external(src, dst, TransportFaultKind::Truncated);
+                                poison_inboxes(&ib);
+                                return;
+                            }
+                            let bytes = match rec.process_frame(src, dst, frame) {
+                                Ok(FrameVerdict::Dup) => continue,
+                                Ok(FrameVerdict::Deliver(bytes)) => bytes,
+                                Err(_fault) => {
+                                    // Typed fault recorded first-wins by
+                                    // the recovery layer.
+                                    poison_inboxes(&ib);
+                                    return;
+                                }
+                            };
+                            let Ok(fh) = decode_header(&bytes) else {
+                                rec.raise_external(
+                                    src,
+                                    dst,
+                                    TransportFaultKind::CorruptHeader,
+                                );
+                                poison_inboxes(&ib);
+                                return;
+                            };
+                            let Ok(data) = decode_payload::<T>(&fh, &bytes[HEADER_BYTES..])
+                            else {
+                                rec.raise_external(
+                                    src,
+                                    dst,
+                                    TransportFaultKind::UndecodablePayload,
+                                );
+                                poison_inboxes(&ib);
+                                return;
+                            };
+                            let msg = Msg {
+                                src: fh.src,
+                                tag: fh.tag,
+                                data: PoolBuf::detached(data),
+                                vtime: fh.vtime,
+                            };
+                            match fh.kind {
+                                FrameKind::Deliver => ib[dst].deposit(msg),
+                                FrameKind::Delayed => ib[dst].deposit_delayed(
+                                    msg,
+                                    Instant::now() + Duration::from_micros(fh.delay_micros),
+                                ),
+                                FrameKind::Overflow => ib[dst].deposit_overflow(msg),
                             }
                         }
                     })
@@ -328,41 +420,56 @@ impl<T: Elem> SocketTransport<T> {
             );
         }
 
-        Ok(SocketTransport { p, flavor, inboxes, queues, send_threads, recv_threads, fault })
+        Ok(SocketTransport {
+            p,
+            flavor,
+            inboxes,
+            queues,
+            send_threads,
+            recv_threads,
+            recovery,
+            closing,
+        })
     }
 
     fn enqueue(&self, to: usize, kind: FrameKind, delay_micros: u64, msg: Msg<T>) {
-        let frame = encode_frame(kind, msg.src, to, msg.tag, delay_micros, msg.vtime, &msg.data);
         let src = msg.src;
+        let seq = self.recovery.next_seq(src, to);
+        let frame =
+            encode_frame(kind, src, to, msg.tag, delay_micros, msg.vtime, seq, &msg.data);
         drop(msg); // lease ends: the pooled send buffer recycles now
+        let plan = self.recovery.on_send(src, to, seq, &frame);
         // A closed queue means teardown is in progress; the frame is
         // dropped like any post into a dying world.
-        let _ = self.queues[src * self.p + to].push(frame);
-    }
-
-    /// Re-raise a recorded transport fault on the calling rank thread —
-    /// the world's panic containment turns it into the run's error.
-    fn check_fault(&self) {
-        if let Some(e) = self.fault.get() {
-            panic!("{e}");
+        let q = &self.queues[src * self.p + to];
+        if plan.duplicate {
+            // Injected duplicate: the receiver must suppress it by seq.
+            let _ = q.push(frame.clone());
         }
+        let _ = q.push(frame);
     }
 }
 
 impl<T: Elem> Transport<T> for SocketTransport<T> {
     fn post(&self, to: usize, msg: Msg<T>) {
-        self.check_fault();
+        if self.recovery.fault().is_some() {
+            return; // world death in progress: drop like a dying post
+        }
         self.enqueue(to, FrameKind::Deliver, 0, msg);
     }
 
     fn post_delayed(&self, to: usize, msg: Msg<T>, release_at: Instant) {
-        self.check_fault();
+        if self.recovery.fault().is_some() {
+            return;
+        }
         let micros = release_at.saturating_duration_since(Instant::now()).as_micros() as u64;
         self.enqueue(to, FrameKind::Delayed, micros, msg);
     }
 
     fn post_overflow(&self, to: usize, msg: Msg<T>) {
-        self.check_fault();
+        if self.recovery.fault().is_some() {
+            return;
+        }
         self.enqueue(to, FrameKind::Overflow, 0, msg);
     }
 
@@ -375,26 +482,35 @@ impl<T: Elem> Transport<T> for SocketTransport<T> {
         deadline: Instant,
     ) -> Option<Msg<T>> {
         // A fault recorded before this call would not re-trigger the
-        // edge-triggered poison inside recv_match — raise it up front.
-        self.check_fault();
+        // edge-triggered poison inside recv_match — bail up front (the
+        // rank context polls `fault()` and attributes the typed fault).
+        if self.recovery.fault().is_some() {
+            return None;
+        }
         // Deposits come from the receive threads and wake parked
         // receivers through the inbox itself, so a single full-deadline
         // recv_match suffices — no drain slicing needed on this backend.
-        let got = self.inboxes[me].recv_match(src, tag, pending, deadline);
-        if got.is_none() {
-            self.check_fault();
-        }
-        got
+        self.inboxes[me].recv_match(src, tag, pending, deadline)
     }
 
     fn poison_all(&self) {
-        for inbox in self.inboxes.iter() {
-            inbox.poison();
-        }
+        poison_inboxes(&self.inboxes);
     }
 
     fn stats(&self, me: usize) -> InboxStats {
         self.inboxes[me].stats()
+    }
+
+    fn wire_stats(&self) -> TransportStats {
+        self.recovery.stats()
+    }
+
+    fn fault(&self) -> Option<TransportFault> {
+        self.recovery.fault()
+    }
+
+    fn wire_report(&self) -> Option<WireFaultReport> {
+        self.recovery.report()
     }
 
     fn name(&self) -> &'static str {
@@ -404,9 +520,12 @@ impl<T: Elem> Transport<T> for SocketTransport<T> {
 
 impl<T> Drop for SocketTransport<T> {
     fn drop(&mut self) {
-        // Close every send queue: send threads drain what's left, exit,
-        // and drop their write halves; receive threads then read EOF and
-        // exit. The write watchdog bounds a wedged peer.
+        // Raise the closing flag first so receive threads classify the
+        // coming EOFs as orderly, then close every send queue: send
+        // threads drain what's left, exit, and drop their write halves;
+        // receive threads then read EOF and exit. The write watchdog
+        // bounds a wedged peer.
+        self.closing.store(true, Ordering::Release);
         for q in &self.queues {
             q.close();
         }
@@ -428,7 +547,8 @@ mod tests {
     }
 
     fn roundtrip_on(flavor: TransportBackend) {
-        let t: SocketTransport<i64> = SocketTransport::new(flavor, 3, false).unwrap();
+        let t: SocketTransport<i64> =
+            SocketTransport::new(flavor, 3, &TransportTuning::default()).unwrap();
         let mut pending = Vec::new();
         let deadline = Instant::now() + Duration::from_secs(10);
         t.post(2, mk_msg(0, 5, vec![10, 20]));
@@ -456,7 +576,10 @@ mod tests {
     #[cfg(unix)]
     #[test]
     fn poison_wakes_blocked_socket_take() {
-        let t = Arc::new(SocketTransport::<i64>::new(TransportBackend::Uds, 2, false).unwrap());
+        let t = Arc::new(
+            SocketTransport::<i64>::new(TransportBackend::Uds, 2, &TransportTuning::default())
+                .unwrap(),
+        );
         let t2 = Arc::clone(&t);
         let waiter = std::thread::spawn(move || {
             let mut pending = Vec::new();
@@ -465,5 +588,80 @@ mod tests {
         std::thread::sleep(Duration::from_millis(30));
         t.poison_all();
         assert!(waiter.join().unwrap().is_none());
+    }
+
+    /// Everything off except the one probability the test drives to 1.
+    #[cfg(unix)]
+    fn only(cfg: crate::mpi::wirefault::WireFaultConfig) -> TransportTuning {
+        TransportTuning { wirefault: Some(cfg), ..TransportTuning::default() }
+    }
+
+    #[cfg(unix)]
+    fn quiet(seed: u64) -> crate::mpi::wirefault::WireFaultConfig {
+        crate::mpi::wirefault::WireFaultConfig::new(seed)
+            .with_header_flip_prob(0.0)
+            .with_payload_flip_prob(0.0)
+            .with_checksum_prob(0.0)
+            .with_truncate_prob(0.0)
+            .with_duplicate_prob(0.0)
+            .with_reset_prob(0.0)
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn uds_injected_duplicates_are_suppressed() {
+        let tuning = only(quiet(3).with_duplicate_prob(1.0));
+        let t: SocketTransport<i64> =
+            SocketTransport::new(TransportBackend::Uds, 2, &tuning).unwrap();
+        let mut pending = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        for k in 0..4u64 {
+            t.post(1, mk_msg(0, k, vec![k as i64]));
+            let m = t.take(1, 0, k, &mut pending, deadline).unwrap();
+            assert_eq!(&m.data[..], &[k as i64]);
+        }
+        // The second copies ride the same FIFO stream; once a later
+        // original delivered, every earlier duplicate has been counted.
+        // Poll briefly for the trailing duplicate of the last frame.
+        let waited = Instant::now() + Duration::from_secs(5);
+        while t.wire_stats().dropped_dups < 4 && Instant::now() < waited {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(t.wire_stats().dropped_dups, 4);
+        assert_eq!(t.wire_stats().faults, 0);
+        assert_eq!(t.wire_report().expect("plan armed").duplicates, 4);
+        assert!(pending.is_empty());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn uds_injected_reset_with_recovery_reconnects_and_delivers() {
+        let tuning = only(quiet(5).with_reset_prob(1.0));
+        let t: SocketTransport<i64> =
+            SocketTransport::new(TransportBackend::Uds, 2, &tuning).unwrap();
+        let mut pending = Vec::new();
+        t.post(1, mk_msg(0, 7, vec![42]));
+        let m = t.take(1, 0, 7, &mut pending, Instant::now() + Duration::from_secs(10)).unwrap();
+        assert_eq!(&m.data[..], &[42]);
+        assert!(t.wire_stats().reconnects >= 1, "reset must be recovered via reconnect");
+        assert_eq!(t.wire_stats().faults, 0);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn uds_injected_reset_without_recovery_is_typed_fault() {
+        let tuning = only(quiet(5).with_reset_prob(1.0).without_recovery());
+        let t: SocketTransport<i64> =
+            SocketTransport::new(TransportBackend::Uds, 2, &tuning).unwrap();
+        let mut pending = Vec::new();
+        t.post(1, mk_msg(0, 7, vec![42]));
+        let got = t.take(1, 0, 7, &mut pending, Instant::now() + Duration::from_secs(10));
+        assert!(got.is_none(), "reset frame must not deliver");
+        let fault = t.fault().expect("typed fault recorded");
+        assert_eq!(fault.kind, TransportFaultKind::ConnectionReset);
+        assert_eq!((fault.src, fault.dst), (0, 1));
+        assert!(t.wire_stats().faults >= 1);
+        // Posts after the fault are dropped, not panics.
+        t.post(1, mk_msg(0, 8, vec![1]));
     }
 }

@@ -42,13 +42,43 @@
 //!   immediately) and surface received payloads as detached buffers.
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use super::elem::Elem;
 use super::inbox::{Inbox, InboxStats};
 use super::msg::Msg;
+use super::recover::{TransportFault, TransportStats};
+use super::wirefault::{WireFaultConfig, WireFaultReport};
+
+/// Default send-side write watchdog for the socket backends — was a
+/// hardcoded constant in `socket.rs`; now configurable per world via
+/// [`WorldConfig::with_write_timeout`](super::world::WorldConfig::with_write_timeout).
+pub const DEFAULT_WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Backend-independent knobs threaded from `WorldConfig` into
+/// [`build_transport`] — bundled so adding a knob does not ripple a new
+/// parameter through every backend constructor.
+#[derive(Debug, Clone)]
+pub(crate) struct TransportTuning {
+    /// Pin the inbox spin budget (disable the adaptive EMA).
+    pub fixed_spin: bool,
+    /// Send-side write watchdog for socket streams.
+    pub write_timeout: Duration,
+    /// Seeded wire-fault injection plan (None = clean wire).
+    pub wirefault: Option<WireFaultConfig>,
+}
+
+impl Default for TransportTuning {
+    fn default() -> Self {
+        TransportTuning {
+            fixed_spin: false,
+            write_timeout: DEFAULT_WRITE_TIMEOUT,
+            wirefault: None,
+        }
+    }
+}
 
 /// Which rendezvous backend a world's ranks communicate through.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -179,6 +209,26 @@ pub(crate) trait Transport<T: Elem>: Send + Sync {
     /// Receive-side spin/park counters for rank `me`.
     fn stats(&self, me: usize) -> InboxStats;
 
+    /// Whole-transport recovery/fault counters (retransmits, reconnects,
+    /// suppressed duplicates, fatal faults). The thread backend has no
+    /// wire and reports zeros.
+    fn wire_stats(&self) -> TransportStats {
+        TransportStats::default()
+    }
+
+    /// First fatal typed transport fault, if one was raised. The rank
+    /// context polls this after a poisoned `take` to attribute the
+    /// failure (`RankFailed`) instead of a bare deadline error.
+    fn fault(&self) -> Option<TransportFault> {
+        None
+    }
+
+    /// Wire-fault injection report, when this transport runs with a
+    /// seeded fault plan armed.
+    fn wire_report(&self) -> Option<WireFaultReport> {
+        None
+    }
+
     /// Backend name for attributed errors ("thread" | "shm" | "tcp" | "uds").
     fn name(&self) -> &'static str;
 }
@@ -242,15 +292,15 @@ impl<T: Elem> Transport<T> for ThreadTransport<T> {
 pub(crate) fn build_transport<T: Elem>(
     backend: TransportBackend,
     p: usize,
-    fixed_spin: bool,
+    tuning: &TransportTuning,
 ) -> Result<Arc<dyn Transport<T>>> {
     match backend {
-        TransportBackend::Thread => Ok(Arc::new(ThreadTransport::new(p, fixed_spin))),
+        TransportBackend::Thread => Ok(Arc::new(ThreadTransport::new(p, tuning.fixed_spin))),
         TransportBackend::Shm => {
-            Ok(Arc::new(super::shm::ShmTransport::new(p, fixed_spin)?))
+            Ok(Arc::new(super::shm::ShmTransport::new(p, tuning)?))
         }
         TransportBackend::Tcp | TransportBackend::Uds => Ok(Arc::new(
-            super::socket::SocketTransport::new(backend, p, fixed_spin)?,
+            super::socket::SocketTransport::new(backend, p, tuning)?,
         )),
     }
 }

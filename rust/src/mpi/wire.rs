@@ -2,7 +2,7 @@
 //! socket streams): length-prefixed, versioned, checksummed message
 //! frames carrying one [`Msg`](super::msg::Msg) each.
 //!
-//! A frame is a fixed 56-byte little-endian header followed by the
+//! A frame is a fixed 64-byte little-endian header followed by the
 //! payload (`elem_count × T::wire_bytes()` bytes, elements encoded via
 //! [`Elem::write_wire`](super::elem::Elem::write_wire)):
 //!
@@ -19,7 +19,15 @@
 //! |     32 |    8 | vtime          | sender's virtual clock, f64 bits        |
 //! |     40 |    4 | elem_count     | payload elements                        |
 //! |     44 |    4 | payload_len    | payload bytes (= count × wire_bytes)    |
-//! |     48 |    8 | checksum       | FNV-1a 64 over header[0..48] ∥ payload  |
+//! |     48 |    8 | seq            | per-(src → dst) channel sequence number |
+//! |     56 |    8 | checksum       | FNV-1a 64 over header[0..56] ∥ payload  |
+//!
+//! Version 2 (PR 10) grew the header from 56 to 64 bytes: the `seq`
+//! field numbers every frame on its ordered (src → dst) channel starting
+//! at 0, which is what makes duplicate suppression and NACK/retransmit
+//! recovery (`mpi/recover.rs`) addressable — a corrupt frame is retried
+//! *by sequence number*, and a replayed duplicate is recognized and
+//! dropped instead of double-delivered.
 //!
 //! The `kind` byte ships the chaos plan over the wire: the sender's
 //! [`plan_message`](super::chaos::Chaos::plan_message) decision (deliver /
@@ -36,10 +44,15 @@ use super::elem::Elem;
 
 /// "XSCN" — rejects cross-talk from anything that is not an exscan peer.
 pub const WIRE_MAGIC: u32 = 0x5853_434E;
-/// Bumped on any incompatible frame-layout change.
-pub const WIRE_VERSION: u16 = 1;
+/// Bumped on any incompatible frame-layout change (2: seq field, PR 10).
+pub const WIRE_VERSION: u16 = 2;
 /// Fixed header size in bytes.
-pub const HEADER_BYTES: usize = 56;
+pub const HEADER_BYTES: usize = 64;
+/// Byte offset of the checksum field (FNV over everything before it plus
+/// the payload; the checksum is absent from its own input).
+pub const CHECKSUM_OFFSET: usize = 56;
+/// Byte offset of the channel sequence number.
+pub const SEQ_OFFSET: usize = 48;
 
 /// How the receiving side must deposit the decoded message into its
 /// local inbox — the sender's chaos decision, shipped in the frame.
@@ -83,6 +96,8 @@ pub struct FrameHeader {
     pub vtime: f64,
     pub elem_count: usize,
     pub payload_len: usize,
+    /// Position of this frame in its ordered (src → dst) channel, from 0.
+    pub seq: u64,
 }
 
 /// FNV-1a 64-bit over a byte stream — cheap, dependency-free, and enough
@@ -100,6 +115,7 @@ pub fn fnv1a(chunks: &[&[u8]]) -> u64 {
 }
 
 /// Encode one message into a self-delimiting frame.
+#[allow(clippy::too_many_arguments)]
 pub fn encode_frame<T: Elem>(
     kind: FrameKind,
     src: usize,
@@ -107,6 +123,7 @@ pub fn encode_frame<T: Elem>(
     tag: u64,
     delay_micros: u64,
     vtime: f64,
+    seq: u64,
     data: &[T],
 ) -> Vec<u8> {
     let payload_len = data.len() * T::wire_bytes();
@@ -122,17 +139,18 @@ pub fn encode_frame<T: Elem>(
     out.extend_from_slice(&vtime.to_bits().to_le_bytes());
     out.extend_from_slice(&(data.len() as u32).to_le_bytes());
     out.extend_from_slice(&(payload_len as u32).to_le_bytes());
-    debug_assert_eq!(out.len(), 48);
+    out.extend_from_slice(&seq.to_le_bytes());
+    debug_assert_eq!(out.len(), CHECKSUM_OFFSET);
     for v in data {
         v.write_wire(&mut out);
     }
-    let checksum = fnv1a(&[&out[..48], &out[48..]]);
-    // Splice the checksum in at offset 48 (it was computed over
-    // header[0..48] ∥ payload, i.e. with itself absent).
+    let checksum = fnv1a(&[&out[..CHECKSUM_OFFSET], &out[CHECKSUM_OFFSET..]]);
+    // Splice the checksum in at its offset (it was computed over
+    // header[0..56] ∥ payload, i.e. with itself absent).
     let mut framed = Vec::with_capacity(HEADER_BYTES + payload_len);
-    framed.extend_from_slice(&out[..48]);
+    framed.extend_from_slice(&out[..CHECKSUM_OFFSET]);
     framed.extend_from_slice(&checksum.to_le_bytes());
-    framed.extend_from_slice(&out[48..]);
+    framed.extend_from_slice(&out[CHECKSUM_OFFSET..]);
     framed
 }
 
@@ -150,7 +168,9 @@ fn le_u64(bytes: &[u8], at: usize) -> u64 {
 /// The payload checksum is verified separately by
 /// [`verify_payload`] once the payload bytes are available.
 pub fn decode_header(header: &[u8]) -> Result<FrameHeader> {
-    assert_eq!(header.len(), HEADER_BYTES);
+    if header.len() != HEADER_BYTES {
+        bail!("wire: short header ({} bytes, want {HEADER_BYTES})", header.len());
+    }
     let magic = le_u32(header, 0);
     if magic != WIRE_MAGIC {
         bail!("wire: bad magic {magic:#010x} (want {WIRE_MAGIC:#010x})");
@@ -171,26 +191,40 @@ pub fn decode_header(header: &[u8]) -> Result<FrameHeader> {
         vtime: f64::from_bits(le_u64(header, 32)),
         elem_count: le_u32(header, 40) as usize,
         payload_len: le_u32(header, 44) as usize,
+        seq: le_u64(header, SEQ_OFFSET),
     })
 }
 
 /// Verify the frame checksum (header bytes with the checksum field as
-/// transmitted at offset 48, payload bytes as received).
+/// transmitted, payload bytes as received).
 pub fn verify_payload(header: &[u8], payload: &[u8]) -> Result<()> {
-    assert_eq!(header.len(), HEADER_BYTES);
-    let want = le_u64(header, 48);
-    let got = fnv1a(&[&header[..48], payload]);
+    if header.len() != HEADER_BYTES {
+        bail!("wire: short header ({} bytes, want {HEADER_BYTES})", header.len());
+    }
+    let want = le_u64(header, CHECKSUM_OFFSET);
+    let got = fnv1a(&[&header[..CHECKSUM_OFFSET], payload]);
     if got != want {
         bail!("wire: checksum mismatch (got {got:#018x}, frame says {want:#018x})");
     }
     Ok(())
 }
 
+/// Read the channel sequence number straight out of an encoded frame
+/// without a full header decode — the send-side fault plan and the
+/// retransmit shelf are keyed by seq, and the frame may already be
+/// serialized when they need it.
+pub fn peek_seq(frame: &[u8]) -> Option<u64> {
+    if frame.len() < HEADER_BYTES {
+        return None;
+    }
+    Some(le_u64(frame, SEQ_OFFSET))
+}
+
 /// Decode a verified payload into elements. Rejects length mismatches
 /// (truncation, count/len disagreement) before touching element bytes.
 pub fn decode_payload<T: Elem>(h: &FrameHeader, payload: &[u8]) -> Result<Vec<T>> {
     let stride = T::wire_bytes();
-    if h.payload_len != h.elem_count * stride || payload.len() != h.payload_len {
+    if h.payload_len != h.elem_count.saturating_mul(stride) || payload.len() != h.payload_len {
         bail!(
             "wire: payload length {} != {} elements × {} bytes (header says {})",
             payload.len(),
@@ -212,7 +246,7 @@ mod tests {
     use crate::mpi::elem::Rec2;
 
     fn roundtrip<T: Elem>(kind: FrameKind, data: &[T]) {
-        let frame = encode_frame(kind, 3, 5, 0xABCD_EF01, 150, 2.5, data);
+        let frame = encode_frame(kind, 3, 5, 0xABCD_EF01, 150, 2.5, 9, data);
         assert_eq!(frame.len(), HEADER_BYTES + data.len() * T::wire_bytes());
         let h = decode_header(&frame[..HEADER_BYTES]).unwrap();
         verify_payload(&frame[..HEADER_BYTES], &frame[HEADER_BYTES..]).unwrap();
@@ -220,6 +254,8 @@ mod tests {
         assert_eq!((h.src, h.dst, h.tag), (3, 5, 0xABCD_EF01));
         assert_eq!(h.delay_micros, 150);
         assert_eq!(h.vtime, 2.5);
+        assert_eq!(h.seq, 9);
+        assert_eq!(peek_seq(&frame), Some(9));
         let decoded: Vec<T> = decode_payload(&h, &frame[HEADER_BYTES..]).unwrap();
         assert_eq!(decoded, data);
     }
@@ -237,12 +273,12 @@ mod tests {
 
     #[test]
     fn corruption_is_caught() {
-        let mut frame = encode_frame(FrameKind::Deliver, 0, 1, 7, 0, 0.0, &[42i64]);
+        let mut frame = encode_frame(FrameKind::Deliver, 0, 1, 7, 0, 0.0, 0, &[42i64]);
         // Flip one payload bit: checksum must catch it.
         frame[HEADER_BYTES] ^= 0x10;
         assert!(verify_payload(&frame[..HEADER_BYTES], &frame[HEADER_BYTES..]).is_err());
         // Bad magic / version / kind are rejected at header decode.
-        let good = encode_frame(FrameKind::Deliver, 0, 1, 7, 0, 0.0, &[42i64]);
+        let good = encode_frame(FrameKind::Deliver, 0, 1, 7, 0, 0.0, 0, &[42i64]);
         let mut bad = good.clone();
         bad[0] ^= 0xFF;
         assert!(decode_header(&bad[..HEADER_BYTES]).is_err());
@@ -252,8 +288,126 @@ mod tests {
         let mut bad = good.clone();
         bad[6] = 9;
         assert!(decode_header(&bad[..HEADER_BYTES]).is_err());
+        // A flipped seq bit lands in the checksummed region too.
+        let mut bad = good.clone();
+        bad[SEQ_OFFSET] ^= 0x01;
+        assert!(verify_payload(&bad[..HEADER_BYTES], &bad[HEADER_BYTES..]).is_err());
         // Truncated payload is rejected by the length check.
         let h = decode_header(&good[..HEADER_BYTES]).unwrap();
         assert!(decode_payload::<i64>(&h, &good[HEADER_BYTES..HEADER_BYTES + 4]).is_err());
+        // Short header slices are an error, not a panic.
+        assert!(decode_header(&good[..10]).is_err());
+        assert!(verify_payload(&good[..10], &good[HEADER_BYTES..]).is_err());
+    }
+
+    /// SplitMix64 — the same tiny deterministic generator the chaos and
+    /// wire-fault layers use, so the fuzz corpus replays from its seed.
+    fn splitmix(state: &mut u64) -> u64 {
+        *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = *state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// The receiver pipeline as one fallible step: header decode,
+    /// checksum verification, payload decode. Exactly what the wire
+    /// backends run per frame — so "never panics" here is "never panics"
+    /// there.
+    fn full_decode(frame: &[u8]) -> Result<(FrameHeader, Vec<i64>)> {
+        let split = frame.len().min(HEADER_BYTES);
+        let h = decode_header(&frame[..split])?;
+        verify_payload(&frame[..split], &frame[split..])?;
+        let data = decode_payload::<i64>(&h, &frame[split..])?;
+        Ok((h, data))
+    }
+
+    /// Property fuzz: any single byte-level mutation of a valid frame —
+    /// bit flip, byte smash, truncation, junk extension — must come back
+    /// as either a clean decode of the *original* content or an
+    /// attributed error. Never a panic, never silently different data.
+    #[test]
+    fn codec_survives_arbitrary_mutations() {
+        let mut rng = 0x51C4_F00Du64;
+        for iter in 0..4096u64 {
+            let n = (splitmix(&mut rng) % 24) as usize;
+            let data: Vec<i64> =
+                (0..n).map(|_| splitmix(&mut rng) as i64).collect();
+            let kind = match splitmix(&mut rng) % 3 {
+                0 => FrameKind::Deliver,
+                1 => FrameKind::Delayed,
+                _ => FrameKind::Overflow,
+            };
+            let frame = encode_frame(
+                kind,
+                (splitmix(&mut rng) % 64) as usize,
+                (splitmix(&mut rng) % 64) as usize,
+                splitmix(&mut rng),
+                splitmix(&mut rng) % 1000,
+                f64::from_bits(0x3FF0_0000_0000_0000), // 1.0: always finite
+                splitmix(&mut rng),
+                &data,
+            );
+            let (h0, d0) = full_decode(&frame).expect("pristine frame must decode");
+            assert_eq!(d0, data);
+
+            let mut mutated = frame.clone();
+            match splitmix(&mut rng) % 4 {
+                0 => {
+                    // Single bit flip anywhere in the frame.
+                    let bit = (splitmix(&mut rng) % (mutated.len() as u64 * 8)) as usize;
+                    mutated[bit / 8] ^= 1 << (bit % 8);
+                }
+                1 => {
+                    // Whole-byte smash.
+                    let at = (splitmix(&mut rng) % mutated.len() as u64) as usize;
+                    mutated[at] = splitmix(&mut rng) as u8;
+                }
+                2 => {
+                    // Truncate at an arbitrary boundary (possibly mid-header).
+                    let keep = (splitmix(&mut rng) % mutated.len() as u64) as usize;
+                    mutated.truncate(keep);
+                }
+                _ => {
+                    // Append junk bytes.
+                    let extra = 1 + (splitmix(&mut rng) % 16) as usize;
+                    for _ in 0..extra {
+                        mutated.push(splitmix(&mut rng) as u8);
+                    }
+                }
+            }
+            match full_decode(&mutated) {
+                // A mutation the pipeline accepts must not have changed
+                // what it decodes to (e.g. a flip that the checksum field
+                // itself absorbed cannot exist — FNV covers every byte).
+                Ok((h, d)) => {
+                    assert_eq!(
+                        (h, d),
+                        (h0, d0.clone()),
+                        "iter {iter}: accepted a mutation that changed the content"
+                    );
+                }
+                Err(e) => {
+                    assert!(
+                        !format!("{e:#}").is_empty(),
+                        "iter {iter}: error must be attributed"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Pure-garbage robustness: random byte strings of arbitrary length
+    /// through the full receive pipeline — every outcome is a typed
+    /// error (no random string passes an FNV + magic + version gauntlet),
+    /// and nothing panics.
+    #[test]
+    fn codec_rejects_random_garbage() {
+        let mut rng = 0xBAD_C0DEu64;
+        for _ in 0..2048u64 {
+            let len = (splitmix(&mut rng) % 160) as usize;
+            let garbage: Vec<u8> = (0..len).map(|_| splitmix(&mut rng) as u8).collect();
+            assert!(full_decode(&garbage).is_err());
+        }
     }
 }

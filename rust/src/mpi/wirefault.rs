@@ -1,0 +1,530 @@
+//! Seeded, replayable **wire-fault injection** for the cross-process
+//! transports — the below-the-boundary sibling of [`chaos`](super::chaos).
+//!
+//! The chaos layer (PR 3) perturbs message *schedules* above the
+//! transport: embargo, diversion, drops — decisions a correct transport
+//! must survive by design. This module perturbs the *wire itself*, at
+//! frame encode/decode and stream level, the hazards the shm rings and
+//! socket meshes (PR 8) actually face in the world: flipped bits,
+//! smashed checksums, truncated frames, replayed duplicates, and
+//! mid-stream connection resets.
+//!
+//! Same design rules as `chaos.rs`:
+//!
+//! * **Pure decisions.** Every verdict is a pure function of
+//!   `(seed, src, dst, seq, attempt)` via SplitMix64 — no RNG state, no
+//!   ordering sensitivity. Two runs at the same seed inject the *same*
+//!   faults on the same frames, which is what makes a fault run
+//!   replayable from its seed alone and the recovery≡oracle gate in
+//!   `tests/wirefault.rs` meaningful.
+//! * **Attempt-keyed.** The retransmit path re-samples with the attempt
+//!   number in the key: a corrupted first transmission does not doom its
+//!   retransmission (or, at high probabilities, it may — which is
+//!   exactly what exercises the bounded retry budget).
+//! * **Accounted.** Every injection is counted per kind, XOR-folded
+//!   into an order-insensitive schedule digest (occurrence-salted so
+//!   repeats cannot cancel), and appended to a capped event log.
+//!   [`WireFaultPlan::report`] snapshots all of it as a
+//!   [`WireFaultReport`].
+//!
+//! Injection sits **below the chaos boundary**: with recovery enabled
+//! (the default) a faulted run must be bit-identical — outputs, per-rank
+//! traces, chaos digests — to the clean thread-world oracle, because
+//! every fault is repaired before the frame reaches the inbox layer.
+//! With recovery disabled, faults surface as typed
+//! [`TransportFault`](super::recover::TransportFault)s instead.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Cap on the retained injection log (counters and the digest keep
+/// accumulating past it; the log is for human replay triage).
+pub const WIRE_FAULT_LOG_CAP: usize = 4096;
+
+const SALT_HEADER: u64 = 0xFA17_0011;
+const SALT_PAYLOAD: u64 = 0xFA17_0022;
+const SALT_CHECKSUM: u64 = 0xFA17_0033;
+const SALT_TRUNCATE: u64 = 0xFA17_0044;
+const SALT_DUPLICATE: u64 = 0xFA17_0055;
+const SALT_RESET: u64 = 0xFA17_0066;
+const SALT_RAW: u64 = 0xFA17_0077;
+const SALT_DIGEST: u64 = 0xFA17_00EE;
+
+/// SplitMix64 finalizer — same mixer as `chaos.rs`, good avalanche.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Uniform [0, 1) from a hash.
+fn frac(h: u64) -> f64 {
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// The injectable wire-fault taxonomy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WireFaultKind {
+    /// One bit flipped inside the 64-byte frame header.
+    HeaderFlip,
+    /// One bit flipped inside the payload bytes.
+    PayloadFlip,
+    /// The checksum field XORed with a constant (header and payload
+    /// intact — isolates the verifier).
+    ChecksumSmash,
+    /// The frame cut short at an arbitrary byte boundary.
+    Truncate,
+    /// The frame written to the wire twice (same seq) — exercises
+    /// duplicate suppression.
+    Duplicate,
+    /// Mid-stream connection reset (socket backends only; a shared
+    /// memory ring has no connection to reset).
+    Reset,
+}
+
+impl WireFaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            WireFaultKind::HeaderFlip => "header-flip",
+            WireFaultKind::PayloadFlip => "payload-flip",
+            WireFaultKind::ChecksumSmash => "checksum-smash",
+            WireFaultKind::Truncate => "truncate",
+            WireFaultKind::Duplicate => "duplicate",
+            WireFaultKind::Reset => "reset",
+        }
+    }
+
+    fn tag(self) -> u64 {
+        match self {
+            WireFaultKind::HeaderFlip => 1,
+            WireFaultKind::PayloadFlip => 2,
+            WireFaultKind::ChecksumSmash => 3,
+            WireFaultKind::Truncate => 4,
+            WireFaultKind::Duplicate => 5,
+            WireFaultKind::Reset => 6,
+        }
+    }
+}
+
+impl std::fmt::Display for WireFaultKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Wire-fault injection profile. All probabilities are per frame
+/// transmission attempt and independently sampled; the receiver-side
+/// corruption kinds (header flip, payload flip, checksum smash,
+/// truncation) are mutually exclusive per attempt — first sampled kind
+/// wins, in that fixed order.
+#[derive(Debug, Clone)]
+pub struct WireFaultConfig {
+    pub seed: u64,
+    pub header_flip_prob: f64,
+    pub payload_flip_prob: f64,
+    pub checksum_prob: f64,
+    pub truncate_prob: f64,
+    pub duplicate_prob: f64,
+    pub reset_prob: f64,
+    /// Repair faults via the shared recovery layer (retransmit shelf,
+    /// duplicate suppression, reconnect-with-backoff). When false, the
+    /// first fault on a channel surfaces as a typed `TransportFault`.
+    pub recover: bool,
+    /// Retry budget per frame: total transmission attempts (first
+    /// delivery included) before the fault is declared fatal.
+    pub max_attempts: u32,
+    /// Per-channel retransmit-shelf capacity in frames.
+    pub shelf_cap: usize,
+}
+
+impl WireFaultConfig {
+    /// Default profile: every fault kind armed at a low per-frame rate —
+    /// enough to see several injections (and retransmits) in any
+    /// collective of a few hundred frames, rare enough that back-to-back
+    /// faults on one frame stay inside the default retry budget with
+    /// overwhelming probability.
+    pub fn new(seed: u64) -> Self {
+        Self {
+            seed,
+            header_flip_prob: 0.02,
+            payload_flip_prob: 0.03,
+            checksum_prob: 0.02,
+            truncate_prob: 0.02,
+            duplicate_prob: 0.03,
+            reset_prob: 0.01,
+            recover: true,
+            max_attempts: 6,
+            shelf_cap: 1024,
+        }
+    }
+
+    /// Fault-storm profile for soak runs: an order of magnitude hotter.
+    pub fn storm(seed: u64) -> Self {
+        Self {
+            header_flip_prob: 0.08,
+            payload_flip_prob: 0.10,
+            checksum_prob: 0.08,
+            truncate_prob: 0.08,
+            duplicate_prob: 0.10,
+            reset_prob: 0.04,
+            ..Self::new(seed)
+        }
+    }
+
+    pub fn with_header_flip_prob(mut self, p: f64) -> Self {
+        self.header_flip_prob = p;
+        self
+    }
+
+    pub fn with_payload_flip_prob(mut self, p: f64) -> Self {
+        self.payload_flip_prob = p;
+        self
+    }
+
+    pub fn with_checksum_prob(mut self, p: f64) -> Self {
+        self.checksum_prob = p;
+        self
+    }
+
+    pub fn with_truncate_prob(mut self, p: f64) -> Self {
+        self.truncate_prob = p;
+        self
+    }
+
+    pub fn with_duplicate_prob(mut self, p: f64) -> Self {
+        self.duplicate_prob = p;
+        self
+    }
+
+    pub fn with_reset_prob(mut self, p: f64) -> Self {
+        self.reset_prob = p;
+        self
+    }
+
+    /// Disable the recovery layer: the first injected fault must surface
+    /// as a typed `TransportFault` → `RankFailed`, never a panic.
+    pub fn without_recovery(mut self) -> Self {
+        self.recover = false;
+        self
+    }
+
+    pub fn with_max_attempts(mut self, n: u32) -> Self {
+        self.max_attempts = n.max(1);
+        self
+    }
+
+    pub fn with_shelf_cap(mut self, cap: usize) -> Self {
+        self.shelf_cap = cap.max(1);
+        self
+    }
+}
+
+/// A receiver-side corruption verdict for one transmission attempt.
+/// `raw` is a per-decision hash the applier folds down to a concrete bit
+/// index / cut point (the plan cannot know frame lengths; the applier
+/// takes `raw % len`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireMutation {
+    pub kind: WireFaultKind,
+    pub raw: u64,
+}
+
+/// One recorded injection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireFaultEvent {
+    pub kind: WireFaultKind,
+    pub src: usize,
+    pub dst: usize,
+    pub seq: u64,
+    /// Transmission attempt the fault landed on (0 = first delivery).
+    pub attempt: u32,
+}
+
+/// Snapshot of everything a fault plan injected: per-kind counters, the
+/// order-insensitive XOR digest (the replay fingerprint), and the capped
+/// event log sorted by (src, dst, seq, attempt).
+#[derive(Debug, Clone)]
+pub struct WireFaultReport {
+    pub seed: u64,
+    pub header_flips: u64,
+    pub payload_flips: u64,
+    pub checksum_smashes: u64,
+    pub truncations: u64,
+    pub duplicates: u64,
+    pub resets: u64,
+    pub digest: u64,
+    pub events: Vec<WireFaultEvent>,
+}
+
+impl WireFaultReport {
+    /// Total injections across every kind.
+    pub fn injected(&self) -> u64 {
+        self.header_flips
+            + self.payload_flips
+            + self.checksum_smashes
+            + self.truncations
+            + self.duplicates
+            + self.resets
+    }
+}
+
+/// The seeded fault plan: pure decision functions plus the accounting
+/// state (counters, digest, log) that the recovery layer feeds as it
+/// applies the decisions.
+pub struct WireFaultPlan {
+    cfg: WireFaultConfig,
+    header_flips: AtomicU64,
+    payload_flips: AtomicU64,
+    checksum_smashes: AtomicU64,
+    truncations: AtomicU64,
+    duplicates: AtomicU64,
+    resets: AtomicU64,
+    digest: AtomicU64,
+    /// Occurrence counts per decision point, so a repeated injection at
+    /// the same (src, dst, seq, attempt) — e.g. the mutation re-applied
+    /// to a duplicated frame — salts the digest differently instead of
+    /// XOR-cancelling (same trick as `chaos.rs`).
+    seen: Mutex<HashMap<(usize, usize, u64, u32), u64>>,
+    log: Mutex<Vec<WireFaultEvent>>,
+}
+
+impl WireFaultPlan {
+    pub fn new(cfg: WireFaultConfig) -> Self {
+        Self {
+            cfg,
+            header_flips: AtomicU64::new(0),
+            payload_flips: AtomicU64::new(0),
+            checksum_smashes: AtomicU64::new(0),
+            truncations: AtomicU64::new(0),
+            duplicates: AtomicU64::new(0),
+            resets: AtomicU64::new(0),
+            digest: AtomicU64::new(0),
+            seen: Mutex::new(HashMap::new()),
+            log: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn config(&self) -> &WireFaultConfig {
+        &self.cfg
+    }
+
+    fn key(&self, salt: u64, src: usize, dst: usize, seq: u64, attempt: u32) -> u64 {
+        mix(self
+            .cfg
+            .seed
+            .wrapping_add(salt.wrapping_mul(0xC2B2_AE3D_27D4_EB4F))
+            ^ (src as u64).wrapping_mul(0x1656_67B1_9E37_79F9)
+            ^ (dst as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ seq.wrapping_mul(0x2545_F491_4F6C_DD1D)
+            ^ ((attempt as u64) << 32 | attempt as u64))
+    }
+
+    /// Receiver-side corruption verdict for transmission attempt
+    /// `attempt` of frame `seq` on channel src → dst. At most one
+    /// corruption kind per attempt, sampled in fixed order.
+    pub fn mutation(
+        &self,
+        src: usize,
+        dst: usize,
+        seq: u64,
+        attempt: u32,
+    ) -> Option<WireMutation> {
+        let raw = self.key(SALT_RAW, src, dst, seq, attempt);
+        let pick = |salt: u64, prob: f64| -> bool {
+            prob > 0.0 && frac(self.key(salt, src, dst, seq, attempt)) < prob
+        };
+        let kind = if pick(SALT_HEADER, self.cfg.header_flip_prob) {
+            WireFaultKind::HeaderFlip
+        } else if pick(SALT_PAYLOAD, self.cfg.payload_flip_prob) {
+            WireFaultKind::PayloadFlip
+        } else if pick(SALT_CHECKSUM, self.cfg.checksum_prob) {
+            WireFaultKind::ChecksumSmash
+        } else if pick(SALT_TRUNCATE, self.cfg.truncate_prob) {
+            WireFaultKind::Truncate
+        } else {
+            return None;
+        };
+        Some(WireMutation { kind, raw })
+    }
+
+    /// Sender-side verdict: write this frame to the wire twice?
+    pub fn duplicate(&self, src: usize, dst: usize, seq: u64) -> bool {
+        self.cfg.duplicate_prob > 0.0
+            && frac(self.key(SALT_DUPLICATE, src, dst, seq, 0)) < self.cfg.duplicate_prob
+    }
+
+    /// Sender-side verdict: reset the stream before writing this frame?
+    /// (Socket backends only; shm callers never consult it.)
+    pub fn reset(&self, src: usize, dst: usize, seq: u64) -> bool {
+        self.cfg.reset_prob > 0.0
+            && frac(self.key(SALT_RESET, src, dst, seq, 0)) < self.cfg.reset_prob
+    }
+
+    /// Record one applied injection: count, fold into the digest, log.
+    pub fn note(&self, kind: WireFaultKind, src: usize, dst: usize, seq: u64, attempt: u32) {
+        let ctr = match kind {
+            WireFaultKind::HeaderFlip => &self.header_flips,
+            WireFaultKind::PayloadFlip => &self.payload_flips,
+            WireFaultKind::ChecksumSmash => &self.checksum_smashes,
+            WireFaultKind::Truncate => &self.truncations,
+            WireFaultKind::Duplicate => &self.duplicates,
+            WireFaultKind::Reset => &self.resets,
+        };
+        ctr.fetch_add(1, Ordering::Relaxed);
+        let occurrence = {
+            let mut seen = self.seen.lock().unwrap_or_else(|e| e.into_inner());
+            let slot = seen.entry((src, dst, seq, attempt)).or_insert(0);
+            let occ = *slot;
+            *slot += 1;
+            occ
+        };
+        let event = mix(self.key(SALT_DIGEST, src, dst, seq, attempt)
+            ^ kind.tag().wrapping_mul(0xBF58_476D_1CE4_E5B9)
+            ^ occurrence.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        self.digest.fetch_xor(event, Ordering::Relaxed);
+        let mut log = self.log.lock().unwrap_or_else(|e| e.into_inner());
+        if log.len() < WIRE_FAULT_LOG_CAP {
+            log.push(WireFaultEvent { kind, src, dst, seq, attempt });
+        }
+    }
+
+    /// Snapshot counters, digest and the (sorted) event log.
+    pub fn report(&self) -> WireFaultReport {
+        let mut events = self.log.lock().unwrap_or_else(|e| e.into_inner()).clone();
+        events.sort_by_key(|e| (e.src, e.dst, e.seq, e.attempt, e.kind.tag()));
+        WireFaultReport {
+            seed: self.cfg.seed,
+            header_flips: self.header_flips.load(Ordering::Relaxed),
+            payload_flips: self.payload_flips.load(Ordering::Relaxed),
+            checksum_smashes: self.checksum_smashes.load(Ordering::Relaxed),
+            truncations: self.truncations.load(Ordering::Relaxed),
+            resets: self.resets.load(Ordering::Relaxed),
+            duplicates: self.duplicates.load(Ordering::Relaxed),
+            digest: self.digest.load(Ordering::Relaxed),
+            events,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_pure_in_seed_and_key() {
+        let a = WireFaultPlan::new(WireFaultConfig::storm(42));
+        let b = WireFaultPlan::new(WireFaultConfig::storm(42));
+        for src in 0..4 {
+            for dst in 0..4 {
+                for seq in 0..64u64 {
+                    for attempt in 0..3u32 {
+                        assert_eq!(
+                            a.mutation(src, dst, seq, attempt),
+                            b.mutation(src, dst, seq, attempt)
+                        );
+                    }
+                    assert_eq!(a.duplicate(src, dst, seq), b.duplicate(src, dst, seq));
+                    assert_eq!(a.reset(src, dst, seq), b.reset(src, dst, seq));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = WireFaultPlan::new(WireFaultConfig::storm(1));
+        let b = WireFaultPlan::new(WireFaultConfig::storm(2));
+        let differs = (0..512u64).any(|seq| {
+            a.mutation(0, 1, seq, 0) != b.mutation(0, 1, seq, 0)
+                || a.duplicate(0, 1, seq) != b.duplicate(0, 1, seq)
+        });
+        assert!(differs, "seeds 1 and 2 produced identical fault streams");
+    }
+
+    #[test]
+    fn storm_profile_injects_every_kind() {
+        let plan = WireFaultPlan::new(WireFaultConfig::storm(7));
+        let mut kinds = std::collections::HashSet::new();
+        for src in 0..4 {
+            for dst in 0..4 {
+                for seq in 0..256u64 {
+                    if let Some(m) = plan.mutation(src, dst, seq, 0) {
+                        kinds.insert(m.kind);
+                    }
+                    if plan.duplicate(src, dst, seq) {
+                        kinds.insert(WireFaultKind::Duplicate);
+                    }
+                    if plan.reset(src, dst, seq) {
+                        kinds.insert(WireFaultKind::Reset);
+                    }
+                }
+            }
+        }
+        for kind in [
+            WireFaultKind::HeaderFlip,
+            WireFaultKind::PayloadFlip,
+            WireFaultKind::ChecksumSmash,
+            WireFaultKind::Truncate,
+            WireFaultKind::Duplicate,
+            WireFaultKind::Reset,
+        ] {
+            assert!(kinds.contains(&kind), "storm profile never sampled {kind}");
+        }
+    }
+
+    #[test]
+    fn report_counts_and_digest_replay() {
+        let drive = |seed: u64| {
+            let plan = WireFaultPlan::new(WireFaultConfig::storm(seed));
+            for seq in 0..200u64 {
+                if let Some(m) = plan.mutation(1, 2, seq, 0) {
+                    plan.note(m.kind, 1, 2, seq, 0);
+                }
+                if plan.duplicate(1, 2, seq) {
+                    plan.note(WireFaultKind::Duplicate, 1, 2, seq, 0);
+                }
+            }
+            plan.report()
+        };
+        let a = drive(9);
+        let b = drive(9);
+        assert!(a.injected() > 0, "storm at seed 9 must inject something");
+        assert_eq!(a.digest, b.digest, "same seed, same drive ⇒ same digest");
+        assert_eq!(a.events, b.events);
+        let c = drive(10);
+        assert_ne!(a.digest, c.digest, "different seed ⇒ different digest");
+    }
+
+    #[test]
+    fn digest_does_not_cancel_on_repeats() {
+        let plan = WireFaultPlan::new(WireFaultConfig::storm(3));
+        plan.note(WireFaultKind::PayloadFlip, 0, 1, 5, 0);
+        let once = plan.report().digest;
+        plan.note(WireFaultKind::PayloadFlip, 0, 1, 5, 0);
+        let twice = plan.report().digest;
+        assert_ne!(once, 0);
+        assert_ne!(twice, 0, "even repetition must not XOR-cancel to zero");
+        assert_ne!(once, twice);
+    }
+
+    #[test]
+    fn disabled_probabilities_never_fire() {
+        let cfg = WireFaultConfig {
+            header_flip_prob: 0.0,
+            payload_flip_prob: 0.0,
+            checksum_prob: 0.0,
+            truncate_prob: 0.0,
+            duplicate_prob: 0.0,
+            reset_prob: 0.0,
+            ..WireFaultConfig::new(5)
+        };
+        let plan = WireFaultPlan::new(cfg);
+        for seq in 0..512u64 {
+            assert_eq!(plan.mutation(0, 1, seq, 0), None);
+            assert!(!plan.duplicate(0, 1, seq));
+            assert!(!plan.reset(0, 1, seq));
+        }
+    }
+}

@@ -26,8 +26,12 @@ use super::comm::{Comm, CtxAlloc};
 use super::ctx::{recv_timeout, ClockMode, RankCtx};
 use super::elem::Elem;
 use super::pool::{BufferPool, PoolStats, DEFAULT_BUDGET_BYTES};
-use super::transport::{build_transport, Transport, TransportBackend};
+use super::recover::{TransportFault, TransportStats};
+use super::transport::{
+    build_transport, Transport, TransportBackend, TransportTuning, DEFAULT_WRITE_TIMEOUT,
+};
 use super::vbarrier::VBarrier;
+use super::wirefault::{WireFaultConfig, WireFaultReport};
 use crate::coll::ScanAlgorithm;
 use crate::cost::{CostModel, CostParams};
 use crate::mpi::op::OpRef;
@@ -107,6 +111,16 @@ pub struct WorldConfig {
     /// and are host-capability gated (probe with
     /// [`TransportBackend::probe`]).
     pub backend: TransportBackend,
+    /// Watchdog on socket-stream writes: a peer that stops reading for
+    /// this long is a typed `write-timeout` fault rather than a wedged
+    /// send thread. Ignored by the thread and shm backends.
+    pub write_timeout: Duration,
+    /// Seeded wire-level fault injection *below* the chaos boundary
+    /// (frame bit flips, checksum smashes, truncation, duplication,
+    /// stream resets) for the wire backends. `None` — the default — for
+    /// real measurements; see `mpi/wirefault.rs` and EXPERIMENTS.md
+    /// §Robustness. Ignored by the thread backend (no frames).
+    pub wirefault: Option<WireFaultConfig>,
 }
 
 impl WorldConfig {
@@ -124,6 +138,8 @@ impl WorldConfig {
             fixed_spin: false,
             chaos: None,
             backend: TransportBackend::Thread,
+            write_timeout: DEFAULT_WRITE_TIMEOUT,
+            wirefault: None,
         }
     }
 
@@ -194,10 +210,29 @@ impl WorldConfig {
         self
     }
 
+    /// Set the socket-stream write watchdog for this world (see the
+    /// field docs; default [`DEFAULT_WRITE_TIMEOUT`]).
+    pub fn with_write_timeout(mut self, timeout: Duration) -> Self {
+        self.write_timeout = timeout;
+        self
+    }
+
+    /// Arm seeded wire-level fault injection on this world's wire
+    /// backend (see the field docs; no-op on the thread backend).
+    pub fn with_wire_faults(mut self, cfg: WireFaultConfig) -> Self {
+        self.wirefault = Some(cfg);
+        self
+    }
+
     /// Construct this world's transport, or fail attributed (backend
     /// name + host-side reason) when the backend is unavailable here.
     fn build_transport<T: Elem>(&self, p: usize) -> Result<Arc<dyn Transport<T>>> {
-        build_transport::<T>(self.backend, p, self.fixed_spin)
+        let tuning = TransportTuning {
+            fixed_spin: self.fixed_spin,
+            write_timeout: self.write_timeout,
+            wirefault: self.wirefault.clone(),
+        };
+        build_transport::<T>(self.backend, p, &tuning)
     }
 
     fn build_chaos(&self) -> Option<Arc<Chaos>> {
@@ -431,6 +466,10 @@ pub struct World<T: Elem> {
     pools: Vec<Arc<BufferPool<T>>>,
     chaos: Option<Arc<Chaos>>,
     dead: Arc<DeadRanks>,
+    /// Kept for the wire-level observability accessors
+    /// ([`wire_stats`](Self::wire_stats) and friends); rank contexts hold
+    /// their own clones.
+    transport: Arc<dyn Transport<T>>,
     handles: Vec<std::thread::JoinHandle<()>>,
     /// Serializes whole `run` calls: jobs from two overlapping runs would
     /// interleave differently per rank and desynchronize the barrier.
@@ -518,6 +557,7 @@ impl<T: Elem> World<T> {
             pools,
             chaos,
             dead,
+            transport,
             handles,
             run_lock: Mutex::new(()),
             ctxs: CtxAlloc::new(),
@@ -575,6 +615,27 @@ impl<T: Elem> World<T> {
     /// list means the world is permanently degraded: rebuild it.
     pub fn dead_ranks(&self) -> Vec<usize> {
         self.dead.list()
+    }
+
+    /// Wire-level recovery/fault counters (retransmits, reconnects,
+    /// suppressed duplicates, fatal faults). All-zero on the thread
+    /// backend and on clean wire runs.
+    pub fn wire_stats(&self) -> TransportStats {
+        self.transport.wire_stats()
+    }
+
+    /// First typed transport fault recorded on this world's wire
+    /// backend, if any (`None` on the thread backend and healthy runs).
+    pub fn transport_fault(&self) -> Option<TransportFault> {
+        self.transport.fault()
+    }
+
+    /// Injection report of the armed wire-fault plan (`None` unless
+    /// [`WorldConfig::with_wire_faults`] armed one). The report's
+    /// `digest` is the replay check: two worlds at the same seed running
+    /// the same jobs report equal digests.
+    pub fn wire_report(&self) -> Option<WireFaultReport> {
+        self.transport.wire_report()
     }
 
     /// Run `f` once on every rank and collect results in rank order.

@@ -62,7 +62,10 @@ use std::time::{Duration, Instant};
 
 use crate::coll::segmented::Seg;
 use crate::coll::{exscan_by_name, ScanAlgorithm};
-use crate::mpi::{ChaosConfig, Comm, Elem, OpRef, Topology, TransportBackend, World, WorldConfig};
+use crate::mpi::{
+    ChaosConfig, Comm, Elem, OpRef, Topology, TransportBackend, TransportStats, WireFaultConfig,
+    World, WorldConfig, DEFAULT_WRITE_TIMEOUT,
+};
 use crate::trace::{RankTrace, TraceReport};
 use crate::util::{Channel, PushError};
 
@@ -130,6 +133,15 @@ pub struct EngineConfig {
     /// backend-agnostic: waves, rebuilds and chaos injection behave
     /// identically on any backend.
     pub transport: TransportBackend,
+    /// Per-write deadline for the socket backends' send threads
+    /// ([`DEFAULT_WRITE_TIMEOUT`] unless overridden); a blocked write
+    /// past it raises a typed `WriteTimeout` transport fault instead of
+    /// hanging the mesh.
+    pub write_timeout: Duration,
+    /// Seeded wire-level fault injection for the engine's worlds
+    /// (below the chaos boundary; `None` in production). Ignored by the
+    /// thread backend, which has no wire layer.
+    pub wirefault: Option<WireFaultConfig>,
 }
 
 impl EngineConfig {
@@ -144,6 +156,8 @@ impl EngineConfig {
             max_inflight_bytes: DEFAULT_MAX_INFLIGHT_BYTES,
             admission: AdmissionMode::FailFast,
             transport: TransportBackend::Thread,
+            write_timeout: DEFAULT_WRITE_TIMEOUT,
+            wirefault: None,
         }
     }
 
@@ -186,13 +200,29 @@ impl EngineConfig {
         self
     }
 
+    /// Per-write deadline for the socket backends' send threads.
+    pub fn with_write_timeout(mut self, t: Duration) -> Self {
+        self.write_timeout = t;
+        self
+    }
+
+    /// Arm seeded wire-level fault injection on the engine's worlds.
+    pub fn with_wire_faults(mut self, cfg: WireFaultConfig) -> Self {
+        self.wirefault = Some(cfg);
+        self
+    }
+
     fn world_config(&self) -> WorldConfig {
         let mut wc = WorldConfig::new(self.topology)
             .with_trace(true)
             .with_recv_timeout(self.recv_timeout)
-            .with_transport(self.transport);
+            .with_transport(self.transport)
+            .with_write_timeout(self.write_timeout);
         if let Some(ch) = &self.chaos {
             wc = wc.with_chaos(ch.clone());
+        }
+        if let Some(wf) = &self.wirefault {
+            wc = wc.with_wire_faults(wf.clone());
         }
         wc
     }
@@ -429,6 +459,11 @@ fn dispatch_cycles<T: Elem>(cfg: EngineConfig, shared: &Arc<Shared<T>>) {
     let algo_seg: Box<dyn ScanAlgorithm<Seg<T>>> =
         exscan_by_name(&cfg.algo).expect("validated in ScanEngine::new");
 
+    // Wire-recovery counters already paid by torn-down (rebuilt) worlds:
+    // the metrics gauges stay monotonic across rebuilds by adding the
+    // live worlds' counters onto this base.
+    let mut wire_base = TransportStats::default();
+
     // Flush tracking is level-based against the generation at engine
     // construction (0): any flush not yet consumed by a cycle cuts the
     // next window short, no matter when it lands relative to the
@@ -596,6 +631,10 @@ fn dispatch_cycles<T: Elem>(cfg: EngineConfig, shared: &Arc<Shared<T>>) {
                     world_cfg = run_cfg.world_config();
                 }
                 shared.metrics.on_world_rebuilt();
+                wire_base.merge(&world.wire_stats());
+                if let Some(sw) = &seg_world {
+                    wire_base.merge(&sw.wire_stats());
+                }
                 world = World::new(world_cfg.clone());
                 seg_world = None;
             }
@@ -612,6 +651,17 @@ fn dispatch_cycles<T: Elem>(cfg: EngineConfig, shared: &Arc<Shared<T>>) {
             ps.merge(&sw.pool_stats());
         }
         shared.metrics.set_pool_gauges(ps.hits, ps.misses);
+        // Same treatment for the wire-recovery counters (all zero on the
+        // thread backend): the soak bench's self-healing evidence. The
+        // rebuild base keeps the gauges monotonic across world teardowns.
+        let mut ws = wire_base;
+        ws.merge(&world.wire_stats());
+        if let Some(sw) = &seg_world {
+            ws.merge(&sw.wire_stats());
+        }
+        shared
+            .metrics
+            .set_wire_gauges(ws.retransmits, ws.reconnects, ws.dropped_dups, ws.faults);
     }
 }
 

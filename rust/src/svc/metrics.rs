@@ -126,6 +126,13 @@ pub struct ServiceMetrics {
     /// Gauges mirroring the engine worlds' pool counters (set, not added).
     pool_hits: AtomicU64,
     pool_misses: AtomicU64,
+    /// Gauges mirroring the engine worlds' wire-transport recovery
+    /// counters ([`crate::mpi::TransportStats`]; all zero on the thread
+    /// backend). Set once per cycle, like the pool gauges.
+    wire_retransmits: AtomicU64,
+    wire_reconnects: AtomicU64,
+    wire_dropped_dups: AtomicU64,
+    transport_faults: AtomicU64,
     latency_count: AtomicU64,
     latency_hist: LatencyHist,
 }
@@ -192,6 +199,21 @@ impl ServiceMetrics {
         self.pool_misses.store(misses, Ordering::Relaxed);
     }
 
+    /// Mirror the worlds' wire-recovery counters (once per cycle; zero
+    /// on the thread backend where no wire layer exists).
+    pub(crate) fn set_wire_gauges(
+        &self,
+        retransmits: u64,
+        reconnects: u64,
+        dropped_dups: u64,
+        faults: u64,
+    ) {
+        self.wire_retransmits.store(retransmits, Ordering::Relaxed);
+        self.wire_reconnects.store(reconnects, Ordering::Relaxed);
+        self.wire_dropped_dups.store(dropped_dups, Ordering::Relaxed);
+        self.transport_faults.store(faults, Ordering::Relaxed);
+    }
+
     /// One relaxed increment into the fixed histogram — no allocation.
     pub(crate) fn record_latency_ns(&self, ns: u64) {
         self.latency_count.fetch_add(1, Ordering::Relaxed);
@@ -251,6 +273,10 @@ impl ServiceMetrics {
             inflight_bytes: self.inflight_bytes.load(Ordering::Relaxed),
             pool_hits: self.pool_hits.load(Ordering::Relaxed),
             pool_misses: self.pool_misses.load(Ordering::Relaxed),
+            wire_retransmits: self.wire_retransmits.load(Ordering::Relaxed),
+            wire_reconnects: self.wire_reconnects.load(Ordering::Relaxed),
+            wire_dropped_dups: self.wire_dropped_dups.load(Ordering::Relaxed),
+            transport_faults: self.transport_faults.load(Ordering::Relaxed),
             latency_count,
             latency_p50_us: us(quantile_ns(&hist, latency_count, 0.50)),
             latency_p99_us: us(quantile_ns(&hist, latency_count, 0.99)),
@@ -295,6 +321,13 @@ pub struct MetricsSnapshot {
     /// Gauges from the engine worlds' buffer pools (flat-memory evidence).
     pub pool_hits: u64,
     pub pool_misses: u64,
+    /// Gauges from the engine worlds' wire-transport recovery layer
+    /// (retransmitted frames, simulated reconnects, suppressed duplicate
+    /// frames, typed transport faults). All zero on the thread backend.
+    pub wire_retransmits: u64,
+    pub wire_reconnects: u64,
+    pub wire_dropped_dups: u64,
+    pub transport_faults: u64,
     /// Successful completions recorded in the latency histogram.
     pub latency_count: u64,
     /// Quantiles in µs, each the matched bucket's upper bound (≤ 25 %
@@ -409,6 +442,7 @@ mod tests {
         m.add_inflight_bytes(4096);
         m.sub_inflight_bytes(1024);
         m.set_pool_gauges(10, 2);
+        m.set_wire_gauges(7, 2, 5, 1);
         let s = m.snapshot();
         assert_eq!(s.rejected, 2);
         assert_eq!(s.abandoned, 1);
@@ -416,6 +450,10 @@ mod tests {
         assert_eq!(s.inflight_bytes, 3072);
         assert_eq!(m.inflight_bytes(), 3072);
         assert_eq!((s.pool_hits, s.pool_misses), (10, 2));
+        assert_eq!(
+            (s.wire_retransmits, s.wire_reconnects, s.wire_dropped_dups, s.transport_faults),
+            (7, 2, 5, 1)
+        );
     }
 
     #[test]
